@@ -1,0 +1,71 @@
+//! Smoothing decay-rate ablation (paper Fig. 6 + Fig. 7): PipeGCN-GF on
+//! products-sim at 10 partitions under γ ∈ {0, 0.5, 0.7, 0.95}, recording
+//! test-accuracy convergence and per-layer staleness errors.
+//!
+//! ```text
+//! cargo run --release --example gamma_sweep [-- --epochs 80 --gammas 0,0.5,0.7,0.95]
+//! ```
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::graph::io::append_csv;
+use pipegcn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.get_usize("epochs", 60);
+    let gammas = args.get_f32_list("gammas", &[0.0, 0.5, 0.7, 0.95]);
+    let parts = args.get_usize("parts", 10);
+
+    println!("== products-sim γ sweep (Fig. 6/7 analogue), {parts} partitions ==");
+    println!("{:>6} {:>10} {:>10} {:>12} {:>12}", "γ", "best", "final", "feat err", "grad err");
+    for &gamma in &gammas {
+        let out = exp::run(
+            "products-sim",
+            parts,
+            "pipegcn-gf",
+            RunOpts { epochs, gamma, probe_errors: true, eval_every: 5, ..Default::default() },
+        );
+        // mean post-warmup relative errors across layers (Fig. 7)
+        let post: Vec<_> =
+            out.result.probes.iter().filter(|p| p.epoch > epochs / 3).collect();
+        let mean = |f: &dyn Fn(&&pipegcn::coordinator::ErrorProbe) -> f64| -> f64 {
+            if post.is_empty() {
+                0.0
+            } else {
+                post.iter().map(f).sum::<f64>() / post.len() as f64
+            }
+        };
+        let feat_err = mean(&|p| if p.feat_ref > 0.0 { p.feat_err / p.feat_ref } else { 0.0 });
+        let grad_err = mean(&|p| if p.grad_ref > 0.0 { p.grad_err / p.grad_ref } else { 0.0 });
+        println!(
+            "{:>6.2} {:>10.4} {:>10.4} {:>12.4} {:>12.4}",
+            gamma, out.result.best_val_test, out.result.final_test, feat_err, grad_err
+        );
+        let rows: Vec<String> = out
+            .result
+            .curve
+            .iter()
+            .filter(|e| !e.val.is_nan())
+            .map(|e| format!("{gamma},{},{:.6},{:.6}", e.epoch, e.val, e.test))
+            .collect();
+        append_csv("results/f6_gamma_convergence.csv", "gamma,epoch,val,test", &rows)?;
+        let prows: Vec<String> = out
+            .result
+            .probes
+            .iter()
+            .map(|p| {
+                format!(
+                    "{gamma},{},{},{:.6},{:.6},{:.6},{:.6}",
+                    p.epoch, p.layer, p.feat_err, p.feat_ref, p.grad_err, p.grad_ref
+                )
+            })
+            .collect();
+        append_csv(
+            "results/f7_gamma_errors.csv",
+            "gamma,epoch,layer,feat_err,feat_ref,grad_err,grad_ref",
+            &prows,
+        )?;
+    }
+    println!("\ncurves → results/f6_gamma_convergence.csv, errors → results/f7_gamma_errors.csv");
+    Ok(())
+}

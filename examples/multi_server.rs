@@ -1,0 +1,55 @@
+//! Multi-server scaling (paper Appendix E, Tables 7 & 8): reddit-sim
+//! across (#nodes × #gpus) grids on the MI60/10GbE testbed profile —
+//! accuracy of every PipeGCN variant, and throughput speedup over vanilla
+//! partition-parallel training.
+//!
+//! ```text
+//! cargo run --release --example multi_server [-- --epochs 40]
+//! ```
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::{profiles::rig_mi60, Mode};
+use pipegcn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.get_usize("epochs", 40);
+    let grids: &[(usize, usize)] =
+        &[(1, 2), (1, 3), (1, 4), (2, 2), (2, 3), (2, 4), (3, 3), (4, 4)];
+
+    println!("== reddit-sim over MI60 multi-server testbed (Tables 7/8 analogue) ==");
+    println!(
+        "{:<10} {:>6} {:>9} {:>10} {:>10} {:>10}",
+        "topology", "parts", "GCN", "PipeGCN", "Pipe-GF", "speedup"
+    );
+    for &(nodes, per) in grids {
+        let parts = nodes * per;
+        let (profile, topo) = rig_mi60(nodes, per);
+        let mut row = format!("{:<10} {:>6}", format!("{nodes}x{per}"), parts);
+        let mut vanilla_total = 0.0;
+        let mut pipe_total = 0.0;
+        for method in ["gcn", "pipegcn", "pipegcn-gf"] {
+            let out = exp::run(
+                "reddit-sim",
+                parts,
+                method,
+                RunOpts { epochs, eval_every: epochs, ..Default::default() },
+            );
+            let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+            let sim = exp::simulate(&out, &profile, &topo, mode);
+            if method == "gcn" {
+                vanilla_total = sim.total;
+                row += &format!(" {:>8.4}", out.result.final_test);
+            } else {
+                row += &format!(" {:>9.4}", out.result.final_test);
+            }
+            if method == "pipegcn" {
+                pipe_total = sim.total;
+            }
+        }
+        row += &format!(" {:>9.2}x", vanilla_total / pipe_total);
+        println!("{row}");
+    }
+    println!("\n(accuracy columns: final test accuracy; speedup: PipeGCN vs GCN simulated epoch time)");
+    Ok(())
+}

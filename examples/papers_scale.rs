@@ -1,0 +1,52 @@
+//! Largest-scale run (paper §4.5 + Table 5, papers-sim preset mirroring
+//! ogbn-papers100M): 32 partitions over 4 servers × 8 MI60 GPUs with
+//! 10 Gbps Ethernet — where communication dominates even more than on a
+//! single chassis. Reports the Table-5 rows: total vs communication time
+//! per epoch for GCN / PipeGCN / PipeGCN-GF, plus real training accuracy
+//! on the scaled dataset.
+//!
+//! ```text
+//! cargo run --release --example papers_scale [-- --epochs 30]
+//! ```
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::{profiles::rig_mi60, Mode};
+use pipegcn::util::cli::Args;
+use pipegcn::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.get_usize("epochs", 30);
+    let (profile, topo) = rig_mi60(4, 8);
+    let parts = 32;
+
+    println!("== papers-sim × {parts} partitions on 4×8 MI60 / 10GbE (Table 5 analogue) ==");
+    println!("{:<12} {:>12} {:>14} {:>10} {:>10}", "method", "total", "communication", "ratio", "test");
+    let mut base = (1.0, 1.0);
+    for method in ["gcn", "pipegcn", "pipegcn-gf"] {
+        let out = exp::run(
+            "papers-sim",
+            parts,
+            method,
+            RunOpts { epochs, eval_every: epochs, ..Default::default() },
+        );
+        let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+        let sim = exp::simulate(&out, &profile, &topo, mode);
+        let comm = sim.comm_exposed + sim.reduce;
+        if method == "gcn" {
+            base = (sim.total, comm);
+        }
+        println!(
+            "{:<12} {:>7.2}x ({}) {:>7.2}x ({}) {:>9.1}% {:>9.4}",
+            out.result.variant,
+            sim.total / base.0,
+            fmt_secs(sim.total),
+            comm / base.1,
+            fmt_secs(comm),
+            100.0 * comm / sim.total,
+            out.result.final_test,
+        );
+    }
+    println!("\npaper Table 5: GCN 1.00× (10.5s) / comm 1.00× (6.6s); PipeGCN 0.62× / 0.39×; PipeGCN-GF 0.64× / 0.42×");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Reddit-scale study (paper Table 4 + Fig. 4, reddit-sim preset):
+//! trains GCN and all four PipeGCN variants at 2 and 4 partitions,
+//! printing Table-4-style rows and writing per-epoch convergence CSVs
+//! under results/ for Fig. 4.
+//!
+//! ```text
+//! cargo run --release --example reddit_sim [-- --epochs 120 --parts 2,4]
+//! ```
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::graph::io::append_csv;
+use pipegcn::sim::Mode;
+use pipegcn::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let epochs = args.get_usize("epochs", 60);
+    let parts_list = args.get_usize_list("parts", &[2, 4]);
+    let methods = ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"];
+
+    println!("== reddit-sim: accuracy + throughput (Table 4 analogue) ==");
+    for &parts in &parts_list {
+        println!("\n-- {parts} partitions --");
+        println!("{:<12} {:>10} {:>12} {:>12}", "method", "test", "epochs/s", "speedup");
+        let mut vanilla_total = 0.0f64;
+        for method in methods {
+            let out = exp::run(
+                "reddit-sim",
+                parts,
+                method,
+                RunOpts { epochs, eval_every: 5, ..Default::default() },
+            );
+            let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+            let sim = exp::simulate_default(&out, mode);
+            if method == "gcn" {
+                vanilla_total = sim.total;
+            }
+            println!(
+                "{:<12} {:>9.4} {:>12.2} {:>11.2}x",
+                out.result.variant,
+                out.result.best_val_test,
+                exp::sim_epochs_per_s(&sim),
+                vanilla_total / sim.total
+            );
+            // Fig. 4 data: epoch-to-accuracy curve
+            let rows: Vec<String> = out
+                .result
+                .curve
+                .iter()
+                .filter(|e| !e.val.is_nan())
+                .map(|e| {
+                    format!(
+                        "{},{},{},{:.6},{:.6},{:.6}",
+                        parts, out.result.variant, e.epoch, e.train_loss, e.val, e.test
+                    )
+                })
+                .collect();
+            append_csv(
+                "results/f4_reddit_convergence.csv",
+                "parts,method,epoch,loss,val,test",
+                &rows,
+            )?;
+        }
+    }
+    println!("\nconvergence curves → results/f4_reddit_convergence.csv");
+    Ok(())
+}

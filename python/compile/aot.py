@@ -1,0 +1,87 @@
+"""AOT compile path: lower the Layer-2 functions (with their Layer-1
+Pallas kernels inlined) to **HLO text** artifacts the Rust runtime loads
+via the ``xla`` crate.
+
+HLO *text* — not ``lowered.compile().serialize()`` and not the serialized
+``HloModuleProto`` — is the interchange format: jax ≥ 0.5 emits protos
+with 64-bit instruction ids that the crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+The output directory gets one ``.hlo.txt`` per (pass, f_in, f_out) plus a
+``manifest.json`` describing shapes, so the Rust side never hard-codes a
+layer list.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    dims = model.DIMS
+    manifest = {
+        "n_pad": model.N_PAD,
+        "l_pad": model.L_PAD,
+        "dims": dims,
+        "artifacts": [],
+    }
+    seen = set()
+    for l in range(len(dims) - 1):
+        f_in, f_out = dims[l], dims[l + 1]
+        if (f_in, f_out) in seen:
+            continue
+        seen.add((f_in, f_out))
+        for name, fn, shapes in (
+            ("sage_fwd", model.sage_fwd, model.fwd_shapes(f_in, f_out)),
+            ("sage_bwd", model.sage_bwd, model.bwd_shapes(f_in, f_out)),
+        ):
+            text = to_hlo_text(fn, shapes)
+            fname = f"{name}_i{model.N_PAD}_l{model.L_PAD}_in{f_in}_out{f_out}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "pass": name,
+                    "f_in": f_in,
+                    "f_out": f_out,
+                    "file": fname,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                    "bytes": len(text),
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_dir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = ap.parse_args()
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    main()

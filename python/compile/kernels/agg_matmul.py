@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernels: the GCN layer's compute hot-spot.
+
+The per-partition GraphSAGE layer is two GEMM-shaped contractions:
+
+    z   = P · H                      (aggregation)
+    pre = z · W_neigh + H_in · W_self  (transform)
+
+On the paper's GPUs these are cuSPARSE/cuBLAS calls; the TPU adaptation
+(DESIGN.md §Hardware-Adaptation) tiles both onto the 128×128 MXU with
+VMEM-resident blocks expressed through ``BlockSpec``:
+
+* ``matmul``       — k-blocked tiled matmul; the grid's third axis walks
+  the reduction dimension and revisits the same output block, which keeps
+  one (bm×bn) accumulator tile resident in VMEM per output block.
+* ``fused_transform`` — the SAGE transform with **both** matmuls fused
+  over a shared output tile: ``z·W_neigh + H_in·W_self`` accumulates into
+  one block without materializing either partial product in HBM.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO and run (and AOT-export)
+correctly on CPU; real-TPU performance is *estimated* in EXPERIMENTS.md
+§Perf from the BlockSpec footprint, never measured from interpret-mode
+timings.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget note (v4-class core, 16 MiB VMEM): the default 128×128 f32
+# accumulator tile is 64 KiB; x/y streaming tiles at bk=128 are 64 KiB
+# each — triple-buffered this stays ≪ VMEM, leaving room for the fused
+# second operand pair.
+_BLOCK_CANDIDATES = (128, 64, 32, 16, 8)
+
+
+def _pick_block(dim: int, cap: int = 128) -> int:
+    """Largest candidate ≤ cap that divides dim, else dim itself."""
+    for c in _BLOCK_CANDIDATES:
+        if c <= cap and dim % c == 0:
+            return c
+    return dim
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm=None, bn=None, bk=None):
+    """Tiled ``x @ y`` via Pallas (interpret mode).
+
+    Grid = (M/bm, N/bn, K/bk); the k axis revisits the same output block
+    so the accumulator tile stays resident (MXU-friendly schedule).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul shape mismatch {x.shape} @ {y.shape}"
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _fused_kernel(z_ref, h_ref, wn_ref, ws_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        z_ref[...], wn_ref[...], preferred_element_type=o_ref.dtype
+    ) + jnp.dot(h_ref[...], ws_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def fused_transform(z, h_inner, w_neigh, w_self, *, bm=None, bn=None, bk=None):
+    """``z @ w_neigh + h_inner @ w_self`` in one fused Pallas kernel.
+
+    Both contractions share the reduction width (f_in) and the output
+    tile, so one VMEM accumulator serves both — the SAGE transform never
+    materializes a partial product in HBM.
+    """
+    m, k = z.shape
+    assert h_inner.shape == (m, k), (z.shape, h_inner.shape)
+    k2, n = w_neigh.shape
+    assert k == k2 and w_self.shape == (k, n)
+    bm = bm or _pick_block(m)
+    bn = bn or _pick_block(n)
+    bk = bk or _pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), z.dtype),
+        interpret=True,
+    )(z, h_inner, w_neigh, w_self)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, fused: bool, itemsize: int = 4) -> int:
+    """Estimated VMEM bytes of one grid step (accumulator + operand tiles,
+    double-buffered operands). Used by the §Perf roofline notes."""
+    acc = bm * bn * itemsize
+    operands = (bm * bk + bk * bn) * itemsize * (2 if fused else 1)
+    return acc + 2 * operands  # ×2: double buffering of streamed tiles

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+Everything here is deliberately written with plain ``jnp`` contractions —
+no Pallas, no custom tiling — so a kernel bug cannot hide in a shared
+code path.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def fused_transform(z, h_inner, w_neigh, w_self):
+    return jnp.dot(z, w_neigh) + jnp.dot(h_inner, w_self)
+
+
+def sage_fwd(p, h, w_neigh, w_self):
+    """Reference forward: z = P·H ; pre = z·Wn + H[:inner]·Ws."""
+    inner = p.shape[0]
+    z = jnp.dot(p, h)
+    pre = jnp.dot(z, w_neigh) + jnp.dot(h[:inner], w_self)
+    return z, pre
+
+
+def sage_bwd(p, h, z, m, w_neigh, w_self):
+    """Reference backward (same math as runtime/native.rs):
+    g_neigh = zᵀ·m ; g_self = H[:inner]ᵀ·m ;
+    j = Pᵀ·(m·Wnᵀ) + pad_inner(m·Wsᵀ).
+    """
+    inner = p.shape[0]
+    g_neigh = jnp.dot(z.T, m)
+    g_self = jnp.dot(h[:inner].T, m)
+    dz = jnp.dot(m, w_neigh.T)
+    j = jnp.dot(p.T, dz)
+    j = j.at[:inner].add(jnp.dot(m, w_self.T))
+    return g_neigh, g_self, j

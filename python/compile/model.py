@@ -1,0 +1,78 @@
+"""Layer-2: the per-partition GraphSAGE layer forward/backward in JAX,
+calling the Layer-1 Pallas kernels, with fixed padded shapes for AOT
+export.
+
+Padded layout contract (shared with ``rust/src/runtime/xla.rs``):
+
+* ``P``      : (N_PAD, L_PAD) dense — rows 0..n_inner are the partition's
+  propagation rows, the rest zero; columns 0..n_inner map inner nodes,
+  columns N_PAD..N_PAD+n_halo map halo nodes, everything else zero.
+* ``H``      : (L_PAD, f_in) — inner rows at 0.., halo rows at N_PAD..,
+  padding rows zero.
+* outputs follow the same row conventions; zero padding is preserved by
+  the math (zero P rows/cols ⇒ zero contributions), which the tests
+  verify explicitly.
+
+The backward here mirrors ``runtime/native.rs`` exactly; pytest checks it
+against ``jax.vjp`` of the forward so the two backends cannot drift.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import agg_matmul as kernels
+
+# Padded shapes for the quickstart config ("tiny" preset, ≤2–4 partitions).
+# Rust asserts real shapes fit; aot.py bakes these into the artifacts.
+N_PAD = 320  # max inner nodes per partition
+L_PAD = 576  # max inner + halo nodes per partition
+DIMS = [32, 32, 8]  # tiny preset: feat 32 → hidden 32 → 8 classes
+
+
+def sage_fwd(p, h, w_neigh, w_self):
+    """One SAGE-mean layer forward on padded shapes.
+
+    Returns ``(z_agg, pre)`` — activation choice (ReLU / logits) lives in
+    the Rust trainer so one artifact serves hidden and output layers.
+    """
+    inner = p.shape[0]
+    z = kernels.matmul(p, h)
+    pre = kernels.fused_transform(z, h[:inner], w_neigh, w_self)
+    return z, pre
+
+
+def sage_bwd(p, h, z, m, w_neigh, w_self):
+    """Backward of :func:`sage_fwd` given ``m = ∂L/∂pre``.
+
+    Returns ``(g_neigh, g_self, j_full)``.
+    """
+    inner = p.shape[0]
+    g_neigh = kernels.matmul(z.T, m)
+    g_self = kernels.matmul(h[:inner].T, m)
+    dz = kernels.matmul(m, w_neigh.T)
+    j = kernels.matmul(p.T, dz)
+    j = j.at[:inner].add(kernels.matmul(m, w_self.T))
+    return g_neigh, g_self, j
+
+
+def fwd_shapes(f_in: int, f_out: int):
+    """Example-argument shapes for AOT lowering of sage_fwd."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((N_PAD, L_PAD), f32),  # p
+        jax.ShapeDtypeStruct((L_PAD, f_in), f32),  # h
+        jax.ShapeDtypeStruct((f_in, f_out), f32),  # w_neigh
+        jax.ShapeDtypeStruct((f_in, f_out), f32),  # w_self
+    )
+
+
+def bwd_shapes(f_in: int, f_out: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((N_PAD, L_PAD), f32),  # p
+        jax.ShapeDtypeStruct((L_PAD, f_in), f32),  # h
+        jax.ShapeDtypeStruct((N_PAD, f_in), f32),  # z
+        jax.ShapeDtypeStruct((N_PAD, f_out), f32),  # m
+        jax.ShapeDtypeStruct((f_in, f_out), f32),  # w_neigh
+        jax.ShapeDtypeStruct((f_in, f_out), f32),  # w_self
+    )

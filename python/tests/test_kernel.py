@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (divisible and prime/ragged), block choices, and
+dtypes; fixed cases pin the exact artifact shapes used by AOT export.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import agg_matmul as k
+from compile.kernels import ref
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def assert_close(a, b, dtype):
+    # f32 tolerance covers k-blocked accumulation reordering at K≈600
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    kk=st.integers(1, 96),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_matches_ref_random_shapes(m, kk, n, seed):
+    x = _rand((m, kk), jnp.float32, seed)
+    y = _rand((kk, n), jnp.float32, seed + 1)
+    assert_close(k.matmul(x, y), ref.matmul(x, y), jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 128, 320]),
+    kk=st.sampled_from([8, 32, 64, 576]),
+    n=st.sampled_from([8, 32]),
+    bm=st.sampled_from([None, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_block_choices(m, kk, n, bm, seed):
+    x = _rand((m, kk), jnp.float32, seed)
+    y = _rand((kk, n), jnp.float32, seed + 1)
+    assert_close(k.matmul(x, y, bm=bm), ref.matmul(x, y), jnp.float32)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand((32, 64), dtype, 0)
+    y = _rand((64, 16), dtype, 1)
+    out = k.matmul(x, y)
+    assert out.dtype == dtype
+    assert_close(out.astype(jnp.float32), ref.matmul(x, y).astype(jnp.float32), dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([16, 64, 320]),
+    kk=st.sampled_from([8, 32, 64]),
+    n=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31),
+)
+def test_fused_transform_matches_ref(m, kk, n, seed):
+    z = _rand((m, kk), jnp.float32, seed)
+    h = _rand((m, kk), jnp.float32, seed + 1)
+    wn = _rand((kk, n), jnp.float32, seed + 2)
+    ws = _rand((kk, n), jnp.float32, seed + 3)
+    assert_close(
+        k.fused_transform(z, h, wn, ws),
+        ref.fused_transform(z, h, wn, ws),
+        jnp.float32,
+    )
+
+
+def test_artifact_shapes_exact():
+    """The exact padded shapes the AOT artifacts are built with."""
+    from compile import model
+
+    for f_in, f_out in [(32, 32), (32, 8)]:
+        p = _rand((model.N_PAD, model.L_PAD), jnp.float32, 5)
+        h = _rand((model.L_PAD, f_in), jnp.float32, 6)
+        wn = _rand((f_in, f_out), jnp.float32, 7)
+        ws = _rand((f_in, f_out), jnp.float32, 8)
+        z, pre = model.sage_fwd(p, h, wn, ws)
+        z_r, pre_r = ref.sage_fwd(p, h, wn, ws)
+        assert_close(z, z_r, jnp.float32)
+        assert_close(pre, pre_r, jnp.float32)
+
+
+def test_zero_padding_preserved():
+    """Zero P rows/cols must produce zero output rows (padding contract)."""
+    from compile import model
+
+    inner_real, halo_real, f_in, f_out = 100, 50, 32, 32
+    rng = np.random.default_rng(0)
+    p = np.zeros((model.N_PAD, model.L_PAD), np.float32)
+    p[:inner_real, :inner_real] = rng.random((inner_real, inner_real)) * (
+        rng.random((inner_real, inner_real)) < 0.05
+    )
+    p[:inner_real, model.N_PAD : model.N_PAD + halo_real] = rng.random(
+        (inner_real, halo_real)
+    ) * (rng.random((inner_real, halo_real)) < 0.05)
+    h = np.zeros((model.L_PAD, f_in), np.float32)
+    h[:inner_real] = rng.standard_normal((inner_real, f_in))
+    h[model.N_PAD : model.N_PAD + halo_real] = rng.standard_normal((halo_real, f_in))
+    wn = rng.standard_normal((f_in, f_out)).astype(np.float32)
+    ws = rng.standard_normal((f_in, f_out)).astype(np.float32)
+    z, pre = model.sage_fwd(jnp.asarray(p), jnp.asarray(h), jnp.asarray(wn), jnp.asarray(ws))
+    z = np.asarray(z)
+    pre = np.asarray(pre)
+    # rows beyond inner_real: z rows are zero (zero P rows); pre rows are
+    # zero too (zero z row and zero h row in the padding band)
+    assert np.all(z[inner_real:] == 0.0)
+    assert np.all(pre[inner_real:] == 0.0)
+
+
+def test_vmem_footprint_estimate_sane():
+    b = k.vmem_footprint_bytes(128, 128, 128, fused=False)
+    assert b < 16 * 2**20  # fits v4 VMEM comfortably
+    assert k.vmem_footprint_bytes(128, 128, 128, fused=True) > b

@@ -1,0 +1,63 @@
+//! Figure 3 — training throughput (epochs/s) of GCN and PipeGCN vs the
+//! full-graph comparators ROC and CAGNET (c=2), across partition counts.
+//!
+//! Paper headline: GCN 3.1×~16.4× over ROC, 2.1×~10.2× over CAGNET(c=2);
+//! PipeGCN 5.6×~28.5× over ROC, 3.9×~17.7× over CAGNET(c=2).
+
+use pipegcn::baselines::{cagnet_epoch, reddit_inputs, roc_epoch, BaselineInputs};
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::partition::quality;
+use pipegcn::sim::{profiles::rig_2080ti, Mode};
+use pipegcn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    println!("== Fig. 3: throughput (simulated epochs/s, Reddit-scale) ==");
+    println!(
+        "{:<7} {:>9} {:>12} {:>9} {:>9} | {:>12} {:>12}",
+        "parts", "ROC", "CAGNET(c=2)", "GCN", "PipeGCN", "GCN/ROC", "Pipe/CAGNET"
+    );
+    let mut rows = Vec::new();
+    for parts in [2usize, 4, 6, 8, 10] {
+        let (profile, topo) = rig_2080ti(parts);
+        let out_g = exp::run(
+            "reddit-sim",
+            parts,
+            "gcn",
+            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
+        );
+        let q = quality(&out_g.graph, &out_g.parts);
+        let inputs: BaselineInputs = reddit_inputs(parts, q.replication_factor);
+        let roc = 1.0 / roc_epoch(&inputs, &profile, &topo).total;
+        let cagnet = 1.0 / cagnet_epoch(&inputs, 2, &profile, &topo).total;
+        let gcn = 1.0 / exp::simulate(&out_g, &profile, &topo, Mode::Vanilla).total;
+        let out_p = exp::run(
+            "reddit-sim",
+            parts,
+            "pipegcn",
+            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
+        );
+        let pipe = 1.0 / exp::simulate(&out_p, &profile, &topo, Mode::Pipelined).total;
+        println!(
+            "{:<7} {:>9.2} {:>12.2} {:>9.2} {:>9.2} | {:>11.1}x {:>11.1}x",
+            parts,
+            roc,
+            cagnet,
+            gcn,
+            pipe,
+            gcn / roc,
+            pipe / cagnet
+        );
+        rows.push(
+            Json::obj()
+                .set("parts", parts)
+                .set("roc_eps", roc)
+                .set("cagnet2_eps", cagnet)
+                .set("gcn_eps", gcn)
+                .set("pipegcn_eps", pipe),
+        );
+    }
+    println!("\npaper: GCN beats ROC 3.1–16.4×, CAGNET(c=2) 2.1–10.2×; PipeGCN beats ROC 5.6–28.5×, CAGNET(c=2) 3.9–17.7×");
+    Json::obj().set("figure", "3").set("rows", Json::Arr(rows)).write_file("results/f3_throughput.json")?;
+    println!("→ results/f3_throughput.json");
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Figures 4 & 9 — epoch-to-accuracy convergence of GCN vs PipeGCN
+//! variants (Reddit-like, products-like; Yelp-like = Fig. 9).
+//!
+//! Paper shape: PipeGCN converges slightly slower early, catches up;
+//! smoothing variants match vanilla convergence.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::graph::io::append_csv;
+
+fn main() -> anyhow::Result<()> {
+    let cases: &[(&str, usize, &str)] = &[
+        ("reddit-sim", 2, "fig4"),
+        ("products-sim", 10, "fig4"),
+        ("yelp-sim", 6, "fig9"),
+    ];
+    let methods = ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"];
+    std::fs::remove_file("results/f4_convergence.csv").ok();
+    for &(ds, parts, fig) in cases {
+        println!("== {fig}: {ds} ({parts} partitions) convergence ==");
+        for method in methods {
+            let out = exp::run(
+                ds,
+                parts,
+                method,
+                RunOpts { epochs: 0, eval_every: 2, ..Default::default() },
+            );
+            // half-way and final accuracy summarize the curve shape
+            let evals: Vec<_> = out.result.curve.iter().filter(|e| !e.val.is_nan()).collect();
+            let half = evals[evals.len() / 2];
+            let last = evals.last().unwrap();
+            println!(
+                "  {:<12} @ half: {:.4}  final: {:.4}",
+                out.result.variant, half.test, last.test
+            );
+            let rows: Vec<String> = evals
+                .iter()
+                .map(|e| {
+                    format!(
+                        "{fig},{ds},{parts},{},{},{:.6},{:.6},{:.6}",
+                        out.result.variant, e.epoch, e.train_loss, e.val, e.test
+                    )
+                })
+                .collect();
+            append_csv(
+                "results/f4_convergence.csv",
+                "figure,dataset,parts,method,epoch,loss,val,test",
+                &rows,
+            )?;
+        }
+    }
+    println!("→ results/f4_convergence.csv");
+    Ok(())
+}

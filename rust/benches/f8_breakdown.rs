@@ -1,0 +1,57 @@
+//! Figure 8 — training time breakdown bars (compute / communication /
+//! reduce) for GCN, PipeGCN, PipeGCN-GF across every dataset × partition
+//! configuration of Table 4.
+//!
+//! Paper shape: comm dominates GCN; PipeGCN hides it (fully at 2-part
+//! Reddit / 3-part Yelp, mostly at 10-part products); smoothing adds
+//! only minimal overhead.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::Mode;
+use pipegcn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cases: &[(&str, usize)] = &[
+        ("reddit-sim", 2),
+        ("reddit-sim", 4),
+        ("products-sim", 5),
+        ("products-sim", 10),
+        ("yelp-sim", 3),
+        ("yelp-sim", 6),
+    ];
+    println!("== Fig. 8: time breakdown (simulated seconds/epoch) ==");
+    println!(
+        "{:<14} {:>5} {:<12} {:>9} {:>9} {:>8} {:>8}",
+        "dataset", "parts", "method", "compute", "comm", "reduce", "total"
+    );
+    let mut rows = Vec::new();
+    for &(ds, parts) in cases {
+        for method in ["gcn", "pipegcn", "pipegcn-gf"] {
+            let out = exp::run(
+                ds,
+                parts,
+                method,
+                RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
+            );
+            let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+            let sim = exp::simulate_default(&out, mode);
+            println!(
+                "{:<14} {:>5} {:<12} {:>9.3} {:>9.3} {:>8.3} {:>8.3}",
+                ds, parts, out.result.variant, sim.compute, sim.comm_exposed, sim.reduce, sim.total
+            );
+            rows.push(
+                Json::obj()
+                    .set("dataset", ds)
+                    .set("parts", parts)
+                    .set("method", out.result.variant.clone())
+                    .set("compute_s", sim.compute)
+                    .set("comm_s", sim.comm_exposed)
+                    .set("reduce_s", sim.reduce)
+                    .set("total_s", sim.total),
+            );
+        }
+    }
+    Json::obj().set("figure", "8").set("rows", Json::Arr(rows)).write_file("results/f8_breakdown.json")?;
+    println!("→ results/f8_breakdown.json");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Hot-path microbenchmarks (§Perf): SpMM, GEMM variants, halo
+//! gather/scatter, ring all-reduce, and one full training iteration.
+//! Timings are real single-core wall clock on the native backend.
+
+use pipegcn::comm::allreduce::ring_allreduce;
+use pipegcn::comm::Fabric;
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::tensor::{Csr, Mat};
+use pipegcn::util::rng::Rng;
+use pipegcn::util::timer::Stopwatch;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    let per = sw.elapsed_secs() / iters as f64;
+    println!("{name:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn random_csr(rng: &mut Rng, rows: usize, cols: usize, nnz_per_row: usize) -> Csr {
+    let mut trip = Vec::with_capacity(rows * nnz_per_row);
+    for r in 0..rows {
+        for _ in 0..nnz_per_row {
+            trip.push((r as u32, rng.gen_range(cols) as u32, rng.next_f32()));
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("== hot-path microbenchmarks (native backend, 1 core) ==");
+
+    // SpMM: reddit-sim scale per partition (2 parts)
+    let p = random_csr(&mut rng, 2000, 2600, 48);
+    let h = Mat::randn(2600, 128, 1.0, &mut rng);
+    let mut out = Mat::zeros(2000, 128);
+    bench("spmm 2000x2600 nnz≈96k, f=128", 20, || p.spmm_into(&h, &mut out));
+
+    let pt = p.transpose();
+    let m = Mat::randn(2000, 128, 1.0, &mut rng);
+    let mut out_t = Mat::zeros(2600, 128);
+    bench("spmm_t (via transpose) 2600 rows, f=128", 20, || pt.spmm_into(&m, &mut out_t));
+
+    // GEMM variants at layer shapes
+    let a = Mat::randn(2600, 128, 1.0, &mut rng);
+    let w = Mat::randn(128, 64, 1.0, &mut rng);
+    let mut c = Mat::zeros(2600, 64);
+    bench("gemm    2600x128 @ 128x64", 20, || a.matmul_into(&w, &mut c));
+    let zt = Mat::randn(2000, 128, 1.0, &mut rng);
+    let mm = Mat::randn(2000, 64, 1.0, &mut rng);
+    bench("gemm_tn (128x2000)ᵀ @ 2000x64", 20, || {
+        let _ = zt.matmul_tn(&mm);
+    });
+    bench("gemm_nt 2000x64 @ (128x64)ᵀ", 20, || {
+        let _ = mm.matmul_nt(&w);
+    });
+
+    // halo gather + ring all-reduce
+    let fabric = Fabric::new(4);
+    let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; 40_000]).collect();
+    bench("ring all-reduce 4×40k f32", 20, || {
+        ring_allreduce(&fabric, &mut bufs, 0);
+    });
+
+    // end-to-end iteration (reddit-sim, 4 parts)
+    let sw = Stopwatch::start();
+    let out = exp::run(
+        "reddit-sim",
+        4,
+        "pipegcn",
+        RunOpts { epochs: 5, eval_every: 0, ..Default::default() },
+    );
+    let total = sw.elapsed_secs();
+    println!(
+        "{:<44} {:>10.3} ms/epoch (5 epochs, incl. setup {:.2}s)",
+        "train epoch reddit-sim ×4 (pipegcn)",
+        out.result.wall_secs / 5.0 * 1e3,
+        total - out.result.wall_secs
+    );
+}

@@ -1,0 +1,41 @@
+//! Table 2 — communication ratio of vanilla partition-parallel training.
+//!
+//! Paper (comm time / total time): Reddit 2→65.83% 4→82.89%,
+//! ogbn-products 5→76.17% 10→85.79%, Yelp 3→61.16% 6→76.84%.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::Mode;
+use pipegcn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cases: &[(&str, usize, f64)] = &[
+        ("reddit-sim", 2, 65.83),
+        ("reddit-sim", 4, 82.89),
+        ("products-sim", 5, 76.17),
+        ("products-sim", 10, 85.79),
+        ("yelp-sim", 3, 61.16),
+        ("yelp-sim", 6, 76.84),
+    ];
+    println!("== Table 2: comm ratio of vanilla partition-parallel training ==");
+    println!(
+        "{:<14} {:>6} {:>14} {:>12}",
+        "dataset", "parts", "measured", "paper"
+    );
+    let mut rows = Vec::new();
+    for &(ds, parts, paper) in cases {
+        let out = exp::run(ds, parts, "gcn", RunOpts { epochs: 3, eval_every: 0, ..Default::default() });
+        let sim = exp::simulate_default(&out, Mode::Vanilla);
+        let measured = 100.0 * sim.comm_ratio();
+        println!("{:<14} {:>6} {:>13.2}% {:>11.2}%", ds, parts, measured, paper);
+        rows.push(
+            Json::obj()
+                .set("dataset", ds)
+                .set("parts", parts)
+                .set("measured_pct", measured)
+                .set("paper_pct", paper),
+        );
+    }
+    Json::obj().set("table", "2").set("rows", Json::Arr(rows)).write_file("results/t2_comm_ratio.json")?;
+    println!("→ results/t2_comm_ratio.json");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Table 5 — papers100M-scale epoch time on 4 servers × 8 MI60 / 10 GbE:
+//! total and communication time of GCN vs PipeGCN vs PipeGCN-GF.
+//!
+//! Paper: GCN 1.00× (10.5 s) comm 1.00× (6.6 s); PipeGCN 0.62× / 0.39×;
+//! PipeGCN-GF 0.64× / 0.42×.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::{profiles::rig_mi60, Mode};
+use pipegcn::util::fmt_secs;
+use pipegcn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let (profile, topo) = rig_mi60(4, 8);
+    let parts = 32;
+    let paper: &[(&str, f64, f64)] =
+        &[("GCN", 1.00, 1.00), ("PipeGCN", 0.62, 0.39), ("PipeGCN-GF", 0.64, 0.42)];
+    println!("== Table 5: papers-sim × {parts} on 4×8 MI60 / 10GbE ==");
+    println!(
+        "{:<12} {:>16} {:>16} {:>10} {:>10}",
+        "method", "total (rel)", "comm (rel)", "paper tot", "paper comm"
+    );
+    let mut base = (0.0f64, 0.0f64);
+    let mut rows = Vec::new();
+    for (i, method) in ["gcn", "pipegcn", "pipegcn-gf"].iter().enumerate() {
+        let out = exp::run(
+            "papers-sim",
+            parts,
+            method,
+            RunOpts { epochs: 6, eval_every: 0, ..Default::default() },
+        );
+        let mode = if *method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+        let sim = exp::simulate(&out, &profile, &topo, mode);
+        let comm = sim.comm_exposed + sim.reduce;
+        if i == 0 {
+            base = (sim.total, comm);
+        }
+        println!(
+            "{:<12} {:>7.2}x ({:>7}) {:>6.2}x ({:>7}) {:>9.2}x {:>9.2}x",
+            out.result.variant,
+            sim.total / base.0,
+            fmt_secs(sim.total),
+            comm / base.1,
+            fmt_secs(comm),
+            paper[i].1,
+            paper[i].2,
+        );
+        rows.push(
+            Json::obj()
+                .set("method", out.result.variant.clone())
+                .set("total_s", sim.total)
+                .set("total_rel", sim.total / base.0)
+                .set("comm_s", comm)
+                .set("comm_rel", comm / base.1)
+                .set("paper_total_rel", paper[i].1)
+                .set("paper_comm_rel", paper[i].2),
+        );
+    }
+    Json::obj().set("table", "5").set("rows", Json::Arr(rows)).write_file("results/t5_papers100m.json")?;
+    println!("→ results/t5_papers100m.json");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Table 6 — epoch-time breakdown of every full-graph training method on
+//! Reddit-scale, 2 and 4 GPUs: ROC, CAGNET(c=1), CAGNET(c=2), vanilla
+//! GCN, PipeGCN.
+
+use pipegcn::baselines::{cagnet_epoch, reddit_inputs, roc_epoch};
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::partition::quality;
+use pipegcn::sim::{profiles::rig_2080ti, EpochBreakdown, Mode};
+use pipegcn::util::json::Json;
+
+fn row(name: &str, b: &EpochBreakdown, paper: (f64, f64, f64, f64)) -> Json {
+    println!(
+        "{:<18} {:>7.2} {:>8.2} {:>8.2} {:>7.2} | paper: {:>5.2} {:>5.2} {:>5.2} {:>5.2}",
+        name, b.total, b.compute, b.comm_exposed, b.reduce, paper.0, paper.1, paper.2, paper.3
+    );
+    Json::obj()
+        .set("method", name)
+        .set("total", b.total)
+        .set("compute", b.compute)
+        .set("comm", b.comm_exposed)
+        .set("reduce", b.reduce)
+        .set("paper_total", paper.0)
+        .set("paper_compute", paper.1)
+        .set("paper_comm", paper.2)
+        .set("paper_reduce", paper.3)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Table 6: epoch time breakdown, Reddit-scale (seconds) ==");
+    let mut rows = Vec::new();
+    for gpus in [2usize, 4] {
+        println!(
+            "\n-- {gpus} GPUs --\n{:<18} {:>7} {:>8} {:>8} {:>7}",
+            "method", "total", "compute", "comm", "reduce"
+        );
+        let (profile, topo) = rig_2080ti(gpus);
+        let out_g = exp::run(
+            "reddit-sim",
+            gpus,
+            "gcn",
+            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
+        );
+        let q = quality(&out_g.graph, &out_g.parts);
+        let inputs = reddit_inputs(gpus, q.replication_factor);
+        // paper rows: (total, compute, comm, reduce)
+        let paper: &[(&str, (f64, f64, f64, f64))] = if gpus == 2 {
+            &[
+                ("ROC", (3.63, 0.50, 3.13, 0.00)),
+                ("CAGNET (c=1)", (2.74, 1.91, 0.65, 0.18)),
+                ("CAGNET (c=2)", (5.41, 4.36, 0.09, 0.96)),
+                ("GCN", (0.52, 0.17, 0.34, 0.01)),
+                ("PipeGCN", (0.27, 0.25, 0.00, 0.02)),
+            ]
+        } else {
+            &[
+                ("ROC", (3.34, 0.42, 2.92, 0.00)),
+                ("CAGNET (c=1)", (2.31, 0.97, 1.23, 0.11)),
+                ("CAGNET (c=2)", (2.26, 1.03, 0.55, 0.68)),
+                ("GCN", (0.48, 0.07, 0.40, 0.01)),
+                ("PipeGCN", (0.23, 0.10, 0.10, 0.03)),
+            ]
+        };
+        let roc = roc_epoch(&inputs, &profile, &topo);
+        let c1 = cagnet_epoch(&inputs, 1, &profile, &topo);
+        let c2 = cagnet_epoch(&inputs, 2, &profile, &topo);
+        let gcn = exp::simulate(&out_g, &profile, &topo, Mode::Vanilla);
+        let out_p = exp::run(
+            "reddit-sim",
+            gpus,
+            "pipegcn",
+            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
+        );
+        let pipe = exp::simulate(&out_p, &profile, &topo, Mode::Pipelined);
+        for (i, b) in [roc, c1, c2, gcn, pipe].iter().enumerate() {
+            let mut j = row(paper[i].0, b, paper[i].1);
+            j = j.set("gpus", gpus);
+            rows.push(j);
+        }
+    }
+    Json::obj().set("table", "6").set("rows", Json::Arr(rows)).write_file("results/t6_breakdown.json")?;
+    println!("\n→ results/t6_breakdown.json");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Tables 7 & 8 — multi-server scaling on the MI60/10GbE testbed:
+//! accuracy of PipeGCN variants (T7) and throughput speedup over vanilla
+//! (T8) across (#nodes × #gpus) grids.
+//!
+//! Paper: accuracy flat (~97.0–97.2 on Reddit) across 2–16 partitions;
+//! speedups 1.16×–1.65×.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::sim::{profiles::rig_mi60, Mode};
+use pipegcn::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let grids: &[(usize, usize)] = &[
+        (1, 2),
+        (1, 3),
+        (1, 4),
+        (2, 2),
+        (2, 3),
+        (2, 4),
+        (3, 2),
+        (3, 3),
+        (3, 4),
+        (4, 2),
+        (4, 3),
+        (4, 4),
+    ];
+    let methods = ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"];
+    println!("== Tables 7/8: multi-server accuracy + speedup (reddit-sim) ==");
+    println!(
+        "{:<8} {:>6} | {:>8} {:>8} {:>8} {:>8} {:>8} | {:>8}",
+        "topology", "parts", "GCN", "Pipe", "Pipe-G", "Pipe-F", "Pipe-GF", "speedup"
+    );
+    let mut rows = Vec::new();
+    for &(nodes, per) in grids {
+        let parts = nodes * per;
+        let (profile, topo) = rig_mi60(nodes, per);
+        let mut accs = Vec::new();
+        let mut vanilla_total = 0.0;
+        let mut pipe_total = 0.0;
+        for method in methods {
+            let out = exp::run(
+                "reddit-sim",
+                parts,
+                method,
+                RunOpts { epochs: 30, eval_every: 30, ..Default::default() },
+            );
+            let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
+            let sim = exp::simulate(&out, &profile, &topo, mode);
+            if method == "gcn" {
+                vanilla_total = sim.total;
+            }
+            if method == "pipegcn" {
+                pipe_total = sim.total;
+            }
+            accs.push(out.result.final_test);
+        }
+        let speedup = vanilla_total / pipe_total;
+        println!(
+            "{:<8} {:>6} | {:>8.4} {:>8.4} {:>8.4} {:>8.4} {:>8.4} | {:>7.2}x",
+            format!("{nodes}x{per}"),
+            parts,
+            accs[0],
+            accs[1],
+            accs[2],
+            accs[3],
+            accs[4],
+            speedup
+        );
+        rows.push(
+            Json::obj()
+                .set("nodes", nodes)
+                .set("gpus_per_node", per)
+                .set("parts", parts)
+                .set("acc_gcn", accs[0])
+                .set("acc_pipegcn", accs[1])
+                .set("acc_pipegcn_g", accs[2])
+                .set("acc_pipegcn_f", accs[3])
+                .set("acc_pipegcn_gf", accs[4])
+                .set("speedup", speedup),
+        );
+    }
+    println!("\npaper T8 speedups: 1.16× (1×2) … 1.65× (3×2), dipping when 10GbE saturates");
+    Json::obj().set("tables", "7+8").set("rows", Json::Arr(rows)).write_file("results/t7_t8_multiserver.json")?;
+    println!("→ results/t7_t8_multiserver.json");
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Cost models of the full-graph training comparators in Fig. 3 /
+//! Table 6: **ROC** (Jia et al., MLSys'20) and **CAGNET** (Tripathy et
+//! al., SC'20).
+//!
+//! Neither system is open to this environment (ROC needs its own runtime,
+//! CAGNET is built on torch.distributed + SUMMA), so — per the
+//! substitution rule — we reimplement their *communication schedules* as
+//! cost models over the same device/link profiles used for GCN/PipeGCN:
+//!
+//! * **ROC**: partition-parallel compute, but partitions live in host
+//!   memory and are swapped CPU↔GPU every layer, both passes. The paper's
+//!   Table 6 shows the swap path dominating (3.13 s of 3.63 s on 2 GPUs);
+//!   its effective swap bandwidth (≈0.45 GB/s) reflects ROC's
+//!   gather/scatter + synchronous cudaMemcpy pipeline, which we encode as
+//!   `ROC_SWAP_BYTES_PER_S` rather than raw PCIe bandwidth.
+//! * **CAGNET (c)**: 1.5D SUMMA-like: each layer broadcasts full feature
+//!   blocks among p/c groups (volume `N·f·4·(p−c)/(p·c)` per GPU per
+//!   direction) and all-reduces partial activations for c>1. Compute is
+//!   inflated by dense-block redundancy (`CAGNET_COMPUTE_FACTOR`).
+//!
+//! Constants are calibrated against Table 6 (Reddit, 2/4 GPUs) and the
+//! bench `t6_breakdown` prints model-vs-paper side by side; Fig. 3 then
+//! reuses the same models across partition counts.
+
+use crate::comm::topology::Topology;
+use crate::sim::{DeviceProfile, EpochBreakdown};
+
+/// Graph + model scale factors every baseline consumes.
+#[derive(Clone, Debug)]
+pub struct BaselineInputs {
+    /// total nodes
+    pub n: f64,
+    /// directed edge count (nnz of Ã)
+    pub nnz: f64,
+    /// layer widths `[f_in, hidden.., classes]`
+    pub dims: Vec<usize>,
+    pub n_parts: usize,
+    /// average replication factor of the partitioning (inner+halo)/inner
+    pub replication: f64,
+}
+
+impl BaselineInputs {
+    /// Per-GPU per-layer compute of the partition-parallel schedule
+    /// (fwd + bwd ≈ 3× fwd), in seconds.
+    fn partition_compute(&self, p: &DeviceProfile) -> f64 {
+        let k = self.n_parts as f64;
+        let mut secs = 0.0;
+        for l in 0..self.dims.len() - 1 {
+            let (f_in, f_out) = (self.dims[l] as f64, self.dims[l + 1] as f64);
+            let spmm = 2.0 * (self.nnz / k) * f_in;
+            let rows = self.n / k * self.replication;
+            let gemm = 2.0 * rows * f_in * f_out * 2.0; // neigh + self weights
+            secs += 3.0 * (spmm / p.spmm_flops + gemm / p.gemm_flops);
+            secs += 2.0 * p.layer_overhead_s;
+        }
+        secs
+    }
+}
+
+/// ROC's effective host↔GPU swap bandwidth, **shared across all GPUs**
+/// (one host memory complex serves every partition — which is exactly why
+/// the paper's ROC rows barely improve from 2→4 GPUs: 3.63 s → 3.34 s).
+/// Calibrated: ≈2.7 GB of per-epoch activation traffic ≈ 3.1 s.
+pub const ROC_SWAP_BYTES_PER_S: f64 = 0.85e9;
+
+/// CAGNET dense-block compute inflation over partition-parallel SpMM
+/// (Table 6: CAGNET c=1 compute 0.97 s vs GCN 0.07 s on 4 GPUs — the
+/// SUMMA formulation computes on dense broadcast blocks and cannot skip
+/// the zero structure a locality-aware partitioning exposes).
+pub const CAGNET_COMPUTE_FACTOR: f64 = 12.0;
+
+/// Additional skew for feature-split replication (c>1) on few GPUs:
+/// skinny SUMMA panels underutilize the GEMM pipeline (Table 6 shows
+/// c=2 compute 4.36 s vs c=1 1.91 s on 2 GPUs, converging by 4 GPUs).
+pub fn cagnet_c_penalty(c: f64, p: f64) -> f64 {
+    1.0 + 5.12 * (c - 1.0) / (p * p)
+}
+
+/// ROC epoch estimate.
+pub fn roc_epoch(inp: &BaselineInputs, profile: &DeviceProfile, _topo: &Topology) -> EpochBreakdown {
+    let compute = inp.partition_compute(profile);
+    // swap: layer inputs streamed in (fwd) and gradients streamed out
+    // (bwd) for EVERY partition through the shared host link — total
+    // volume is independent of the GPU count, hence ROC's flat scaling.
+    let mut swap_bytes = 0.0;
+    for l in 0..inp.dims.len() - 1 {
+        let (f_in, f_out) = (inp.dims[l] as f64, inp.dims[l + 1] as f64);
+        let rows_total = inp.n * inp.replication;
+        swap_bytes += rows_total * (f_in + f_out) * 4.0;
+    }
+    let swap = swap_bytes / ROC_SWAP_BYTES_PER_S;
+    EpochBreakdown {
+        compute,
+        comm_total: swap,
+        comm_exposed: swap,
+        reduce: 0.0,
+        total: compute + swap,
+    }
+}
+
+/// CAGNET(c) epoch estimate.
+pub fn cagnet_epoch(
+    inp: &BaselineInputs,
+    c: usize,
+    profile: &DeviceProfile,
+    topo: &Topology,
+) -> EpochBreakdown {
+    let p = inp.n_parts as f64;
+    let c = c as f64;
+    let link = topo.ring_bottleneck();
+    let compute =
+        inp.partition_compute(profile) * CAGNET_COMPUTE_FACTOR * cagnet_c_penalty(c, p);
+    // broadcast volume per GPU per layer per pass: N·f/c · (p−c)/p values
+    let mut bcast_bytes = 0.0;
+    let mut reduce_bytes = 0.0;
+    for l in 0..inp.dims.len() - 1 {
+        let f_in = inp.dims[l] as f64;
+        let vol = inp.n * f_in * 4.0 / c * (p - c).max(0.0) / p;
+        bcast_bytes += 2.0 * vol; // fwd + bwd
+        if c > 1.0 {
+            // partial-activation all-reduce within c-groups
+            reduce_bytes += 2.0 * inp.n / p * f_in * 4.0 * (c - 1.0);
+        }
+    }
+    let comm = bcast_bytes / link.bytes_per_s
+        + (inp.dims.len() - 1) as f64 * 2.0 * profile.barrier_s * (p - 1.0);
+    let reduce = reduce_bytes / link.bytes_per_s;
+    EpochBreakdown {
+        compute,
+        comm_total: comm,
+        comm_exposed: comm,
+        reduce,
+        total: compute + comm + reduce,
+    }
+}
+
+/// Reddit-scale inputs used by Table 6 / Fig. 3 (full-size dataset,
+/// 4-layer GraphSAGE-256; replication measured from our partitioner is
+/// substituted by the paper-typical ≈1.3 at small k).
+pub fn reddit_inputs(n_parts: usize, replication: f64) -> BaselineInputs {
+    BaselineInputs {
+        n: 233_000.0,
+        nnz: 114_000_000.0,
+        dims: vec![602, 256, 256, 256, 41],
+        n_parts,
+        replication,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profiles::rig_2080ti;
+
+    /// Table 6 ordering: ROC and CAGNET are far slower than vanilla
+    /// partition-parallel training, which PipeGCN then halves.
+    #[test]
+    fn table6_relative_standings_2gpu() {
+        let (profile, topo) = rig_2080ti(2);
+        let inp = reddit_inputs(2, 1.32);
+        let roc = roc_epoch(&inp, &profile, &topo);
+        let c1 = cagnet_epoch(&inp, 1, &profile, &topo);
+        let cagnet2 = cagnet_epoch(&inp, 2, &profile, &topo);
+        // paper: ROC 3.63s, CAGNET c=1 2.74s, c=2 5.41s, GCN 0.52s
+        assert!(roc.total > 2.0 && roc.total < 6.0, "roc {:.2}", roc.total);
+        assert!(c1.total > 1.5 && c1.total < 5.0, "c1 {:.2}", c1.total);
+        assert!(
+            cagnet2.total > 3.0 && cagnet2.total < 9.0,
+            "cagnet2 {:.2}",
+            cagnet2.total
+        );
+        // c=2 slower than c=1 on 2 GPUs, exactly as in Table 6
+        assert!(cagnet2.total > c1.total);
+    }
+
+    #[test]
+    fn table6_relative_standings_4gpu() {
+        let (profile, topo) = rig_2080ti(4);
+        let inp = reddit_inputs(4, 1.5);
+        let roc = roc_epoch(&inp, &profile, &topo);
+        let c1 = cagnet_epoch(&inp, 1, &profile, &topo);
+        let c2 = cagnet_epoch(&inp, 2, &profile, &topo);
+        // paper: ROC 3.34, CAGNET c=1 2.31, c=2 2.26
+        assert!(roc.total > 1.5 && roc.total < 6.0, "roc {:.2}", roc.total);
+        assert!(c1.total > 1.0 && c1.total < 4.5, "c1 {:.2}", c1.total);
+        assert!(c2.total > 1.0 && c2.total < 4.5, "c2 {:.2}", c2.total);
+        // c=2 trades broadcast for reduce: comm shrinks, reduce grows
+        assert!(c2.comm_total < c1.comm_total);
+        assert!(c2.reduce > c1.reduce);
+    }
+
+    #[test]
+    fn roc_swap_dominates_compute() {
+        let (profile, topo) = rig_2080ti(2);
+        let inp = reddit_inputs(2, 1.32);
+        let roc = roc_epoch(&inp, &profile, &topo);
+        assert!(roc.comm_total > 3.0 * roc.compute, "{roc:?}");
+    }
+
+    #[test]
+    fn cagnet_scales_with_partitions() {
+        let inp4 = reddit_inputs(4, 1.5);
+        let inp8 = reddit_inputs(8, 1.8);
+        let (profile, topo4) = rig_2080ti(4);
+        let (_, topo8) = rig_2080ti(8);
+        let t4 = cagnet_epoch(&inp4, 1, &profile, &topo4);
+        let t8 = cagnet_epoch(&inp8, 1, &profile, &topo8);
+        // broadcast volume per GPU shrinks sublinearly; compute drops ~2×
+        assert!(t8.total < t4.total, "t4 {:.2} t8 {:.2}", t4.total, t8.total);
+    }
+}

@@ -1,0 +1,146 @@
+//! Ring all-reduce (reduce-scatter + all-gather) over the [`Fabric`].
+//!
+//! Used for the model-gradient synchronization (Alg. 1 line 32). The
+//! sequential trainer drives all ranks' steps in order; the algorithm is
+//! the standard 2(n−1)-step ring so the byte counters reflect exactly
+//! what NCCL-style collectives would move: `2·(n−1)/n · bytes` per rank.
+
+use super::{Fabric, Phase, Tag};
+
+/// Run ring all-reduce over `bufs` (one buffer per rank, all same length),
+/// leaving every buffer equal to the elementwise sum. Message traffic goes
+/// through `fabric` (tagged `Phase::Reduce`, iteration `iter`).
+pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
+    let n = bufs.len();
+    assert_eq!(fabric.n_ranks(), n);
+    if n <= 1 {
+        return;
+    }
+    let len = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == len));
+    if len == 0 {
+        return;
+    }
+    // chunk boundaries: chunk c = [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
+    let chunk = |c: usize| starts[c % n]..starts[c % n + 1];
+
+    // reduce-scatter: step s, rank r sends chunk (r - s) to r+1
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + n - s) % n;
+            let payload = bufs[r][chunk(c)].to_vec();
+            let tag = Tag::new(iter, (s * n + c) as u16, Phase::Reduce);
+            fabric.send(r, (r + 1) % n, tag, payload);
+        }
+        for r in 0..n {
+            let src = (r + n - 1) % n;
+            let c = (src + n - s) % n;
+            let tag = Tag::new(iter, (s * n + c) as u16, Phase::Reduce);
+            let recv = fabric.recv_now(src, r, tag);
+            for (dst, v) in bufs[r][chunk(c)].iter_mut().zip(recv) {
+                *dst += v;
+            }
+        }
+    }
+    // all-gather: step s, rank r sends its completed chunk (r + 1 - s)
+    for s in 0..n - 1 {
+        for r in 0..n {
+            let c = (r + 1 + n - s) % n;
+            let payload = bufs[r][chunk(c)].to_vec();
+            let tag = Tag::new(iter, ((n + s) * n + c) as u16, Phase::Reduce);
+            fabric.send(r, (r + 1) % n, tag, payload);
+        }
+        for r in 0..n {
+            let src = (r + n - 1) % n;
+            let c = (src + 1 + n - s) % n;
+            let tag = Tag::new(iter, ((n + s) * n + c) as u16, Phase::Reduce);
+            let recv = fabric.recv_now(src, r, tag);
+            bufs[r][chunk(c)].copy_from_slice(&recv);
+        }
+    }
+}
+
+/// Bytes each rank sends in a ring all-reduce of `elem_count` f32s.
+pub fn ring_bytes_per_rank(n: usize, elem_count: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    // 2(n-1) steps, ~elem/n each
+    (2 * (n - 1) * (elem_count * 4 / n)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn allreduce_matches_sum() {
+        prop::check("ring==sum", 12, |rng| {
+            let n = 2 + rng.gen_range(6);
+            let len = 1 + rng.gen_range(40);
+            let fabric = Fabric::new(n);
+            let mut bufs: Vec<Vec<f32>> =
+                (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+            let mut want = vec![0.0f32; len];
+            for b in &bufs {
+                for (w, &v) in want.iter_mut().zip(b) {
+                    *w += v;
+                }
+            }
+            ring_allreduce(&fabric, &mut bufs, 0);
+            for (r, b) in bufs.iter().enumerate() {
+                prop::assert_close(b, &want, 1e-4)
+                    .map_err(|e| format!("rank {r}: {e}"))?;
+            }
+            prop_assert!(fabric.pending() == 0, "leaked {} messages", fabric.pending());
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_rank_noop() {
+        let fabric = Fabric::new(1);
+        let mut bufs = vec![vec![1.0, 2.0]];
+        ring_allreduce(&fabric, &mut bufs, 0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+        assert_eq!(fabric.total_bytes(), 0);
+    }
+
+    #[test]
+    fn byte_volume_matches_formula() {
+        let n = 4;
+        let len = 80; // divisible by n so the formula is exact
+        let fabric = Fabric::new(n);
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; len]).collect();
+        ring_allreduce(&fabric, &mut bufs, 0);
+        let per_rank = ring_bytes_per_rank(n, len);
+        for r in 0..n {
+            let sent: u64 = (0..n).map(|d| fabric.bytes(r, d)).sum();
+            assert_eq!(sent, per_rank, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn uneven_length_still_correct() {
+        let n = 3;
+        let len = 7; // not divisible
+        let fabric = Fabric::new(n);
+        let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![(r + 1) as f32; len]).collect();
+        ring_allreduce(&fabric, &mut bufs, 1);
+        for b in &bufs {
+            assert!(b.iter().all(|&v| (v - 6.0).abs() < 1e-6));
+        }
+        assert_eq!(fabric.pending(), 0);
+    }
+
+    #[test]
+    fn empty_buffers_noop() {
+        let fabric = Fabric::new(3);
+        let mut bufs = vec![vec![], vec![], vec![]];
+        ring_allreduce(&fabric, &mut bufs, 0);
+        assert_eq!(fabric.total_bytes(), 0);
+    }
+}

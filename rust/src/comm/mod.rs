@@ -1,0 +1,226 @@
+//! Communication fabric for partition-parallel training.
+//!
+//! [`Fabric`] is an in-process message-passing layer with per-pair byte
+//! accounting. The sequential trainer and the threaded runner both speak
+//! through it, so every experiment gets exact communication volumes
+//! "for free"; those byte counts feed the [`crate::sim`] link model to
+//! estimate what the same schedule costs on the paper's testbeds.
+
+pub mod allreduce;
+pub mod topology;
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Which tensor a message carries (Algorithm 1's two comm streams).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// boundary features, forward pass (thread_f in Alg. 1)
+    FwdFeat,
+    /// boundary feature gradients, backward pass (thread_b in Alg. 1)
+    BwdGrad,
+    /// model-gradient all-reduce chunks
+    Reduce,
+    /// control/setup (boundary-set exchange)
+    Setup,
+}
+
+/// Message identity: (iteration, layer, phase). PipeGCN tags messages
+/// with the *producing* iteration so the consumer can explicitly pick up
+/// iteration `t-1` tensors — staleness is in the tag, not in timing luck.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub iter: u32,
+    pub layer: u16,
+    pub phase: Phase,
+}
+
+impl Tag {
+    pub fn new(iter: u32, layer: u16, phase: Phase) -> Tag {
+        Tag { iter, layer, phase }
+    }
+}
+
+#[derive(Default)]
+struct FabricInner {
+    /// queues[(src, dst)][tag] — FIFO per (pair, tag)
+    queues: HashMap<(u32, u32), HashMap<Tag, VecDeque<Vec<f32>>>>,
+    /// bytes[src][dst]
+    bytes: Vec<Vec<u64>>,
+    /// messages[src][dst]
+    msgs: Vec<Vec<u64>>,
+}
+
+/// In-process fabric between `n` ranks. Thread-safe; `recv_blocking`
+/// parks on a condvar so a threaded runner can genuinely overlap.
+pub struct Fabric {
+    n: usize,
+    inner: Mutex<FabricInner>,
+    cv: Condvar,
+}
+
+impl Fabric {
+    pub fn new(n: usize) -> Fabric {
+        Fabric {
+            n,
+            inner: Mutex::new(FabricInner {
+                queues: HashMap::new(),
+                bytes: vec![vec![0; n]; n],
+                msgs: vec![vec![0; n]; n],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    /// Send `payload` from `src` to `dst` under `tag`.
+    pub fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        assert!(src < self.n && dst < self.n);
+        let mut g = self.inner.lock().unwrap();
+        g.bytes[src][dst] += (payload.len() * 4) as u64;
+        g.msgs[src][dst] += 1;
+        g.queues
+            .entry((src as u32, dst as u32))
+            .or_default()
+            .entry(tag)
+            .or_default()
+            .push_back(payload);
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking receive of the oldest message (src→dst, tag).
+    pub fn try_recv(&self, src: usize, dst: usize, tag: Tag) -> Option<Vec<f32>> {
+        let mut g = self.inner.lock().unwrap();
+        g.queues
+            .get_mut(&(src as u32, dst as u32))
+            .and_then(|m| m.get_mut(&tag))
+            .and_then(|q| q.pop_front())
+    }
+
+    /// Blocking receive (threaded runner).
+    pub fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = g
+                .queues
+                .get_mut(&(src as u32, dst as u32))
+                .and_then(|m| m.get_mut(&tag))
+                .and_then(|q| q.pop_front())
+            {
+                return v;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Receive that must succeed immediately (sequential trainer, where
+    /// the producer already ran). Panics with a diagnostic otherwise.
+    pub fn recv_now(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        self.try_recv(src, dst, tag)
+            .unwrap_or_else(|| panic!("no message {src}->{dst} for {tag:?}"))
+    }
+
+    /// Total bytes sent src→dst so far.
+    pub fn bytes(&self, src: usize, dst: usize) -> u64 {
+        self.inner.lock().unwrap().bytes[src][dst]
+    }
+
+    /// Full byte matrix snapshot.
+    pub fn byte_matrix(&self) -> Vec<Vec<u64>> {
+        self.inner.lock().unwrap().bytes.clone()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().bytes.iter().flatten().sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.inner.lock().unwrap().msgs.iter().flatten().sum()
+    }
+
+    /// Reset byte/message counters (keep queued messages).
+    pub fn reset_counters(&self) {
+        let mut g = self.inner.lock().unwrap();
+        for row in g.bytes.iter_mut() {
+            row.iter_mut().for_each(|b| *b = 0);
+        }
+        for row in g.msgs.iter_mut() {
+            row.iter_mut().for_each(|b| *b = 0);
+        }
+    }
+
+    /// Number of messages still queued (tests: catch leaks / wrong tags).
+    pub fn pending(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.queues.values().flat_map(|m| m.values()).map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_recv_fifo_per_tag() {
+        let f = Fabric::new(2);
+        let t = Tag::new(1, 0, Phase::FwdFeat);
+        f.send(0, 1, t, vec![1.0]);
+        f.send(0, 1, t, vec![2.0]);
+        assert_eq!(f.try_recv(0, 1, t), Some(vec![1.0]));
+        assert_eq!(f.try_recv(0, 1, t), Some(vec![2.0]));
+        assert_eq!(f.try_recv(0, 1, t), None);
+    }
+
+    #[test]
+    fn tags_isolate_messages() {
+        let f = Fabric::new(2);
+        let t1 = Tag::new(1, 0, Phase::FwdFeat);
+        let t2 = Tag::new(1, 0, Phase::BwdGrad);
+        let t3 = Tag::new(2, 0, Phase::FwdFeat);
+        f.send(0, 1, t1, vec![1.0]);
+        f.send(0, 1, t2, vec![2.0]);
+        f.send(0, 1, t3, vec![3.0]);
+        assert_eq!(f.try_recv(0, 1, t3), Some(vec![3.0]));
+        assert_eq!(f.try_recv(0, 1, t1), Some(vec![1.0]));
+        assert_eq!(f.try_recv(0, 1, t2), Some(vec![2.0]));
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let f = Fabric::new(3);
+        let t = Tag::new(0, 0, Phase::Setup);
+        f.send(0, 2, t, vec![0.0; 10]);
+        f.send(2, 0, t, vec![0.0; 5]);
+        assert_eq!(f.bytes(0, 2), 40);
+        assert_eq!(f.bytes(2, 0), 20);
+        assert_eq!(f.total_bytes(), 60);
+        assert_eq!(f.total_msgs(), 2);
+        f.reset_counters();
+        assert_eq!(f.total_bytes(), 0);
+        // queued messages survive the counter reset
+        assert_eq!(f.pending(), 2);
+    }
+
+    #[test]
+    fn blocking_recv_across_threads() {
+        use std::sync::Arc;
+        let f = Arc::new(Fabric::new(2));
+        let t = Tag::new(5, 1, Phase::FwdFeat);
+        let f2 = f.clone();
+        let h = std::thread::spawn(move || f2.recv_blocking(0, 1, t));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.send(0, 1, t, vec![7.0]);
+        assert_eq!(h.join().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "no message")]
+    fn recv_now_panics_when_empty() {
+        let f = Fabric::new(2);
+        f.recv_now(0, 1, Tag::new(0, 0, Phase::FwdFeat));
+    }
+}

@@ -1,0 +1,106 @@
+//! Cluster topology description: devices grouped into nodes, with
+//! intra-node (PCIe) and inter-node (Ethernet) links.
+//!
+//! Mirrors the paper's two testbeds:
+//! * 10× RTX-2080Ti in one chassis, PCIe3 ×16 CPU-GPU and GPU-GPU;
+//! * 4 nodes × 8 MI60, PCIe3 ×48 lanes intra, 10 Gbps Ethernet inter.
+
+/// A point-to-point link model: `time(bytes) = latency + bytes/bandwidth`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    pub latency_s: f64,
+    pub bytes_per_s: f64,
+}
+
+impl Link {
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// Devices `0..n_devices`, `node_of[d]` gives the chassis id.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub node_of: Vec<usize>,
+    pub intra: Link,
+    pub inter: Link,
+}
+
+impl Topology {
+    /// Single node with `n` devices, all pairs on the intra link.
+    pub fn single_node(n: usize, intra: Link) -> Topology {
+        Topology { node_of: vec![0; n], intra, inter: intra }
+    }
+
+    /// `nodes` × `per_node` devices.
+    pub fn multi_node(nodes: usize, per_node: usize, intra: Link, inter: Link) -> Topology {
+        let node_of = (0..nodes * per_node).map(|d| d / per_node).collect();
+        Topology { node_of, intra, inter }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.node_of.len()
+    }
+
+    pub fn link(&self, a: usize, b: usize) -> Link {
+        if self.node_of[a] == self.node_of[b] {
+            self.intra
+        } else {
+            self.inter
+        }
+    }
+
+    /// The slowest link in a ring 0→1→…→n−1→0 (ring collectives run at
+    /// the pace of the slowest hop).
+    pub fn ring_bottleneck(&self) -> Link {
+        let n = self.n_devices();
+        let mut worst = self.intra;
+        for d in 0..n {
+            let l = self.link(d, (d + 1) % n);
+            if l.bytes_per_s < worst.bytes_per_s {
+                worst = l;
+            }
+        }
+        worst
+    }
+}
+
+/// PCIe 3.0 ×16 effective point-to-point (≈12 GB/s raw, ~9 effective
+/// through host bridges with contention).
+pub fn pcie3_link() -> Link {
+    Link { latency_s: 20e-6, bytes_per_s: 9.0e9 }
+}
+
+/// 10 Gbps Ethernet effective (~1.1 GB/s with TCP overheads).
+pub fn eth10g_link() -> Link {
+    Link { latency_s: 150e-6, bytes_per_s: 1.1e9 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_affine() {
+        let l = Link { latency_s: 1e-3, bytes_per_s: 1e6 };
+        assert!((l.transfer_time(0) - 1e-3).abs() < 1e-12);
+        assert!((l.transfer_time(1_000_000) - 1.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_node_all_intra() {
+        let t = Topology::single_node(4, pcie3_link());
+        assert_eq!(t.link(0, 3), pcie3_link());
+        assert_eq!(t.ring_bottleneck(), pcie3_link());
+    }
+
+    #[test]
+    fn multi_node_link_selection() {
+        let t = Topology::multi_node(2, 2, pcie3_link(), eth10g_link());
+        assert_eq!(t.n_devices(), 4);
+        assert_eq!(t.link(0, 1), pcie3_link()); // same node
+        assert_eq!(t.link(1, 2), eth10g_link()); // crosses nodes
+        // ring 0-1-2-3-0 crosses nodes at 1→2 and 3→0
+        assert_eq!(t.ring_bottleneck(), eth10g_link());
+    }
+}

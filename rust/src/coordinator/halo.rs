@@ -1,0 +1,342 @@
+//! Halo (boundary) exchange plan — Algorithm 1 lines 1–6.
+//!
+//! For each partition `i` the plan materializes:
+//! * the **inner** node list `V_i` and the **halo** list (remote nodes
+//!   referenced by `P` rows of inner nodes), halo sorted by owner so each
+//!   peer's block is contiguous;
+//! * the local propagation matrix `P_i` (rows = inner, cols = inner+halo)
+//!   sliced from the *global* normalization — degrees are global, exactly
+//!   as in partition-parallel training (Eq. 3 uses the true d_v);
+//! * the send sets `S_{i,j}` (local indices of my inner nodes that
+//!   partition j's halo needs), ordered to match j's contiguous recv
+//!   block;
+//! * local features / labels / masks.
+
+use crate::graph::{Graph, Labels};
+use crate::model::LayerKind;
+use crate::partition::Partitioning;
+use crate::tensor::{Csr, Mat};
+
+/// Per-partition plan.
+#[derive(Clone, Debug)]
+pub struct PartPlan {
+    pub part: usize,
+    /// global ids of inner nodes, sorted ascending
+    pub inner: Vec<u32>,
+    /// global ids of halo nodes, sorted by (owner, id)
+    pub halo: Vec<u32>,
+    /// for each peer: the range of `halo` owned by that peer (empty ok)
+    pub halo_ranges: Vec<std::ops::Range<usize>>,
+    /// local propagation matrix: inner × (inner + halo)
+    pub prop: Csr,
+    /// for each peer j: local inner indices to send (order matches j's
+    /// halo block for me)
+    pub send_sets: Vec<Vec<u32>>,
+    /// inner-node features (n_inner × f)
+    pub features: Mat,
+    /// inner-node labels
+    pub labels: PlanLabels,
+    /// local inner indices of train/val/test nodes
+    pub train_mask: Vec<u32>,
+    pub val_mask: Vec<u32>,
+    pub test_mask: Vec<u32>,
+}
+
+#[derive(Clone, Debug)]
+pub enum PlanLabels {
+    Single(Vec<u32>),
+    Multi(Mat),
+}
+
+impl PartPlan {
+    pub fn n_inner(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.inner.len() + self.halo.len()
+    }
+
+    /// Gather the rows of `h_inner` listed in `send_sets[peer]` into a
+    /// flat payload.
+    pub fn gather_send(&self, peer: usize, h_inner: &Mat) -> Vec<f32> {
+        let set = &self.send_sets[peer];
+        let mut out = Vec::with_capacity(set.len() * h_inner.cols);
+        for &li in set {
+            out.extend_from_slice(h_inner.row(li as usize));
+        }
+        out
+    }
+}
+
+/// The full plan plus global metadata.
+#[derive(Clone, Debug)]
+pub struct HaloPlan {
+    pub n_parts: usize,
+    pub parts: Vec<PartPlan>,
+    /// total #train nodes (for loss normalization across partitions)
+    pub total_train: usize,
+    pub n_classes: usize,
+    pub multilabel: bool,
+}
+
+/// Build the plan. `kind` selects the propagation normalization:
+/// GCN → symmetric `D̃^{-1/2}ÃD̃^{-1/2}`, SAGE-mean → `D̃^{-1}Ã`.
+pub fn build(g: &Graph, pt: &Partitioning, kind: LayerKind) -> HaloPlan {
+    assert_eq!(pt.assign.len(), g.n);
+    let k = pt.n_parts;
+    let p_global = match kind {
+        LayerKind::Gcn => g.propagation_matrix(),
+        LayerKind::SageMean => g.mean_propagation_matrix(),
+    };
+    let members = pt.members(); // sorted ids per part
+    // global -> local inner index
+    let mut inner_idx = vec![u32::MAX; g.n];
+    for m in &members {
+        for (li, &v) in m.iter().enumerate() {
+            inner_idx[v as usize] = li as u32;
+        }
+    }
+    let mut parts = Vec::with_capacity(k);
+    for i in 0..k {
+        let inner = members[i].clone();
+        let n_inner = inner.len();
+        // collect halo: remote columns referenced by inner rows of P
+        let mut halo: Vec<u32> = Vec::new();
+        for &v in &inner {
+            for (u, _) in p_global.row_entries(v as usize) {
+                if pt.assign[u] as usize != i {
+                    halo.push(u as u32);
+                }
+            }
+        }
+        // sort by (owner, id) and dedup
+        halo.sort_unstable_by_key(|&u| ((pt.assign[u as usize] as u64) << 32) | u as u64);
+        halo.dedup();
+        // owner ranges + local col index of halo nodes
+        let mut halo_ranges = vec![0..0; k];
+        {
+            let mut s = 0usize;
+            while s < halo.len() {
+                let owner = pt.assign[halo[s] as usize] as usize;
+                let mut e = s;
+                while e < halo.len() && pt.assign[halo[e] as usize] as usize == owner {
+                    e += 1;
+                }
+                halo_ranges[owner] = s..e;
+                s = e;
+            }
+        }
+        let mut halo_col = std::collections::HashMap::with_capacity(halo.len() * 2);
+        for (hi, &u) in halo.iter().enumerate() {
+            halo_col.insert(u, (n_inner + hi) as u32);
+        }
+        // local propagation matrix
+        let mut trip = Vec::new();
+        for (r, &v) in inner.iter().enumerate() {
+            for (u, w) in p_global.row_entries(v as usize) {
+                let col = if pt.assign[u] as usize == i {
+                    inner_idx[u]
+                } else {
+                    halo_col[&(u as u32)]
+                };
+                trip.push((r as u32, col, w));
+            }
+        }
+        let prop = Csr::from_triplets(n_inner, n_inner + halo.len(), trip);
+        // features / labels / masks
+        let mut features = Mat::zeros(n_inner, g.feat_dim());
+        for (r, &v) in inner.iter().enumerate() {
+            features.set_row(r, g.features.row(v as usize));
+        }
+        let labels = match &g.labels {
+            Labels::Single { labels, .. } => {
+                PlanLabels::Single(inner.iter().map(|&v| labels[v as usize]).collect())
+            }
+            Labels::Multi { targets } => {
+                let mut t = Mat::zeros(n_inner, targets.cols);
+                for (r, &v) in inner.iter().enumerate() {
+                    t.set_row(r, targets.row(v as usize));
+                }
+                PlanLabels::Multi(t)
+            }
+        };
+        let to_local = |mask: &[u32]| -> Vec<u32> {
+            mask.iter()
+                .filter(|&&v| pt.assign[v as usize] as usize == i)
+                .map(|&v| inner_idx[v as usize])
+                .collect()
+        };
+        parts.push(PartPlan {
+            part: i,
+            inner,
+            halo,
+            halo_ranges,
+            prop,
+            send_sets: vec![Vec::new(); k],
+            features,
+            labels,
+            train_mask: to_local(&g.train_mask),
+            val_mask: to_local(&g.val_mask),
+            test_mask: to_local(&g.test_mask),
+        });
+    }
+    // send sets: j's halo block for owner i lists global ids sorted — the
+    // matching send set is those ids mapped to i's local inner indices,
+    // in the same order.
+    for j in 0..k {
+        for i in 0..k {
+            if i == j {
+                continue;
+            }
+            let range = parts[j].halo_ranges[i].clone();
+            let ids: Vec<u32> = parts[j].halo[range].to_vec();
+            parts[i].send_sets[j] = ids.iter().map(|&u| inner_idx[u as usize]).collect();
+        }
+    }
+    HaloPlan {
+        n_parts: k,
+        parts,
+        total_train: g.train_mask.len(),
+        n_classes: g.labels.n_classes(),
+        multilabel: g.labels.is_multilabel(),
+    }
+}
+
+impl HaloPlan {
+    /// Total boundary replicas (= per-layer communication volume in
+    /// node-feature units). Matches `partition::quality`'s comm_volume.
+    pub fn total_halo(&self) -> usize {
+        self.parts.iter().map(|p| p.halo.len()).sum()
+    }
+
+    /// Plan invariants (tests / debug builds).
+    pub fn validate(&self) -> Result<(), String> {
+        for p in &self.parts {
+            if p.prop.rows != p.n_inner() || p.prop.cols != p.n_local() {
+                return Err(format!("part {}: prop shape", p.part));
+            }
+            for (j, set) in p.send_sets.iter().enumerate() {
+                if j == p.part && !set.is_empty() {
+                    return Err("self send set".into());
+                }
+                // sizes must match the peer's halo block for me
+                let peer_block = self.parts[j].halo_ranges[p.part].len();
+                if set.len() != peer_block {
+                    return Err(format!(
+                        "S_{{{},{}}} size {} != peer halo block {}",
+                        p.part,
+                        j,
+                        set.len(),
+                        peer_block
+                    ));
+                }
+                if set.iter().any(|&li| li as usize >= p.n_inner()) {
+                    return Err("send index out of range".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{sbm_dataset, SbmConfig};
+    use crate::partition::{partition, Method};
+    use crate::util::rng::Rng;
+
+    fn small_graph() -> Graph {
+        let mut rng = Rng::new(10);
+        let cfg = SbmConfig::new(200, 4, 6.0, 1.5);
+        sbm_dataset(&cfg, 8, 4, false, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn plan_valid_and_consistent_with_quality() {
+        let g = small_graph();
+        let pt = partition(&g, 4, Method::Multilevel, 1);
+        let plan = build(&g, &pt, LayerKind::SageMean);
+        plan.validate().unwrap();
+        let q = crate::partition::quality(&g, &pt);
+        assert_eq!(plan.total_halo(), q.comm_volume);
+    }
+
+    #[test]
+    fn send_set_order_matches_halo_block() {
+        let g = small_graph();
+        let pt = partition(&g, 3, Method::Bfs, 2);
+        let plan = build(&g, &pt, LayerKind::SageMean);
+        plan.validate().unwrap();
+        for j in 0..3 {
+            for i in 0..3 {
+                if i == j {
+                    continue;
+                }
+                let block = &plan.parts[j].halo[plan.parts[j].halo_ranges[i].clone()];
+                let sent: Vec<u32> = plan.parts[i].send_sets[j]
+                    .iter()
+                    .map(|&li| plan.parts[i].inner[li as usize])
+                    .collect();
+                assert_eq!(block, &sent[..], "i={i} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_prop_rows_match_global() {
+        let g = small_graph();
+        let pt = partition(&g, 2, Method::Multilevel, 3);
+        let plan = build(&g, &pt, LayerKind::SageMean);
+        let p_global = g.mean_propagation_matrix();
+        // local row (weights) must be a permutation of the global row
+        for part in &plan.parts {
+            for (r, &v) in part.inner.iter().enumerate() {
+                let mut local: Vec<f32> = part.prop.row_entries(r).map(|(_, w)| w).collect();
+                let mut global: Vec<f32> =
+                    p_global.row_entries(v as usize).map(|(_, w)| w).collect();
+                local.sort_by(f32::total_cmp);
+                global.sort_by(f32::total_cmp);
+                assert_eq!(local.len(), global.len());
+                for (a, b) in local.iter().zip(&global) {
+                    assert!((a - b).abs() < 1e-7);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn masks_cover_all_train_nodes() {
+        let g = small_graph();
+        let pt = partition(&g, 4, Method::Multilevel, 4);
+        let plan = build(&g, &pt, LayerKind::SageMean);
+        let local_total: usize = plan.parts.iter().map(|p| p.train_mask.len()).sum();
+        assert_eq!(local_total, g.train_mask.len());
+        assert_eq!(plan.total_train, g.train_mask.len());
+        // mapped-back ids must be exactly the global train mask
+        let mut back: Vec<u32> = plan
+            .parts
+            .iter()
+            .flat_map(|p| p.train_mask.iter().map(|&li| p.inner[li as usize]))
+            .collect();
+        back.sort_unstable();
+        assert_eq!(back, g.train_mask);
+    }
+
+    #[test]
+    fn gather_send_layout() {
+        let g = small_graph();
+        let pt = partition(&g, 2, Method::Multilevel, 5);
+        let plan = build(&g, &pt, LayerKind::SageMean);
+        let p0 = &plan.parts[0];
+        let payload = p0.gather_send(1, &p0.features);
+        assert_eq!(payload.len(), p0.send_sets[1].len() * p0.features.cols);
+        // first row of the payload equals the feature row of the first
+        // send-set node
+        if !p0.send_sets[1].is_empty() {
+            let li = p0.send_sets[1][0] as usize;
+            assert_eq!(&payload[..p0.features.cols], p0.features.row(li));
+        }
+    }
+}

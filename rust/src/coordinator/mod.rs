@@ -1,0 +1,232 @@
+//! The PipeGCN coordinator — the paper's system contribution.
+//!
+//! * [`halo`] — boundary-exchange plan (Alg. 1 lines 1–6).
+//! * [`trainer`] — the sequential training engine implementing **vanilla
+//!   partition-parallel training** (synchronous boundary exchange, paper's
+//!   "GCN") and **PipeGCN** (one-iteration-stale boundary features and
+//!   feature gradients, Eq. 3/4) with the §3.4 smoothing variants
+//!   (-G / -F / -GF).
+//! * [`threaded`] — the same schedule on real threads with blocking
+//!   receives, demonstrating the concurrent exchange; numerics match the
+//!   sequential engine exactly.
+//!
+//! Numeric fidelity notes are in DESIGN.md §4.
+
+pub mod halo;
+pub mod threaded;
+pub mod trainer;
+
+use crate::graph::{Graph, Labels};
+use crate::model::{LayerKind, ModelConfig, Params};
+use crate::runtime::Backend;
+use crate::sim::PartitionWork;
+use crate::tensor::{ops, Mat};
+
+/// Smoothing options for PipeGCN (§3.4). `gamma` is the decay rate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PipeOpts {
+    pub smooth_feat: bool,
+    pub smooth_grad: bool,
+    pub gamma: f32,
+}
+
+impl PipeOpts {
+    pub fn plain() -> PipeOpts {
+        PipeOpts { smooth_feat: false, smooth_grad: false, gamma: 0.95 }
+    }
+}
+
+/// Training variant, named as in the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Variant {
+    /// vanilla partition-parallel training ("GCN" rows in the paper)
+    Vanilla,
+    /// PipeGCN and its smoothing variants
+    Pipe(PipeOpts),
+}
+
+impl Variant {
+    /// Parse the paper's method names: `gcn`, `pipegcn`, `pipegcn-g`,
+    /// `pipegcn-f`, `pipegcn-gf`.
+    pub fn parse(s: &str, gamma: f32) -> Option<Variant> {
+        let opts = |f, g| PipeOpts { smooth_feat: f, smooth_grad: g, gamma };
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" | "vanilla" => Some(Variant::Vanilla),
+            "pipegcn" => Some(Variant::Pipe(opts(false, false))),
+            "pipegcn-g" => Some(Variant::Pipe(opts(false, true))),
+            "pipegcn-f" => Some(Variant::Pipe(opts(true, false))),
+            "pipegcn-gf" => Some(Variant::Pipe(opts(true, true))),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Variant::Vanilla => "GCN".into(),
+            Variant::Pipe(o) => match (o.smooth_feat, o.smooth_grad) {
+                (false, false) => "PipeGCN".into(),
+                (false, true) => "PipeGCN-G".into(),
+                (true, false) => "PipeGCN-F".into(),
+                (true, true) => "PipeGCN-GF".into(),
+            },
+        }
+    }
+
+    pub fn is_pipelined(&self) -> bool {
+        matches!(self, Variant::Pipe(_))
+    }
+}
+
+/// Optimizer choice (paper uses Adam; SGD is kept for the numerical
+/// partition-equivalence tests, where Adam's sign-like first steps would
+/// amplify benign f32 reduction-order differences).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    Adam,
+    Sgd,
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelConfig,
+    pub variant: Variant,
+    pub optimizer: Optimizer,
+    pub lr: f32,
+    pub epochs: usize,
+    pub seed: u64,
+    /// evaluate on val/test every this many epochs (0 = only at the end)
+    pub eval_every: usize,
+    /// record staleness error probes (Fig. 5/7) — pipe variants only
+    pub probe_errors: bool,
+}
+
+impl TrainConfig {
+    /// Config from a dataset preset + variant.
+    pub fn from_preset(p: &crate::graph::presets::Preset, variant: Variant) -> TrainConfig {
+        TrainConfig {
+            model: ModelConfig::sage(p.feat_dim, p.hidden, p.layers, p.n_classes, p.dropout),
+            variant,
+            optimizer: Optimizer::Adam,
+            lr: p.lr,
+            epochs: p.epochs,
+            seed: 1,
+            eval_every: 5,
+            probe_errors: false,
+        }
+    }
+}
+
+/// Per-epoch statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub train_loss: f64,
+    /// val metric (accuracy or micro-F1), NaN when not evaluated
+    pub val: f64,
+    pub test: f64,
+}
+
+/// Staleness error probe (Fig. 5/7): Frobenius norms of the gap between
+/// the boundary tensor *used* and the fresh value a synchronous exchange
+/// would have delivered, accumulated over partitions.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorProbe {
+    pub epoch: usize,
+    /// 0-based layer; feature errors are for layer inputs (ℓ ≥ 1 carries
+    /// staleness — layer-0 inputs are the immutable raw features)
+    pub layer: usize,
+    pub feat_err: f64,
+    pub feat_ref: f64,
+    pub grad_err: f64,
+    pub grad_ref: f64,
+}
+
+/// Everything a training run produces.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub variant: String,
+    pub curve: Vec<EpochStat>,
+    pub final_val: f64,
+    pub final_test: f64,
+    /// test metric at the best-val epoch (the paper's reported score)
+    pub best_val_test: f64,
+    /// per-partition work description of one steady-state iteration
+    /// (feeds `sim::epoch_time`)
+    pub works: Vec<PartitionWork>,
+    pub model_elems: usize,
+    /// fabric bytes moved in one steady-state epoch
+    pub comm_bytes_epoch: u64,
+    pub probes: Vec<ErrorProbe>,
+    /// all-reduced model gradient of the final iteration (diagnostics /
+    /// equivalence tests)
+    pub last_grad: Vec<f32>,
+    /// actual wall time of the run (single-core, sequential)
+    pub wall_secs: f64,
+}
+
+/// Full-graph forward pass (reference semantics, no partitioning, no
+/// dropout). Used for evaluation and as the correctness oracle for the
+/// distributed forward.
+pub fn full_graph_forward(
+    g: &Graph,
+    params: &Params,
+    kind: LayerKind,
+    backend: &mut dyn Backend,
+) -> Mat {
+    let prop = match kind {
+        LayerKind::Gcn => g.propagation_matrix(),
+        LayerKind::SageMean => g.mean_propagation_matrix(),
+    };
+    let pid = backend.register_prop(&prop);
+    let mut h = g.features.clone();
+    let n_layers = params.layers.len();
+    for (l, lp) in params.layers.iter().enumerate() {
+        let out = backend.layer_fwd(pid, &h, lp.w_self.as_ref(), &lp.w_neigh);
+        h = if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre };
+    }
+    h
+}
+
+/// Evaluate `logits` against the graph's labels on `mask`.
+pub fn score(g: &Graph, logits: &Mat, mask: &[u32]) -> f64 {
+    match &g.labels {
+        Labels::Single { labels, .. } => ops::accuracy(logits, labels, mask),
+        Labels::Multi { targets } => ops::f1_counts(logits, targets, mask).micro_f1(),
+    }
+}
+
+/// Convenience: full-graph eval on the val and test splits.
+pub fn evaluate(g: &Graph, params: &Params, kind: LayerKind) -> (f64, f64) {
+    let mut backend = crate::runtime::native::NativeBackend::new();
+    let logits = full_graph_forward(g, params, kind, &mut backend);
+    (score(g, &logits, &g.val_mask), score(g, &logits, &g.test_mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parsing_roundtrip() {
+        for name in ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"] {
+            let v = Variant::parse(name, 0.95).unwrap();
+            assert_eq!(v.name().to_ascii_lowercase(), name.replace("vanilla", "gcn"));
+        }
+        assert!(Variant::parse("nope", 0.95).is_none());
+    }
+
+    #[test]
+    fn pipe_flags() {
+        let v = Variant::parse("pipegcn-gf", 0.5).unwrap();
+        match v {
+            Variant::Pipe(o) => {
+                assert!(o.smooth_feat && o.smooth_grad);
+                assert_eq!(o.gamma, 0.5);
+            }
+            _ => panic!(),
+        }
+        assert!(!Variant::Vanilla.is_pipelined());
+        assert!(v.is_pipelined());
+    }
+}

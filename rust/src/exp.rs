@@ -1,0 +1,246 @@
+//! Experiment harness shared by the CLI, the examples, and every bench:
+//! builds a preset dataset, partitions it, trains a variant, and projects
+//! the recorded schedule onto the paper's simulated testbeds.
+
+use crate::coordinator::{trainer, Optimizer, TrainConfig, TrainResult, Variant};
+use crate::graph::presets::{by_name, Preset};
+use crate::graph::Graph;
+use crate::model::ModelConfig;
+use crate::partition::{partition, Method, Partitioning};
+use crate::runtime::native::NativeBackend;
+use crate::sim::{epoch_time, DeviceProfile, EpochBreakdown, Mode, PartitionWork};
+use crate::comm::topology::Topology;
+
+/// One experiment run bundle.
+pub struct RunOutput {
+    pub preset: &'static Preset,
+    pub graph: Graph,
+    pub parts: Partitioning,
+    pub result: TrainResult,
+}
+
+/// Options for [`run`]. `epochs = 0` keeps the preset default.
+#[derive(Clone, Copy, Debug)]
+pub struct RunOpts {
+    pub epochs: usize,
+    pub seed: u64,
+    pub probe_errors: bool,
+    pub gamma: f32,
+    pub eval_every: usize,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts { epochs: 0, seed: 1, probe_errors: false, gamma: 0.95, eval_every: 5 }
+    }
+}
+
+/// Build, partition (multilevel, the paper's METIS role), train.
+pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts) -> RunOutput {
+    let preset = by_name(preset_name)
+        .unwrap_or_else(|| panic!("unknown preset '{preset_name}' (try: {:?})",
+            crate::graph::presets::names()));
+    let variant = Variant::parse(variant_name, opts.gamma)
+        .unwrap_or_else(|| panic!("unknown variant '{variant_name}'"));
+    let graph = preset.build(opts.seed);
+    let parts = partition(&graph, n_parts, Method::Multilevel, opts.seed);
+    let mut cfg = TrainConfig {
+        model: ModelConfig::sage(
+            preset.feat_dim,
+            preset.hidden,
+            preset.layers,
+            preset.n_classes,
+            preset.dropout,
+        ),
+        variant,
+        optimizer: Optimizer::Adam,
+        lr: preset.lr,
+        epochs: if opts.epochs > 0 { opts.epochs } else { preset.epochs },
+        seed: opts.seed,
+        eval_every: opts.eval_every,
+        probe_errors: opts.probe_errors,
+    };
+    cfg.probe_errors = opts.probe_errors;
+    let mut backend = NativeBackend::new();
+    let result = trainer::train(&graph, &parts, &cfg, &mut backend);
+    RunOutput { preset, graph, parts, result }
+}
+
+/// Scale a recorded per-iteration work description to the mirrored
+/// full-size dataset: FLOPs and bytes grow ~linearly with node count at
+/// fixed density and partition count (documented approximation,
+/// DESIGN.md §1).
+pub fn scale_works(works: &[PartitionWork], factor: f64) -> Vec<PartitionWork> {
+    works
+        .iter()
+        .map(|w| PartitionWork {
+            fwd: w
+                .fwd
+                .iter()
+                .map(|l| crate::sim::LayerCompute {
+                    spmm_flops: l.spmm_flops * factor,
+                    gemm_flops: l.gemm_flops * factor,
+                })
+                .collect(),
+            bwd: w
+                .bwd
+                .iter()
+                .map(|l| crate::sim::LayerCompute {
+                    spmm_flops: l.spmm_flops * factor,
+                    gemm_flops: l.gemm_flops * factor,
+                })
+                .collect(),
+            fwd_comm: w
+                .fwd_comm
+                .iter()
+                .map(|layer| {
+                    layer.iter().map(|&(p, b)| (p, (b as f64 * factor) as u64)).collect()
+                })
+                .collect(),
+            bwd_comm: w
+                .bwd_comm
+                .iter()
+                .map(|layer| {
+                    layer.iter().map(|&(p, b)| (p, (b as f64 * factor) as u64)).collect()
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Project the **measured partition structure** onto the mirrored
+/// dataset's true scale (paper Table 3) and build the per-partition work
+/// description the timeline simulator consumes.
+///
+/// Shares are measured, magnitudes are real: each partition's node/edge
+/// share and its per-pair boundary-replica counts come from the actual
+/// partitioned run; node count, edge count, and layer widths come from
+/// `preset.full`. This keeps the compute:communication balance of the
+/// full dataset (a uniformly scaled small graph would not — its degree
+/// and feature widths are ~10× smaller, inflating the comm ratio).
+pub fn full_works(out: &RunOutput) -> (Vec<PartitionWork>, usize) {
+    let full = &out.preset.full;
+    let plan = crate::coordinator::halo::build(
+        &out.graph,
+        &out.parts,
+        crate::model::LayerKind::SageMean,
+    );
+    let k = plan.n_parts;
+    let n_ratio = full.n / out.graph.n as f64;
+    let nnz_sim_total: f64 = plan.parts.iter().map(|p| p.prop.nnz() as f64).sum();
+    // full layer widths
+    let layers = out.preset.layers;
+    let mut dims = vec![full.feat];
+    for _ in 0..layers - 1 {
+        dims.push(full.hidden);
+    }
+    dims.push(full.classes);
+    let works = (0..k)
+        .map(|i| {
+            let p = &plan.parts[i];
+            let nnz_share = p.prop.nnz() as f64 / nnz_sim_total;
+            let nnz_full = full.nnz * nnz_share;
+            let rows_full = p.n_local() as f64 * n_ratio;
+            let mut fwd = Vec::new();
+            let mut bwd = Vec::new();
+            let mut fwd_comm = Vec::new();
+            let mut bwd_comm = Vec::new();
+            for l in 0..layers {
+                let (f_in, f_out) = (dims[l] as f64, dims[l + 1] as f64);
+                let lc = crate::sim::LayerCompute {
+                    spmm_flops: 2.0 * nnz_full * f_in,
+                    gemm_flops: 2.0 * rows_full * f_in * f_out * 2.0,
+                };
+                fwd.push(lc);
+                bwd.push(crate::sim::LayerCompute {
+                    spmm_flops: 2.0 * lc.spmm_flops,
+                    gemm_flops: 2.0 * lc.gemm_flops,
+                });
+                let pair_bytes = |f: f64| -> Vec<(usize, u64)> {
+                    (0..k)
+                        .filter(|&j| j != i)
+                        .filter_map(|j| {
+                            let cnt = p.send_sets[j].len() + p.halo_ranges[j].len();
+                            if cnt == 0 {
+                                None
+                            } else {
+                                Some((j, (cnt as f64 * n_ratio * f * 4.0) as u64))
+                            }
+                        })
+                        .collect()
+                };
+                fwd_comm.push(pair_bytes(f_in));
+                bwd_comm.push(if l == 0 { Vec::new() } else { pair_bytes(f_in) });
+            }
+            PartitionWork { fwd, bwd, fwd_comm, bwd_comm }
+        })
+        .collect();
+    // full model parameter count (dual SAGE weights)
+    let model_elems: usize =
+        (0..layers).map(|l| dims[l] * dims[l + 1] * 2).sum();
+    (works, model_elems)
+}
+
+/// Project a run's schedule onto a simulated testbed at full dataset
+/// scale (see [`full_works`]).
+pub fn simulate(
+    out: &RunOutput,
+    profile: &DeviceProfile,
+    topo: &Topology,
+    mode: Mode,
+) -> EpochBreakdown {
+    let (works, model_elems) = full_works(out);
+    epoch_time(&works, model_elems, profile, topo, mode)
+}
+
+/// Simulated epoch time on the default single-chassis rig.
+pub fn simulate_default(out: &RunOutput, mode: Mode) -> EpochBreakdown {
+    let (profile, topo) = crate::sim::profiles::rig_2080ti(out.parts.n_parts);
+    simulate(out, &profile, &topo, mode)
+}
+
+/// Paper-style throughput line: epochs/s on the simulated testbed.
+pub fn sim_epochs_per_s(b: &EpochBreakdown) -> f64 {
+    if b.total > 0.0 {
+        1.0 / b.total
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_tiny_end_to_end() {
+        let out = run(
+            "tiny",
+            2,
+            "pipegcn",
+            RunOpts { epochs: 8, eval_every: 8, ..Default::default() },
+        );
+        assert_eq!(out.result.curve.len(), 8);
+        assert!(out.result.final_test > 0.0);
+        let v = simulate_default(&out, Mode::Vanilla);
+        let p = simulate_default(&out, Mode::Pipelined);
+        assert!(p.total < v.total, "pipelined {p:?} vs vanilla {v:?}");
+    }
+
+    #[test]
+    fn scaling_multiplies_flops_and_bytes() {
+        let out = run("tiny", 2, "gcn", RunOpts { epochs: 2, ..Default::default() });
+        let scaled = scale_works(&out.result.works, 10.0);
+        let f0 = out.result.works[0].fwd[0].spmm_flops;
+        assert!((scaled[0].fwd[0].spmm_flops - 10.0 * f0).abs() < 1e-6 * f0.max(1.0));
+        let b0: u64 = out.result.works[0].fwd_comm[0].iter().map(|&(_, b)| b).sum();
+        let b1: u64 = scaled[0].fwd_comm[0].iter().map(|&(_, b)| b).sum();
+        assert_eq!(b1, 10 * b0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown preset")]
+    fn unknown_preset_panics() {
+        run("nope", 2, "gcn", RunOpts::default());
+    }
+}

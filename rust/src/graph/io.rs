@@ -1,0 +1,205 @@
+//! Binary graph serialization (little-endian, versioned).
+//!
+//! Format v1:
+//! ```text
+//! magic   u64   0x504950454743_4E31  ("PIPEGCN1")
+//! n       u64
+//! nnz     u64   (directed entries = indices.len())
+//! fdim    u64
+//! ltype   u64   0 = single (then n_classes u64), 1 = multi (then classes u64)
+//! indptr  (n+1)×u64
+//! indices nnz×u32
+//! feats   n*fdim×f32
+//! labels  single: n×u32 | multi: n*classes×f32
+//! masks   3 × (len u64, ids len×u32)
+//! ```
+
+use super::{Graph, Labels};
+use crate::tensor::Mat;
+use std::io::{self, Read, Write};
+
+const MAGIC: u64 = 0x5049_5045_4743_4E31;
+
+fn w_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn r_u64(r: &mut impl Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn w_u32s(w: &mut impl Write, vs: &[u32]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_u32s(r: &mut impl Read, n: usize) -> io::Result<Vec<u32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn w_f32s(w: &mut impl Write, vs: &[f32]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(vs.len() * 4);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+fn r_f32s(r: &mut impl Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+pub fn write_graph(g: &Graph, w: &mut impl Write) -> io::Result<()> {
+    w_u64(w, MAGIC)?;
+    w_u64(w, g.n as u64)?;
+    w_u64(w, g.indices.len() as u64)?;
+    w_u64(w, g.features.cols as u64)?;
+    match &g.labels {
+        Labels::Single { n_classes, .. } => {
+            w_u64(w, 0)?;
+            w_u64(w, *n_classes as u64)?;
+        }
+        Labels::Multi { targets } => {
+            w_u64(w, 1)?;
+            w_u64(w, targets.cols as u64)?;
+        }
+    }
+    let indptr64: Vec<u8> = g.indptr.iter().flat_map(|&v| (v as u64).to_le_bytes()).collect();
+    w.write_all(&indptr64)?;
+    w_u32s(w, &g.indices)?;
+    w_f32s(w, &g.features.data)?;
+    match &g.labels {
+        Labels::Single { labels, .. } => w_u32s(w, labels)?,
+        Labels::Multi { targets } => w_f32s(w, &targets.data)?,
+    }
+    for mask in [&g.train_mask, &g.val_mask, &g.test_mask] {
+        w_u64(w, mask.len() as u64)?;
+        w_u32s(w, mask)?;
+    }
+    Ok(())
+}
+
+pub fn read_graph(r: &mut impl Read) -> io::Result<Graph> {
+    let magic = r_u64(r)?;
+    if magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let n = r_u64(r)? as usize;
+    let nnz = r_u64(r)? as usize;
+    let fdim = r_u64(r)? as usize;
+    let ltype = r_u64(r)?;
+    let classes = r_u64(r)? as usize;
+    let mut indptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        indptr.push(r_u64(r)? as usize);
+    }
+    let indices = r_u32s(r, nnz)?;
+    let features = Mat::from_vec(n, fdim, r_f32s(r, n * fdim)?);
+    let labels = if ltype == 0 {
+        Labels::Single { labels: r_u32s(r, n)?, n_classes: classes }
+    } else {
+        Labels::Multi { targets: Mat::from_vec(n, classes, r_f32s(r, n * classes)?) }
+    };
+    let mut masks = Vec::new();
+    for _ in 0..3 {
+        let len = r_u64(r)? as usize;
+        masks.push(r_u32s(r, len)?);
+    }
+    let test_mask = masks.pop().unwrap();
+    let val_mask = masks.pop().unwrap();
+    let train_mask = masks.pop().unwrap();
+    Ok(Graph { n, indptr, indices, features, labels, train_mask, val_mask, test_mask })
+}
+
+pub fn save(g: &Graph, path: &str) -> io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_graph(g, &mut f)
+}
+
+pub fn load(path: &str) -> io::Result<Graph> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_graph(&mut f)
+}
+
+/// Append rows to a CSV file (creates + header if absent). Used by the
+/// convergence-curve benches.
+pub fn append_csv(path: &str, header: &str, rows: &[String]) -> io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let exists = std::path::Path::new(path).exists();
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if !exists {
+        writeln!(f, "{header}")?;
+    }
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{sbm_dataset, SbmConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_single_label() {
+        let mut rng = Rng::new(1);
+        let cfg = SbmConfig::new(120, 4, 5.0, 1.0);
+        let g = sbm_dataset(&cfg, 8, 4, false, 0.3, &mut rng);
+        let mut buf = Vec::new();
+        write_graph(&g, &mut buf).unwrap();
+        let g2 = read_graph(&mut buf.as_slice()).unwrap();
+        g2.validate().unwrap();
+        assert_eq!(g.n, g2.n);
+        assert_eq!(g.indptr, g2.indptr);
+        assert_eq!(g.indices, g2.indices);
+        assert_eq!(g.features, g2.features);
+        assert_eq!(g.labels, g2.labels);
+        assert_eq!(g.train_mask, g2.train_mask);
+        assert_eq!(g.test_mask, g2.test_mask);
+    }
+
+    #[test]
+    fn roundtrip_multilabel() {
+        let mut rng = Rng::new(2);
+        let cfg = SbmConfig::new(60, 3, 4.0, 1.0);
+        let g = sbm_dataset(&cfg, 8, 3, true, 0.3, &mut rng);
+        let mut buf = Vec::new();
+        write_graph(&g, &mut buf).unwrap();
+        let g2 = read_graph(&mut buf.as_slice()).unwrap();
+        assert_eq!(g.labels, g2.labels);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let buf = vec![0u8; 64];
+        assert!(read_graph(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut rng = Rng::new(3);
+        let cfg = SbmConfig::new(40, 2, 3.0, 0.5);
+        let g = sbm_dataset(&cfg, 4, 2, false, 0.3, &mut rng);
+        let path = "/tmp/pipegcn_test_graph.bin";
+        save(&g, path).unwrap();
+        let g2 = load(path).unwrap();
+        assert_eq!(g.indices, g2.indices);
+        std::fs::remove_file(path).ok();
+    }
+}

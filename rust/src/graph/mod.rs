@@ -1,0 +1,269 @@
+//! Graph substrate: the in-memory graph type, synthetic dataset
+//! generators, feature/label synthesis, GCN normalization, binary IO,
+//! and the dataset presets that mirror the paper's four benchmarks.
+
+pub mod generate;
+pub mod features;
+pub mod io;
+pub mod presets;
+
+use crate::tensor::{Csr, Mat};
+
+/// Node labels: single-label classification (Reddit/ogbn-products style)
+/// or multi-label (Yelp style).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Labels {
+    /// `labels[v] ∈ [0, n_classes)`
+    Single { labels: Vec<u32>, n_classes: usize },
+    /// rows×classes {0,1} indicator matrix
+    Multi { targets: Mat },
+}
+
+impl Labels {
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Labels::Single { n_classes, .. } => *n_classes,
+            Labels::Multi { targets } => targets.cols,
+        }
+    }
+
+    pub fn is_multilabel(&self) -> bool {
+        matches!(self, Labels::Multi { .. })
+    }
+}
+
+/// An undirected graph in CSR adjacency form with node features, labels,
+/// and train/val/test splits (sorted node-id lists).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// CSR adjacency: `indptr.len() == n+1`; neighbor lists sorted,
+    /// both directions present, no self-loops stored (the GCN
+    /// normalization adds Ã = A + I itself).
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub features: Mat,
+    pub labels: Labels,
+    pub train_mask: Vec<u32>,
+    pub val_mask: Vec<u32>,
+    pub test_mask: Vec<u32>,
+}
+
+impl Graph {
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.features.cols
+    }
+
+    /// Build CSR adjacency from an undirected edge list (u, v), u != v.
+    /// Deduplicates and symmetrizes.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], features: Mat, labels: Labels) -> Graph {
+        assert_eq!(features.rows, n);
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            debug_assert!((u as usize) < n && (v as usize) < n);
+            if u == v {
+                continue;
+            }
+            pairs.push((u, v));
+            pairs.push((v, u));
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut indptr = vec![0usize; n + 1];
+        let mut indices = Vec::with_capacity(pairs.len());
+        for &(u, v) in &pairs {
+            indptr[u as usize + 1] += 1;
+            indices.push(v);
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        Graph {
+            n,
+            indptr,
+            indices,
+            features,
+            labels,
+            train_mask: Vec::new(),
+            val_mask: Vec::new(),
+            test_mask: Vec::new(),
+        }
+    }
+
+    /// Normalized degree vector `d̃_v = deg(v) + 1` (Ã = A + I).
+    pub fn degrees_tilde(&self) -> Vec<f32> {
+        (0..self.n).map(|v| (self.degree(v) + 1) as f32).collect()
+    }
+
+    /// GCN propagation matrix `P = D̃^{-1/2} Ã D̃^{-1/2}` with `Ã = A + I`
+    /// over the **full** graph (reference semantics; the partitioned
+    /// equivalent is assembled per-partition by `coordinator::halo`).
+    pub fn propagation_matrix(&self) -> Csr {
+        let deg_t = self.degrees_tilde();
+        let mut trip = Vec::with_capacity(self.indices.len() + self.n);
+        for v in 0..self.n {
+            let dv = deg_t[v];
+            // self-loop weight 1/d̃_v = 1/(√d̃_v·√d̃_v)
+            trip.push((v as u32, v as u32, 1.0 / dv));
+            for &u in self.neighbors(v) {
+                trip.push((v as u32, u, 1.0 / (dv.sqrt() * deg_t[u as usize].sqrt())));
+            }
+        }
+        Csr::from_triplets(self.n, self.n, trip)
+    }
+
+    /// Mean-aggregator propagation `P = D̃^{-1} Ã` (GraphSAGE-mean as in
+    /// Eq. 3 of the paper, including the node itself).
+    pub fn mean_propagation_matrix(&self) -> Csr {
+        let mut trip = Vec::with_capacity(self.indices.len() + self.n);
+        for v in 0..self.n {
+            let inv = 1.0 / (self.degree(v) + 1) as f32;
+            trip.push((v as u32, v as u32, inv));
+            for &u in self.neighbors(v) {
+                trip.push((v as u32, u, inv));
+            }
+        }
+        Csr::from_triplets(self.n, self.n, trip)
+    }
+
+    /// Random train/val/test split with the given fractions.
+    pub fn random_split(&mut self, train_frac: f64, val_frac: f64, rng: &mut crate::util::rng::Rng) {
+        let mut ids: Vec<u32> = (0..self.n as u32).collect();
+        rng.shuffle(&mut ids);
+        let n_train = (self.n as f64 * train_frac).round() as usize;
+        let n_val = (self.n as f64 * val_frac).round() as usize;
+        self.train_mask = ids[..n_train].to_vec();
+        self.val_mask = ids[n_train..(n_train + n_val).min(self.n)].to_vec();
+        self.test_mask = ids[(n_train + n_val).min(self.n)..].to_vec();
+        self.train_mask.sort_unstable();
+        self.val_mask.sort_unstable();
+        self.test_mask.sort_unstable();
+    }
+
+    /// Sanity invariants (used by tests and after IO round-trips).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.indptr.len() != self.n + 1 {
+            return Err("indptr length".into());
+        }
+        if *self.indptr.last().unwrap() != self.indices.len() {
+            return Err("indptr tail".into());
+        }
+        for v in 0..self.n {
+            let nb = self.neighbors(v);
+            if !nb.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("neighbors of {v} not sorted/unique"));
+            }
+            for &u in nb {
+                if u as usize >= self.n {
+                    return Err("neighbor out of range".into());
+                }
+                if u as usize == v {
+                    return Err("self loop stored".into());
+                }
+                if self.neighbors(u as usize).binary_search(&(v as u32)).is_err() {
+                    return Err(format!("edge {v}->{u} not symmetric"));
+                }
+            }
+        }
+        if self.features.rows != self.n {
+            return Err("features rows".into());
+        }
+        match &self.labels {
+            Labels::Single { labels, n_classes } => {
+                if labels.len() != self.n {
+                    return Err("labels len".into());
+                }
+                if labels.iter().any(|&l| l as usize >= *n_classes) {
+                    return Err("label out of range".into());
+                }
+            }
+            Labels::Multi { targets } => {
+                if targets.rows != self.n {
+                    return Err("targets rows".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn triangle() -> Graph {
+        let feats = Mat::zeros(3, 2);
+        let labels = Labels::Single { labels: vec![0, 1, 0], n_classes: 2 };
+        Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)], feats, labels)
+    }
+
+    #[test]
+    fn from_edges_symmetrizes_and_dedups() {
+        let feats = Mat::zeros(3, 1);
+        let labels = Labels::Single { labels: vec![0; 3], n_classes: 1 };
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)], feats, labels);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mean_propagation_rows_sum_to_one() {
+        let g = triangle();
+        let p = g.mean_propagation_matrix();
+        for r in 0..3 {
+            let s: f32 = p.row_entries(r).map(|(_, v)| v).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gcn_propagation_symmetric_weights() {
+        let g = triangle();
+        let p = g.propagation_matrix().to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((p.get(i, j) - p.get(j, i)).abs() < 1e-6);
+            }
+        }
+        // triangle: all degrees 2, d̃=3 → every weight 1/3
+        assert!((p.get(0, 1) - 1.0 / 3.0).abs() < 1e-6);
+        assert!((p.get(0, 0) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_partitions_nodes() {
+        let mut g = triangle();
+        let mut rng = Rng::new(1);
+        g.random_split(0.34, 0.33, &mut rng);
+        let total = g.train_mask.len() + g.val_mask.len() + g.test_mask.len();
+        assert_eq!(total, 3);
+        let mut all: Vec<u32> =
+            g.train_mask.iter().chain(&g.val_mask).chain(&g.test_mask).cloned().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn validate_catches_asymmetry() {
+        let mut g = triangle();
+        g.indices = vec![2, 0, 2, 0, 1];
+        g.indptr = vec![0, 1, 3, 5];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! # PipeGCN — partition-parallel full-graph GCN training with pipelined
+//! # boundary feature/feature-gradient communication
+//!
+//! Reproduction of *PipeGCN: Efficient Full-Graph Training of Graph
+//! Convolutional Networks with Pipelined Feature Communication* (ICLR 2022).
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`util`] — zero-dependency substrates: PRNG, JSON writer, CLI parser,
+//!   timers, a property-test harness.
+//! * [`tensor`] — dense matrices with cache-blocked GEMM, CSR sparse
+//!   matrices with SpMM, activations and loss heads.
+//! * [`graph`] — CSR graphs, synthetic generators (SBM / Barabási–Albert /
+//!   Erdős–Rényi / grid), feature synthesis, GCN normalization, binary IO,
+//!   and dataset presets mirroring the paper's four datasets.
+//! * [`partition`] — a METIS-like multilevel partitioner (heavy-edge
+//!   matching, greedy initial partition, FM refinement with a
+//!   communication-volume objective) plus hash/range/BFS baselines.
+//! * [`comm`] — the communication fabric: mailboxes with byte accounting,
+//!   a ring all-reduce, and link/topology descriptions.
+//! * [`sim`] — the discrete-event timeline simulator that models what the
+//!   training schedule costs on a described cluster (the paper's testbeds
+//!   are encoded as [`sim::DeviceProfile`]s / [`sim::Topology`]s).
+//! * [`model`] — GraphSAGE / GCN layer definitions, parameter init, Adam.
+//! * [`runtime`] — the [`runtime::Backend`] trait with a pure-Rust `native`
+//!   implementation and an `xla` implementation that loads the AOT HLO-text
+//!   artifacts produced by `python/compile/aot.py` and runs them on PJRT.
+//! * [`coordinator`] — the paper's contribution: vanilla partition-parallel
+//!   training and PipeGCN (Algorithm 1) with staleness smoothing (§3.4),
+//!   metric/error probes, and epoch time breakdowns.
+//! * [`baselines`] — ROC-like and CAGNET-like communication cost models.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod util;
+pub mod tensor;
+pub mod graph;
+pub mod partition;
+pub mod comm;
+pub mod sim;
+pub mod model;
+pub mod runtime;
+pub mod coordinator;
+pub mod baselines;
+pub mod exp;

@@ -1,0 +1,215 @@
+//! `pipegcn` — launcher CLI for the PipeGCN reproduction.
+//!
+//! ```text
+//! pipegcn train      --dataset reddit-sim --parts 4 --method pipegcn-gf [--epochs N] [--gamma G]
+//! pipegcn gen-graph  --dataset yelp-sim --out graph.bin [--nodes N]
+//! pipegcn partition  --dataset reddit-sim --parts 4 [--algo multilevel|hash|range|bfs]
+//! pipegcn sim        --dataset reddit-sim --parts 4 --method pipegcn  (simulated epoch breakdown)
+//! pipegcn presets    (list dataset presets)
+//! ```
+
+use anyhow::Result;
+use pipegcn::coordinator::Variant;
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::graph::{io, presets};
+use pipegcn::partition::{partition, quality, Method};
+use pipegcn::sim::Mode;
+use pipegcn::util::cli::Args;
+use pipegcn::util::json::Json;
+use pipegcn::util::{fmt_bytes, fmt_secs};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "gen-graph" => cmd_gen_graph(&args),
+        "partition" => cmd_partition(&args),
+        "sim" => cmd_sim(&args),
+        "presets" => cmd_presets(),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "pipegcn — PipeGCN (ICLR'22) reproduction\n\
+         subcommands:\n\
+         \x20 train      --dataset <preset> --parts K --method gcn|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf\n\
+         \x20            [--epochs N] [--gamma G] [--seed S] [--probe-errors] [--out results.json]\n\
+         \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
+         \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
+         \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
+         \x20 presets"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
+        "eval-every",
+    ])?;
+    let dataset = args.get_str("dataset", "tiny");
+    let parts = args.get_usize("parts", 2);
+    let method = args.get_str("method", "pipegcn");
+    let opts = RunOpts {
+        epochs: args.get_usize("epochs", 0),
+        seed: args.get_u64("seed", 1),
+        probe_errors: args.get_bool("probe-errors", false),
+        gamma: args.get_f32("gamma", 0.95),
+        eval_every: args.get_usize("eval-every", 5),
+    };
+    let variant = Variant::parse(&method, opts.gamma)
+        .ok_or_else(|| anyhow::anyhow!("bad --method '{method}'"))?;
+    println!(
+        "train {dataset} parts={parts} method={} epochs={}",
+        variant.name(),
+        if opts.epochs > 0 { opts.epochs } else { presets::by_name(&dataset).map(|p| p.epochs).unwrap_or(0) }
+    );
+    let out = exp::run(&dataset, parts, &method, opts);
+    let r = &out.result;
+    for e in &r.curve {
+        if !e.val.is_nan() {
+            println!(
+                "epoch {:4}  loss {:.4}  val {:.4}  test {:.4}",
+                e.epoch, e.train_loss, e.val, e.test
+            );
+        }
+    }
+    let v = exp::simulate_default(&out, Mode::Vanilla);
+    let p = exp::simulate_default(&out, Mode::Pipelined);
+    let b = if variant.is_pipelined() { p } else { v };
+    println!(
+        "final: test {:.4} (best-val test {:.4}) | comm/epoch {} | sim epoch {} ({} epochs/s, speedup vs vanilla {:.2}x)",
+        r.final_test,
+        r.best_val_test,
+        fmt_bytes(r.comm_bytes_epoch),
+        fmt_secs(b.total),
+        format!("{:.2}", exp::sim_epochs_per_s(&b)),
+        v.total / b.total,
+    );
+    if let Some(path) = args.get_opt("out") {
+        let mut curve = Vec::new();
+        for e in &r.curve {
+            curve.push(
+                Json::obj()
+                    .set("epoch", e.epoch)
+                    .set("loss", e.train_loss)
+                    .set("val", e.val)
+                    .set("test", e.test),
+            );
+        }
+        Json::obj()
+            .set("dataset", dataset.as_str())
+            .set("parts", parts)
+            .set("method", r.variant.as_str())
+            .set("final_test", r.final_test)
+            .set("best_val_test", r.best_val_test)
+            .set("comm_bytes_epoch", r.comm_bytes_epoch)
+            .set("sim_epoch_s", b.total)
+            .set("curve", Json::Arr(curve))
+            .write_file(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_graph(args: &Args) -> Result<()> {
+    args.assert_known(&["dataset", "out", "nodes", "seed"])?;
+    let dataset = args.get_str("dataset", "tiny");
+    let out = args.get_str("out", "graph.bin");
+    let seed = args.get_u64("seed", 1);
+    let preset = presets::by_name(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset '{dataset}'"))?;
+    let g = match args.get_opt("nodes") {
+        Some(_) => preset.build_scaled(args.get_usize("nodes", preset.n), seed),
+        None => preset.build(seed),
+    };
+    io::save(&g, &out)?;
+    println!(
+        "wrote {out}: {} nodes, {} edges, feat {}, {} classes ({})",
+        g.n,
+        g.num_edges(),
+        g.feat_dim(),
+        g.labels.n_classes(),
+        if g.labels.is_multilabel() { "multi-label" } else { "single-label" }
+    );
+    Ok(())
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    args.assert_known(&["dataset", "parts", "algo", "seed"])?;
+    let dataset = args.get_str("dataset", "tiny");
+    let parts = args.get_usize("parts", 2);
+    let algo = args.get_str("algo", "multilevel");
+    let seed = args.get_u64("seed", 1);
+    let method = Method::parse(&algo).ok_or_else(|| anyhow::anyhow!("bad --algo '{algo}'"))?;
+    let preset = presets::by_name(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset '{dataset}'"))?;
+    let g = preset.build(seed);
+    let pt = partition(&g, parts, method, seed);
+    let q = quality(&g, &pt);
+    println!(
+        "{dataset} × {parts} parts via {algo}: edge-cut {} | comm volume {} | replication {:.3} | balance {:.3}",
+        q.edge_cut, q.comm_volume, q.replication_factor, q.balance
+    );
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    args.assert_known(&["dataset", "parts", "method", "nodes-x-gpus", "epochs", "seed"])?;
+    let dataset = args.get_str("dataset", "reddit-sim");
+    let parts = args.get_usize("parts", 2);
+    let method = args.get_str("method", "pipegcn");
+    let opts = RunOpts {
+        epochs: args.get_usize("epochs", 4),
+        seed: args.get_u64("seed", 1),
+        eval_every: 0,
+        ..Default::default()
+    };
+    let out = exp::run(&dataset, parts, &method, opts);
+    let variant = Variant::parse(&method, 0.95).unwrap();
+    let mode = if variant.is_pipelined() { Mode::Pipelined } else { Mode::Vanilla };
+    let breakdown = match args.get_opt("nodes-x-gpus") {
+        Some(spec) => {
+            let (nodes, per) = spec
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("--nodes-x-gpus expects AxB"))?;
+            let (profile, topo) =
+                pipegcn::sim::profiles::rig_mi60(nodes.parse()?, per.parse()?);
+            exp::simulate(&out, &profile, &topo, mode)
+        }
+        None => exp::simulate_default(&out, mode),
+    };
+    println!(
+        "{dataset} × {parts} [{}]: total {} | compute {} | comm {} (exposed {}) | reduce {} | comm ratio {:.1}%",
+        variant.name(),
+        fmt_secs(breakdown.total),
+        fmt_secs(breakdown.compute),
+        fmt_secs(breakdown.comm_total),
+        fmt_secs(breakdown.comm_exposed),
+        fmt_secs(breakdown.reduce),
+        100.0 * breakdown.comm_ratio()
+    );
+    Ok(())
+}
+
+fn cmd_presets() -> Result<()> {
+    println!(
+        "{:<14} {:<16} {:>7} {:>6} {:>5} {:>7} {:>7} {:>7}",
+        "preset", "mirrors", "nodes", "feat", "cls", "layers", "hidden", "epochs"
+    );
+    for p in &presets::PRESETS {
+        println!(
+            "{:<14} {:<16} {:>7} {:>6} {:>5} {:>7} {:>7} {:>7}",
+            p.name, p.mirrors, p.n, p.feat_dim, p.n_classes, p.layers, p.hidden, p.epochs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Adam optimizer over flat parameter vectors (paper Table 3: Adam for
+//! all datasets).
+//!
+//! The distributed trainer keeps identical Adam state on every partition
+//! (the all-reduced gradient is identical everywhere, as in Alg. 1
+//! line 32-33), so a single instance updates the shared flat weights.
+
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32, n_params: usize) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// One update step: `params -= lr * m̂ / (√v̂ + ε)`.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = Σ (x_i - target_i)^2
+        let target = [3.0f32, -2.0, 0.5];
+        let mut x = vec![0.0f32; 3];
+        let mut adam = Adam::new(0.05, 3);
+        for _ in 0..800 {
+            let grad: Vec<f32> = x.iter().zip(&target).map(|(xi, ti)| 2.0 * (xi - ti)).collect();
+            adam.step(&mut x, &grad);
+        }
+        for (xi, ti) in x.iter().zip(&target) {
+            assert!((xi - ti).abs() < 1e-2, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // classic Adam property: |Δx| ≈ lr on the first step regardless of
+        // gradient scale
+        let mut x = vec![0.0f32];
+        let mut adam = Adam::new(0.01, 1);
+        adam.step(&mut x, &[1234.5]);
+        assert!((x[0] + 0.01).abs() < 1e-4, "{}", x[0]);
+    }
+
+    #[test]
+    fn zero_grad_no_movement() {
+        let mut x = vec![1.0f32, 2.0];
+        let mut adam = Adam::new(0.1, 2);
+        adam.step(&mut x, &[0.0, 0.0]);
+        assert_eq!(x, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut x = vec![1.0f32; 4];
+            let mut adam = Adam::new(0.02, 4);
+            for i in 0..50 {
+                let g: Vec<f32> = x.iter().map(|v| v * 0.5 + i as f32 * 0.01).collect();
+                adam.step(&mut x, &g);
+            }
+            x
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,218 @@
+//! GCN / GraphSAGE model definition: configs, parameters, initialization,
+//! flattening for the gradient all-reduce, and the Adam optimizer.
+//!
+//! The layer math itself executes through a [`crate::runtime::Backend`]
+//! so the same trainer runs on the native Rust kernels or the AOT XLA
+//! artifacts.
+
+pub mod adam;
+
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Layer flavor.
+///
+/// * `Gcn` — Kipf & Welling: `H' = σ(P·H·W)` with symmetric-normalized P.
+/// * `SageMean` — GraphSAGE mean aggregator as in the paper's experiments:
+///   `H' = σ(H·W_self + (P_mean·H)·W_neigh)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Gcn,
+    SageMean,
+}
+
+impl LayerKind {
+    pub fn parse(s: &str) -> Option<LayerKind> {
+        match s {
+            "gcn" => Some(LayerKind::Gcn),
+            "sage" | "sage-mean" | "graphsage" => Some(LayerKind::SageMean),
+            _ => None,
+        }
+    }
+}
+
+/// Model hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub kind: LayerKind,
+    /// layer widths: `[f_in, hidden, ..., n_classes]` (len = layers+1)
+    pub dims: Vec<usize>,
+    pub dropout: f32,
+}
+
+impl ModelConfig {
+    pub fn sage(f_in: usize, hidden: usize, layers: usize, n_classes: usize, dropout: f32) -> Self {
+        assert!(layers >= 1);
+        let mut dims = vec![f_in];
+        for _ in 0..layers - 1 {
+            dims.push(hidden);
+        }
+        dims.push(n_classes);
+        ModelConfig { kind: LayerKind::SageMean, dims, dropout }
+    }
+
+    pub fn gcn(f_in: usize, hidden: usize, layers: usize, n_classes: usize, dropout: f32) -> Self {
+        let mut cfg = Self::sage(f_in, hidden, layers, n_classes, dropout);
+        cfg.kind = LayerKind::Gcn;
+        cfg
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+}
+
+/// One layer's weights. GCN layers have `w_self = None`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerParams {
+    pub w_self: Option<Mat>,
+    pub w_neigh: Mat,
+}
+
+/// Full parameter set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Params {
+    pub layers: Vec<LayerParams>,
+}
+
+impl Params {
+    /// Glorot-uniform initialization, deterministic in `rng`.
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Params {
+        let mut layers = Vec::with_capacity(cfg.n_layers());
+        for l in 0..cfg.n_layers() {
+            let (fi, fo) = (cfg.dims[l], cfg.dims[l + 1]);
+            let a = (6.0 / (fi + fo) as f32).sqrt();
+            let w_neigh = Mat::rand_uniform(fi, fo, a, rng);
+            let w_self = match cfg.kind {
+                LayerKind::SageMean => Some(Mat::rand_uniform(fi, fo, a, rng)),
+                LayerKind::Gcn => None,
+            };
+            layers.push(LayerParams { w_self, w_neigh });
+        }
+        Params { layers }
+    }
+
+    /// Total scalar count (for all-reduce sizing and Adam state).
+    pub fn n_elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                l.w_neigh.data.len() + l.w_self.as_ref().map(|w| w.data.len()).unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Flatten all weights into one vector (w_neigh then w_self per layer).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_elems());
+        for l in &self.layers {
+            out.extend_from_slice(&l.w_neigh.data);
+            if let Some(w) = &l.w_self {
+                out.extend_from_slice(&w.data);
+            }
+        }
+        out
+    }
+
+    /// Overwrite weights from a flat vector (inverse of [`flatten`]).
+    pub fn unflatten(&mut self, flat: &[f32]) {
+        let mut off = 0usize;
+        for l in &mut self.layers {
+            let n = l.w_neigh.data.len();
+            l.w_neigh.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            if let Some(w) = &mut l.w_self {
+                let n = w.data.len();
+                w.data.copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        }
+        assert_eq!(off, flat.len(), "flat size mismatch");
+    }
+
+    /// Zeroed gradient accumulator with the same shapes.
+    pub fn zeros_like(&self) -> Params {
+        Params {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerParams {
+                    w_self: l.w_self.as_ref().map(|w| Mat::zeros(w.rows, w.cols)),
+                    w_neigh: Mat::zeros(l.w_neigh.rows, l.w_neigh.cols),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Params) {
+        for (a, b) in self.layers.iter_mut().zip(&other.layers) {
+            a.w_neigh.add_assign(&b.w_neigh);
+            if let (Some(ws), Some(wo)) = (&mut a.w_self, &b.w_self) {
+                ws.add_assign(wo);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let cfg = ModelConfig::sage(10, 16, 3, 4, 0.0);
+        assert_eq!(cfg.dims, vec![10, 16, 16, 4]);
+        let mut rng = Rng::new(1);
+        let p = Params::init(&cfg, &mut rng);
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.layers[0].w_neigh.rows, 10);
+        assert_eq!(p.layers[0].w_neigh.cols, 16);
+        assert_eq!(p.layers[2].w_neigh.cols, 4);
+        assert!(p.layers[0].w_self.is_some());
+    }
+
+    #[test]
+    fn gcn_has_no_self_weight() {
+        let cfg = ModelConfig::gcn(8, 8, 2, 3, 0.0);
+        let mut rng = Rng::new(2);
+        let p = Params::init(&cfg, &mut rng);
+        assert!(p.layers.iter().all(|l| l.w_self.is_none()));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let cfg = ModelConfig::sage(5, 7, 2, 3, 0.0);
+        let mut rng = Rng::new(3);
+        let p = Params::init(&cfg, &mut rng);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.n_elems());
+        let mut q = p.clone();
+        q.layers[0].w_neigh.fill(0.0);
+        q.unflatten(&flat);
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn zeros_like_and_accumulate() {
+        let cfg = ModelConfig::sage(3, 4, 2, 2, 0.0);
+        let mut rng = Rng::new(4);
+        let p = Params::init(&cfg, &mut rng);
+        let mut acc = p.zeros_like();
+        acc.add_assign(&p);
+        acc.add_assign(&p);
+        let want: Vec<f32> = p.flatten().iter().map(|x| 2.0 * x).collect();
+        crate::util::prop::assert_close(&acc.flatten(), &want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn glorot_scale_reasonable() {
+        let cfg = ModelConfig::sage(100, 100, 1, 100, 0.0);
+        let mut rng = Rng::new(5);
+        let p = Params::init(&cfg, &mut rng);
+        let w = &p.layers[0].w_neigh;
+        let a = (6.0f32 / 200.0).sqrt();
+        assert!(w.data.iter().all(|&x| x.abs() <= a));
+        let mean: f32 = w.data.iter().sum::<f32>() / w.data.len() as f32;
+        assert!(mean.abs() < 0.01);
+    }
+}

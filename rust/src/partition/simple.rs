@@ -1,0 +1,126 @@
+//! Baseline partitioners: hash, contiguous range, and BFS region growing.
+
+use super::Partitioning;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// `assign[v] = v mod k` — the "no locality" strawman.
+pub fn hash_partition(n: usize, k: usize) -> Partitioning {
+    Partitioning::new(k, (0..n).map(|v| (v % k) as u32).collect())
+}
+
+/// Contiguous index ranges of (near-)equal size.
+pub fn range_partition(n: usize, k: usize) -> Partitioning {
+    let mut assign = vec![0u32; n];
+    let base = n / k;
+    let extra = n % k;
+    let mut v = 0usize;
+    for p in 0..k {
+        let sz = base + usize::from(p < extra);
+        for _ in 0..sz {
+            assign[v] = p as u32;
+            v += 1;
+        }
+    }
+    Partitioning::new(k, assign)
+}
+
+/// Balanced multi-source BFS growing: k random seeds expand in lockstep,
+/// each capped at ⌈n/k⌉ nodes; leftovers (disconnected) round-robin.
+pub fn bfs_partition(g: &Graph, k: usize, seed: u64) -> Partitioning {
+    let n = g.n;
+    let mut rng = Rng::new(seed ^ 0xBF5);
+    let cap = n.div_ceil(k);
+    let mut assign = vec![u32::MAX; n];
+    let mut queues: Vec<std::collections::VecDeque<u32>> =
+        (0..k).map(|_| std::collections::VecDeque::new()).collect();
+    let mut sizes = vec![0usize; k];
+    let seeds = rng.sample_indices(n, k.min(n));
+    for (p, &s) in seeds.iter().enumerate() {
+        assign[s] = p as u32;
+        sizes[p] += 1;
+        queues[p].push_back(s as u32);
+    }
+    let mut active = true;
+    while active {
+        active = false;
+        for p in 0..k {
+            if sizes[p] >= cap {
+                continue;
+            }
+            // expand one frontier node per round for balance
+            while let Some(v) = queues[p].pop_front() {
+                let mut grew = false;
+                for &u in g.neighbors(v as usize) {
+                    if assign[u as usize] == u32::MAX && sizes[p] < cap {
+                        assign[u as usize] = p as u32;
+                        sizes[p] += 1;
+                        queues[p].push_back(u);
+                        grew = true;
+                    }
+                }
+                active = true;
+                if grew {
+                    break;
+                }
+            }
+        }
+    }
+    // unreached nodes (isolated / cap overflow): fill smallest parts
+    for v in 0..n {
+        if assign[v] == u32::MAX {
+            let p = (0..k).min_by_key(|&p| sizes[p]).unwrap();
+            assign[v] = p as u32;
+            sizes[p] += 1;
+        }
+    }
+    Partitioning::new(k, assign)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, Labels};
+    use crate::tensor::Mat;
+
+    #[test]
+    fn hash_balanced() {
+        let p = hash_partition(10, 3);
+        let sizes = p.part_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn range_contiguous() {
+        let p = range_partition(10, 2);
+        assert_eq!(p.assign, vec![0, 0, 0, 0, 0, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn bfs_covers_and_balances() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let cfg = generate::SbmConfig::new(300, 6, 6.0, 1.0);
+        let g = generate::sbm_dataset(&cfg, 4, 6, false, 0.5, &mut rng);
+        let p = bfs_partition(&g, 4, 1);
+        p.validate(g.n).unwrap();
+        let sizes = p.part_sizes();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max <= 76, "max {max}");
+        assert!(min >= 50, "min {min}"); // reasonably balanced
+    }
+
+    #[test]
+    fn bfs_handles_disconnected() {
+        // two disjoint edges + isolated node
+        let g = Graph::from_edges(
+            5,
+            &[(0, 1), (2, 3)],
+            Mat::zeros(5, 1),
+            Labels::Single { labels: vec![0; 5], n_classes: 1 },
+        );
+        let p = bfs_partition(&g, 2, 0);
+        p.validate(5).unwrap();
+    }
+}

@@ -1,0 +1,211 @@
+//! Execution backends for the per-partition layer math.
+//!
+//! The coordinator is backend-agnostic: [`Backend`] exposes the two
+//! heavy primitives of a GraphSAGE/GCN layer (forward aggregate+transform
+//! and its backward), plus FLOP accounting for the timeline simulator.
+//!
+//! * [`native`] — pure Rust: CSR SpMM + blocked GEMM from [`crate::tensor`].
+//!   Works for any shape; used by the large experiments.
+//! * [`xla`] — loads the AOT HLO-text artifacts compiled by
+//!   `python/compile/aot.py` (JAX + Pallas kernels) and executes them on
+//!   the PJRT CPU client. Fixed shapes per artifact; used by the
+//!   end-to-end quickstart and the parity tests.
+
+pub mod native;
+pub mod xla;
+
+use crate::tensor::{Csr, Mat};
+
+/// Forward products of one layer on one partition.
+pub struct FwdOut {
+    /// aggregated neighborhood features `P·H_full` (inner × f_in)
+    pub z_agg: Mat,
+    /// pre-activation `H_inner·W_self + z_agg·W_neigh` (inner × f_out)
+    pub pre: Mat,
+}
+
+/// Backward products of one layer on one partition.
+pub struct BwdOut {
+    /// gradient w.r.t. `w_self` (None for GCN layers)
+    pub g_self: Option<Mat>,
+    /// gradient w.r.t. `w_neigh`
+    pub g_neigh: Mat,
+    /// gradient w.r.t. the layer's full local input H (local_rows × f_in);
+    /// halo rows are the boundary contributions shipped to owners.
+    /// `None` when the caller passed `need_input_grad = false` (layer 0).
+    pub j_full: Option<Mat>,
+}
+
+/// FLOPs executed since the last [`Backend::take_flops`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FlopCount {
+    pub spmm: f64,
+    pub gemm: f64,
+}
+
+impl FlopCount {
+    pub fn total(&self) -> f64 {
+        self.spmm + self.gemm
+    }
+}
+
+/// A compute backend for partition-local layer math.
+///
+/// `register_prop` hands the backend the partition's local propagation
+/// matrix (rows = inner nodes, cols = inner + halo) once; the returned
+/// id is passed to every subsequent call so backends can cache derived
+/// forms (transposes, dense copies, compiled executables).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn register_prop(&mut self, prop: &Csr) -> usize;
+
+    /// `z_agg = P·h_full`; `pre = h_inner·w_self + z_agg·w_neigh`
+    /// (`w_self = None` ⇒ the self term is skipped — GCN layer).
+    fn layer_fwd(
+        &mut self,
+        prop: usize,
+        h_full: &Mat,
+        w_self: Option<&Mat>,
+        w_neigh: &Mat,
+    ) -> FwdOut;
+
+    /// Backward of [`layer_fwd`] given `m = ∂L/∂pre` (σ′ already applied
+    /// by the caller):
+    /// * `g_self  = h_innerᵀ · m`
+    /// * `g_neigh = z_aggᵀ · m`
+    /// * `j_full  = Pᵀ·(m·w_neighᵀ) + pad_inner(m·w_selfᵀ)` — skipped when
+    ///   `need_input_grad` is false (first layer: inputs are leaf data).
+    fn layer_bwd(
+        &mut self,
+        prop: usize,
+        h_full: &Mat,
+        z_agg: &Mat,
+        m: &Mat,
+        w_self: Option<&Mat>,
+        w_neigh: &Mat,
+        need_input_grad: bool,
+    ) -> BwdOut;
+
+    /// Drain the FLOP counters (for `sim::PartitionWork` assembly).
+    fn take_flops(&mut self) -> FlopCount;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::native::NativeBackend;
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_prop(rng: &mut Rng, rows: usize, cols: usize) -> Csr {
+        let mut trip = Vec::new();
+        for r in 0..rows {
+            trip.push((r as u32, r as u32, 0.5)); // self
+            for c in 0..cols {
+                if rng.bernoulli(0.25) {
+                    trip.push((r as u32, c as u32, rng.next_f32()));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, trip)
+    }
+
+    /// End-to-end gradient check of layer_fwd/layer_bwd through a ReLU +
+    /// quadratic loss, against central finite differences.
+    #[test]
+    fn native_layer_grad_matches_finite_difference() {
+        prop::check("layer fd", 3, |rng| {
+            let inner = 4;
+            let cols = 6;
+            let (fi, fo) = (3, 2);
+            let p = random_prop(rng, inner, cols);
+            let h = Mat::randn(cols, fi, 1.0, rng);
+            let w_self = Mat::randn(fi, fo, 0.5, rng);
+            let w_neigh = Mat::randn(fi, fo, 0.5, rng);
+
+            // loss = 0.5 * Σ relu(pre)^2
+            let loss = |ws: &Mat, wn: &Mat, hh: &Mat| -> f64 {
+                let mut b = NativeBackend::new();
+                let pid = b.register_prop(&p);
+                let out = b.layer_fwd(pid, hh, Some(ws), wn);
+                let a = ops::relu(&out.pre);
+                0.5 * a.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            };
+
+            let mut b = NativeBackend::new();
+            let pid = b.register_prop(&p);
+            let out = b.layer_fwd(pid, &h, Some(&w_self), &w_neigh);
+            let act = ops::relu(&out.pre);
+            let mut m = act.clone(); // dL/da = a ; dL/dpre = a ∘ relu'
+            ops::relu_grad_inplace(&mut m, &out.pre);
+            let bwd = b.layer_bwd(pid, &h, &out.z_agg, &m, Some(&w_self), &w_neigh, true);
+
+            let eps = 1e-2f32;
+            // check a few entries of each gradient
+            let j_full = bwd.j_full.as_ref().unwrap();
+            for (mat, grad, tag) in [
+                (&w_self, bwd.g_self.as_ref().unwrap(), "w_self"),
+                (&w_neigh, &bwd.g_neigh, "w_neigh"),
+                (&h, j_full, "h"),
+            ] {
+                for probe in 0..4 {
+                    let idx = (probe * 7 + 3) % mat.data.len();
+                    let mut mp = (*mat).clone();
+                    mp.data[idx] += eps;
+                    let mut mm = (*mat).clone();
+                    mm.data[idx] -= eps;
+                    let (fp_, fm) = match tag {
+                        "w_self" => (loss(&mp, &w_neigh, &h), loss(&mm, &w_neigh, &h)),
+                        "w_neigh" => (loss(&w_self, &mp, &h), loss(&w_self, &mm, &h)),
+                        _ => (loss(&w_self, &w_neigh, &mp), loss(&w_self, &w_neigh, &mm)),
+                    };
+                    let fd = ((fp_ - fm) / (2.0 * eps as f64)) as f32;
+                    let an = grad.data[idx];
+                    crate::prop_assert!(
+                        (fd - an).abs() < 0.05 * (1.0 + fd.abs().max(an.abs())),
+                        "{tag}[{idx}]: fd {fd} vs analytic {an}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gcn_mode_skips_self_term() {
+        let mut rng = Rng::new(1);
+        let p = random_prop(&mut rng, 3, 5);
+        let h = Mat::randn(5, 4, 1.0, &mut rng);
+        let w_neigh = Mat::randn(4, 2, 0.5, &mut rng);
+        let mut b = NativeBackend::new();
+        let pid = b.register_prop(&p);
+        let out = b.layer_fwd(pid, &h, None, &w_neigh);
+        let want = p.spmm(&h).matmul(&w_neigh);
+        prop::assert_close(&out.pre.data, &want.data, 1e-4).unwrap();
+        let m = Mat::randn(3, 2, 1.0, &mut rng);
+        let bwd = b.layer_bwd(pid, &h, &out.z_agg, &m, None, &w_neigh, true);
+        assert!(bwd.g_self.is_none());
+        // j_full = Pᵀ (m Wᵀ)
+        let want_j = p.spmm_t(&m.matmul_nt(&w_neigh));
+        prop::assert_close(&bwd.j_full.unwrap().data, &want_j.data, 1e-4).unwrap();
+        // need_input_grad=false skips j_full
+        let bwd2 = b.layer_bwd(pid, &h, &out.z_agg, &m, None, &w_neigh, false);
+        assert!(bwd2.j_full.is_none());
+    }
+
+    #[test]
+    fn flop_accounting_nonzero_and_drains() {
+        let mut rng = Rng::new(2);
+        let p = random_prop(&mut rng, 4, 6);
+        let h = Mat::randn(6, 3, 1.0, &mut rng);
+        let w = Mat::randn(3, 2, 1.0, &mut rng);
+        let mut b = NativeBackend::new();
+        let pid = b.register_prop(&p);
+        let _ = b.layer_fwd(pid, &h, None, &w);
+        let f1 = b.take_flops();
+        assert!(f1.spmm > 0.0 && f1.gemm > 0.0);
+        let f2 = b.take_flops();
+        assert_eq!(f2, FlopCount::default());
+    }
+}

@@ -1,0 +1,330 @@
+//! Discrete-event timeline simulator for distributed GCN training.
+//!
+//! The repo runs on a single CPU core, so training *numerics* execute
+//! sequentially (bit-identical to a parallel run — the dataflow is
+//! deterministic), while this module answers "what would this schedule
+//! cost on the paper's testbed?". The coordinator records, per partition
+//! and per layer, the exact FLOPs executed and the exact bytes exchanged
+//! (from the [`crate::comm::Fabric`] counters); [`epoch_time`] lays those
+//! onto per-partition compute/communication lanes:
+//!
+//! * **Vanilla** partition-parallel training interleaves lanes serially —
+//!   each layer's boundary exchange blocks the next compute (Fig. 1(b)),
+//!   paying a synchronization barrier per exchange and moving bursty,
+//!   unpipelined transfers below wire saturation (`vanilla_bw_derate`).
+//! * **PipeGCN** overlaps the lanes — an iteration costs
+//!   `max(compute′, comm_wire)` per partition (Fig. 1(c)) where compute′
+//!   is slowed by PCIe/memory contention during overlap
+//!   (`overlap_compute_derate`; the paper's Table 6 shows exactly this:
+//!   compute 0.17 s → 0.25 s when communication is overlapped).
+//!
+//! followed by a ring all-reduce of model gradients at the slowest link.
+//!
+//! Calibration to the paper's hardware lives in [`profiles`].
+
+pub mod profiles;
+
+use crate::comm::topology::Topology;
+
+/// Execution schedule being modeled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// synchronous boundary exchange each layer (paper's "GCN")
+    Vanilla,
+    /// pipelined exchange across iterations (paper's "PipeGCN")
+    Pipelined,
+}
+
+/// Effective device compute rates plus the communication-schedule
+/// constants. Rates are *effective* (not peak) throughputs of the two
+/// kernel classes in a GCN layer.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// effective FLOP/s of sparse aggregation (SpMM)
+    pub spmm_flops: f64,
+    /// effective FLOP/s of dense transform (GEMM)
+    pub gemm_flops: f64,
+    /// fixed overhead per layer per pass (kernel launches, framework)
+    pub layer_overhead_s: f64,
+    /// synchronization barrier cost per blocking boundary exchange
+    pub barrier_s: f64,
+    /// fraction of wire bandwidth that synchronous bursty transfers
+    /// achieve (vanilla training stalls between layers)
+    pub vanilla_bw_derate: f64,
+    /// compute slowdown factor while communication is overlapped
+    /// (PCIe/memory contention): effective compute = compute / this
+    pub overlap_compute_derate: f64,
+}
+
+impl DeviceProfile {
+    /// A neutral profile for unit tests: no barriers, no derating.
+    pub fn ideal(spmm_flops: f64, gemm_flops: f64) -> DeviceProfile {
+        DeviceProfile {
+            name: "ideal",
+            spmm_flops,
+            gemm_flops,
+            layer_overhead_s: 0.0,
+            barrier_s: 0.0,
+            vanilla_bw_derate: 1.0,
+            overlap_compute_derate: 1.0,
+        }
+    }
+}
+
+/// One layer's compute on one partition (forward; backward is derived).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerCompute {
+    pub spmm_flops: f64,
+    pub gemm_flops: f64,
+}
+
+impl LayerCompute {
+    pub fn total(&self) -> f64 {
+        self.spmm_flops + self.gemm_flops
+    }
+
+    pub fn time(&self, p: &DeviceProfile) -> f64 {
+        self.spmm_flops / p.spmm_flops + self.gemm_flops / p.gemm_flops + p.layer_overhead_s
+    }
+}
+
+/// Everything one partition does in one training iteration.
+#[derive(Clone, Debug, Default)]
+pub struct PartitionWork {
+    /// forward compute per layer
+    pub fwd: Vec<LayerCompute>,
+    /// backward compute per layer (≈2× forward FLOPs in practice)
+    pub bwd: Vec<LayerCompute>,
+    /// forward boundary-feature transfers per layer: (peer, bytes in+out)
+    pub fwd_comm: Vec<Vec<(usize, u64)>>,
+    /// backward boundary-gradient transfers per layer
+    pub bwd_comm: Vec<Vec<(usize, u64)>>,
+}
+
+impl PartitionWork {
+    pub fn compute_time(&self, p: &DeviceProfile) -> f64 {
+        self.fwd.iter().chain(&self.bwd).map(|l| l.time(p)).sum()
+    }
+
+    /// Wire-speed communication time (transfers to distinct peers in one
+    /// layer serialize through the device's single NIC/PCIe port).
+    pub fn comm_wire_time(&self, me: usize, topo: &Topology) -> f64 {
+        self.fwd_comm
+            .iter()
+            .chain(&self.bwd_comm)
+            .flat_map(|layer| layer.iter())
+            .map(|&(peer, bytes)| topo.link(me, peer).transfer_time(bytes))
+            .sum()
+    }
+
+    /// Number of layer-passes that actually exchange data (each costs a
+    /// barrier in vanilla mode).
+    pub fn n_exchanges(&self) -> usize {
+        self.fwd_comm
+            .iter()
+            .chain(&self.bwd_comm)
+            .filter(|l| !l.is_empty())
+            .count()
+    }
+}
+
+/// Simulated epoch breakdown (all seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EpochBreakdown {
+    pub compute: f64,
+    /// communication time on the wire (max over partitions, incl. derate)
+    pub comm_total: f64,
+    /// communication time *not* hidden by compute
+    pub comm_exposed: f64,
+    pub reduce: f64,
+    pub total: f64,
+}
+
+impl EpochBreakdown {
+    pub fn comm_ratio(&self) -> f64 {
+        if self.total > 0.0 {
+            (self.comm_exposed + self.reduce) / self.total
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Ring all-reduce wall time of `elems` f32 across the topology.
+pub fn allreduce_time(elems: usize, topo: &Topology) -> f64 {
+    let n = topo.n_devices();
+    if n <= 1 || elems == 0 {
+        return 0.0;
+    }
+    let link = topo.ring_bottleneck();
+    let steps = 2 * (n - 1);
+    let chunk_bytes = (elems * 4 / n).max(1) as u64;
+    steps as f64 * link.transfer_time(chunk_bytes)
+}
+
+/// Assemble one iteration's simulated time from per-partition work.
+pub fn epoch_time(
+    works: &[PartitionWork],
+    model_elems: usize,
+    profile: &DeviceProfile,
+    topo: &Topology,
+    mode: Mode,
+) -> EpochBreakdown {
+    assert!(works.len() <= topo.n_devices());
+    let reduce = allreduce_time(model_elems, topo);
+    let mut max_total = 0.0f64;
+    let mut max_compute = 0.0f64;
+    let mut max_comm = 0.0f64;
+    let mut max_exposed = 0.0f64;
+    for (i, w) in works.iter().enumerate() {
+        let compute = w.compute_time(profile);
+        let wire = w.comm_wire_time(i, topo);
+        let (t, comm, exposed, comp) = match mode {
+            Mode::Vanilla => {
+                let comm = wire / profile.vanilla_bw_derate
+                    + w.n_exchanges() as f64 * profile.barrier_s;
+                (compute + comm, comm, comm, compute)
+            }
+            Mode::Pipelined => {
+                // compute slows under overlap only if there is anything
+                // to overlap with
+                let comp = if wire > 0.0 {
+                    compute / profile.overlap_compute_derate
+                } else {
+                    compute
+                };
+                (comp.max(wire), wire, (wire - comp).max(0.0), comp)
+            }
+        };
+        max_total = max_total.max(t);
+        max_compute = max_compute.max(comp);
+        max_comm = max_comm.max(comm);
+        max_exposed = max_exposed.max(exposed);
+    }
+    EpochBreakdown {
+        compute: max_compute,
+        comm_total: max_comm,
+        comm_exposed: max_exposed,
+        reduce,
+        total: max_total + reduce,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::topology::{pcie3_link, Topology};
+
+    fn profile() -> DeviceProfile {
+        DeviceProfile::ideal(1e9, 1e10)
+    }
+
+    fn work(flops: f64, bytes: u64, peer: usize) -> PartitionWork {
+        PartitionWork {
+            fwd: vec![LayerCompute { spmm_flops: flops, gemm_flops: 0.0 }],
+            bwd: vec![LayerCompute { spmm_flops: flops, gemm_flops: 0.0 }],
+            fwd_comm: vec![vec![(peer, bytes)]],
+            bwd_comm: vec![vec![(peer, bytes)]],
+        }
+    }
+
+    #[test]
+    fn vanilla_serializes_pipeline_overlaps() {
+        let topo = Topology::single_node(2, pcie3_link());
+        let p = profile();
+        // compute 2×1s, comm 2×~1s (9e9 bytes at 9 GB/s)
+        let works = vec![work(1e9, 9_000_000_000, 1), work(1e9, 9_000_000_000, 0)];
+        let v = epoch_time(&works, 0, &p, &topo, Mode::Vanilla);
+        let pl = epoch_time(&works, 0, &p, &topo, Mode::Pipelined);
+        assert!((v.total - 4.0).abs() < 0.01, "vanilla {v:?}");
+        assert!((pl.total - 2.0).abs() < 0.01, "pipelined {pl:?}");
+        assert!(v.comm_ratio() > 0.49);
+        assert!(pl.comm_exposed < 1e-3, "{pl:?}");
+    }
+
+    #[test]
+    fn pipeline_exposes_comm_when_dominant() {
+        let topo = Topology::single_node(2, pcie3_link());
+        let p = profile();
+        // comm 4s total, compute 2s → pipelined total 4s, exposed ~2s
+        let works = vec![work(1e9, 18_000_000_000, 1), work(1e9, 18_000_000_000, 0)];
+        let pl = epoch_time(&works, 0, &p, &topo, Mode::Pipelined);
+        assert!((pl.total - 4.0).abs() < 0.01, "{pl:?}");
+        assert!((pl.comm_exposed - 2.0).abs() < 0.01, "{pl:?}");
+    }
+
+    #[test]
+    fn vanilla_pays_barriers_and_derate() {
+        let topo = Topology::single_node(2, pcie3_link());
+        let mut p = profile();
+        p.barrier_s = 0.5;
+        p.vanilla_bw_derate = 0.5;
+        let works = vec![work(1e9, 9_000_000_000, 1), work(1e9, 9_000_000_000, 0)];
+        let v = epoch_time(&works, 0, &p, &topo, Mode::Vanilla);
+        // compute 2s + wire 2s/0.5 + 2 barriers = 2 + 4 + 1 = 7
+        assert!((v.total - 7.0).abs() < 0.01, "{v:?}");
+        // pipelined path ignores barriers, uses wire speed
+        let pl = epoch_time(&works, 0, &p, &topo, Mode::Pipelined);
+        assert!((pl.total - 2.0).abs() < 0.02, "{pl:?}");
+    }
+
+    #[test]
+    fn overlap_contention_slows_compute() {
+        let topo = Topology::single_node(2, pcie3_link());
+        let mut p = profile();
+        p.overlap_compute_derate = 0.5;
+        // comm tiny but non-zero → compute dominates at 2/0.5 = 4s
+        let works = vec![work(1e9, 9_000, 1), work(1e9, 9_000, 0)];
+        let pl = epoch_time(&works, 0, &p, &topo, Mode::Pipelined);
+        assert!((pl.total - 4.0).abs() < 0.01, "{pl:?}");
+        // no comm at all → no contention
+        let works2 = vec![
+            PartitionWork {
+                fwd: vec![LayerCompute { spmm_flops: 1e9, gemm_flops: 0.0 }],
+                bwd: vec![LayerCompute { spmm_flops: 1e9, gemm_flops: 0.0 }],
+                fwd_comm: vec![vec![]],
+                bwd_comm: vec![vec![]],
+            };
+            2
+        ];
+        let pl2 = epoch_time(&works2, 0, &p, &topo, Mode::Pipelined);
+        assert!((pl2.total - 2.0).abs() < 0.01, "{pl2:?}");
+    }
+
+    #[test]
+    fn reduce_added_on_top() {
+        let topo = Topology::single_node(4, pcie3_link());
+        let p = profile();
+        let works: Vec<PartitionWork> = (0..4).map(|i| work(1e9, 0, (i + 1) % 4)).collect();
+        let with = epoch_time(&works, 1_000_000, &p, &topo, Mode::Vanilla);
+        let without = epoch_time(&works, 0, &p, &topo, Mode::Vanilla);
+        assert!(with.reduce > 0.0);
+        assert!((with.total - without.total - with.reduce).abs() < 1e-9);
+    }
+
+    #[test]
+    fn allreduce_time_scales_with_slowest_link() {
+        use crate::comm::topology::eth10g_link;
+        let fast = Topology::single_node(4, pcie3_link());
+        let slow = Topology::multi_node(2, 2, pcie3_link(), eth10g_link());
+        let tf = allreduce_time(10_000_000, &fast);
+        let ts = allreduce_time(10_000_000, &slow);
+        assert!(ts > 5.0 * tf, "fast {tf} slow {ts}");
+    }
+
+    #[test]
+    fn layer_overhead_counted_per_layer_pass() {
+        let topo = Topology::single_node(1, pcie3_link());
+        let mut p = profile();
+        p.layer_overhead_s = 0.1;
+        let w = PartitionWork {
+            fwd: vec![LayerCompute::default(); 3],
+            bwd: vec![LayerCompute::default(); 3],
+            fwd_comm: vec![vec![]; 3],
+            bwd_comm: vec![vec![]; 3],
+        };
+        let e = epoch_time(&[w], 0, &p, &topo, Mode::Vanilla);
+        assert!((e.compute - 0.6).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,141 @@
+//! Calibrated device/topology presets for the paper's two testbeds.
+//!
+//! Calibration target is the paper's **Table 6** epoch-time breakdown on
+//! Reddit (4-layer GraphSAGE, 256 hidden):
+//!
+//! | method           | total | compute | comm  |
+//! |------------------|-------|---------|-------|
+//! | GCN (2 GPUs)     | 0.52s | 0.17s   | 0.34s |
+//! | PipeGCN (2 GPUs) | 0.27s | 0.25s   | ~0s   |
+//! | GCN (4 GPUs)     | 0.48s | 0.07s   | 0.40s |
+//! | PipeGCN (4 GPUs) | 0.23s | 0.10s   | 0.10s |
+//!
+//! Notable structure in those rows that the model reproduces:
+//! * vanilla comm (0.34 s) is ~2× the wire time of the same bytes —
+//!   synchronous bursty transfers don't saturate the link and pay a
+//!   barrier per layer (`vanilla_bw_derate`, `barrier_s`);
+//! * PipeGCN's *compute* rises 0.17→0.25 s — overlapped DMA contends
+//!   with kernels (`overlap_compute_derate ≈ 0.68`).
+//!
+//! Reddit full-scale per-partition FLOPs (2 parts, 233K nodes, 114M
+//! directed edges, feat 602, hidden 256, 4 layers, bwd≈2×fwd):
+//! SpMM ≈ 3.5e11 FLOP, GEMM ≈ 3.2e11 FLOP → ≈0.16 s at the rates below.
+//! Boundary traffic ≈ 0.35 GB/epoch → wire ≈ 0.16 s at Gloo-PCIe
+//! effective 2.2 GB/s; vanilla sees 0.16/0.5 + barriers ≈ 0.33 s.
+
+use super::DeviceProfile;
+use crate::comm::topology::{eth10g_link, pcie3_link, Link, Topology};
+
+/// RTX-2080Ti effective rates under PyTorch+DGL kernels.
+pub const RTX_2080TI: DeviceProfile = DeviceProfile {
+    name: "rtx2080ti",
+    spmm_flops: 3.2e12,
+    gemm_flops: 7.0e12,
+    layer_overhead_s: 120e-6,
+    barrier_s: 300e-6,
+    vanilla_bw_derate: 0.5,
+    overlap_compute_derate: 0.68,
+};
+
+/// AMD MI60 effective rates (14.7 TFLOP/s fp32 peak, HBM2 1 TB/s).
+pub const MI60: DeviceProfile = DeviceProfile {
+    name: "mi60",
+    spmm_flops: 3.6e12,
+    gemm_flops: 7.6e12,
+    layer_overhead_s: 150e-6,
+    barrier_s: 500e-6,
+    vanilla_bw_derate: 0.5,
+    overlap_compute_derate: 0.7,
+};
+
+/// Gloo-over-PCIe effective point-to-point bandwidth: staging through
+/// host memory roughly quarters the raw PCIe rate (paper App. F notes
+/// the CPU-GPU + CPU-CPU relay).
+pub fn gloo_pcie_link() -> Link {
+    Link { latency_s: 60e-6, bytes_per_s: 2.2e9 }
+}
+
+/// Single-chassis testbed: n × RTX-2080Ti over PCIe3 (the paper's main
+/// rig has 10).
+pub fn rig_2080ti(n_gpus: usize) -> (DeviceProfile, Topology) {
+    (RTX_2080TI, Topology::single_node(n_gpus, gloo_pcie_link()))
+}
+
+/// Multi-server testbed: `nodes` × `per_node` MI60s, PCIe intra, 10 GbE
+/// inter (Appendix E).
+pub fn rig_mi60(nodes: usize, per_node: usize) -> (DeviceProfile, Topology) {
+    (MI60, Topology::multi_node(nodes, per_node, pcie3_link(), eth10g_link()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{epoch_time, LayerCompute, Mode, PartitionWork};
+
+    /// Reconstruct the paper's Reddit/2-GPU Table 6 rows from first
+    /// principles and check the calibration lands near them.
+    #[test]
+    fn table6_reddit_2gpu_calibration() {
+        let (profile, topo) = rig_2080ti(2);
+        let n: f64 = 233_000.0;
+        let nnz_dir: f64 = 114_000_000.0; // directed edges (DGL reddit)
+        let feats = [602.0, 256.0, 256.0, 256.0];
+        let hidden = 256.0;
+        // ~32% of each partition's nodes are boundary replicas at 2 parts
+        let boundary_nodes = 0.32 * n / 2.0;
+        let mut fwd = Vec::new();
+        let mut bwd = Vec::new();
+        let mut fwd_comm = Vec::new();
+        let mut bwd_comm = Vec::new();
+        for l in 0..4 {
+            let f_in = feats[l];
+            let rows = n / 2.0 * 1.32; // inner + halo rows
+            let lc = LayerCompute {
+                spmm_flops: 2.0 * (nnz_dir / 2.0) * hidden,
+                gemm_flops: 2.0 * rows * f_in * hidden,
+            };
+            fwd.push(lc);
+            bwd.push(LayerCompute {
+                spmm_flops: 2.0 * lc.spmm_flops,
+                gemm_flops: 2.0 * lc.gemm_flops,
+            });
+            let bytes = (boundary_nodes * f_in * 4.0) as u64;
+            fwd_comm.push(vec![(1usize, bytes)]);
+            let gbytes = (boundary_nodes * hidden * 4.0) as u64;
+            bwd_comm.push(vec![(1usize, gbytes)]);
+        }
+        let w = PartitionWork { fwd, bwd, fwd_comm, bwd_comm };
+        let works = vec![w.clone(), w];
+        let model_elems = (602 * 256 + 3 * 256 * 256) * 2; // sage dual weights
+        let v = epoch_time(&works, model_elems, &profile, &topo, Mode::Vanilla);
+        let p = epoch_time(&works, model_elems, &profile, &topo, Mode::Pipelined);
+        // Paper: vanilla total 0.52 (compute 0.17, comm 0.34);
+        //        PipeGCN total 0.27 (compute 0.25).
+        assert!(
+            v.compute > 0.12 && v.compute < 0.22,
+            "compute {:.3}s vs paper 0.17s",
+            v.compute
+        );
+        assert!(
+            v.comm_total > 0.25 && v.comm_total < 0.45,
+            "comm {:.3}s vs paper 0.34s",
+            v.comm_total
+        );
+        assert!(
+            v.total > 0.40 && v.total < 0.65,
+            "total {:.3}s vs paper 0.52s",
+            v.total
+        );
+        assert!(
+            p.total > 0.20 && p.total < 0.34,
+            "pipe total {:.3}s vs paper 0.27s",
+            p.total
+        );
+        let speedup = v.total / p.total;
+        assert!(
+            speedup > 1.55 && speedup < 2.4,
+            "speedup {:.2} vs paper 1.93×",
+            speedup
+        );
+    }
+}

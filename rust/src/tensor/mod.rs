@@ -1,0 +1,14 @@
+//! Tensor substrate: dense row-major f32 matrices with cache-blocked GEMM,
+//! CSR sparse matrices with row-parallel SpMM, and the activation / loss
+//! kernels the GCN layers need.
+//!
+//! This is the compute engine behind the **native** backend
+//! (`runtime::native`); the **xla** backend runs the same math from AOT
+//! HLO artifacts and is cross-checked against this implementation.
+
+pub mod dense;
+pub mod sparse;
+pub mod ops;
+
+pub use dense::Mat;
+pub use sparse::Csr;

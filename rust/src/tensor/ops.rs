@@ -1,0 +1,317 @@
+//! Activations, losses, dropout, and classification metrics.
+//!
+//! Loss heads follow the paper's experiment setup: softmax cross-entropy
+//! for single-label datasets (Reddit-, products-like) and per-class
+//! sigmoid BCE with micro-F1 for multi-label (Yelp-like). Dropout keeps an
+//! explicit mask so the PipeGCN rule from Appendix F (apply dropout
+//! *after* boundary communication, same mask in fwd/bwd) can be honored.
+
+use super::dense::Mat;
+use crate::util::rng::Rng;
+
+/// ReLU forward: `out = max(z, 0)`.
+pub fn relu(z: &Mat) -> Mat {
+    let mut out = z.clone();
+    out.data.iter_mut().for_each(|x| *x = x.max(0.0));
+    out
+}
+
+/// ReLU backward in place: `g *= 1[z > 0]`.
+pub fn relu_grad_inplace(g: &mut Mat, z: &Mat) {
+    assert_eq!((g.rows, g.cols), (z.rows, z.cols));
+    for (gv, &zv) in g.data.iter_mut().zip(z.data.iter()) {
+        if zv <= 0.0 {
+            *gv = 0.0;
+        }
+    }
+}
+
+/// Dropout mask with keep-prob `1-p`, inverted scaling (train-time only).
+/// Returns the mask so backward can reuse it (Appendix F requirement).
+pub fn dropout_mask(rows: usize, cols: usize, p: f32, rng: &mut Rng) -> Mat {
+    assert!((0.0..1.0).contains(&p));
+    let scale = 1.0 / (1.0 - p);
+    Mat::from_fn(rows, cols, |_, _| if rng.bernoulli(p) { 0.0 } else { scale })
+}
+
+/// Elementwise product (dropout application; Hadamard in general).
+pub fn hadamard(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut out = a.clone();
+    for (o, &bv) in out.data.iter_mut().zip(b.data.iter()) {
+        *o *= bv;
+    }
+    out
+}
+
+/// Softmax cross-entropy over rows listed in `mask` (training nodes).
+///
+/// Returns `(mean loss, dL/dlogits)` where the gradient is already divided
+/// by `mask.len()` and rows outside the mask have zero gradient.
+pub fn softmax_xent(logits: &Mat, labels: &[u32], mask: &[u32]) -> (f64, Mat) {
+    assert_eq!(logits.rows, labels.len());
+    let mut grad = Mat::zeros(logits.rows, logits.cols);
+    if mask.is_empty() {
+        return (0.0, grad);
+    }
+    let inv_n = 1.0 / mask.len() as f32;
+    let mut loss = 0.0f64;
+    for &r in mask {
+        let r = r as usize;
+        let row = logits.row(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - m).exp();
+        }
+        let y = labels[r] as usize;
+        debug_assert!(y < logits.cols);
+        loss += (z.ln() - (row[y] - m)) as f64;
+        let g = grad.row_mut(r);
+        for (c, &v) in row.iter().enumerate() {
+            let p = (v - m).exp() / z;
+            g[c] = (p - if c == y { 1.0 } else { 0.0 }) * inv_n;
+        }
+    }
+    (loss / mask.len() as f64, grad)
+}
+
+/// Multi-label sigmoid binary cross-entropy over `mask` rows.
+/// `targets` is a rows×cols {0,1} matrix. Returns `(mean loss, grad)`.
+pub fn sigmoid_bce(logits: &Mat, targets: &Mat, mask: &[u32]) -> (f64, Mat) {
+    assert_eq!((logits.rows, logits.cols), (targets.rows, targets.cols));
+    let mut grad = Mat::zeros(logits.rows, logits.cols);
+    if mask.is_empty() {
+        return (0.0, grad);
+    }
+    let denom = (mask.len() * logits.cols) as f64;
+    let inv = 1.0 / denom as f32;
+    let mut loss = 0.0f64;
+    for &r in mask {
+        let r = r as usize;
+        let x_row = logits.row(r);
+        let t_row = targets.row(r);
+        let g_row = grad.row_mut(r);
+        for c in 0..x_row.len() {
+            let x = x_row[c];
+            let t = t_row[c];
+            // numerically stable: log(1+e^-|x|) + max(x,0) - t*x
+            loss += (x.max(0.0) - x * t + (1.0 + (-x.abs()).exp()).ln()) as f64;
+            let s = 1.0 / (1.0 + (-x).exp());
+            g_row[c] = (s - t) * inv;
+        }
+    }
+    (loss / denom, grad)
+}
+
+/// Single-label accuracy over `mask` rows.
+pub fn accuracy(logits: &Mat, labels: &[u32], mask: &[u32]) -> f64 {
+    if mask.is_empty() {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for &r in mask {
+        let r = r as usize;
+        let row = logits.row(r);
+        let mut best = 0usize;
+        for (c, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = c;
+            }
+        }
+        if best as u32 == labels[r] {
+            correct += 1;
+        }
+    }
+    correct as f64 / mask.len() as f64
+}
+
+/// Counts for micro-F1 (so partitions can be aggregated before the divide).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct F1Counts {
+    pub tp: u64,
+    pub fp: u64,
+    pub fn_: u64,
+}
+
+impl F1Counts {
+    pub fn merge(&mut self, o: F1Counts) {
+        self.tp += o.tp;
+        self.fp += o.fp;
+        self.fn_ += o.fn_;
+    }
+
+    pub fn micro_f1(&self) -> f64 {
+        let denom = 2 * self.tp + self.fp + self.fn_;
+        if denom == 0 {
+            0.0
+        } else {
+            2.0 * self.tp as f64 / denom as f64
+        }
+    }
+}
+
+/// Micro-F1 counts for multi-label predictions (threshold at logit 0 ⇔ p=0.5).
+pub fn f1_counts(logits: &Mat, targets: &Mat, mask: &[u32]) -> F1Counts {
+    let mut c = F1Counts::default();
+    for &r in mask {
+        let r = r as usize;
+        let x_row = logits.row(r);
+        let t_row = targets.row(r);
+        for k in 0..x_row.len() {
+            let pred = x_row[k] > 0.0;
+            let tru = t_row[k] > 0.5;
+            match (pred, tru) {
+                (true, true) => c.tp += 1,
+                (true, false) => c.fp += 1,
+                (false, true) => c.fn_ += 1,
+                _ => {}
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn relu_basic() {
+        let z = Mat::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -3.0]);
+        assert_eq!(relu(&z).data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn relu_grad_masks() {
+        let z = Mat::from_vec(1, 3, vec![-1.0, 1.0, 0.0]);
+        let mut g = Mat::from_vec(1, 3, vec![5.0, 5.0, 5.0]);
+        relu_grad_inplace(&mut g, &z);
+        assert_eq!(g.data, vec![0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        // zero logits, C classes -> loss = ln C
+        let logits = Mat::zeros(2, 4);
+        let labels = vec![1, 2];
+        let (loss, grad) = softmax_xent(&logits, &labels, &[0, 1]);
+        assert!((loss - (4.0f64).ln()).abs() < 1e-6);
+        // gradient rows sum to zero
+        for r in 0..2 {
+            let s: f32 = grad.row(r).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_grad_matches_fd() {
+        prop::check("xent fd", 5, |rng| {
+            let n = 3;
+            let c = 4;
+            let logits = Mat::randn(n, c, 1.0, rng);
+            let labels: Vec<u32> = (0..n).map(|_| rng.gen_range(c) as u32).collect();
+            let mask: Vec<u32> = (0..n as u32).collect();
+            let (_, grad) = softmax_xent(&logits, &labels, &mask);
+            let eps = 1e-3f32;
+            for r in 0..n {
+                for k in 0..c {
+                    let mut lp = logits.clone();
+                    lp.set(r, k, lp.get(r, k) + eps);
+                    let mut lm = logits.clone();
+                    lm.set(r, k, lm.get(r, k) - eps);
+                    let (fp_, _) = softmax_xent(&lp, &labels, &mask);
+                    let (fm, _) = softmax_xent(&lm, &labels, &mask);
+                    let fd = ((fp_ - fm) / (2.0 * eps as f64)) as f32;
+                    prop_assert!(
+                        (fd - grad.get(r, k)).abs() < 2e-2,
+                        "fd {} vs grad {}",
+                        fd,
+                        grad.get(r, k)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bce_grad_matches_fd() {
+        prop::check("bce fd", 5, |rng| {
+            let (n, c) = (2, 3);
+            let logits = Mat::randn(n, c, 1.0, rng);
+            let targets = Mat::from_fn(n, c, |_, _| if rng.bernoulli(0.5) { 1.0 } else { 0.0 });
+            let mask: Vec<u32> = (0..n as u32).collect();
+            let (_, grad) = sigmoid_bce(&logits, &targets, &mask);
+            let eps = 1e-3f32;
+            for r in 0..n {
+                for k in 0..c {
+                    let mut lp = logits.clone();
+                    lp.set(r, k, lp.get(r, k) + eps);
+                    let mut lm = logits.clone();
+                    lm.set(r, k, lm.get(r, k) - eps);
+                    let (fp_, _) = sigmoid_bce(&lp, &targets, &mask);
+                    let (fm, _) = sigmoid_bce(&lm, &targets, &mask);
+                    let fd = ((fp_ - fm) / (2.0 * eps as f64)) as f32;
+                    prop_assert!(
+                        (fd - grad.get(r, k)).abs() < 2e-2,
+                        "fd {} vs grad {}",
+                        fd,
+                        grad.get(r, k)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+        let labels = vec![0, 1, 1];
+        assert!((accuracy(&logits, &labels, &[0, 1, 2]) - 2.0 / 3.0).abs() < 1e-9);
+        assert!((accuracy(&logits, &labels, &[0, 1]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_perfect_and_zero() {
+        let t = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let good = Mat::from_vec(2, 2, vec![5.0, -5.0, -5.0, 5.0]);
+        assert!((f1_counts(&good, &t, &[0, 1]).micro_f1() - 1.0).abs() < 1e-9);
+        let bad = Mat::from_vec(2, 2, vec![-5.0, 5.0, 5.0, -5.0]);
+        assert_eq!(f1_counts(&bad, &t, &[0, 1]).micro_f1(), 0.0);
+    }
+
+    #[test]
+    fn f1_counts_merge_equivalent() {
+        let t = Mat::from_vec(2, 2, vec![1.0, 0.0, 1.0, 1.0]);
+        let x = Mat::from_vec(2, 2, vec![1.0, 1.0, -1.0, 2.0]);
+        let whole = f1_counts(&x, &t, &[0, 1]);
+        let mut parts = f1_counts(&x, &t, &[0]);
+        parts.merge(f1_counts(&x, &t, &[1]));
+        assert_eq!(whole.tp, parts.tp);
+        assert_eq!(whole.fp, parts.fp);
+        assert_eq!(whole.fn_, parts.fn_);
+    }
+
+    #[test]
+    fn dropout_mask_stats() {
+        let mut rng = Rng::new(1);
+        let m = dropout_mask(100, 100, 0.5, &mut rng);
+        let zeros = m.data.iter().filter(|&&x| x == 0.0).count();
+        let frac = zeros as f64 / m.data.len() as f64;
+        assert!((frac - 0.5).abs() < 0.03, "zero frac {frac}");
+        // kept entries are scaled by 1/(1-p)
+        assert!(m.data.iter().all(|&x| x == 0.0 || (x - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn empty_mask_zero_loss() {
+        let logits = Mat::zeros(2, 2);
+        let (loss, grad) = softmax_xent(&logits, &[0, 0], &[]);
+        assert_eq!(loss, 0.0);
+        assert_eq!(grad.data, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,213 @@
+//! CSR sparse matrices and the SpMM kernels used for GCN propagation.
+//!
+//! The per-partition propagation matrix `P_i` (rows = inner nodes,
+//! columns = inner + boundary nodes) is stored in CSR; the forward pass
+//! computes `P·H` and the backward pass `Pᵀ·M`. Both kernels stream the
+//! dense right-hand side row-wise so the inner loop is a contiguous AXPY.
+
+use super::dense::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f32>,
+}
+
+impl Csr {
+    pub fn zeros(rows: usize, cols: usize) -> Csr {
+        Csr { rows, cols, indptr: vec![0; rows + 1], indices: Vec::new(), data: Vec::new() }
+    }
+
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut trip: Vec<(u32, u32, f32)>) -> Csr {
+        trip.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(trip.len());
+        let mut data: Vec<f32> = Vec::with_capacity(trip.len());
+        let mut last: Option<(u32, u32)> = None;
+        for (r, c, v) in trip {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            if last == Some((r, c)) {
+                *data.last_mut().unwrap() += v;
+            } else {
+                indptr[r as usize + 1] += 1;
+                indices.push(c);
+                data.push(v);
+                last = Some((r, c));
+            }
+        }
+        for r in 0..rows {
+            indptr[r + 1] += indptr[r];
+        }
+        Csr { rows, cols, indptr, indices, data }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(self.data[lo..hi].iter())
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// `out = self · h` (out: rows × h.cols). Allocates.
+    pub fn spmm(&self, h: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, h.cols);
+        self.spmm_into(h, &mut out);
+        out
+    }
+
+    /// `out = self · h`, overwriting `out`.
+    pub fn spmm_into(&self, h: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, h.rows, "spmm shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.rows, h.cols));
+        let n = h.cols;
+        out.data.iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let out_row = &mut out.data[r * n..(r + 1) * n];
+            for idx in lo..hi {
+                let c = self.indices[idx] as usize;
+                let v = self.data[idx];
+                let h_row = &h.data[c * n..(c + 1) * n];
+                for (o, x) in out_row.iter_mut().zip(h_row.iter()) {
+                    *o += v * *x;
+                }
+            }
+        }
+    }
+
+    /// `out = selfᵀ · m` (out: cols × m.cols). Scatter formulation:
+    /// each CSR entry (r, c, v) contributes `v · m[r,:]` to `out[c,:]`.
+    pub fn spmm_t(&self, m: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.cols, m.cols);
+        self.spmm_t_into(m, &mut out);
+        out
+    }
+
+    pub fn spmm_t_into(&self, m: &Mat, out: &mut Mat) {
+        assert_eq!(self.rows, m.rows, "spmm_t shape mismatch");
+        assert_eq!((out.rows, out.cols), (self.cols, m.cols));
+        let n = m.cols;
+        out.data.iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..self.rows {
+            let lo = self.indptr[r];
+            let hi = self.indptr[r + 1];
+            let m_row = &m.data[r * n..(r + 1) * n];
+            for idx in lo..hi {
+                let c = self.indices[idx] as usize;
+                let v = self.data[idx];
+                let out_row = &mut out.data[c * n..(c + 1) * n];
+                for (o, x) in out_row.iter_mut().zip(m_row.iter()) {
+                    *o += v * *x;
+                }
+            }
+        }
+    }
+
+    /// Materialized transpose (for tests and the explicit-Pᵀ path).
+    pub fn transpose(&self) -> Csr {
+        let mut trip = Vec::with_capacity(self.nnz());
+        for r in 0..self.rows {
+            for (c, v) in self.row_entries(r) {
+                trip.push((c as u32, r as u32, v));
+            }
+        }
+        Csr::from_triplets(self.cols, self.rows, trip)
+    }
+
+    /// Densify (tests / XLA artifact inputs for small partitions).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for (c, v) in self.row_entries(r) {
+                out.data[r * self.cols + c] += v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f32) -> Csr {
+        let mut trip = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    trip.push((r as u32, c as u32, rng.normal()));
+                }
+            }
+        }
+        Csr::from_triplets(rows, cols, trip)
+    }
+
+    #[test]
+    fn from_triplets_sums_duplicates() {
+        let c = Csr::from_triplets(2, 2, vec![(0, 1, 1.0), (0, 1, 2.0), (1, 0, 5.0)]);
+        assert_eq!(c.nnz(), 2);
+        let d = c.to_dense();
+        assert_eq!(d.get(0, 1), 3.0);
+        assert_eq!(d.get(1, 0), 5.0);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        prop::check("spmm==dense", 15, |rng| {
+            let (r, c, f) = (1 + rng.gen_range(30), 1 + rng.gen_range(30), 1 + rng.gen_range(16));
+            let s = random_csr(rng, r, c, 0.2);
+            let h = Mat::randn(c, f, 1.0, rng);
+            let got = s.spmm(&h);
+            let want = s.to_dense().matmul(&h);
+            prop::assert_close(&got.data, &want.data, 1e-3)
+        });
+    }
+
+    #[test]
+    fn spmm_t_matches_transpose_spmm() {
+        prop::check("spmm_t==T.spmm", 15, |rng| {
+            let (r, c, f) = (1 + rng.gen_range(30), 1 + rng.gen_range(30), 1 + rng.gen_range(16));
+            let s = random_csr(rng, r, c, 0.2);
+            let m = Mat::randn(r, f, 1.0, rng);
+            let got = s.spmm_t(&m);
+            let want = s.transpose().spmm(&m);
+            prop::assert_close(&got.data, &want.data, 1e-3)
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let s = random_csr(&mut rng, 10, 7, 0.3);
+        assert_eq!(s.transpose().transpose(), s);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let s = Csr::from_triplets(3, 3, vec![(1, 1, 2.0)]);
+        let h = Mat::from_vec(3, 1, vec![1.0, 10.0, 100.0]);
+        let out = s.spmm(&h);
+        assert_eq!(out.data, vec![0.0, 20.0, 0.0]);
+    }
+
+    #[test]
+    fn zeros_matrix() {
+        let s = Csr::zeros(2, 2);
+        assert_eq!(s.nnz(), 0);
+        let h = Mat::from_vec(2, 2, vec![1.0; 4]);
+        assert_eq!(s.spmm(&h).data, vec![0.0; 4]);
+    }
+}

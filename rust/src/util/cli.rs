@@ -1,0 +1,200 @@
+//! Tiny CLI argument parser (no `clap` on this image).
+//!
+//! Grammar: `pipegcn <subcommand> [--flag value] [--flag=value] [--switch]`.
+//! Typed getters with defaults; unknown-flag detection is left to callers
+//! via [`Args::assert_known`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    args.flags
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = it.next().unwrap();
+                    args.flags.insert(stripped.to_string(), val);
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_empty() {
+                args.subcommand = tok;
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.flags
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    /// Parse a comma-separated list of usizes, e.g. `--parts 2,4,8`.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key} expects ints, got '{v}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Parse a comma-separated list of f32, e.g. `--gammas 0,0.5,0.95`.
+    pub fn get_f32_list(&self, key: &str, default: &[f32]) -> Vec<f32> {
+        match self.flags.get(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key} expects floats, got '{v}'"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error out (with a list) if any flag is not in `known`.
+    pub fn assert_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        let bad: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .collect();
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flags: {:?} (known: {:?})", bad, known)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --dataset reddit-sim --parts 4 --pipeline");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get_str("dataset", ""), "reddit-sim");
+        assert_eq!(a.get_usize("parts", 0), 4);
+        assert!(a.get_bool("pipeline", false));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --lr=0.01 --gamma=0.95");
+        assert!((a.get_f32("lr", 0.0) - 0.01).abs() < 1e-9);
+        assert!((a.get_f32("gamma", 0.0) - 0.95).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("bench --parts 2,4,8 --gammas 0,0.5");
+        assert_eq!(a.get_usize_list("parts", &[]), vec![2, 4, 8]);
+        assert_eq!(a.get_f32_list("gammas", &[]), vec![0.0, 0.5]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.get_usize("epochs", 100), 100);
+        assert_eq!(a.get_str("mode", "vanilla"), "vanilla");
+        assert!(!a.get_bool("pipeline", false));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse("partition graph.bin out.bin --parts 4");
+        assert_eq!(a.positionals, vec!["graph.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("train --typo 1");
+        assert!(a.assert_known(&["dataset"]).is_err());
+        assert!(a.assert_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("train --verbose");
+        assert!(a.get_bool("verbose", false));
+    }
+}

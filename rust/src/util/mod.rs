@@ -1,0 +1,58 @@
+//! Zero-dependency substrates: PRNG, JSON emission, CLI parsing, timing,
+//! and a small property-based testing harness.
+//!
+//! The build image vendors only `xla` + `anyhow`, so the usual crates
+//! (`rand`, `serde`, `clap`, `criterion`, `proptest`) are reimplemented
+//! here at the scale this project needs.
+
+pub mod rng;
+pub mod json;
+pub mod cli;
+pub mod timer;
+pub mod prop;
+
+/// Format a byte count human-readably (e.g. `1.50 GiB`).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} {}", b, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format seconds with adaptive precision (`1.23 s`, `45.6 ms`, `789 µs`).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(1.5), "1.500 s");
+        assert_eq!(fmt_secs(0.0123), "12.300 ms");
+        assert!(fmt_secs(1e-5).ends_with("µs"));
+    }
+}

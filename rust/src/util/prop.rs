@@ -1,0 +1,95 @@
+//! A small property-based testing harness (no `proptest` on this image).
+//!
+//! [`check`] runs a property closure against many deterministic seeds and
+//! reports the first failing seed so a failure is reproducible with
+//! `check_seed`. Used across the crate for partitioner, collective, and
+//! coordinator invariants.
+
+use super::rng::Rng;
+
+/// Result of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `iters` seeds (0..iters); panic with the failing seed
+/// and message on first failure.
+pub fn check(name: &str, iters: u64, prop: impl Fn(&mut Rng) -> PropResult) {
+    for seed in 0..iters {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (for debugging a reported failure).
+pub fn check_seed(name: &str, seed: u64, prop: impl Fn(&mut Rng) -> PropResult) {
+    let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert helper: `prop_assert!(cond, "format", args...)`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err(format!($($arg)+));
+        }
+    };
+}
+
+/// Assert two f32 slices are close within `tol` (absolute + relative).
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!(
+                "elem {i}: {x} vs {y} (|diff|={} > tol*scale={})",
+                (x - y).abs(),
+                tol * scale
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_seeds() {
+        let mut count = std::cell::Cell::new(0u64);
+        let c = &mut count;
+        check("trivial", 16, |_| {
+            c.set(c.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn close_slices_pass() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0 + 1e-6, 2.0], 1e-4).is_ok());
+    }
+
+    #[test]
+    fn distant_slices_fail() {
+        assert!(assert_close(&[1.0], &[1.1], 1e-4).is_err());
+    }
+
+    #[test]
+    fn length_mismatch_fails() {
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-4).is_err());
+    }
+}

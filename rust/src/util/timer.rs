@@ -1,0 +1,112 @@
+//! Wall-clock timing helpers and a labeled accumulator used for the
+//! epoch-time breakdowns (compute / communication / reduce).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Simple stopwatch over `Instant`.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_secs();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Accumulates named durations (seconds). Used for real-wall-clock
+/// breakdowns; the *simulated* breakdowns live in `sim::`.
+#[derive(Default, Clone, Debug)]
+pub struct TimeBreakdown {
+    buckets: BTreeMap<&'static str, f64>,
+}
+
+impl TimeBreakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, bucket: &'static str, secs: f64) {
+        *self.buckets.entry(bucket).or_insert(0.0) += secs;
+    }
+
+    /// Time `f` and charge it to `bucket`.
+    pub fn timed<T>(&mut self, bucket: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(bucket, t.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn get(&self, bucket: &str) -> f64 {
+        self.buckets.get(bucket).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.buckets.values().sum()
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (&'static str, f64)> + '_ {
+        self.buckets.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn merge(&mut self, other: &TimeBreakdown) {
+        for (k, v) in other.buckets() {
+            self.add(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = TimeBreakdown::new();
+        b.add("compute", 1.0);
+        b.add("compute", 0.5);
+        b.add("comm", 2.0);
+        assert!((b.get("compute") - 1.5).abs() < 1e-12);
+        assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_charges_bucket() {
+        let mut b = TimeBreakdown::new();
+        let v = b.timed("compute", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(b.get("compute") >= 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TimeBreakdown::new();
+        a.add("x", 1.0);
+        let mut b = TimeBreakdown::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert!((a.get("x") - 3.0).abs() < 1e-12);
+        assert!((a.get("y") - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let s = Stopwatch::start();
+        let a = s.elapsed_secs();
+        let b = s.elapsed_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: the XLA/PJRT backend (AOT JAX+Pallas artifacts) must be
+//! numerically interchangeable with the native Rust backend — per-op and
+//! across a whole training run.
+//!
+//! Requires `make artifacts`; tests skip (with a notice) if the artifact
+//! directory is absent so `cargo test` stays green pre-build.
+
+use pipegcn::coordinator::{trainer, Optimizer, TrainConfig, Variant};
+use pipegcn::graph::presets;
+use pipegcn::model::{ModelConfig, Params};
+use pipegcn::partition::{partition, Method};
+use pipegcn::runtime::{native::NativeBackend, xla::XlaBackend, Backend};
+use pipegcn::tensor::{Csr, Mat};
+use pipegcn::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: {dir}/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+fn random_prop(rng: &mut Rng, rows: usize, cols: usize, density: f32) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..rows {
+        trip.push((r as u32, r as u32, 0.3));
+        for c in 0..cols {
+            if rng.bernoulli(density) {
+                trip.push((r as u32, c as u32, rng.next_f32()));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+#[test]
+fn xla_layer_ops_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaBackend::from_artifacts(&dir).expect("load artifacts");
+    let mut native = NativeBackend::new();
+    let mut rng = Rng::new(42);
+    for &(f_in, f_out) in &xla.layer_configs().clone() {
+        for &(inner, halo) in &[(64usize, 32usize), (320, 256), (7, 3)] {
+            let prop = random_prop(&mut rng, inner, inner + halo, 0.05);
+            let h = Mat::randn(inner + halo, f_in, 1.0, &mut rng);
+            let wn = Mat::randn(f_in, f_out, 0.5, &mut rng);
+            let ws = Mat::randn(f_in, f_out, 0.5, &mut rng);
+            let px = xla.register_prop(&prop);
+            let pn = native.register_prop(&prop);
+            // forward parity
+            let fx = xla.layer_fwd(px, &h, Some(&ws), &wn);
+            let fnat = native.layer_fwd(pn, &h, Some(&ws), &wn);
+            pipegcn::util::prop::assert_close(&fx.z_agg.data, &fnat.z_agg.data, 1e-4)
+                .unwrap_or_else(|e| panic!("z ({f_in},{f_out},{inner}): {e}"));
+            pipegcn::util::prop::assert_close(&fx.pre.data, &fnat.pre.data, 1e-4)
+                .unwrap_or_else(|e| panic!("pre ({f_in},{f_out},{inner}): {e}"));
+            // backward parity
+            let m = Mat::randn(inner, f_out, 1.0, &mut rng);
+            let bx = xla.layer_bwd(px, &h, &fx.z_agg, &m, Some(&ws), &wn, true);
+            let bn = native.layer_bwd(pn, &h, &fnat.z_agg, &m, Some(&ws), &wn, true);
+            pipegcn::util::prop::assert_close(&bx.g_neigh.data, &bn.g_neigh.data, 1e-4)
+                .unwrap_or_else(|e| panic!("g_neigh: {e}"));
+            pipegcn::util::prop::assert_close(
+                &bx.g_self.as_ref().unwrap().data,
+                &bn.g_self.as_ref().unwrap().data,
+                1e-4,
+            )
+            .unwrap_or_else(|e| panic!("g_self: {e}"));
+            pipegcn::util::prop::assert_close(
+                &bx.j_full.as_ref().unwrap().data,
+                &bn.j_full.as_ref().unwrap().data,
+                1e-4,
+            )
+            .unwrap_or_else(|e| panic!("j_full: {e}"));
+        }
+    }
+}
+
+#[test]
+fn xla_gcn_mode_zero_self_weight() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut xla = XlaBackend::from_artifacts(&dir).expect("load artifacts");
+    let mut native = NativeBackend::new();
+    let mut rng = Rng::new(7);
+    let (f_in, f_out) = xla.layer_configs()[0];
+    let prop = random_prop(&mut rng, 40, 60, 0.1);
+    let h = Mat::randn(60, f_in, 1.0, &mut rng);
+    let wn = Mat::randn(f_in, f_out, 0.5, &mut rng);
+    let px = xla.register_prop(&prop);
+    let pn = native.register_prop(&prop);
+    let fx = xla.layer_fwd(px, &h, None, &wn);
+    let fnat = native.layer_fwd(pn, &h, None, &wn);
+    pipegcn::util::prop::assert_close(&fx.pre.data, &fnat.pre.data, 1e-4).unwrap();
+    let m = Mat::randn(40, f_out, 1.0, &mut rng);
+    let bx = xla.layer_bwd(px, &h, &fx.z_agg, &m, None, &wn, true);
+    assert!(bx.g_self.is_none());
+}
+
+/// Whole-training parity: the tiny preset trained end-to-end through the
+/// XLA backend must match the native backend loss curve (same seeds, SGD
+/// to avoid Adam's noise amplification) and reach the same accuracy.
+#[test]
+fn xla_training_run_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let p = presets::by_name("tiny").unwrap();
+    let g = p.build(42);
+    let pt = partition(&g, 2, Method::Multilevel, 1);
+    let cfg = TrainConfig {
+        model: ModelConfig::sage(g.feat_dim(), 32, 2, g.labels.n_classes(), 0.0),
+        variant: Variant::Vanilla,
+        optimizer: Optimizer::Sgd,
+        lr: 0.05,
+        epochs: 5,
+        seed: 9,
+        eval_every: 0,
+        probe_errors: false,
+    };
+    let mut nat = NativeBackend::new();
+    let r_native = trainer::train(&g, &pt, &cfg, &mut nat);
+    let mut xla = XlaBackend::from_artifacts(&dir).expect("load artifacts");
+    let r_xla = trainer::train(&g, &pt, &cfg, &mut xla);
+    for (a, b) in r_native.curve.iter().zip(&r_xla.curve) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 1e-3,
+            "epoch {}: native {} vs xla {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+}
+
+/// Params must be shape-compatible with the quickstart artifacts.
+#[test]
+fn artifact_manifest_covers_tiny_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = XlaBackend::from_artifacts(&dir).expect("load artifacts");
+    let p = presets::by_name("tiny").unwrap();
+    let cfg = ModelConfig::sage(p.feat_dim, p.hidden, p.layers, p.n_classes, 0.0);
+    let mut rng = Rng::new(1);
+    let params = Params::init(&cfg, &mut rng);
+    let configs = xla.layer_configs();
+    for lp in &params.layers {
+        assert!(
+            configs.contains(&(lp.w_neigh.rows, lp.w_neigh.cols)),
+            "missing artifact for ({}, {})",
+            lp.w_neigh.rows,
+            lp.w_neigh.cols
+        );
+    }
+}
