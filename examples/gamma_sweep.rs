@@ -10,7 +10,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::io::append_csv;
 use pipegcn::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let epochs = args.get_usize("epochs", 60);
     let gammas = args.get_f32_list("gammas", &[0.0, 0.5, 0.7, 0.95]);

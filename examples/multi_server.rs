@@ -11,7 +11,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let epochs = args.get_usize("epochs", 40);
     let grids: &[(usize, usize)] =

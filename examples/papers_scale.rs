@@ -14,7 +14,7 @@ use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::cli::Args;
 use pipegcn::util::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let epochs = args.get_usize("epochs", 30);
     let (profile, topo) = rig_mi60(4, 8);

@@ -11,6 +11,21 @@
 //! ```text
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! For genuinely distributed training (one OS process per partition over
+//! real localhost TCP sockets — the `net` subsystem), use the CLI:
+//!
+//! ```text
+//! cargo run --release -- launch --parts 4 --dataset reddit-sim --epochs 3
+//! ```
+//!
+//! `launch` binds a rendezvous port, spawns `--parts` children running
+//! `pipegcn worker --rank R --parts K --coord HOST:PORT ...`, and waits.
+//! Each worker rebuilds the dataset/partition deterministically from the
+//! shared seed, joins the all-to-all socket mesh, and trains; rank 0
+//! gathers losses and reports (`--out results.json`, `--log run.ndjson`).
+//! The loss curve is bit-identical to `pipegcn train` on the same flags
+//! (staleness lives in message tags, not timing).
 
 use pipegcn::coordinator::{trainer, Optimizer, PipeOpts, TrainConfig, Variant};
 use pipegcn::graph::presets;
@@ -20,7 +35,7 @@ use pipegcn::runtime::{native::NativeBackend, xla::XlaBackend, Backend};
 use pipegcn::sim::Mode;
 use pipegcn::util::{fmt_bytes, fmt_secs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let preset = presets::by_name("tiny").unwrap();
     let epochs = 40;
     println!("== PipeGCN quickstart ==");
@@ -37,15 +52,21 @@ fn main() -> anyhow::Result<()> {
         q.edge_cut, q.comm_volume, q.balance
     );
 
-    // Backend: AOT XLA artifacts if built, else native with a notice.
+    // Backend: AOT XLA artifacts if built AND the xla feature is compiled
+    // in (the default build ships a stub backend), else native with a
+    // notice.
     let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let use_xla = std::path::Path::new(&format!("{artifacts}/manifest.json")).exists();
+    let use_xla = cfg!(feature = "xla")
+        && std::path::Path::new(&format!("{artifacts}/manifest.json")).exists();
     let make_backend = || -> Box<dyn Backend> {
         if use_xla {
             let b = XlaBackend::from_artifacts(&artifacts).expect("loading artifacts");
             Box::new(b)
         } else {
-            eprintln!("NOTE: artifacts/ missing — run `make artifacts` for the XLA path; using native backend");
+            eprintln!(
+                "NOTE: artifacts missing or `xla` feature off — run `make artifacts` and \
+                 build with --features xla for the XLA path; using native backend"
+            );
             Box::new(NativeBackend::new())
         }
     };

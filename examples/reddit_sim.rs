@@ -12,7 +12,7 @@ use pipegcn::graph::io::append_csv;
 use pipegcn::sim::Mode;
 use pipegcn::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let epochs = args.get_usize("epochs", 60);
     let parts_list = args.get_usize_list("parts", &[2, 4]);

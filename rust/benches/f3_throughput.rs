@@ -10,7 +10,7 @@ use pipegcn::partition::quality;
 use pipegcn::sim::{profiles::rig_2080ti, Mode};
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     println!("== Fig. 3: throughput (simulated epochs/s, Reddit-scale) ==");
     println!(
         "{:<7} {:>9} {:>12} {:>9} {:>9} | {:>12} {:>12}",

@@ -7,7 +7,7 @@
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::io::append_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let cases: &[(&str, usize, &str)] = &[
         ("reddit-sim", 2, "fig4"),
         ("products-sim", 10, "fig4"),

@@ -8,7 +8,7 @@
 use pipegcn::coordinator::{trainer, Optimizer, TrainConfig, Variant};
 use pipegcn::graph::io::append_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let epochs = 60;
     println!("== Fig. 5: staleness errors per layer (reddit-sim, 2 partitions) ==");
     std::fs::remove_file("results/f5_errors.csv").ok();

@@ -8,7 +8,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::io::append_csv;
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let gammas = [0.0f32, 0.5, 0.7, 0.95];
     println!("== Fig. 6: γ sweep convergence (products-sim, 10 partitions) ==");
     println!("{:>6} {:>12} {:>12} {:>12}", "γ", "best test", "final test", "overfit Δ");

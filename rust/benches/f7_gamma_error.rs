@@ -7,7 +7,7 @@
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::io::append_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let gammas = [0.0f32, 0.5, 0.95];
     let epochs = 40;
     println!("== Fig. 7: per-layer errors vs γ (products-sim, 10 partitions) ==");

@@ -10,7 +10,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let cases: &[(&str, usize)] = &[
         ("reddit-sim", 2),
         ("reddit-sim", 4),

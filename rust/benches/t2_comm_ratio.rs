@@ -7,7 +7,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let cases: &[(&str, usize, f64)] = &[
         ("reddit-sim", 2, 65.83),
         ("reddit-sim", 4, 82.89),

@@ -8,7 +8,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let cases: &[(&str, usize)] = &[
         ("reddit-sim", 2),

@@ -9,7 +9,7 @@ use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::fmt_secs;
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let (profile, topo) = rig_mi60(4, 8);
     let parts = 32;
     let paper: &[(&str, f64, f64)] =

@@ -25,7 +25,7 @@ fn row(name: &str, b: &EpochBreakdown, paper: (f64, f64, f64, f64)) -> Json {
         .set("paper_reduce", paper.3)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     println!("== Table 6: epoch time breakdown, Reddit-scale (seconds) ==");
     let mut rows = Vec::new();
     for gpus in [2usize, 4] {

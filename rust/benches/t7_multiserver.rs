@@ -9,7 +9,7 @@ use pipegcn::exp::{self, RunOpts};
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> pipegcn::util::error::Result<()> {
     let grids: &[(usize, usize)] = &[
         (1, 2),
         (1, 3),

@@ -1,10 +1,19 @@
 //! Communication fabric for partition-parallel training.
 //!
-//! [`Fabric`] is an in-process message-passing layer with per-pair byte
-//! accounting. The sequential trainer and the threaded runner both speak
-//! through it, so every experiment gets exact communication volumes
-//! "for free"; those byte counts feed the [`crate::sim`] link model to
-//! estimate what the same schedule costs on the paper's testbeds.
+//! [`Transport`] is the message-passing contract the training schedule is
+//! written against: tagged sends, blocking tagged receives, and per-rank
+//! byte accounting. Two implementations exist:
+//!
+//! * [`Fabric`] (here) — an in-process mailbox with per-pair byte
+//!   accounting, shared by every rank of a sequential or threaded run.
+//!   Experiments get exact communication volumes "for free"; those byte
+//!   counts feed the [`crate::sim`] link model to estimate what the same
+//!   schedule costs on the paper's testbeds.
+//! * [`crate::net::TcpTransport`] — real length-prefixed frames over
+//!   localhost TCP sockets, one instance per OS process (one rank each).
+//!
+//! Staleness is encoded in [`Tag`]s, so the same schedule is
+//! deterministic over either transport.
 
 pub mod allreduce;
 pub mod topology;
@@ -36,10 +45,108 @@ pub struct Tag {
     pub phase: Phase,
 }
 
+impl Phase {
+    /// Stable wire encoding (used by `net::frame`).
+    pub fn code(self) -> u8 {
+        match self {
+            Phase::FwdFeat => 0,
+            Phase::BwdGrad => 1,
+            Phase::Reduce => 2,
+            Phase::Setup => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Phase> {
+        match c {
+            0 => Some(Phase::FwdFeat),
+            1 => Some(Phase::BwdGrad),
+            2 => Some(Phase::Reduce),
+            3 => Some(Phase::Setup),
+            _ => None,
+        }
+    }
+}
+
 impl Tag {
     pub fn new(iter: u32, layer: u16, phase: Phase) -> Tag {
         Tag { iter, layer, phase }
     }
+}
+
+/// The message-passing contract the training schedule runs over,
+/// extracted from the [`Fabric`] API: tagged f32 payloads between ranks,
+/// FIFO per (src, dst, tag), with per-rank payload-byte accounting.
+///
+/// A shared implementation ([`Fabric`]) serves every rank of an
+/// in-process run; a per-process implementation
+/// ([`crate::net::TcpTransport`]) serves exactly one rank and may panic
+/// if asked to send as (or receive for) a rank it does not own.
+pub trait Transport: Send + Sync {
+    fn n_ranks(&self) -> usize;
+
+    /// Send `payload` from `src` to `dst` under `tag`. Never blocks on
+    /// the consumer (queued in-process, or handed to a writer thread).
+    fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>);
+
+    /// Blocking receive of the oldest (src → dst, tag) message.
+    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32>;
+
+    /// Total payload bytes rank `src` has sent so far (4 bytes per f32;
+    /// framing overhead excluded so volumes are comparable across
+    /// transports).
+    fn bytes_sent(&self, src: usize) -> u64;
+}
+
+impl Transport for Fabric {
+    fn n_ranks(&self) -> usize {
+        Fabric::n_ranks(self)
+    }
+
+    fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        Fabric::send(self, src, dst, tag, payload)
+    }
+
+    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        Fabric::recv_blocking(self, src, dst, tag)
+    }
+
+    fn bytes_sent(&self, src: usize) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.bytes[src].iter().sum()
+    }
+}
+
+/// Pack `u32` values (node ids, control words) into the f32 payload
+/// channel bit-for-bit. No float arithmetic ever touches payloads in
+/// transit (both transports move raw bit patterns), so this is lossless
+/// even for patterns that alias NaNs.
+pub fn encode_u32s(vals: &[u32]) -> Vec<f32> {
+    vals.iter().map(|&v| f32::from_bits(v)).collect()
+}
+
+pub fn decode_u32s(payload: &[f32]) -> Vec<u32> {
+    payload.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Pack `f64` values (loss curves) into the f32 payload channel as two
+/// bit-halves each — lossless, so cross-process loss aggregation stays
+/// bit-identical to the in-process engines.
+pub fn encode_f64s(vals: &[f64]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(vals.len() * 2);
+    for &v in vals {
+        let bits = v.to_bits();
+        out.push(f32::from_bits((bits >> 32) as u32));
+        out.push(f32::from_bits(bits as u32));
+    }
+    out
+}
+
+pub fn decode_f64s(payload: &[f32]) -> Vec<f64> {
+    assert_eq!(payload.len() % 2, 0, "f64 payload must have even length");
+    payload
+        .chunks_exact(2)
+        .map(|c| f64::from_bits(((c[0].to_bits() as u64) << 32) | c[1].to_bits() as u64))
+        .collect()
 }
 
 #[derive(Default)]
@@ -222,5 +329,40 @@ mod tests {
     fn recv_now_panics_when_empty() {
         let f = Fabric::new(2);
         f.recv_now(0, 1, Tag::new(0, 0, Phase::FwdFeat));
+    }
+
+    #[test]
+    fn u32_payload_roundtrip_including_nan_patterns() {
+        let vals = vec![0, 1, 0x7FC0_0001, u32::MAX, 0x8000_0000];
+        assert_eq!(decode_u32s(&encode_u32s(&vals)), vals);
+    }
+
+    #[test]
+    fn f64_payload_roundtrip_is_bit_exact() {
+        let vals = vec![0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, 6.02214076e23, -1.5e-300];
+        let back = decode_f64s(&encode_f64s(&vals));
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn phase_codes_roundtrip() {
+        for p in [Phase::FwdFeat, Phase::BwdGrad, Phase::Reduce, Phase::Setup] {
+            assert_eq!(Phase::from_code(p.code()), Some(p));
+        }
+        assert_eq!(Phase::from_code(9), None);
+    }
+
+    #[test]
+    fn fabric_implements_transport() {
+        let f = Fabric::new(2);
+        let t: &dyn Transport = &f;
+        let tag = Tag::new(3, 1, Phase::FwdFeat);
+        t.send(0, 1, tag, vec![1.0, 2.0]);
+        assert_eq!(t.recv_blocking(0, 1, tag), vec![1.0, 2.0]);
+        assert_eq!(t.bytes_sent(0), 8);
+        assert_eq!(t.bytes_sent(1), 0);
+        assert_eq!(t.n_ranks(), 2);
     }
 }

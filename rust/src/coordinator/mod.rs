@@ -6,9 +6,11 @@
 //!   "GCN") and **PipeGCN** (one-iteration-stale boundary features and
 //!   feature gradients, Eq. 3/4) with the §3.4 smoothing variants
 //!   (-G / -F / -GF).
-//! * [`threaded`] — the same schedule on real threads with blocking
-//!   receives, demonstrating the concurrent exchange; numerics match the
-//!   sequential engine exactly.
+//! * [`threaded`] — the transport-generic per-rank schedule
+//!   ([`threaded::run_rank`]): on real threads over the in-process
+//!   fabric ([`threaded::train_threaded`]), or one OS process per rank
+//!   over [`crate::net::TcpTransport`] (`pipegcn launch`). Numerics
+//!   match the sequential engine exactly in every case.
 //!
 //! Numeric fidelity notes are in DESIGN.md §4.
 
@@ -125,6 +127,10 @@ pub struct EpochStat {
     /// val metric (accuracy or micro-F1), NaN when not evaluated
     pub val: f64,
     pub test: f64,
+    /// wall time of this epoch (training only, eval excluded)
+    pub epoch_ms: f64,
+    /// payload bytes moved through the fabric during this epoch
+    pub comm_bytes: u64,
 }
 
 /// Staleness error probe (Fig. 5/7): Frobenius norms of the gap between
@@ -157,6 +163,9 @@ pub struct TrainResult {
     pub model_elems: usize,
     /// fabric bytes moved in one steady-state epoch
     pub comm_bytes_epoch: u64,
+    /// one-time Setup-phase bytes (boundary-set exchange) — counted so
+    /// simulated volumes match what a real transport puts on the wire
+    pub setup_bytes: u64,
     pub probes: Vec<ErrorProbe>,
     /// all-reduced model gradient of the final iteration (diagnostics /
     /// equivalence tests)

@@ -1,19 +1,26 @@
-//! Threaded runner: the same training schedule as
-//! [`super::trainer::train`], but with one OS thread per partition and
-//! genuinely concurrent boundary exchange through the fabric's blocking
-//! receives — the shape a real deployment takes (one process per GPU).
+//! Transport-generic per-rank runner + the threaded engine.
 //!
-//! On this 1-core testbed it demonstrates *correctness* of the concurrent
-//! schedule, not speedup: the integration test asserts the loss curve is
+//! [`run_rank`] is one rank's complete training schedule — the same
+//! dataflow as [`super::trainer::train`] — written against the
+//! [`Transport`] contract, so the identical code drives:
+//!
+//! * [`train_threaded`]: one OS thread per partition over the in-process
+//!   [`Fabric`] (concurrent blocking receives, single process), and
+//! * the multi-process engine: one OS process per partition over
+//!   [`crate::net::TcpTransport`] (real localhost sockets), launched by
+//!   `pipegcn launch` / driven by [`crate::net::worker`].
+//!
+//! On a 1-core testbed these demonstrate *correctness* of the concurrent
+//! schedule, not speedup: the integration tests assert the loss curve is
 //! identical to the sequential engine (the dataflow is deterministic —
-//! staleness is encoded in message tags, not timing).
+//! staleness is encoded in message tags, not timing luck).
 //!
 //! Scope: no probes / work capture (the sequential engine owns those);
 //! evaluation only at the end.
 
-use super::halo::{self, PlanLabels};
+use super::halo::{self, HaloPlan, PlanLabels};
 use super::{TrainConfig, Variant};
-use crate::comm::{Fabric, Phase, Tag};
+use crate::comm::{decode_u32s, encode_u32s, Fabric, Phase, Tag, Transport};
 use crate::graph::Graph;
 use crate::model::{adam::Adam, Params};
 use crate::partition::Partitioning;
@@ -30,10 +37,18 @@ pub struct ThreadedResult {
     pub params: Params,
     pub final_val: f64,
     pub final_test: f64,
+    /// total payload bytes through the fabric (setup + all epochs)
+    pub comm_bytes: u64,
 }
 
-/// Per-rank ring all-reduce through the fabric (blocking receives).
-fn ring_allreduce_rank(fabric: &Fabric, rank: usize, n: usize, buf: &mut [f32], iter: u32) {
+/// Per-rank ring all-reduce over any transport (blocking receives).
+fn ring_allreduce_rank(
+    transport: &dyn Transport,
+    rank: usize,
+    n: usize,
+    buf: &mut [f32],
+    iter: u32,
+) {
     if n <= 1 || buf.is_empty() {
         return;
     }
@@ -45,10 +60,10 @@ fn ring_allreduce_rank(fabric: &Fabric, rank: usize, n: usize, buf: &mut [f32], 
     for s in 0..n - 1 {
         let c_send = (rank + n - s) % n;
         let tag_s = Tag::new(iter, (s * n + c_send) as u16, Phase::Reduce);
-        fabric.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
+        transport.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + n - s) % n;
         let tag_r = Tag::new(iter, (s * n + c_recv) as u16, Phase::Reduce);
-        let recv = fabric.recv_blocking(prev, rank, tag_r);
+        let recv = transport.recv_blocking(prev, rank, tag_r);
         for (d, v) in buf[chunk(c_recv)].iter_mut().zip(recv) {
             *d += v;
         }
@@ -56,26 +71,283 @@ fn ring_allreduce_rank(fabric: &Fabric, rank: usize, n: usize, buf: &mut [f32], 
     for s in 0..n - 1 {
         let c_send = (rank + 1 + n - s) % n;
         let tag_s = Tag::new(iter, ((n + s) * n + c_send) as u16, Phase::Reduce);
-        fabric.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
+        transport.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + 1 + n - s) % n;
         let tag_r = Tag::new(iter, ((n + s) * n + c_recv) as u16, Phase::Reduce);
-        let recv = fabric.recv_blocking(prev, rank, tag_r);
+        let recv = transport.recv_blocking(prev, rank, tag_r);
         buf[chunk(c_recv)].copy_from_slice(&recv);
     }
 }
 
-/// Train with one thread per partition. Numerics match
-/// [`super::trainer::train`] exactly (same seeds ⇒ same parameters).
-pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
-    let plan = Arc::new(halo::build(g, pt, cfg.model.kind));
+/// The Setup-phase tag of the boundary-set exchange.
+fn setup_tag() -> Tag {
+    Tag::new(0, 0, Phase::Setup)
+}
+
+/// Send half of the boundary-set exchange (`Phase::Setup`, Alg. 1
+/// lines 1–5 made real): ship each peer the global ids of the halo rows
+/// `rank` needs from it. Moving this through the transport makes byte
+/// accounting include the setup traffic a real wire sees.
+pub fn setup_send(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
+    let p = &plan.parts[rank];
+    for j in 0..plan.n_parts {
+        let range = p.halo_ranges[j].clone();
+        if j != rank && !range.is_empty() {
+            transport.send(rank, j, setup_tag(), encode_u32s(&p.halo[range]));
+        }
+    }
+}
+
+/// Verify half: receive each peer's request and check it matches the
+/// plan's send set — this is what establishes `S_{i,j}` on a real
+/// deployment, and over TCP it validates the mesh wiring before any
+/// tensor moves.
+pub fn setup_verify(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
+    let p = &plan.parts[rank];
+    for j in 0..plan.n_parts {
+        if j != rank && !p.send_sets[j].is_empty() {
+            let ids = decode_u32s(&transport.recv_blocking(j, rank, setup_tag()));
+            let want: Vec<u32> =
+                p.send_sets[j].iter().map(|&li| p.inner[li as usize]).collect();
+            assert_eq!(
+                ids, want,
+                "rank {rank}: peer {j} requested a different boundary set"
+            );
+        }
+    }
+}
+
+/// Full per-rank boundary-set exchange (concurrent engines: every rank
+/// runs send-then-verify; sends never block, so this cannot deadlock).
+pub fn setup_exchange(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
+    setup_send(transport, plan, rank);
+    setup_verify(transport, plan, rank);
+}
+
+/// Run rank `rank`'s full training schedule over `transport`. Numerics
+/// match [`super::trainer::train`] exactly (same seeds ⇒ same
+/// parameters); returns the rank's per-epoch *partial* losses (sum
+/// across ranks = global loss) and its final parameter copy (identical
+/// on every rank).
+pub fn run_rank(
+    transport: &dyn Transport,
+    plan: &HaloPlan,
+    rank: usize,
+    cfg: &TrainConfig,
+) -> (Vec<f64>, Params) {
     let k = plan.n_parts;
+    assert_eq!(transport.n_ranks(), k);
     let n_layers = cfg.model.n_layers();
     let dims = cfg.model.dims.clone();
-    let fabric = Arc::new(Fabric::new(k));
     let (pipe, opts) = match cfg.variant {
         Variant::Vanilla => (false, super::PipeOpts::plain()),
         Variant::Pipe(o) => (true, o),
     };
+    let p = &plan.parts[rank];
+
+    setup_exchange(transport, plan, rank);
+
+    let mut backend = NativeBackend::new();
+    let prop_id = backend.register_prop(&p.prop);
+    let mut rng = crate::util::rng::Rng::new(cfg.seed);
+    let mut params = Params::init(&cfg.model, &mut rng);
+    let mut flat = params.flatten();
+    let mut adam = Adam::new(cfg.lr, flat.len());
+    let dropout = cfg.model.dropout;
+    let total_train = plan.total_train.max(1) as f64;
+    // stale buffers
+    let mut feat_buf: Vec<Mat> =
+        (0..n_layers).map(|l| Mat::zeros(p.halo.len(), dims[l])).collect();
+    let mut grad_buf: Vec<Mat> =
+        (0..n_layers).map(|l| Mat::zeros(p.n_inner(), dims[l])).collect();
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    for t in 1..=cfg.epochs {
+        // ---- forward ----
+        let mut h_src: Vec<Mat> = vec![p.features.clone()];
+        let mut h_full_c: Vec<Mat> = Vec::new();
+        let mut masks: Vec<Option<Mat>> = Vec::new();
+        let mut z_aggs: Vec<Mat> = Vec::new();
+        let mut pres: Vec<Mat> = Vec::new();
+        for l in 0..n_layers {
+            let f_in = dims[l];
+            for j in 0..k {
+                if j != rank && !p.send_sets[j].is_empty() {
+                    transport.send(
+                        rank,
+                        j,
+                        Tag::new(t as u32, l as u16, Phase::FwdFeat),
+                        p.gather_send(j, &h_src[l]),
+                    );
+                }
+            }
+            let halo_mat = if !pipe {
+                let mut m = Mat::zeros(p.halo.len(), f_in);
+                for j in 0..k {
+                    let range = p.halo_ranges[j].clone();
+                    if !range.is_empty() {
+                        let payload = transport.recv_blocking(
+                            j,
+                            rank,
+                            Tag::new(t as u32, l as u16, Phase::FwdFeat),
+                        );
+                        let cols = m.cols;
+                        m.data[range.start * cols..range.start * cols + payload.len()]
+                            .copy_from_slice(&payload);
+                    }
+                }
+                m
+            } else {
+                let used = feat_buf[l].clone();
+                let mut fresh = Mat::zeros(p.halo.len(), f_in);
+                for j in 0..k {
+                    let range = p.halo_ranges[j].clone();
+                    if !range.is_empty() {
+                        let payload = transport.recv_blocking(
+                            j,
+                            rank,
+                            Tag::new(t as u32, l as u16, Phase::FwdFeat),
+                        );
+                        let cols = fresh.cols;
+                        fresh.data[range.start * cols..range.start * cols + payload.len()]
+                            .copy_from_slice(&payload);
+                    }
+                }
+                if opts.smooth_feat && t > 1 {
+                    feat_buf[l].scale(opts.gamma);
+                    feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                } else {
+                    feat_buf[l] = fresh;
+                }
+                used
+            };
+            let assembled = h_src[l].vcat(&halo_mat);
+            let (hf, mask) = if dropout > 0.0 {
+                let mut r = super::trainer::dropout_rng(cfg.seed, t, rank, l);
+                let m = ops::dropout_mask(assembled.rows, assembled.cols, dropout, &mut r);
+                (ops::hadamard(&assembled, &m), Some(m))
+            } else {
+                (assembled, None)
+            };
+            let lp = &params.layers[l];
+            let out = backend.layer_fwd(prop_id, &hf, lp.w_self.as_ref(), &lp.w_neigh);
+            let h_next = if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre.clone() };
+            h_full_c.push(hf);
+            masks.push(mask);
+            z_aggs.push(out.z_agg);
+            pres.push(out.pre);
+            h_src.push(h_next);
+        }
+        // ---- loss ----
+        let logits = &pres[n_layers - 1];
+        let local = p.train_mask.len() as f64;
+        let (loss_i, mut j_cur) = match &p.labels {
+            PlanLabels::Single(labels) => ops::softmax_xent(logits, labels, &p.train_mask),
+            PlanLabels::Multi(targets) => ops::sigmoid_bce(logits, targets, &p.train_mask),
+        };
+        j_cur.scale((local / total_train) as f32);
+        losses.push(loss_i * local / total_train);
+        // ---- backward ----
+        let mut grads = params.zeros_like();
+        for l in (0..n_layers).rev() {
+            let f_in = dims[l];
+            let mut m = j_cur.clone();
+            if l + 1 < n_layers {
+                ops::relu_grad_inplace(&mut m, &pres[l]);
+            }
+            let lp = &params.layers[l];
+            let bwd = backend.layer_bwd(
+                prop_id,
+                &h_full_c[l],
+                &z_aggs[l],
+                &m,
+                lp.w_self.as_ref(),
+                &lp.w_neigh,
+                l > 0,
+            );
+            grads.layers[l].w_neigh = bwd.g_neigh;
+            if let Some(gs) = bwd.g_self {
+                grads.layers[l].w_self = Some(gs);
+            }
+            if l > 0 {
+                let mut j_full = bwd.j_full.unwrap();
+                if let Some(mask) = &masks[l] {
+                    j_full = ops::hadamard(&j_full, mask);
+                }
+                let n_inner = p.n_inner();
+                for j in 0..k {
+                    let range = p.halo_ranges[j].clone();
+                    if !range.is_empty() {
+                        let payload = j_full.data
+                            [(n_inner + range.start) * f_in..(n_inner + range.end) * f_in]
+                            .to_vec();
+                        transport.send(
+                            rank,
+                            j,
+                            Tag::new(t as u32, l as u16, Phase::BwdGrad),
+                            payload,
+                        );
+                    }
+                }
+                let mut jg = j_full.rows_range(0, n_inner);
+                let recv_into = |dst: &mut Mat| {
+                    for j in 0..k {
+                        if j != rank && !p.send_sets[j].is_empty() {
+                            let payload = transport.recv_blocking(
+                                j,
+                                rank,
+                                Tag::new(t as u32, l as u16, Phase::BwdGrad),
+                            );
+                            let cols = dst.cols;
+                            for (r, chunk) in
+                                p.send_sets[j].iter().zip(payload.chunks_exact(cols))
+                            {
+                                let row = dst.row_mut(*r as usize);
+                                for (d, &s) in row.iter_mut().zip(chunk) {
+                                    *d += s;
+                                }
+                            }
+                        }
+                    }
+                };
+                if !pipe {
+                    recv_into(&mut jg);
+                } else {
+                    jg.add_assign(&grad_buf[l]);
+                    let mut fresh = Mat::zeros(n_inner, f_in);
+                    recv_into(&mut fresh);
+                    if opts.smooth_grad && t > 1 {
+                        grad_buf[l].scale(opts.gamma);
+                        grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                    } else {
+                        grad_buf[l] = fresh;
+                    }
+                }
+                j_cur = jg;
+            }
+        }
+        // ---- all-reduce + update (replicated Adam) ----
+        let mut gbuf = grads.flatten();
+        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32);
+        match cfg.optimizer {
+            super::Optimizer::Adam => adam.step(&mut flat, &gbuf),
+            super::Optimizer::Sgd => {
+                for (pv, gv) in flat.iter_mut().zip(&gbuf) {
+                    *pv -= cfg.lr * *gv;
+                }
+            }
+        }
+        params.unflatten(&flat);
+    }
+    (losses, params)
+}
+
+/// Train with one thread per partition over the in-process [`Fabric`].
+/// Numerics match [`super::trainer::train`] exactly (same seeds ⇒ same
+/// parameters).
+pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
+    let plan = Arc::new(halo::build(g, pt, cfg.model.kind));
+    let k = plan.n_parts;
+    let fabric = Arc::new(Fabric::new(k));
     let cfg = Arc::new(cfg.clone());
 
     let mut handles = Vec::new();
@@ -83,211 +355,16 @@ pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> Thread
         let plan = plan.clone();
         let fabric = fabric.clone();
         let cfg = cfg.clone();
-        let dims = dims.clone();
         handles.push(std::thread::spawn(move || {
-            let p = &plan.parts[rank];
-            let mut backend = NativeBackend::new();
-            let prop_id = backend.register_prop(&p.prop);
-            let mut rng = crate::util::rng::Rng::new(cfg.seed);
-            let mut params = Params::init(&cfg.model, &mut rng);
-            let mut flat = params.flatten();
-            let mut adam = Adam::new(cfg.lr, flat.len());
-            let dropout = cfg.model.dropout;
-            let total_train = plan.total_train.max(1) as f64;
-            // stale buffers
-            let mut feat_buf: Vec<Mat> =
-                (0..n_layers).map(|l| Mat::zeros(p.halo.len(), dims[l])).collect();
-            let mut grad_buf: Vec<Mat> =
-                (0..n_layers).map(|l| Mat::zeros(p.n_inner(), dims[l])).collect();
-            let mut losses = Vec::with_capacity(cfg.epochs);
-            for t in 1..=cfg.epochs {
-                // ---- forward ----
-                let mut h_src: Vec<Mat> = vec![p.features.clone()];
-                let mut h_full_c: Vec<Mat> = Vec::new();
-                let mut masks: Vec<Option<Mat>> = Vec::new();
-                let mut z_aggs: Vec<Mat> = Vec::new();
-                let mut pres: Vec<Mat> = Vec::new();
-                for l in 0..n_layers {
-                    let f_in = dims[l];
-                    for j in 0..k {
-                        if j != rank && !p.send_sets[j].is_empty() {
-                            fabric.send(
-                                rank,
-                                j,
-                                Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                                p.gather_send(j, &h_src[l]),
-                            );
-                        }
-                    }
-                    let halo_mat = if !pipe {
-                        let mut m = Mat::zeros(p.halo.len(), f_in);
-                        for j in 0..k {
-                            let range = p.halo_ranges[j].clone();
-                            if !range.is_empty() {
-                                let payload = fabric.recv_blocking(
-                                    j,
-                                    rank,
-                                    Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                                );
-                                let cols = m.cols;
-                                m.data[range.start * cols..range.start * cols + payload.len()]
-                                    .copy_from_slice(&payload);
-                            }
-                        }
-                        m
-                    } else {
-                        let used = feat_buf[l].clone();
-                        let mut fresh = Mat::zeros(p.halo.len(), f_in);
-                        for j in 0..k {
-                            let range = p.halo_ranges[j].clone();
-                            if !range.is_empty() {
-                                let payload = fabric.recv_blocking(
-                                    j,
-                                    rank,
-                                    Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                                );
-                                let cols = fresh.cols;
-                                fresh.data
-                                    [range.start * cols..range.start * cols + payload.len()]
-                                    .copy_from_slice(&payload);
-                            }
-                        }
-                        if opts.smooth_feat && t > 1 {
-                            feat_buf[l].scale(opts.gamma);
-                            feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
-                        } else {
-                            feat_buf[l] = fresh;
-                        }
-                        used
-                    };
-                    let assembled = h_src[l].vcat(&halo_mat);
-                    let (hf, mask) = if dropout > 0.0 {
-                        let mut r = super::trainer::dropout_rng(cfg.seed, t, rank, l);
-                        let m =
-                            ops::dropout_mask(assembled.rows, assembled.cols, dropout, &mut r);
-                        (ops::hadamard(&assembled, &m), Some(m))
-                    } else {
-                        (assembled, None)
-                    };
-                    let lp = &params.layers[l];
-                    let out = backend.layer_fwd(prop_id, &hf, lp.w_self.as_ref(), &lp.w_neigh);
-                    let h_next =
-                        if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre.clone() };
-                    h_full_c.push(hf);
-                    masks.push(mask);
-                    z_aggs.push(out.z_agg);
-                    pres.push(out.pre);
-                    h_src.push(h_next);
-                }
-                // ---- loss ----
-                let logits = &pres[n_layers - 1];
-                let local = p.train_mask.len() as f64;
-                let (loss_i, mut j_cur) = match &p.labels {
-                    PlanLabels::Single(labels) => ops::softmax_xent(logits, labels, &p.train_mask),
-                    PlanLabels::Multi(targets) => ops::sigmoid_bce(logits, targets, &p.train_mask),
-                };
-                j_cur.scale((local / total_train) as f32);
-                losses.push(loss_i * local / total_train);
-                // ---- backward ----
-                let mut grads = params.zeros_like();
-                for l in (0..n_layers).rev() {
-                    let f_in = dims[l];
-                    let mut m = j_cur.clone();
-                    if l + 1 < n_layers {
-                        ops::relu_grad_inplace(&mut m, &pres[l]);
-                    }
-                    let lp = &params.layers[l];
-                    let bwd = backend.layer_bwd(
-                        prop_id,
-                        &h_full_c[l],
-                        &z_aggs[l],
-                        &m,
-                        lp.w_self.as_ref(),
-                        &lp.w_neigh,
-                        l > 0,
-                    );
-                    grads.layers[l].w_neigh = bwd.g_neigh;
-                    if let Some(gs) = bwd.g_self {
-                        grads.layers[l].w_self = Some(gs);
-                    }
-                    if l > 0 {
-                        let mut j_full = bwd.j_full.unwrap();
-                        if let Some(mask) = &masks[l] {
-                            j_full = ops::hadamard(&j_full, mask);
-                        }
-                        let n_inner = p.n_inner();
-                        for j in 0..k {
-                            let range = p.halo_ranges[j].clone();
-                            if !range.is_empty() {
-                                let payload = j_full.data[(n_inner + range.start) * f_in
-                                    ..(n_inner + range.end) * f_in]
-                                    .to_vec();
-                                fabric.send(
-                                    rank,
-                                    j,
-                                    Tag::new(t as u32, l as u16, Phase::BwdGrad),
-                                    payload,
-                                );
-                            }
-                        }
-                        let mut jg = j_full.rows_range(0, n_inner);
-                        let recv_into = |dst: &mut Mat| {
-                            for j in 0..k {
-                                if j != rank && !p.send_sets[j].is_empty() {
-                                    let payload = fabric.recv_blocking(
-                                        j,
-                                        rank,
-                                        Tag::new(t as u32, l as u16, Phase::BwdGrad),
-                                    );
-                                    let cols = dst.cols;
-                                    for (r, chunk) in
-                                        p.send_sets[j].iter().zip(payload.chunks_exact(cols))
-                                    {
-                                        let row = dst.row_mut(*r as usize);
-                                        for (d, &s) in row.iter_mut().zip(chunk) {
-                                            *d += s;
-                                        }
-                                    }
-                                }
-                            }
-                        };
-                        if !pipe {
-                            recv_into(&mut jg);
-                        } else {
-                            jg.add_assign(&grad_buf[l]);
-                            let mut fresh = Mat::zeros(n_inner, f_in);
-                            recv_into(&mut fresh);
-                            if opts.smooth_grad && t > 1 {
-                                grad_buf[l].scale(opts.gamma);
-                                grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
-                            } else {
-                                grad_buf[l] = fresh;
-                            }
-                        }
-                        j_cur = jg;
-                    }
-                }
-                // ---- all-reduce + update (replicated Adam) ----
-                let mut gbuf = grads.flatten();
-                ring_allreduce_rank(&fabric, rank, k, &mut gbuf, t as u32);
-                match cfg.optimizer {
-                    super::Optimizer::Adam => adam.step(&mut flat, &gbuf),
-                    super::Optimizer::Sgd => {
-                        for (pv, gv) in flat.iter_mut().zip(&gbuf) {
-                            *pv -= cfg.lr * *gv;
-                        }
-                    }
-                }
-                params.unflatten(&flat);
-            }
-            (losses, params)
+            run_rank(fabric.as_ref(), &plan, rank, &cfg)
         }));
     }
     let mut per_rank: Vec<(Vec<f64>, Params)> = handles
         .into_iter()
         .map(|h| h.join().expect("worker thread panicked"))
         .collect();
-    // sum per-epoch partial losses across ranks
+    // sum per-epoch partial losses across ranks (rank order, to match the
+    // sequential engine's f64 accumulation order bit-for-bit)
     let epochs = cfg.epochs;
     let mut losses = vec![0.0f64; epochs];
     for (ls, _) in &per_rank {
@@ -297,7 +374,7 @@ pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> Thread
     }
     let params = per_rank.swap_remove(0).1;
     let (final_val, final_test) = super::evaluate(g, &params, cfg.model.kind);
-    ThreadedResult { losses, params, final_val, final_test }
+    ThreadedResult { losses, params, final_val, final_test, comm_bytes: fabric.total_bytes() }
 }
 
 #[cfg(test)]
@@ -358,5 +435,23 @@ mod tests {
         let r = train_threaded(&g, &pt, &c);
         assert!(r.final_test > 0.5, "test {}", r.final_test);
         assert!(r.losses.last().unwrap() < &r.losses[0]);
+        assert!(r.comm_bytes > 0);
+    }
+
+    /// Setup + per-epoch traffic through the threaded fabric must equal
+    /// the sequential fabric's accounting — the volumes experiments
+    /// report are engine-independent.
+    #[test]
+    fn threaded_comm_bytes_match_sequential() {
+        let g = presets::by_name("tiny").unwrap().build(42);
+        let pt = partition(&g, 3, Method::Multilevel, 2);
+        let c = cfg(&g, Variant::Pipe(PipeOpts::plain()), 0.0);
+        let mut b = crate::runtime::native::NativeBackend::new();
+        let seq = trainer::train(&g, &pt, &c, &mut b);
+        let thr = train_threaded(&g, &pt, &c);
+        // every epoch moves the same message sizes, so the full run is
+        // setup + epochs × steady-state-epoch bytes
+        let seq_total = seq.setup_bytes + c.epochs as u64 * seq.comm_bytes_epoch;
+        assert_eq!(thr.comm_bytes, seq_total);
     }
 }

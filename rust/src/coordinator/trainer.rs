@@ -23,6 +23,7 @@ use crate::partition::Partitioning;
 use crate::runtime::Backend;
 use crate::sim::{LayerCompute, PartitionWork};
 use crate::tensor::{ops, Mat};
+use crate::util::json::{FileEmitter, Json};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -63,6 +64,19 @@ pub fn train(
     cfg: &TrainConfig,
     backend: &mut dyn Backend,
 ) -> TrainResult {
+    train_logged(g, pt, cfg, backend, None)
+}
+
+/// [`train`] with an optional streaming NDJSON run log: one line per
+/// epoch (`epoch`, `loss`, `val`, `epoch_ms`, `bytes`), flushed as it
+/// happens so crashed runs keep their history (`--log <path>`).
+pub fn train_logged(
+    g: &Graph,
+    pt: &Partitioning,
+    cfg: &TrainConfig,
+    backend: &mut dyn Backend,
+    mut log: Option<&mut FileEmitter>,
+) -> TrainResult {
     let watch = Stopwatch::start();
     let plan = halo::build(g, pt, cfg.model.kind);
     let k = plan.n_parts;
@@ -83,6 +97,18 @@ pub fn train(
         Variant::Vanilla => (false, super::PipeOpts::plain()),
         Variant::Pipe(o) => (true, o),
     };
+
+    // --- boundary-set exchange (Setup phase, Alg. 1 lines 1–5) --------
+    // Same send/verify halves the concurrent engines run, driven in
+    // two passes (all sends, then all verifies) because one thread
+    // plays every rank here.
+    for i in 0..k {
+        super::threaded::setup_send(&fabric, &plan, i);
+    }
+    for i in 0..k {
+        super::threaded::setup_verify(&fabric, &plan, i);
+    }
+    let setup_bytes = fabric.total_bytes();
 
     // --- stale buffers (pipe mode) ------------------------------------
     // feat_buf[i][l]: halo-feature matrix used as layer-l input halo rows
@@ -147,6 +173,8 @@ pub fn train(
         if capture {
             fabric.reset_counters();
         }
+        let epoch_watch = Stopwatch::start();
+        let epoch_bytes_start = fabric.total_bytes();
         // epoch-local probe accumulators
         let mut feat_err = vec![0.0f64; n_layers];
         let mut feat_ref = vec![0.0f64; n_layers];
@@ -377,6 +405,8 @@ pub fn train(
         if capture {
             comm_bytes_epoch = fabric.total_bytes();
         }
+        let epoch_ms = epoch_watch.elapsed_secs() * 1e3;
+        let epoch_comm_bytes = fabric.total_bytes() - epoch_bytes_start;
 
         // ---------------- eval / probes ----------------
         let do_eval = cfg.eval_every > 0 && (t % cfg.eval_every == 0 || t == cfg.epochs)
@@ -393,7 +423,27 @@ pub fn train(
         } else {
             (f64::NAN, f64::NAN)
         };
-        curve.push(EpochStat { epoch: t, train_loss, val, test });
+        curve.push(EpochStat {
+            epoch: t,
+            train_loss,
+            val,
+            test,
+            epoch_ms,
+            comm_bytes: epoch_comm_bytes,
+        });
+        if let Some(emitter) = log.take() {
+            let row = Json::obj()
+                .set("epoch", t)
+                .set("loss", train_loss)
+                .set("val", val)
+                .set("epoch_ms", epoch_ms)
+                .set("bytes", epoch_comm_bytes);
+            match emitter.emit(&row) {
+                Ok(()) => log = Some(emitter),
+                // stop logging, keep training
+                Err(e) => eprintln!("run-log write failed: {e}"),
+            }
+        }
         if probing {
             for l in 0..n_layers {
                 probes.push(ErrorProbe {
@@ -417,6 +467,7 @@ pub fn train(
         works,
         model_elems: flat.len(),
         comm_bytes_epoch,
+        setup_bytes,
         probes,
         last_grad,
         wall_secs: watch.elapsed_secs(),
@@ -642,6 +693,64 @@ mod tests {
         assert!(r.works[0].fwd_comm[0].iter().map(|&(_, b)| b).sum::<u64>() > 0);
         assert!(r.works[0].bwd_comm[0].is_empty()); // no layer-0 grad exchange
         assert!(r.model_elems > 0);
+    }
+
+    #[test]
+    fn setup_bytes_count_boundary_set_exchange() {
+        let g = tiny();
+        let pk = partition(&g, 3, Method::Multilevel, 2);
+        let cfg = cfg_for(&g, Variant::Vanilla, 2, 0.0);
+        let mut b = NativeBackend::new();
+        let r = train(&g, &pk, &cfg, &mut b);
+        // each halo row is requested from its owner exactly once, as one
+        // u32 id = 4 bytes on the wire
+        let plan = halo::build(&g, &pk, cfg.model.kind);
+        assert_eq!(r.setup_bytes, 4 * plan.total_halo() as u64);
+        assert!(r.setup_bytes > 0);
+    }
+
+    #[test]
+    fn epoch_stats_carry_time_and_bytes() {
+        let g = tiny();
+        let pk = partition(&g, 2, Method::Multilevel, 1);
+        let cfg = cfg_for(&g, Variant::Pipe(crate::coordinator::PipeOpts::plain()), 3, 0.0);
+        let mut b = NativeBackend::new();
+        let r = train(&g, &pk, &cfg, &mut b);
+        for e in &r.curve {
+            assert!(e.epoch_ms >= 0.0);
+            assert!(e.comm_bytes > 0, "epoch {} moved no bytes", e.epoch);
+        }
+        // steady-state epochs move identical volumes
+        assert_eq!(r.curve[1].comm_bytes, r.curve[2].comm_bytes);
+    }
+
+    #[test]
+    fn ndjson_run_log_streams_per_epoch() {
+        let g = tiny();
+        let pk = partition(&g, 2, Method::Multilevel, 1);
+        let cfg = cfg_for(&g, Variant::Vanilla, 4, 0.0);
+        let path = format!("/tmp/pipegcn_runlog_test_{}.ndjson", std::process::id());
+        let mut em = crate::util::json::FileEmitter::create(
+            &path,
+            crate::util::json::Json::obj().set("dataset", "tiny").set("parts", 2usize),
+        )
+        .unwrap();
+        let mut b = NativeBackend::new();
+        let r = train_logged(&g, &pk, &cfg, &mut b, Some(&mut em));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rows = crate::util::json::parse_ndjson(&text).unwrap();
+        assert_eq!(rows.len(), 1 + cfg.epochs); // header + one per epoch
+        assert_eq!(rows[0].get("dataset").unwrap().as_str(), Some("tiny"));
+        for (i, row) in rows[1..].iter().enumerate() {
+            assert_eq!(row.get("epoch").unwrap().as_usize(), Some(i + 1));
+            // losses in the log are bit-identical to the curve
+            assert_eq!(
+                row.get("loss").unwrap().as_f64().unwrap().to_bits(),
+                r.curve[i].train_loss.to_bits()
+            );
+            assert!(row.get("bytes").unwrap().as_f64().unwrap() > 0.0);
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

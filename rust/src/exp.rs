@@ -35,8 +35,17 @@ impl Default for RunOpts {
     }
 }
 
-/// Build, partition (multilevel, the paper's METIS role), train.
-pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts) -> RunOutput {
+/// Build the dataset, partition it (multilevel, the paper's METIS role),
+/// and derive the training config — everything a run needs except the
+/// engine. Shared by [`run`] (sequential) and `pipegcn worker`
+/// (multi-process TCP), so a distributed run's inputs are guaranteed
+/// identical to the sequential reference it is compared against.
+pub fn prepare(
+    preset_name: &str,
+    n_parts: usize,
+    variant_name: &str,
+    opts: RunOpts,
+) -> (&'static Preset, Graph, Partitioning, TrainConfig) {
     let preset = by_name(preset_name)
         .unwrap_or_else(|| panic!("unknown preset '{preset_name}' (try: {:?})",
             crate::graph::presets::names()));
@@ -44,7 +53,7 @@ pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts)
         .unwrap_or_else(|| panic!("unknown variant '{variant_name}'"));
     let graph = preset.build(opts.seed);
     let parts = partition(&graph, n_parts, Method::Multilevel, opts.seed);
-    let mut cfg = TrainConfig {
+    let cfg = TrainConfig {
         model: ModelConfig::sage(
             preset.feat_dim,
             preset.hidden,
@@ -60,9 +69,25 @@ pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts)
         eval_every: opts.eval_every,
         probe_errors: opts.probe_errors,
     };
-    cfg.probe_errors = opts.probe_errors;
+    (preset, graph, parts, cfg)
+}
+
+/// Build, partition, train (sequential engine).
+pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts) -> RunOutput {
+    run_logged(preset_name, n_parts, variant_name, opts, None)
+}
+
+/// [`run`] with an optional streaming NDJSON run log (`--log <path>`).
+pub fn run_logged(
+    preset_name: &str,
+    n_parts: usize,
+    variant_name: &str,
+    opts: RunOpts,
+    log: Option<&mut crate::util::json::FileEmitter>,
+) -> RunOutput {
+    let (preset, graph, parts, cfg) = prepare(preset_name, n_parts, variant_name, opts);
     let mut backend = NativeBackend::new();
-    let result = trainer::train(&graph, &parts, &cfg, &mut backend);
+    let result = trainer::train_logged(&graph, &parts, &cfg, &mut backend, log);
     RunOutput { preset, graph, parts, result }
 }
 

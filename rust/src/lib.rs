@@ -16,8 +16,13 @@
 //! * [`partition`] — a METIS-like multilevel partitioner (heavy-edge
 //!   matching, greedy initial partition, FM refinement with a
 //!   communication-volume objective) plus hash/range/BFS baselines.
-//! * [`comm`] — the communication fabric: mailboxes with byte accounting,
-//!   a ring all-reduce, and link/topology descriptions.
+//! * [`comm`] — the communication layer: the [`comm::Transport`]
+//!   contract, the in-process mailbox fabric with byte accounting, a
+//!   ring all-reduce, and link/topology descriptions.
+//! * [`net`] — the real transport: length-prefixed binary frames over
+//!   TCP ([`net::TcpTransport`]), a rank-0 rendezvous/peer-table
+//!   bootstrap, and the `launch`/`worker` multi-process runtime that
+//!   trains over genuine localhost sockets.
 //! * [`sim`] — the discrete-event timeline simulator that models what the
 //!   training schedule costs on a described cluster (the paper's testbeds
 //!   are encoded as [`sim::DeviceProfile`]s / [`sim::Topology`]s).
@@ -38,6 +43,7 @@ pub mod tensor;
 pub mod graph;
 pub mod partition;
 pub mod comm;
+pub mod net;
 pub mod sim;
 pub mod model;
 pub mod runtime;

@@ -1,27 +1,32 @@
 //! `pipegcn` — launcher CLI for the PipeGCN reproduction.
 //!
 //! ```text
-//! pipegcn train      --dataset reddit-sim --parts 4 --method pipegcn-gf [--epochs N] [--gamma G]
+//! pipegcn train      --dataset reddit-sim --parts 4 --method pipegcn-gf [--epochs N] [--gamma G] [--log run.ndjson]
+//! pipegcn launch     --parts 4 --dataset reddit-sim [--epochs N]  (multi-process training over localhost TCP)
+//! pipegcn worker     --rank 0 --parts 4 --coord 127.0.0.1:PORT    (one rank; normally spawned by `launch`)
 //! pipegcn gen-graph  --dataset yelp-sim --out graph.bin [--nodes N]
 //! pipegcn partition  --dataset reddit-sim --parts 4 [--algo multilevel|hash|range|bfs]
 //! pipegcn sim        --dataset reddit-sim --parts 4 --method pipegcn  (simulated epoch breakdown)
 //! pipegcn presets    (list dataset presets)
 //! ```
 
-use anyhow::Result;
 use pipegcn::coordinator::Variant;
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::{io, presets};
+use pipegcn::net::{launch::LaunchOpts, worker::WorkerOpts};
 use pipegcn::partition::{partition, quality, Method};
 use pipegcn::sim::Mode;
 use pipegcn::util::cli::Args;
-use pipegcn::util::json::Json;
+use pipegcn::util::error::{Context, Result};
+use pipegcn::util::json::{FileEmitter, Json};
 use pipegcn::util::{fmt_bytes, fmt_secs};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
+        "worker" => cmd_worker(&args),
         "gen-graph" => cmd_gen_graph(&args),
         "partition" => cmd_partition(&args),
         "sim" => cmd_sim(&args),
@@ -32,7 +37,7 @@ fn main() -> Result<()> {
         }
         other => {
             print_help();
-            anyhow::bail!("unknown subcommand '{other}'")
+            pipegcn::bail!("unknown subcommand '{other}'")
         }
     }
 }
@@ -43,6 +48,11 @@ fn print_help() {
          subcommands:\n\
          \x20 train      --dataset <preset> --parts K --method gcn|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf\n\
          \x20            [--epochs N] [--gamma G] [--seed S] [--probe-errors] [--out results.json]\n\
+         \x20            [--log run.ndjson]\n\
+         \x20 launch     --parts K --dataset <preset> [--method <m>] [--epochs N] [--seed S]\n\
+         \x20            [--gamma G] [--log run.ndjson] [--out results.json]\n\
+         \x20            (spawns K worker processes training over real localhost TCP sockets)\n\
+         \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
          \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
@@ -50,10 +60,79 @@ fn print_help() {
     );
 }
 
+fn cmd_launch(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
+    ])?;
+    let opts = LaunchOpts {
+        parts: args.get_usize("parts", 2),
+        dataset: args.get_str("dataset", "tiny"),
+        method: args.get_str("method", "pipegcn"),
+        epochs: args.get_usize("epochs", 0),
+        seed: args.get_u64("seed", 1),
+        gamma: args.get_f32("gamma", 0.95),
+        log: args.get_opt("log").map(String::from),
+        out: args.get_opt("out").map(String::from),
+    };
+    // validate before spawning: a bad flag must fail here, not as K
+    // worker panics followed by a rendezvous timeout
+    if Variant::parse(&opts.method, opts.gamma).is_none() {
+        pipegcn::bail!("bad --method '{}'", opts.method);
+    }
+    if presets::by_name(&opts.dataset).is_none() {
+        pipegcn::bail!(
+            "unknown preset '{}' (try `pipegcn presets` for the list)",
+            opts.dataset
+        );
+    }
+    println!(
+        "launch {} × {} worker processes over localhost TCP (method {})",
+        opts.dataset, opts.parts, opts.method
+    );
+    let bin = std::env::current_exe().context("resolving the pipegcn binary path")?;
+    pipegcn::net::launch::launch(&bin, &opts)
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
+    ])?;
+    let coord = args
+        .get_opt("coord")
+        .context("worker requires --coord HOST:PORT (normally set by `pipegcn launch`)")?
+        .to_string();
+    let opts = WorkerOpts {
+        rank: args.get_usize("rank", 0),
+        parts: args.get_usize("parts", 2),
+        coord,
+        dataset: args.get_str("dataset", "tiny"),
+        method: args.get_str("method", "pipegcn"),
+        epochs: args.get_usize("epochs", 0),
+        seed: args.get_u64("seed", 1),
+        gamma: args.get_f32("gamma", 0.95),
+        log: args.get_opt("log").map(String::from),
+        out: args.get_opt("out").map(String::from),
+    };
+    if let Some(summary) = pipegcn::net::worker::run_worker(&opts)? {
+        for (i, loss) in summary.losses.iter().enumerate() {
+            println!("epoch {:4}  loss {:.4}", i + 1, loss);
+        }
+        println!(
+            "final: loss {:.6} | val {:.4} test {:.4} | rank-0 sent {} payload ({} on the wire)",
+            summary.losses.last().unwrap_or(&f64::NAN),
+            summary.final_val,
+            summary.final_test,
+            fmt_bytes(summary.payload_bytes_sent),
+            fmt_bytes(summary.wire_bytes_sent),
+        );
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     args.assert_known(&[
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
-        "eval-every",
+        "eval-every", "log",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
@@ -66,13 +145,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         eval_every: args.get_usize("eval-every", 5),
     };
     let variant = Variant::parse(&method, opts.gamma)
-        .ok_or_else(|| anyhow::anyhow!("bad --method '{method}'"))?;
+        .ok_or_else(|| pipegcn::err_msg!("bad --method '{method}'"))?;
     println!(
         "train {dataset} parts={parts} method={} epochs={}",
         variant.name(),
         if opts.epochs > 0 { opts.epochs } else { presets::by_name(&dataset).map(|p| p.epochs).unwrap_or(0) }
     );
-    let out = exp::run(&dataset, parts, &method, opts);
+    let out = match args.get_opt("log") {
+        Some(log_path) => {
+            let mut emitter = FileEmitter::create(
+                log_path,
+                Json::obj()
+                    .set("dataset", dataset.as_str())
+                    .set("parts", parts)
+                    .set("method", variant.name())
+                    .set("seed", opts.seed)
+                    .set("engine", "sequential"),
+            )
+            .with_context(|| format!("creating run log {log_path}"))?;
+            let out = exp::run_logged(&dataset, parts, &method, opts, Some(&mut emitter));
+            println!("streamed {} epochs to {log_path}", emitter.rows());
+            out
+        }
+        None => exp::run(&dataset, parts, &method, opts),
+    };
     let r = &out.result;
     for e in &r.curve {
         if !e.val.is_nan() {
@@ -126,7 +222,7 @@ fn cmd_gen_graph(args: &Args) -> Result<()> {
     let out = args.get_str("out", "graph.bin");
     let seed = args.get_u64("seed", 1);
     let preset = presets::by_name(&dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown preset '{dataset}'"))?;
+        .ok_or_else(|| pipegcn::err_msg!("unknown preset '{dataset}'"))?;
     let g = match args.get_opt("nodes") {
         Some(_) => preset.build_scaled(args.get_usize("nodes", preset.n), seed),
         None => preset.build(seed),
@@ -149,9 +245,9 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let parts = args.get_usize("parts", 2);
     let algo = args.get_str("algo", "multilevel");
     let seed = args.get_u64("seed", 1);
-    let method = Method::parse(&algo).ok_or_else(|| anyhow::anyhow!("bad --algo '{algo}'"))?;
+    let method = Method::parse(&algo).ok_or_else(|| pipegcn::err_msg!("bad --algo '{algo}'"))?;
     let preset = presets::by_name(&dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown preset '{dataset}'"))?;
+        .ok_or_else(|| pipegcn::err_msg!("unknown preset '{dataset}'"))?;
     let g = preset.build(seed);
     let pt = partition(&g, parts, method, seed);
     let q = quality(&g, &pt);
@@ -180,7 +276,7 @@ fn cmd_sim(args: &Args) -> Result<()> {
         Some(spec) => {
             let (nodes, per) = spec
                 .split_once('x')
-                .ok_or_else(|| anyhow::anyhow!("--nodes-x-gpus expects AxB"))?;
+                .ok_or_else(|| pipegcn::err_msg!("--nodes-x-gpus expects AxB"))?;
             let (profile, topo) =
                 pipegcn::sim::profiles::rig_mi60(nodes.parse()?, per.parse()?);
             exp::simulate(&out, &profile, &topo, mode)

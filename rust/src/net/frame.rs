@@ -1,0 +1,371 @@
+//! Length-prefixed binary frames — the wire format of [`super::tcp`].
+//!
+//! Every frame is `len: u32 LE` (body byte count) followed by the body:
+//!
+//! ```text
+//! body := kind: u8, fields...
+//! Data      (0): src u16, dst u16, iter u32, layer u16, phase u8,
+//!                payload: [f32 bits, LE]
+//! Hello     (1): rank u16, addr (u16 len + utf8)   — dialer introduces
+//!                itself (to the rendezvous: with its mesh listen addr)
+//! PeerTable (2): n u16, n × (u16 len + utf8)       — rendezvous reply
+//! Shutdown  (3): src u16                           — graceful close
+//! ```
+//!
+//! Payload floats travel as raw bit patterns (`to_bits`/`from_bits`), so
+//! the wire never canonicalizes NaNs and bit-exactness holds end to end.
+
+use crate::comm::{Phase, Tag};
+use std::io::{Read, Write};
+
+/// Hard cap on a frame body (64 MiB) — a corrupt or hostile length
+/// prefix must not drive an allocation.
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+
+/// Bytes of framing around a Data payload (length prefix + header).
+pub const DATA_OVERHEAD_BYTES: usize = 4 + 1 + 2 + 2 + 4 + 2 + 1;
+
+const KIND_DATA: u8 = 0;
+const KIND_HELLO: u8 = 1;
+const KIND_PEER_TABLE: u8 = 2;
+const KIND_SHUTDOWN: u8 = 3;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// One tagged tensor message, exactly a `Transport::send`.
+    Data { src: u16, dst: u16, tag: Tag, payload: Vec<f32> },
+    /// Connection introduction. `addr` is the sender's mesh listen
+    /// address when dialing the rendezvous, and empty when dialing a peer.
+    Hello { rank: u16, addr: String },
+    /// The full rank → address table, from the rendezvous to every rank.
+    PeerTable { addrs: Vec<String> },
+    /// Graceful end-of-stream from `src`; the reader thread exits cleanly.
+    Shutdown { src: u16 },
+}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize, "address string too long");
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated frame: wanted {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("bad utf8 in frame: {e}"))
+    }
+}
+
+/// Encode a frame body (without the length prefix).
+pub fn encode_body(f: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match f {
+        Frame::Data { src, dst, tag, payload } => {
+            out.reserve(DATA_OVERHEAD_BYTES + payload.len() * 4);
+            out.push(KIND_DATA);
+            put_u16(&mut out, *src);
+            put_u16(&mut out, *dst);
+            put_u32(&mut out, tag.iter);
+            put_u16(&mut out, tag.layer);
+            out.push(tag.phase.code());
+            for v in payload {
+                put_u32(&mut out, v.to_bits());
+            }
+        }
+        Frame::Hello { rank, addr } => {
+            out.push(KIND_HELLO);
+            put_u16(&mut out, *rank);
+            put_str(&mut out, addr);
+        }
+        Frame::PeerTable { addrs } => {
+            out.push(KIND_PEER_TABLE);
+            assert!(addrs.len() <= u16::MAX as usize);
+            put_u16(&mut out, addrs.len() as u16);
+            for a in addrs {
+                put_str(&mut out, a);
+            }
+        }
+        Frame::Shutdown { src } => {
+            out.push(KIND_SHUTDOWN);
+            put_u16(&mut out, *src);
+        }
+    }
+    out
+}
+
+/// Decode a frame body (the bytes after the length prefix).
+pub fn decode_body(buf: &[u8]) -> Result<Frame, String> {
+    let mut c = Cursor { buf, pos: 0 };
+    let kind = c.u8()?;
+    let frame = match kind {
+        KIND_DATA => {
+            let src = c.u16()?;
+            let dst = c.u16()?;
+            let iter = c.u32()?;
+            let layer = c.u16()?;
+            let phase_code = c.u8()?;
+            let phase = Phase::from_code(phase_code)
+                .ok_or_else(|| format!("bad phase code {phase_code}"))?;
+            let rest = buf.len() - c.pos;
+            if rest % 4 != 0 {
+                return Err(format!("data payload not f32-aligned ({rest} bytes)"));
+            }
+            let mut payload = Vec::with_capacity(rest / 4);
+            for _ in 0..rest / 4 {
+                payload.push(f32::from_bits(c.u32()?));
+            }
+            Frame::Data { src, dst, tag: Tag::new(iter, layer, phase), payload }
+        }
+        KIND_HELLO => Frame::Hello { rank: c.u16()?, addr: c.str()? },
+        KIND_PEER_TABLE => {
+            let n = c.u16()? as usize;
+            let mut addrs = Vec::with_capacity(n);
+            for _ in 0..n {
+                addrs.push(c.str()?);
+            }
+            Frame::PeerTable { addrs }
+        }
+        KIND_SHUTDOWN => Frame::Shutdown { src: c.u16()? },
+        other => return Err(format!("unknown frame kind {other}")),
+    };
+    if c.pos != buf.len() {
+        return Err(format!("trailing bytes in frame body ({} of {})", c.pos, buf.len()));
+    }
+    Ok(frame)
+}
+
+/// Write one length-prefixed frame (caller flushes).
+///
+/// Data frames — the transport hot path — are streamed straight into
+/// the writer (length prefix, 12-byte header from a stack buffer, then
+/// the payload bits), skipping [`encode_body`]'s intermediate `Vec`
+/// copy; the byte layout is identical. Control frames go through
+/// [`encode_body`].
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
+    if let Frame::Data { src, dst, tag, payload } = f {
+        let body_len = (DATA_OVERHEAD_BYTES - 4) + payload.len() * 4;
+        w.write_all(&(body_len as u32).to_le_bytes())?;
+        let mut head = [0u8; DATA_OVERHEAD_BYTES - 4];
+        head[0] = KIND_DATA;
+        head[1..3].copy_from_slice(&src.to_le_bytes());
+        head[3..5].copy_from_slice(&dst.to_le_bytes());
+        head[5..9].copy_from_slice(&tag.iter.to_le_bytes());
+        head[9..11].copy_from_slice(&tag.layer.to_le_bytes());
+        head[11] = tag.phase.code();
+        w.write_all(&head)?;
+        for v in payload {
+            w.write_all(&v.to_bits().to_le_bytes())?;
+        }
+        return Ok(());
+    }
+    let body = encode_body(f);
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)
+}
+
+/// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
+/// boundary; mid-frame EOF and oversized/corrupt frames are errors.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<Option<Frame>> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..])? {
+            0 if got == 0 => return Ok(None), // clean EOF
+            0 => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "EOF inside frame length prefix",
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_BODY_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame body {len} bytes exceeds cap {MAX_BODY_BYTES}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    decode_body(&body)
+        .map(Some)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let body = encode_body(&f);
+        assert_eq!(decode_body(&body).unwrap(), f);
+        // and through the stream API
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &f).unwrap();
+        // the streamed fast path must produce exactly prefix+encode_body
+        let mut expect = (body.len() as u32).to_le_bytes().to_vec();
+        expect.extend_from_slice(&body);
+        assert_eq!(wire, expect, "streamed bytes differ from encode_body");
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap(), Some(f));
+        assert_eq!(read_frame(&mut r).unwrap(), None); // clean EOF after
+    }
+
+    #[test]
+    fn data_frame_roundtrip() {
+        // NaN payloads are covered by the bit-exactness test below —
+        // PartialEq would reject them here even when transport is perfect
+        roundtrip(Frame::Data {
+            src: 3,
+            dst: 0,
+            tag: Tag::new(42, 7, Phase::BwdGrad),
+            payload: vec![1.5, -0.0, 3.25e-8, f32::MIN_POSITIVE],
+        });
+        roundtrip(Frame::Data {
+            src: 0,
+            dst: 1,
+            tag: Tag::new(0, 0, Phase::Setup),
+            payload: Vec::new(),
+        });
+    }
+
+    #[test]
+    fn data_payload_bits_survive_exactly() {
+        let payload: Vec<f32> =
+            [0x0000_0001u32, 0x7F80_0000, 0xFFC0_1234, 0x8000_0000]
+                .iter()
+                .map(|&b| f32::from_bits(b))
+                .collect();
+        let f = Frame::Data { src: 1, dst: 2, tag: Tag::new(9, 1, Phase::FwdFeat), payload };
+        let body = encode_body(&f);
+        match decode_body(&body).unwrap() {
+            Frame::Data { payload: back, .. } => match &f {
+                Frame::Data { payload, .. } => {
+                    for (a, b) in payload.iter().zip(&back) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                _ => unreachable!(),
+            },
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        roundtrip(Frame::Hello { rank: 2, addr: "127.0.0.1:45123".into() });
+        roundtrip(Frame::Hello { rank: 0, addr: String::new() });
+        roundtrip(Frame::PeerTable {
+            addrs: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()],
+        });
+        roundtrip(Frame::Shutdown { src: 5 });
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode_body(&[]).is_err()); // no kind
+        assert!(decode_body(&[9]).is_err()); // unknown kind
+        let mut body = encode_body(&Frame::Shutdown { src: 1 });
+        body.push(0); // trailing byte
+        assert!(decode_body(&body).is_err());
+        // truncated data header
+        let body = encode_body(&Frame::Data {
+            src: 0,
+            dst: 1,
+            tag: Tag::new(1, 0, Phase::FwdFeat),
+            payload: vec![1.0],
+        });
+        assert!(decode_body(&body[..6]).is_err());
+        // misaligned payload
+        let mut body2 = body.clone();
+        body2.push(0);
+        assert!(decode_body(&body2).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(u32::MAX).to_le_bytes());
+        wire.extend_from_slice(&[0; 16]);
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn eof_inside_frame_is_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Shutdown { src: 0 }).unwrap();
+        wire.truncate(wire.len() - 1);
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).is_err());
+        // EOF inside the length prefix itself
+        let mut r2 = &wire[..2];
+        assert!(read_frame(&mut r2).is_err());
+    }
+
+    #[test]
+    fn stream_of_frames_in_order() {
+        let frames = vec![
+            Frame::Hello { rank: 1, addr: "a:1".into() },
+            Frame::Data {
+                src: 1,
+                dst: 0,
+                tag: Tag::new(1, 0, Phase::FwdFeat),
+                payload: vec![1.0, 2.0],
+            },
+            Frame::Shutdown { src: 1 },
+        ];
+        let mut wire = Vec::new();
+        for f in &frames {
+            write_frame(&mut wire, f).unwrap();
+        }
+        let mut r = &wire[..];
+        for f in &frames {
+            assert_eq!(read_frame(&mut r).unwrap().as_ref(), Some(f));
+        }
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+}

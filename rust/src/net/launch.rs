@@ -1,0 +1,101 @@
+//! `pipegcn launch` — spawn one worker process per partition on this
+//! machine and serve their rendezvous.
+//!
+//! The launcher binds an ephemeral rendezvous port, starts `--parts`
+//! children running `pipegcn worker --rank i --coord <addr> ...`
+//! (stdio inherited, so rank 0's report streams to the console), hands
+//! every rank the peer table, and waits for all of them to exit.
+
+use super::rendezvous;
+use crate::util::error::{Context, Result};
+use std::net::TcpListener;
+use std::process::{Child, Command};
+
+#[derive(Clone, Debug)]
+pub struct LaunchOpts {
+    pub parts: usize,
+    pub dataset: String,
+    pub method: String,
+    /// 0 = preset default
+    pub epochs: usize,
+    pub seed: u64,
+    pub gamma: f32,
+    /// NDJSON run log path (given to rank 0)
+    pub log: Option<String>,
+    /// result JSON path (given to rank 0)
+    pub out: Option<String>,
+}
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Spawn `opts.parts` workers of `bin` (normally `current_exe()`), serve
+/// their rendezvous, and wait. Errors if any rank exits non-zero.
+pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
+    if opts.parts == 0 {
+        crate::bail!("--parts must be at least 1");
+    }
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding the rendezvous listener")?;
+    let coord = listener.local_addr()?.to_string();
+
+    let mut children: Vec<Child> = Vec::with_capacity(opts.parts);
+    for rank in 0..opts.parts {
+        let mut cmd = Command::new(bin);
+        cmd.arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--parts")
+            .arg(opts.parts.to_string())
+            .arg("--coord")
+            .arg(&coord)
+            .arg("--dataset")
+            .arg(&opts.dataset)
+            .arg("--method")
+            .arg(&opts.method)
+            .arg("--epochs")
+            .arg(opts.epochs.to_string())
+            .arg("--seed")
+            .arg(opts.seed.to_string())
+            .arg("--gamma")
+            .arg(opts.gamma.to_string());
+        if rank == 0 {
+            if let Some(log) = &opts.log {
+                cmd.arg("--log").arg(log);
+            }
+            if let Some(out) = &opts.out {
+                cmd.arg("--out").arg(out);
+            }
+        }
+        match cmd.spawn() {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(crate::err_msg!("spawning worker rank {rank}: {e}"));
+            }
+        }
+    }
+
+    // Hand out the peer table. If a child dies before its hello, the
+    // accept deadline fires and we tear the job down.
+    if let Err(e) = rendezvous::serve(&listener, opts.parts) {
+        kill_all(&mut children);
+        return Err(crate::err_msg!("rendezvous failed: {e}"));
+    }
+
+    let mut failed = Vec::new();
+    for (rank, child) in children.iter_mut().enumerate() {
+        let status = child.wait().with_context(|| format!("waiting for rank {rank}"))?;
+        if !status.success() {
+            failed.push(rank);
+        }
+    }
+    if !failed.is_empty() {
+        crate::bail!("worker ranks {failed:?} exited with failure");
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Real network transport + multi-process runtime.
+//!
+//! Everything the in-process [`crate::comm::Fabric`] simulates, made
+//! executable over the wire:
+//!
+//! * [`frame`] — length-prefixed binary frames (tag header:
+//!   iter/layer/phase/src/dst + raw-bit f32 payload, plus the
+//!   hello/peer-table/shutdown control frames).
+//! * [`tcp`] — [`TcpTransport`]: the [`crate::comm::Transport`] contract
+//!   over `std::net` sockets, with per-peer writer threads (sends are
+//!   pipelined and never block the compute path) and per-socket reader
+//!   threads demuxing into per-(src, tag) FIFO queues.
+//! * [`rendezvous`] — rank-0-style bootstrap: every rank dials one known
+//!   address, announces its mesh listener, receives the full peer table,
+//!   then the all-to-all socket mesh forms.
+//! * [`worker`] / [`launch`] — the multi-process runtime: `pipegcn
+//!   launch --parts K ...` spawns K OS processes that train over real
+//!   localhost sockets; each runs
+//!   [`crate::coordinator::threaded::run_rank`] unchanged.
+//!
+//! The schedule is deterministic over any transport (staleness lives in
+//! message tags), so a TCP run's loss curve is bit-identical to the
+//! sequential and threaded engines — asserted by `tests/net_e2e.rs`.
+
+pub mod frame;
+pub mod launch;
+pub mod rendezvous;
+pub mod tcp;
+pub mod worker;
+
+pub use rendezvous::{connect, localhost_mesh};
+pub use tcp::TcpTransport;

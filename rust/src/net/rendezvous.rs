@@ -1,0 +1,190 @@
+//! Rendezvous + mesh formation.
+//!
+//! One process (the launcher, or rank 0 standing alone) serves a known
+//! address. Every rank binds its own mesh listener on an ephemeral port,
+//! dials the rendezvous with `Hello{rank, mesh_addr}`, and blocks until
+//! the `PeerTable` with all `n` addresses comes back. Then the all-to-all
+//! mesh forms: each rank dials every peer (introducing itself with a
+//! `Hello`) for its outbound sockets and accepts `n − 1` inbound ones.
+
+use super::frame::{self, Frame};
+use super::tcp::{accept_with_deadline, retry_connect, TcpTransport};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+/// How long mesh/rendezvous formation may take before we abort.
+pub const FORM_DEADLINE: Duration = Duration::from_secs(60);
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Serve one rendezvous round on `listener`: collect `Hello`s from all
+/// `n` ranks, then answer each with the full peer-address table. Returns
+/// the table (index = rank).
+pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
+    let mut streams: Vec<Option<(TcpStream, String)>> = (0..n).map(|_| None).collect();
+    let mut seen = 0usize;
+    while seen < n {
+        // read the hello straight off the stream — read_frame reads
+        // byte-exact, so nothing beyond the frame is consumed. A read
+        // timeout bounds a connector that never sends its hello (e.g. a
+        // worker that died right after connect), so serve() cannot hang
+        // past the formation deadline.
+        let mut s = accept_with_deadline(listener, FORM_DEADLINE)?;
+        s.set_read_timeout(Some(FORM_DEADLINE))?;
+        match frame::read_frame(&mut s)? {
+            Some(Frame::Hello { rank, addr }) => {
+                let rank = rank as usize;
+                if rank >= n {
+                    return Err(io_err(format!("hello from rank {rank} but n = {n}")));
+                }
+                if streams[rank].is_some() {
+                    return Err(io_err(format!("duplicate hello from rank {rank}")));
+                }
+                if addr.is_empty() {
+                    return Err(io_err(format!("rank {rank} sent no mesh address")));
+                }
+                streams[rank] = Some((s, addr));
+                seen += 1;
+            }
+            other => {
+                let _ = s.flush();
+                return Err(io_err(format!("expected hello, got {other:?}")));
+            }
+        }
+    }
+    let addrs: Vec<String> =
+        streams.iter().map(|s| s.as_ref().unwrap().1.clone()).collect();
+    let table = Frame::PeerTable { addrs: addrs.clone() };
+    for entry in streams.iter_mut() {
+        let (stream, _) = entry.as_mut().unwrap();
+        frame::write_frame(stream, &table)?;
+        stream.flush()?;
+    }
+    Ok(addrs)
+}
+
+/// Join the mesh as `rank` of `n`: rendezvous at `coord_addr`, then form
+/// the all-to-all socket mesh and wrap it in a [`TcpTransport`].
+pub fn connect(rank: usize, n: usize, coord_addr: &str) -> std::io::Result<TcpTransport> {
+    assert!(rank < n, "rank {rank} out of range for {n} ranks");
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let my_addr = listener.local_addr()?.to_string();
+
+    // --- rendezvous: announce, learn everyone's mesh address ----------
+    let mut coord = retry_connect(coord_addr, FORM_DEADLINE)?;
+    // the peer table legitimately takes until every rank has joined, but
+    // never longer than the formation deadline
+    coord.set_read_timeout(Some(FORM_DEADLINE))?;
+    frame::write_frame(&mut coord, &Frame::Hello { rank: rank as u16, addr: my_addr })?;
+    coord.flush()?;
+    let addrs = match frame::read_frame(&mut coord)? {
+        Some(Frame::PeerTable { addrs }) => addrs,
+        other => return Err(io_err(format!("expected peer table, got {other:?}"))),
+    };
+    if addrs.len() != n {
+        return Err(io_err(format!("peer table has {} entries, expected {n}", addrs.len())));
+    }
+    drop(coord);
+
+    // --- outbound: dial every peer, introduce ourselves ---------------
+    // Dials succeed as soon as the peer's listener is bound (backlog),
+    // so dialing everything before accepting anything cannot deadlock.
+    let mut outbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for (peer, addr) in addrs.iter().enumerate() {
+        if peer == rank {
+            continue;
+        }
+        let mut s = retry_connect(addr, FORM_DEADLINE)?;
+        frame::write_frame(&mut s, &Frame::Hello { rank: rank as u16, addr: String::new() })?;
+        s.flush()?;
+        outbound[peer] = Some(s);
+    }
+
+    // --- inbound: accept n − 1 peers, identified by their hello -------
+    let mut inbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for _ in 0..n.saturating_sub(1) {
+        let mut s = accept_with_deadline(&listener, FORM_DEADLINE)?;
+        // read the hello straight off the stream (byte-exact): data
+        // frames may already be queued right behind it from a fast peer,
+        // and an intermediate BufReader would swallow them. The read
+        // timeout bounds a silent connector; it is cleared before the
+        // stream becomes a long-lived data socket.
+        s.set_read_timeout(Some(FORM_DEADLINE))?;
+        match frame::read_frame(&mut s)? {
+            Some(Frame::Hello { rank: peer, .. }) => {
+                let peer = peer as usize;
+                if peer >= n || peer == rank {
+                    return Err(io_err(format!("bad mesh hello from rank {peer}")));
+                }
+                if inbound[peer].is_some() {
+                    return Err(io_err(format!("duplicate mesh connection from {peer}")));
+                }
+                s.set_read_timeout(None)?;
+                inbound[peer] = Some(s);
+            }
+            other => return Err(io_err(format!("expected mesh hello, got {other:?}"))),
+        }
+    }
+    Ok(TcpTransport::from_streams(rank, outbound, inbound))
+}
+
+/// Test/demo helper: a full `n`-rank mesh over localhost in one process
+/// (rendezvous served from a scratch thread, one connect thread per
+/// rank). Returns transports indexed by rank.
+pub fn localhost_mesh(n: usize) -> std::io::Result<Vec<TcpTransport>> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let coord_addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn(move || serve(&listener, n));
+    let joiners: Vec<_> = (0..n)
+        .map(|r| {
+            let addr = coord_addr.clone();
+            std::thread::spawn(move || connect(r, n, &addr))
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for j in joiners {
+        out.push(j.join().expect("mesh thread panicked")?);
+    }
+    server.join().expect("rendezvous thread panicked")?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rendezvous_hands_out_consistent_table() {
+        // exercised end-to-end by localhost_mesh: every rank got a table
+        // consistent enough to form the full mesh
+        let mut mesh = localhost_mesh(4).unwrap();
+        assert_eq!(mesh.len(), 4);
+        for (r, t) in mesh.iter().enumerate() {
+            assert_eq!(t.rank(), r);
+        }
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    #[test]
+    fn single_rank_mesh_is_trivial() {
+        let mut mesh = localhost_mesh(1).unwrap();
+        assert_eq!(mesh[0].rank(), 0);
+        mesh[0].shutdown();
+    }
+
+    #[test]
+    fn bad_frame_on_rendezvous_rejected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve(&listener, 1));
+        let mut s = retry_connect(&addr, FORM_DEADLINE).unwrap();
+        frame::write_frame(&mut s, &Frame::Shutdown { src: 0 }).unwrap();
+        s.flush().unwrap();
+        assert!(server.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,504 @@
+//! [`TcpTransport`] — the [`Transport`] contract over real localhost TCP
+//! sockets, one instance per OS process (one rank each).
+//!
+//! Topology: every **ordered** pair (src → dst) gets a dedicated socket.
+//! Each rank dials every peer (that socket carries only my → peer data,
+//! fed by a per-peer **writer thread**, so sends are pipelined and never
+//! block the compute path) and accepts one inbound socket per peer (a
+//! **reader thread** per socket demuxes frames into the per-(src, tag)
+//! FIFO queues that [`TcpTransport::recv_blocking`] pops).
+//!
+//! Graceful teardown: [`TcpTransport::shutdown`] flushes a
+//! [`Frame::Shutdown`] on every outbound socket and joins the writer
+//! threads; reader threads exit when the matching peer's shutdown frame
+//! (or a clean EOF) arrives.
+
+use super::frame::{self, Frame};
+use crate::comm::{Tag, Transport};
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Give up on a blocking receive after this long without the wanted
+/// message — a wiring bug should abort with a diagnostic, not hang CI.
+const RECV_DEADLINE: Duration = Duration::from_secs(300);
+const WAIT_SLICE: Duration = Duration::from_secs(5);
+
+enum Out {
+    Data(Tag, Vec<f32>),
+    Shutdown,
+}
+
+/// Unbounded handoff queue from the compute path to one writer thread.
+struct SendQueue {
+    q: Mutex<VecDeque<Out>>,
+    cv: Condvar,
+}
+
+impl SendQueue {
+    fn new() -> SendQueue {
+        SendQueue { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+
+    fn push(&self, msg: Out) {
+        self.q.lock().unwrap().push_back(msg);
+        self.cv.notify_one();
+    }
+
+    fn pop_blocking(&self) -> Out {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(m) = g.pop_front() {
+                return m;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.q.lock().unwrap().is_empty()
+    }
+}
+
+#[derive(Default)]
+struct InboxState {
+    /// FIFO per (src, tag) — mirrors the Fabric's (pair, tag) queues with
+    /// the dst fixed to the owning rank.
+    queues: HashMap<(u32, Tag), VecDeque<Vec<f32>>>,
+    /// peers whose stream ended (shutdown frame or EOF)
+    closed: std::collections::HashSet<usize>,
+    /// reader-thread failures, surfaced on the next receive
+    errors: Vec<String>,
+}
+
+struct Inbox {
+    state: Mutex<InboxState>,
+    cv: Condvar,
+}
+
+/// A [`Transport`] endpoint for exactly one rank of a TCP mesh. Build
+/// one per process with [`super::rendezvous::connect`].
+pub struct TcpTransport {
+    rank: usize,
+    n: usize,
+    /// per-peer outbound queues (`None` at `self.rank`)
+    out: Vec<Option<Arc<SendQueue>>>,
+    inbox: Arc<Inbox>,
+    payload_bytes_sent: AtomicU64,
+    wire_bytes_sent: AtomicU64,
+    msgs_sent: AtomicU64,
+    writers: Vec<std::thread::JoinHandle<()>>,
+    readers: Vec<std::thread::JoinHandle<()>>,
+    shut: bool,
+}
+
+fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
+    let mut w = std::io::BufWriter::new(stream);
+    loop {
+        match q.pop_blocking() {
+            Out::Data(tag, payload) => {
+                let f = Frame::Data { src: rank as u16, dst: peer as u16, tag, payload };
+                if let Err(e) = frame::write_frame(&mut w, &f) {
+                    // peer died; drain silently — its reader side reports
+                    eprintln!("[rank {rank}] write to {peer} failed: {e}");
+                    return;
+                }
+                // coalesce bursts: only flush once the queue drains
+                if q.is_empty() {
+                    if let Err(e) = w.flush() {
+                        eprintln!("[rank {rank}] flush to {peer} failed: {e}");
+                        return;
+                    }
+                }
+            }
+            Out::Shutdown => {
+                let f = Frame::Shutdown { src: rank as u16 };
+                let _ = frame::write_frame(&mut w, &f);
+                let _ = w.flush();
+                return;
+            }
+        }
+    }
+}
+
+fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match frame::read_frame(&mut r) {
+            Ok(Some(Frame::Data { src, dst, tag, payload })) => {
+                let mut g = inbox.state.lock().unwrap();
+                if src as usize != peer || dst as usize != my_rank {
+                    g.errors.push(format!(
+                        "misrouted frame on {peer}→{my_rank} socket: src {src} dst {dst}"
+                    ));
+                    inbox.cv.notify_all();
+                    return;
+                }
+                g.queues.entry((src as u32, tag)).or_default().push_back(payload);
+                inbox.cv.notify_all();
+            }
+            Ok(Some(Frame::Shutdown { .. })) | Ok(None) => {
+                let mut g = inbox.state.lock().unwrap();
+                g.closed.insert(peer);
+                inbox.cv.notify_all();
+                return;
+            }
+            Ok(Some(other)) => {
+                let mut g = inbox.state.lock().unwrap();
+                g.errors.push(format!("unexpected control frame from {peer}: {other:?}"));
+                g.closed.insert(peer);
+                inbox.cv.notify_all();
+                return;
+            }
+            Err(e) => {
+                let mut g = inbox.state.lock().unwrap();
+                g.errors.push(format!("read from {peer} failed: {e}"));
+                g.closed.insert(peer);
+                inbox.cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+impl TcpTransport {
+    /// Assemble a transport from already-established mesh sockets.
+    /// `outbound[j]` / `inbound[j]` are the me→j and j→me streams
+    /// (`None` at `rank`). Used by [`super::rendezvous::connect`].
+    pub(super) fn from_streams(
+        rank: usize,
+        outbound: Vec<Option<TcpStream>>,
+        inbound: Vec<Option<TcpStream>>,
+    ) -> TcpTransport {
+        let n = outbound.len();
+        assert_eq!(inbound.len(), n);
+        let inbox = Arc::new(Inbox { state: Mutex::new(InboxState::default()), cv: Condvar::new() });
+        let mut out: Vec<Option<Arc<SendQueue>>> = Vec::with_capacity(n);
+        let mut writers = Vec::new();
+        let mut readers = Vec::new();
+        for (peer, stream) in outbound.into_iter().enumerate() {
+            match stream {
+                Some(s) => {
+                    let q = Arc::new(SendQueue::new());
+                    let q2 = q.clone();
+                    writers.push(
+                        std::thread::Builder::new()
+                            .name(format!("pipegcn-w{rank}->{peer}"))
+                            .spawn(move || writer_loop(s, q2, rank, peer))
+                            .expect("spawn writer"),
+                    );
+                    out.push(Some(q));
+                }
+                None => {
+                    assert_eq!(peer, rank, "missing outbound stream for peer {peer}");
+                    out.push(None);
+                }
+            }
+        }
+        for (peer, stream) in inbound.into_iter().enumerate() {
+            match stream {
+                Some(s) => {
+                    let ib = inbox.clone();
+                    readers.push(
+                        std::thread::Builder::new()
+                            .name(format!("pipegcn-r{peer}->{rank}"))
+                            .spawn(move || reader_loop(s, ib, rank, peer))
+                            .expect("spawn reader"),
+                    );
+                }
+                None => assert_eq!(peer, rank, "missing inbound stream for peer {peer}"),
+            }
+        }
+        TcpTransport {
+            rank,
+            n,
+            out,
+            inbox,
+            payload_bytes_sent: AtomicU64::new(0),
+            wire_bytes_sent: AtomicU64::new(0),
+            msgs_sent: AtomicU64::new(0),
+            writers,
+            readers,
+            shut: false,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Payload bytes this rank has put on the wire (4 per f32) — the
+    /// number comparable with [`crate::comm::Fabric`] accounting.
+    pub fn payload_bytes_sent(&self) -> u64 {
+        self.payload_bytes_sent.load(Ordering::Relaxed)
+    }
+
+    /// Actual wire bytes including the per-frame header overhead.
+    pub fn wire_bytes_sent(&self) -> u64 {
+        self.wire_bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn msgs_sent(&self) -> u64 {
+        self.msgs_sent.load(Ordering::Relaxed)
+    }
+
+    /// Messages received but not yet consumed (tests: leak detection).
+    pub fn pending(&self) -> usize {
+        let g = self.inbox.state.lock().unwrap();
+        g.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Graceful teardown: enqueue a shutdown frame for every peer and
+    /// join the writer threads, guaranteeing all sent data (and the
+    /// shutdown markers) reach the OS socket buffers. Reader threads
+    /// exit on their own when the matching peer's shutdown frame (or a
+    /// clean EOF) arrives — they are deliberately not joined here, so
+    /// ranks may tear down in any order without deadlocking.
+    pub fn shutdown(&mut self) {
+        if self.shut {
+            return;
+        }
+        self.shut = true;
+        for q in self.out.iter().flatten() {
+            q.push(Out::Shutdown);
+        }
+        for h in self.writers.drain(..) {
+            let _ = h.join();
+        }
+        self.readers.clear(); // detach
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        // best effort: tell writers to flush shutdown frames, but do not
+        // join readers (peers may have died without sending theirs)
+        if !self.shut {
+            for q in self.out.iter().flatten() {
+                q.push(Out::Shutdown);
+            }
+            for h in self.writers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
+        assert_eq!(src, self.rank, "TcpTransport can only send as its own rank");
+        assert!(dst < self.n && dst != self.rank, "bad dst {dst}");
+        // fail at the fault site: an oversized frame would otherwise be
+        // rejected by the receiver's read_frame as wire corruption
+        assert!(
+            payload.len() * 4 + frame::DATA_OVERHEAD_BYTES <= frame::MAX_BODY_BYTES,
+            "payload of {} floats exceeds the {} MiB frame cap for {tag:?} — chunk the message",
+            payload.len(),
+            frame::MAX_BODY_BYTES >> 20,
+        );
+        let bytes = (payload.len() * 4) as u64;
+        self.payload_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
+        self.wire_bytes_sent
+            .fetch_add(bytes + frame::DATA_OVERHEAD_BYTES as u64, Ordering::Relaxed);
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.out[dst].as_ref().expect("peer queue").push(Out::Data(tag, payload));
+    }
+
+    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        assert_eq!(dst, self.rank, "TcpTransport can only receive for its own rank");
+        assert!(src < self.n && src != self.rank, "bad src {src}");
+        let started = Instant::now();
+        let mut g = self.inbox.state.lock().unwrap();
+        loop {
+            if let Some(v) =
+                g.queues.get_mut(&(src as u32, tag)).and_then(|q| q.pop_front())
+            {
+                return v;
+            }
+            if !g.errors.is_empty() {
+                panic!("[rank {}] transport failed: {}", self.rank, g.errors.join("; "));
+            }
+            // fail fast the moment the specific peer we need is gone —
+            // don't sit out the deadline while other peers are healthy
+            if g.closed.contains(&src) {
+                panic!(
+                    "[rank {}] peer {src} closed while a message for {src}->{dst} {tag:?} \
+                     was still awaited",
+                    self.rank
+                );
+            }
+            if started.elapsed() > RECV_DEADLINE {
+                panic!(
+                    "[rank {}] recv timeout waiting for {src}->{dst} {tag:?}",
+                    self.rank
+                );
+            }
+            let (guard, _timeout) = self.inbox.cv.wait_timeout(g, WAIT_SLICE).unwrap();
+            g = guard;
+        }
+    }
+
+    fn bytes_sent(&self, src: usize) -> u64 {
+        assert_eq!(src, self.rank, "TcpTransport accounts only its own rank");
+        self.payload_bytes_sent()
+    }
+}
+
+/// Dial `addr`, retrying while the listener comes up (workers race the
+/// rendezvous and each other during mesh formation).
+pub(super) fn retry_connect(addr: &str, deadline: Duration) -> std::io::Result<TcpStream> {
+    let started = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) if started.elapsed() < deadline => {
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                return Err(std::io::Error::new(
+                    e.kind(),
+                    format!("connecting to {addr}: {e}"),
+                ))
+            }
+        }
+    }
+}
+
+/// Accept one connection with a deadline (mesh formation must not hang).
+pub(super) fn accept_with_deadline(
+    listener: &TcpListener,
+    deadline: Duration,
+) -> std::io::Result<TcpStream> {
+    // nonblocking accept + poll keeps this dependency-free and portable
+    listener.set_nonblocking(true)?;
+    let started = Instant::now();
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                listener.set_nonblocking(false)?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if started.elapsed() > deadline {
+                    listener.set_nonblocking(false)?;
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        "timed out waiting for a mesh connection",
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                listener.set_nonblocking(false)?;
+                return Err(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::rendezvous::localhost_mesh;
+    use super::*;
+    use crate::comm::Phase;
+
+    #[test]
+    fn two_rank_send_recv_over_sockets() {
+        let mut mesh = localhost_mesh(2).unwrap();
+        let t = Tag::new(1, 0, Phase::FwdFeat);
+        mesh[0].send(0, 1, t, vec![1.0, 2.0, 3.0]);
+        assert_eq!(mesh[1].recv_blocking(0, 1, t), vec![1.0, 2.0, 3.0]);
+        // duplex: 1 -> 0 on the same mesh
+        mesh[1].send(1, 0, t, vec![4.0]);
+        assert_eq!(mesh[0].recv_blocking(1, 0, t), vec![4.0]);
+        assert_eq!(mesh[0].bytes_sent(0), 12);
+        assert_eq!(mesh[1].bytes_sent(1), 4);
+        assert!(mesh[0].wire_bytes_sent() > mesh[0].payload_bytes_sent());
+        for m in &mut mesh {
+            m.shutdown();
+        }
+        assert_eq!(mesh[1].pending(), 0);
+    }
+
+    #[test]
+    fn fifo_per_tag_ordering_across_sockets() {
+        let mut mesh = localhost_mesh(2).unwrap();
+        let ta = Tag::new(1, 0, Phase::FwdFeat);
+        let tb = Tag::new(1, 0, Phase::BwdGrad);
+        let tc = Tag::new(2, 0, Phase::FwdFeat);
+        // interleave three tags; FIFO must hold within each tag
+        for i in 0..5 {
+            mesh[0].send(0, 1, ta, vec![i as f32]);
+            mesh[0].send(0, 1, tb, vec![10.0 + i as f32]);
+            mesh[0].send(0, 1, tc, vec![20.0 + i as f32]);
+        }
+        // drain out of tag order relative to the sends
+        for i in 0..5 {
+            assert_eq!(mesh[1].recv_blocking(0, 1, tc), vec![20.0 + i as f32]);
+        }
+        for i in 0..5 {
+            assert_eq!(mesh[1].recv_blocking(0, 1, ta), vec![i as f32]);
+            assert_eq!(mesh[1].recv_blocking(0, 1, tb), vec![10.0 + i as f32]);
+        }
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    #[test]
+    fn three_rank_all_pairs() {
+        let mut mesh = localhost_mesh(3).unwrap();
+        let tag = Tag::new(7, 2, Phase::Reduce);
+        for s in 0..3usize {
+            for d in 0..3usize {
+                if s != d {
+                    mesh[s].send(s, d, tag, vec![(10 * s + d) as f32]);
+                }
+            }
+        }
+        for d in 0..3usize {
+            for s in 0..3usize {
+                if s != d {
+                    assert_eq!(mesh[d].recv_blocking(s, d, tag), vec![(10 * s + d) as f32]);
+                }
+            }
+        }
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    #[test]
+    fn payload_bits_survive_the_wire() {
+        let mut mesh = localhost_mesh(2).unwrap();
+        let tag = Tag::new(1, 0, Phase::Setup);
+        let ids = vec![0u32, 7, u32::MAX, 0x7FC0_0001];
+        mesh[0].send(0, 1, tag, crate::comm::encode_u32s(&ids));
+        let got = crate::comm::decode_u32s(&mesh[1].recv_blocking(0, 1, tag));
+        assert_eq!(got, ids);
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "own rank")]
+    fn send_as_foreign_rank_rejected() {
+        let mesh = localhost_mesh(2).unwrap();
+        mesh[0].send(1, 0, Tag::new(0, 0, Phase::Setup), vec![]);
+    }
+}

@@ -1,0 +1,131 @@
+//! One rank of a multi-process training run (`pipegcn worker`).
+//!
+//! Every worker deterministically rebuilds the same dataset, partition,
+//! and halo plan from the shared seed (synthetic datasets make the graph
+//! a pure function of its preset — no input files to ship), joins the
+//! TCP mesh through the rendezvous, and runs
+//! [`crate::coordinator::threaded::run_rank`] over its
+//! [`super::TcpTransport`]. Rank 0 gathers the per-rank partial losses
+//! (bit-losslessly, as f64 halves in the f32 payload channel), evaluates
+//! the final model, and owns all reporting.
+
+use super::rendezvous;
+use crate::comm::{decode_f64s, encode_f64s, Phase, Tag, Transport};
+use crate::coordinator::{evaluate, halo, threaded};
+use crate::exp::{self, RunOpts};
+use crate::util::error::{Context, Result};
+use crate::util::json::{FileEmitter, Json};
+
+/// The loss-gather rendezvous tag: iteration `u32::MAX` cannot collide
+/// with training iterations (epochs are far smaller), layer = src rank.
+fn loss_tag(src: usize) -> Tag {
+    Tag::new(u32::MAX, src as u16, Phase::Setup)
+}
+
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    pub rank: usize,
+    pub parts: usize,
+    /// rendezvous address (the launcher's listener)
+    pub coord: String,
+    pub dataset: String,
+    pub method: String,
+    /// 0 = preset default
+    pub epochs: usize,
+    pub seed: u64,
+    pub gamma: f32,
+    /// NDJSON run log (rank 0 only)
+    pub log: Option<String>,
+    /// result JSON (rank 0 only)
+    pub out: Option<String>,
+}
+
+/// What rank 0 learns at the end of a distributed run.
+pub struct WorkerSummary {
+    /// per-epoch global train loss, summed across ranks in rank order —
+    /// bit-identical to the sequential and threaded engines
+    pub losses: Vec<f64>,
+    pub final_val: f64,
+    pub final_test: f64,
+    /// payload bytes this rank sent (comparable with Fabric accounting)
+    pub payload_bytes_sent: u64,
+    /// actual wire bytes including frame headers
+    pub wire_bytes_sent: u64,
+}
+
+/// Run one rank end to end. Returns `Some(summary)` on rank 0, `None`
+/// elsewhere.
+pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
+    let run_opts = RunOpts { epochs: o.epochs, seed: o.seed, gamma: o.gamma, ..Default::default() };
+    let (_preset, graph, parts, cfg) = exp::prepare(&o.dataset, o.parts, &o.method, run_opts);
+    let plan = halo::build(&graph, &parts, cfg.model.kind);
+
+    let mut transport = rendezvous::connect(o.rank, o.parts, &o.coord)
+        .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
+    let (losses, params) = threaded::run_rank(&transport, &plan, o.rank, &cfg);
+
+    if o.rank != 0 {
+        transport.send(o.rank, 0, loss_tag(o.rank), encode_f64s(&losses));
+        transport.shutdown();
+        return Ok(None);
+    }
+
+    // rank 0: gather partial losses in rank order (f64 addition order
+    // matches the in-process engines, keeping sums bit-identical)
+    let mut total = losses;
+    for j in 1..o.parts {
+        let part = decode_f64s(&transport.recv_blocking(j, 0, loss_tag(j)));
+        if part.len() != total.len() {
+            crate::bail!("rank {j} reported {} epochs, expected {}", part.len(), total.len());
+        }
+        for (dst, v) in total.iter_mut().zip(&part) {
+            *dst += v;
+        }
+    }
+    let (final_val, final_test) = evaluate(&graph, &params, cfg.model.kind);
+    let summary = WorkerSummary {
+        losses: total,
+        final_val,
+        final_test,
+        payload_bytes_sent: transport.payload_bytes_sent(),
+        wire_bytes_sent: transport.wire_bytes_sent(),
+    };
+    transport.shutdown();
+
+    // NDJSON run log. Unlike the sequential engine's streaming log, the
+    // distributed rows are written after the gather (global loss only
+    // exists once every rank has reported), so rows carry just
+    // {epoch, loss} and the header says post_hoc — readers should treat
+    // per-epoch val/epoch_ms/bytes as sequential-engine-only fields.
+    if let Some(path) = &o.log {
+        let mut em = FileEmitter::create(
+            path,
+            Json::obj()
+                .set("dataset", o.dataset.as_str())
+                .set("parts", o.parts)
+                .set("method", o.method.as_str())
+                .set("engine", "tcp")
+                .set("post_hoc", true),
+        )
+        .with_context(|| format!("creating run log {path}"))?;
+        for (i, &loss) in summary.losses.iter().enumerate() {
+            em.emit(&Json::obj().set("epoch", i + 1).set("loss", loss))?;
+        }
+    }
+    if let Some(path) = &o.out {
+        Json::obj()
+            .set("dataset", o.dataset.as_str())
+            .set("parts", o.parts)
+            .set("method", o.method.as_str())
+            .set("engine", "tcp")
+            .set("epochs", summary.losses.len())
+            .set("final_loss", *summary.losses.last().unwrap_or(&f64::NAN))
+            .set("losses", &summary.losses[..])
+            .set("final_val", summary.final_val)
+            .set("final_test", summary.final_test)
+            .set("payload_bytes_sent", summary.payload_bytes_sent)
+            .set("wire_bytes_sent", summary.wire_bytes_sent)
+            .write_file(path)?;
+    }
+    Ok(Some(summary))
+}

@@ -9,7 +9,9 @@
 //! * [`xla`] — loads the AOT HLO-text artifacts compiled by
 //!   `python/compile/aot.py` (JAX + Pallas kernels) and executes them on
 //!   the PJRT CPU client. Fixed shapes per artifact; used by the
-//!   end-to-end quickstart and the parity tests.
+//!   end-to-end quickstart and the parity tests. Gated behind the `xla`
+//!   cargo feature (the default build ships a clean-erroring stub so the
+//!   crate stays dependency-free).
 
 pub mod native;
 pub mod xla;

@@ -3,6 +3,13 @@
 //! build time) and executes them on the PJRT CPU client. Python never
 //! runs at training time — the artifacts directory is the only contract.
 //!
+//! **Feature-gated**: the PJRT client lives in the vendored `xla` crate,
+//! which not every build image ships. The default build compiles a stub
+//! whose constructor returns a clean error (callers already handle the
+//! artifacts-missing path), so the crate stays dependency-free offline.
+//! Enable with `--features xla` on images that vendor the crate (add
+//! `xla = { path = "…" }` under `[dependencies]`).
+//!
 //! ### Padded layout contract (mirrors `python/compile/model.py`)
 //!
 //! Artifacts are compiled for fixed shapes `(N_PAD, L_PAD, f_in, f_out)`.
@@ -15,260 +22,345 @@
 //! python test `test_zero_padding_preserved`), so unpadding is a pure
 //! row-slice.
 
-use super::{Backend, BwdOut, FlopCount, FwdOut};
-use crate::tensor::{Csr, Mat};
-use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use crate::runtime::{Backend, BwdOut, FlopCount, FwdOut};
+    use crate::tensor::{Csr, Mat};
+    use crate::util::error::Result;
 
-struct PaddedProp {
-    /// dense padded propagation matrix as a literal-ready buffer
-    dense: Vec<f32>,
-    n_inner: usize,
-    n_halo: usize,
-    nnz: usize,
+    /// Stub compiled when the `xla` feature is off: constructing it
+    /// always fails with the same "artifacts unavailable" shape callers
+    /// already handle, and the `Backend` methods are unreachable.
+    pub struct XlaBackend {
+        _private: (),
+    }
+
+    impl XlaBackend {
+        pub fn from_artifacts(dir: &str) -> Result<XlaBackend> {
+            Err(crate::err_msg!(
+                "{dir}/manifest.json unusable: built without the `xla` feature \
+                 (PJRT client unavailable; rebuild with --features xla on an \
+                 image that vendors the xla crate)"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        pub fn pads(&self) -> (usize, usize) {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        pub fn layer_configs(&self) -> Vec<(usize, usize)> {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+    }
+
+    impl Backend for XlaBackend {
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
+
+        fn register_prop(&mut self, _prop: &Csr) -> usize {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        fn layer_fwd(
+            &mut self,
+            _prop: usize,
+            _h_full: &Mat,
+            _w_self: Option<&Mat>,
+            _w_neigh: &Mat,
+        ) -> FwdOut {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        fn layer_bwd(
+            &mut self,
+            _prop: usize,
+            _h_full: &Mat,
+            _z_agg: &Mat,
+            _m: &Mat,
+            _w_self: Option<&Mat>,
+            _w_neigh: &Mat,
+            _need_input_grad: bool,
+        ) -> BwdOut {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+
+        fn take_flops(&mut self) -> FlopCount {
+            unreachable!("stub XlaBackend cannot be constructed")
+        }
+    }
 }
 
-pub struct XlaBackend {
-    client: xla::PjRtClient,
-    n_pad: usize,
-    l_pad: usize,
-    fwd_execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    bwd_execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
-    props: Vec<PaddedProp>,
-    flops: FlopCount,
-}
+#[cfg(feature = "xla")]
+mod imp {
+    use crate::runtime::{Backend, BwdOut, FlopCount, FwdOut};
+    use crate::tensor::{Csr, Mat};
+    use crate::util::error::{Context, Result};
+    use crate::util::json::Json;
+    use std::collections::HashMap;
 
-impl XlaBackend {
-    /// Load every artifact listed in `<dir>/manifest.json` and compile it
-    /// on the PJRT CPU client.
-    pub fn from_artifacts(dir: &str) -> Result<XlaBackend> {
-        let manifest_path = format!("{dir}/manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("{manifest_path}: {e}"))?;
-        let n_pad = manifest
-            .get("n_pad")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing n_pad"))?;
-        let l_pad = manifest
-            .get("l_pad")
-            .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow!("manifest missing l_pad"))?;
-        let client = xla::PjRtClient::cpu()?;
-        let mut fwd_execs = HashMap::new();
-        let mut bwd_execs = HashMap::new();
-        let arts = manifest
-            .get("artifacts")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
-        for a in arts {
-            let pass = a.get("pass").and_then(Json::as_str).unwrap_or_default().to_string();
-            let f_in = a.get("f_in").and_then(Json::as_usize).unwrap_or(0);
-            let f_out = a.get("f_out").and_then(Json::as_usize).unwrap_or(0);
-            let file = a.get("file").and_then(Json::as_str).unwrap_or_default();
-            let path = format!("{dir}/{file}");
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {path}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compiling {path}"))?;
-            match pass.as_str() {
-                "sage_fwd" => {
-                    fwd_execs.insert((f_in, f_out), exe);
+    struct PaddedProp {
+        /// dense padded propagation matrix as a literal-ready buffer
+        dense: Vec<f32>,
+        n_inner: usize,
+        n_halo: usize,
+        nnz: usize,
+    }
+
+    pub struct XlaBackend {
+        client: xla::PjRtClient,
+        n_pad: usize,
+        l_pad: usize,
+        fwd_execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        bwd_execs: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+        props: Vec<PaddedProp>,
+        flops: FlopCount,
+    }
+
+    impl XlaBackend {
+        /// Load every artifact listed in `<dir>/manifest.json` and compile
+        /// it on the PJRT CPU client.
+        pub fn from_artifacts(dir: &str) -> Result<XlaBackend> {
+            let manifest_path = format!("{dir}/manifest.json");
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path} (run `make artifacts`)"))?;
+            let manifest =
+                Json::parse(&text).map_err(|e| crate::err_msg!("{manifest_path}: {e}"))?;
+            let n_pad = manifest
+                .get("n_pad")
+                .and_then(Json::as_usize)
+                .context("manifest missing n_pad")?;
+            let l_pad = manifest
+                .get("l_pad")
+                .and_then(Json::as_usize)
+                .context("manifest missing l_pad")?;
+            let client = xla::PjRtClient::cpu().context("creating the PJRT CPU client")?;
+            let mut fwd_execs = HashMap::new();
+            let mut bwd_execs = HashMap::new();
+            let arts = manifest
+                .get("artifacts")
+                .and_then(Json::as_arr)
+                .context("manifest missing artifacts")?;
+            for a in arts {
+                let pass =
+                    a.get("pass").and_then(Json::as_str).unwrap_or_default().to_string();
+                let f_in = a.get("f_in").and_then(Json::as_usize).unwrap_or(0);
+                let f_out = a.get("f_out").and_then(Json::as_usize).unwrap_or(0);
+                let file = a.get("file").and_then(Json::as_str).unwrap_or_default();
+                let path = format!("{dir}/{file}");
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .with_context(|| format!("parsing {path}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe =
+                    client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+                match pass.as_str() {
+                    "sage_fwd" => {
+                        fwd_execs.insert((f_in, f_out), exe);
+                    }
+                    "sage_bwd" => {
+                        bwd_execs.insert((f_in, f_out), exe);
+                    }
+                    other => crate::bail!("unknown artifact pass '{other}'"),
                 }
-                "sage_bwd" => {
-                    bwd_execs.insert((f_in, f_out), exe);
+            }
+            if fwd_execs.is_empty() {
+                crate::bail!("no forward artifacts in {dir}");
+            }
+            Ok(XlaBackend {
+                client,
+                n_pad,
+                l_pad,
+                fwd_execs,
+                bwd_execs,
+                props: Vec::new(),
+                flops: FlopCount::default(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn pads(&self) -> (usize, usize) {
+            (self.n_pad, self.l_pad)
+        }
+
+        pub fn layer_configs(&self) -> Vec<(usize, usize)> {
+            let mut v: Vec<(usize, usize)> = self.fwd_execs.keys().cloned().collect();
+            v.sort_unstable();
+            v
+        }
+
+        /// Pack a partition-local matrix (rows = inner then halo) into the
+        /// padded row layout.
+        fn pad_h(&self, h: &Mat, n_inner: usize) -> Vec<f32> {
+            let cols = h.cols;
+            let mut out = vec![0.0f32; self.l_pad * cols];
+            let n_halo = h.rows - n_inner;
+            out[..n_inner * cols].copy_from_slice(&h.data[..n_inner * cols]);
+            out[self.n_pad * cols..(self.n_pad + n_halo) * cols]
+                .copy_from_slice(&h.data[n_inner * cols..]);
+            out
+        }
+
+        /// Slice a padded (L_PAD × cols) buffer back to the packed local
+        /// layout (n_inner + n_halo rows).
+        fn unpad_local(&self, data: &[f32], cols: usize, n_inner: usize, n_halo: usize) -> Mat {
+            let mut out = Mat::zeros(n_inner + n_halo, cols);
+            out.data[..n_inner * cols].copy_from_slice(&data[..n_inner * cols]);
+            out.data[n_inner * cols..]
+                .copy_from_slice(&data[self.n_pad * cols..(self.n_pad + n_halo) * cols]);
+            out
+        }
+
+        fn lit(data: &[f32], rows: usize, cols: usize) -> xla::Literal {
+            xla::Literal::vec1(data)
+                .reshape(&[rows as i64, cols as i64])
+                .expect("literal reshape")
+        }
+
+        fn run(
+            exe: &xla::PjRtLoadedExecutable,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<xla::Literal>> {
+            let result = exe
+                .execute::<xla::Literal>(inputs)
+                .context("executing artifact")?[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            result.to_tuple().context("untupling result")
+        }
+
+        /// `w_self = None` (GCN layer) is emulated with a zero self-weight
+        /// — artifacts are compiled for the SAGE signature.
+        fn self_or_zero(w_self: Option<&Mat>, w_neigh: &Mat) -> Mat {
+            w_self.cloned().unwrap_or_else(|| Mat::zeros(w_neigh.rows, w_neigh.cols))
+        }
+    }
+
+    impl Backend for XlaBackend {
+        fn name(&self) -> &'static str {
+            "xla"
+        }
+
+        fn register_prop(&mut self, prop: &Csr) -> usize {
+            let n_inner = prop.rows;
+            let n_halo = prop.cols - prop.rows;
+            assert!(
+                n_inner <= self.n_pad && n_halo <= self.l_pad - self.n_pad,
+                "partition ({n_inner} inner, {n_halo} halo) exceeds artifact padding \
+                 ({}, {}) — regenerate artifacts with larger N_PAD/L_PAD",
+                self.n_pad,
+                self.l_pad
+            );
+            let mut dense = vec![0.0f32; self.n_pad * self.l_pad];
+            for r in 0..n_inner {
+                for (c, v) in prop.row_entries(r) {
+                    let col = if c < n_inner { c } else { self.n_pad + (c - n_inner) };
+                    dense[r * self.l_pad + col] = v;
                 }
-                other => bail!("unknown artifact pass '{other}'"),
+            }
+            self.props.push(PaddedProp { dense, n_inner, n_halo, nnz: prop.nnz() });
+            self.props.len() - 1
+        }
+
+        fn layer_fwd(
+            &mut self,
+            prop: usize,
+            h_full: &Mat,
+            w_self: Option<&Mat>,
+            w_neigh: &Mat,
+        ) -> FwdOut {
+            let (n_inner, n_halo, nnz) = {
+                let p = &self.props[prop];
+                (p.n_inner, p.n_halo, p.nnz)
+            };
+            let f_in = h_full.cols;
+            let f_out = w_neigh.cols;
+            let h_pad = self.pad_h(h_full, n_inner);
+            let ws = Self::self_or_zero(w_self, w_neigh);
+            let p_lit = Self::lit(&self.props[prop].dense, self.n_pad, self.l_pad);
+            let h_lit = Self::lit(&h_pad, self.l_pad, f_in);
+            let wn_lit = Self::lit(&w_neigh.data, f_in, f_out);
+            let ws_lit = Self::lit(&ws.data, f_in, f_out);
+            let exe = self
+                .fwd_execs
+                .get(&(f_in, f_out))
+                .unwrap_or_else(|| panic!("no sage_fwd artifact for ({f_in},{f_out})"));
+            let outs = Self::run(exe, &[p_lit, h_lit, wn_lit, ws_lit]).expect("xla fwd");
+            let z_pad = outs[0].to_vec::<f32>().expect("z literal");
+            let pre_pad = outs[1].to_vec::<f32>().expect("pre literal");
+            let _ = n_halo;
+            let z_agg = Mat::from_vec(n_inner, f_in, z_pad[..n_inner * f_in].to_vec());
+            let pre = Mat::from_vec(n_inner, f_out, pre_pad[..n_inner * f_out].to_vec());
+            self.flops.spmm += 2.0 * nnz as f64 * f_in as f64;
+            self.flops.gemm += 2.0 * (n_inner * f_in * f_out * 2) as f64;
+            FwdOut { z_agg, pre }
+        }
+
+        fn layer_bwd(
+            &mut self,
+            prop: usize,
+            h_full: &Mat,
+            z_agg: &Mat,
+            m: &Mat,
+            w_self: Option<&Mat>,
+            w_neigh: &Mat,
+            need_input_grad: bool,
+        ) -> BwdOut {
+            let (n_inner, n_halo, nnz) = {
+                let p = &self.props[prop];
+                (p.n_inner, p.n_halo, p.nnz)
+            };
+            let f_in = h_full.cols;
+            let f_out = w_neigh.cols;
+            // pad inputs
+            let h_pad = self.pad_h(h_full, n_inner);
+            let mut z_pad = vec![0.0f32; self.n_pad * f_in];
+            z_pad[..n_inner * f_in].copy_from_slice(&z_agg.data);
+            let mut m_pad = vec![0.0f32; self.n_pad * f_out];
+            m_pad[..n_inner * f_out].copy_from_slice(&m.data);
+            let ws = Self::self_or_zero(w_self, w_neigh);
+            let inputs = [
+                Self::lit(&self.props[prop].dense, self.n_pad, self.l_pad),
+                Self::lit(&h_pad, self.l_pad, f_in),
+                Self::lit(&z_pad, self.n_pad, f_in),
+                Self::lit(&m_pad, self.n_pad, f_out),
+                Self::lit(&w_neigh.data, f_in, f_out),
+                Self::lit(&ws.data, f_in, f_out),
+            ];
+            let exe = self
+                .bwd_execs
+                .get(&(f_in, f_out))
+                .unwrap_or_else(|| panic!("no sage_bwd artifact for ({f_in},{f_out})"));
+            let outs = Self::run(exe, &inputs).expect("xla bwd");
+            let g_neigh =
+                Mat::from_vec(f_in, f_out, outs[0].to_vec::<f32>().expect("g_neigh"));
+            let g_self_mat =
+                Mat::from_vec(f_in, f_out, outs[1].to_vec::<f32>().expect("g_self"));
+            let j_full = if need_input_grad {
+                let j_pad = outs[2].to_vec::<f32>().expect("j_full");
+                Some(self.unpad_local(&j_pad, f_in, n_inner, n_halo))
+            } else {
+                None
+            };
+            self.flops.spmm += 2.0 * nnz as f64 * f_in as f64;
+            self.flops.gemm += 2.0 * (n_inner * f_in * f_out * 4) as f64;
+            BwdOut {
+                g_self: w_self.map(|_| g_self_mat),
+                g_neigh,
+                j_full,
             }
         }
-        if fwd_execs.is_empty() {
-            bail!("no forward artifacts in {dir}");
+
+        fn take_flops(&mut self) -> FlopCount {
+            std::mem::take(&mut self.flops)
         }
-        Ok(XlaBackend {
-            client,
-            n_pad,
-            l_pad,
-            fwd_execs,
-            bwd_execs,
-            props: Vec::new(),
-            flops: FlopCount::default(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn pads(&self) -> (usize, usize) {
-        (self.n_pad, self.l_pad)
-    }
-
-    pub fn layer_configs(&self) -> Vec<(usize, usize)> {
-        let mut v: Vec<(usize, usize)> = self.fwd_execs.keys().cloned().collect();
-        v.sort_unstable();
-        v
-    }
-
-    /// Pack a partition-local matrix (rows = inner then halo) into the
-    /// padded row layout.
-    fn pad_h(&self, h: &Mat, n_inner: usize) -> Vec<f32> {
-        let cols = h.cols;
-        let mut out = vec![0.0f32; self.l_pad * cols];
-        let n_halo = h.rows - n_inner;
-        out[..n_inner * cols].copy_from_slice(&h.data[..n_inner * cols]);
-        out[self.n_pad * cols..(self.n_pad + n_halo) * cols]
-            .copy_from_slice(&h.data[n_inner * cols..]);
-        out
-    }
-
-    /// Slice a padded (L_PAD × cols) buffer back to the packed local
-    /// layout (n_inner + n_halo rows).
-    fn unpad_local(&self, data: &[f32], cols: usize, n_inner: usize, n_halo: usize) -> Mat {
-        let mut out = Mat::zeros(n_inner + n_halo, cols);
-        out.data[..n_inner * cols].copy_from_slice(&data[..n_inner * cols]);
-        out.data[n_inner * cols..]
-            .copy_from_slice(&data[self.n_pad * cols..(self.n_pad + n_halo) * cols]);
-        out
-    }
-
-    fn lit(data: &[f32], rows: usize, cols: usize) -> xla::Literal {
-        xla::Literal::vec1(data)
-            .reshape(&[rows as i64, cols as i64])
-            .expect("literal reshape")
-    }
-
-    fn run(
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple()?)
-    }
-
-    /// `w_self = None` (GCN layer) is emulated with a zero self-weight —
-    /// artifacts are compiled for the SAGE signature.
-    fn self_or_zero(w_self: Option<&Mat>, w_neigh: &Mat) -> Mat {
-        w_self.cloned().unwrap_or_else(|| Mat::zeros(w_neigh.rows, w_neigh.cols))
     }
 }
 
-impl Backend for XlaBackend {
-    fn name(&self) -> &'static str {
-        "xla"
-    }
-
-    fn register_prop(&mut self, prop: &Csr) -> usize {
-        let n_inner = prop.rows;
-        let n_halo = prop.cols - prop.rows;
-        assert!(
-            n_inner <= self.n_pad && n_halo <= self.l_pad - self.n_pad,
-            "partition ({n_inner} inner, {n_halo} halo) exceeds artifact padding \
-             ({}, {}) — regenerate artifacts with larger N_PAD/L_PAD",
-            self.n_pad,
-            self.l_pad
-        );
-        let mut dense = vec![0.0f32; self.n_pad * self.l_pad];
-        for r in 0..n_inner {
-            for (c, v) in prop.row_entries(r) {
-                let col = if c < n_inner { c } else { self.n_pad + (c - n_inner) };
-                dense[r * self.l_pad + col] = v;
-            }
-        }
-        self.props.push(PaddedProp { dense, n_inner, n_halo, nnz: prop.nnz() });
-        self.props.len() - 1
-    }
-
-    fn layer_fwd(
-        &mut self,
-        prop: usize,
-        h_full: &Mat,
-        w_self: Option<&Mat>,
-        w_neigh: &Mat,
-    ) -> FwdOut {
-        let (n_inner, n_halo, nnz) = {
-            let p = &self.props[prop];
-            (p.n_inner, p.n_halo, p.nnz)
-        };
-        let f_in = h_full.cols;
-        let f_out = w_neigh.cols;
-        let h_pad = self.pad_h(h_full, n_inner);
-        let ws = Self::self_or_zero(w_self, w_neigh);
-        let p_lit = Self::lit(&self.props[prop].dense, self.n_pad, self.l_pad);
-        let h_lit = Self::lit(&h_pad, self.l_pad, f_in);
-        let wn_lit = Self::lit(&w_neigh.data, f_in, f_out);
-        let ws_lit = Self::lit(&ws.data, f_in, f_out);
-        let exe = self
-            .fwd_execs
-            .get(&(f_in, f_out))
-            .unwrap_or_else(|| panic!("no sage_fwd artifact for ({f_in},{f_out})"));
-        let outs = Self::run(exe, &[p_lit, h_lit, wn_lit, ws_lit]).expect("xla fwd");
-        let z_pad = outs[0].to_vec::<f32>().expect("z literal");
-        let pre_pad = outs[1].to_vec::<f32>().expect("pre literal");
-        let _ = n_halo;
-        let z_agg = Mat::from_vec(n_inner, f_in, z_pad[..n_inner * f_in].to_vec());
-        let pre = Mat::from_vec(n_inner, f_out, pre_pad[..n_inner * f_out].to_vec());
-        self.flops.spmm += 2.0 * nnz as f64 * f_in as f64;
-        self.flops.gemm += 2.0 * (n_inner * f_in * f_out * 2) as f64;
-        FwdOut { z_agg, pre }
-    }
-
-    fn layer_bwd(
-        &mut self,
-        prop: usize,
-        h_full: &Mat,
-        z_agg: &Mat,
-        m: &Mat,
-        w_self: Option<&Mat>,
-        w_neigh: &Mat,
-        need_input_grad: bool,
-    ) -> BwdOut {
-        let (n_inner, n_halo, nnz) = {
-            let p = &self.props[prop];
-            (p.n_inner, p.n_halo, p.nnz)
-        };
-        let f_in = h_full.cols;
-        let f_out = w_neigh.cols;
-        // pad inputs
-        let h_pad = self.pad_h(h_full, n_inner);
-        let mut z_pad = vec![0.0f32; self.n_pad * f_in];
-        z_pad[..n_inner * f_in].copy_from_slice(&z_agg.data);
-        let mut m_pad = vec![0.0f32; self.n_pad * f_out];
-        m_pad[..n_inner * f_out].copy_from_slice(&m.data);
-        let ws = Self::self_or_zero(w_self, w_neigh);
-        let inputs = [
-            Self::lit(&self.props[prop].dense, self.n_pad, self.l_pad),
-            Self::lit(&h_pad, self.l_pad, f_in),
-            Self::lit(&z_pad, self.n_pad, f_in),
-            Self::lit(&m_pad, self.n_pad, f_out),
-            Self::lit(&w_neigh.data, f_in, f_out),
-            Self::lit(&ws.data, f_in, f_out),
-        ];
-        let exe = self
-            .bwd_execs
-            .get(&(f_in, f_out))
-            .unwrap_or_else(|| panic!("no sage_bwd artifact for ({f_in},{f_out})"));
-        let outs = Self::run(exe, &inputs).expect("xla bwd");
-        let g_neigh =
-            Mat::from_vec(f_in, f_out, outs[0].to_vec::<f32>().expect("g_neigh"));
-        let g_self_mat =
-            Mat::from_vec(f_in, f_out, outs[1].to_vec::<f32>().expect("g_self"));
-        let j_full = if need_input_grad {
-            let j_pad = outs[2].to_vec::<f32>().expect("j_full");
-            Some(self.unpad_local(&j_pad, f_in, n_inner, n_halo))
-        } else {
-            None
-        };
-        self.flops.spmm += 2.0 * nnz as f64 * f_in as f64;
-        self.flops.gemm += 2.0 * (n_inner * f_in * f_out * 4) as f64;
-        BwdOut {
-            g_self: w_self.map(|_| g_self_mat),
-            g_neigh,
-            j_full,
-        }
-    }
-
-    fn take_flops(&mut self) -> FlopCount {
-        std::mem::take(&mut self.flops)
-    }
-}
+pub use imp::XlaBackend;

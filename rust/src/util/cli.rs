@@ -126,7 +126,7 @@ impl Args {
     }
 
     /// Error out (with a list) if any flag is not in `known`.
-    pub fn assert_known(&self, known: &[&str]) -> anyhow::Result<()> {
+    pub fn assert_known(&self, known: &[&str]) -> crate::util::error::Result<()> {
         let bad: Vec<&String> = self
             .flags
             .keys()
@@ -135,7 +135,7 @@ impl Args {
         if bad.is_empty() {
             Ok(())
         } else {
-            anyhow::bail!("unknown flags: {:?} (known: {:?})", bad, known)
+            crate::bail!("unknown flags: {:?} (known: {:?})", bad, known)
         }
     }
 }

@@ -1,0 +1,157 @@
+//! Minimal error type (no `anyhow` on this image).
+//!
+//! A string-message error with the three affordances the crate actually
+//! uses: `bail!`-style early returns, `.context(...)` wrapping, and `?`
+//! conversions from the std error types that appear at the I/O and
+//! parsing boundaries. Kept deliberately tiny so the crate stays
+//! dependency-free and builds offline.
+
+use std::fmt;
+
+/// Crate-wide error: a message, optionally built from a chain of
+/// contexts (`outer: inner`).
+pub struct Error {
+    msg: String,
+}
+
+/// Crate-wide result alias (the `anyhow::Result` role).
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    // `fn main() -> Result<()>` prints errors via Debug; show the plain
+    // message there too.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Context` stand-in: attach a message to any displayable error.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.into()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (the `anyhow::bail!` role).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($t)*)))
+    };
+}
+
+/// Build a formatted [`Error`] value (the `anyhow::anyhow!` role).
+#[macro_export]
+macro_rules! err_msg {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("bad {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "bad 42");
+        // alternate formatting (used by callers as `{err:#}`) still shows
+        // the message
+        assert_eq!(format!("{e:#}"), "bad 42");
+    }
+
+    #[test]
+    fn context_wraps_display_errors() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.context("reading manifest.json").unwrap_err();
+        assert!(e.to_string().starts_with("reading manifest.json: "));
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing n_pad").unwrap_err().to_string(), "missing n_pad");
+        assert_eq!(Some(7u32).context("x").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_conversions() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+        fn parse() -> Result<usize> {
+            Ok("12".parse::<usize>()?)
+        }
+        assert_eq!(parse().unwrap(), 12);
+    }
+}

@@ -1,8 +1,9 @@
 //! Minimal ordered JSON value + writer (no serde on this image).
 //!
 //! Only what the result emitters need: construction helpers, escaping,
-//! compact and pretty printing. Object keys preserve insertion order so
-//! emitted result files diff cleanly across runs.
+//! compact and pretty printing, and a streaming NDJSON [`Emitter`] for
+//! run logs. Object keys preserve insertion order so emitted result
+//! files diff cleanly across runs.
 
 use std::fmt::Write as _;
 
@@ -430,6 +431,80 @@ impl From<&[f64]> for Json {
     }
 }
 
+// ---------------------------------------------------------------------
+// Streaming NDJSON emission (run logs)
+// ---------------------------------------------------------------------
+
+/// Streaming newline-delimited-JSON writer for run logs: one compact
+/// object per line, flushed after every row so `tail -f` (or a crashed
+/// run's partial log) always shows complete records.
+///
+/// An optional header row (run metadata) is written lazily before the
+/// first data row — the `started` flag — so a run that dies before its
+/// first epoch leaves an empty file rather than a headers-only one.
+pub struct Emitter<W: std::io::Write> {
+    out: W,
+    header: Option<Json>,
+    started: bool,
+    rows: usize,
+}
+
+impl<W: std::io::Write> Emitter<W> {
+    pub fn new(out: W) -> Emitter<W> {
+        Emitter { out, header: None, started: false, rows: 0 }
+    }
+
+    /// Set a metadata row to emit as the first line (lazily, before the
+    /// first [`Emitter::emit`]).
+    pub fn with_header(out: W, header: Json) -> Emitter<W> {
+        Emitter { out, header: Some(header), started: false, rows: 0 }
+    }
+
+    /// Append one row (compact, newline-terminated) and flush.
+    pub fn emit(&mut self, row: &Json) -> std::io::Result<()> {
+        if !self.started {
+            self.started = true;
+            if let Some(h) = self.header.take() {
+                self.out.write_all(h.to_compact().as_bytes())?;
+                self.out.write_all(b"\n")?;
+            }
+        }
+        self.out.write_all(row.to_compact().as_bytes())?;
+        self.out.write_all(b"\n")?;
+        self.rows += 1;
+        self.out.flush()
+    }
+
+    /// Data rows emitted so far (header excluded).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+}
+
+/// The common file-backed emitter (`--log <path>`).
+pub type FileEmitter = Emitter<std::io::BufWriter<std::fs::File>>;
+
+impl FileEmitter {
+    /// Create (truncate) `path` — parent dirs included — for streaming.
+    pub fn create(path: &str, header: Json) -> std::io::Result<FileEmitter> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let f = std::fs::File::create(path)?;
+        Ok(Emitter::with_header(std::io::BufWriter::new(f), header))
+    }
+}
+
+/// Parse an NDJSON string back into rows (tests / result readers).
+pub fn parse_ndjson(text: &str) -> Result<Vec<Json>, String> {
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(Json::parse)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -506,6 +581,43 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("{'a':1}").is_err());
+    }
+
+    #[test]
+    fn emitter_streams_ndjson_with_lazy_header() {
+        let mut e = Emitter::with_header(Vec::new(), Json::obj().set("run", "t1"));
+        // nothing written until the first row
+        assert!(e.out.is_empty());
+        e.emit(&Json::obj().set("epoch", 1usize).set("loss", 0.5f64)).unwrap();
+        e.emit(&Json::obj().set("epoch", 2usize).set("loss", 0.25f64)).unwrap();
+        assert_eq!(e.rows(), 2);
+        let text = String::from_utf8(e.out).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        let rows = parse_ndjson(&text).unwrap();
+        assert_eq!(rows[0].get("run").unwrap().as_str(), Some("t1"));
+        assert_eq!(rows[2].get("epoch").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn emitter_without_header() {
+        let mut e = Emitter::new(Vec::new());
+        e.emit(&Json::obj().set("x", 1usize)).unwrap();
+        let text = String::from_utf8(e.out).unwrap();
+        assert_eq!(text, "{\"x\":1}\n");
+    }
+
+    #[test]
+    fn f64_roundtrips_exactly_through_ndjson() {
+        // run logs are compared bit-for-bit across engines; Rust's f64
+        // Display is shortest-roundtrip so parse(print(x)) == x exactly
+        let xs = [0.1f64, 1.0 / 3.0, 2.517382910473e-5, 123456.789012345];
+        for &x in &xs {
+            let mut e = Emitter::new(Vec::new());
+            e.emit(&Json::obj().set("v", x)).unwrap();
+            let text = String::from_utf8(e.out).unwrap();
+            let back = parse_ndjson(&text).unwrap()[0].get("v").unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x}");
+        }
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Zero-dependency substrates: PRNG, JSON emission, CLI parsing, timing,
-//! and a small property-based testing harness.
+//! error handling, and a small property-based testing harness.
 //!
-//! The build image vendors only `xla` + `anyhow`, so the usual crates
-//! (`rand`, `serde`, `clap`, `criterion`, `proptest`) are reimplemented
-//! here at the scale this project needs.
+//! The crate carries **no external dependencies** so it builds offline on
+//! any image with a Rust toolchain: the usual crates (`rand`, `serde`,
+//! `clap`, `criterion`, `proptest`, `anyhow`) are reimplemented here at
+//! the scale this project needs. The PJRT `xla` crate is optional and
+//! feature-gated (see `runtime::xla`).
 
 pub mod rng;
 pub mod json;
 pub mod cli;
 pub mod timer;
 pub mod prop;
+pub mod error;
 
 /// Format a byte count human-readably (e.g. `1.50 GiB`).
 pub fn fmt_bytes(b: u64) -> String {

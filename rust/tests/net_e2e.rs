@@ -1,0 +1,211 @@
+//! End-to-end tests of the `net` subsystem: the TCP transport must
+//! reproduce the sequential and threaded engines bit-for-bit (the
+//! dataflow is deterministic — staleness lives in message tags), both
+//! with in-process transports over real sockets and with genuinely
+//! separate OS processes via `pipegcn launch`.
+
+use pipegcn::coordinator::{
+    halo, threaded, trainer, Optimizer, PipeOpts, TrainConfig, Variant,
+};
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::graph::presets;
+use pipegcn::model::ModelConfig;
+use pipegcn::net::localhost_mesh;
+use pipegcn::partition::{partition, Method};
+use pipegcn::runtime::native::NativeBackend;
+use pipegcn::util::json::Json;
+use std::sync::Arc;
+
+fn tiny_cfg(variant: Variant, dropout: f32, epochs: usize) -> (TrainConfig, usize) {
+    let g = presets::by_name("tiny").unwrap().build(42);
+    let cfg = TrainConfig {
+        model: ModelConfig::sage(g.feat_dim(), 16, 2, g.labels.n_classes(), dropout),
+        variant,
+        optimizer: Optimizer::Adam,
+        lr: 0.01,
+        epochs,
+        seed: 11,
+        eval_every: 0,
+        probe_errors: false,
+    };
+    (cfg, g.n)
+}
+
+/// Drive `run_rank` over real localhost sockets (one thread per rank,
+/// each owning its own `TcpTransport`) and return the global loss curve.
+fn tcp_losses(parts: usize, variant: Variant, dropout: f32, epochs: usize) -> Vec<f64> {
+    let g = presets::by_name("tiny").unwrap().build(42);
+    let pt = partition(&g, parts, Method::Multilevel, 2);
+    let (cfg, _) = tiny_cfg(variant, dropout, epochs);
+    let plan = Arc::new(halo::build(&g, &pt, cfg.model.kind));
+    let cfg = Arc::new(cfg);
+    let mesh = localhost_mesh(parts).expect("mesh");
+    let handles: Vec<_> = mesh
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut transport)| {
+            let plan = plan.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let (losses, _params) = threaded::run_rank(&transport, &plan, rank, &cfg);
+                let sent = transport.payload_bytes_sent();
+                transport.shutdown();
+                (losses, sent)
+            })
+        })
+        .collect();
+    let per_rank: Vec<(Vec<f64>, u64)> =
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect();
+    for (rank, (_, sent)) in per_rank.iter().enumerate() {
+        assert!(*sent > 0, "rank {rank} sent nothing over TCP");
+    }
+    let mut losses = vec![0.0f64; cfg.epochs];
+    for (ls, _) in &per_rank {
+        for (dst, v) in losses.iter_mut().zip(ls) {
+            *dst += v;
+        }
+    }
+    losses
+}
+
+#[test]
+fn tcp_matches_sequential_and_threaded_bitwise() {
+    for (variant, dropout) in [
+        (Variant::Vanilla, 0.0f32),
+        (Variant::Pipe(PipeOpts::plain()), 0.0),
+        (Variant::Pipe(PipeOpts { smooth_feat: true, smooth_grad: true, gamma: 0.7 }), 0.5),
+    ] {
+        let g = presets::by_name("tiny").unwrap().build(42);
+        let pt = partition(&g, 3, Method::Multilevel, 2);
+        let (cfg, _) = tiny_cfg(variant, dropout, 5);
+        let mut b = NativeBackend::new();
+        let seq = trainer::train(&g, &pt, &cfg, &mut b);
+        let thr = threaded::train_threaded(&g, &pt, &cfg);
+        let tcp = tcp_losses(3, variant, dropout, 5);
+        for (e, stat) in seq.curve.iter().enumerate() {
+            assert_eq!(
+                stat.train_loss.to_bits(),
+                tcp[e].to_bits(),
+                "{variant:?} epoch {}: sequential {} vs tcp {}",
+                e + 1,
+                stat.train_loss,
+                tcp[e]
+            );
+            assert_eq!(
+                thr.losses[e].to_bits(),
+                tcp[e].to_bits(),
+                "{variant:?} epoch {}: threaded vs tcp",
+                e + 1
+            );
+        }
+    }
+}
+
+#[test]
+fn tcp_transport_fifo_and_accounting_through_schedule() {
+    // 2-rank pipe run; after shutdown no messages may be left queued
+    // (wrong tags / leaks would strand payloads)
+    let g = presets::by_name("tiny").unwrap().build(42);
+    let pt = partition(&g, 2, Method::Multilevel, 2);
+    let (cfg, _) = tiny_cfg(Variant::Pipe(PipeOpts::plain()), 0.0, 4);
+    let plan = Arc::new(halo::build(&g, &pt, cfg.model.kind));
+    let cfg = Arc::new(cfg);
+    let mesh = localhost_mesh(2).unwrap();
+    let handles: Vec<_> = mesh
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut transport)| {
+            let plan = plan.clone();
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                let _ = threaded::run_rank(&transport, &plan, rank, &cfg);
+                transport.shutdown();
+                (transport.pending(), transport.payload_bytes_sent())
+            })
+        })
+        .collect();
+    let mut sent_total = 0;
+    for h in handles {
+        let (pending, sent) = h.join().unwrap();
+        assert_eq!(pending, 0, "messages stranded in a TCP inbox");
+        sent_total += sent;
+    }
+    // total payload over TCP equals the threaded fabric's accounting
+    let thr = threaded::train_threaded(&g, &pt, &cfg);
+    assert_eq!(sent_total, thr.comm_bytes);
+}
+
+/// The acceptance path: `pipegcn launch --parts 2` spawns two real OS
+/// processes that train over localhost TCP, and the final loss matches
+/// the sequential trainer bit-for-bit (through the roundtrip-exact JSON
+/// result file).
+#[test]
+fn launch_two_processes_matches_sequential_bitwise() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let out_path = format!(
+        "/tmp/pipegcn_launch_e2e_{}.json",
+        std::process::id()
+    );
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "3", "--seed", "1", "--out",
+        ])
+        .arg(&out_path)
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "launch exited with {status}");
+
+    let text = std::fs::read_to_string(&out_path).expect("result json");
+    let result = Json::parse(&text).expect("parse result json");
+    assert_eq!(result.get("engine").and_then(Json::as_str), Some("tcp"));
+    let losses: Vec<f64> = result
+        .get("losses")
+        .and_then(Json::as_arr)
+        .expect("losses array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(losses.len(), 3);
+
+    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 3, ..Default::default() });
+    for (e, stat) in seq.result.curve.iter().enumerate() {
+        assert_eq!(
+            stat.train_loss.to_bits(),
+            losses[e].to_bits(),
+            "epoch {}: sequential {} vs 2-process tcp {}",
+            e + 1,
+            stat.train_loss,
+            losses[e]
+        );
+    }
+    let final_loss = result.get("final_loss").and_then(Json::as_f64).unwrap();
+    assert_eq!(
+        final_loss.to_bits(),
+        seq.result.curve.last().unwrap().train_loss.to_bits(),
+        "final loss must match the sequential trainer bit-for-bit"
+    );
+    std::fs::remove_file(&out_path).ok();
+}
+
+/// `launch` also streams an NDJSON run log from rank 0.
+#[test]
+fn launch_writes_run_log() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let log_path = format!("/tmp/pipegcn_launch_log_{}.ndjson", std::process::id());
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "gcn",
+            "--epochs", "2", "--log",
+        ])
+        .arg(&log_path)
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "launch exited with {status}");
+    let text = std::fs::read_to_string(&log_path).expect("run log");
+    let rows = pipegcn::util::json::parse_ndjson(&text).unwrap();
+    assert_eq!(rows.len(), 3); // header + 2 epochs
+    assert_eq!(rows[0].get("engine").and_then(Json::as_str), Some("tcp"));
+    assert_eq!(rows[2].get("epoch").and_then(Json::as_usize), Some(2));
+    std::fs::remove_file(&log_path).ok();
+}
