@@ -1,0 +1,418 @@
+//! Crash-safe checkpoint/restore of distributed training state.
+//!
+//! A checkpoint is one directory per epoch (`<dir>/ep<NNNNNNNN>/`)
+//! holding one file per rank (`rank<r>.ckpt`). Each file is a versioned,
+//! dependency-free binary snapshot of everything a resumed run needs to
+//! reproduce the uninterrupted run **bit-for-bit**: the epoch counter,
+//! the flattened parameters, the Adam moments (m, v, t), and the PipeGCN
+//! stale buffers (`feat_buf` / `grad_buf` per layer). Dropout masks need
+//! no state — they are a pure function of `(seed, epoch, rank, layer)`.
+//!
+//! Framing follows the [`crate::net::frame`] conventions (little-endian
+//! fixed-width fields, f32 payloads as raw bit patterns) plus a trailing
+//! CRC-32 over the whole body, so a torn or corrupted file is rejected
+//! instead of silently resuming from garbage. Writes are atomic
+//! (temp file + rename), and a checkpoint only counts as *complete* when
+//! all `n` rank files of its epoch decode cleanly — the unit
+//! [`latest_complete`] scans for when the launcher recovers a mesh after
+//! a worker death.
+
+use crate::tensor::Mat;
+use crate::util::error::{Context, Result};
+use std::path::PathBuf;
+
+/// File magic of a rank snapshot.
+pub const MAGIC: [u8; 4] = *b"PGCK";
+/// Current snapshot format version.
+pub const VERSION: u32 = 1;
+
+/// When and where an engine snapshots: every `every` epochs into `dir`.
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub dir: String,
+    pub every: usize,
+}
+
+impl Policy {
+    /// Is a snapshot due after completing `epoch`?
+    pub fn due(&self, epoch: usize) -> bool {
+        self.every > 0 && epoch % self.every == 0
+    }
+}
+
+/// The serializable training state of one rank at an epoch boundary.
+///
+/// The model/optimizer fields are replicated (identical on every rank,
+/// like the live training state they snapshot); the stale buffers are
+/// per-rank. Keeping the replicated state in every rank file makes the
+/// format engine-independent: the sequential engine writes the same `n`
+/// files a TCP mesh would, so either side can resume the other's run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankState {
+    pub rank: u32,
+    pub n_ranks: u32,
+    /// completed epochs at snapshot time
+    pub epoch: u32,
+    /// Adam step counter
+    pub adam_t: u64,
+    /// flattened parameters
+    pub flat: Vec<f32>,
+    /// Adam first moment
+    pub adam_m: Vec<f32>,
+    /// Adam second moment
+    pub adam_v: Vec<f32>,
+    /// stale halo-feature buffers, one per layer
+    pub feat_buf: Vec<Mat>,
+    /// stale boundary-gradient buffers, one per layer
+    pub grad_buf: Vec<Mat>,
+}
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE, reflected) — dependency-free integrity check
+// ---------------------------------------------------------------------
+
+/// CRC-32 of `data` (IEEE polynomial, as used by gzip/PNG).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, slot) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *slot = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Encoding (net::frame conventions: LE fields, f32 as raw bits)
+// ---------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for x in xs {
+        put_u32(out, x.to_bits());
+    }
+}
+
+fn put_mats(out: &mut Vec<u8>, ms: &[Mat]) {
+    put_u32(out, ms.len() as u32);
+    for m in ms {
+        put_u32(out, m.rows as u32);
+        put_u32(out, m.cols as u32);
+        for x in &m.data {
+            put_u32(out, x.to_bits());
+        }
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated snapshot: wanted {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> std::result::Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32s(&mut self) -> std::result::Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        if n > self.buf.len() / 4 {
+            return Err(format!("implausible vector length {n}"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(self.u32()?));
+        }
+        Ok(out)
+    }
+
+    fn mats(&mut self) -> std::result::Result<Vec<Mat>, String> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rows = self.u32()? as usize;
+            let cols = self.u32()? as usize;
+            if rows.saturating_mul(cols) > self.buf.len() / 4 {
+                return Err(format!("implausible matrix shape {rows}×{cols}"));
+            }
+            let mut data = Vec::with_capacity(rows * cols);
+            for _ in 0..rows * cols {
+                data.push(f32::from_bits(self.u32()?));
+            }
+            out.push(Mat::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}
+
+impl RankState {
+    /// Serialize to the versioned, CRC-trailed binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let elems = self.flat.len() + self.adam_m.len() + self.adam_v.len();
+        let mut out = Vec::with_capacity(64 + 4 * elems);
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.rank);
+        put_u32(&mut out, self.n_ranks);
+        put_u32(&mut out, self.epoch);
+        put_u64(&mut out, self.adam_t);
+        put_f32s(&mut out, &self.flat);
+        put_f32s(&mut out, &self.adam_m);
+        put_f32s(&mut out, &self.adam_v);
+        put_mats(&mut out, &self.feat_buf);
+        put_mats(&mut out, &self.grad_buf);
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Parse a snapshot, verifying the CRC, magic, and version first.
+    pub fn decode(buf: &[u8]) -> std::result::Result<RankState, String> {
+        if buf.len() < MAGIC.len() + 4 + 4 {
+            return Err(format!("snapshot too short ({} bytes)", buf.len()));
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(format!("CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"));
+        }
+        let mut c = Cursor { buf: body, pos: 0 };
+        let magic = c.take(4)?;
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:?}"));
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(format!(
+                "unsupported snapshot version {version} (this build reads {VERSION})"
+            ));
+        }
+        let st = RankState {
+            rank: c.u32()?,
+            n_ranks: c.u32()?,
+            epoch: c.u32()?,
+            adam_t: c.u64()?,
+            flat: c.f32s()?,
+            adam_m: c.f32s()?,
+            adam_v: c.f32s()?,
+            feat_buf: c.mats()?,
+            grad_buf: c.mats()?,
+        };
+        if c.pos != body.len() {
+            return Err(format!("trailing bytes in snapshot ({} of {})", c.pos, body.len()));
+        }
+        Ok(st)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Directory protocol
+// ---------------------------------------------------------------------
+
+/// Directory of the epoch-`epoch` checkpoint under `dir`.
+pub fn epoch_dir(dir: &str, epoch: usize) -> PathBuf {
+    std::path::Path::new(dir).join(format!("ep{epoch:08}"))
+}
+
+/// Path of rank `rank`'s snapshot file in the epoch-`epoch` checkpoint.
+pub fn rank_file(dir: &str, epoch: usize, rank: usize) -> PathBuf {
+    epoch_dir(dir, epoch).join(format!("rank{rank}.ckpt"))
+}
+
+/// Atomically write `st` into its epoch directory under `dir` (temp file
+/// + rename, so a crash mid-write never leaves a half snapshot behind).
+pub fn save(dir: &str, st: &RankState) -> Result<()> {
+    let d = epoch_dir(dir, st.epoch as usize);
+    std::fs::create_dir_all(&d)
+        .with_context(|| format!("creating checkpoint dir {}", d.display()))?;
+    let path = d.join(format!("rank{}.ckpt", st.rank));
+    let tmp = d.join(format!(".rank{}.ckpt.tmp", st.rank));
+    std::fs::write(&tmp, st.encode())
+        .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+/// Load rank `rank`'s snapshot of the epoch-`epoch` checkpoint.
+pub fn load(dir: &str, epoch: usize, rank: usize) -> Result<RankState> {
+    let path = rank_file(dir, epoch, rank);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    RankState::decode(&bytes)
+        .map_err(|e| crate::err_msg!("corrupt checkpoint {}: {e}", path.display()))
+}
+
+/// Highest epoch under `dir` whose checkpoint is **complete**: all
+/// `n_ranks` rank files exist, decode with valid CRCs, and agree on the
+/// epoch and mesh size. Incomplete or torn checkpoints (a rank died
+/// mid-write) are skipped, so recovery always lands on consistent state.
+pub fn latest_complete(dir: &str, n_ranks: usize) -> Result<Option<usize>> {
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(None), // no checkpoints yet
+    };
+    let mut epochs: Vec<usize> = rd
+        .flatten()
+        .filter_map(|e| {
+            e.file_name()
+                .into_string()
+                .ok()
+                .and_then(|name| name.strip_prefix("ep").and_then(|n| n.parse().ok()))
+        })
+        .collect();
+    epochs.sort_unstable_by(|a, b| b.cmp(a));
+    'epochs: for &epoch in &epochs {
+        for rank in 0..n_ranks {
+            match load(dir, epoch, rank) {
+                Ok(st)
+                    if st.epoch as usize == epoch
+                        && st.n_ranks as usize == n_ranks
+                        && st.rank as usize == rank => {}
+                _ => continue 'epochs,
+            }
+        }
+        return Ok(Some(epoch));
+    }
+    Ok(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(rank: u32, epoch: u32) -> RankState {
+        RankState {
+            rank,
+            n_ranks: 2,
+            epoch,
+            adam_t: epoch as u64,
+            flat: vec![1.0, -2.5, 3.25e-8, f32::MIN_POSITIVE],
+            adam_m: vec![0.0, -0.0, 0.5, 1.0],
+            adam_v: vec![0.125; 4],
+            feat_buf: vec![Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])],
+            grad_buf: vec![Mat::zeros(0, 3), Mat::from_vec(1, 2, vec![7.0, 8.0])],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> String {
+        let d = format!("/tmp/pipegcn_ckpt_{tag}_{}", std::process::id());
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bitwise() {
+        let st = sample(1, 7);
+        let back = RankState::decode(&st.encode()).unwrap();
+        assert_eq!(back, st);
+        // f32 payloads travel as raw bits: NaN patterns survive too
+        let mut nan = sample(0, 1);
+        nan.flat = vec![f32::from_bits(0x7FC0_1234)];
+        nan.adam_m = vec![0.0];
+        nan.adam_v = vec![0.0];
+        let back = RankState::decode(&nan.encode()).unwrap();
+        assert_eq!(back.flat[0].to_bits(), 0x7FC0_1234);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = sample(0, 3).encode();
+        for pos in [0, 5, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(RankState::decode(&bad).is_err(), "flip at {pos} accepted");
+        }
+        assert!(RankState::decode(&bytes[..bytes.len() - 3]).is_err());
+        assert!(RankState::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn version_is_enforced() {
+        let mut bytes = sample(0, 1).encode();
+        bytes[4] = 9; // version field
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        let err = RankState::decode(&bytes).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_load_and_latest_complete() {
+        let dir = tmp_dir("latest");
+        assert_eq!(latest_complete(&dir, 2).unwrap(), None);
+        for epoch in [2u32, 4] {
+            for rank in 0..2u32 {
+                save(&dir, &sample(rank, epoch)).unwrap();
+            }
+        }
+        assert_eq!(latest_complete(&dir, 2).unwrap(), Some(4));
+        let st = load(&dir, 4, 1).unwrap();
+        assert_eq!(st, sample(1, 4));
+        // an epoch missing one rank file is not complete
+        save(&dir, &sample(0, 6)).unwrap();
+        assert_eq!(latest_complete(&dir, 2).unwrap(), Some(4));
+        // ...and a corrupted rank file disqualifies its epoch
+        std::fs::write(rank_file(&dir, 4, 0), b"garbage").unwrap();
+        assert_eq!(latest_complete(&dir, 2).unwrap(), Some(2));
+        // wrong mesh size never matches
+        assert_eq!(latest_complete(&dir, 3).unwrap(), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tmp_files_are_ignored() {
+        let dir = tmp_dir("tmpfiles");
+        save(&dir, &sample(0, 2)).unwrap();
+        save(&dir, &sample(1, 2)).unwrap();
+        // a torn write from a killed rank leaves only a .tmp behind
+        std::fs::create_dir_all(epoch_dir(&dir, 8)).unwrap();
+        std::fs::write(epoch_dir(&dir, 8).join(".rank0.ckpt.tmp"), b"partial").unwrap();
+        assert_eq!(latest_complete(&dir, 2).unwrap(), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector: crc32(b"123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

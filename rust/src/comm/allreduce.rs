@@ -7,6 +7,27 @@
 
 use super::{Fabric, Phase, Tag};
 
+/// Tag of one ring step (reduce-scatter steps `0..n-1`, then all-gather
+/// steps `n-1..2(n-1)`), shared by both all-reduce implementations.
+///
+/// Each rank sends exactly one message per step (to its successor), so
+/// the step index alone disambiguates every message of an iteration —
+/// the chunk id is implied by `(step, src)` and stays out of the tag.
+/// The previous scheme packed `step·n + chunk` (up to `2n²`) into the
+/// u16 layer field, which silently wrapped around from n ≈ 182 ranks;
+/// steps top out at `2(n-1)`, and the unrepresentable case (n > 32769)
+/// now fails loudly instead.
+pub fn step_tag(iter: u32, step: usize, n: usize) -> Tag {
+    let steps = 2 * (n - 1);
+    assert!(
+        steps <= u16::MAX as usize + 1,
+        "ring all-reduce over {n} ranks needs {steps} step tags, \
+         which cannot fit the u16 tag layer field"
+    );
+    debug_assert!(step < steps, "step {step} out of range for {n} ranks");
+    Tag::new(iter, step as u16, Phase::Reduce)
+}
+
 /// Run ring all-reduce over `bufs` (one buffer per rank, all same length),
 /// leaving every buffer equal to the elementwise sum. Message traffic goes
 /// through `fabric` (tagged `Phase::Reduce`, iteration `iter`).
@@ -27,16 +48,15 @@ pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
 
     // reduce-scatter: step s, rank r sends chunk (r - s) to r+1
     for s in 0..n - 1 {
+        let tag = step_tag(iter, s, n);
         for r in 0..n {
             let c = (r + n - s) % n;
             let payload = bufs[r][chunk(c)].to_vec();
-            let tag = Tag::new(iter, (s * n + c) as u16, Phase::Reduce);
             fabric.send(r, (r + 1) % n, tag, payload);
         }
         for r in 0..n {
             let src = (r + n - 1) % n;
             let c = (src + n - s) % n;
-            let tag = Tag::new(iter, (s * n + c) as u16, Phase::Reduce);
             let recv = fabric.recv_now(src, r, tag);
             for (dst, v) in bufs[r][chunk(c)].iter_mut().zip(recv) {
                 *dst += v;
@@ -45,16 +65,15 @@ pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
     }
     // all-gather: step s, rank r sends its completed chunk (r + 1 - s)
     for s in 0..n - 1 {
+        let tag = step_tag(iter, n - 1 + s, n);
         for r in 0..n {
             let c = (r + 1 + n - s) % n;
             let payload = bufs[r][chunk(c)].to_vec();
-            let tag = Tag::new(iter, ((n + s) * n + c) as u16, Phase::Reduce);
             fabric.send(r, (r + 1) % n, tag, payload);
         }
         for r in 0..n {
             let src = (r + n - 1) % n;
             let c = (src + 1 + n - s) % n;
-            let tag = Tag::new(iter, ((n + s) * n + c) as u16, Phase::Reduce);
             let recv = fabric.recv_now(src, r, tag);
             bufs[r][chunk(c)].copy_from_slice(&recv);
         }
@@ -134,6 +153,46 @@ mod tests {
             assert!(b.iter().all(|&v| (v - 6.0).abs() < 1e-6));
         }
         assert_eq!(fabric.pending(), 0);
+    }
+
+    /// Regression: at n ≥ 182 the old `step·n + chunk` tags overflowed
+    /// the u16 layer field; step-indexed tags must stay correct well
+    /// past that boundary.
+    #[test]
+    fn tag_boundary_many_ranks_still_sums() {
+        let n = 300; // n² ≈ 90 000 > u16::MAX
+        let len = 2 * n + 7;
+        let fabric = Fabric::new(n);
+        // halves and small integers: 300-way f32 sums stay exact
+        let mut bufs: Vec<Vec<f32>> =
+            (0..n).map(|r| vec![(r % 7) as f32 + 0.5; len]).collect();
+        let mut want = vec![0.0f32; len];
+        for b in &bufs {
+            for (w, &v) in want.iter_mut().zip(b) {
+                *w += v;
+            }
+        }
+        ring_allreduce(&fabric, &mut bufs, 3);
+        for (r, b) in bufs.iter().enumerate() {
+            prop::assert_close(b, &want, 1e-4).unwrap_or_else(|e| panic!("rank {r}: {e}"));
+        }
+        assert_eq!(fabric.pending(), 0);
+    }
+
+    #[test]
+    fn step_tags_fit_and_are_per_step_unique() {
+        for n in [2usize, 182, 300, 32769] {
+            let mut seen = std::collections::HashSet::new();
+            for s in 0..2 * (n - 1) {
+                assert!(seen.insert(step_tag(7, s, n)), "n={n}: duplicate tag at step {s}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot fit")]
+    fn step_tag_rejects_unrepresentable_rank_count() {
+        let _ = step_tag(0, 0, 40_000);
     }
 
     #[test]

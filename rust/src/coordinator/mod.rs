@@ -15,8 +15,11 @@
 //! Numeric fidelity notes are in DESIGN.md §4.
 
 pub mod halo;
+pub mod state;
 pub mod threaded;
 pub mod trainer;
+
+pub use state::TrainState;
 
 use crate::graph::{Graph, Labels};
 use crate::model::{LayerKind, ModelConfig, Params};

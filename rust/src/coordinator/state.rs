@@ -1,0 +1,182 @@
+//! Per-rank training state, factored out of the engines so that the
+//! sequential trainer and the transport-generic `run_rank` snapshot and
+//! resume through the same [`crate::ckpt`] format.
+//!
+//! A [`TrainState`] is everything that evolves across epochs on one
+//! rank: the replicated model/optimizer (`params`/`flat`/`adam`,
+//! identical on every rank after each all-reduce) and the rank's PipeGCN
+//! stale buffers. Everything else an epoch consumes is either immutable
+//! (graph, partition, halo plan — deterministically rebuilt from the
+//! seed) or stateless (dropout masks are a pure function of
+//! `(seed, epoch, rank, layer)`), which is why restoring a `TrainState`
+//! reproduces the uninterrupted run bit-for-bit.
+
+use super::halo::PartPlan;
+use super::TrainConfig;
+use crate::ckpt::RankState;
+use crate::model::{adam::Adam, Params};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// One rank's full cross-epoch training state.
+pub struct TrainState {
+    /// completed epochs (0 = fresh run)
+    pub epoch: usize,
+    pub params: Params,
+    /// flattened view of `params` (Adam steps on this; kept in sync)
+    pub flat: Vec<f32>,
+    pub adam: Adam,
+    /// `feat_buf[l]`: stale halo features used as layer-`l` input rows
+    pub feat_buf: Vec<Mat>,
+    /// `grad_buf[l]` (l ≥ 1): stale boundary-gradient contributions
+    /// scattered onto this rank's inner nodes
+    pub grad_buf: Vec<Mat>,
+}
+
+impl TrainState {
+    /// Fresh state for one rank: seeded Glorot parameters (identical on
+    /// every rank), zero Adam moments, zero stale buffers (Alg. 1 line 6).
+    pub fn init(cfg: &TrainConfig, part: &PartPlan) -> TrainState {
+        let mut rng = Rng::new(cfg.seed);
+        let params = Params::init(&cfg.model, &mut rng);
+        let flat = params.flatten();
+        let adam = Adam::new(cfg.lr, flat.len());
+        let n_layers = cfg.model.n_layers();
+        let dims = &cfg.model.dims;
+        let feat_buf = (0..n_layers).map(|l| Mat::zeros(part.halo.len(), dims[l])).collect();
+        let grad_buf = (0..n_layers).map(|l| Mat::zeros(part.n_inner(), dims[l])).collect();
+        TrainState { epoch: 0, params, flat, adam, feat_buf, grad_buf }
+    }
+
+    /// Snapshot as `rank` of `n_ranks` for [`crate::ckpt::save`].
+    pub fn snapshot(&self, rank: usize, n_ranks: usize) -> RankState {
+        let (m, v, t) = self.adam.state();
+        RankState {
+            rank: rank as u32,
+            n_ranks: n_ranks as u32,
+            epoch: self.epoch as u32,
+            adam_t: t,
+            flat: self.flat.clone(),
+            adam_m: m.to_vec(),
+            adam_v: v.to_vec(),
+            feat_buf: self.feat_buf.clone(),
+            grad_buf: self.grad_buf.clone(),
+        }
+    }
+
+    /// Rebuild live state from a snapshot, validating every shape
+    /// against the current config and halo plan so a checkpoint from a
+    /// different model/dataset/partitioning fails loudly instead of
+    /// silently corrupting training.
+    pub fn from_snapshot(
+        snap: RankState,
+        cfg: &TrainConfig,
+        part: &PartPlan,
+    ) -> crate::util::error::Result<TrainState> {
+        let mut st = TrainState::init(cfg, part);
+        if snap.flat.len() != st.flat.len() {
+            crate::bail!(
+                "checkpoint has {} parameters, the configured model has {}",
+                snap.flat.len(),
+                st.flat.len()
+            );
+        }
+        if snap.adam_m.len() != snap.flat.len() || snap.adam_v.len() != snap.flat.len() {
+            crate::bail!(
+                "checkpoint Adam moments ({}, {}) do not match {} parameters",
+                snap.adam_m.len(),
+                snap.adam_v.len(),
+                snap.flat.len()
+            );
+        }
+        for (name, have, want) in [
+            ("feat_buf", &snap.feat_buf, &st.feat_buf),
+            ("grad_buf", &snap.grad_buf, &st.grad_buf),
+        ] {
+            if have.len() != want.len() {
+                crate::bail!(
+                    "checkpoint has {} {name} layers, expected {}",
+                    have.len(),
+                    want.len()
+                );
+            }
+            for (l, (h, w)) in have.iter().zip(want.iter()).enumerate() {
+                if h.rows != w.rows || h.cols != w.cols {
+                    crate::bail!(
+                        "checkpoint {name}[{l}] is {}×{}, the plan expects {}×{} — \
+                         was it written for a different partitioning?",
+                        h.rows,
+                        h.cols,
+                        w.rows,
+                        w.cols
+                    );
+                }
+            }
+        }
+        st.epoch = snap.epoch as usize;
+        st.params.unflatten(&snap.flat);
+        st.flat = snap.flat;
+        st.adam = Adam::restore(cfg.lr, snap.adam_m, snap.adam_v, snap.adam_t);
+        st.feat_buf = snap.feat_buf;
+        st.grad_buf = snap.grad_buf;
+        Ok(st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{halo, Optimizer, PipeOpts, Variant};
+    use crate::graph::presets;
+    use crate::model::ModelConfig;
+    use crate::partition::{partition, Method};
+
+    fn setup() -> (TrainConfig, halo::HaloPlan) {
+        let g = presets::by_name("tiny").unwrap().build(42);
+        let cfg = TrainConfig {
+            model: ModelConfig::sage(g.feat_dim(), 16, 2, g.labels.n_classes(), 0.0),
+            variant: Variant::Pipe(PipeOpts::plain()),
+            optimizer: Optimizer::Adam,
+            lr: 0.01,
+            epochs: 4,
+            seed: 7,
+            eval_every: 0,
+            probe_errors: false,
+        };
+        let pt = partition(&g, 2, Method::Multilevel, 1);
+        let plan = halo::build(&g, &pt, cfg.model.kind);
+        (cfg, plan)
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_identical_state() {
+        let (cfg, plan) = setup();
+        let mut st = TrainState::init(&cfg, &plan.parts[1]);
+        st.epoch = 3;
+        st.flat[0] = 0.625;
+        st.params.unflatten(&st.flat);
+        st.feat_buf[1].fill(2.5);
+        let snap = st.snapshot(1, 2);
+        let back = TrainState::from_snapshot(snap, &cfg, &plan.parts[1]).unwrap();
+        assert_eq!(back.epoch, 3);
+        assert_eq!(back.flat, st.flat);
+        assert_eq!(back.params, st.params);
+        assert_eq!(back.feat_buf, st.feat_buf);
+        assert_eq!(back.grad_buf, st.grad_buf);
+        assert_eq!(back.adam.state().2, st.adam.state().2);
+    }
+
+    #[test]
+    fn mismatched_snapshot_rejected() {
+        let (cfg, plan) = setup();
+        let st = TrainState::init(&cfg, &plan.parts[0]);
+        // a stale buffer shaped for a different halo is rejected
+        let mut snap = st.snapshot(0, 2);
+        snap.feat_buf[0] = Mat::zeros(snap.feat_buf[0].rows + 1, snap.feat_buf[0].cols);
+        assert!(TrainState::from_snapshot(snap, &cfg, &plan.parts[0]).is_err());
+        // and a truncated parameter vector is rejected
+        let mut short = st.snapshot(0, 2);
+        short.flat.pop();
+        assert!(TrainState::from_snapshot(short, &cfg, &plan.parts[0]).is_err());
+    }
+}

@@ -10,6 +10,14 @@
 //!   [`crate::net::TcpTransport`] (real localhost sockets), launched by
 //!   `pipegcn launch` / driven by [`crate::net::worker`].
 //!
+//! Every epoch ends with a loss reduction to rank 0 (each rank ships its
+//! partial loss, rank 0 sums in rank order), so rank 0 always holds the
+//! live global loss — it can stream NDJSON run-log rows as epochs finish
+//! instead of after a terminal gather. [`run_rank_ctl`] additionally
+//! snapshots the full [`TrainState`] through [`crate::ckpt`] every
+//! `--ckpt-every` epochs and can start from a restored state, which is
+//! how `pipegcn launch` survives a worker death.
+//!
 //! On a 1-core testbed these demonstrate *correctness* of the concurrent
 //! schedule, not speedup: the integration tests assert the loss curve is
 //! identical to the sequential engine (the dataflow is deterministic —
@@ -19,14 +27,20 @@
 //! evaluation only at the end.
 
 use super::halo::{self, HaloPlan, PlanLabels};
+use super::state::TrainState;
 use super::{TrainConfig, Variant};
-use crate::comm::{decode_u32s, encode_u32s, Fabric, Phase, Tag, Transport};
+use crate::ckpt;
+use crate::comm::allreduce::step_tag;
+use crate::comm::{
+    decode_f64s, decode_u32s, encode_f64s, encode_u32s, Fabric, Phase, Tag, Transport,
+};
 use crate::graph::Graph;
-use crate::model::{adam::Adam, Params};
+use crate::model::Params;
 use crate::partition::Partitioning;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
 use crate::tensor::{ops, Mat};
+use crate::util::json::{FileEmitter, Json};
 use std::sync::Arc;
 
 /// Result of a threaded run.
@@ -58,23 +72,21 @@ fn ring_allreduce_rank(
     let next = (rank + 1) % n;
     let prev = (rank + n - 1) % n;
     for s in 0..n - 1 {
+        let tag = step_tag(iter, s, n);
         let c_send = (rank + n - s) % n;
-        let tag_s = Tag::new(iter, (s * n + c_send) as u16, Phase::Reduce);
-        transport.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
+        transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + n - s) % n;
-        let tag_r = Tag::new(iter, (s * n + c_recv) as u16, Phase::Reduce);
-        let recv = transport.recv_blocking(prev, rank, tag_r);
+        let recv = transport.recv_blocking(prev, rank, tag);
         for (d, v) in buf[chunk(c_recv)].iter_mut().zip(recv) {
             *d += v;
         }
     }
     for s in 0..n - 1 {
+        let tag = step_tag(iter, n - 1 + s, n);
         let c_send = (rank + 1 + n - s) % n;
-        let tag_s = Tag::new(iter, ((n + s) * n + c_send) as u16, Phase::Reduce);
-        transport.send(rank, next, tag_s, buf[chunk(c_send)].to_vec());
+        transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + 1 + n - s) % n;
-        let tag_r = Tag::new(iter, ((n + s) * n + c_recv) as u16, Phase::Reduce);
-        let recv = transport.recv_blocking(prev, rank, tag_r);
+        let recv = transport.recv_blocking(prev, rank, tag);
         buf[chunk(c_recv)].copy_from_slice(&recv);
     }
 }
@@ -82,6 +94,13 @@ fn ring_allreduce_rank(
 /// The Setup-phase tag of the boundary-set exchange.
 fn setup_tag() -> Tag {
     Tag::new(0, 0, Phase::Setup)
+}
+
+/// The per-epoch loss-reduction tag: every rank ships its partial loss
+/// for epoch `t` to rank 0 (layer field = source rank). Training
+/// iterations start at 1, so this never collides with [`setup_tag`].
+pub(crate) fn loss_tag(t: usize, src: usize) -> Tag {
+    Tag::new(t as u32, src as u16, Phase::Setup)
 }
 
 /// Send half of the boundary-set exchange (`Phase::Setup`, Alg. 1
@@ -124,17 +143,50 @@ pub fn setup_exchange(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
     setup_verify(transport, plan, rank);
 }
 
-/// Run rank `rank`'s full training schedule over `transport`. Numerics
-/// match [`super::trainer::train`] exactly (same seeds ⇒ same
-/// parameters); returns the rank's per-epoch *partial* losses (sum
-/// across ranks = global loss) and its final parameter copy (identical
-/// on every rank).
+/// Side-channel controls for [`run_rank_ctl`]: checkpointing, live run
+/// logging (rank 0), and fault injection for the recovery tests.
+#[derive(Default)]
+pub struct RankCtl<'a> {
+    /// snapshot the full training state into `policy.dir` every
+    /// `policy.every` epochs
+    pub ckpt: Option<&'a ckpt::Policy>,
+    /// rank 0 only: emit one NDJSON `{epoch, loss}` row per epoch, live
+    pub log: Option<&'a mut FileEmitter>,
+    /// fault injection (`pipegcn worker --fail-epoch`): exit(13) right
+    /// after this epoch completes, simulating a worker death mid-run
+    pub kill_after_epoch: Option<usize>,
+}
+
+/// Run rank `rank`'s full training schedule over `transport`, starting
+/// from a fresh state. Numerics match [`super::trainer::train`] exactly
+/// (same seeds ⇒ same parameters); returns the rank's per-epoch losses
+/// (**global** on rank 0, which drives the per-epoch loss reduction;
+/// this rank's partials elsewhere) and its final parameter copy
+/// (identical on every rank).
 pub fn run_rank(
     transport: &dyn Transport,
     plan: &HaloPlan,
     rank: usize,
     cfg: &TrainConfig,
 ) -> (Vec<f64>, Params) {
+    let mut st = TrainState::init(cfg, &plan.parts[rank]);
+    let losses = run_rank_ctl(transport, plan, rank, cfg, &mut st, RankCtl::default())
+        .expect("run_rank without checkpointing has no I/O to fail");
+    (losses, st.params)
+}
+
+/// [`run_rank`] over an explicit [`TrainState`] — fresh or restored from
+/// a checkpoint — with optional snapshotting and live run logging.
+/// Epochs `st.epoch + 1 ..= cfg.epochs` are trained; the returned losses
+/// cover exactly those epochs.
+pub fn run_rank_ctl(
+    transport: &dyn Transport,
+    plan: &HaloPlan,
+    rank: usize,
+    cfg: &TrainConfig,
+    st: &mut TrainState,
+    mut ctl: RankCtl<'_>,
+) -> crate::util::error::Result<Vec<f64>> {
     let k = plan.n_parts;
     assert_eq!(transport.n_ranks(), k);
     let n_layers = cfg.model.n_layers();
@@ -149,19 +201,11 @@ pub fn run_rank(
 
     let mut backend = NativeBackend::new();
     let prop_id = backend.register_prop(&p.prop);
-    let mut rng = crate::util::rng::Rng::new(cfg.seed);
-    let mut params = Params::init(&cfg.model, &mut rng);
-    let mut flat = params.flatten();
-    let mut adam = Adam::new(cfg.lr, flat.len());
     let dropout = cfg.model.dropout;
     let total_train = plan.total_train.max(1) as f64;
-    // stale buffers
-    let mut feat_buf: Vec<Mat> =
-        (0..n_layers).map(|l| Mat::zeros(p.halo.len(), dims[l])).collect();
-    let mut grad_buf: Vec<Mat> =
-        (0..n_layers).map(|l| Mat::zeros(p.n_inner(), dims[l])).collect();
-    let mut losses = Vec::with_capacity(cfg.epochs);
-    for t in 1..=cfg.epochs {
+    let start = st.epoch + 1;
+    let mut losses = Vec::with_capacity(cfg.epochs.saturating_sub(st.epoch));
+    for t in start..=cfg.epochs {
         // ---- forward ----
         let mut h_src: Vec<Mat> = vec![p.features.clone()];
         let mut h_full_c: Vec<Mat> = Vec::new();
@@ -197,7 +241,7 @@ pub fn run_rank(
                 }
                 m
             } else {
-                let used = feat_buf[l].clone();
+                let used = st.feat_buf[l].clone();
                 let mut fresh = Mat::zeros(p.halo.len(), f_in);
                 for j in 0..k {
                     let range = p.halo_ranges[j].clone();
@@ -213,10 +257,10 @@ pub fn run_rank(
                     }
                 }
                 if opts.smooth_feat && t > 1 {
-                    feat_buf[l].scale(opts.gamma);
-                    feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                    st.feat_buf[l].scale(opts.gamma);
+                    st.feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
                 } else {
-                    feat_buf[l] = fresh;
+                    st.feat_buf[l] = fresh;
                 }
                 used
             };
@@ -228,7 +272,7 @@ pub fn run_rank(
             } else {
                 (assembled, None)
             };
-            let lp = &params.layers[l];
+            let lp = &st.params.layers[l];
             let out = backend.layer_fwd(prop_id, &hf, lp.w_self.as_ref(), &lp.w_neigh);
             let h_next = if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre.clone() };
             h_full_c.push(hf);
@@ -237,7 +281,7 @@ pub fn run_rank(
             pres.push(out.pre);
             h_src.push(h_next);
         }
-        // ---- loss ----
+        // ---- loss + per-epoch reduction to rank 0 ----
         let logits = &pres[n_layers - 1];
         let local = p.train_mask.len() as f64;
         let (loss_i, mut j_cur) = match &p.labels {
@@ -245,16 +289,36 @@ pub fn run_rank(
             PlanLabels::Multi(targets) => ops::sigmoid_bce(logits, targets, &p.train_mask),
         };
         j_cur.scale((local / total_train) as f32);
-        losses.push(loss_i * local / total_train);
+        let partial = loss_i * local / total_train;
+        let epoch_loss = if rank == 0 {
+            // sum in rank order — the f64 accumulation order matches the
+            // sequential engine, keeping the curve bit-identical
+            let mut tot = partial;
+            for j in 1..k {
+                tot += decode_f64s(&transport.recv_blocking(j, 0, loss_tag(t, j)))[0];
+            }
+            tot
+        } else {
+            transport.send(rank, 0, loss_tag(t, rank), encode_f64s(&[partial]));
+            partial
+        };
+        losses.push(epoch_loss);
+        if let Some(em) = ctl.log.take() {
+            match em.emit(&Json::obj().set("epoch", t).set("loss", epoch_loss)) {
+                Ok(()) => ctl.log = Some(em),
+                // stop logging, keep training
+                Err(e) => eprintln!("run-log write failed: {e}"),
+            }
+        }
         // ---- backward ----
-        let mut grads = params.zeros_like();
+        let mut grads = st.params.zeros_like();
         for l in (0..n_layers).rev() {
             let f_in = dims[l];
             let mut m = j_cur.clone();
             if l + 1 < n_layers {
                 ops::relu_grad_inplace(&mut m, &pres[l]);
             }
-            let lp = &params.layers[l];
+            let lp = &st.params.layers[l];
             let bwd = backend.layer_bwd(
                 prop_id,
                 &h_full_c[l],
@@ -312,14 +376,14 @@ pub fn run_rank(
                 if !pipe {
                     recv_into(&mut jg);
                 } else {
-                    jg.add_assign(&grad_buf[l]);
+                    jg.add_assign(&st.grad_buf[l]);
                     let mut fresh = Mat::zeros(n_inner, f_in);
                     recv_into(&mut fresh);
                     if opts.smooth_grad && t > 1 {
-                        grad_buf[l].scale(opts.gamma);
-                        grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                        st.grad_buf[l].scale(opts.gamma);
+                        st.grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
                     } else {
-                        grad_buf[l] = fresh;
+                        st.grad_buf[l] = fresh;
                     }
                 }
                 j_cur = jg;
@@ -329,16 +393,26 @@ pub fn run_rank(
         let mut gbuf = grads.flatten();
         ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32);
         match cfg.optimizer {
-            super::Optimizer::Adam => adam.step(&mut flat, &gbuf),
+            super::Optimizer::Adam => st.adam.step(&mut st.flat, &gbuf),
             super::Optimizer::Sgd => {
-                for (pv, gv) in flat.iter_mut().zip(&gbuf) {
+                for (pv, gv) in st.flat.iter_mut().zip(&gbuf) {
                     *pv -= cfg.lr * *gv;
                 }
             }
         }
-        params.unflatten(&flat);
+        st.params.unflatten(&st.flat);
+        st.epoch = t;
+        if let Some(pol) = ctl.ckpt {
+            if pol.due(t) {
+                ckpt::save(&pol.dir, &st.snapshot(rank, k))?;
+            }
+        }
+        if ctl.kill_after_epoch == Some(t) {
+            eprintln!("[rank {rank}] fault injection: dying after epoch {t}");
+            std::process::exit(13);
+        }
     }
-    (losses, params)
+    Ok(losses)
 }
 
 /// Train with one thread per partition over the in-process [`Fabric`].
@@ -363,16 +437,10 @@ pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> Thread
         .into_iter()
         .map(|h| h.join().expect("worker thread panicked"))
         .collect();
-    // sum per-epoch partial losses across ranks (rank order, to match the
-    // sequential engine's f64 accumulation order bit-for-bit)
-    let epochs = cfg.epochs;
-    let mut losses = vec![0.0f64; epochs];
-    for (ls, _) in &per_rank {
-        for (dst, v) in losses.iter_mut().zip(ls) {
-            *dst += v;
-        }
-    }
-    let params = per_rank.swap_remove(0).1;
+    // rank 0 already holds the global per-epoch losses (it drives the
+    // per-epoch loss reduction, summing partials in rank order — the
+    // same f64 order as the sequential engine, so sums stay bit-identical)
+    let (losses, params) = per_rank.swap_remove(0);
     let (final_val, final_test) = super::evaluate(g, &params, cfg.model.kind);
     ThreadedResult { losses, params, final_val, final_test, comm_bytes: fabric.total_bytes() }
 }
@@ -453,5 +521,90 @@ mod tests {
         // setup + epochs × steady-state-epoch bytes
         let seq_total = seq.setup_bytes + c.epochs as u64 * seq.comm_bytes_epoch;
         assert_eq!(thr.comm_bytes, seq_total);
+    }
+
+    /// Regression for the u16 tag wraparound: the rank-driven all-reduce
+    /// must stay correct past the old n ≈ 182 overflow boundary, with
+    /// every rank on its own thread (real blocking receives).
+    #[test]
+    fn rank_driven_allreduce_correct_past_tag_boundary() {
+        let n = 190;
+        let len = 97;
+        let fabric = Arc::new(Fabric::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let f = fabric.clone();
+                std::thread::spawn(move || {
+                    let mut buf: Vec<f32> = (0..len).map(|i| ((r + i) % 5) as f32).collect();
+                    ring_allreduce_rank(f.as_ref(), r, n, &mut buf, 1);
+                    buf
+                })
+            })
+            .collect();
+        let mut want = vec![0.0f32; len]; // small integers: f32-exact
+        for r in 0..n {
+            for (i, w) in want.iter_mut().enumerate() {
+                *w += ((r + i) % 5) as f32;
+            }
+        }
+        for (r, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            crate::util::prop::assert_close(&got, &want, 1e-4)
+                .unwrap_or_else(|e| panic!("rank {r}: {e}"));
+        }
+        assert_eq!(fabric.pending(), 0);
+    }
+
+    /// A run driven through run_rank_ctl with checkpointing, then resumed
+    /// from the snapshot, must reproduce the uninterrupted loss curve
+    /// bit-for-bit (the determinism oracle behind crash recovery).
+    #[test]
+    fn threaded_resume_from_checkpoint_is_bitwise_identical() {
+        let g = presets::by_name("tiny").unwrap().build(42);
+        let pt = partition(&g, 2, Method::Multilevel, 3);
+        let c = cfg(&g, Variant::Pipe(PipeOpts::plain()), 0.3);
+        let plan = Arc::new(halo::build(&g, &pt, c.model.kind));
+        let dir = format!("/tmp/pipegcn_thr_ckpt_{}", std::process::id());
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let run = |resume_epoch: Option<usize>, policy: Option<ckpt::Policy>| -> Vec<f64> {
+            let fabric = Arc::new(Fabric::new(2));
+            let cfg = Arc::new(c.clone());
+            let handles: Vec<_> = (0..2)
+                .map(|rank| {
+                    let fabric = fabric.clone();
+                    let cfg = cfg.clone();
+                    let plan = plan.clone();
+                    let policy = policy.clone();
+                    let dir = dir.clone();
+                    std::thread::spawn(move || {
+                        let mut st = match resume_epoch {
+                            None => TrainState::init(&cfg, &plan.parts[rank]),
+                            Some(e) => TrainState::from_snapshot(
+                                ckpt::load(&dir, e, rank).unwrap(),
+                                &cfg,
+                                &plan.parts[rank],
+                            )
+                            .unwrap(),
+                        };
+                        let ctl = RankCtl { ckpt: policy.as_ref(), ..RankCtl::default() };
+                        run_rank_ctl(fabric.as_ref(), &plan, rank, &cfg, &mut st, ctl).unwrap()
+                    })
+                })
+                .collect();
+            let mut per_rank: Vec<Vec<f64>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            per_rank.swap_remove(0)
+        };
+
+        let full = run(None, Some(ckpt::Policy { dir: dir.clone(), every: 2 }));
+        assert_eq!(ckpt::latest_complete(&dir, 2).unwrap(), Some(6));
+        // resume from the mid-run epoch-4 snapshot: epochs 5..6
+        let resumed = run(Some(4), None);
+        assert_eq!(resumed.len(), 2);
+        for (i, (a, b)) in full[4..].iter().zip(&resumed).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "epoch {}: {a} vs {b}", 5 + i);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -15,10 +15,12 @@
 //! smoothing EMA on the receiver (Eq. §3.4).
 
 use super::halo::{self, PlanLabels};
+use super::state::TrainState;
 use super::{EpochStat, ErrorProbe, TrainConfig, TrainResult, Variant};
-use crate::comm::{Fabric, Phase, Tag};
+use crate::ckpt;
+use crate::comm::{decode_f64s, encode_f64s, Fabric, Phase, Tag};
 use crate::graph::Graph;
-use crate::model::{adam::Adam, Params};
+use crate::model::Params;
 use crate::partition::Partitioning;
 use crate::runtime::Backend;
 use crate::sim::{LayerCompute, PartitionWork};
@@ -75,8 +77,29 @@ pub fn train_logged(
     pt: &Partitioning,
     cfg: &TrainConfig,
     backend: &mut dyn Backend,
-    mut log: Option<&mut FileEmitter>,
+    log: Option<&mut FileEmitter>,
 ) -> TrainResult {
+    train_resumable(g, pt, cfg, backend, log, None, None)
+        .expect("training without checkpoint I/O cannot fail")
+}
+
+/// [`train_logged`] with crash-safe checkpoint/restore: snapshot every
+/// rank's [`TrainState`] into `ckpt_policy.dir` every `ckpt_policy.every`
+/// epochs, and/or resume from the latest complete checkpoint under
+/// `resume_dir`. A resumed run reproduces the uninterrupted run
+/// **bit-for-bit**: everything an epoch consumes is in the snapshots
+/// (epoch counter, parameters, Adam moments, stale buffers) or is a pure
+/// function of `(seed, epoch)` — dropout masks carry no state. The
+/// resumed curve covers epochs `resume_epoch + 1 ..= cfg.epochs`.
+pub fn train_resumable(
+    g: &Graph,
+    pt: &Partitioning,
+    cfg: &TrainConfig,
+    backend: &mut dyn Backend,
+    mut log: Option<&mut FileEmitter>,
+    ckpt_policy: Option<&ckpt::Policy>,
+    resume_dir: Option<&str>,
+) -> crate::util::error::Result<TrainResult> {
     let watch = Stopwatch::start();
     let plan = halo::build(g, pt, cfg.model.kind);
     let k = plan.n_parts;
@@ -87,10 +110,29 @@ pub fn train_logged(
         plan.parts.iter().map(|p| backend.register_prop(&p.prop)).collect();
     backend.take_flops(); // drain any setup flops
 
-    let mut init_rng = Rng::new(cfg.seed);
-    let mut params = Params::init(&cfg.model, &mut init_rng);
-    let mut flat = params.flatten();
-    let mut adam = Adam::new(cfg.lr, flat.len());
+    // one TrainState per rank — the sequential engine replicates the
+    // model/optimizer exactly as real distributed ranks do, so its
+    // checkpoints are the same k files a TCP mesh writes (and either
+    // engine can resume the other's run)
+    let mut states: Vec<TrainState> = match resume_dir {
+        None => (0..k).map(|i| TrainState::init(cfg, &plan.parts[i])).collect(),
+        Some(dir) => {
+            let epoch = ckpt::latest_complete(dir, k)?.ok_or_else(|| {
+                crate::err_msg!("--resume {dir}: no complete checkpoint for {k} ranks")
+            })?;
+            if epoch >= cfg.epochs {
+                crate::bail!(
+                    "--resume {dir}: checkpoint epoch {epoch} already covers --epochs {}",
+                    cfg.epochs
+                );
+            }
+            (0..k)
+                .map(|i| {
+                    TrainState::from_snapshot(ckpt::load(dir, epoch, i)?, cfg, &plan.parts[i])
+                })
+                .collect::<crate::util::error::Result<Vec<_>>>()?
+        }
+    };
     let fabric = Fabric::new(k);
 
     let (pipe, opts) = match cfg.variant {
@@ -110,20 +152,7 @@ pub fn train_logged(
     }
     let setup_bytes = fabric.total_bytes();
 
-    // --- stale buffers (pipe mode) ------------------------------------
-    // feat_buf[i][l]: halo-feature matrix used as layer-l input halo rows
-    let mut feat_buf: Vec<Vec<Mat>> = plan
-        .parts
-        .iter()
-        .map(|p| (0..n_layers).map(|l| Mat::zeros(p.halo.len(), dims[l])).collect())
-        .collect();
-    // grad_buf[i][l] (l ≥ 1): received boundary-gradient contributions
-    // scattered onto my inner nodes
-    let mut grad_buf: Vec<Vec<Mat>> = plan
-        .parts
-        .iter()
-        .map(|p| (0..n_layers).map(|l| Mat::zeros(p.n_inner(), dims[l])).collect())
-        .collect();
+    // (the stale feat/grad buffers live in each rank's TrainState)
 
     // --- static comm description for the simulator ---------------------
     let comm_desc = |l: usize| -> Vec<Vec<(usize, u64)>> {
@@ -166,9 +195,11 @@ pub fn train_logged(
     let mut final_test = f64::NAN;
     let mut last_grad: Vec<f32> = Vec::new();
 
-    let work_epoch = 2.min(cfg.epochs); // steady-state epoch to instrument
+    let start = states[0].epoch + 1;
+    // steady-state epoch to instrument: the first executed epoch ≥ 2
+    let work_epoch = start.max(2.min(cfg.epochs));
 
-    for t in 1..=cfg.epochs {
+    for t in start..=cfg.epochs {
         let capture = t == work_epoch;
         if capture {
             fabric.reset_counters();
@@ -222,7 +253,7 @@ pub fn train_logged(
                     m
                 } else {
                     // use the buffer (t−1 values; zeros at t=1 — Alg.1 line 6)
-                    let used = feat_buf[i][l].clone();
+                    let used = states[i].feat_buf[l].clone();
                     // receive the fresh tag-t messages → buffer for t+1
                     let mut fresh = Mat::zeros(n_halo, f_in);
                     for j in 0..k {
@@ -239,11 +270,11 @@ pub fn train_logged(
                     }
                     if opts.smooth_feat && t > 1 {
                         // ĥ ← γ·ĥ + (1−γ)·h  (§3.4 applied to features)
-                        let buf = &mut feat_buf[i][l];
+                        let buf = &mut states[i].feat_buf[l];
                         buf.scale(opts.gamma);
                         buf.axpy(1.0 - opts.gamma, &fresh);
                     } else {
-                        feat_buf[i][l] = fresh;
+                        states[i].feat_buf[l] = fresh;
                     }
                     used
                 };
@@ -255,7 +286,7 @@ pub fn train_logged(
                 } else {
                     (assembled, None)
                 };
-                let lp = &params.layers[l];
+                let lp = &states[i].params.layers[l];
                 let out = backend.layer_fwd(prop_ids[i], &hf, lp.w_self.as_ref(), &lp.w_neigh);
                 let fc = backend.take_flops();
                 if capture {
@@ -272,7 +303,7 @@ pub fn train_logged(
 
         // ---------------- loss ----------------
         let total_train = plan.total_train.max(1) as f64;
-        let mut train_loss = 0.0f64;
+        let mut partials: Vec<f64> = Vec::with_capacity(k);
         let mut j_cur: Vec<Mat> = Vec::with_capacity(k);
         for i in 0..k {
             let p = &plan.parts[i];
@@ -285,12 +316,25 @@ pub fn train_logged(
             // rescale local-mean to global-mean semantics
             let scale = (local / total_train) as f32;
             grad.scale(scale);
-            train_loss += loss_i * local / total_train;
+            partials.push(loss_i * local / total_train);
             j_cur.push(grad);
+        }
+        // per-epoch loss reduction: ranks 1..k ship their partials to
+        // rank 0, which sums in rank order — the same dataflow (and the
+        // same f64 accumulation order) `run_rank` drives over a real
+        // transport, so byte accounting and loss bits match across
+        // engines. The f64↔f32-pair packing is lossless.
+        for i in 1..k {
+            fabric.send(i, 0, super::threaded::loss_tag(t, i), encode_f64s(&[partials[i]]));
+        }
+        let mut train_loss = partials[0];
+        for i in 1..k {
+            train_loss +=
+                decode_f64s(&fabric.recv_now(i, 0, super::threaded::loss_tag(t, i)))[0];
         }
 
         // ---------------- backward ----------------
-        let mut grads: Vec<Params> = (0..k).map(|_| params.zeros_like()).collect();
+        let mut grads: Vec<Params> = (0..k).map(|i| states[i].params.zeros_like()).collect();
         for l in (0..n_layers).rev() {
             let f_in = dims[l];
             // compute layer backward + ship halo-row gradients
@@ -301,7 +345,7 @@ pub fn train_logged(
                 if l + 1 < n_layers {
                     ops::relu_grad_inplace(&mut m, &pres[i][l]);
                 }
-                let lp = &params.layers[l];
+                let lp = &states[i].params.layers[l];
                 let bwd = backend.layer_bwd(
                     prop_ids[i],
                     &h_full[i][l],
@@ -358,7 +402,7 @@ pub fn train_logged(
                         }
                     } else {
                         // stale contributions (zeros at t=1)
-                        jg.add_assign(&grad_buf[i][l]);
+                        jg.add_assign(&states[i].grad_buf[l]);
                         // receive fresh tag-t contributions → buffer
                         let mut fresh = Mat::zeros(p.n_inner(), f_in);
                         for j in 0..k {
@@ -369,16 +413,16 @@ pub fn train_logged(
                             }
                         }
                         if probing {
-                            grad_err[l] += grad_buf[i][l].fro_dist(&fresh).powi(2);
+                            grad_err[l] += states[i].grad_buf[l].fro_dist(&fresh).powi(2);
                             grad_ref[l] += fresh.fro_norm().powi(2);
                         }
                         if opts.smooth_grad && t > 1 {
                             // δ̂ ← γ·δ̂ + (1−γ)·δ  (§3.4)
-                            let buf = &mut grad_buf[i][l];
+                            let buf = &mut states[i].grad_buf[l];
                             buf.scale(opts.gamma);
                             buf.axpy(1.0 - opts.gamma, &fresh);
                         } else {
-                            grad_buf[i][l] = fresh;
+                            states[i].grad_buf[l] = fresh;
                         }
                     }
                     j_cur[i] = jg;
@@ -389,17 +433,30 @@ pub fn train_logged(
         // ---------------- all-reduce + update ----------------
         let mut bufs: Vec<Vec<f32>> = grads.iter().map(|gp| gp.flatten()).collect();
         crate::comm::allreduce::ring_allreduce(&fabric, &mut bufs, t as u32);
-        match cfg.optimizer {
-            super::Optimizer::Adam => adam.step(&mut flat, &bufs[0]),
-            super::Optimizer::Sgd => {
-                for (p, g) in flat.iter_mut().zip(&bufs[0]) {
-                    *p -= cfg.lr * *g;
+        // each rank steps its own replicated optimizer — the all-reduced
+        // gradient is bit-identical everywhere, so the parameter copies
+        // never diverge (Alg. 1 lines 32-33)
+        for (i, st) in states.iter_mut().enumerate() {
+            match cfg.optimizer {
+                super::Optimizer::Adam => st.adam.step(&mut st.flat, &bufs[i]),
+                super::Optimizer::Sgd => {
+                    for (p, g) in st.flat.iter_mut().zip(&bufs[i]) {
+                        *p -= cfg.lr * *g;
+                    }
                 }
             }
+            st.params.unflatten(&st.flat);
+            st.epoch = t;
         }
-        params.unflatten(&flat);
         if t == cfg.epochs {
             last_grad = std::mem::take(&mut bufs[0]);
+        }
+        if let Some(pol) = ckpt_policy {
+            if pol.due(t) {
+                for (i, st) in states.iter().enumerate() {
+                    ckpt::save(&pol.dir, &st.snapshot(i, k))?;
+                }
+            }
         }
 
         if capture {
@@ -412,7 +469,7 @@ pub fn train_logged(
         let do_eval = cfg.eval_every > 0 && (t % cfg.eval_every == 0 || t == cfg.epochs)
             || (cfg.eval_every == 0 && t == cfg.epochs);
         let (val, test) = if do_eval {
-            let (v, te) = super::evaluate(g, &params, cfg.model.kind);
+            let (v, te) = super::evaluate(g, &states[0].params, cfg.model.kind);
             if v > best_val {
                 best_val = v;
                 best_val_test = te;
@@ -458,20 +515,20 @@ pub fn train_logged(
         }
     }
 
-    TrainResult {
+    Ok(TrainResult {
         variant: cfg.variant.name(),
         curve,
         final_val,
         final_test,
         best_val_test: if best_val > f64::NEG_INFINITY { best_val_test } else { final_test },
         works,
-        model_elems: flat.len(),
+        model_elems: states[0].flat.len(),
         comm_bytes_epoch,
         setup_bytes,
         probes,
         last_grad,
         wall_secs: watch.elapsed_secs(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -751,6 +808,52 @@ mod tests {
             assert!(row.get("bytes").unwrap().as_f64().unwrap() > 0.0);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    /// The crash-recovery oracle: training resumed from a mid-run
+    /// checkpoint must reproduce the uninterrupted run bit-for-bit —
+    /// dropout, smoothing EMAs, and Adam moments included.
+    #[test]
+    fn resume_reproduces_uninterrupted_run_bitwise() {
+        let g = tiny();
+        let pk = partition(&g, 3, Method::Multilevel, 4);
+        let cfg = cfg_for(
+            &g,
+            Variant::Pipe(PipeOpts { smooth_feat: true, smooth_grad: true, gamma: 0.9 }),
+            8,
+            0.3,
+        );
+        let dir = format!("/tmp/pipegcn_seq_ckpt_{}", std::process::id());
+        let _ = std::fs::remove_dir_all(&dir);
+        let policy = crate::ckpt::Policy { dir: dir.clone(), every: 3 };
+        let mut b1 = NativeBackend::new();
+        let full =
+            train_resumable(&g, &pk, &cfg, &mut b1, None, Some(&policy), None).unwrap();
+        assert_eq!(full.curve.len(), 8);
+        // checkpoints landed at epochs 3 and 6, each complete for 3 ranks
+        assert_eq!(crate::ckpt::latest_complete(&dir, 3).unwrap(), Some(6));
+        // resume from the epoch-6 snapshot: epochs 7..8, bit-identical
+        let mut b2 = NativeBackend::new();
+        let resumed =
+            train_resumable(&g, &pk, &cfg, &mut b2, None, None, Some(&dir)).unwrap();
+        assert_eq!(resumed.curve.len(), 2);
+        for (a, b) in full.curve[6..].iter().zip(&resumed.curve) {
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(
+                a.train_loss.to_bits(),
+                b.train_loss.to_bits(),
+                "epoch {}: uninterrupted {} vs resumed {}",
+                a.epoch,
+                a.train_loss,
+                b.train_loss
+            );
+        }
+        // a resume that would start past --epochs fails loudly
+        let mut b3 = NativeBackend::new();
+        let mut short = cfg.clone();
+        short.epochs = 5;
+        assert!(train_resumable(&g, &pk, &short, &mut b3, None, None, Some(&dir)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -40,17 +40,31 @@ impl Default for RunOpts {
 /// engine. Shared by [`run`] (sequential) and `pipegcn worker`
 /// (multi-process TCP), so a distributed run's inputs are guaranteed
 /// identical to the sequential reference it is compared against.
-pub fn prepare(
+///
+/// Inputs are validated **before** any expensive work, so a bad preset
+/// or method name from the CLI surfaces as a diagnostic, not a panic
+/// mid-build.
+pub fn try_prepare(
     preset_name: &str,
     n_parts: usize,
     variant_name: &str,
     opts: RunOpts,
-) -> (&'static Preset, Graph, Partitioning, TrainConfig) {
-    let preset = by_name(preset_name)
-        .unwrap_or_else(|| panic!("unknown preset '{preset_name}' (try: {:?})",
-            crate::graph::presets::names()));
-    let variant = Variant::parse(variant_name, opts.gamma)
-        .unwrap_or_else(|| panic!("unknown variant '{variant_name}'"));
+) -> crate::util::error::Result<(&'static Preset, Graph, Partitioning, TrainConfig)> {
+    let preset = by_name(preset_name).ok_or_else(|| {
+        crate::err_msg!(
+            "unknown preset '{preset_name}' (try: {:?})",
+            crate::graph::presets::names()
+        )
+    })?;
+    let variant = Variant::parse(variant_name, opts.gamma).ok_or_else(|| {
+        crate::err_msg!(
+            "unknown method '{variant_name}' (known: gcn, pipegcn, pipegcn-g, \
+             pipegcn-f, pipegcn-gf)"
+        )
+    })?;
+    if n_parts == 0 {
+        crate::bail!("partition count must be at least 1");
+    }
     let graph = preset.build(opts.seed);
     let parts = partition(&graph, n_parts, Method::Multilevel, opts.seed);
     let cfg = TrainConfig {
@@ -69,7 +83,17 @@ pub fn prepare(
         eval_every: opts.eval_every,
         probe_errors: opts.probe_errors,
     };
-    (preset, graph, parts, cfg)
+    Ok((preset, graph, parts, cfg))
+}
+
+/// [`try_prepare`], panicking on bad inputs (library/test convenience).
+pub fn prepare(
+    preset_name: &str,
+    n_parts: usize,
+    variant_name: &str,
+    opts: RunOpts,
+) -> (&'static Preset, Graph, Partitioning, TrainConfig) {
+    try_prepare(preset_name, n_parts, variant_name, opts).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Build, partition, train (sequential engine).
@@ -85,10 +109,28 @@ pub fn run_logged(
     opts: RunOpts,
     log: Option<&mut crate::util::json::FileEmitter>,
 ) -> RunOutput {
-    let (preset, graph, parts, cfg) = prepare(preset_name, n_parts, variant_name, opts);
+    run_resumable(preset_name, n_parts, variant_name, opts, log, None, None)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`run_logged`] with crash-safe checkpoint/restore: snapshot into
+/// `ckpt.dir` every `ckpt.every` epochs, and/or resume from the latest
+/// complete checkpoint under `resume_dir`
+/// (see [`trainer::train_resumable`]).
+pub fn run_resumable(
+    preset_name: &str,
+    n_parts: usize,
+    variant_name: &str,
+    opts: RunOpts,
+    log: Option<&mut crate::util::json::FileEmitter>,
+    ckpt: Option<&crate::ckpt::Policy>,
+    resume_dir: Option<&str>,
+) -> crate::util::error::Result<RunOutput> {
+    let (preset, graph, parts, cfg) = try_prepare(preset_name, n_parts, variant_name, opts)?;
     let mut backend = NativeBackend::new();
-    let result = trainer::train_logged(&graph, &parts, &cfg, &mut backend, log);
-    RunOutput { preset, graph, parts, result }
+    let result =
+        trainer::train_resumable(&graph, &parts, &cfg, &mut backend, log, ckpt, resume_dir)?;
+    Ok(RunOutput { preset, graph, parts, result })
 }
 
 /// Scale a recorded per-iteration work description to the mirrored
@@ -267,5 +309,17 @@ mod tests {
     #[should_panic(expected = "unknown preset")]
     fn unknown_preset_panics() {
         run("nope", 2, "gcn", RunOpts::default());
+    }
+
+    /// CLI paths validate before any expensive work: bad inputs come
+    /// back as diagnostics, not panics deep inside the build.
+    #[test]
+    fn try_prepare_rejects_bad_inputs_with_diagnostics() {
+        let e = try_prepare("nope", 2, "gcn", RunOpts::default()).unwrap_err();
+        assert!(e.to_string().contains("unknown preset"), "{e}");
+        let e = try_prepare("tiny", 2, "nope", RunOpts::default()).unwrap_err();
+        assert!(e.to_string().contains("unknown method"), "{e}");
+        let e = try_prepare("tiny", 0, "gcn", RunOpts::default()).unwrap_err();
+        assert!(e.to_string().contains("at least 1"), "{e}");
     }
 }

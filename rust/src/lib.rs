@@ -19,10 +19,18 @@
 //! * [`comm`] — the communication layer: the [`comm::Transport`]
 //!   contract, the in-process mailbox fabric with byte accounting, a
 //!   ring all-reduce, and link/topology descriptions.
+//! * [`ckpt`] — crash-safe checkpoint/restore: versioned, CRC-checked
+//!   binary snapshots of full training state (epoch, parameters, Adam
+//!   moments, PipeGCN stale buffers), one file per rank per epoch, with
+//!   atomic writes and latest-complete-checkpoint discovery. A resumed
+//!   run reproduces the uninterrupted run bit-for-bit
+//!   (`--ckpt-dir` / `--ckpt-every` / `--resume`).
 //! * [`net`] — the real transport: length-prefixed binary frames over
 //!   TCP ([`net::TcpTransport`]), a rank-0 rendezvous/peer-table
 //!   bootstrap, and the `launch`/`worker` multi-process runtime that
-//!   trains over genuine localhost sockets.
+//!   trains over genuine localhost sockets — `launch` supervises its
+//!   workers and relaunches the mesh from the latest complete
+//!   checkpoint when one dies.
 //! * [`sim`] — the discrete-event timeline simulator that models what the
 //!   training schedule costs on a described cluster (the paper's testbeds
 //!   are encoded as [`sim::DeviceProfile`]s / [`sim::Topology`]s).
@@ -43,6 +51,7 @@ pub mod tensor;
 pub mod graph;
 pub mod partition;
 pub mod comm;
+pub mod ckpt;
 pub mod net;
 pub mod sim;
 pub mod model;

@@ -48,11 +48,18 @@ fn print_help() {
          subcommands:\n\
          \x20 train      --dataset <preset> --parts K --method gcn|pipegcn|pipegcn-g|pipegcn-f|pipegcn-gf\n\
          \x20            [--epochs N] [--gamma G] [--seed S] [--probe-errors] [--out results.json]\n\
-         \x20            [--log run.ndjson]\n\
+         \x20            [--log run.ndjson] [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
+         \x20            (--ckpt-dir snapshots full training state — params, Adam moments,\n\
+         \x20             stale buffers — every --ckpt-every epochs; --resume continues the\n\
+         \x20             latest complete checkpoint bit-identically)\n\
          \x20 launch     --parts K --dataset <preset> [--method <m>] [--epochs N] [--seed S]\n\
          \x20            [--gamma G] [--log run.ndjson] [--out results.json]\n\
-         \x20            (spawns K worker processes training over real localhost TCP sockets)\n\
+         \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR] [--max-restarts N]\n\
+         \x20            (spawns K worker processes training over real localhost TCP sockets;\n\
+         \x20             with --ckpt-dir a worker death relaunches the mesh from the latest\n\
+         \x20             complete checkpoint, up to --max-restarts times)\n\
          \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
+         \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
          \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
@@ -62,7 +69,8 @@ fn print_help() {
 
 fn cmd_launch(args: &Args) -> Result<()> {
     args.assert_known(&[
-        "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
+        "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
+        "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch",
     ])?;
     let opts = LaunchOpts {
         parts: args.get_usize("parts", 2),
@@ -73,6 +81,12 @@ fn cmd_launch(args: &Args) -> Result<()> {
         gamma: args.get_f32("gamma", 0.95),
         log: args.get_opt("log").map(String::from),
         out: args.get_opt("out").map(String::from),
+        ckpt_dir: args.get_opt("ckpt-dir").map(String::from),
+        ckpt_every: args.get_usize("ckpt-every", 1),
+        resume: args.get_opt("resume").map(String::from),
+        max_restarts: args.get_usize("max-restarts", 3),
+        fail_rank: args.get_opt("fail-rank").map(|_| args.get_usize("fail-rank", 0)),
+        fail_epoch: args.get_opt("fail-epoch").map(|_| args.get_usize("fail-epoch", 0)),
     };
     // validate before spawning: a bad flag must fail here, not as K
     // worker panics followed by a rendezvous timeout
@@ -85,6 +99,23 @@ fn cmd_launch(args: &Args) -> Result<()> {
             opts.dataset
         );
     }
+    if opts.ckpt_dir.is_none() && args.has("ckpt-every") {
+        pipegcn::bail!("--ckpt-every needs --ckpt-dir");
+    }
+    if opts.ckpt_dir.is_some() && opts.ckpt_every == 0 {
+        pipegcn::bail!("--ckpt-every must be at least 1");
+    }
+    if opts.fail_rank.is_some() != opts.fail_epoch.is_some() {
+        pipegcn::bail!("--fail-rank and --fail-epoch (fault injection) go together");
+    }
+    if let Some(dir) = &opts.resume {
+        if pipegcn::ckpt::latest_complete(dir, opts.parts)?.is_none() {
+            pipegcn::bail!(
+                "--resume {dir}: no complete checkpoint for {} ranks",
+                opts.parts
+            );
+        }
+    }
     println!(
         "launch {} × {} worker processes over localhost TCP (method {})",
         opts.dataset, opts.parts, opts.method
@@ -96,6 +127,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     args.assert_known(&[
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
+        "ckpt-dir", "ckpt-every", "resume", "fail-epoch",
     ])?;
     let coord = args
         .get_opt("coord")
@@ -112,10 +144,16 @@ fn cmd_worker(args: &Args) -> Result<()> {
         gamma: args.get_f32("gamma", 0.95),
         log: args.get_opt("log").map(String::from),
         out: args.get_opt("out").map(String::from),
+        ckpt_dir: args.get_opt("ckpt-dir").map(String::from),
+        ckpt_every: args.get_usize("ckpt-every", 1),
+        resume: args.get_opt("resume").map(String::from),
+        fail_epoch: args.get_opt("fail-epoch").map(|_| args.get_usize("fail-epoch", 0)),
     };
+    // bad preset/method names surface as diagnostics (not deep panics)
+    // via exp::try_prepare, run_worker's first call
     if let Some(summary) = pipegcn::net::worker::run_worker(&opts)? {
         for (i, loss) in summary.losses.iter().enumerate() {
-            println!("epoch {:4}  loss {:.4}", i + 1, loss);
+            println!("epoch {:4}  loss {:.4}", summary.start_epoch + i + 1, loss);
         }
         println!(
             "final: loss {:.6} | val {:.4} test {:.4} | rank-0 sent {} payload ({} on the wire)",
@@ -132,7 +170,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.assert_known(&[
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
-        "eval-every", "log",
+        "eval-every", "log", "ckpt-dir", "ckpt-every", "resume",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
@@ -146,6 +184,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let variant = Variant::parse(&method, opts.gamma)
         .ok_or_else(|| pipegcn::err_msg!("bad --method '{method}'"))?;
+    let ckpt_policy = args.get_opt("ckpt-dir").map(|dir| pipegcn::ckpt::Policy {
+        dir: dir.to_string(),
+        every: args.get_usize("ckpt-every", 1),
+    });
+    if ckpt_policy.is_none() && args.has("ckpt-every") {
+        pipegcn::bail!("--ckpt-every needs --ckpt-dir");
+    }
+    if let Some(p) = &ckpt_policy {
+        if p.every == 0 {
+            pipegcn::bail!("--ckpt-every must be at least 1");
+        }
+    }
+    let resume = args.get_opt("resume").map(String::from);
     println!(
         "train {dataset} parts={parts} method={} epochs={}",
         variant.name(),
@@ -153,21 +204,40 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let out = match args.get_opt("log") {
         Some(log_path) => {
-            let mut emitter = FileEmitter::create(
-                log_path,
-                Json::obj()
-                    .set("dataset", dataset.as_str())
-                    .set("parts", parts)
-                    .set("method", variant.name())
-                    .set("seed", opts.seed)
-                    .set("engine", "sequential"),
-            )
+            let header = Json::obj()
+                .set("dataset", dataset.as_str())
+                .set("parts", parts)
+                .set("method", variant.name())
+                .set("seed", opts.seed)
+                .set("engine", "sequential");
+            // resuming appends, so the pre-crash epoch rows survive
+            let mut emitter = if resume.is_some() {
+                FileEmitter::append_or_create(log_path, header)
+            } else {
+                FileEmitter::create(log_path, header)
+            }
             .with_context(|| format!("creating run log {log_path}"))?;
-            let out = exp::run_logged(&dataset, parts, &method, opts, Some(&mut emitter));
+            let out = exp::run_resumable(
+                &dataset,
+                parts,
+                &method,
+                opts,
+                Some(&mut emitter),
+                ckpt_policy.as_ref(),
+                resume.as_deref(),
+            )?;
             println!("streamed {} epochs to {log_path}", emitter.rows());
             out
         }
-        None => exp::run(&dataset, parts, &method, opts),
+        None => exp::run_resumable(
+            &dataset,
+            parts,
+            &method,
+            opts,
+            None,
+            ckpt_policy.as_ref(),
+            resume.as_deref(),
+        )?,
     };
     let r = &out.result;
     for e in &r.curve {
@@ -269,8 +339,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
         eval_every: 0,
         ..Default::default()
     };
+    // validate before the (expensive) experiment runs, not after it
+    let variant = Variant::parse(&method, 0.95)
+        .ok_or_else(|| pipegcn::err_msg!("bad --method '{method}'"))?;
+    if presets::by_name(&dataset).is_none() {
+        pipegcn::bail!("unknown preset '{dataset}' (try `pipegcn presets` for the list)");
+    }
     let out = exp::run(&dataset, parts, &method, opts);
-    let variant = Variant::parse(&method, 0.95).unwrap();
     let mode = if variant.is_pipelined() { Mode::Pipelined } else { Mode::Vanilla };
     let breakdown = match args.get_opt("nodes-x-gpus") {
         Some(spec) => {

@@ -49,6 +49,19 @@ impl Adam {
     pub fn step_count(&self) -> u64 {
         self.t
     }
+
+    /// Optimizer state view for checkpointing: `(m, v, t)`.
+    pub fn state(&self) -> (&[f32], &[f32], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Rebuild an optimizer mid-run from checkpointed moments — the
+    /// resumed instance continues the uninterrupted trajectory exactly
+    /// (the bias corrections depend only on `t`).
+    pub fn restore(lr: f32, m: Vec<f32>, v: Vec<f32>, t: u64) -> Adam {
+        assert_eq!(m.len(), v.len(), "Adam moment length mismatch");
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m, v, t }
+    }
 }
 
 #[cfg(test)]

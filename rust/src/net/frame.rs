@@ -10,6 +10,9 @@
 //!                itself (to the rendezvous: with its mesh listen addr)
 //! PeerTable (2): n u16, n × (u16 len + utf8)       — rendezvous reply
 //! Shutdown  (3): src u16                           — graceful close
+//! DataChunk (4): src u16, dst u16, iter u32, layer u16, phase u8,
+//!                last u8, payload: [f32 bits, LE]  — slice of an
+//!                oversized Data payload, reassembled on receive
 //! ```
 //!
 //! Payload floats travel as raw bit patterns (`to_bits`/`from_bits`), so
@@ -25,10 +28,20 @@ pub const MAX_BODY_BYTES: usize = 64 << 20;
 /// Bytes of framing around a Data payload (length prefix + header).
 pub const DATA_OVERHEAD_BYTES: usize = 4 + 1 + 2 + 2 + 4 + 2 + 1;
 
+/// Bytes of framing around a DataChunk payload (Data header + `last`).
+pub const CHUNK_OVERHEAD_BYTES: usize = DATA_OVERHEAD_BYTES + 1;
+
+/// Most floats a single Data frame may carry under [`MAX_BODY_BYTES`].
+pub const MAX_DATA_FLOATS: usize = (MAX_BODY_BYTES - (DATA_OVERHEAD_BYTES - 4)) / 4;
+
+/// Floats per chunk when an oversized payload is split into DataChunks.
+pub const MAX_CHUNK_FLOATS: usize = (MAX_BODY_BYTES - (CHUNK_OVERHEAD_BYTES - 4)) / 4;
+
 const KIND_DATA: u8 = 0;
 const KIND_HELLO: u8 = 1;
 const KIND_PEER_TABLE: u8 = 2;
 const KIND_SHUTDOWN: u8 = 3;
+const KIND_DATA_CHUNK: u8 = 4;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -41,6 +54,12 @@ pub enum Frame {
     PeerTable { addrs: Vec<String> },
     /// Graceful end-of-stream from `src`; the reader thread exits cleanly.
     Shutdown { src: u16 },
+    /// One slice of a payload larger than [`MAX_BODY_BYTES`]: the sender
+    /// splits transparently, the receiver reassembles per (src, tag)
+    /// until the `last` chunk arrives. Chunks of one logical message are
+    /// contiguous on their socket (the writer thread drains its queue in
+    /// order), so reassembly needs no sequence numbers.
+    DataChunk { src: u16, dst: u16, tag: Tag, last: bool, payload: Vec<f32> },
 }
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
@@ -130,6 +149,19 @@ pub fn encode_body(f: &Frame) -> Vec<u8> {
             out.push(KIND_SHUTDOWN);
             put_u16(&mut out, *src);
         }
+        Frame::DataChunk { src, dst, tag, last, payload } => {
+            out.reserve(CHUNK_OVERHEAD_BYTES + payload.len() * 4);
+            out.push(KIND_DATA_CHUNK);
+            put_u16(&mut out, *src);
+            put_u16(&mut out, *dst);
+            put_u32(&mut out, tag.iter);
+            put_u16(&mut out, tag.layer);
+            out.push(tag.phase.code());
+            out.push(*last as u8);
+            for v in payload {
+                put_u32(&mut out, v.to_bits());
+            }
+        }
     }
     out
 }
@@ -167,6 +199,25 @@ pub fn decode_body(buf: &[u8]) -> Result<Frame, String> {
             Frame::PeerTable { addrs }
         }
         KIND_SHUTDOWN => Frame::Shutdown { src: c.u16()? },
+        KIND_DATA_CHUNK => {
+            let src = c.u16()?;
+            let dst = c.u16()?;
+            let iter = c.u32()?;
+            let layer = c.u16()?;
+            let phase_code = c.u8()?;
+            let phase = Phase::from_code(phase_code)
+                .ok_or_else(|| format!("bad phase code {phase_code}"))?;
+            let last = c.u8()? != 0;
+            let rest = buf.len() - c.pos;
+            if rest % 4 != 0 {
+                return Err(format!("chunk payload not f32-aligned ({rest} bytes)"));
+            }
+            let mut payload = Vec::with_capacity(rest / 4);
+            for _ in 0..rest / 4 {
+                payload.push(f32::from_bits(c.u32()?));
+            }
+            Frame::DataChunk { src, dst, tag: Tag::new(iter, layer, phase), last, payload }
+        }
         other => return Err(format!("unknown frame kind {other}")),
     };
     if c.pos != buf.len() {
@@ -177,31 +228,41 @@ pub fn decode_body(buf: &[u8]) -> Result<Frame, String> {
 
 /// Write one length-prefixed frame (caller flushes).
 ///
-/// Data frames — the transport hot path — are streamed straight into
-/// the writer (length prefix, 12-byte header from a stack buffer, then
-/// the payload bits), skipping [`encode_body`]'s intermediate `Vec`
-/// copy; the byte layout is identical. Control frames go through
-/// [`encode_body`].
+/// Data and DataChunk frames — the transport hot path — are streamed
+/// straight into the writer (length prefix, 12/13-byte header from a
+/// stack buffer, then the payload bits), skipping [`encode_body`]'s
+/// intermediate `Vec` copy; the byte layout is identical. Control
+/// frames go through [`encode_body`].
 pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
-    if let Frame::Data { src, dst, tag, payload } = f {
-        let body_len = (DATA_OVERHEAD_BYTES - 4) + payload.len() * 4;
-        w.write_all(&(body_len as u32).to_le_bytes())?;
-        let mut head = [0u8; DATA_OVERHEAD_BYTES - 4];
-        head[0] = KIND_DATA;
-        head[1..3].copy_from_slice(&src.to_le_bytes());
-        head[3..5].copy_from_slice(&dst.to_le_bytes());
-        head[5..9].copy_from_slice(&tag.iter.to_le_bytes());
-        head[9..11].copy_from_slice(&tag.layer.to_le_bytes());
-        head[11] = tag.phase.code();
-        w.write_all(&head)?;
-        for v in payload {
-            w.write_all(&v.to_bits().to_le_bytes())?;
+    let (kind, src, dst, tag, last, payload) = match f {
+        Frame::Data { src, dst, tag, payload } => (KIND_DATA, src, dst, tag, None, payload),
+        Frame::DataChunk { src, dst, tag, last, payload } => {
+            (KIND_DATA_CHUNK, src, dst, tag, Some(*last), payload)
         }
-        return Ok(());
+        other => {
+            let body = encode_body(other);
+            w.write_all(&(body.len() as u32).to_le_bytes())?;
+            return w.write_all(&body);
+        }
+    };
+    let head_len = if last.is_some() { CHUNK_OVERHEAD_BYTES - 4 } else { DATA_OVERHEAD_BYTES - 4 };
+    let body_len = head_len + payload.len() * 4;
+    w.write_all(&(body_len as u32).to_le_bytes())?;
+    let mut head = [0u8; CHUNK_OVERHEAD_BYTES - 4];
+    head[0] = kind;
+    head[1..3].copy_from_slice(&src.to_le_bytes());
+    head[3..5].copy_from_slice(&dst.to_le_bytes());
+    head[5..9].copy_from_slice(&tag.iter.to_le_bytes());
+    head[9..11].copy_from_slice(&tag.layer.to_le_bytes());
+    head[11] = tag.phase.code();
+    if let Some(last) = last {
+        head[12] = last as u8;
     }
-    let body = encode_body(f);
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)
+    w.write_all(&head[..head_len])?;
+    for v in payload {
+        w.write_all(&v.to_bits().to_le_bytes())?;
+    }
+    Ok(())
 }
 
 /// Read one length-prefixed frame. `Ok(None)` on clean EOF at a frame
@@ -292,6 +353,34 @@ mod tests {
             },
             _ => panic!("wrong kind"),
         }
+    }
+
+    #[test]
+    fn data_chunk_roundtrip() {
+        for last in [false, true] {
+            roundtrip(Frame::DataChunk {
+                src: 1,
+                dst: 2,
+                tag: Tag::new(9, 3, Phase::Reduce),
+                last,
+                payload: vec![0.5, -1.0, 2.0],
+            });
+        }
+        roundtrip(Frame::DataChunk {
+            src: 0,
+            dst: 1,
+            tag: Tag::new(1, 0, Phase::FwdFeat),
+            last: true,
+            payload: Vec::new(),
+        });
+    }
+
+    #[test]
+    fn chunk_sizing_constants_respect_the_cap() {
+        assert!((CHUNK_OVERHEAD_BYTES - 4) + MAX_CHUNK_FLOATS * 4 <= MAX_BODY_BYTES);
+        assert!((DATA_OVERHEAD_BYTES - 4) + MAX_DATA_FLOATS * 4 <= MAX_BODY_BYTES);
+        // one more float would not fit a single frame
+        assert!((DATA_OVERHEAD_BYTES - 4) + (MAX_DATA_FLOATS + 1) * 4 > MAX_BODY_BYTES);
     }
 
     #[test]

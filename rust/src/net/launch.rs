@@ -1,15 +1,25 @@
 //! `pipegcn launch` — spawn one worker process per partition on this
-//! machine and serve their rendezvous.
+//! machine, serve their rendezvous, and supervise them.
 //!
 //! The launcher binds an ephemeral rendezvous port, starts `--parts`
 //! children running `pipegcn worker --rank i --coord <addr> ...`
 //! (stdio inherited, so rank 0's report streams to the console), hands
-//! every rank the peer table, and waits for all of them to exit.
+//! every rank the peer table, and polls the children so one death is
+//! detected while the rest are still running.
+//!
+//! Crash recovery: with `--ckpt-dir`, a failed generation (a worker
+//! died, or rendezvous/mesh formation broke) is torn down and the **full
+//! mesh is relaunched from the latest complete checkpoint** — a fresh
+//! rendezvous generation on a fresh port, every worker passed
+//! `--resume <ckpt-dir>`. Up to `--max-restarts` relaunches are
+//! attempted before giving up. Without a checkpoint directory a worker
+//! death still fails the whole job, as before.
 
 use super::rendezvous;
-use crate::util::error::{Context, Result};
+use crate::util::error::Result;
 use std::net::TcpListener;
 use std::process::{Child, Command};
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct LaunchOpts {
@@ -20,10 +30,22 @@ pub struct LaunchOpts {
     pub epochs: usize,
     pub seed: u64,
     pub gamma: f32,
-    /// NDJSON run log path (given to rank 0)
+    /// NDJSON run log path (given to rank 0; streamed per epoch)
     pub log: Option<String>,
     /// result JSON path (given to rank 0)
     pub out: Option<String>,
+    /// checkpoint directory (enables crash recovery)
+    pub ckpt_dir: Option<String>,
+    /// snapshot every this many epochs (with `ckpt_dir`)
+    pub ckpt_every: usize,
+    /// start the first generation from this checkpoint directory
+    pub resume: Option<String>,
+    /// mesh relaunches allowed after a failure (needs `ckpt_dir`)
+    pub max_restarts: usize,
+    /// fault injection for the recovery tests: this rank …
+    pub fail_rank: Option<usize>,
+    /// … exits(13) after this epoch, on the first generation only
+    pub fail_epoch: Option<usize>,
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -33,16 +55,13 @@ fn kill_all(children: &mut [Child]) {
     }
 }
 
-/// Spawn `opts.parts` workers of `bin` (normally `current_exe()`), serve
-/// their rendezvous, and wait. Errors if any rank exits non-zero.
-pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
-    if opts.parts == 0 {
-        crate::bail!("--parts must be at least 1");
-    }
-    let listener =
-        TcpListener::bind("127.0.0.1:0").context("binding the rendezvous listener")?;
-    let coord = listener.local_addr()?.to_string();
-
+fn spawn_workers(
+    bin: &std::path::Path,
+    opts: &LaunchOpts,
+    coord: &str,
+    resume: Option<&str>,
+    inject_fault: bool,
+) -> Result<Vec<Child>> {
     let mut children: Vec<Child> = Vec::with_capacity(opts.parts);
     for rank in 0..opts.parts {
         let mut cmd = Command::new(bin);
@@ -52,7 +71,7 @@ pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
             .arg("--parts")
             .arg(opts.parts.to_string())
             .arg("--coord")
-            .arg(&coord)
+            .arg(coord)
             .arg("--dataset")
             .arg(&opts.dataset)
             .arg("--method")
@@ -63,6 +82,18 @@ pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
             .arg(opts.seed.to_string())
             .arg("--gamma")
             .arg(opts.gamma.to_string());
+        if let Some(dir) = &opts.ckpt_dir {
+            cmd.arg("--ckpt-dir").arg(dir);
+            cmd.arg("--ckpt-every").arg(opts.ckpt_every.to_string());
+        }
+        if let Some(dir) = resume {
+            cmd.arg("--resume").arg(dir);
+        }
+        if inject_fault && opts.fail_rank == Some(rank) {
+            if let Some(epoch) = opts.fail_epoch {
+                cmd.arg("--fail-epoch").arg(epoch.to_string());
+            }
+        }
         if rank == 0 {
             if let Some(log) = &opts.log {
                 cmd.arg("--log").arg(log);
@@ -79,23 +110,87 @@ pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
             }
         }
     }
+    Ok(children)
+}
 
-    // Hand out the peer table. If a child dies before its hello, the
-    // accept deadline fires and we tear the job down.
-    if let Err(e) = rendezvous::serve(&listener, opts.parts) {
-        kill_all(&mut children);
-        return Err(crate::err_msg!("rendezvous failed: {e}"));
+/// Poll all children until every one exits cleanly; error at the first
+/// non-zero exit (the caller tears the rest down). Polling — rather than
+/// a rank-ordered `wait()` chain — is what lets the launcher notice a
+/// high-rank death while low ranks are still blocked mid-epoch.
+fn supervise(children: &mut [Child]) -> Result<()> {
+    let mut done = vec![false; children.len()];
+    loop {
+        let mut all_done = true;
+        for (rank, child) in children.iter_mut().enumerate() {
+            if done[rank] {
+                continue;
+            }
+            match child.try_wait() {
+                Ok(Some(status)) if status.success() => done[rank] = true,
+                Ok(Some(status)) => crate::bail!("worker rank {rank} exited with {status}"),
+                Ok(None) => all_done = false,
+                Err(e) => crate::bail!("waiting for rank {rank}: {e}"),
+            }
+        }
+        if all_done {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(30));
     }
+}
 
-    let mut failed = Vec::new();
-    for (rank, child) in children.iter_mut().enumerate() {
-        let status = child.wait().with_context(|| format!("waiting for rank {rank}"))?;
-        if !status.success() {
-            failed.push(rank);
+/// Spawn `opts.parts` workers of `bin` (normally `current_exe()`), serve
+/// their rendezvous, and supervise until completion — relaunching the
+/// full mesh from the latest complete checkpoint when a generation
+/// fails and `--ckpt-dir` is set.
+pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
+    if opts.parts == 0 {
+        crate::bail!("--parts must be at least 1");
+    }
+    let mut generation = 0usize;
+    let mut resume = opts.resume.clone();
+    loop {
+        // fresh rendezvous generation: new listener, new port
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| crate::err_msg!("binding the rendezvous listener: {e}"))?;
+        let coord = listener.local_addr()?.to_string();
+        // fault injection fires on the first, non-resumed generation
+        // only — the relaunched mesh must be allowed to finish
+        let inject = generation == 0 && resume.is_none();
+        let mut children = spawn_workers(bin, opts, &coord, resume.as_deref(), inject)?;
+
+        let outcome = rendezvous::serve(&listener, opts.parts)
+            .map_err(|e| crate::err_msg!("rendezvous failed: {e}"))
+            .and_then(|_| supervise(&mut children));
+        match outcome {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                // reap everything *before* scanning for checkpoints, so
+                // no straggler is mid-write during the scan
+                kill_all(&mut children);
+                let Some(dir) = &opts.ckpt_dir else { return Err(e) };
+                if generation >= opts.max_restarts {
+                    return Err(crate::err_msg!(
+                        "{e}; giving up after {generation} restart(s)"
+                    ));
+                }
+                match crate::ckpt::latest_complete(dir, opts.parts)? {
+                    Some(epoch) => {
+                        generation += 1;
+                        eprintln!(
+                            "launch: {e}; relaunching all {} workers from the epoch-{epoch} \
+                             checkpoint (generation {generation})",
+                            opts.parts
+                        );
+                        resume = Some(dir.clone());
+                    }
+                    None => {
+                        return Err(crate::err_msg!(
+                            "{e}; no complete checkpoint under {dir} to recover from"
+                        ))
+                    }
+                }
+            }
         }
     }
-    if !failed.is_empty() {
-        crate::bail!("worker ranks {failed:?} exited with failure");
-    }
-    Ok(())
 }

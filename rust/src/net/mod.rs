@@ -16,7 +16,10 @@
 //! * [`worker`] / [`launch`] — the multi-process runtime: `pipegcn
 //!   launch --parts K ...` spawns K OS processes that train over real
 //!   localhost sockets; each runs
-//!   [`crate::coordinator::threaded::run_rank`] unchanged.
+//!   [`crate::coordinator::threaded::run_rank_ctl`] unchanged. The
+//!   launcher supervises its children and, with `--ckpt-dir`, survives a
+//!   worker death by relaunching the whole mesh (a fresh rendezvous
+//!   generation) from the latest complete [`crate::ckpt`] checkpoint.
 //!
 //! The schedule is deterministic over any transport (staleness lives in
 //! message tags), so a TCP run's loss curve is bit-identical to the

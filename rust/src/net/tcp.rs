@@ -8,6 +8,10 @@
 //! **reader thread** per socket demuxes frames into the per-(src, tag)
 //! FIFO queues that [`TcpTransport::recv_blocking`] pops).
 //!
+//! Payloads above the 64 MiB frame cap are split into
+//! [`Frame::DataChunk`]s on send and reassembled per (src, tag) by the
+//! reader thread before delivery, so callers never see the cap.
+//!
 //! Graceful teardown: [`TcpTransport::shutdown`] flushes a
 //! [`Frame::Shutdown`] on every outbound socket and joins the writer
 //! threads; reader threads exit when the matching peer's shutdown frame
@@ -30,6 +34,8 @@ const WAIT_SLICE: Duration = Duration::from_secs(5);
 
 enum Out {
     Data(Tag, Vec<f32>),
+    /// one slice of an oversized payload (`true` = final chunk)
+    Chunk(Tag, Vec<f32>, bool),
     Shutdown,
 }
 
@@ -99,26 +105,29 @@ pub struct TcpTransport {
 fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
     let mut w = std::io::BufWriter::new(stream);
     loop {
-        match q.pop_blocking() {
+        let f = match q.pop_blocking() {
             Out::Data(tag, payload) => {
-                let f = Frame::Data { src: rank as u16, dst: peer as u16, tag, payload };
-                if let Err(e) = frame::write_frame(&mut w, &f) {
-                    // peer died; drain silently — its reader side reports
-                    eprintln!("[rank {rank}] write to {peer} failed: {e}");
-                    return;
-                }
-                // coalesce bursts: only flush once the queue drains
-                if q.is_empty() {
-                    if let Err(e) = w.flush() {
-                        eprintln!("[rank {rank}] flush to {peer} failed: {e}");
-                        return;
-                    }
-                }
+                Frame::Data { src: rank as u16, dst: peer as u16, tag, payload }
+            }
+            Out::Chunk(tag, payload, last) => {
+                Frame::DataChunk { src: rank as u16, dst: peer as u16, tag, last, payload }
             }
             Out::Shutdown => {
                 let f = Frame::Shutdown { src: rank as u16 };
                 let _ = frame::write_frame(&mut w, &f);
                 let _ = w.flush();
+                return;
+            }
+        };
+        if let Err(e) = frame::write_frame(&mut w, &f) {
+            // peer died; drain silently — its reader side reports
+            eprintln!("[rank {rank}] write to {peer} failed: {e}");
+            return;
+        }
+        // coalesce bursts: only flush once the queue drains
+        if q.is_empty() {
+            if let Err(e) = w.flush() {
+                eprintln!("[rank {rank}] flush to {peer} failed: {e}");
                 return;
             }
         }
@@ -127,6 +136,9 @@ fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
 
 fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize) {
     let mut r = std::io::BufReader::new(stream);
+    // partial reassembly buffers for chunked payloads: chunks of one
+    // logical message arrive contiguously per tag on this socket
+    let mut partial: HashMap<Tag, Vec<f32>> = HashMap::new();
     loop {
         match frame::read_frame(&mut r) {
             Ok(Some(Frame::Data { src, dst, tag, payload })) => {
@@ -140,6 +152,24 @@ fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize
                 }
                 g.queues.entry((src as u32, tag)).or_default().push_back(payload);
                 inbox.cv.notify_all();
+            }
+            Ok(Some(Frame::DataChunk { src, dst, tag, last, payload })) => {
+                if src as usize != peer || dst as usize != my_rank {
+                    let mut g = inbox.state.lock().unwrap();
+                    g.errors.push(format!(
+                        "misrouted chunk on {peer}→{my_rank} socket: src {src} dst {dst}"
+                    ));
+                    inbox.cv.notify_all();
+                    return;
+                }
+                let buf = partial.entry(tag).or_default();
+                buf.extend_from_slice(&payload);
+                if last {
+                    let full = partial.remove(&tag).unwrap();
+                    let mut g = inbox.state.lock().unwrap();
+                    g.queues.entry((src as u32, tag)).or_default().push_back(full);
+                    inbox.cv.notify_all();
+                }
             }
             Ok(Some(Frame::Shutdown { .. })) | Ok(None) => {
                 let mut g = inbox.state.lock().unwrap();
@@ -296,20 +326,27 @@ impl Transport for TcpTransport {
     fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert_eq!(src, self.rank, "TcpTransport can only send as its own rank");
         assert!(dst < self.n && dst != self.rank, "bad dst {dst}");
-        // fail at the fault site: an oversized frame would otherwise be
-        // rejected by the receiver's read_frame as wire corruption
-        assert!(
-            payload.len() * 4 + frame::DATA_OVERHEAD_BYTES <= frame::MAX_BODY_BYTES,
-            "payload of {} floats exceeds the {} MiB frame cap for {tag:?} — chunk the message",
-            payload.len(),
-            frame::MAX_BODY_BYTES >> 20,
-        );
         let bytes = (payload.len() * 4) as u64;
         self.payload_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
-        self.wire_bytes_sent
-            .fetch_add(bytes + frame::DATA_OVERHEAD_BYTES as u64, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
-        self.out[dst].as_ref().expect("peer queue").push(Out::Data(tag, payload));
+        let q = self.out[dst].as_ref().expect("peer queue");
+        if payload.len() <= frame::MAX_DATA_FLOATS {
+            self.wire_bytes_sent
+                .fetch_add(bytes + frame::DATA_OVERHEAD_BYTES as u64, Ordering::Relaxed);
+            q.push(Out::Data(tag, payload));
+        } else {
+            // payload exceeds the frame cap: split transparently into
+            // DataChunk frames; the peer's reader reassembles before
+            // delivery, so recv_blocking still yields one message
+            let n_chunks = payload.len().div_ceil(frame::MAX_CHUNK_FLOATS);
+            self.wire_bytes_sent.fetch_add(
+                bytes + (n_chunks * frame::CHUNK_OVERHEAD_BYTES) as u64,
+                Ordering::Relaxed,
+            );
+            for (i, chunk) in payload.chunks(frame::MAX_CHUNK_FLOATS).enumerate() {
+                q.push(Out::Chunk(tag, chunk.to_vec(), i + 1 == n_chunks));
+            }
+        }
     }
 
     fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
@@ -500,5 +537,38 @@ mod tests {
     fn send_as_foreign_rank_rejected() {
         let mesh = localhost_mesh(2).unwrap();
         mesh[0].send(1, 0, Tag::new(0, 0, Phase::Setup), vec![]);
+    }
+
+    /// Regression: a payload just above the 64 MiB frame cap used to
+    /// panic at the send site; it must now be chunked and reassembled
+    /// transparently, bit-for-bit.
+    #[test]
+    fn payload_above_frame_cap_is_chunked() {
+        let mut mesh = localhost_mesh(2).unwrap();
+        let tag = Tag::new(3, 1, Phase::FwdFeat);
+        let n = frame::MAX_DATA_FLOATS + 1;
+        let payload: Vec<f32> = (0..n).map(|i| (i % 8191) as f32 * 0.5).collect();
+        mesh[0].send(0, 1, tag, payload.clone());
+        // a small message under a different tag is unaffected by the
+        // in-flight reassembly
+        let small = Tag::new(3, 2, Phase::FwdFeat);
+        mesh[0].send(0, 1, small, vec![42.0]);
+        let got = mesh[1].recv_blocking(0, 1, tag);
+        assert_eq!(got.len(), payload.len());
+        assert!(got == payload, "chunked payload corrupted in transit");
+        assert_eq!(mesh[1].recv_blocking(0, 1, small), vec![42.0]);
+        // accounting: payload bytes are logical; wire bytes pay one
+        // header per chunk (2 chunks + the small frame here)
+        assert_eq!(mesh[0].payload_bytes_sent(), (n as u64 + 1) * 4);
+        assert_eq!(
+            mesh[0].wire_bytes_sent(),
+            (n as u64 + 1) * 4
+                + 2 * frame::CHUNK_OVERHEAD_BYTES as u64
+                + frame::DATA_OVERHEAD_BYTES as u64
+        );
+        for m in &mut mesh {
+            m.shutdown();
+        }
+        assert_eq!(mesh[1].pending(), 0);
     }
 }

@@ -4,23 +4,25 @@
 //! and halo plan from the shared seed (synthetic datasets make the graph
 //! a pure function of its preset — no input files to ship), joins the
 //! TCP mesh through the rendezvous, and runs
-//! [`crate::coordinator::threaded::run_rank`] over its
-//! [`super::TcpTransport`]. Rank 0 gathers the per-rank partial losses
-//! (bit-losslessly, as f64 halves in the f32 payload channel), evaluates
-//! the final model, and owns all reporting.
+//! [`crate::coordinator::threaded::run_rank_ctl`] over its
+//! [`super::TcpTransport`]. Every epoch's partial losses flow to rank 0
+//! inside the schedule (the per-epoch loss reduction), so rank 0 holds
+//! the live global loss, streams NDJSON run-log rows as epochs finish,
+//! evaluates the final model, and owns all reporting.
+//!
+//! Crash safety: with `--ckpt-dir` every rank snapshots its full
+//! [`TrainState`] every `--ckpt-every` epochs; with `--resume <dir>` a
+//! worker restores the latest complete checkpoint and continues the
+//! uninterrupted run bit-for-bit. `--fail-epoch` is fault injection for
+//! the recovery tests (exit(13) after that epoch completes).
 
 use super::rendezvous;
-use crate::comm::{decode_f64s, encode_f64s, Phase, Tag, Transport};
-use crate::coordinator::{evaluate, halo, threaded};
+use crate::ckpt;
+use crate::coordinator::threaded::{self, RankCtl};
+use crate::coordinator::{evaluate, halo, TrainState};
 use crate::exp::{self, RunOpts};
 use crate::util::error::{Context, Result};
 use crate::util::json::{FileEmitter, Json};
-
-/// The loss-gather rendezvous tag: iteration `u32::MAX` cannot collide
-/// with training iterations (epochs are far smaller), layer = src rank.
-fn loss_tag(src: usize) -> Tag {
-    Tag::new(u32::MAX, src as u16, Phase::Setup)
-}
 
 #[derive(Clone, Debug)]
 pub struct WorkerOpts {
@@ -34,17 +36,28 @@ pub struct WorkerOpts {
     pub epochs: usize,
     pub seed: u64,
     pub gamma: f32,
-    /// NDJSON run log (rank 0 only)
+    /// NDJSON run log (rank 0 only), streamed per epoch
     pub log: Option<String>,
-    /// result JSON (rank 0 only)
+    /// result JSON path (rank 0 only)
     pub out: Option<String>,
+    /// snapshot training state into this directory
+    pub ckpt_dir: Option<String>,
+    /// snapshot every this many epochs (with `ckpt_dir`)
+    pub ckpt_every: usize,
+    /// restore the latest complete checkpoint under this directory
+    pub resume: Option<String>,
+    /// fault injection: exit(13) after this epoch (recovery tests)
+    pub fail_epoch: Option<usize>,
 }
 
 /// What rank 0 learns at the end of a distributed run.
 pub struct WorkerSummary {
-    /// per-epoch global train loss, summed across ranks in rank order —
-    /// bit-identical to the sequential and threaded engines
+    /// per-epoch global train loss for the epochs this incarnation ran
+    /// (`start_epoch + 1 ..= epochs`), summed across ranks in rank
+    /// order — bit-identical to the sequential and threaded engines
     pub losses: Vec<f64>,
+    /// completed epochs restored from a checkpoint (0 on a fresh run)
+    pub start_epoch: usize,
     pub final_val: f64,
     pub final_test: f64,
     /// payload bytes this rank sent (comparable with Fabric accounting)
@@ -57,34 +70,64 @@ pub struct WorkerSummary {
 /// elsewhere.
 pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     let run_opts = RunOpts { epochs: o.epochs, seed: o.seed, gamma: o.gamma, ..Default::default() };
-    let (_preset, graph, parts, cfg) = exp::prepare(&o.dataset, o.parts, &o.method, run_opts);
+    // validates preset/method up front: a bad flag is a diagnostic here,
+    // not a panic deep inside the dataset build
+    let (_preset, graph, parts, cfg) = exp::try_prepare(&o.dataset, o.parts, &o.method, run_opts)?;
     let plan = halo::build(&graph, &parts, cfg.model.kind);
+
+    // training state: fresh, or the latest complete checkpoint. Every
+    // worker scans the same directory tree, so all ranks agree on the
+    // resume epoch without extra coordination.
+    let mut st = match &o.resume {
+        None => TrainState::init(&cfg, &plan.parts[o.rank]),
+        Some(dir) => {
+            let epoch = ckpt::latest_complete(dir, o.parts)?.with_context(|| {
+                format!("--resume {dir}: no complete checkpoint for {} ranks", o.parts)
+            })?;
+            let snap = ckpt::load(dir, epoch, o.rank)?;
+            TrainState::from_snapshot(snap, &cfg, &plan.parts[o.rank])?
+        }
+    };
+    let start_epoch = st.epoch;
+    if start_epoch >= cfg.epochs {
+        // a recovered mesh whose last checkpoint landed on the final
+        // epoch: nothing left to train — still join the mesh so rank 0
+        // evaluates the restored model and writes the report
+        eprintln!(
+            "[rank {}] checkpoint epoch {start_epoch} already covers --epochs {}; \
+             evaluating and reporting only",
+            o.rank, cfg.epochs
+        );
+    }
+    let policy = o
+        .ckpt_dir
+        .as_ref()
+        .map(|dir| ckpt::Policy { dir: dir.clone(), every: o.ckpt_every.max(1) });
+    let mut log_em = match (&o.log, o.rank) {
+        (Some(path), 0) => Some(open_log(path, o)?),
+        _ => None,
+    };
 
     let mut transport = rendezvous::connect(o.rank, o.parts, &o.coord)
         .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
-    let (losses, params) = threaded::run_rank(&transport, &plan, o.rank, &cfg);
+    let ctl = RankCtl {
+        ckpt: policy.as_ref(),
+        log: log_em.as_mut(),
+        kill_after_epoch: o.fail_epoch,
+    };
+    let losses = threaded::run_rank_ctl(&transport, &plan, o.rank, &cfg, &mut st, ctl)?;
 
     if o.rank != 0 {
-        transport.send(o.rank, 0, loss_tag(o.rank), encode_f64s(&losses));
         transport.shutdown();
         return Ok(None);
     }
 
-    // rank 0: gather partial losses in rank order (f64 addition order
-    // matches the in-process engines, keeping sums bit-identical)
-    let mut total = losses;
-    for j in 1..o.parts {
-        let part = decode_f64s(&transport.recv_blocking(j, 0, loss_tag(j)));
-        if part.len() != total.len() {
-            crate::bail!("rank {j} reported {} epochs, expected {}", part.len(), total.len());
-        }
-        for (dst, v) in total.iter_mut().zip(&part) {
-            *dst += v;
-        }
-    }
-    let (final_val, final_test) = evaluate(&graph, &params, cfg.model.kind);
+    // rank 0 already holds the global per-epoch losses (the per-epoch
+    // reduction replaced the old post-hoc gather)
+    let (final_val, final_test) = evaluate(&graph, &st.params, cfg.model.kind);
     let summary = WorkerSummary {
-        losses: total,
+        losses,
+        start_epoch,
         final_val,
         final_test,
         payload_bytes_sent: transport.payload_bytes_sent(),
@@ -92,33 +135,14 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     };
     transport.shutdown();
 
-    // NDJSON run log. Unlike the sequential engine's streaming log, the
-    // distributed rows are written after the gather (global loss only
-    // exists once every rank has reported), so rows carry just
-    // {epoch, loss} and the header says post_hoc — readers should treat
-    // per-epoch val/epoch_ms/bytes as sequential-engine-only fields.
-    if let Some(path) = &o.log {
-        let mut em = FileEmitter::create(
-            path,
-            Json::obj()
-                .set("dataset", o.dataset.as_str())
-                .set("parts", o.parts)
-                .set("method", o.method.as_str())
-                .set("engine", "tcp")
-                .set("post_hoc", true),
-        )
-        .with_context(|| format!("creating run log {path}"))?;
-        for (i, &loss) in summary.losses.iter().enumerate() {
-            em.emit(&Json::obj().set("epoch", i + 1).set("loss", loss))?;
-        }
-    }
     if let Some(path) = &o.out {
         Json::obj()
             .set("dataset", o.dataset.as_str())
             .set("parts", o.parts)
             .set("method", o.method.as_str())
             .set("engine", "tcp")
-            .set("epochs", summary.losses.len())
+            .set("epochs", cfg.epochs)
+            .set("start_epoch", summary.start_epoch)
             .set("final_loss", *summary.losses.last().unwrap_or(&f64::NAN))
             .set("losses", &summary.losses[..])
             .set("final_val", summary.final_val)
@@ -128,4 +152,20 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
             .write_file(path)?;
     }
     Ok(Some(summary))
+}
+
+/// Open rank 0's run log: freshly created with a header on a new run,
+/// appended (rows only) when resuming so the original epochs survive.
+fn open_log(path: &str, o: &WorkerOpts) -> Result<FileEmitter> {
+    let header = Json::obj()
+        .set("dataset", o.dataset.as_str())
+        .set("parts", o.parts)
+        .set("method", o.method.as_str())
+        .set("engine", "tcp");
+    let em = if o.resume.is_some() {
+        FileEmitter::append_or_create(path, header)
+    } else {
+        FileEmitter::create(path, header)
+    };
+    em.with_context(|| format!("creating run log {path}"))
 }

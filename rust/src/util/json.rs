@@ -495,6 +495,30 @@ impl FileEmitter {
         let f = std::fs::File::create(path)?;
         Ok(Emitter::with_header(std::io::BufWriter::new(f), header))
     }
+
+    /// Continue an existing log: append without re-emitting a header, or
+    /// fall back to [`FileEmitter::create`] (header included) when the
+    /// file is missing or empty. Used when a resumed run extends the
+    /// original run's log — readers should keep the *last* row per epoch
+    /// if a crash re-ran a partially-logged epoch.
+    pub fn append_or_create(path: &str, header: Json) -> std::io::Result<FileEmitter> {
+        use std::io::{Read, Seek, SeekFrom, Write};
+        let has_rows = std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false);
+        if !has_rows {
+            return FileEmitter::create(path, header);
+        }
+        let mut f = std::fs::OpenOptions::new().read(true).append(true).open(path)?;
+        // a crash can tear the final line (flushed mid-row, no newline);
+        // terminate it so the torn fragment stays on its own line
+        // instead of merging with the first resumed row
+        f.seek(SeekFrom::End(-1))?;
+        let mut last = [0u8; 1];
+        f.read_exact(&mut last)?;
+        if last[0] != b'\n' {
+            f.write_all(b"\n")?;
+        }
+        Ok(Emitter::new(std::io::BufWriter::new(f)))
+    }
 }
 
 /// Parse an NDJSON string back into rows (tests / result readers).
@@ -618,6 +642,37 @@ mod tests {
             let back = parse_ndjson(&text).unwrap()[0].get("v").unwrap().as_f64().unwrap();
             assert_eq!(back.to_bits(), x.to_bits(), "{x}");
         }
+    }
+
+    #[test]
+    fn append_or_create_extends_without_duplicate_header() {
+        let path = format!("/tmp/pipegcn_json_append_{}.ndjson", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let header = || Json::obj().set("run", "t");
+        // missing file: behaves like create (header + row)
+        let mut e = FileEmitter::append_or_create(&path, header()).unwrap();
+        e.emit(&Json::obj().set("epoch", 1usize)).unwrap();
+        drop(e);
+        // existing file: appends rows only
+        let mut e = FileEmitter::append_or_create(&path, header()).unwrap();
+        e.emit(&Json::obj().set("epoch", 2usize)).unwrap();
+        drop(e);
+        let rows = parse_ndjson(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(rows.len(), 3); // one header, two rows
+        assert_eq!(rows[0].get("run").unwrap().as_str(), Some("t"));
+        assert_eq!(rows[2].get("epoch").unwrap().as_usize(), Some(2));
+        // a torn final line (crash mid-row, no trailing newline) is
+        // terminated first, so the fragment stays on its own line
+        std::fs::write(&path, b"{\"run\":\"t\"}\n{\"epoch\":9,\"lo").unwrap();
+        let mut e = FileEmitter::append_or_create(&path, header()).unwrap();
+        e.emit(&Json::obj().set("epoch", 10usize)).unwrap();
+        drop(e);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.trim_end().lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(Json::parse(lines[1]).is_err(), "torn fragment kept isolated");
+        assert_eq!(Json::parse(lines[2]).unwrap().get("epoch").unwrap().as_usize(), Some(10));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

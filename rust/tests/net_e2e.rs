@@ -54,17 +54,14 @@ fn tcp_losses(parts: usize, variant: Variant, dropout: f32, epochs: usize) -> Ve
             })
         })
         .collect();
-    let per_rank: Vec<(Vec<f64>, u64)> =
+    let mut per_rank: Vec<(Vec<f64>, u64)> =
         handles.into_iter().map(|h| h.join().expect("rank thread")).collect();
     for (rank, (_, sent)) in per_rank.iter().enumerate() {
         assert!(*sent > 0, "rank {rank} sent nothing over TCP");
     }
-    let mut losses = vec![0.0f64; cfg.epochs];
-    for (ls, _) in &per_rank {
-        for (dst, v) in losses.iter_mut().zip(ls) {
-            *dst += v;
-        }
-    }
+    // rank 0 holds the global losses (per-epoch loss reduction)
+    let losses = per_rank.swap_remove(0).0;
+    assert_eq!(losses.len(), cfg.epochs);
     losses
 }
 
@@ -188,7 +185,8 @@ fn launch_two_processes_matches_sequential_bitwise() {
     std::fs::remove_file(&out_path).ok();
 }
 
-/// `launch` also streams an NDJSON run log from rank 0.
+/// `launch` streams an NDJSON run log from rank 0 — rows are emitted
+/// live as epochs finish (per-epoch loss reduction), not post-hoc.
 #[test]
 fn launch_writes_run_log() {
     let bin = env!("CARGO_BIN_EXE_pipegcn");
@@ -206,6 +204,115 @@ fn launch_writes_run_log() {
     let rows = pipegcn::util::json::parse_ndjson(&text).unwrap();
     assert_eq!(rows.len(), 3); // header + 2 epochs
     assert_eq!(rows[0].get("engine").and_then(Json::as_str), Some("tcp"));
+    assert!(rows[0].get("post_hoc").is_none(), "rows stream live now");
     assert_eq!(rows[2].get("epoch").and_then(Json::as_usize), Some(2));
+    assert!(rows[2].get("loss").and_then(Json::as_f64).is_some());
     std::fs::remove_file(&log_path).ok();
+}
+
+/// The crash-recovery acceptance path: a 2-process launch with fault
+/// injection loses rank 1 after epoch 3; the launcher must relaunch the
+/// mesh from the epoch-2 checkpoint and finish, and the recovered run's
+/// loss curve (epochs 3..6) must match the uninterrupted sequential
+/// reference bit-for-bit.
+#[test]
+fn launch_recovers_from_worker_death_and_matches_sequential() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_recover_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    let ckpt_dir = format!("{base}/ckpt");
+    let out_path = format!("{base}/out.json");
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "6", "--seed", "1", "--ckpt-every", "2",
+            "--fail-rank", "1", "--fail-epoch", "3",
+        ])
+        .args(["--ckpt-dir", &ckpt_dir, "--out", &out_path])
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "launch must survive a worker death, got {status}");
+
+    let result = Json::parse(&std::fs::read_to_string(&out_path).expect("result json"))
+        .expect("parse result json");
+    // the final generation resumed from the epoch-2 checkpoint
+    assert_eq!(result.get("start_epoch").and_then(Json::as_usize), Some(2));
+    assert_eq!(result.get("epochs").and_then(Json::as_usize), Some(6));
+    let losses: Vec<f64> = result
+        .get("losses")
+        .and_then(Json::as_arr)
+        .expect("losses array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(losses.len(), 4); // epochs 3..=6
+
+    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 6, ..Default::default() });
+    for (i, &loss) in losses.iter().enumerate() {
+        let want = seq.result.curve[2 + i].train_loss;
+        assert_eq!(
+            want.to_bits(),
+            loss.to_bits(),
+            "epoch {}: sequential {} vs recovered {}",
+            3 + i,
+            want,
+            loss
+        );
+    }
+    // the job left complete checkpoints behind (epochs 2, 4, 6)
+    assert_eq!(pipegcn::ckpt::latest_complete(&ckpt_dir, 2).unwrap(), Some(6));
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// `launch --resume` continues a finished checkpoint trail: a first job
+/// stops at epoch 4, a second resumes from its checkpoints and runs to
+/// epoch 6 with a loss curve bit-identical to one uninterrupted run.
+#[test]
+fn launch_resume_flag_continues_previous_job() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_resume_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    let ckpt_dir = format!("{base}/ckpt");
+    let out_path = format!("{base}/out.json");
+    let first = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "4", "--seed", "1", "--ckpt-every", "2",
+        ])
+        .args(["--ckpt-dir", &ckpt_dir])
+        .status()
+        .expect("first launch");
+    assert!(first.success(), "first launch exited with {first}");
+    assert_eq!(pipegcn::ckpt::latest_complete(&ckpt_dir, 2).unwrap(), Some(4));
+
+    let second = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "6", "--seed", "1",
+        ])
+        .args(["--resume", &ckpt_dir, "--out", &out_path])
+        .status()
+        .expect("second launch");
+    assert!(second.success(), "resumed launch exited with {second}");
+
+    let result = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).unwrap();
+    assert_eq!(result.get("start_epoch").and_then(Json::as_usize), Some(4));
+    let losses: Vec<f64> = result
+        .get("losses")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(losses.len(), 2); // epochs 5..=6
+    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 6, ..Default::default() });
+    for (i, &loss) in losses.iter().enumerate() {
+        assert_eq!(
+            seq.result.curve[4 + i].train_loss.to_bits(),
+            loss.to_bits(),
+            "epoch {}",
+            5 + i
+        );
+    }
+    std::fs::remove_dir_all(&base).ok();
 }
