@@ -132,6 +132,13 @@ pub struct EpochStat {
     pub test: f64,
     /// wall time of this epoch (training only, eval excluded)
     pub epoch_ms: f64,
+    /// of `epoch_ms`: everything not spent blocked on a receive
+    /// (`epoch_ms − comm_wait_ms`, uniformly defined in every engine)
+    pub comp_ms: f64,
+    /// of `epoch_ms`: time blocked waiting on boundary/collective
+    /// receives (structurally 0 in the sequential engine — `recv_now`
+    /// never waits; real in the threaded/TCP per-rank schedule)
+    pub comm_wait_ms: f64,
     /// payload bytes moved through the fabric during this epoch
     pub comm_bytes: u64,
 }

@@ -18,10 +18,14 @@
 //! `--ckpt-every` epochs and can start from a restored state, which is
 //! how `pipegcn launch` survives a worker death.
 //!
-//! On a 1-core testbed these demonstrate *correctness* of the concurrent
-//! schedule, not speedup: the integration tests assert the loss curve is
-//! identical to the sequential engine (the dataflow is deterministic —
-//! staleness is encoded in message tags, not timing luck).
+//! The integration tests assert the loss curve is identical to the
+//! sequential engine (the dataflow is deterministic — staleness is
+//! encoded in message tags, not timing luck); the kernels themselves run
+//! on the [`crate::runtime::pool`], whose row-block ownership keeps that
+//! identity at any `--threads` count. Every epoch also records a
+//! wall-time breakdown: time parked in `recv_blocking` is `comm_wait`,
+//! the rest is compute — the measured comm/compute overlap of the
+//! pipelined schedule, streamed in rank 0's run-log rows.
 //!
 //! Scope: no probes / work capture (the sequential engine owns those);
 //! evaluation only at the end.
@@ -41,6 +45,7 @@ use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
 use crate::tensor::{ops, Mat};
 use crate::util::json::{FileEmitter, Json};
+use crate::util::timer::Stopwatch;
 use std::sync::Arc;
 
 /// Result of a threaded run.
@@ -55,13 +60,30 @@ pub struct ThreadedResult {
     pub comm_bytes: u64,
 }
 
+/// Blocking receive that charges the time spent parked to `wait_s` —
+/// the measured comm-wait half of the comp/comm overlap breakdown.
+fn recv_timed(
+    transport: &dyn Transport,
+    src: usize,
+    dst: usize,
+    tag: Tag,
+    wait_s: &mut f64,
+) -> Vec<f32> {
+    let w = Stopwatch::start();
+    let v = transport.recv_blocking(src, dst, tag);
+    *wait_s += w.elapsed_secs();
+    v
+}
+
 /// Per-rank ring all-reduce over any transport (blocking receives).
+/// Receive waits are charged to `wait_s`.
 fn ring_allreduce_rank(
     transport: &dyn Transport,
     rank: usize,
     n: usize,
     buf: &mut [f32],
     iter: u32,
+    wait_s: &mut f64,
 ) {
     if n <= 1 || buf.is_empty() {
         return;
@@ -76,7 +98,7 @@ fn ring_allreduce_rank(
         let c_send = (rank + n - s) % n;
         transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + n - s) % n;
-        let recv = transport.recv_blocking(prev, rank, tag);
+        let recv = recv_timed(transport, prev, rank, tag, wait_s);
         for (d, v) in buf[chunk(c_recv)].iter_mut().zip(recv) {
             *d += v;
         }
@@ -86,7 +108,7 @@ fn ring_allreduce_rank(
         let c_send = (rank + 1 + n - s) % n;
         transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + 1 + n - s) % n;
-        let recv = transport.recv_blocking(prev, rank, tag);
+        let recv = recv_timed(transport, prev, rank, tag, wait_s);
         buf[chunk(c_recv)].copy_from_slice(&recv);
     }
 }
@@ -150,7 +172,8 @@ pub struct RankCtl<'a> {
     /// snapshot the full training state into `policy.dir` every
     /// `policy.every` epochs
     pub ckpt: Option<&'a ckpt::Policy>,
-    /// rank 0 only: emit one NDJSON `{epoch, loss}` row per epoch, live
+    /// rank 0 only: emit one NDJSON row per epoch, live —
+    /// `{epoch, loss, epoch_ms, comp_ms, comm_wait_ms}`
     pub log: Option<&'a mut FileEmitter>,
     /// fault injection (`pipegcn worker --fail-epoch`): exit(13) right
     /// after this epoch completes, simulating a worker death mid-run
@@ -206,6 +229,10 @@ pub fn run_rank_ctl(
     let start = st.epoch + 1;
     let mut losses = Vec::with_capacity(cfg.epochs.saturating_sub(st.epoch));
     for t in start..=cfg.epochs {
+        let epoch_watch = Stopwatch::start();
+        // time blocked in receives this epoch (comm the schedule failed
+        // to hide behind compute); everything else is compute
+        let mut wait_s = 0.0f64;
         // ---- forward ----
         let mut h_src: Vec<Mat> = vec![p.features.clone()];
         let mut h_full_c: Vec<Mat> = Vec::new();
@@ -229,10 +256,12 @@ pub fn run_rank_ctl(
                 for j in 0..k {
                     let range = p.halo_ranges[j].clone();
                     if !range.is_empty() {
-                        let payload = transport.recv_blocking(
+                        let payload = recv_timed(
+                            transport,
                             j,
                             rank,
                             Tag::new(t as u32, l as u16, Phase::FwdFeat),
+                            &mut wait_s,
                         );
                         let cols = m.cols;
                         m.data[range.start * cols..range.start * cols + payload.len()]
@@ -246,10 +275,12 @@ pub fn run_rank_ctl(
                 for j in 0..k {
                     let range = p.halo_ranges[j].clone();
                     if !range.is_empty() {
-                        let payload = transport.recv_blocking(
+                        let payload = recv_timed(
+                            transport,
                             j,
                             rank,
                             Tag::new(t as u32, l as u16, Phase::FwdFeat),
+                            &mut wait_s,
                         );
                         let cols = fresh.cols;
                         fresh.data[range.start * cols..range.start * cols + payload.len()]
@@ -264,11 +295,12 @@ pub fn run_rank_ctl(
                 }
                 used
             };
-            let assembled = h_src[l].vcat(&halo_mat);
+            let mut assembled = h_src[l].vcat(&halo_mat);
             let (hf, mask) = if dropout > 0.0 {
                 let mut r = super::trainer::dropout_rng(cfg.seed, t, rank, l);
                 let m = ops::dropout_mask(assembled.rows, assembled.cols, dropout, &mut r);
-                (ops::hadamard(&assembled, &m), Some(m))
+                ops::hadamard_inplace(&mut assembled, &m);
+                (assembled, Some(m))
             } else {
                 (assembled, None)
             };
@@ -295,7 +327,7 @@ pub fn run_rank_ctl(
             // sequential engine, keeping the curve bit-identical
             let mut tot = partial;
             for j in 1..k {
-                tot += decode_f64s(&transport.recv_blocking(j, 0, loss_tag(t, j)))[0];
+                tot += decode_f64s(&recv_timed(transport, j, 0, loss_tag(t, j), &mut wait_s))[0];
             }
             tot
         } else {
@@ -303,13 +335,6 @@ pub fn run_rank_ctl(
             partial
         };
         losses.push(epoch_loss);
-        if let Some(em) = ctl.log.take() {
-            match em.emit(&Json::obj().set("epoch", t).set("loss", epoch_loss)) {
-                Ok(()) => ctl.log = Some(em),
-                // stop logging, keep training
-                Err(e) => eprintln!("run-log write failed: {e}"),
-            }
-        }
         // ---- backward ----
         let mut grads = st.params.zeros_like();
         for l in (0..n_layers).rev() {
@@ -335,7 +360,7 @@ pub fn run_rank_ctl(
             if l > 0 {
                 let mut j_full = bwd.j_full.unwrap();
                 if let Some(mask) = &masks[l] {
-                    j_full = ops::hadamard(&j_full, mask);
+                    ops::hadamard_inplace(&mut j_full, mask);
                 }
                 let n_inner = p.n_inner();
                 for j in 0..k {
@@ -353,13 +378,15 @@ pub fn run_rank_ctl(
                     }
                 }
                 let mut jg = j_full.rows_range(0, n_inner);
-                let recv_into = |dst: &mut Mat| {
+                let recv_into = |dst: &mut Mat, wait_s: &mut f64| {
                     for j in 0..k {
                         if j != rank && !p.send_sets[j].is_empty() {
-                            let payload = transport.recv_blocking(
+                            let payload = recv_timed(
+                                transport,
                                 j,
                                 rank,
                                 Tag::new(t as u32, l as u16, Phase::BwdGrad),
+                                wait_s,
                             );
                             let cols = dst.cols;
                             for (r, chunk) in
@@ -374,11 +401,11 @@ pub fn run_rank_ctl(
                     }
                 };
                 if !pipe {
-                    recv_into(&mut jg);
+                    recv_into(&mut jg, &mut wait_s);
                 } else {
                     jg.add_assign(&st.grad_buf[l]);
                     let mut fresh = Mat::zeros(n_inner, f_in);
-                    recv_into(&mut fresh);
+                    recv_into(&mut fresh, &mut wait_s);
                     if opts.smooth_grad && t > 1 {
                         st.grad_buf[l].scale(opts.gamma);
                         st.grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
@@ -391,7 +418,7 @@ pub fn run_rank_ctl(
         }
         // ---- all-reduce + update (replicated Adam) ----
         let mut gbuf = grads.flatten();
-        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32);
+        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32, &mut wait_s);
         match cfg.optimizer {
             super::Optimizer::Adam => st.adam.step(&mut st.flat, &gbuf),
             super::Optimizer::Sgd => {
@@ -402,6 +429,25 @@ pub fn run_rank_ctl(
         }
         st.params.unflatten(&st.flat);
         st.epoch = t;
+        // per-phase wall breakdown: everything not spent parked in a
+        // receive is compute — the measured comm/compute overlap of the
+        // pipelined schedule (checkpoint I/O excluded)
+        let epoch_ms = epoch_watch.elapsed_secs() * 1e3;
+        let comm_wait_ms = wait_s * 1e3;
+        let comp_ms = (epoch_ms - comm_wait_ms).max(0.0);
+        if let Some(em) = ctl.log.take() {
+            let row = Json::obj()
+                .set("epoch", t)
+                .set("loss", epoch_loss)
+                .set("epoch_ms", epoch_ms)
+                .set("comp_ms", comp_ms)
+                .set("comm_wait_ms", comm_wait_ms);
+            match em.emit(&row) {
+                Ok(()) => ctl.log = Some(em),
+                // stop logging, keep training
+                Err(e) => eprintln!("run-log write failed: {e}"),
+            }
+        }
         if let Some(pol) = ctl.ckpt {
             if pol.due(t) {
                 ckpt::save(&pol.dir, &st.snapshot(rank, k))?;
@@ -536,7 +582,7 @@ mod tests {
                 let f = fabric.clone();
                 std::thread::spawn(move || {
                     let mut buf: Vec<f32> = (0..len).map(|i| ((r + i) % 5) as f32).collect();
-                    ring_allreduce_rank(f.as_ref(), r, n, &mut buf, 1);
+                    ring_allreduce_rank(f.as_ref(), r, n, &mut buf, 1, &mut 0.0);
                     buf
                 })
             })

@@ -278,11 +278,12 @@ pub fn train_resumable(
                     }
                     used
                 };
-                let assembled = h_src[i][l].vcat(&halo_mat);
+                let mut assembled = h_src[i][l].vcat(&halo_mat);
                 let (hf, mask) = if dropout > 0.0 {
                     let mut r = dropout_rng(cfg.seed, t, i, l);
                     let m = ops::dropout_mask(assembled.rows, assembled.cols, dropout, &mut r);
-                    (ops::hadamard(&assembled, &m), Some(m))
+                    ops::hadamard_inplace(&mut assembled, &m);
+                    (assembled, Some(m))
                 } else {
                     (assembled, None)
                 };
@@ -366,7 +367,7 @@ pub fn train_resumable(
                 if l > 0 {
                     let mut j_full = bwd.j_full.unwrap();
                     if let Some(mask) = &drop_masks[i][l] {
-                        j_full = ops::hadamard(&j_full, mask);
+                        ops::hadamard_inplace(&mut j_full, mask);
                     }
                     // ship halo rows (offset past the inner block) to owners
                     let n_inner = p.n_inner();
@@ -486,6 +487,11 @@ pub fn train_resumable(
             val,
             test,
             epoch_ms,
+            // uniform definition across engines: comp = epoch − wait;
+            // the sequential engine never blocks (`recv_now`), so its
+            // wait is structurally 0 and comp covers the whole epoch
+            comp_ms: epoch_ms,
+            comm_wait_ms: 0.0,
             comm_bytes: epoch_comm_bytes,
         });
         if let Some(emitter) = log.take() {
@@ -494,6 +500,8 @@ pub fn train_resumable(
                 .set("loss", train_loss)
                 .set("val", val)
                 .set("epoch_ms", epoch_ms)
+                .set("comp_ms", epoch_ms)
+                .set("comm_wait_ms", 0.0f64)
                 .set("bytes", epoch_comm_bytes);
             match emitter.emit(&row) {
                 Ok(()) => log = Some(emitter),

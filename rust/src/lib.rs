@@ -9,7 +9,10 @@
 //! * [`util`] — zero-dependency substrates: PRNG, JSON writer, CLI parser,
 //!   timers, a property-test harness.
 //! * [`tensor`] — dense matrices with cache-blocked GEMM, CSR sparse
-//!   matrices with SpMM, activations and loss heads.
+//!   matrices with SpMM, activations and loss heads. The hot-path
+//!   kernels run row-blocked on the [`runtime::pool`] worker threads:
+//!   every output row has a single owner task with the serial summation
+//!   order, so results are bit-identical at any `--threads` count.
 //! * [`graph`] — CSR graphs, synthetic generators (SBM / Barabási–Albert /
 //!   Erdős–Rényi / grid), feature synthesis, GCN normalization, binary IO,
 //!   and dataset presets mirroring the paper's four datasets.
@@ -37,7 +40,12 @@
 //! * [`model`] — GraphSAGE / GCN layer definitions, parameter init, Adam.
 //! * [`runtime`] — the [`runtime::Backend`] trait with a pure-Rust `native`
 //!   implementation and an `xla` implementation that loads the AOT HLO-text
-//!   artifacts produced by `python/compile/aot.py` and runs them on PJRT.
+//!   artifacts produced by `python/compile/aot.py` and runs them on PJRT;
+//!   plus [`runtime::pool`], the persistent std-only worker-thread pool
+//!   behind every parallel kernel (`--threads` / `PIPEGCN_THREADS`).
+//! * [`perf`] — the `pipegcn bench` harness: kernel + end-to-end epoch
+//!   throughput at a thread-count sweep, streamed to NDJSON
+//!   (`BENCH_kernels.json`).
 //! * [`coordinator`] — the paper's contribution: vanilla partition-parallel
 //!   training and PipeGCN (Algorithm 1) with staleness smoothing (§3.4),
 //!   metric/error probes, and epoch time breakdowns.
@@ -59,3 +67,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod baselines;
 pub mod exp;
+pub mod perf;

@@ -30,6 +30,7 @@ fn main() -> Result<()> {
         "gen-graph" => cmd_gen_graph(&args),
         "partition" => cmd_partition(&args),
         "sim" => cmd_sim(&args),
+        "bench" => cmd_bench(&args),
         "presets" => cmd_presets(),
         "" | "help" => {
             print_help();
@@ -40,6 +41,19 @@ fn main() -> Result<()> {
             pipegcn::bail!("unknown subcommand '{other}'")
         }
     }
+}
+
+/// Apply `--threads N` to the global kernel pool (default: the
+/// `PIPEGCN_THREADS` env var, else the machine's available parallelism).
+fn apply_threads_flag(args: &Args) -> Result<()> {
+    if args.has("threads") {
+        let n = args.get_usize("threads", 0);
+        if n == 0 {
+            pipegcn::bail!("--threads must be at least 1");
+        }
+        pipegcn::runtime::pool::set_threads(n);
+    }
+    Ok(())
 }
 
 fn print_help() {
@@ -63,15 +77,40 @@ fn print_help() {
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
          \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
-         \x20 presets"
+         \x20 bench      [--smoke] [--threads 1,2,4] [--out BENCH_kernels.json]\n\
+         \x20            [--preset <name>] [--parts K] [--epochs N]\n\
+         \x20            (kernel + end-to-end throughput sweep, NDJSON rows)\n\
+         \x20 presets\n\
+         train/launch/worker/sim/bench accept --threads N (kernel worker\n\
+         threads; default: PIPEGCN_THREADS or the available parallelism)"
     );
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs"])?;
+    let smoke = args.get_bool("smoke", false);
+    let opts = pipegcn::perf::BenchOpts {
+        out: args.get_str("out", "BENCH_kernels.json"),
+        threads: args.get_usize_list("threads", &[1, 2, 4]),
+        smoke,
+        preset: args.get_str("preset", if smoke { "tiny" } else { "reddit-sim" }),
+        parts: args.get_usize("parts", if smoke { 2 } else { 4 }),
+        epochs: args.get_usize("epochs", if smoke { 2 } else { 3 }),
+    };
+    if opts.threads.iter().any(|&t| t == 0) {
+        pipegcn::bail!("--threads entries must be at least 1");
+    }
+    pipegcn::perf::run_bench(&opts)
 }
 
 fn cmd_launch(args: &Args) -> Result<()> {
     args.assert_known(&[
         "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
-        "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch",
+        "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
     ])?;
+    if args.has("threads") && args.get_usize("threads", 0) == 0 {
+        pipegcn::bail!("--threads must be at least 1");
+    }
     let opts = LaunchOpts {
         parts: args.get_usize("parts", 2),
         dataset: args.get_str("dataset", "tiny"),
@@ -87,6 +126,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         max_restarts: args.get_usize("max-restarts", 3),
         fail_rank: args.get_opt("fail-rank").map(|_| args.get_usize("fail-rank", 0)),
         fail_epoch: args.get_opt("fail-epoch").map(|_| args.get_usize("fail-epoch", 0)),
+        threads: args.get_opt("threads").map(|_| args.get_usize("threads", 1)),
     };
     // validate before spawning: a bad flag must fail here, not as K
     // worker panics followed by a rendezvous timeout
@@ -127,8 +167,9 @@ fn cmd_launch(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     args.assert_known(&[
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
-        "ckpt-dir", "ckpt-every", "resume", "fail-epoch",
+        "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads",
     ])?;
+    apply_threads_flag(args)?;
     let coord = args
         .get_opt("coord")
         .context("worker requires --coord HOST:PORT (normally set by `pipegcn launch`)")?
@@ -170,8 +211,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     args.assert_known(&[
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
-        "eval-every", "log", "ckpt-dir", "ckpt-every", "resume",
+        "eval-every", "log", "ckpt-dir", "ckpt-every", "resume", "threads",
     ])?;
+    apply_threads_flag(args)?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
     let method = args.get_str("method", "pipegcn");
@@ -329,7 +371,10 @@ fn cmd_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    args.assert_known(&["dataset", "parts", "method", "nodes-x-gpus", "epochs", "seed"])?;
+    args.assert_known(&[
+        "dataset", "parts", "method", "nodes-x-gpus", "epochs", "seed", "threads",
+    ])?;
+    apply_threads_flag(args)?;
     let dataset = args.get_str("dataset", "reddit-sim");
     let parts = args.get_usize("parts", 2);
     let method = args.get_str("method", "pipegcn");

@@ -5,6 +5,8 @@
 //! (the all-reduced gradient is identical everywhere, as in Alg. 1
 //! line 32-33), so a single instance updates the shared flat weights.
 
+use crate::runtime::pool;
+
 #[derive(Clone, Debug)]
 pub struct Adam {
     pub lr: f32,
@@ -30,20 +32,47 @@ impl Adam {
     }
 
     /// One update step: `params -= lr * m̂ / (√v̂ + ε)`.
+    ///
+    /// Elementwise with one owner per index, so the pool-parallel path
+    /// is bit-identical to the serial one at any thread count.
     pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grad.len(), self.m.len());
         self.t += 1;
         let b1t = 1.0 - self.beta1.powi(self.t as i32);
         let b2t = 1.0 - self.beta2.powi(self.t as i32);
-        for i in 0..params.len() {
-            let g = grad[i];
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
-            let mhat = self.m[i] / b1t;
-            let vhat = self.v[i] / b2t;
-            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        let (lr, beta1, beta2, eps) = (self.lr, self.beta1, self.beta2, self.eps);
+        let step_range = |ps: &mut [f32], ms: &mut [f32], vs: &mut [f32], gs: &[f32]| {
+            for i in 0..ps.len() {
+                let g = gs[i];
+                ms[i] = beta1 * ms[i] + (1.0 - beta1) * g;
+                vs[i] = beta2 * vs[i] + (1.0 - beta2) * g * g;
+                let mhat = ms[i] / b1t;
+                let vhat = vs[i] / b2t;
+                ps[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        };
+        let n = params.len();
+        let pl = pool::global();
+        if pl.threads() == 1 || n < 1 << 14 {
+            step_range(params, &mut self.m, &mut self.v, grad);
+            return;
         }
+        let p = pool::SendPtr(params.as_mut_ptr());
+        let m = pool::SendPtr(self.m.as_mut_ptr());
+        let v = pool::SendPtr(self.v.as_mut_ptr());
+        pool::for_ranges(&pl, n, |r| {
+            // SAFETY: for_ranges hands out disjoint ranges — every index
+            // has exactly one owner task
+            let (ps, ms, vs) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(p.0.add(r.start), r.len()),
+                    std::slice::from_raw_parts_mut(m.0.add(r.start), r.len()),
+                    std::slice::from_raw_parts_mut(v.0.add(r.start), r.len()),
+                )
+            };
+            step_range(ps, ms, vs, &grad[r]);
+        });
     }
 
     pub fn step_count(&self) -> u64 {

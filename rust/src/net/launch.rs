@@ -42,6 +42,9 @@ pub struct LaunchOpts {
     pub resume: Option<String>,
     /// mesh relaunches allowed after a failure (needs `ckpt_dir`)
     pub max_restarts: usize,
+    /// compute threads per worker (`--threads`; None = worker default:
+    /// `PIPEGCN_THREADS` or the machine's available parallelism)
+    pub threads: Option<usize>,
     /// fault injection for the recovery tests: this rank …
     pub fail_rank: Option<usize>,
     /// … exits(13) after this epoch, on the first generation only
@@ -55,6 +58,29 @@ fn kill_all(children: &mut [Child]) {
     }
 }
 
+/// Worker kernel-thread count to pass on the command line. Explicit
+/// `--threads` wins; otherwise, unless the operator set a *valid*
+/// `PIPEGCN_THREADS` (which the workers inherit — same ≥1-integer rule
+/// as `pool::default_threads`, so an unparseable value doesn't skip the
+/// guard only to be rejected by the workers too), divide the machine's
+/// cores across the co-located workers — K processes each defaulting to
+/// *full* available parallelism would oversubscribe the host and
+/// corrupt the comp/comm-wait overlap numbers in `--log`.
+fn worker_threads(opts: &LaunchOpts) -> Option<usize> {
+    opts.threads.or_else(|| {
+        let env_valid = std::env::var("PIPEGCN_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .is_some_and(|n| n >= 1);
+        if env_valid {
+            None
+        } else {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            Some((cores / opts.parts.max(1)).max(1))
+        }
+    })
+}
+
 fn spawn_workers(
     bin: &std::path::Path,
     opts: &LaunchOpts,
@@ -62,6 +88,7 @@ fn spawn_workers(
     resume: Option<&str>,
     inject_fault: bool,
 ) -> Result<Vec<Child>> {
+    let threads = worker_threads(opts);
     let mut children: Vec<Child> = Vec::with_capacity(opts.parts);
     for rank in 0..opts.parts {
         let mut cmd = Command::new(bin);
@@ -82,6 +109,9 @@ fn spawn_workers(
             .arg(opts.seed.to_string())
             .arg("--gamma")
             .arg(opts.gamma.to_string());
+        if let Some(n) = threads {
+            cmd.arg("--threads").arg(n.to_string());
+        }
         if let Some(dir) = &opts.ckpt_dir {
             cmd.arg("--ckpt-dir").arg(dir);
             cmd.arg("--ckpt-every").arg(opts.ckpt_every.to_string());

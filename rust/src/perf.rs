@@ -1,0 +1,219 @@
+//! `pipegcn bench` — kernel and end-to-end throughput tracking.
+//!
+//! Runs the training hot-path kernels (SpMM and the three GEMM variants)
+//! plus a short end-to-end epoch benchmark at a sweep of thread counts,
+//! and streams one NDJSON row per measurement through
+//! [`crate::util::json::Emitter`] into `BENCH_kernels.json`
+//! (`{kernel, shape, threads, ns_iter, gflops}`), so the perf trajectory
+//! is tracked from PR 3 on. `--smoke` shrinks shapes and iteration
+//! counts to CI scale.
+
+use crate::exp::RunOpts;
+use crate::runtime::pool;
+use crate::tensor::{Csr, Mat};
+use crate::util::error::{Context, Result};
+use crate::util::json::{FileEmitter, Json};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+#[derive(Clone, Debug)]
+pub struct BenchOpts {
+    /// NDJSON output path
+    pub out: String,
+    /// thread counts to sweep (the speedup summary compares min vs max)
+    pub threads: Vec<usize>,
+    /// CI mode: small shapes, few iterations
+    pub smoke: bool,
+    /// preset for the end-to-end epoch benchmark
+    pub preset: String,
+    pub parts: usize,
+    pub epochs: usize,
+}
+
+/// Time `f` for `iters` iterations (after one warmup), emit the NDJSON
+/// row, and return the achieved GFLOP/s.
+fn bench_kernel(
+    em: &mut FileEmitter,
+    name: &str,
+    shape: &str,
+    threads: usize,
+    flops: f64,
+    iters: usize,
+    mut f: impl FnMut(),
+) -> Result<f64> {
+    f(); // warmup
+    let w = Stopwatch::start();
+    for _ in 0..iters {
+        f();
+    }
+    let secs = w.elapsed_secs().max(1e-12);
+    let ns_iter = secs * 1e9 / iters as f64;
+    let gflops = flops * iters as f64 / secs / 1e9;
+    em.emit(
+        &Json::obj()
+            .set("kernel", name)
+            .set("shape", shape)
+            .set("threads", threads)
+            .set("ns_iter", ns_iter)
+            .set("gflops", gflops),
+    )
+    .with_context(|| format!("writing bench row for {name}"))?;
+    Ok(gflops)
+}
+
+/// Deterministic random CSR for benches and the parallel-kernel tests
+/// (O(rows·cols) bernoulli scan — fine at bench/test shapes).
+pub fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f32) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if rng.bernoulli(density) {
+                trip.push((r as u32, c as u32, rng.normal()));
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, trip)
+}
+
+/// Run the full sweep, writing `opts.out` and printing a speedup
+/// summary. Restores nothing: the process-wide thread count is left at
+/// the last swept value (the CLI exits right after).
+pub fn run_bench(o: &BenchOpts) -> Result<()> {
+    if o.threads.is_empty() {
+        crate::bail!("--threads list must name at least one thread count");
+    }
+    let mut em = FileEmitter::create(
+        &o.out,
+        Json::obj()
+            .set("bench", "pipegcn-kernels")
+            .set("smoke", o.smoke)
+            .set("preset", o.preset.as_str())
+            .set("threads", o.threads.iter().map(|&t| Json::from(t)).collect::<Vec<Json>>()),
+    )
+    .with_context(|| format!("creating {}", o.out))?;
+
+    // kernel shapes ≈ one medium partition: `rows` nodes, `feat`-wide
+    // activations, `hidden`-wide next layer
+    let (rows, feat, hidden, density, iters) =
+        if o.smoke { (512, 32, 16, 0.01, 3) } else { (4000, 128, 64, 0.004, 20) };
+    let mut rng = Rng::new(42);
+    let csr = random_csr(&mut rng, rows, rows, density);
+    let h = Mat::randn(rows, feat, 1.0, &mut rng); // layer input
+    let a = Mat::randn(rows, feat, 1.0, &mut rng); // activations
+    let w = Mat::randn(feat, hidden, 0.5, &mut rng); // weights
+    let m = Mat::randn(rows, hidden, 1.0, &mut rng); // upstream grad
+    let nnz = csr.nnz() as f64;
+    let spmm_flops = 2.0 * nnz * feat as f64;
+    let gemm_flops = 2.0 * (rows * feat * hidden) as f64;
+
+    let mut gf_at: Vec<(&'static str, usize, f64)> = Vec::new();
+    for &t in &o.threads {
+        pool::set_threads(t);
+        let sp_shape = format!("{rows}x{rows}x{feat}");
+        let mm_shape = format!("{rows}x{feat}x{hidden}");
+        let gfs = bench_kernel(&mut em, "spmm", &sp_shape, t, spmm_flops, iters, || {
+            let _ = csr.spmm(&h);
+        })?;
+        gf_at.push(("spmm", t, gfs));
+        let gfs = bench_kernel(&mut em, "spmm_t", &sp_shape, t, spmm_flops, iters, || {
+            let _ = csr.spmm_t(&h);
+        })?;
+        gf_at.push(("spmm_t", t, gfs));
+        let gfs = bench_kernel(&mut em, "matmul", &mm_shape, t, gemm_flops, iters, || {
+            let _ = a.matmul(&w);
+        })?;
+        gf_at.push(("matmul", t, gfs));
+        let gfs = bench_kernel(&mut em, "matmul_tn", &mm_shape, t, gemm_flops, iters, || {
+            let _ = a.matmul_tn(&m);
+        })?;
+        gf_at.push(("matmul_tn", t, gfs));
+        let gfs = bench_kernel(&mut em, "matmul_nt", &mm_shape, t, gemm_flops, iters, || {
+            let _ = m.matmul_nt(&w);
+        })?;
+        gf_at.push(("matmul_nt", t, gfs));
+    }
+
+    // end-to-end epochs: preset training through the sequential engine;
+    // per-epoch FLOPs come from the backend's own counters
+    for &t in &o.threads {
+        pool::set_threads(t);
+        let run_opts = RunOpts { epochs: o.epochs, eval_every: 0, ..Default::default() };
+        let out =
+            crate::exp::run_resumable(&o.preset, o.parts, "pipegcn", run_opts, None, None, None)?;
+        let n_epochs = out.result.curve.len().max(1) as f64;
+        let mean_ms = out.result.curve.iter().map(|e| e.epoch_ms).sum::<f64>() / n_epochs;
+        let flops: f64 = out
+            .result
+            .works
+            .iter()
+            .map(|wk| wk.fwd.iter().chain(wk.bwd.iter()).map(|l| l.total()).sum::<f64>())
+            .sum();
+        let gfs = flops / (mean_ms / 1e3).max(1e-12) / 1e9;
+        em.emit(
+            &Json::obj()
+                .set("kernel", "epoch")
+                .set("shape", format!("{}x{}", o.preset, o.parts))
+                .set("threads", t)
+                .set("ns_iter", mean_ms * 1e6)
+                .set("gflops", gfs),
+        )
+        .context("writing epoch bench row")?;
+        gf_at.push(("epoch", t, gfs));
+    }
+
+    // summary: geo-mean spmm+GEMM speedup, max vs min thread count
+    let t0 = *o.threads.iter().min().unwrap();
+    let tm = *o.threads.iter().max().unwrap();
+    let mut ratios = Vec::new();
+    for name in ["spmm", "matmul", "matmul_tn", "matmul_nt"] {
+        let at = |tt: usize| {
+            gf_at.iter().find(|&&(n, t, _)| n == name && t == tt).map(|&(_, _, g)| g)
+        };
+        if let (Some(g0), Some(gm)) = (at(t0), at(tm)) {
+            if g0 > 0.0 {
+                ratios.push(gm / g0);
+            }
+        }
+    }
+    let speedup = if ratios.is_empty() {
+        1.0
+    } else {
+        ratios.iter().product::<f64>().powf(1.0 / ratios.len() as f64)
+    };
+    em.emit(
+        &Json::obj()
+            .set("kernel", "summary")
+            .set("threads_base", t0)
+            .set("threads_max", tm)
+            .set("spmm_gemm_speedup", speedup),
+    )
+    .context("writing bench summary row")?;
+    println!(
+        "bench: {} rows -> {} | spmm+GEMM geo-mean speedup {tm}t vs {t0}t: {speedup:.2}x",
+        em.rows(),
+        o.out,
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: the full smoke-bench roundtrip test lives in
+    // `tests/parallel_kernels.rs` — it reconfigures the global pool,
+    // which the lib-test binary reserves for `runtime::pool`'s own test.
+
+    #[test]
+    fn empty_threads_list_rejected() {
+        let o = BenchOpts {
+            out: "/tmp/pipegcn_bench_empty.ndjson".into(),
+            threads: vec![],
+            smoke: true,
+            preset: "tiny".into(),
+            parts: 2,
+            epochs: 1,
+        };
+        assert!(run_bench(&o).is_err());
+    }
+}

@@ -4,6 +4,11 @@
 //! heavy primitives of a GraphSAGE/GCN layer (forward aggregate+transform
 //! and its backward), plus FLOP accounting for the timeline simulator.
 //!
+//! * [`pool`] — the persistent worker-thread pool every hot-path kernel
+//!   dispatches to (std-only: spawned threads + a mutex/condvar work
+//!   queue). Parallelism is over disjoint output-row blocks, so each
+//!   output element has a single owner and a fixed f32 summation order:
+//!   results are bit-identical at any `--threads` count.
 //! * [`native`] — pure Rust: CSR SpMM + blocked GEMM from [`crate::tensor`].
 //!   Works for any shape; used by the large experiments.
 //! * [`xla`] — loads the AOT HLO-text artifacts compiled by
@@ -14,6 +19,7 @@
 //!   crate stays dependency-free).
 
 pub mod native;
+pub mod pool;
 pub mod xla;
 
 use crate::tensor::{Csr, Mat};

@@ -1,0 +1,480 @@
+//! Persistent worker-thread pool for the compute kernels (std-only).
+//!
+//! PipeGCN's premise is hiding communication behind computation, which is
+//! only measurable when computation actually uses the cores it owns. This
+//! module is the crate's parallel substrate: a fixed set of spawned
+//! worker threads fed through a mutex/condvar work queue, plus scoped
+//! helpers that split work into **disjoint output-row blocks**.
+//!
+//! Determinism contract: every parallel kernel assigns each output
+//! element exactly one owner task, and each owner computes its elements
+//! in the same order as the serial kernel. The f32 summation order is
+//! therefore fixed, so results are **bit-identical at any thread count**
+//! — which is what lets the sequential, threaded, and TCP engines keep
+//! their bit-identity guarantees while running on all cores.
+//!
+//! The global pool is sized by `--threads N` (CLI) or the
+//! `PIPEGCN_THREADS` env var, defaulting to the machine's available
+//! parallelism. [`set_threads`] rebuilds it on changes; the replaced
+//! pool's workers are joined when its last in-flight user drops it.
+//!
+//! Tasks must not submit work to the pool themselves (one job runs at a
+//! time; a nested submission from inside a task would deadlock). The
+//! kernels only ever use the pool at the leaves, so this never arises.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased borrow of a submitted task as two thin pointers.
+/// Sound because [`Pool::run`] blocks until every chunk has finished, so
+/// the borrowed closure outlives all uses.
+#[derive(Clone, Copy)]
+struct RawTask {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointee is a `Fn(usize) + Sync` closure, safe to share and
+// call from any thread; the submitter keeps it alive for the job's whole
+// lifetime (see `Pool::run`).
+unsafe impl Send for RawTask {}
+
+fn make_raw<F: Fn(usize) + Sync>(task: &F) -> RawTask {
+    // SAFETY contract: `data` was produced from `&F` below and the
+    // submitter guarantees the borrow is still live at every call.
+    unsafe fn call<F: Fn(usize)>(data: *const (), chunk: usize) {
+        (*(data as *const F))(chunk)
+    }
+    RawTask { data: task as *const F as *const (), call: call::<F> }
+}
+
+/// Execute one chunk, catching panics so a failing task cannot strand
+/// the pool's bookkeeping. Returns false if the task panicked.
+fn run_raw(task: RawTask, chunk: usize) -> bool {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+        (task.call)(task.data, chunk)
+    }))
+    .is_ok()
+}
+
+struct Job {
+    task: RawTask,
+    n_chunks: usize,
+    /// next chunk to hand out
+    next: usize,
+    /// chunks currently executing
+    running: usize,
+    /// some chunk panicked (rethrown by the submitter)
+    panicked: bool,
+}
+
+impl Job {
+    fn done(&self) -> bool {
+        self.next >= self.n_chunks && self.running == 0
+    }
+}
+
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers: work may be available (or shutdown was requested)
+    work_cv: Condvar,
+    /// submitters: the job finished / the job slot freed
+    done_cv: Condvar,
+}
+
+/// Fixed-size worker pool. The submitting thread participates in every
+/// job, so a pool of `threads` uses exactly `threads` cores
+/// (`threads - 1` spawned workers plus the caller).
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// spawned workers currently alive (shutdown / leak tests)
+    live: Arc<AtomicUsize>,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { job: None, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let live = Arc::new(AtomicUsize::new(0));
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = shared.clone();
+                let live = live.clone();
+                live.fetch_add(1, Ordering::SeqCst);
+                std::thread::spawn(move || {
+                    worker_loop(&shared);
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        Pool { shared, workers, threads, live }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Spawned workers still alive (0 once `drop` has joined them).
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Run `task(chunk)` for every chunk in `0..n_chunks`, distributing
+    /// chunks over the pool; blocks until every chunk has completed.
+    /// One job runs at a time — concurrent submitters (the threaded
+    /// engine's ranks) queue for the slot.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_chunks: usize, task: F) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.threads == 1 || n_chunks == 1 {
+            for c in 0..n_chunks {
+                task(c);
+            }
+            return;
+        }
+        let raw = make_raw(&task);
+        let mut g = self.shared.state.lock().unwrap();
+        while g.job.is_some() {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+        g.job = Some(Job { task: raw, n_chunks, next: 0, running: 0, panicked: false });
+        self.shared.work_cv.notify_all();
+        // the submitter is a worker too
+        loop {
+            let job = g.job.as_mut().expect("submitted job vanished");
+            if job.next < job.n_chunks {
+                let c = job.next;
+                job.next += 1;
+                job.running += 1;
+                drop(g);
+                let ok = run_raw(raw, c);
+                g = self.shared.state.lock().unwrap();
+                let job = g.job.as_mut().expect("submitted job vanished");
+                job.running -= 1;
+                if !ok {
+                    job.panicked = true;
+                }
+            } else if job.running > 0 {
+                g = self.shared.done_cv.wait(g).unwrap();
+            } else {
+                break;
+            }
+        }
+        let panicked = g.job.take().expect("submitted job vanished").panicked;
+        // free the slot for queued submitters
+        self.shared.done_cv.notify_all();
+        drop(g);
+        if panicked {
+            panic!("a pool task panicked (rethrown by the submitter)");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut g = self.shared.state.lock().unwrap();
+            g.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut g = shared.state.lock().unwrap();
+    loop {
+        if g.shutdown {
+            return;
+        }
+        let grabbed = match g.job.as_mut() {
+            Some(job) if job.next < job.n_chunks => {
+                let c = job.next;
+                job.next += 1;
+                job.running += 1;
+                Some((job.task, c))
+            }
+            _ => None,
+        };
+        match grabbed {
+            Some((task, c)) => {
+                drop(g);
+                let ok = run_raw(task, c);
+                g = shared.state.lock().unwrap();
+                if let Some(job) = g.job.as_mut() {
+                    job.running -= 1;
+                    if !ok {
+                        job.panicked = true;
+                    }
+                    if job.done() {
+                        shared.done_cv.notify_all();
+                    }
+                }
+            }
+            None => {
+                g = shared.work_cv.wait(g).unwrap();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global pool
+// ---------------------------------------------------------------------
+
+static GLOBAL: Mutex<Option<Arc<Pool>>> = Mutex::new(None);
+
+/// Threads to use when nothing was configured: `PIPEGCN_THREADS`, else
+/// the machine's available parallelism.
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PIPEGCN_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The process-wide pool the tensor/model kernels dispatch to; built on
+/// first use with [`default_threads`].
+pub fn global() -> Arc<Pool> {
+    let mut g = GLOBAL.lock().unwrap();
+    if g.is_none() {
+        *g = Some(Arc::new(Pool::new(default_threads())));
+    }
+    g.as_ref().unwrap().clone()
+}
+
+/// Rebuild the global pool with `n` threads (`--threads N`). A no-op
+/// when the pool already has that size; a replaced pool's workers are
+/// joined once its last in-flight user drops its handle.
+pub fn set_threads(n: usize) {
+    let n = n.max(1);
+    let mut g = GLOBAL.lock().unwrap();
+    let rebuild = match g.as_ref() {
+        Some(p) => p.threads() != n,
+        None => true,
+    };
+    if rebuild {
+        *g = Some(Arc::new(Pool::new(n)));
+    }
+}
+
+/// Current global thread count (builds the pool if needed).
+pub fn threads() -> usize {
+    global().threads()
+}
+
+// ---------------------------------------------------------------------
+// Scoped row-range helpers
+// ---------------------------------------------------------------------
+
+/// A raw pointer that may cross threads. Pool tasks use it to take
+/// single-owner mutable views of **disjoint** regions of one buffer; the
+/// caller is responsible for disjointness.
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Split `0..n` into at most `parts` contiguous, balanced ranges that
+/// cover `0..n` exactly.
+pub fn blocks(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, n.max(1));
+    (0..parts).map(|c| (c * n / parts)..((c + 1) * n / parts)).collect()
+}
+
+/// Run `f` over balanced, disjoint sub-ranges of `0..n` on the pool.
+pub fn for_ranges(pool: &Pool, n: usize, f: impl Fn(Range<usize>) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let bs = blocks(n, pool.threads());
+    pool.run(bs.len(), |c| f(bs[c].clone()));
+}
+
+/// Run `f(rows, block)` over disjoint row-blocks of `data`
+/// (`rows × cols`, row-major): `block` is the mutable sub-slice holding
+/// rows `rows.start..rows.end`. Single-owner rows keep the per-element
+/// f32 summation order independent of the thread count.
+pub fn for_row_blocks(
+    pool: &Pool,
+    data: &mut [f32],
+    cols: usize,
+    f: impl Fn(Range<usize>, &mut [f32]) + Sync,
+) {
+    if data.is_empty() || cols == 0 {
+        return;
+    }
+    let rows = data.len() / cols;
+    debug_assert_eq!(rows * cols, data.len(), "data is not rows × cols");
+    let base = SendPtr(data.as_mut_ptr());
+    let bs = blocks(rows, pool.threads());
+    pool.run(bs.len(), |c| {
+        let r = bs[c].clone();
+        // SAFETY: blocks are disjoint, so every row has one owner task.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(r.start * cols), r.len() * cols)
+        };
+        f(r, block);
+    });
+}
+
+/// Parallel elementwise pass: `f(start, chunk)` over disjoint chunks of
+/// `data`, where `chunk = &mut data[start..start + chunk.len()]`.
+pub fn for_chunks(pool: &Pool, data: &mut [f32], f: impl Fn(usize, &mut [f32]) + Sync) {
+    for_row_blocks(pool, data, 1, |r, chunk| f(r.start, chunk));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_executes_every_chunk_once() {
+        let p = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        p.run(64, |c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn pool_reuse_across_jobs() {
+        let p = Pool::new(3);
+        for round in 0..50 {
+            let total = AtomicUsize::new(0);
+            p.run(7, |c| {
+                total.fetch_add(c + 1, Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), 28, "round {round}");
+        }
+    }
+
+    #[test]
+    fn shutdown_joins_workers_no_leaks() {
+        // repeated engine-style create/run/drop cycles must leave no
+        // threads behind: drop() joins, and the live counter proves the
+        // workers actually exited
+        for _ in 0..10 {
+            let p = Pool::new(4);
+            assert_eq!(p.live_workers(), 3);
+            let n = AtomicUsize::new(0);
+            p.run(16, |_| {
+                n.fetch_add(1, Ordering::SeqCst);
+            });
+            assert_eq!(n.load(Ordering::SeqCst), 16);
+            let live = p.live.clone();
+            drop(p);
+            assert_eq!(live.load(Ordering::SeqCst), 0, "workers leaked past drop");
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize_safely() {
+        let p = Arc::new(Pool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..20 {
+                        p.run(5, |_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 20 * 5);
+    }
+
+    #[test]
+    fn blocks_cover_and_balance() {
+        for n in [0usize, 1, 5, 64, 1000] {
+            for parts in [1usize, 2, 3, 7, 64] {
+                let bs = blocks(n, parts);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for b in &bs {
+                    assert_eq!(b.start, prev_end);
+                    prev_end = b.end;
+                    covered += b.len();
+                }
+                assert_eq!(covered, n, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_row_blocks_gives_single_owner_rows() {
+        let p = Pool::new(4);
+        let mut data = vec![0.0f32; 33 * 7];
+        for_row_blocks(&p, &mut data, 7, |rows, block| {
+            for (bi, r) in rows.enumerate() {
+                for c in 0..7 {
+                    block[bi * 7 + c] = (r * 7 + c) as f32;
+                }
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn set_threads_rebuilds_global() {
+        // the only test that touches the global pool (the others build
+        // their own), so it cannot race a concurrent reconfiguration
+        set_threads(3);
+        assert_eq!(global().threads(), 3);
+        set_threads(2);
+        assert_eq!(global().threads(), 2);
+        let before = Arc::as_ptr(&global());
+        set_threads(2); // same size: keep the pool
+        assert_eq!(Arc::as_ptr(&global()), before);
+    }
+
+    #[test]
+    fn panicking_task_is_rethrown_and_pool_survives() {
+        let p = Pool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.run(4, |c| {
+                if c == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // the pool still works afterwards
+        let n = AtomicUsize::new(0);
+        p.run(3, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 3);
+    }
+}

@@ -5,7 +5,14 @@
 //! needs `AᵀB` (weight gradients) and `A·Bᵀ` (feature gradients), so all
 //! three GEMM variants are provided with a k-blocked, write-streaming
 //! loop order that autovectorizes on the inner `j` loop.
+//!
+//! Threading: the GEMMs dispatch to [`crate::runtime::pool`] over
+//! disjoint **output-row blocks**. Each output element has one owner
+//! task that accumulates in the same order as the serial kernel, so
+//! results are bit-identical at any thread count (asserted in
+//! `tests/parallel_kernels.rs`).
 
+use crate::runtime::pool;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -18,6 +25,46 @@ pub struct Mat {
 /// Block size over the reduction dimension; 64×f32 = 256 B per panel row,
 /// chosen so an A-panel row plus a C row fit comfortably in L1.
 const KBLOCK: usize = 64;
+
+/// Minimum multiply-add count (`m·k·n`) before a GEMM goes to the pool
+/// — below this, job dispatch overhead dominates the kernel.
+const PAR_GEMM_MIN: usize = 1 << 15;
+
+/// One output row of `C = A·B`: `c_row = a_row·B`, k-blocked with a
+/// 4-way unroll. Extracting the row kernel fixes the per-element f32
+/// summation order (k ascending, 4-fused groups) that the serial and
+/// row-parallel paths share, so they agree bit-for-bit.
+fn gemm_row(a_row: &[f32], b: &Mat, c_row: &mut [f32]) {
+    let n = b.cols;
+    c_row.iter_mut().for_each(|x| *x = 0.0);
+    for k0 in (0..a_row.len()).step_by(KBLOCK) {
+        let k1 = (k0 + KBLOCK).min(a_row.len());
+        let mut k = k0;
+        while k + 4 <= k1 {
+            let (a0, a1, a2, a3) = (a_row[k], a_row[k + 1], a_row[k + 2], a_row[k + 3]);
+            if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
+                let b0 = &b.data[k * n..(k + 1) * n];
+                let b1 = &b.data[(k + 1) * n..(k + 2) * n];
+                let b2 = &b.data[(k + 2) * n..(k + 3) * n];
+                let b3 = &b.data[(k + 3) * n..(k + 4) * n];
+                for j in 0..n {
+                    c_row[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+            }
+            k += 4;
+        }
+        while k < k1 {
+            let aik = a_row[k];
+            if aik != 0.0 {
+                let b_row = &b.data[k * n..(k + 1) * n];
+                for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cv += aik * *bv;
+                }
+            }
+            k += 1;
+        }
+    }
+}
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
@@ -163,70 +210,87 @@ impl Mat {
 
     /// `C = A·B`, writing into `c` (must be A.rows × B.cols; overwritten).
     ///
-    /// Loop order i→k→j with k-blocking and a 4-way k-unroll: the inner j
-    /// loop fuses four `c_row += a_ik·b_row` AXPYs, so each `c_row`
-    /// load/store pass amortizes over 4 FMA streams (§Perf log: ~1.4× at
-    /// layer shapes vs the single-k version).
+    /// Per output row: loop order k→j with k-blocking and a 4-way
+    /// k-unroll — the inner j loop fuses four `c_row += a_ik·b_row`
+    /// AXPYs, so each `c_row` load/store pass amortizes over 4 FMA
+    /// streams (§Perf log: ~1.4× at layer shapes vs the single-k
+    /// version). Output rows are independent, so large shapes run as
+    /// row blocks on the [`crate::runtime::pool`] with unchanged bits.
     pub fn matmul_into(&self, b: &Mat, c: &mut Mat) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         assert_eq!((c.rows, c.cols), (self.rows, b.cols));
-        c.data.iter_mut().for_each(|x| *x = 0.0);
         let n = b.cols;
-        for k0 in (0..self.cols).step_by(KBLOCK) {
-            let k1 = (k0 + KBLOCK).min(self.cols);
+        let k_tot = self.cols;
+        let pool = pool::global();
+        if pool.threads() == 1 || self.rows < 2 || self.rows * k_tot * n < PAR_GEMM_MIN {
             for i in 0..self.rows {
-                let a_row = &self.data[i * self.cols..(i + 1) * self.cols];
-                let c_row = &mut c.data[i * n..(i + 1) * n];
-                let mut k = k0;
-                while k + 4 <= k1 {
-                    let (a0, a1, a2, a3) =
-                        (a_row[k], a_row[k + 1], a_row[k + 2], a_row[k + 3]);
-                    if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                        let b0 = &b.data[k * n..(k + 1) * n];
-                        let b1 = &b.data[(k + 1) * n..(k + 2) * n];
-                        let b2 = &b.data[(k + 2) * n..(k + 3) * n];
-                        let b3 = &b.data[(k + 3) * n..(k + 4) * n];
-                        for j in 0..n {
-                            c_row[j] +=
-                                a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                        }
-                    }
-                    k += 4;
-                }
-                while k < k1 {
-                    let aik = a_row[k];
-                    if aik != 0.0 {
-                        let b_row = &b.data[k * n..(k + 1) * n];
-                        for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
-                            *cv += aik * *bv;
-                        }
-                    }
-                    k += 1;
-                }
+                gemm_row(
+                    &self.data[i * k_tot..(i + 1) * k_tot],
+                    b,
+                    &mut c.data[i * n..(i + 1) * n],
+                );
             }
+            return;
         }
+        pool::for_row_blocks(&pool, &mut c.data, n, |rows, block| {
+            for (bi, i) in rows.enumerate() {
+                gemm_row(
+                    &self.data[i * k_tot..(i + 1) * k_tot],
+                    b,
+                    &mut block[bi * n..(bi + 1) * n],
+                );
+            }
+        });
     }
 
     /// `C = Aᵀ·B` (A is self). Used for weight gradients `(P·H)ᵀ·M`.
+    ///
+    /// (AᵀB)[k, j] = Σ_i A[i,k]·B[i,j]: stream rows of A and B, AXPY
+    /// into rows of C — same vector-friendly inner loop. Every element
+    /// of C accumulates in i-ascending order; the parallel path gives
+    /// each task a block of C rows (= columns of A) and replays the
+    /// identical i-ascending stream, so serial and parallel agree
+    /// bit-for-bit while the tasks move through B roughly in lockstep,
+    /// sharing its cache footprint.
     pub fn matmul_tn(&self, b: &Mat) -> Mat {
         assert_eq!(self.rows, b.rows, "matmul_tn shape mismatch");
         let mut c = Mat::zeros(self.cols, b.cols);
         let n = b.cols;
-        // (AᵀB)[k, j] = Σ_i A[i,k] B[i,j]: stream rows of A and B, AXPY
-        // into rows of C — same vector-friendly inner loop.
-        for i in 0..self.rows {
-            let a_row = &self.data[i * self.cols..(i + 1) * self.cols];
-            let b_row = &b.data[i * n..(i + 1) * n];
-            for (k, &aik) in a_row.iter().enumerate() {
-                if aik == 0.0 {
-                    continue;
-                }
-                let c_row = &mut c.data[k * n..(k + 1) * n];
-                for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
-                    *cv += aik * *bv;
+        let k_tot = self.cols;
+        let pool = pool::global();
+        if pool.threads() == 1 || k_tot < 2 || self.rows * k_tot * n < PAR_GEMM_MIN {
+            for i in 0..self.rows {
+                let a_row = &self.data[i * k_tot..(i + 1) * k_tot];
+                let b_row = &b.data[i * n..(i + 1) * n];
+                for (k, &aik) in a_row.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let c_row = &mut c.data[k * n..(k + 1) * n];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                        *cv += aik * *bv;
+                    }
                 }
             }
+            return c;
         }
+        pool::for_row_blocks(&pool, &mut c.data, n, |ks, block| {
+            for i in 0..self.rows {
+                let a_row = &self.data[i * k_tot..(i + 1) * k_tot];
+                let b_row = &b.data[i * n..(i + 1) * n];
+                for k in ks.clone() {
+                    let aik = a_row[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let off = (k - ks.start) * n;
+                    let c_row = &mut block[off..off + n];
+                    for (cv, bv) in c_row.iter_mut().zip(b_row.iter()) {
+                        *cv += aik * *bv;
+                    }
+                }
+            }
+        });
         c
     }
 

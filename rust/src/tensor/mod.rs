@@ -5,6 +5,13 @@
 //! This is the compute engine behind the **native** backend
 //! (`runtime::native`); the **xla** backend runs the same math from AOT
 //! HLO artifacts and is cross-checked against this implementation.
+//!
+//! Threading model: the hot-path kernels (SpMM, the GEMM variants, and
+//! the elementwise passes) dispatch to [`crate::runtime::pool`] over
+//! **disjoint output-row blocks**. Row ownership means every output
+//! element is summed by exactly one task in the serial order, so kernel
+//! results — and therefore whole training runs — are bit-identical at
+//! any `--threads` count (pinned by `tests/parallel_kernels.rs`).
 
 pub mod dense;
 pub mod sparse;

@@ -7,27 +7,57 @@
 //! *after* boundary communication, same mask in fwd/bwd) can be honored.
 
 use super::dense::Mat;
+use crate::runtime::pool;
 use crate::util::rng::Rng;
+
+/// Minimum element count before an elementwise pass goes to the pool.
+const PAR_ELEM_MIN: usize = 1 << 14;
 
 /// ReLU forward: `out = max(z, 0)`.
 pub fn relu(z: &Mat) -> Mat {
     let mut out = z.clone();
-    out.data.iter_mut().for_each(|x| *x = x.max(0.0));
+    relu_inplace(&mut out);
     out
+}
+
+/// ReLU in place (parallel elementwise; one owner per element, so bits
+/// are thread-count independent).
+pub fn relu_inplace(z: &mut Mat) {
+    let pool = pool::global();
+    if pool.threads() == 1 || z.data.len() < PAR_ELEM_MIN {
+        z.data.iter_mut().for_each(|x| *x = x.max(0.0));
+        return;
+    }
+    pool::for_chunks(&pool, &mut z.data, |_, chunk| {
+        chunk.iter_mut().for_each(|x| *x = x.max(0.0));
+    });
 }
 
 /// ReLU backward in place: `g *= 1[z > 0]`.
 pub fn relu_grad_inplace(g: &mut Mat, z: &Mat) {
     assert_eq!((g.rows, g.cols), (z.rows, z.cols));
-    for (gv, &zv) in g.data.iter_mut().zip(z.data.iter()) {
-        if zv <= 0.0 {
-            *gv = 0.0;
+    let pool = pool::global();
+    if pool.threads() == 1 || g.data.len() < PAR_ELEM_MIN {
+        for (gv, &zv) in g.data.iter_mut().zip(z.data.iter()) {
+            if zv <= 0.0 {
+                *gv = 0.0;
+            }
         }
+        return;
     }
+    pool::for_chunks(&pool, &mut g.data, |start, chunk| {
+        let zs = &z.data[start..start + chunk.len()];
+        for (gv, &zv) in chunk.iter_mut().zip(zs.iter()) {
+            if zv <= 0.0 {
+                *gv = 0.0;
+            }
+        }
+    });
 }
 
 /// Dropout mask with keep-prob `1-p`, inverted scaling (train-time only).
 /// Returns the mask so backward can reuse it (Appendix F requirement).
+/// Serial by design: the mask is a deterministic RNG stream.
 pub fn dropout_mask(rows: usize, cols: usize, p: f32, rng: &mut Rng) -> Mat {
     assert!((0.0..1.0).contains(&p));
     let scale = 1.0 / (1.0 - p);
@@ -36,12 +66,28 @@ pub fn dropout_mask(rows: usize, cols: usize, p: f32, rng: &mut Rng) -> Mat {
 
 /// Elementwise product (dropout application; Hadamard in general).
 pub fn hadamard(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
     let mut out = a.clone();
-    for (o, &bv) in out.data.iter_mut().zip(b.data.iter()) {
-        *o *= bv;
-    }
+    hadamard_inplace(&mut out, b);
     out
+}
+
+/// `a ∘= b` in place — the layer fwd/bwd dropout-apply path, saving a
+/// full-matrix clone per application (parallel elementwise).
+pub fn hadamard_inplace(a: &mut Mat, b: &Mat) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let pool = pool::global();
+    if pool.threads() == 1 || a.data.len() < PAR_ELEM_MIN {
+        for (o, &bv) in a.data.iter_mut().zip(b.data.iter()) {
+            *o *= bv;
+        }
+        return;
+    }
+    pool::for_chunks(&pool, &mut a.data, |start, chunk| {
+        let bs = &b.data[start..start + chunk.len()];
+        for (o, &bv) in chunk.iter_mut().zip(bs.iter()) {
+            *o *= bv;
+        }
+    });
 }
 
 /// Softmax cross-entropy over rows listed in `mask` (training nodes).
@@ -56,20 +102,25 @@ pub fn softmax_xent(logits: &Mat, labels: &[u32], mask: &[u32]) -> (f64, Mat) {
     }
     let inv_n = 1.0 / mask.len() as f32;
     let mut loss = 0.0f64;
+    // shifted-exp row cache: exp() runs once per element — the
+    // normalizer and the probabilities reuse the same values, with the
+    // same fold order, so loss and gradient bits are unchanged
+    let mut exps = vec![0.0f32; logits.cols];
     for &r in mask {
         let r = r as usize;
         let row = logits.row(r);
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
-        for &v in row {
-            z += (v - m).exp();
+        for (e, &v) in exps.iter_mut().zip(row.iter()) {
+            *e = (v - m).exp();
+            z += *e;
         }
         let y = labels[r] as usize;
         debug_assert!(y < logits.cols);
         loss += (z.ln() - (row[y] - m)) as f64;
         let g = grad.row_mut(r);
-        for (c, &v) in row.iter().enumerate() {
-            let p = (v - m).exp() / z;
+        for (c, &e) in exps.iter().enumerate() {
+            let p = e / z;
             g[c] = (p - if c == y { 1.0 } else { 0.0 }) * inv_n;
         }
     }

@@ -4,8 +4,20 @@
 //! columns = inner + boundary nodes) is stored in CSR; the forward pass
 //! computes `P·H` and the backward pass `Pᵀ·M`. Both kernels stream the
 //! dense right-hand side row-wise so the inner loop is a contiguous AXPY.
+//!
+//! Threading: [`Csr::spmm_into`] runs as disjoint output-row blocks on
+//! [`crate::runtime::pool`] — one owner per output row, serial
+//! summation order per row, bit-identical at any thread count. The
+//! scatter-form `spmm_t_into` has multi-owner writes and stays serial;
+//! the training backward instead goes through the precomputed transpose
+//! (`runtime::native` caches `P.transpose()`), which runs as a
+//! row-parallel *gather* through the same `spmm_into`.
 
 use super::dense::Mat;
+use crate::runtime::pool;
+
+/// Minimum `nnz × rhs-cols` before an SpMM goes to the pool.
+const PAR_SPMM_MIN: usize = 1 << 14;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
@@ -66,29 +78,47 @@ impl Csr {
         out
     }
 
-    /// `out = self · h`, overwriting `out`.
+    /// `out = self · h`, overwriting `out`. Row-parallel on the pool for
+    /// large shapes (each output row has one owner — bit-identical to
+    /// the serial path at any thread count).
     pub fn spmm_into(&self, h: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, h.rows, "spmm shape mismatch");
         assert_eq!((out.rows, out.cols), (self.rows, h.cols));
         let n = h.cols;
-        out.data.iter_mut().for_each(|x| *x = 0.0);
-        for r in 0..self.rows {
-            let lo = self.indptr[r];
-            let hi = self.indptr[r + 1];
-            let out_row = &mut out.data[r * n..(r + 1) * n];
-            for idx in lo..hi {
-                let c = self.indices[idx] as usize;
-                let v = self.data[idx];
-                let h_row = &h.data[c * n..(c + 1) * n];
-                for (o, x) in out_row.iter_mut().zip(h_row.iter()) {
-                    *o += v * *x;
-                }
+        let pool = pool::global();
+        if pool.threads() == 1 || self.rows < 2 || self.nnz() * n < PAR_SPMM_MIN {
+            for r in 0..self.rows {
+                self.spmm_row(r, h, &mut out.data[r * n..(r + 1) * n]);
+            }
+            return;
+        }
+        pool::for_row_blocks(&pool, &mut out.data, n, |rows, block| {
+            for (bi, r) in rows.enumerate() {
+                self.spmm_row(r, h, &mut block[bi * n..(bi + 1) * n]);
+            }
+        });
+    }
+
+    /// One output row of `self · h` — the shared row kernel that fixes
+    /// the summation order for the serial and parallel paths.
+    #[inline]
+    fn spmm_row(&self, r: usize, h: &Mat, out_row: &mut [f32]) {
+        let n = h.cols;
+        out_row.iter_mut().for_each(|x| *x = 0.0);
+        for idx in self.indptr[r]..self.indptr[r + 1] {
+            let c = self.indices[idx] as usize;
+            let v = self.data[idx];
+            let h_row = &h.data[c * n..(c + 1) * n];
+            for (o, x) in out_row.iter_mut().zip(h_row.iter()) {
+                *o += v * *x;
             }
         }
     }
 
     /// `out = selfᵀ · m` (out: cols × m.cols). Scatter formulation:
     /// each CSR entry (r, c, v) contributes `v · m[r,:]` to `out[c,:]`.
+    /// Multi-owner writes, so it stays serial — hot paths use the
+    /// precomputed transpose + [`Csr::spmm`] gather instead.
     pub fn spmm_t(&self, m: &Mat) -> Mat {
         let mut out = Mat::zeros(self.cols, m.cols);
         self.spmm_t_into(m, &mut out);

@@ -1,0 +1,226 @@
+//! Parallel kernels must be **bit-identical** to the serial path.
+//!
+//! The pool parallelizes over disjoint output-row blocks, so every
+//! output element keeps a single owner and the serial f32 summation
+//! order — these tests pin that contract for all four GEMM variants,
+//! `spmm`/`spmm_t`, the elementwise passes, the Adam step, and a full
+//! training run at `--threads 1` vs `--threads 4`.
+//!
+//! This binary owns the global pool's thread count. The pool is
+//! process-global and the test harness runs `#[test]`s concurrently,
+//! so every test that reconfigures it takes [`pool_lock`] first —
+//! otherwise the "serial" baseline could silently execute on a
+//! multi-thread pool rebuilt by a neighboring test, and a determinism
+//! regression would compare parallel against parallel and vacuously
+//! pass.
+
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::model::adam::Adam;
+use pipegcn::perf::random_csr;
+use pipegcn::runtime::pool;
+use pipegcn::tensor::{ops, Mat};
+use pipegcn::util::prop;
+use pipegcn::util::rng::Rng;
+use std::sync::{Mutex, MutexGuard};
+
+/// Serializes every test in this binary that touches the global pool's
+/// thread count, so `with_threads(1, …)` really runs serial.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn pool_lock() -> MutexGuard<'static, ()> {
+    // a panicked holder doesn't invalidate the lock's purpose
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn with_threads<T>(n: usize, f: impl FnOnce() -> T) -> T {
+    pool::set_threads(n);
+    f()
+}
+
+const THREAD_COUNTS: [usize; 3] = [2, 3, 8];
+
+#[test]
+fn gemm_variants_bit_identical_across_thread_counts() {
+    let _serial = pool_lock();
+    prop::check("par gemm == serial", 6, |rng| {
+        // shapes straddle the parallel-dispatch cutoff so both paths run
+        let m = 1 + rng.gen_range(300);
+        let k = 1 + rng.gen_range(150);
+        let n = 1 + rng.gen_range(90);
+        let a = Mat::randn(m, k, 1.0, rng);
+        let b = Mat::randn(k, n, 1.0, rng);
+        let bm = Mat::randn(m, n, 1.0, rng); // for tn: same rows as a
+        let bk = Mat::randn(n, k, 1.0, rng); // for nt: same cols as a
+        let base = with_threads(1, || {
+            (a.matmul(&b), a.matmul_tn(&bm), a.matmul_nt(&bk))
+        });
+        for t in THREAD_COUNTS {
+            let got = with_threads(t, || {
+                (a.matmul(&b), a.matmul_tn(&bm), a.matmul_nt(&bk))
+            });
+            pipegcn::prop_assert!(
+                bits(&base.0.data) == bits(&got.0.data),
+                "matmul bits differ at {t} threads ({m}x{k}x{n})"
+            );
+            pipegcn::prop_assert!(
+                bits(&base.1.data) == bits(&got.1.data),
+                "matmul_tn bits differ at {t} threads ({m}x{k}x{n})"
+            );
+            pipegcn::prop_assert!(
+                bits(&base.2.data) == bits(&got.2.data),
+                "matmul_nt bits differ at {t} threads ({m}x{k}x{n})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn matmul_into_bit_identical_across_thread_counts() {
+    let _serial = pool_lock();
+    prop::check("par matmul_into == serial", 4, |rng| {
+        let (m, k, n) = (64 + rng.gen_range(200), 32 + rng.gen_range(64), 8 + rng.gen_range(48));
+        let a = Mat::randn(m, k, 1.0, rng);
+        let b = Mat::randn(k, n, 1.0, rng);
+        let mut c1 = Mat::zeros(m, n);
+        with_threads(1, || a.matmul_into(&b, &mut c1));
+        for t in THREAD_COUNTS {
+            let mut ct = Mat::zeros(m, n);
+            with_threads(t, || a.matmul_into(&b, &mut ct));
+            pipegcn::prop_assert!(
+                bits(&c1.data) == bits(&ct.data),
+                "matmul_into bits differ at {t} threads"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spmm_and_spmm_t_bit_identical_across_thread_counts() {
+    let _serial = pool_lock();
+    prop::check("par spmm == serial", 6, |rng| {
+        let rows = 1 + rng.gen_range(300);
+        let cols = 1 + rng.gen_range(200);
+        let f = 1 + rng.gen_range(64);
+        let s = random_csr(rng, rows, cols, 0.15);
+        let h = Mat::randn(cols, f, 1.0, rng);
+        let m = Mat::randn(rows, f, 1.0, rng);
+        let base = with_threads(1, || (s.spmm(&h), s.spmm_t(&m)));
+        for t in THREAD_COUNTS {
+            let got = with_threads(t, || (s.spmm(&h), s.spmm_t(&m)));
+            pipegcn::prop_assert!(
+                bits(&base.0.data) == bits(&got.0.data),
+                "spmm bits differ at {t} threads ({rows}x{cols}x{f})"
+            );
+            pipegcn::prop_assert!(
+                bits(&base.1.data) == bits(&got.1.data),
+                "spmm_t bits differ at {t} threads ({rows}x{cols}x{f})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn elementwise_and_adam_bit_identical_across_thread_counts() {
+    let _serial = pool_lock();
+    let mut rng = Rng::new(9);
+    let z = Mat::randn(300, 70, 1.0, &mut rng); // > the parallel cutoff
+    let g0 = Mat::randn(300, 70, 1.0, &mut rng);
+    let mask = ops::dropout_mask(300, 70, 0.5, &mut rng);
+    let n = 40_000;
+    let grad: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let run = |t: usize| {
+        with_threads(t, || {
+            let r = ops::relu(&z);
+            let mut g = g0.clone();
+            ops::relu_grad_inplace(&mut g, &z);
+            let mut h = g0.clone();
+            ops::hadamard_inplace(&mut h, &mask);
+            let mut params = vec![0.1f32; n];
+            let mut adam = Adam::new(0.01, n);
+            for _ in 0..3 {
+                adam.step(&mut params, &grad);
+            }
+            (r, g, h, params)
+        })
+    };
+    let base = run(1);
+    for t in THREAD_COUNTS {
+        let got = run(t);
+        assert_eq!(bits(&base.0.data), bits(&got.0.data), "relu at {t} threads");
+        assert_eq!(bits(&base.1.data), bits(&got.1.data), "relu_grad at {t} threads");
+        assert_eq!(bits(&base.2.data), bits(&got.2.data), "hadamard at {t} threads");
+        assert_eq!(bits(&base.3), bits(&got.3), "adam at {t} threads");
+    }
+}
+
+/// The acceptance oracle: a full training run (all engines share these
+/// kernels) produces a bit-identical loss curve at 1 vs 4 threads.
+#[test]
+fn training_loss_curve_bit_identical_threads_1_vs_4() {
+    let _serial = pool_lock();
+    let run = |t: usize| {
+        with_threads(t, || {
+            exp::run(
+                "tiny",
+                3,
+                "pipegcn-gf",
+                RunOpts { epochs: 5, eval_every: 0, ..Default::default() },
+            )
+        })
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.result.curve.len(), b.result.curve.len());
+    for (x, y) in a.result.curve.iter().zip(&b.result.curve) {
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "epoch {}: 1-thread {} vs 4-thread {}",
+            x.epoch,
+            x.train_loss,
+            y.train_loss
+        );
+    }
+    // the epoch stats carry the new breakdown fields
+    for e in &a.result.curve {
+        assert!(e.comp_ms >= 0.0 && e.comm_wait_ms == 0.0);
+    }
+}
+
+/// `pipegcn bench --smoke` roundtrip: NDJSON rows for every kernel at
+/// every swept thread count, the end-to-end epoch rows, and a summary.
+#[test]
+fn smoke_bench_writes_ndjson_rows() {
+    let _serial = pool_lock();
+    let path = format!("/tmp/pipegcn_bench_test_{}.ndjson", std::process::id());
+    let o = pipegcn::perf::BenchOpts {
+        out: path.clone(),
+        threads: vec![1, 2],
+        smoke: true,
+        preset: "tiny".into(),
+        parts: 2,
+        epochs: 2,
+    };
+    pipegcn::perf::run_bench(&o).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let rows = pipegcn::util::json::parse_ndjson(&text).unwrap();
+    // header + 5 kernels × 2 thread counts + 2 epoch rows + summary
+    assert_eq!(rows.len(), 1 + 10 + 2 + 1, "{text}");
+    assert_eq!(rows[0].get("bench").unwrap().as_str(), Some("pipegcn-kernels"));
+    for row in &rows[1..13] {
+        assert!(row.get("ns_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("gflops").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(row.get("threads").unwrap().as_usize().unwrap() >= 1);
+    }
+    let last = rows.last().unwrap();
+    assert_eq!(last.get("kernel").unwrap().as_str(), Some("summary"));
+    assert!(last.get("spmm_gemm_speedup").unwrap().as_f64().unwrap() > 0.0);
+    std::fs::remove_file(&path).ok();
+}
