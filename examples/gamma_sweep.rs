@@ -6,8 +6,9 @@
 //! cargo run --release --example gamma_sweep [-- --epochs 80 --gammas 0,0.5,0.7,0.95]
 //! ```
 
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::graph::io::append_csv;
+use pipegcn::session::Session;
 use pipegcn::util::cli::Args;
 
 fn main() -> pipegcn::util::error::Result<()> {
@@ -19,12 +20,12 @@ fn main() -> pipegcn::util::error::Result<()> {
     println!("== products-sim γ sweep (Fig. 6/7 analogue), {parts} partitions ==");
     println!("{:>6} {:>10} {:>10} {:>12} {:>12}", "γ", "best", "final", "feat err", "grad err");
     for &gamma in &gammas {
-        let out = exp::run(
-            "products-sim",
-            parts,
-            "pipegcn-gf",
-            RunOpts { epochs, gamma, probe_errors: true, eval_every: 5, ..Default::default() },
-        );
+        let out = Session::preset("products-sim")
+            .parts(parts)
+            .variant("pipegcn-gf")
+            .run_opts(RunOpts { epochs, gamma, probe_errors: true, eval_every: 5, ..Default::default() })
+            .run()?
+            .into_output();
         // mean post-warmup relative errors across layers (Fig. 7)
         let post: Vec<_> =
             out.result.probes.iter().filter(|p| p.epoch > epochs / 3).collect();

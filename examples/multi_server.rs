@@ -8,6 +8,7 @@
 //! ```
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::cli::Args;
 
@@ -29,12 +30,12 @@ fn main() -> pipegcn::util::error::Result<()> {
         let mut vanilla_total = 0.0;
         let mut pipe_total = 0.0;
         for method in ["gcn", "pipegcn", "pipegcn-gf"] {
-            let out = exp::run(
-                "reddit-sim",
-                parts,
-                method,
-                RunOpts { epochs, eval_every: epochs, ..Default::default() },
-            );
+            let out = Session::preset("reddit-sim")
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs, eval_every: epochs, ..Default::default() })
+                .run()?
+                .into_output();
             let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
             let sim = exp::simulate(&out, &profile, &topo, mode);
             if method == "gcn" {

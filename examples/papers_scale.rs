@@ -10,6 +10,7 @@
 //! ```
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::cli::Args;
 use pipegcn::util::fmt_secs;
@@ -24,12 +25,12 @@ fn main() -> pipegcn::util::error::Result<()> {
     println!("{:<12} {:>12} {:>14} {:>10} {:>10}", "method", "total", "communication", "ratio", "test");
     let mut base = (1.0, 1.0);
     for method in ["gcn", "pipegcn", "pipegcn-gf"] {
-        let out = exp::run(
-            "papers-sim",
-            parts,
-            method,
-            RunOpts { epochs, eval_every: epochs, ..Default::default() },
-        );
+        let out = Session::preset("papers-sim")
+            .parts(parts)
+            .variant(method)
+            .run_opts(RunOpts { epochs, eval_every: epochs, ..Default::default() })
+            .run()?
+            .into_output();
         let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
         let sim = exp::simulate(&out, &profile, &topo, mode);
         let comm = sim.comm_exposed + sim.reduce;

@@ -1,150 +1,118 @@
-//! Quickstart — the end-to-end three-layer-stack driver.
+//! Quickstart — the Session front door, end to end:
 //!
-//! Loads the AOT artifacts (JAX + Pallas kernels lowered to HLO text by
-//! `make artifacts`), partitions a synthetic dataset, and trains both
-//! vanilla partition-parallel GCN and PipeGCN **through the XLA/PJRT
-//! backend** — Python is not involved at runtime. Prints the loss curve,
-//! test accuracy, and the simulated epoch-time comparison on the paper's
-//! 2080Ti rig. Falls back to the native backend (with a notice) when
-//! artifacts haven't been built.
+//! 1. train through [`pipegcn::session::Session`] (one builder for every
+//!    engine: sequential, threaded, multi-process TCP),
+//! 2. check the engines agree **bit-for-bit** (staleness lives in
+//!    message tags, not timing),
+//! 3. distill the training checkpoint into a standalone params artifact
+//!    (`pipegcn export-params`'s library path),
+//! 4. serve it over TCP and answer a feature→logit query
+//!    (`pipegcn serve` / `pipegcn query`'s library path).
 //!
 //! ```text
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The same flow from the CLI:
+//!
+//! ```text
+//! pipegcn train --dataset tiny --parts 2 --method pipegcn --epochs 40 \
+//!               --ckpt-dir /tmp/qs-ckpt
+//! pipegcn export-params --from-ckpt /tmp/qs-ckpt --dataset tiny --parts 2 \
+//!               --out /tmp/qs-params.pgp
+//! pipegcn serve --params /tmp/qs-params.pgp --dataset tiny --addr-file /tmp/qs.addr &
+//! pipegcn query --addr "$(cat /tmp/qs.addr)" --nodes 0,1,2 --repeat 20
 //! ```
 //!
 //! For genuinely distributed training (one OS process per partition over
-//! real localhost TCP sockets — the `net` subsystem), use the CLI:
-//!
-//! ```text
-//! cargo run --release -- launch --parts 4 --dataset reddit-sim --epochs 3
-//! ```
-//!
-//! `launch` binds a rendezvous port, spawns `--parts` children running
-//! `pipegcn worker --rank R --parts K --coord HOST:PORT ...`, and waits.
-//! Each worker rebuilds the dataset/partition deterministically from the
-//! shared seed, joins the all-to-all socket mesh, and trains; rank 0
-//! gathers losses and reports (`--out results.json`, `--log run.ndjson`).
-//! The loss curve is bit-identical to `pipegcn train` on the same flags
-//! (staleness lives in message tags, not timing).
+//! real localhost TCP sockets), swap the engine:
+//! `.engine(Engine::Tcp { max_restarts: 3 })`, or use `pipegcn launch`.
+//! (The AOT XLA/PJRT backend demo lives in `tests/xla_parity.rs`; build
+//! with `make artifacts` and `--features xla`.)
 
-use pipegcn::coordinator::{trainer, Optimizer, PipeOpts, TrainConfig, Variant};
+use pipegcn::ckpt::Policy;
 use pipegcn::graph::presets;
-use pipegcn::model::ModelConfig;
-use pipegcn::partition::{partition, quality, Method};
-use pipegcn::runtime::{native::NativeBackend, xla::XlaBackend, Backend};
-use pipegcn::sim::Mode;
-use pipegcn::util::{fmt_bytes, fmt_secs};
+use pipegcn::model::{artifact, ModelConfig};
+use pipegcn::serve::{Client, Server};
+use pipegcn::session::{Engine, Session};
+use pipegcn::util::fmt_bytes;
 
 fn main() -> pipegcn::util::error::Result<()> {
-    let preset = presets::by_name("tiny").unwrap();
-    let epochs = 40;
     println!("== PipeGCN quickstart ==");
+    let preset = presets::by_name("tiny").unwrap();
     println!(
         "dataset: {} ({} nodes, feat {}, {} classes) | model: {}-layer GraphSAGE-{}",
         preset.name, preset.n, preset.feat_dim, preset.n_classes, preset.layers, preset.hidden
     );
 
-    let g = preset.build(42);
-    let pt = partition(&g, 2, Method::Multilevel, 1);
-    let q = quality(&g, &pt);
-    println!(
-        "partitioned 2-way (multilevel): edge-cut {}, boundary replicas {}, balance {:.2}",
-        q.edge_cut, q.comm_volume, q.balance
-    );
-
-    // Backend: AOT XLA artifacts if built AND the xla feature is compiled
-    // in (the default build ships a stub backend), else native with a
-    // notice.
-    let artifacts = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
-    let use_xla = cfg!(feature = "xla")
-        && std::path::Path::new(&format!("{artifacts}/manifest.json")).exists();
-    let make_backend = || -> Box<dyn Backend> {
-        if use_xla {
-            let b = XlaBackend::from_artifacts(&artifacts).expect("loading artifacts");
-            Box::new(b)
-        } else {
-            eprintln!(
-                "NOTE: artifacts missing or `xla` feature off — run `make artifacts` and \
-                 build with --features xla for the XLA path; using native backend"
-            );
-            Box::new(NativeBackend::new())
+    // --- 1) train both methods through the Session builder -------------
+    let scratch = std::env::temp_dir().join(format!("pipegcn_quickstart_{}", std::process::id()));
+    let ckpt_dir = scratch.join("ckpt").to_string_lossy().into_owned();
+    let epochs = 40;
+    let mut trained = None;
+    for method in ["gcn", "pipegcn"] {
+        let mut session = Session::preset("tiny")
+            .parts(2)
+            .variant(method)
+            .epochs(epochs)
+            .seed(7)
+            .eval_every(10);
+        if method == "pipegcn" {
+            // checkpoint the pipelined run — step 3 distills it
+            session = session.ckpt(Policy { dir: ckpt_dir.clone(), every: epochs });
         }
-    };
-    println!("backend: {}", if use_xla { "xla (AOT PJRT artifacts)" } else { "native" });
-
-    let mut results = Vec::new();
-    for variant in [Variant::Vanilla, Variant::Pipe(PipeOpts::plain())] {
-        let cfg = TrainConfig {
-            model: ModelConfig::sage(
-                preset.feat_dim,
-                preset.hidden,
-                preset.layers,
-                preset.n_classes,
-                0.0,
-            ),
-            variant,
-            optimizer: Optimizer::Adam,
-            lr: preset.lr,
-            epochs,
-            seed: 7,
-            eval_every: 10,
-            probe_errors: false,
-        };
-        let mut backend = make_backend();
-        let r = trainer::train(&g, &pt, &cfg, backend.as_mut());
-        println!("\n-- {} --", r.variant);
-        for e in &r.curve {
-            if !e.val.is_nan() {
-                println!(
-                    "  epoch {:3}  loss {:.4}  val {:.4}  test {:.4}",
-                    e.epoch, e.train_loss, e.val, e.test
-                );
-            }
-        }
+        let report = session.run()?;
+        println!("\n-- {method} ({} engine) --", report.engine);
         println!(
-            "  comm/epoch {} | wall {}",
-            fmt_bytes(r.comm_bytes_epoch),
-            fmt_secs(r.wall_secs)
+            "  final loss {:.4} | test {:.4} | comm {}",
+            report.losses.last().unwrap(),
+            report.final_test,
+            fmt_bytes(report.comm_bytes),
         );
-        results.push(r);
+        trained = Some(report);
     }
+    let trained = trained.unwrap();
 
-    // simulated comparison on the paper's single-chassis rig
-    let (profile, topo) = pipegcn::sim::profiles::rig_2080ti(2);
-    let scale = preset.sim_scale;
-    let v = pipegcn::sim::epoch_time(
-        &pipegcn::exp::scale_works(&results[0].works, scale),
-        results[0].model_elems,
-        &profile,
-        &topo,
-        Mode::Vanilla,
+    // --- 2) engines are interchangeable and bit-identical ---------------
+    let seq = Session::preset("tiny").parts(2).variant("pipegcn").epochs(10).seed(7).run()?;
+    let thr = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .epochs(10)
+        .seed(7)
+        .engine(Engine::Threaded)
+        .run()?;
+    assert_eq!(
+        seq.losses.last().unwrap().to_bits(),
+        thr.losses.last().unwrap().to_bits(),
     );
-    let p = pipegcn::sim::epoch_time(
-        &pipegcn::exp::scale_works(&results[1].works, scale),
-        results[1].model_elems,
-        &profile,
-        &topo,
-        Mode::Pipelined,
-    );
-    println!("\n-- simulated epoch time (2× RTX-2080Ti rig) --");
+    println!("\nsequential and threaded engines agree bit-for-bit over 10 epochs");
+
+    // --- 3) checkpoint → standalone params artifact ---------------------
+    let cfg = ModelConfig::from_preset(preset);
+    let (pf, epoch) = artifact::export_from_ckpt(&ckpt_dir, 2, &cfg, None)?;
+    let params_path = scratch.join("params.pgp").to_string_lossy().into_owned();
+    artifact::save(&params_path, &pf)?;
     println!(
-        "  GCN     : total {} (compute {}, comm {})",
-        fmt_secs(v.total),
-        fmt_secs(v.compute),
-        fmt_secs(v.comm_total)
+        "exported the epoch-{epoch} checkpoint to {params_path} ({} parameters, no optimizer state)",
+        pf.params.n_elems()
     );
+
+    // --- 4) serve it and query logits over TCP --------------------------
+    // the same graph seed the training run used, so the served model
+    // sees the graph it was trained on
+    let server = Server::from_parts(preset.build(7), pf.config, pf.params)?;
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run(Some(1)));
+    let mut client = Client::connect(&addr)?;
+    let logits = client.query(&[0, 1, 2, 3])?;
+    client.close();
+    handle.join().expect("serve thread panicked")?;
     println!(
-        "  PipeGCN : total {} (compute {}, comm exposed {})",
-        fmt_secs(p.total),
-        fmt_secs(p.compute),
-        fmt_secs(p.comm_exposed)
+        "served logits for {} nodes × {} classes from {addr} (trained test metric {:.4})",
+        logits.rows, logits.cols, trained.final_test
     );
-    println!("  throughput speedup: {:.2}×", v.total / p.total);
-    println!(
-        "\naccuracy: GCN {:.4} vs PipeGCN {:.4} (same-accuracy claim: Δ {:+.4})",
-        results[0].final_test,
-        results[1].final_test,
-        results[1].final_test - results[0].final_test
-    );
+
+    std::fs::remove_dir_all(&scratch).ok();
     Ok(())
 }

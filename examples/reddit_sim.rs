@@ -9,6 +9,7 @@
 
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::io::append_csv;
+use pipegcn::session::Session;
 use pipegcn::sim::Mode;
 use pipegcn::util::cli::Args;
 
@@ -24,12 +25,12 @@ fn main() -> pipegcn::util::error::Result<()> {
         println!("{:<12} {:>10} {:>12} {:>12}", "method", "test", "epochs/s", "speedup");
         let mut vanilla_total = 0.0f64;
         for method in methods {
-            let out = exp::run(
-                "reddit-sim",
-                parts,
-                method,
-                RunOpts { epochs, eval_every: 5, ..Default::default() },
-            );
+            let out = Session::preset("reddit-sim")
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs, eval_every: 5, ..Default::default() })
+                .run()?
+                .into_output();
             let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
             let sim = exp::simulate_default(&out, mode);
             if method == "gcn" {

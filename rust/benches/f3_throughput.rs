@@ -7,6 +7,7 @@
 use pipegcn::baselines::{cagnet_epoch, reddit_inputs, roc_epoch, BaselineInputs};
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::partition::quality;
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_2080ti, Mode};
 use pipegcn::util::json::Json;
 
@@ -19,23 +20,25 @@ fn main() -> pipegcn::util::error::Result<()> {
     let mut rows = Vec::new();
     for parts in [2usize, 4, 6, 8, 10] {
         let (profile, topo) = rig_2080ti(parts);
-        let out_g = exp::run(
-            "reddit-sim",
-            parts,
-            "gcn",
-            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
-        );
+        let out_g = Session::preset("reddit-sim")
+            .parts(parts)
+            .variant("gcn")
+            .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let q = quality(&out_g.graph, &out_g.parts);
         let inputs: BaselineInputs = reddit_inputs(parts, q.replication_factor);
         let roc = 1.0 / roc_epoch(&inputs, &profile, &topo).total;
         let cagnet = 1.0 / cagnet_epoch(&inputs, 2, &profile, &topo).total;
         let gcn = 1.0 / exp::simulate(&out_g, &profile, &topo, Mode::Vanilla).total;
-        let out_p = exp::run(
-            "reddit-sim",
-            parts,
-            "pipegcn",
-            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
-        );
+        let out_p = Session::preset("reddit-sim")
+            .parts(parts)
+            .variant("pipegcn")
+            .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let pipe = 1.0 / exp::simulate(&out_p, &profile, &topo, Mode::Pipelined).total;
         println!(
             "{:<7} {:>9.2} {:>12.2} {:>9.2} {:>9.2} | {:>11.1}x {:>11.1}x",

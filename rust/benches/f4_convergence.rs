@@ -4,8 +4,9 @@
 //! Paper shape: PipeGCN converges slightly slower early, catches up;
 //! smoothing variants match vanilla convergence.
 
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::graph::io::append_csv;
+use pipegcn::session::Session;
 
 fn main() -> pipegcn::util::error::Result<()> {
     let cases: &[(&str, usize, &str)] = &[
@@ -18,12 +19,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     for &(ds, parts, fig) in cases {
         println!("== {fig}: {ds} ({parts} partitions) convergence ==");
         for method in methods {
-            let out = exp::run(
-                ds,
-                parts,
-                method,
-                RunOpts { epochs: 0, eval_every: 2, ..Default::default() },
-            );
+            let out = Session::preset(ds)
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs: 0, eval_every: 2, ..Default::default() })
+                .run()
+                .expect("session run")
+                .into_output();
             // half-way and final accuracy summarize the curve shape
             let evals: Vec<_> = out.result.curve.iter().filter(|e| !e.val.is_nan()).collect();
             let half = evals[evals.len() / 2];

@@ -35,7 +35,8 @@ fn main() -> pipegcn::util::error::Result<()> {
             probe_errors: true,
         };
         let mut backend = pipegcn::runtime::native::NativeBackend::new();
-        let result = trainer::train(&g, &pt, &cfg, &mut backend);
+        let result =
+            trainer::train_resumable(&g, &pt, &cfg, &mut backend, None, None, None).unwrap();
         let layers = preset.layers;
         let mut grad = vec![0.0f64; layers];
         let mut feat = vec![0.0f64; layers];

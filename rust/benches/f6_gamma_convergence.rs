@@ -4,8 +4,9 @@
 //! Paper shape: large γ (0.7/0.95) converges fast but overfits; small γ
 //! (0–0.5) mitigates overfitting; γ=0.5 best trade-off.
 
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::graph::io::append_csv;
+use pipegcn::session::Session;
 use pipegcn::util::json::Json;
 
 fn main() -> pipegcn::util::error::Result<()> {
@@ -15,12 +16,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     std::fs::remove_file("results/f6_gamma_convergence.csv").ok();
     let mut rows = Vec::new();
     for &gamma in &gammas {
-        let out = exp::run(
-            "products-sim",
-            10,
-            "pipegcn-gf",
-            RunOpts { epochs: 0, gamma, eval_every: 2, ..Default::default() },
-        );
+        let out = Session::preset("products-sim")
+            .parts(10)
+            .variant("pipegcn-gf")
+            .run_opts(RunOpts { epochs: 0, gamma, eval_every: 2, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let evals: Vec<_> = out.result.curve.iter().filter(|e| !e.val.is_nan()).collect();
         let best = evals.iter().map(|e| e.test).fold(f64::MIN, f64::max);
         let last = evals.last().unwrap().test;

@@ -4,8 +4,9 @@
 //! Paper shape: larger γ → lower approximation error (more stable
 //! gradients/features); γ=0 highest error.
 
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::graph::io::append_csv;
+use pipegcn::session::Session;
 
 fn main() -> pipegcn::util::error::Result<()> {
     let gammas = [0.0f32, 0.5, 0.95];
@@ -15,12 +16,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     println!("{:>6} {:<28} {:<28}", "γ", "feat err / layer", "grad err / layer");
     let mut means = Vec::new();
     for &gamma in &gammas {
-        let out = exp::run(
-            "products-sim",
-            10,
-            "pipegcn-gf",
-            RunOpts { epochs, gamma, probe_errors: true, eval_every: 0, ..Default::default() },
-        );
+        let out = Session::preset("products-sim")
+            .parts(10)
+            .variant("pipegcn-gf")
+            .run_opts(RunOpts { epochs, gamma, probe_errors: true, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let layers = out.preset.layers;
         let mut feat = vec![0.0f64; layers];
         let mut grad = vec![0.0f64; layers];

@@ -7,6 +7,7 @@
 //! only minimal overhead.
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
@@ -27,12 +28,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     let mut rows = Vec::new();
     for &(ds, parts) in cases {
         for method in ["gcn", "pipegcn", "pipegcn-gf"] {
-            let out = exp::run(
-                ds,
-                parts,
-                method,
-                RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
-            );
+            let out = Session::preset(ds)
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+                .run()
+                .expect("session run")
+                .into_output();
             let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
             let sim = exp::simulate_default(&out, mode);
             println!(

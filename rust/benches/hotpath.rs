@@ -4,7 +4,8 @@
 
 use pipegcn::comm::allreduce::ring_allreduce;
 use pipegcn::comm::Fabric;
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
+use pipegcn::session::Session;
 use pipegcn::tensor::{Csr, Mat};
 use pipegcn::util::rng::Rng;
 use pipegcn::util::timer::Stopwatch;
@@ -69,12 +70,13 @@ fn main() {
 
     // end-to-end iteration (reddit-sim, 4 parts)
     let sw = Stopwatch::start();
-    let out = exp::run(
-        "reddit-sim",
-        4,
-        "pipegcn",
-        RunOpts { epochs: 5, eval_every: 0, ..Default::default() },
-    );
+    let out = Session::preset("reddit-sim")
+        .parts(4)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 5, eval_every: 0, ..Default::default() })
+        .run()
+        .expect("session run")
+        .into_output();
     let total = sw.elapsed_secs();
     println!(
         "{:<44} {:>10.3} ms/epoch (5 epochs, incl. setup {:.2}s)",

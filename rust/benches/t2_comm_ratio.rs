@@ -4,6 +4,7 @@
 //! ogbn-products 5→76.17% 10→85.79%, Yelp 3→61.16% 6→76.84%.
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
@@ -23,7 +24,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     );
     let mut rows = Vec::new();
     for &(ds, parts, paper) in cases {
-        let out = exp::run(ds, parts, "gcn", RunOpts { epochs: 3, eval_every: 0, ..Default::default() });
+        let out = Session::preset(ds)
+            .parts(parts)
+            .variant("gcn")
+            .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let sim = exp::simulate_default(&out, Mode::Vanilla);
         let measured = 100.0 * sim.comm_ratio();
         println!("{:<14} {:>6} {:>13.2}% {:>11.2}%", ds, parts, measured, paper);

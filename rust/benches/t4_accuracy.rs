@@ -5,6 +5,7 @@
 //! 1.7×–2.2× vanilla. (Absolute accuracy differs: synthetic SBM data.)
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::Mode;
 use pipegcn::util::json::Json;
 
@@ -26,16 +27,13 @@ fn main() -> pipegcn::util::error::Result<()> {
         println!("{:<12} {:>10} {:>12} {:>10}", "method", "test", "epochs/s", "vs GCN");
         let mut vanilla = 0.0f64;
         for method in methods {
-            let out = exp::run(
-                ds,
-                parts,
-                method,
-                RunOpts {
-                    epochs: if quick { 10 } else { 0 },
-                    eval_every: 5,
-                    ..Default::default()
-                },
-            );
+            let out = Session::preset(ds)
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs: if quick { 10 } else { 0 }, eval_every: 5, ..Default::default() })
+                .run()
+                .expect("session run")
+                .into_output();
             let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
             let sim = exp::simulate_default(&out, mode);
             let eps = exp::sim_epochs_per_s(&sim);

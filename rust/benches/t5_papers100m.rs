@@ -5,6 +5,7 @@
 //! PipeGCN-GF 0.64× / 0.42×.
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::fmt_secs;
 use pipegcn::util::json::Json;
@@ -22,12 +23,13 @@ fn main() -> pipegcn::util::error::Result<()> {
     let mut base = (0.0f64, 0.0f64);
     let mut rows = Vec::new();
     for (i, method) in ["gcn", "pipegcn", "pipegcn-gf"].iter().enumerate() {
-        let out = exp::run(
-            "papers-sim",
-            parts,
-            method,
-            RunOpts { epochs: 6, eval_every: 0, ..Default::default() },
-        );
+        let out = Session::preset("papers-sim")
+            .parts(parts)
+            .variant(method)
+            .run_opts(RunOpts { epochs: 6, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let mode = if *method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
         let sim = exp::simulate(&out, &profile, &topo, mode);
         let comm = sim.comm_exposed + sim.reduce;

@@ -5,6 +5,7 @@
 use pipegcn::baselines::{cagnet_epoch, reddit_inputs, roc_epoch};
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::partition::quality;
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_2080ti, EpochBreakdown, Mode};
 use pipegcn::util::json::Json;
 
@@ -34,12 +35,13 @@ fn main() -> pipegcn::util::error::Result<()> {
             "method", "total", "compute", "comm", "reduce"
         );
         let (profile, topo) = rig_2080ti(gpus);
-        let out_g = exp::run(
-            "reddit-sim",
-            gpus,
-            "gcn",
-            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
-        );
+        let out_g = Session::preset("reddit-sim")
+            .parts(gpus)
+            .variant("gcn")
+            .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let q = quality(&out_g.graph, &out_g.parts);
         let inputs = reddit_inputs(gpus, q.replication_factor);
         // paper rows: (total, compute, comm, reduce)
@@ -64,12 +66,13 @@ fn main() -> pipegcn::util::error::Result<()> {
         let c1 = cagnet_epoch(&inputs, 1, &profile, &topo);
         let c2 = cagnet_epoch(&inputs, 2, &profile, &topo);
         let gcn = exp::simulate(&out_g, &profile, &topo, Mode::Vanilla);
-        let out_p = exp::run(
-            "reddit-sim",
-            gpus,
-            "pipegcn",
-            RunOpts { epochs: 3, eval_every: 0, ..Default::default() },
-        );
+        let out_p = Session::preset("reddit-sim")
+            .parts(gpus)
+            .variant("pipegcn")
+            .run_opts(RunOpts { epochs: 3, eval_every: 0, ..Default::default() })
+            .run()
+            .expect("session run")
+            .into_output();
         let pipe = exp::simulate(&out_p, &profile, &topo, Mode::Pipelined);
         for (i, b) in [roc, c1, c2, gcn, pipe].iter().enumerate() {
             let mut j = row(paper[i].0, b, paper[i].1);

@@ -6,6 +6,7 @@
 //! speedups 1.16×–1.65×.
 
 use pipegcn::exp::{self, RunOpts};
+use pipegcn::session::Session;
 use pipegcn::sim::{profiles::rig_mi60, Mode};
 use pipegcn::util::json::Json;
 
@@ -38,12 +39,13 @@ fn main() -> pipegcn::util::error::Result<()> {
         let mut vanilla_total = 0.0;
         let mut pipe_total = 0.0;
         for method in methods {
-            let out = exp::run(
-                "reddit-sim",
-                parts,
-                method,
-                RunOpts { epochs: 30, eval_every: 30, ..Default::default() },
-            );
+            let out = Session::preset("reddit-sim")
+                .parts(parts)
+                .variant(method)
+                .run_opts(RunOpts { epochs: 30, eval_every: 30, ..Default::default() })
+                .run()
+                .expect("session run")
+                .into_output();
             let mode = if method == "gcn" { Mode::Vanilla } else { Mode::Pipelined };
             let sim = exp::simulate(&out, &profile, &topo, mode);
             if method == "gcn" {

@@ -1,0 +1,118 @@
+//! Shared binary codec for on-disk snapshot formats ([`super`] rank
+//! checkpoints and [`crate::model::artifact`] params files): little-endian
+//! fixed-width fields, f32 payloads as raw bit patterns (NaN-safe), and a
+//! bounds-checked [`Cursor`] for decoding. The CRC-32 trailer both formats
+//! append is [`super::crc32`].
+
+use crate::tensor::Mat;
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for x in xs {
+        put_u32(out, x.to_bits());
+    }
+}
+
+pub(crate) fn put_mat(out: &mut Vec<u8>, m: &Mat) {
+    put_u32(out, m.rows as u32);
+    put_u32(out, m.cols as u32);
+    for x in &m.data {
+        put_u32(out, x.to_bits());
+    }
+}
+
+pub(crate) fn put_mats(out: &mut Vec<u8>, ms: &[Mat]) {
+    put_u32(out, ms.len() as u32);
+    for m in ms {
+        put_mat(out, m);
+    }
+}
+
+/// Bounds-checked reader over a decoded body (everything before the CRC
+/// trailer). Every accessor validates lengths so a truncated or hostile
+/// file is a diagnostic, never a panic or an implausible allocation.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated snapshot: wanted {n} bytes at offset {}, body is {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        if n > self.buf.len() / 4 {
+            return Err(format!("implausible vector length {n}"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(self.u32()?));
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn mat(&mut self) -> Result<Mat, String> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        if rows.saturating_mul(cols) > self.buf.len() / 4 {
+            return Err(format!("implausible matrix shape {rows}×{cols}"));
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(f32::from_bits(self.u32()?));
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    pub(crate) fn mats(&mut self) -> Result<Vec<Mat>, String> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.mat()?);
+        }
+        Ok(out)
+    }
+}

@@ -17,8 +17,11 @@
 //! [`latest_complete`] scans for when the launcher recovers a mesh after
 //! a worker death.
 
+pub(crate) mod codec;
+
 use crate::tensor::Mat;
 use crate::util::error::{Context, Result};
+use codec::{put_f32s, put_mats, put_u32, put_u64, Cursor};
 use std::path::PathBuf;
 
 /// File magic of a rank snapshot.
@@ -89,96 +92,9 @@ pub fn crc32(data: &[u8]) -> u32 {
 }
 
 // ---------------------------------------------------------------------
-// Encoding (net::frame conventions: LE fields, f32 as raw bits)
+// Encoding (net::frame conventions: LE fields, f32 as raw bits), via the
+// shared [`codec`] also used by `model::artifact` params files
 // ---------------------------------------------------------------------
-
-fn put_u32(out: &mut Vec<u8>, v: u32) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_u64(out: &mut Vec<u8>, v: u64) {
-    out.extend_from_slice(&v.to_le_bytes());
-}
-
-fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
-    put_u64(out, xs.len() as u64);
-    for x in xs {
-        put_u32(out, x.to_bits());
-    }
-}
-
-fn put_mats(out: &mut Vec<u8>, ms: &[Mat]) {
-    put_u32(out, ms.len() as u32);
-    for m in ms {
-        put_u32(out, m.rows as u32);
-        put_u32(out, m.cols as u32);
-        for x in &m.data {
-            put_u32(out, x.to_bits());
-        }
-    }
-}
-
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> std::result::Result<&'a [u8], String> {
-        if self.pos + n > self.buf.len() {
-            return Err(format!(
-                "truncated snapshot: wanted {n} bytes at offset {}, body is {}",
-                self.pos,
-                self.buf.len()
-            ));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> std::result::Result<u32, String> {
-        let b = self.take(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-    }
-
-    fn u64(&mut self) -> std::result::Result<u64, String> {
-        let b = self.take(8)?;
-        let mut a = [0u8; 8];
-        a.copy_from_slice(b);
-        Ok(u64::from_le_bytes(a))
-    }
-
-    fn f32s(&mut self) -> std::result::Result<Vec<f32>, String> {
-        let n = self.u64()? as usize;
-        if n > self.buf.len() / 4 {
-            return Err(format!("implausible vector length {n}"));
-        }
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            out.push(f32::from_bits(self.u32()?));
-        }
-        Ok(out)
-    }
-
-    fn mats(&mut self) -> std::result::Result<Vec<Mat>, String> {
-        let n = self.u32()? as usize;
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let rows = self.u32()? as usize;
-            let cols = self.u32()? as usize;
-            if rows.saturating_mul(cols) > self.buf.len() / 4 {
-                return Err(format!("implausible matrix shape {rows}×{cols}"));
-            }
-            let mut data = Vec::with_capacity(rows * cols);
-            for _ in 0..rows * cols {
-                data.push(f32::from_bits(self.u32()?));
-            }
-            out.push(Mat::from_vec(rows, cols, data));
-        }
-        Ok(out)
-    }
-}
 
 impl RankState {
     /// Serialize to the versioned, CRC-trailed binary format.
@@ -212,7 +128,7 @@ impl RankState {
         if stored != computed {
             return Err(format!("CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"));
         }
-        let mut c = Cursor { buf: body, pos: 0 };
+        let mut c = Cursor::new(body);
         let magic = c.take(4)?;
         if magic != MAGIC {
             return Err(format!("bad magic {magic:?}"));
@@ -234,8 +150,8 @@ impl RankState {
             feat_buf: c.mats()?,
             grad_buf: c.mats()?,
         };
-        if c.pos != body.len() {
-            return Err(format!("trailing bytes in snapshot ({} of {})", c.pos, body.len()));
+        if c.pos() != body.len() {
+            return Err(format!("trailing bytes in snapshot ({} of {})", c.pos(), body.len()));
         }
         Ok(st)
     }

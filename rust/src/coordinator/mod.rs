@@ -8,8 +8,9 @@
 //!   (-G / -F / -GF).
 //! * [`threaded`] — the transport-generic per-rank schedule
 //!   ([`threaded::run_rank`]): on real threads over the in-process
-//!   fabric ([`threaded::train_threaded`]), or one OS process per rank
-//!   over [`crate::net::TcpTransport`] (`pipegcn launch`). Numerics
+//!   fabric ([`threaded::run_threaded_ctl`], the `Engine::Threaded`
+//!   adapter behind [`crate::session::Session`]), or one OS process per
+//!   rank over [`crate::net::TcpTransport`] (`pipegcn launch`). Numerics
 //!   match the sequential engine exactly in every case.
 //!
 //! Numeric fidelity notes are in DESIGN.md §4.
@@ -51,17 +52,25 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// The accepted method names, as in the paper's tables.
+    pub const NAMES: [&'static str; 5] =
+        ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"];
+
     /// Parse the paper's method names: `gcn`, `pipegcn`, `pipegcn-g`,
-    /// `pipegcn-f`, `pipegcn-gf`.
-    pub fn parse(s: &str, gamma: f32) -> Option<Variant> {
+    /// `pipegcn-f`, `pipegcn-gf`. The error carries the full list of
+    /// valid values, so CLI layers can surface it verbatim.
+    pub fn parse(s: &str, gamma: f32) -> Result<Variant, String> {
         let opts = |f, g| PipeOpts { smooth_feat: f, smooth_grad: g, gamma };
         match s.to_ascii_lowercase().as_str() {
-            "gcn" | "vanilla" => Some(Variant::Vanilla),
-            "pipegcn" => Some(Variant::Pipe(opts(false, false))),
-            "pipegcn-g" => Some(Variant::Pipe(opts(false, true))),
-            "pipegcn-f" => Some(Variant::Pipe(opts(true, false))),
-            "pipegcn-gf" => Some(Variant::Pipe(opts(true, true))),
-            _ => None,
+            "gcn" | "vanilla" => Ok(Variant::Vanilla),
+            "pipegcn" => Ok(Variant::Pipe(opts(false, false))),
+            "pipegcn-g" => Ok(Variant::Pipe(opts(false, true))),
+            "pipegcn-f" => Ok(Variant::Pipe(opts(true, false))),
+            "pipegcn-gf" => Ok(Variant::Pipe(opts(true, true))),
+            _ => Err(format!(
+                "unknown method '{s}' (known: {})",
+                Variant::NAMES.join(", ")
+            )),
         }
     }
 
@@ -110,7 +119,7 @@ impl TrainConfig {
     /// Config from a dataset preset + variant.
     pub fn from_preset(p: &crate::graph::presets::Preset, variant: Variant) -> TrainConfig {
         TrainConfig {
-            model: ModelConfig::sage(p.feat_dim, p.hidden, p.layers, p.n_classes, p.dropout),
+            model: ModelConfig::from_preset(p),
             variant,
             optimizer: Optimizer::Adam,
             lr: p.lr,
@@ -186,22 +195,54 @@ pub struct TrainResult {
 
 /// Full-graph forward pass (reference semantics, no partitioning, no
 /// dropout). Used for evaluation and as the correctness oracle for the
-/// distributed forward.
+/// distributed forward. Equivalent to [`forward_with_features`] on the
+/// graph's own feature matrix.
 pub fn full_graph_forward(
     g: &Graph,
     params: &Params,
     kind: LayerKind,
     backend: &mut dyn Backend,
 ) -> Mat {
+    forward_with_features(g, params, kind, backend, &g.features)
+}
+
+/// Full-graph forward over an explicit feature matrix (`g.n` × feat):
+/// the serving path ([`crate::serve`]) runs queries through this so a
+/// query with fresh features reuses exactly the training kernels — and a
+/// query over the stored features is bit-identical to
+/// [`full_graph_forward`].
+pub fn forward_with_features(
+    g: &Graph,
+    params: &Params,
+    kind: LayerKind,
+    backend: &mut dyn Backend,
+    features: &Mat,
+) -> Mat {
+    assert_eq!(features.rows, g.n, "feature matrix must cover every node");
     let prop = match kind {
         LayerKind::Gcn => g.propagation_matrix(),
         LayerKind::SageMean => g.mean_propagation_matrix(),
     };
     let pid = backend.register_prop(&prop);
-    let mut h = g.features.clone();
+    forward_registered(pid, params, backend, features)
+}
+
+/// Forward over an **already-registered** propagation matrix — the
+/// serving hot path registers once per connection and runs many batches,
+/// skipping the per-query O(edges) matrix build/transpose. The layer
+/// loop here is the single forward implementation every entry point
+/// shares, so bit-identity between training-time evaluation and served
+/// logits holds by construction.
+pub fn forward_registered(
+    prop_id: usize,
+    params: &Params,
+    backend: &mut dyn Backend,
+    features: &Mat,
+) -> Mat {
+    let mut h = features.clone();
     let n_layers = params.layers.len();
     for (l, lp) in params.layers.iter().enumerate() {
-        let out = backend.layer_fwd(pid, &h, lp.w_self.as_ref(), &lp.w_neigh);
+        let out = backend.layer_fwd(prop_id, &h, lp.w_self.as_ref(), &lp.w_neigh);
         h = if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre };
     }
     h
@@ -228,11 +269,16 @@ mod tests {
 
     #[test]
     fn variant_parsing_roundtrip() {
-        for name in ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"] {
+        for name in Variant::NAMES {
             let v = Variant::parse(name, 0.95).unwrap();
             assert_eq!(v.name().to_ascii_lowercase(), name.replace("vanilla", "gcn"));
         }
-        assert!(Variant::parse("nope", 0.95).is_none());
+        // the parse error names every valid method, so CLI layers can
+        // surface it verbatim (satellite: no more bare "unknown variant")
+        let e = Variant::parse("nope", 0.95).unwrap_err();
+        for name in Variant::NAMES {
+            assert!(e.contains(name), "error '{e}' misses '{name}'");
+        }
     }
 
     #[test]

@@ -1,11 +1,14 @@
 //! Transport-generic per-rank runner + the threaded engine.
 //!
 //! [`run_rank`] is one rank's complete training schedule — the same
-//! dataflow as [`super::trainer::train`] — written against the
+//! dataflow as the sequential engine core
+//! ([`super::trainer::train_resumable`]) — written against the
 //! [`Transport`] contract, so the identical code drives:
 //!
-//! * [`train_threaded`]: one OS thread per partition over the in-process
-//!   [`Fabric`] (concurrent blocking receives, single process), and
+//! * [`run_threaded_ctl`]: one OS thread per partition over the
+//!   in-process [`Fabric`] (concurrent blocking receives, single
+//!   process) — the `Engine::Threaded` adapter behind
+//!   [`crate::session::Session`], and
 //! * the multi-process engine: one OS process per partition over
 //!   [`crate::net::TcpTransport`] (real localhost sockets), launched by
 //!   `pipegcn launch` / driven by [`crate::net::worker`].
@@ -46,7 +49,6 @@ use crate::runtime::Backend;
 use crate::tensor::{ops, Mat};
 use crate::util::json::{FileEmitter, Json};
 use crate::util::timer::Stopwatch;
-use std::sync::Arc;
 
 /// Result of a threaded run.
 pub struct ThreadedResult {
@@ -181,7 +183,8 @@ pub struct RankCtl<'a> {
 }
 
 /// Run rank `rank`'s full training schedule over `transport`, starting
-/// from a fresh state. Numerics match [`super::trainer::train`] exactly
+/// from a fresh state. Numerics match [`super::trainer::train_resumable`]
+/// exactly
 /// (same seeds ⇒ same parameters); returns the rank's per-epoch losses
 /// (**global** on rank 0, which drives the per-epoch loss reduction;
 /// this rank's partials elsewhere) and its final parameter copy
@@ -461,34 +464,121 @@ pub fn run_rank_ctl(
     Ok(losses)
 }
 
-/// Train with one thread per partition over the in-process [`Fabric`].
-/// Numerics match [`super::trainer::train`] exactly (same seeds ⇒ same
-/// parameters).
-pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
-    let plan = Arc::new(halo::build(g, pt, cfg.model.kind));
-    let k = plan.n_parts;
-    let fabric = Arc::new(Fabric::new(k));
-    let cfg = Arc::new(cfg.clone());
+/// Side-channel controls for [`run_threaded_ctl`] — the threaded
+/// engine's analogue of the per-rank [`RankCtl`]: checkpoint policy,
+/// resume directory, and a live rank-0 run log.
+#[derive(Default)]
+pub struct ThreadedCtl<'a> {
+    /// snapshot every rank's state into `policy.dir` every
+    /// `policy.every` epochs
+    pub ckpt: Option<&'a ckpt::Policy>,
+    /// restore the latest complete checkpoint under this directory and
+    /// train only the remaining epochs
+    pub resume: Option<&'a str>,
+    /// rank 0's live NDJSON run log (one row per epoch)
+    pub log: Option<&'a mut FileEmitter>,
+}
 
-    let mut handles = Vec::new();
-    for rank in 0..k {
-        let plan = plan.clone();
-        let fabric = fabric.clone();
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || {
-            run_rank(fabric.as_ref(), &plan, rank, &cfg)
-        }));
-    }
-    let mut per_rank: Vec<(Vec<f64>, Params)> = handles
-        .into_iter()
-        .map(|h| h.join().expect("worker thread panicked"))
-        .collect();
+/// The threaded engine core (the `Engine::Threaded` adapter behind
+/// [`crate::session::Session`]): one OS thread per partition over the
+/// in-process [`Fabric`], each running [`run_rank_ctl`] — so the
+/// checkpoint files, run-log rows, and loss bits are identical to the
+/// sequential and TCP engines. Returns the result plus the epoch the run
+/// started from (0 on a fresh run).
+///
+/// Every rank's state is restored (or initialized) *before* any thread
+/// starts, so a corrupt checkpoint is a clean error, not a stalled
+/// mesh. The one failure this engine cannot surface cleanly is a
+/// checkpoint **write** error mid-run on a single rank: that rank exits
+/// with the error while its peers block on its next message, stalling
+/// the run (a thread cannot die without taking the mesh's progress with
+/// it). Runs that need supervised fault tolerance belong on the TCP
+/// engine, whose launcher detects a dead worker and relaunches the mesh
+/// from the latest complete checkpoint.
+pub fn run_threaded_ctl(
+    g: &Graph,
+    pt: &Partitioning,
+    cfg: &TrainConfig,
+    ctl: ThreadedCtl<'_>,
+) -> crate::util::error::Result<(ThreadedResult, usize)> {
+    let plan = halo::build(g, pt, cfg.model.kind);
+    let k = plan.n_parts;
+    let start_epoch = match ctl.resume {
+        None => 0,
+        Some(dir) => {
+            let epoch = ckpt::latest_complete(dir, k)?.ok_or_else(|| {
+                crate::err_msg!("resume {dir}: no complete checkpoint for {k} ranks")
+            })?;
+            if epoch >= cfg.epochs {
+                crate::bail!(
+                    "resume {dir}: checkpoint epoch {epoch} already covers epochs {}",
+                    cfg.epochs
+                );
+            }
+            epoch
+        }
+    };
+    let states: Vec<TrainState> = match ctl.resume {
+        None => (0..k).map(|i| TrainState::init(cfg, &plan.parts[i])).collect(),
+        Some(dir) => (0..k)
+            .map(|i| {
+                TrainState::from_snapshot(ckpt::load(dir, start_epoch, i)?, cfg, &plan.parts[i])
+            })
+            .collect::<crate::util::error::Result<Vec<_>>>()?,
+    };
+    let fabric = Fabric::new(k);
+    let ckpt_policy = ctl.ckpt;
+    let mut log = ctl.log;
+    let plan_ref = &plan;
+    let fabric_ref = &fabric;
+    // what one rank's thread hands back: its losses and final state
+    type RankRun = crate::util::error::Result<(Vec<f64>, TrainState)>;
+    let results: Vec<RankRun> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(k);
+        for (rank, mut st) in states.into_iter().enumerate() {
+            let log_slot = if rank == 0 { log.take() } else { None };
+            handles.push(s.spawn(move || -> RankRun {
+                let rc = RankCtl {
+                    ckpt: ckpt_policy,
+                    log: log_slot,
+                    kill_after_epoch: None,
+                };
+                let losses = run_rank_ctl(fabric_ref, plan_ref, rank, cfg, &mut st, rc)?;
+                Ok((losses, st))
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
+    });
+    let mut per_rank =
+        results.into_iter().collect::<crate::util::error::Result<Vec<_>>>()?;
     // rank 0 already holds the global per-epoch losses (it drives the
     // per-epoch loss reduction, summing partials in rank order — the
     // same f64 order as the sequential engine, so sums stay bit-identical)
-    let (losses, params) = per_rank.swap_remove(0);
-    let (final_val, final_test) = super::evaluate(g, &params, cfg.model.kind);
-    ThreadedResult { losses, params, final_val, final_test, comm_bytes: fabric.total_bytes() }
+    let (losses, st0) = per_rank.swap_remove(0);
+    let (final_val, final_test) = super::evaluate(g, &st0.params, cfg.model.kind);
+    Ok((
+        ThreadedResult {
+            losses,
+            params: st0.params,
+            final_val,
+            final_test,
+            comm_bytes: fabric.total_bytes(),
+        },
+        start_epoch,
+    ))
+}
+
+/// Train with one thread per partition over the in-process [`Fabric`],
+/// fresh state, no checkpointing.
+#[deprecated(
+    since = "0.2.0",
+    note = "build the run through `session::Session` with \
+            `Engine::Threaded`, or call `run_threaded_ctl` directly"
+)]
+pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
+    run_threaded_ctl(g, pt, cfg, ThreadedCtl::default())
+        .expect("threaded run without checkpoint I/O cannot fail")
+        .0
 }
 
 #[cfg(test)]
@@ -498,6 +588,13 @@ mod tests {
     use crate::graph::presets;
     use crate::model::ModelConfig;
     use crate::partition::{partition, Method};
+    use std::sync::Arc;
+
+    /// The engine core without controls (shadows the deprecated
+    /// `train_threaded` shim these tests used to exercise).
+    fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
+        run_threaded_ctl(g, pt, cfg, ThreadedCtl::default()).unwrap().0
+    }
 
     fn cfg(g: &Graph, variant: Variant, dropout: f32) -> TrainConfig {
         TrainConfig {
@@ -528,7 +625,7 @@ mod tests {
         ] {
             let c = cfg(&g, variant, dropout);
             let mut b = crate::runtime::native::NativeBackend::new();
-            let seq = trainer::train(&g, &pt, &c, &mut b);
+            let seq = trainer::train_resumable(&g, &pt, &c, &mut b, None, None, None).unwrap();
             let thr = train_threaded(&g, &pt, &c);
             for (e, (a, l)) in seq.curve.iter().zip(&thr.losses).enumerate() {
                 assert!(
@@ -561,7 +658,7 @@ mod tests {
         let pt = partition(&g, 3, Method::Multilevel, 2);
         let c = cfg(&g, Variant::Pipe(PipeOpts::plain()), 0.0);
         let mut b = crate::runtime::native::NativeBackend::new();
-        let seq = trainer::train(&g, &pt, &c, &mut b);
+        let seq = trainer::train_resumable(&g, &pt, &c, &mut b, None, None, None).unwrap();
         let thr = train_threaded(&g, &pt, &c);
         // every epoch moves the same message sizes, so the full run is
         // setup + epochs × steady-state-epoch bytes
@@ -601,56 +698,38 @@ mod tests {
         assert_eq!(fabric.pending(), 0);
     }
 
-    /// A run driven through run_rank_ctl with checkpointing, then resumed
-    /// from the snapshot, must reproduce the uninterrupted loss curve
-    /// bit-for-bit (the determinism oracle behind crash recovery).
+    /// A run driven through run_threaded_ctl with checkpointing, then
+    /// resumed from a mid-run snapshot, must reproduce the uninterrupted
+    /// loss curve bit-for-bit (the determinism oracle behind crash
+    /// recovery).
     #[test]
     fn threaded_resume_from_checkpoint_is_bitwise_identical() {
         let g = presets::by_name("tiny").unwrap().build(42);
         let pt = partition(&g, 2, Method::Multilevel, 3);
         let c = cfg(&g, Variant::Pipe(PipeOpts::plain()), 0.3);
-        let plan = Arc::new(halo::build(&g, &pt, c.model.kind));
         let dir = format!("/tmp/pipegcn_thr_ckpt_{}", std::process::id());
         let _ = std::fs::remove_dir_all(&dir);
 
-        let run = |resume_epoch: Option<usize>, policy: Option<ckpt::Policy>| -> Vec<f64> {
-            let fabric = Arc::new(Fabric::new(2));
-            let cfg = Arc::new(c.clone());
-            let handles: Vec<_> = (0..2)
-                .map(|rank| {
-                    let fabric = fabric.clone();
-                    let cfg = cfg.clone();
-                    let plan = plan.clone();
-                    let policy = policy.clone();
-                    let dir = dir.clone();
-                    std::thread::spawn(move || {
-                        let mut st = match resume_epoch {
-                            None => TrainState::init(&cfg, &plan.parts[rank]),
-                            Some(e) => TrainState::from_snapshot(
-                                ckpt::load(&dir, e, rank).unwrap(),
-                                &cfg,
-                                &plan.parts[rank],
-                            )
-                            .unwrap(),
-                        };
-                        let ctl = RankCtl { ckpt: policy.as_ref(), ..RankCtl::default() };
-                        run_rank_ctl(fabric.as_ref(), &plan, rank, &cfg, &mut st, ctl).unwrap()
-                    })
-                })
-                .collect();
-            let mut per_rank: Vec<Vec<f64>> =
-                handles.into_iter().map(|h| h.join().unwrap()).collect();
-            per_rank.swap_remove(0)
-        };
-
-        let full = run(None, Some(ckpt::Policy { dir: dir.clone(), every: 2 }));
+        let policy = ckpt::Policy { dir: dir.clone(), every: 2 };
+        let ctl = ThreadedCtl { ckpt: Some(&policy), ..ThreadedCtl::default() };
+        let (full, start) = run_threaded_ctl(&g, &pt, &c, ctl).unwrap();
+        assert_eq!(start, 0);
         assert_eq!(ckpt::latest_complete(&dir, 2).unwrap(), Some(6));
-        // resume from the mid-run epoch-4 snapshot: epochs 5..6
-        let resumed = run(Some(4), None);
-        assert_eq!(resumed.len(), 2);
-        for (i, (a, b)) in full[4..].iter().zip(&resumed).enumerate() {
+        // drop the final checkpoint so the resume lands on the mid-run
+        // epoch-4 snapshot (latest_complete must skip to it): epochs 5..6
+        std::fs::remove_dir_all(ckpt::epoch_dir(&dir, 6)).unwrap();
+        let ctl = ThreadedCtl { resume: Some(&dir), ..ThreadedCtl::default() };
+        let (resumed, start) = run_threaded_ctl(&g, &pt, &c, ctl).unwrap();
+        assert_eq!(start, 4);
+        assert_eq!(resumed.losses.len(), 2);
+        for (i, (a, b)) in full.losses[4..].iter().zip(&resumed.losses).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "epoch {}: {a} vs {b}", 5 + i);
         }
+        // resuming past --epochs is a diagnostic, not an empty run
+        let mut short = c.clone();
+        short.epochs = 3;
+        let ctl = ThreadedCtl { resume: Some(&dir), ..ThreadedCtl::default() };
+        assert!(run_threaded_ctl(&g, &pt, &short, ctl).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -60,18 +60,31 @@ fn write_rows(dst: &mut Mat, lo: usize, payload: &[f32]) {
 
 /// Train on `g` partitioned by `pt` with `cfg`, executing layer math on
 /// `backend`.
+#[deprecated(
+    since = "0.2.0",
+    note = "build the run through `session::Session` (or call the \
+            `train_resumable` engine core directly when an explicit \
+            backend is needed)"
+)]
 pub fn train(
     g: &Graph,
     pt: &Partitioning,
     cfg: &TrainConfig,
     backend: &mut dyn Backend,
 ) -> TrainResult {
-    train_logged(g, pt, cfg, backend, None)
+    train_resumable(g, pt, cfg, backend, None, None, None)
+        .expect("training without checkpoint I/O cannot fail")
 }
 
-/// [`train`] with an optional streaming NDJSON run log: one line per
-/// epoch (`epoch`, `loss`, `val`, `epoch_ms`, `bytes`), flushed as it
-/// happens so crashed runs keep their history (`--log <path>`).
+/// [`train_resumable`] without checkpointing: an optional streaming
+/// NDJSON run log only — one line per epoch (`epoch`, `loss`, `val`,
+/// `epoch_ms`, `bytes`), flushed as it happens so crashed runs keep
+/// their history (`--log <path>`).
+#[deprecated(
+    since = "0.2.0",
+    note = "build the run through `session::Session` (`.log(path)` / \
+            `.log_emitter(..)`) or call `train_resumable` directly"
+)]
 pub fn train_logged(
     g: &Graph,
     pt: &Partitioning,
@@ -83,7 +96,9 @@ pub fn train_logged(
         .expect("training without checkpoint I/O cannot fail")
 }
 
-/// [`train_logged`] with crash-safe checkpoint/restore: snapshot every
+/// The sequential engine core (the `Engine::Sequential` adapter behind
+/// [`crate::session::Session`]): optional streaming NDJSON run log, plus
+/// crash-safe checkpoint/restore — snapshot every
 /// rank's [`TrainState`] into `ckpt_policy.dir` every `ckpt_policy.every`
 /// epochs, and/or resume from the latest complete checkpoint under
 /// `resume_dir`. A resumed run reproduces the uninterrupted run
@@ -552,6 +567,17 @@ mod tests {
         presets::by_name("tiny").unwrap().build(42)
     }
 
+    /// The engine core without checkpoint I/O (shadows the deprecated
+    /// `train` shim these tests used to exercise).
+    fn train(
+        g: &Graph,
+        pt: &Partitioning,
+        cfg: &TrainConfig,
+        backend: &mut dyn crate::runtime::Backend,
+    ) -> TrainResult {
+        train_resumable(g, pt, cfg, backend, None, None, None).unwrap()
+    }
+
     fn cfg_for(g: &Graph, variant: Variant, epochs: usize, dropout: f32) -> TrainConfig {
         TrainConfig {
             model: ModelConfig::sage(g.feat_dim(), 16, 2, g.labels.n_classes(), dropout),
@@ -801,7 +827,7 @@ mod tests {
         )
         .unwrap();
         let mut b = NativeBackend::new();
-        let r = train_logged(&g, &pk, &cfg, &mut b, Some(&mut em));
+        let r = train_resumable(&g, &pk, &cfg, &mut b, Some(&mut em), None, None).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let rows = crate::util::json::parse_ndjson(&text).unwrap();
         assert_eq!(rows.len(), 1 + cfg.epochs); // header + one per epoch

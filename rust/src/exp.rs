@@ -1,13 +1,20 @@
-//! Experiment harness shared by the CLI, the examples, and every bench:
-//! builds a preset dataset, partitions it, trains a variant, and projects
-//! the recorded schedule onto the paper's simulated testbeds.
+//! Experiment harness: builds a preset dataset, partitions it, derives
+//! the training config ([`try_prepare`] — shared by every engine so
+//! distributed runs are guaranteed the same inputs as the sequential
+//! reference), and projects recorded schedules onto the paper's
+//! simulated testbeds.
+//!
+//! The old `run`/`run_logged`/`run_resumable` entry points are
+//! deprecated shims over [`crate::session::Session`] — build runs
+//! through the Session builder and use
+//! [`RunReport::into_output`](crate::session::RunReport::into_output)
+//! to feed [`simulate`] / [`full_works`].
 
-use crate::coordinator::{trainer, Optimizer, TrainConfig, TrainResult, Variant};
+use crate::coordinator::{Optimizer, TrainConfig, TrainResult, Variant};
 use crate::graph::presets::{by_name, Preset};
 use crate::graph::Graph;
 use crate::model::ModelConfig;
 use crate::partition::{partition, Method, Partitioning};
-use crate::runtime::native::NativeBackend;
 use crate::sim::{epoch_time, DeviceProfile, EpochBreakdown, Mode, PartitionWork};
 use crate::comm::topology::Topology;
 
@@ -56,25 +63,15 @@ pub fn try_prepare(
             crate::graph::presets::names()
         )
     })?;
-    let variant = Variant::parse(variant_name, opts.gamma).ok_or_else(|| {
-        crate::err_msg!(
-            "unknown method '{variant_name}' (known: gcn, pipegcn, pipegcn-g, \
-             pipegcn-f, pipegcn-gf)"
-        )
-    })?;
+    // Variant::parse's error already names every valid method
+    let variant = Variant::parse(variant_name, opts.gamma)?;
     if n_parts == 0 {
         crate::bail!("partition count must be at least 1");
     }
     let graph = preset.build(opts.seed);
     let parts = partition(&graph, n_parts, Method::Multilevel, opts.seed);
     let cfg = TrainConfig {
-        model: ModelConfig::sage(
-            preset.feat_dim,
-            preset.hidden,
-            preset.layers,
-            preset.n_classes,
-            preset.dropout,
-        ),
+        model: ModelConfig::from_preset(preset),
         variant,
         optimizer: Optimizer::Adam,
         lr: preset.lr,
@@ -97,11 +94,25 @@ pub fn prepare(
 }
 
 /// Build, partition, train (sequential engine).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session::preset(..) … .run()?.into_output()`"
+)]
 pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts) -> RunOutput {
-    run_logged(preset_name, n_parts, variant_name, opts, None)
+    crate::session::Session::preset(preset_name)
+        .parts(n_parts)
+        .variant(variant_name)
+        .run_opts(opts)
+        .run()
+        .unwrap_or_else(|e| panic!("{e}"))
+        .into_output()
 }
 
 /// [`run`] with an optional streaming NDJSON run log (`--log <path>`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` with `.log_emitter(..)` / `.log(path)`"
+)]
 pub fn run_logged(
     preset_name: &str,
     n_parts: usize,
@@ -109,14 +120,24 @@ pub fn run_logged(
     opts: RunOpts,
     log: Option<&mut crate::util::json::FileEmitter>,
 ) -> RunOutput {
-    run_resumable(preset_name, n_parts, variant_name, opts, log, None, None)
-        .unwrap_or_else(|e| panic!("{e}"))
+    let mut s = crate::session::Session::preset(preset_name)
+        .parts(n_parts)
+        .variant(variant_name)
+        .run_opts(opts);
+    if let Some(em) = log {
+        s = s.log_emitter(em);
+    }
+    s.run().unwrap_or_else(|e| panic!("{e}")).into_output()
 }
 
 /// [`run_logged`] with crash-safe checkpoint/restore: snapshot into
 /// `ckpt.dir` every `ckpt.every` epochs, and/or resume from the latest
 /// complete checkpoint under `resume_dir`
-/// (see [`trainer::train_resumable`]).
+/// (see [`crate::coordinator::trainer::train_resumable`]).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::Session` with `.ckpt(..)` / `.resume(dir)`"
+)]
 pub fn run_resumable(
     preset_name: &str,
     n_parts: usize,
@@ -126,11 +147,20 @@ pub fn run_resumable(
     ckpt: Option<&crate::ckpt::Policy>,
     resume_dir: Option<&str>,
 ) -> crate::util::error::Result<RunOutput> {
-    let (preset, graph, parts, cfg) = try_prepare(preset_name, n_parts, variant_name, opts)?;
-    let mut backend = NativeBackend::new();
-    let result =
-        trainer::train_resumable(&graph, &parts, &cfg, &mut backend, log, ckpt, resume_dir)?;
-    Ok(RunOutput { preset, graph, parts, result })
+    let mut s = crate::session::Session::preset(preset_name)
+        .parts(n_parts)
+        .variant(variant_name)
+        .run_opts(opts);
+    if let Some(em) = log {
+        s = s.log_emitter(em);
+    }
+    if let Some(policy) = ckpt {
+        s = s.ckpt(policy.clone());
+    }
+    if let Some(dir) = resume_dir {
+        s = s.resume(dir);
+    }
+    Ok(s.run()?.into_output())
 }
 
 /// Scale a recorded per-iteration work description to the mirrored
@@ -276,6 +306,9 @@ pub fn sim_epochs_per_s(b: &EpochBreakdown) -> f64 {
 }
 
 #[cfg(test)]
+// the deprecated shims stay covered until they are removed: they must
+// keep routing through Session unchanged
+#[allow(deprecated)]
 mod tests {
     use super::*;
 

@@ -28,6 +28,9 @@
 //!   atomic writes and latest-complete-checkpoint discovery. A resumed
 //!   run reproduces the uninterrupted run bit-for-bit
 //!   (`--ckpt-dir` / `--ckpt-every` / `--resume`).
+//!   [`model::artifact`] distills a checkpoint into a standalone
+//!   serving artifact (`ModelConfig` + weights only,
+//!   `pipegcn export-params`).
 //! * [`net`] — the real transport: length-prefixed binary frames over
 //!   TCP ([`net::TcpTransport`]), a rank-0 rendezvous/peer-table
 //!   bootstrap, and the `launch`/`worker` multi-process runtime that
@@ -49,6 +52,19 @@
 //! * [`coordinator`] — the paper's contribution: vanilla partition-parallel
 //!   training and PipeGCN (Algorithm 1) with staleness smoothing (§3.4),
 //!   metric/error probes, and epoch time breakdowns.
+//! * [`session`] — **the crate's front door**: the [`session::Session`]
+//!   builder collapses every run configuration (dataset, variant,
+//!   threads, run log, checkpoints, fault injection) behind one `run()`
+//!   returning a unified [`session::RunReport`], with the execution
+//!   strategy picked by [`session::Engine`]
+//!   (`Sequential | Threaded | Tcp | TcpWorker`). The old
+//!   `exp::run*`/`trainer::train*`/`train_threaded` entry points are
+//!   deprecated shims over it.
+//! * [`serve`] — the online workload: `pipegcn serve` loads a params
+//!   artifact, binds the `net::frame` protocol, and answers
+//!   feature→logit queries bit-identical to
+//!   [`coordinator::full_graph_forward`]; `pipegcn query` is the
+//!   client (batched latency/QPS reporting).
 //! * [`baselines`] — ROC-like and CAGNET-like communication cost models.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
@@ -67,4 +83,6 @@ pub mod runtime;
 pub mod coordinator;
 pub mod baselines;
 pub mod exp;
+pub mod session;
+pub mod serve;
 pub mod perf;

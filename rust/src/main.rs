@@ -1,24 +1,35 @@
 //! `pipegcn` — launcher CLI for the PipeGCN reproduction.
 //!
+//! Every training subcommand is a thin flag-parser over
+//! [`pipegcn::session::Session`] — one builder, one `run()`, with the
+//! engine picked per subcommand:
+//!
 //! ```text
-//! pipegcn train      --dataset reddit-sim --parts 4 --method pipegcn-gf [--epochs N] [--gamma G] [--log run.ndjson]
-//! pipegcn launch     --parts 4 --dataset reddit-sim [--epochs N]  (multi-process training over localhost TCP)
-//! pipegcn worker     --rank 0 --parts 4 --coord 127.0.0.1:PORT    (one rank; normally spawned by `launch`)
-//! pipegcn gen-graph  --dataset yelp-sim --out graph.bin [--nodes N]
-//! pipegcn partition  --dataset reddit-sim --parts 4 [--algo multilevel|hash|range|bfs]
-//! pipegcn sim        --dataset reddit-sim --parts 4 --method pipegcn  (simulated epoch breakdown)
-//! pipegcn presets    (list dataset presets)
+//! pipegcn train         --dataset reddit-sim --parts 4 --method pipegcn-gf   (Engine::Sequential)
+//! pipegcn launch        --parts 4 --dataset reddit-sim [--epochs N]          (Engine::Tcp: K processes over localhost TCP)
+//! pipegcn worker        --rank 0 --parts 4 --coord 127.0.0.1:PORT            (Engine::TcpWorker; normally spawned by `launch`)
+//! pipegcn export-params --from-ckpt DIR --dataset <preset> --parts K --out params.pgp
+//! pipegcn serve         --params params.pgp --dataset <preset> [--bind ADDR] (feature→logit inference server)
+//! pipegcn query         --addr HOST:PORT --nodes 0,1,2 [--repeat N]          (client + latency/QPS report)
+//! pipegcn gen-graph     --dataset yelp-sim --out graph.bin [--nodes N]
+//! pipegcn partition     --dataset reddit-sim --parts 4 [--algo multilevel|hash|range|bfs]
+//! pipegcn sim           --dataset reddit-sim --parts 4 --method pipegcn      (simulated epoch breakdown)
+//! pipegcn bench         [--smoke]                                            (kernel/epoch/serve throughput sweep)
+//! pipegcn presets       (list dataset presets)
 //! ```
 
+use pipegcn::ckpt;
 use pipegcn::coordinator::Variant;
 use pipegcn::exp::{self, RunOpts};
 use pipegcn::graph::{io, presets};
-use pipegcn::net::{launch::LaunchOpts, worker::WorkerOpts};
+use pipegcn::model::{artifact, ModelConfig};
 use pipegcn::partition::{partition, quality, Method};
+use pipegcn::session::{Engine, Session};
 use pipegcn::sim::Mode;
 use pipegcn::util::cli::Args;
 use pipegcn::util::error::{Context, Result};
 use pipegcn::util::json::{FileEmitter, Json};
+use pipegcn::util::timer::Stopwatch;
 use pipegcn::util::{fmt_bytes, fmt_secs};
 
 fn main() -> Result<()> {
@@ -27,6 +38,9 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "launch" => cmd_launch(&args),
         "worker" => cmd_worker(&args),
+        "export-params" => cmd_export_params(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
         "gen-graph" => cmd_gen_graph(&args),
         "partition" => cmd_partition(&args),
         "sim" => cmd_sim(&args),
@@ -74,138 +88,59 @@ fn print_help() {
          \x20             complete checkpoint, up to --max-restarts times)\n\
          \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
          \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
+         \x20 export-params  --from-ckpt DIR --dataset <preset> --parts K [--epoch N]\n\
+         \x20            [--out params.pgp]  (distill a training checkpoint into a\n\
+         \x20             standalone serving artifact: model shape + weights only)\n\
+         \x20 serve      --params params.pgp --dataset <preset> [--seed S] [--bind HOST:PORT]\n\
+         \x20            [--addr-file F] [--max-conns N] [--threads N]\n\
+         \x20            (feature→logit inference over the frame protocol; logits are\n\
+         \x20             bit-identical to the full-graph forward)\n\
+         \x20 query      --addr HOST:PORT --nodes 0,1,2 [--repeat N] [--report lat.ndjson]\n\
+         \x20            (one batched query per repeat; prints p50/p99 latency and QPS)\n\
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
          \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
          \x20 bench      [--smoke] [--threads 1,2,4] [--out BENCH_kernels.json]\n\
          \x20            [--preset <name>] [--parts K] [--epochs N]\n\
-         \x20            (kernel + end-to-end throughput sweep, NDJSON rows)\n\
+         \x20            (kernel + end-to-end epoch + serve-latency sweep, NDJSON rows)\n\
          \x20 presets\n\
-         train/launch/worker/sim/bench accept --threads N (kernel worker\n\
+         train/launch/worker/sim/bench/serve accept --threads N (kernel worker\n\
          threads; default: PIPEGCN_THREADS or the available parallelism)"
     );
 }
 
-fn cmd_bench(args: &Args) -> Result<()> {
-    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs"])?;
-    let smoke = args.get_bool("smoke", false);
-    let opts = pipegcn::perf::BenchOpts {
-        out: args.get_str("out", "BENCH_kernels.json"),
-        threads: args.get_usize_list("threads", &[1, 2, 4]),
-        smoke,
-        preset: args.get_str("preset", if smoke { "tiny" } else { "reddit-sim" }),
-        parts: args.get_usize("parts", if smoke { 2 } else { 4 }),
-        epochs: args.get_usize("epochs", if smoke { 2 } else { 3 }),
-    };
-    if opts.threads.iter().any(|&t| t == 0) {
-        pipegcn::bail!("--threads entries must be at least 1");
+/// Shared flag plumbing for the three Session-backed training
+/// subcommands: experiment knobs, checkpoint policy, resume, run log.
+fn session_from_flags<'a>(args: &Args, dataset: &str, method: &str) -> Result<Session<'a>> {
+    let mut s = Session::preset(dataset)
+        .parts(args.get_usize("parts", 2))
+        .variant(method)
+        .epochs(args.get_usize("epochs", 0))
+        .seed(args.get_u64("seed", 1))
+        .gamma(args.get_f32("gamma", 0.95));
+    if args.has("threads") {
+        s = s.threads(args.get_usize("threads", 0));
     }
-    pipegcn::perf::run_bench(&opts)
-}
-
-fn cmd_launch(args: &Args) -> Result<()> {
-    args.assert_known(&[
-        "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
-        "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
-    ])?;
-    if args.has("threads") && args.get_usize("threads", 0) == 0 {
-        pipegcn::bail!("--threads must be at least 1");
-    }
-    let opts = LaunchOpts {
-        parts: args.get_usize("parts", 2),
-        dataset: args.get_str("dataset", "tiny"),
-        method: args.get_str("method", "pipegcn"),
-        epochs: args.get_usize("epochs", 0),
-        seed: args.get_u64("seed", 1),
-        gamma: args.get_f32("gamma", 0.95),
-        log: args.get_opt("log").map(String::from),
-        out: args.get_opt("out").map(String::from),
-        ckpt_dir: args.get_opt("ckpt-dir").map(String::from),
-        ckpt_every: args.get_usize("ckpt-every", 1),
-        resume: args.get_opt("resume").map(String::from),
-        max_restarts: args.get_usize("max-restarts", 3),
-        fail_rank: args.get_opt("fail-rank").map(|_| args.get_usize("fail-rank", 0)),
-        fail_epoch: args.get_opt("fail-epoch").map(|_| args.get_usize("fail-epoch", 0)),
-        threads: args.get_opt("threads").map(|_| args.get_usize("threads", 1)),
-    };
-    // validate before spawning: a bad flag must fail here, not as K
-    // worker panics followed by a rendezvous timeout
-    if Variant::parse(&opts.method, opts.gamma).is_none() {
-        pipegcn::bail!("bad --method '{}'", opts.method);
-    }
-    if presets::by_name(&opts.dataset).is_none() {
-        pipegcn::bail!(
-            "unknown preset '{}' (try `pipegcn presets` for the list)",
-            opts.dataset
-        );
-    }
-    if opts.ckpt_dir.is_none() && args.has("ckpt-every") {
-        pipegcn::bail!("--ckpt-every needs --ckpt-dir");
-    }
-    if opts.ckpt_dir.is_some() && opts.ckpt_every == 0 {
-        pipegcn::bail!("--ckpt-every must be at least 1");
-    }
-    if opts.fail_rank.is_some() != opts.fail_epoch.is_some() {
-        pipegcn::bail!("--fail-rank and --fail-epoch (fault injection) go together");
-    }
-    if let Some(dir) = &opts.resume {
-        if pipegcn::ckpt::latest_complete(dir, opts.parts)?.is_none() {
-            pipegcn::bail!(
-                "--resume {dir}: no complete checkpoint for {} ranks",
-                opts.parts
-            );
+    match args.get_opt("ckpt-dir") {
+        Some(dir) => {
+            s = s.ckpt(ckpt::Policy {
+                dir: dir.to_string(),
+                every: args.get_usize("ckpt-every", 1),
+            })
+        }
+        None => {
+            if args.has("ckpt-every") {
+                pipegcn::bail!("--ckpt-every needs --ckpt-dir");
+            }
         }
     }
-    println!(
-        "launch {} × {} worker processes over localhost TCP (method {})",
-        opts.dataset, opts.parts, opts.method
-    );
-    let bin = std::env::current_exe().context("resolving the pipegcn binary path")?;
-    pipegcn::net::launch::launch(&bin, &opts)
-}
-
-fn cmd_worker(args: &Args) -> Result<()> {
-    args.assert_known(&[
-        "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
-        "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads",
-    ])?;
-    apply_threads_flag(args)?;
-    let coord = args
-        .get_opt("coord")
-        .context("worker requires --coord HOST:PORT (normally set by `pipegcn launch`)")?
-        .to_string();
-    let opts = WorkerOpts {
-        rank: args.get_usize("rank", 0),
-        parts: args.get_usize("parts", 2),
-        coord,
-        dataset: args.get_str("dataset", "tiny"),
-        method: args.get_str("method", "pipegcn"),
-        epochs: args.get_usize("epochs", 0),
-        seed: args.get_u64("seed", 1),
-        gamma: args.get_f32("gamma", 0.95),
-        log: args.get_opt("log").map(String::from),
-        out: args.get_opt("out").map(String::from),
-        ckpt_dir: args.get_opt("ckpt-dir").map(String::from),
-        ckpt_every: args.get_usize("ckpt-every", 1),
-        resume: args.get_opt("resume").map(String::from),
-        fail_epoch: args.get_opt("fail-epoch").map(|_| args.get_usize("fail-epoch", 0)),
-    };
-    // bad preset/method names surface as diagnostics (not deep panics)
-    // via exp::try_prepare, run_worker's first call
-    if let Some(summary) = pipegcn::net::worker::run_worker(&opts)? {
-        for (i, loss) in summary.losses.iter().enumerate() {
-            println!("epoch {:4}  loss {:.4}", summary.start_epoch + i + 1, loss);
-        }
-        println!(
-            "final: loss {:.6} | val {:.4} test {:.4} | rank-0 sent {} payload ({} on the wire)",
-            summary.losses.last().unwrap_or(&f64::NAN),
-            summary.final_val,
-            summary.final_test,
-            fmt_bytes(summary.payload_bytes_sent),
-            fmt_bytes(summary.wire_bytes_sent),
-        );
+    if let Some(dir) = args.get_opt("resume") {
+        s = s.resume(dir);
     }
-    Ok(())
+    if let Some(path) = args.get_opt("log") {
+        s = s.log(path);
+    }
+    Ok(s)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -213,74 +148,29 @@ fn cmd_train(args: &Args) -> Result<()> {
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
         "eval-every", "log", "ckpt-dir", "ckpt-every", "resume", "threads",
     ])?;
-    apply_threads_flag(args)?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
     let method = args.get_str("method", "pipegcn");
-    let opts = RunOpts {
-        epochs: args.get_usize("epochs", 0),
-        seed: args.get_u64("seed", 1),
-        probe_errors: args.get_bool("probe-errors", false),
-        gamma: args.get_f32("gamma", 0.95),
-        eval_every: args.get_usize("eval-every", 5),
-    };
-    let variant = Variant::parse(&method, opts.gamma)
-        .ok_or_else(|| pipegcn::err_msg!("bad --method '{method}'"))?;
-    let ckpt_policy = args.get_opt("ckpt-dir").map(|dir| pipegcn::ckpt::Policy {
-        dir: dir.to_string(),
-        every: args.get_usize("ckpt-every", 1),
-    });
-    if ckpt_policy.is_none() && args.has("ckpt-every") {
-        pipegcn::bail!("--ckpt-every needs --ckpt-dir");
-    }
-    if let Some(p) = &ckpt_policy {
-        if p.every == 0 {
-            pipegcn::bail!("--ckpt-every must be at least 1");
-        }
-    }
-    let resume = args.get_opt("resume").map(String::from);
+    // parse up front for the banner; the error names every valid method
+    let variant = Variant::parse(&method, args.get_f32("gamma", 0.95))?;
+    let session = session_from_flags(args, &dataset, &method)?
+        .eval_every(args.get_usize("eval-every", 5))
+        .probe_errors(args.get_bool("probe-errors", false))
+        .engine(Engine::Sequential);
     println!(
         "train {dataset} parts={parts} method={} epochs={}",
         variant.name(),
-        if opts.epochs > 0 { opts.epochs } else { presets::by_name(&dataset).map(|p| p.epochs).unwrap_or(0) }
-    );
-    let out = match args.get_opt("log") {
-        Some(log_path) => {
-            let header = Json::obj()
-                .set("dataset", dataset.as_str())
-                .set("parts", parts)
-                .set("method", variant.name())
-                .set("seed", opts.seed)
-                .set("engine", "sequential");
-            // resuming appends, so the pre-crash epoch rows survive
-            let mut emitter = if resume.is_some() {
-                FileEmitter::append_or_create(log_path, header)
-            } else {
-                FileEmitter::create(log_path, header)
-            }
-            .with_context(|| format!("creating run log {log_path}"))?;
-            let out = exp::run_resumable(
-                &dataset,
-                parts,
-                &method,
-                opts,
-                Some(&mut emitter),
-                ckpt_policy.as_ref(),
-                resume.as_deref(),
-            )?;
-            println!("streamed {} epochs to {log_path}", emitter.rows());
-            out
+        if args.get_usize("epochs", 0) > 0 {
+            args.get_usize("epochs", 0)
+        } else {
+            presets::by_name(&dataset).map(|p| p.epochs).unwrap_or(0)
         }
-        None => exp::run_resumable(
-            &dataset,
-            parts,
-            &method,
-            opts,
-            None,
-            ckpt_policy.as_ref(),
-            resume.as_deref(),
-        )?,
-    };
+    );
+    let report = session.run()?;
+    if report.log_rows > 0 {
+        println!("streamed {} epochs to {}", report.log_rows, args.get_str("log", ""));
+    }
+    let out = report.into_output();
     let r = &out.result;
     for e in &r.curve {
         if !e.val.is_nan() {
@@ -326,6 +216,211 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+fn cmd_launch(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
+        "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
+    ])?;
+    let dataset = args.get_str("dataset", "tiny");
+    let method = args.get_str("method", "pipegcn");
+    let parts = args.get_usize("parts", 2);
+    let mut session = session_from_flags(args, &dataset, &method)?
+        .engine(Engine::Tcp { max_restarts: args.get_usize("max-restarts", 3) });
+    if let Some(path) = args.get_opt("out") {
+        session = session.out(path);
+    }
+    match (args.has("fail-rank"), args.has("fail-epoch")) {
+        (true, true) => {
+            session = session
+                .fail_epoch(args.get_usize("fail-rank", 0), args.get_usize("fail-epoch", 0));
+        }
+        (false, false) => {}
+        _ => pipegcn::bail!("--fail-rank and --fail-epoch (fault injection) go together"),
+    }
+    println!(
+        "launch {dataset} × {parts} worker processes over localhost TCP (method {method})"
+    );
+    // Session validates preset/method/resume before spawning anything
+    let report = session.run()?;
+    println!(
+        "launch complete: {} epochs | final loss {:.6} | val {:.4} test {:.4}",
+        report.start_epoch + report.losses.len(),
+        report.losses.last().copied().unwrap_or(f64::NAN),
+        report.final_val,
+        report.final_test,
+    );
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
+        "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads",
+    ])?;
+    let coord = args
+        .get_opt("coord")
+        .context("worker requires --coord HOST:PORT (normally set by `pipegcn launch`)")?
+        .to_string();
+    let rank = args.get_usize("rank", 0);
+    let dataset = args.get_str("dataset", "tiny");
+    let method = args.get_str("method", "pipegcn");
+    let mut session = session_from_flags(args, &dataset, &method)?
+        .engine(Engine::TcpWorker { rank, coord });
+    if let Some(path) = args.get_opt("out") {
+        session = session.out(path);
+    }
+    if args.has("fail-epoch") {
+        session = session.fail_epoch(rank, args.get_usize("fail-epoch", 0));
+    }
+    // bad preset/method names surface as diagnostics (not deep panics)
+    // via exp::try_prepare, the worker adapter's first call
+    let report = session.run()?;
+    if rank == 0 {
+        for (i, loss) in report.losses.iter().enumerate() {
+            println!("epoch {:4}  loss {:.4}", report.start_epoch + i + 1, loss);
+        }
+        println!(
+            "final: loss {:.6} | val {:.4} test {:.4} | rank-0 sent {} payload ({} on the wire)",
+            report.losses.last().unwrap_or(&f64::NAN),
+            report.final_val,
+            report.final_test,
+            fmt_bytes(report.comm_bytes),
+            fmt_bytes(report.wire_bytes),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_export_params(args: &Args) -> Result<()> {
+    args.assert_known(&["from-ckpt", "dataset", "parts", "epoch", "out"])?;
+    let dir = args
+        .get_opt("from-ckpt")
+        .context("export-params requires --from-ckpt DIR (a training checkpoint directory)")?;
+    let dataset = args.get_str("dataset", "tiny");
+    let parts = args.get_usize("parts", 2);
+    let out = args.get_str("out", "params.pgp");
+    let preset = presets::by_name(&dataset)
+        .ok_or_else(|| pipegcn::err_msg!("unknown preset '{dataset}'"))?;
+    // the same preset→model mapping training used, so shapes cannot drift
+    let cfg = ModelConfig::from_preset(preset);
+    let epoch = args.get_opt("epoch").map(|_| args.get_usize("epoch", 0));
+    let (pf, epoch) = artifact::export_from_ckpt(dir, parts, &cfg, epoch)?;
+    artifact::save(&out, &pf)?;
+    println!(
+        "wrote {out}: {} layers, {} parameters (epoch-{epoch} checkpoint of {dir})",
+        pf.params.layers.len(),
+        pf.params.n_elems(),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "params", "dataset", "seed", "bind", "addr-file", "max-conns", "threads",
+    ])?;
+    apply_threads_flag(args)?;
+    let opts = pipegcn::serve::ServeOpts {
+        params_path: args
+            .get_opt("params")
+            .context("serve requires --params FILE (see `pipegcn export-params`)")?
+            .to_string(),
+        dataset: args.get_str("dataset", "tiny"),
+        seed: args.get_u64("seed", 1),
+        bind: args.get_str("bind", "127.0.0.1:0"),
+    };
+    let server = pipegcn::serve::Server::bind(&opts)?;
+    let ctx = server.ctx();
+    println!(
+        "serving {} on {} ({} nodes, feat {}, {} classes)",
+        opts.dataset,
+        server.addr(),
+        ctx.graph.n,
+        ctx.graph.feat_dim(),
+        ctx.n_classes,
+    );
+    if let Some(path) = args.get_opt("addr-file") {
+        std::fs::write(path, server.addr())
+            .with_context(|| format!("writing addr file {path}"))?;
+    }
+    let max_conns = args.get_opt("max-conns").map(|_| args.get_usize("max-conns", 1));
+    server.run(max_conns)
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    args.assert_known(&["addr", "nodes", "repeat", "report"])?;
+    let addr = args.get_opt("addr").context("query requires --addr HOST:PORT")?;
+    let ids: Vec<u32> =
+        args.get_usize_list("nodes", &[0]).iter().map(|&v| v as u32).collect();
+    let repeat = args.get_usize("repeat", 1).max(1);
+    let mut client = pipegcn::serve::Client::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    let mut lats_ms = Vec::with_capacity(repeat);
+    let mut logits = None;
+    let total_watch = Stopwatch::start();
+    for _ in 0..repeat {
+        let w = Stopwatch::start();
+        let m = client.query(&ids)?;
+        lats_ms.push(w.elapsed_secs() * 1e3);
+        logits = Some(m);
+    }
+    let total_secs = total_watch.elapsed_secs();
+    client.close();
+    let logits = logits.expect("repeat >= 1 always yields a response");
+    if logits.data.is_empty() {
+        pipegcn::bail!("server returned no logits");
+    }
+    lats_ms.sort_by(f64::total_cmp);
+    let p50 = pipegcn::perf::percentile(&lats_ms, 0.50);
+    let p99 = pipegcn::perf::percentile(&lats_ms, 0.99);
+    let qps = repeat as f64 / total_secs.max(1e-12);
+    // peek at the first queried node so "non-empty logits" is visible
+    let row0: Vec<String> =
+        logits.row(0).iter().take(8).map(|v| format!("{v:.4}")).collect();
+    println!("node {} logits: [{}{}]", ids[0], row0.join(", "), if logits.cols > 8 { ", …" } else { "" });
+    println!(
+        "ok: {} nodes × {} classes | p50 {:.3} ms  p99 {:.3} ms | {:.1} qps ({repeat} queries)",
+        logits.rows, logits.cols, p50, p99, qps
+    );
+    if let Some(path) = args.get_opt("report") {
+        let mut em = FileEmitter::create(
+            path,
+            Json::obj()
+                .set("addr", addr)
+                .set("batch", ids.len())
+                .set("repeat", repeat),
+        )
+        .with_context(|| format!("creating latency report {path}"))?;
+        for (i, ms) in lats_ms.iter().enumerate() {
+            em.emit(&Json::obj().set("query", i).set("ms", *ms))?;
+        }
+        em.emit(
+            &Json::obj()
+                .set("p50_ms", p50)
+                .set("p99_ms", p99)
+                .set("qps", qps),
+        )?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs"])?;
+    let smoke = args.get_bool("smoke", false);
+    let opts = pipegcn::perf::BenchOpts {
+        out: args.get_str("out", "BENCH_kernels.json"),
+        threads: args.get_usize_list("threads", &[1, 2, 4]),
+        smoke,
+        preset: args.get_str("preset", if smoke { "tiny" } else { "reddit-sim" }),
+        parts: args.get_usize("parts", if smoke { 2 } else { 4 }),
+        epochs: args.get_usize("epochs", if smoke { 2 } else { 3 }),
+    };
+    if opts.threads.iter().any(|&t| t == 0) {
+        pipegcn::bail!("--threads entries must be at least 1");
+    }
+    pipegcn::perf::run_bench(&opts)
 }
 
 fn cmd_gen_graph(args: &Args) -> Result<()> {
@@ -384,13 +479,15 @@ fn cmd_sim(args: &Args) -> Result<()> {
         eval_every: 0,
         ..Default::default()
     };
-    // validate before the (expensive) experiment runs, not after it
-    let variant = Variant::parse(&method, 0.95)
-        .ok_or_else(|| pipegcn::err_msg!("bad --method '{method}'"))?;
-    if presets::by_name(&dataset).is_none() {
-        pipegcn::bail!("unknown preset '{dataset}' (try `pipegcn presets` for the list)");
-    }
-    let out = exp::run(&dataset, parts, &method, opts);
+    // validated up front (the Session would too, but the mode choice
+    // below needs the parsed variant anyway)
+    let variant = Variant::parse(&method, 0.95)?;
+    let out = Session::preset(&dataset)
+        .parts(parts)
+        .variant(&method)
+        .run_opts(opts)
+        .run()?
+        .into_output();
     let mode = if variant.is_pipelined() { Mode::Pipelined } else { Mode::Vanilla };
     let breakdown = match args.get_opt("nodes-x-gpus") {
         Some(spec) => {

@@ -1,0 +1,276 @@
+//! Standalone inference artifact: `ModelConfig` + weights, nothing else.
+//!
+//! A training checkpoint ([`crate::ckpt`]) snapshots everything a resumed
+//! run needs — Adam moments, stale PipeGCN buffers, the epoch counter.
+//! Serving needs none of that, so `pipegcn export-params` distills a
+//! checkpoint into this much smaller file: the model shape and the final
+//! weights, in the same dependency-free binary framing (little-endian
+//! fields, f32 weights as raw bit patterns, trailing CRC-32), versioned
+//! and magic-tagged so a torn or mismatched file is rejected with a
+//! diagnostic instead of serving garbage logits.
+//!
+//! `pipegcn serve` loads this file; it never touches checkpoint
+//! directories, so a serving host needs exactly one artifact.
+
+use super::{LayerKind, LayerParams, ModelConfig, Params};
+use crate::ckpt::codec::{put_mat, put_u32, Cursor};
+use crate::ckpt::crc32;
+use crate::util::error::{Context, Result};
+
+/// File magic of a params artifact ("PipeGcn ParaMs").
+pub const MAGIC: [u8; 4] = *b"PGPM";
+/// Current artifact format version.
+pub const VERSION: u32 = 1;
+
+/// The decoded artifact: enough to rebuild the forward pass, nothing
+/// more.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamsFile {
+    pub config: ModelConfig,
+    pub params: Params,
+}
+
+impl ParamsFile {
+    /// Serialize to the versioned, CRC-trailed binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 4 * self.params.n_elems());
+        out.extend_from_slice(&MAGIC);
+        put_u32(&mut out, VERSION);
+        out.push(self.config.kind.code());
+        put_u32(&mut out, self.config.dropout.to_bits());
+        put_u32(&mut out, self.config.dims.len() as u32);
+        for &d in &self.config.dims {
+            put_u32(&mut out, d as u32);
+        }
+        put_u32(&mut out, self.params.layers.len() as u32);
+        for l in &self.params.layers {
+            put_mat(&mut out, &l.w_neigh);
+            out.push(l.w_self.is_some() as u8);
+            if let Some(w) = &l.w_self {
+                put_mat(&mut out, w);
+            }
+        }
+        let crc = crc32(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    /// Parse an artifact, verifying CRC, magic, version, and that every
+    /// weight shape matches the declared layer dims.
+    pub fn decode(buf: &[u8]) -> std::result::Result<ParamsFile, String> {
+        if buf.len() < MAGIC.len() + 4 + 4 {
+            return Err(format!("params file too short ({} bytes)", buf.len()));
+        }
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        let computed = crc32(body);
+        if stored != computed {
+            return Err(format!("CRC mismatch: stored {stored:#010x}, computed {computed:#010x}"));
+        }
+        let mut c = Cursor::new(body);
+        let magic = c.take(4)?;
+        if magic != MAGIC {
+            return Err(format!("bad magic {magic:?} (not a params artifact)"));
+        }
+        let version = c.u32()?;
+        if version != VERSION {
+            return Err(format!(
+                "unsupported params-file version {version} (this build reads {VERSION})"
+            ));
+        }
+        let kind_code = c.u8()?;
+        let kind = LayerKind::from_code(kind_code)
+            .ok_or_else(|| format!("bad layer-kind code {kind_code}"))?;
+        let dropout = f32::from_bits(c.u32()?);
+        let n_dims = c.u32()? as usize;
+        if !(2..=64).contains(&n_dims) {
+            return Err(format!("implausible dim count {n_dims}"));
+        }
+        let mut dims = Vec::with_capacity(n_dims);
+        for _ in 0..n_dims {
+            dims.push(c.u32()? as usize);
+        }
+        let n_layers = c.u32()? as usize;
+        if n_layers != n_dims - 1 {
+            return Err(format!("{n_layers} layers do not match {n_dims} dims"));
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let w_neigh = c.mat()?;
+            let w_self = if c.u8()? != 0 { Some(c.mat()?) } else { None };
+            let want = (dims[l], dims[l + 1]);
+            if (w_neigh.rows, w_neigh.cols) != want {
+                return Err(format!(
+                    "layer {l}: w_neigh is {}×{}, dims say {}×{}",
+                    w_neigh.rows, w_neigh.cols, want.0, want.1
+                ));
+            }
+            if let Some(w) = &w_self {
+                if (w.rows, w.cols) != want {
+                    return Err(format!(
+                        "layer {l}: w_self is {}×{}, dims say {}×{}",
+                        w.rows, w.cols, want.0, want.1
+                    ));
+                }
+            }
+            layers.push(LayerParams { w_self, w_neigh });
+        }
+        if c.pos() != body.len() {
+            return Err(format!("trailing bytes in params file ({} of {})", c.pos(), body.len()));
+        }
+        Ok(ParamsFile { config: ModelConfig { kind, dims, dropout }, params: Params { layers } })
+    }
+}
+
+/// Atomically write the artifact (temp file + rename, like [`crate::ckpt`]).
+pub fn save(path: &str, pf: &ParamsFile) -> Result<()> {
+    let p = std::path::Path::new(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating params dir {}", dir.display()))?;
+        }
+    }
+    let tmp = format!("{path}.tmp");
+    std::fs::write(&tmp, pf.encode()).with_context(|| format!("writing params file {tmp}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("publishing params file {path}"))?;
+    Ok(())
+}
+
+/// Load and verify a params artifact.
+pub fn load(path: &str) -> Result<ParamsFile> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading params file {path}"))?;
+    ParamsFile::decode(&bytes).map_err(|e| crate::err_msg!("corrupt params file {path}: {e}"))
+}
+
+/// Distill a training checkpoint into a params artifact: take rank 0's
+/// snapshot of `epoch` (default: the latest complete checkpoint for
+/// `n_ranks`), drop the optimizer/staleness state, and unflatten the
+/// parameters into `cfg`'s shapes. Returns the artifact and the epoch it
+/// came from.
+pub fn export_from_ckpt(
+    dir: &str,
+    n_ranks: usize,
+    cfg: &ModelConfig,
+    epoch: Option<usize>,
+) -> Result<(ParamsFile, usize)> {
+    let epoch = match epoch {
+        Some(e) => e,
+        None => crate::ckpt::latest_complete(dir, n_ranks)?.ok_or_else(|| {
+            crate::err_msg!("no complete checkpoint for {n_ranks} ranks under {dir}")
+        })?,
+    };
+    let snap = crate::ckpt::load(dir, epoch, 0)?;
+    // parameters are replicated across ranks, so rank 0's copy is the model
+    let mut params = Params::init(cfg, &mut crate::util::rng::Rng::new(0));
+    if snap.flat.len() != params.n_elems() {
+        crate::bail!(
+            "checkpoint {dir} (epoch {epoch}) holds {} parameters but the dims {:?} model \
+             needs {} — wrong --dataset for this checkpoint?",
+            snap.flat.len(),
+            cfg.dims,
+            params.n_elems()
+        );
+    }
+    params.unflatten(&snap.flat);
+    Ok((ParamsFile { config: cfg.clone(), params }, epoch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample() -> ParamsFile {
+        let config = ModelConfig::sage(6, 5, 2, 3, 0.25);
+        let params = Params::init(&config, &mut Rng::new(11));
+        ParamsFile { config, params }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_bitwise() {
+        let pf = sample();
+        let back = ParamsFile::decode(&pf.encode()).unwrap();
+        assert_eq!(back, pf);
+        // GCN configs (no w_self) roundtrip too, and NaN bit patterns
+        // survive exactly
+        let config = ModelConfig::gcn(4, 4, 2, 2, 0.0);
+        let mut params = Params::init(&config, &mut Rng::new(2));
+        params.layers[0].w_neigh.data[0] = f32::from_bits(0x7FC0_1234);
+        let pf = ParamsFile { config, params };
+        let back = ParamsFile::decode(&pf.encode()).unwrap();
+        assert!(back.params.layers.iter().all(|l| l.w_self.is_none()));
+        assert_eq!(back.params.layers[0].w_neigh.data[0].to_bits(), 0x7FC0_1234);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = sample().encode();
+        for pos in [0, 6, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x20;
+            assert!(ParamsFile::decode(&bad).is_err(), "flip at {pos} accepted");
+        }
+        assert!(ParamsFile::decode(&bytes[..bytes.len() - 5]).is_err());
+        assert!(ParamsFile::decode(&[]).is_err());
+    }
+
+    #[test]
+    fn version_is_enforced() {
+        let mut bytes = sample().encode();
+        bytes[4] = 9; // version field
+        let body_len = bytes.len() - 4;
+        let crc = crc32(&bytes[..body_len]).to_le_bytes();
+        bytes[body_len..].copy_from_slice(&crc);
+        let err = ParamsFile::decode(&bytes).unwrap_err();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let pf = sample();
+        let path = format!("/tmp/pipegcn_params_{}.pgp", std::process::id());
+        save(&path, &pf).unwrap();
+        assert_eq!(load(&path).unwrap(), pf);
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_from_ckpt_takes_latest_complete_and_checks_shape() {
+        let dir = format!("/tmp/pipegcn_export_{}", std::process::id());
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = ModelConfig::sage(6, 5, 2, 3, 0.0);
+        let params = Params::init(&cfg, &mut Rng::new(4));
+        let flat = params.flatten();
+        for epoch in [2u32, 5] {
+            for rank in 0..2u32 {
+                let snap = crate::ckpt::RankState {
+                    rank,
+                    n_ranks: 2,
+                    epoch,
+                    adam_t: epoch as u64,
+                    flat: flat.clone(),
+                    adam_m: vec![0.0; flat.len()],
+                    adam_v: vec![0.0; flat.len()],
+                    feat_buf: Vec::new(),
+                    grad_buf: Vec::new(),
+                };
+                crate::ckpt::save(&dir, &snap).unwrap();
+            }
+        }
+        let (pf, epoch) = export_from_ckpt(&dir, 2, &cfg, None).unwrap();
+        assert_eq!(epoch, 5);
+        assert_eq!(pf.params.flatten(), flat);
+        assert_eq!(pf.config, cfg);
+        let (_, epoch) = export_from_ckpt(&dir, 2, &cfg, Some(2)).unwrap();
+        assert_eq!(epoch, 2);
+        // a mismatched model shape is a diagnostic, not a bad unflatten
+        let wrong = ModelConfig::sage(7, 5, 2, 3, 0.0);
+        let e = export_from_ckpt(&dir, 2, &wrong, None).unwrap_err();
+        assert!(e.to_string().contains("parameters"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -6,6 +6,7 @@
 //! artifacts.
 
 pub mod adam;
+pub mod artifact;
 
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
@@ -22,17 +23,38 @@ pub enum LayerKind {
 }
 
 impl LayerKind {
-    pub fn parse(s: &str) -> Option<LayerKind> {
+    /// Parse a layer-kind name. The error names every accepted spelling,
+    /// so a CLI typo comes back with the list instead of a bare
+    /// "unknown" (same contract as [`crate::coordinator::Variant::parse`]).
+    pub fn parse(s: &str) -> Result<LayerKind, String> {
         match s {
-            "gcn" => Some(LayerKind::Gcn),
-            "sage" | "sage-mean" | "graphsage" => Some(LayerKind::SageMean),
+            "gcn" => Ok(LayerKind::Gcn),
+            "sage" | "sage-mean" | "graphsage" => Ok(LayerKind::SageMean),
+            _ => Err(format!(
+                "unknown layer kind '{s}' (known: gcn, sage, sage-mean, graphsage)"
+            )),
+        }
+    }
+
+    /// Stable on-disk encoding (used by [`artifact`] params files).
+    pub fn code(self) -> u8 {
+        match self {
+            LayerKind::Gcn => 0,
+            LayerKind::SageMean => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<LayerKind> {
+        match c {
+            0 => Some(LayerKind::Gcn),
+            1 => Some(LayerKind::SageMean),
             _ => None,
         }
     }
 }
 
 /// Model hyper-parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelConfig {
     pub kind: LayerKind,
     /// layer widths: `[f_in, hidden, ..., n_classes]` (len = layers+1)
@@ -55,6 +77,14 @@ impl ModelConfig {
         let mut cfg = Self::sage(f_in, hidden, layers, n_classes, dropout);
         cfg.kind = LayerKind::Gcn;
         cfg
+    }
+
+    /// The model a dataset preset trains. Training (`exp::try_prepare`),
+    /// `pipegcn export-params`, and `pipegcn serve` all derive their
+    /// shapes from this one place, so a checkpoint exported for a preset
+    /// can never silently disagree with the model that produced it.
+    pub fn from_preset(p: &crate::graph::presets::Preset) -> ModelConfig {
+        ModelConfig::sage(p.feat_dim, p.hidden, p.layers, p.n_classes, p.dropout)
     }
 
     pub fn n_layers(&self) -> usize {
@@ -202,6 +232,20 @@ mod tests {
         acc.add_assign(&p);
         let want: Vec<f32> = p.flatten().iter().map(|x| 2.0 * x).collect();
         crate::util::prop::assert_close(&acc.flatten(), &want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn layer_kind_parse_lists_valid_values_on_error() {
+        assert_eq!(LayerKind::parse("gcn"), Ok(LayerKind::Gcn));
+        for s in ["sage", "sage-mean", "graphsage"] {
+            assert_eq!(LayerKind::parse(s), Ok(LayerKind::SageMean));
+        }
+        let e = LayerKind::parse("mlp").unwrap_err();
+        assert!(e.contains("sage-mean") && e.contains("gcn"), "{e}");
+        for k in [LayerKind::Gcn, LayerKind::SageMean] {
+            assert_eq!(LayerKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(LayerKind::from_code(9), None);
     }
 
     #[test]

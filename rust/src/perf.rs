@@ -1,15 +1,18 @@
 //! `pipegcn bench` — kernel and end-to-end throughput tracking.
 //!
-//! Runs the training hot-path kernels (SpMM and the three GEMM variants)
-//! plus a short end-to-end epoch benchmark at a sweep of thread counts,
-//! and streams one NDJSON row per measurement through
-//! [`crate::util::json::Emitter`] into `BENCH_kernels.json`
-//! (`{kernel, shape, threads, ns_iter, gflops}`), so the perf trajectory
-//! is tracked from PR 3 on. `--smoke` shrinks shapes and iteration
-//! counts to CI scale.
+//! Runs the training hot-path kernels (SpMM and the three GEMM variants),
+//! a short end-to-end epoch benchmark, and a serve-path latency/QPS sweep
+//! (batched feature→logit queries against an in-process
+//! [`crate::serve::Server`]) at a sweep of thread counts, and streams one
+//! NDJSON row per measurement through [`crate::util::json::Emitter`] into
+//! `BENCH_kernels.json` (`{kernel, shape, threads, ns_iter, gflops}`;
+//! serve rows add `{p50_ms, p99_ms, qps}`), so the perf trajectory is
+//! tracked from PR 3 on. `--smoke` shrinks shapes and iteration counts
+//! to CI scale.
 
 use crate::exp::RunOpts;
 use crate::runtime::pool;
+use crate::session::Session;
 use crate::tensor::{Csr, Mat};
 use crate::util::error::{Context, Result};
 use crate::util::json::{FileEmitter, Json};
@@ -59,6 +62,15 @@ fn bench_kernel(
     )
     .with_context(|| format!("writing bench row for {name}"))?;
     Ok(gflops)
+}
+
+/// Nearest-rank percentile of an **ascending-sorted** latency list —
+/// the one definition shared by the serve bench rows and `pipegcn
+/// query`'s report, so their p50/p99 are the same statistic.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Deterministic random CSR for benches and the parallel-kernel tests
@@ -138,8 +150,12 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
     for &t in &o.threads {
         pool::set_threads(t);
         let run_opts = RunOpts { epochs: o.epochs, eval_every: 0, ..Default::default() };
-        let out =
-            crate::exp::run_resumable(&o.preset, o.parts, "pipegcn", run_opts, None, None, None)?;
+        let out = Session::preset(&o.preset)
+            .parts(o.parts)
+            .variant("pipegcn")
+            .run_opts(run_opts)
+            .run()?
+            .into_output();
         let n_epochs = out.result.curve.len().max(1) as f64;
         let mean_ms = out.result.curve.iter().map(|e| e.epoch_ms).sum::<f64>() / n_epochs;
         let flops: f64 = out
@@ -159,6 +175,64 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
         )
         .context("writing epoch bench row")?;
         gf_at.push(("epoch", t, gfs));
+    }
+
+    // serve sweep: batched feature→logit query latency (p50/p99) and QPS
+    // against an in-process server, at the sweep's min and max thread
+    // counts (the default 1,2,4 sweep measures at 1 and 4 threads). Each
+    // query runs a real full-graph batch inference — the kernels on the
+    // pool — so the thread count genuinely moves the numbers.
+    {
+        let t0 = *o.threads.iter().min().unwrap();
+        let tm = *o.threads.iter().max().unwrap();
+        let preset = crate::graph::presets::by_name(&o.preset)
+            .ok_or_else(|| crate::err_msg!("unknown preset '{}'", o.preset))?;
+        let cfg = crate::model::ModelConfig::from_preset(preset);
+        let params = crate::model::Params::init(&cfg, &mut Rng::new(7));
+        let batch = if o.smoke { 16 } else { 64 };
+        let queries = if o.smoke { 5 } else { 50 };
+        let ids: Vec<u32> = (0..batch as u32).collect();
+        let mut serve_threads = vec![t0];
+        if tm != t0 {
+            serve_threads.push(tm);
+        }
+        for &t in &serve_threads {
+            pool::set_threads(t);
+            let server = crate::serve::Server::from_parts(
+                preset.build(1),
+                cfg.clone(),
+                params.clone(),
+            )?;
+            let addr = server.addr().to_string();
+            let handle = std::thread::spawn(move || server.run(Some(1)));
+            let mut client = crate::serve::Client::connect(&addr)?;
+            let _ = client.query(&ids)?; // warmup
+            let total_watch = Stopwatch::start();
+            let mut lats_ms = Vec::with_capacity(queries);
+            for _ in 0..queries {
+                let w = Stopwatch::start();
+                let m = client.query(&ids)?;
+                lats_ms.push(w.elapsed_secs() * 1e3);
+                debug_assert_eq!(m.rows, batch);
+            }
+            let total_secs = total_watch.elapsed_secs();
+            client.close();
+            handle.join().expect("serve thread panicked")?;
+            lats_ms.sort_by(f64::total_cmp);
+            let p50 = percentile(&lats_ms, 0.50);
+            let p99 = percentile(&lats_ms, 0.99);
+            em.emit(
+                &Json::obj()
+                    .set("kernel", "serve")
+                    .set("shape", format!("{}x{batch}", o.preset))
+                    .set("threads", t)
+                    .set("ns_iter", p50 * 1e6)
+                    .set("p50_ms", p50)
+                    .set("p99_ms", p99)
+                    .set("qps", queries as f64 / total_secs.max(1e-12)),
+            )
+            .context("writing serve bench row")?;
+        }
     }
 
     // summary: geo-mean spmm+GEMM speedup, max vs min thread count
@@ -203,6 +277,15 @@ mod tests {
     // NOTE: the full smoke-bench roundtrip test lives in
     // `tests/parallel_kernels.rs` — it reconfigures the global pool,
     // which the lib-test binary reserves for `runtime::pool`'s own test.
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.99), 5.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+    }
 
     #[test]
     fn empty_threads_list_rejected() {

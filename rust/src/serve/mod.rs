@@ -1,0 +1,388 @@
+//! Online inference: `pipegcn serve` / `pipegcn query`.
+//!
+//! The serving workload the ROADMAP calls for, built on the pieces that
+//! already exist: a [`Server`] loads a params artifact
+//! ([`crate::model::artifact`] — weights + model shape, no optimizer
+//! state), rebuilds its preset graph deterministically, binds a TCP
+//! listener speaking the existing [`crate::net::frame`] protocol, and
+//! answers feature→logit queries by running the batch through
+//! [`crate::coordinator::forward_registered`] — the same kernels (on
+//! the [`crate::runtime::pool`]) and numerics as training, so a query
+//! over the stored features is **bit-identical** to
+//! [`crate::coordinator::full_graph_forward`] (asserted in
+//! `tests/serve_e2e.rs`). The propagation matrix is built once at bind
+//! time and registered once per connection; the per-query cost is the
+//! forward kernels alone.
+//!
+//! ## Wire protocol
+//!
+//! One connection, many queries. The client introduces itself with a
+//! `Hello` frame, then sends one `Data` frame per query and reads one
+//! `Data` frame back; `Shutdown` (or EOF) ends the connection. A query
+//! payload is bit-packed into the f32 channel exactly like the training
+//! control messages:
+//!
+//! ```text
+//! [0]            batch size n (u32 bits)
+//! [1 .. 1+n]     node ids (u32 bits each)
+//! [1+n ..]       optional feature override, n × feat_dim floats,
+//!                row i replacing node ids[i]'s stored features
+//! ```
+//!
+//! The response payload is the batch's logits, n × n_classes floats.
+//! Payloads travel as raw bit patterns end to end, so logits reach the
+//! client with the exact bits the kernels produced. Queries larger than
+//! one frame (64 MiB) are rejected — batch accordingly.
+
+use crate::comm::{Phase, Tag};
+use crate::coordinator::forward_registered;
+use crate::graph::{presets, Graph};
+use crate::model::{artifact, LayerKind, ModelConfig, Params};
+use crate::net::frame::{self, Frame};
+use crate::runtime::native::NativeBackend;
+use crate::runtime::Backend;
+use crate::tensor::{Csr, Mat};
+use crate::util::error::{Context, Result};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+/// How to stand up a server from the CLI.
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// params artifact written by `pipegcn export-params`
+    pub params_path: String,
+    /// preset whose graph the params were trained on
+    pub dataset: String,
+    /// dataset build seed — must match the training run's
+    pub seed: u64,
+    /// listen address (`127.0.0.1:0` picks an ephemeral port)
+    pub bind: String,
+}
+
+/// Everything a query needs, shared read-only across connections. The
+/// propagation matrix is built **once** here — per-query work is just
+/// the forward kernels, not an O(edges) matrix rebuild.
+pub struct ServeCtx {
+    pub graph: Graph,
+    /// normalized propagation matrix for `kind`, prebuilt from `graph`
+    pub prop: Csr,
+    pub params: Params,
+    pub kind: LayerKind,
+    pub n_classes: usize,
+}
+
+/// A bound (not yet accepting) inference server.
+pub struct Server {
+    listener: TcpListener,
+    ctx: Arc<ServeCtx>,
+    addr: String,
+}
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+impl Server {
+    /// Load the artifact, rebuild the preset graph, validate that the
+    /// model fits it, and bind the listener.
+    pub fn bind(o: &ServeOpts) -> Result<Server> {
+        let pf = artifact::load(&o.params_path)?;
+        let preset = presets::by_name(&o.dataset).ok_or_else(|| {
+            crate::err_msg!("unknown preset '{}' (try: {:?})", o.dataset, presets::names())
+        })?;
+        let graph = preset.build(o.seed);
+        Server::from_parts_on(graph, pf.config, pf.params, &o.bind)
+    }
+
+    /// Stand up a server from in-memory parts (tests, benches, library
+    /// embedding) on an ephemeral localhost port.
+    pub fn from_parts(graph: Graph, config: ModelConfig, params: Params) -> Result<Server> {
+        Server::from_parts_on(graph, config, params, "127.0.0.1:0")
+    }
+
+    fn from_parts_on(
+        graph: Graph,
+        config: ModelConfig,
+        params: Params,
+        bind: &str,
+    ) -> Result<Server> {
+        if config.dims[0] != graph.feat_dim() {
+            crate::bail!(
+                "params expect feature dim {} but the graph has {} — wrong dataset or seed?",
+                config.dims[0],
+                graph.feat_dim()
+            );
+        }
+        let n_classes = *config.dims.last().unwrap();
+        if n_classes != graph.labels.n_classes() {
+            crate::bail!(
+                "params produce {} classes but the graph has {} — wrong dataset or seed?",
+                n_classes,
+                graph.labels.n_classes()
+            );
+        }
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?.to_string();
+        let prop = match config.kind {
+            LayerKind::Gcn => graph.propagation_matrix(),
+            LayerKind::SageMean => graph.mean_propagation_matrix(),
+        };
+        Ok(Server {
+            listener,
+            ctx: Arc::new(ServeCtx { graph, prop, params, kind: config.kind, n_classes }),
+            addr,
+        })
+    }
+
+    /// The bound address (`host:port`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Shared query context (library embedding).
+    pub fn ctx(&self) -> Arc<ServeCtx> {
+        self.ctx.clone()
+    }
+
+    /// Accept connections, one handler thread each. With `max_conns`,
+    /// return after that many connections finish (deterministic
+    /// shutdown for tests and the CI smoke job); without it, serve
+    /// forever with handler threads detached, so nothing accumulates
+    /// per connection. A malformed query closes its connection with a
+    /// logged diagnostic — it never takes the server down.
+    pub fn run(self, max_conns: Option<usize>) -> Result<()> {
+        let mut handles = Vec::new();
+        let mut served = 0usize;
+        loop {
+            if let Some(m) = max_conns {
+                if served >= m {
+                    break;
+                }
+            }
+            let (stream, peer) =
+                self.listener.accept().context("accepting a query connection")?;
+            served += 1;
+            let ctx = self.ctx.clone();
+            let handle = std::thread::spawn(move || {
+                if let Err(e) = handle_conn(&ctx, stream) {
+                    eprintln!("serve: connection {peer}: {e}");
+                }
+            });
+            // only a bounded run joins its handlers; an unbounded server
+            // must not grow a handle per connection forever
+            if max_conns.is_some() {
+                handles.push(handle);
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Serve one client connection: loop over query frames until shutdown.
+/// The propagation matrix is registered with the connection's backend
+/// exactly once — queries pay only for the forward kernels.
+fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
+    let mut backend = NativeBackend::new();
+    let prop_id = backend.register_prop(&ctx.prop);
+    loop {
+        match frame::read_frame(&mut stream)? {
+            None | Some(Frame::Shutdown { .. }) => return Ok(()),
+            Some(Frame::Hello { .. }) => {}
+            Some(Frame::Data { tag, payload, .. }) => {
+                let logits =
+                    answer(ctx, &mut backend, prop_id, &payload).map_err(io_err)?;
+                frame::write_frame(
+                    &mut stream,
+                    &Frame::Data { src: 0, dst: 1, tag, payload: logits },
+                )?;
+                stream.flush()?;
+            }
+            Some(other) => {
+                return Err(io_err(format!("unexpected frame in a query stream: {other:?}")))
+            }
+        }
+    }
+}
+
+/// Decode one query payload and run the batch inference. Validation
+/// errors come back as messages (the connection is closed with a
+/// diagnostic, the server keeps running).
+fn answer(
+    ctx: &ServeCtx,
+    backend: &mut dyn Backend,
+    prop_id: usize,
+    payload: &[f32],
+) -> std::result::Result<Vec<f32>, String> {
+    if payload.is_empty() {
+        return Err("empty query".to_string());
+    }
+    let n = payload[0].to_bits() as usize;
+    if n == 0 {
+        return Err("query names no nodes".to_string());
+    }
+    if payload.len() < 1 + n {
+        return Err(format!("query claims {n} ids but carries {}", payload.len() - 1));
+    }
+    let ids: Vec<u32> = payload[1..1 + n].iter().map(|v| v.to_bits()).collect();
+    for &id in &ids {
+        if id as usize >= ctx.graph.n {
+            return Err(format!(
+                "node id {id} out of range (graph has {} nodes)",
+                ctx.graph.n
+            ));
+        }
+    }
+    let feats = &payload[1 + n..];
+    let fd = ctx.graph.feat_dim();
+    let logits = if feats.is_empty() {
+        forward_registered(prop_id, &ctx.params, backend, &ctx.graph.features)
+    } else {
+        if feats.len() != n * fd {
+            return Err(format!(
+                "feature override must be {n}×{fd} values, got {}",
+                feats.len()
+            ));
+        }
+        let mut features = ctx.graph.features.clone();
+        for (i, &id) in ids.iter().enumerate() {
+            features.set_row(id as usize, &feats[i * fd..(i + 1) * fd]);
+        }
+        forward_registered(prop_id, &ctx.params, backend, &features)
+    };
+    let mut out = Vec::with_capacity(n * ctx.n_classes);
+    for &id in &ids {
+        out.extend_from_slice(logits.row(id as usize));
+    }
+    Ok(out)
+}
+
+/// A blocking query client for one server connection.
+pub struct Client {
+    stream: TcpStream,
+    next_query: u32,
+}
+
+impl Client {
+    /// Connect and introduce ourselves.
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let mut stream = TcpStream::connect(addr)?;
+        frame::write_frame(&mut stream, &Frame::Hello { rank: 0, addr: String::new() })?;
+        stream.flush()?;
+        Ok(Client { stream, next_query: 1 })
+    }
+
+    /// Logits for `ids` over the graph's stored features — bit-identical
+    /// to the server-side full-graph forward. Returns an
+    /// `ids.len() × n_classes` matrix, one row per queried node.
+    pub fn query(&mut self, ids: &[u32]) -> std::io::Result<Mat> {
+        self.query_impl(ids, None)
+    }
+
+    /// Logits for `ids` with fresh features (row i of `features`
+    /// replaces node `ids[i]`'s stored row) — the online feature-update
+    /// scenario.
+    pub fn query_with_features(&mut self, ids: &[u32], features: &Mat) -> std::io::Result<Mat> {
+        self.query_impl(ids, Some(features))
+    }
+
+    fn query_impl(&mut self, ids: &[u32], features: Option<&Mat>) -> std::io::Result<Mat> {
+        if ids.is_empty() {
+            return Err(io_err("a query must name at least one node".to_string()));
+        }
+        if let Some(f) = features {
+            if f.rows != ids.len() {
+                return Err(io_err(format!(
+                    "feature override has {} rows for {} ids",
+                    f.rows,
+                    ids.len()
+                )));
+            }
+        }
+        let n_feats = features.map(|f| f.data.len()).unwrap_or(0);
+        let mut payload = Vec::with_capacity(1 + ids.len() + n_feats);
+        payload.push(f32::from_bits(ids.len() as u32));
+        payload.extend(ids.iter().map(|&v| f32::from_bits(v)));
+        if let Some(f) = features {
+            payload.extend_from_slice(&f.data);
+        }
+        let tag = Tag::new(self.next_query, 0, Phase::FwdFeat);
+        self.next_query += 1;
+        frame::write_frame(&mut self.stream, &Frame::Data { src: 1, dst: 0, tag, payload })?;
+        self.stream.flush()?;
+        match frame::read_frame(&mut self.stream)? {
+            Some(Frame::Data { payload, .. }) => {
+                if payload.is_empty() || payload.len() % ids.len() != 0 {
+                    return Err(io_err(format!(
+                        "logits payload of {} values does not shape into {} rows",
+                        payload.len(),
+                        ids.len()
+                    )));
+                }
+                let cols = payload.len() / ids.len();
+                Ok(Mat::from_vec(ids.len(), cols, payload))
+            }
+            other => Err(io_err(format!("expected a logits frame, got {other:?}"))),
+        }
+    }
+
+    /// Graceful goodbye (the server also tolerates a plain disconnect).
+    pub fn close(mut self) {
+        let _ = frame::write_frame(&mut self.stream, &Frame::Shutdown { src: 1 });
+        let _ = self.stream.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_ctx() -> (Graph, ModelConfig, Params) {
+        let p = presets::by_name("tiny").unwrap();
+        let g = p.build(1);
+        let cfg = ModelConfig::from_preset(p);
+        let params = Params::init(&cfg, &mut Rng::new(3));
+        (g, cfg, params)
+    }
+
+    #[test]
+    fn shape_mismatches_are_diagnostics() {
+        let (g, mut cfg, params) = tiny_ctx();
+        cfg.dims[0] += 1;
+        let e = Server::from_parts(g, cfg, params).err().expect("should fail");
+        assert!(e.to_string().contains("feature dim"), "{e}");
+    }
+
+    #[test]
+    fn malformed_queries_rejected_without_killing_the_server() {
+        let (g, cfg, params) = tiny_ctx();
+        let n = g.n;
+        let prop = g.mean_propagation_matrix();
+        let ctx = ServeCtx {
+            graph: g,
+            prop,
+            params,
+            kind: cfg.kind,
+            n_classes: *cfg.dims.last().unwrap(),
+        };
+        let mut backend = NativeBackend::new();
+        let pid = backend.register_prop(&ctx.prop);
+        let mut ask = |payload: &[f32]| answer(&ctx, &mut backend, pid, payload);
+        assert!(ask(&[]).is_err());
+        assert!(ask(&[f32::from_bits(0)]).is_err());
+        // claims 3 ids, carries 1
+        assert!(ask(&[f32::from_bits(3), f32::from_bits(0)]).is_err());
+        // out-of-range id
+        assert!(ask(&[f32::from_bits(1), f32::from_bits(n as u32)]).is_err());
+        // wrong feature-override length
+        assert!(ask(&[f32::from_bits(1), f32::from_bits(0), 1.0]).is_err());
+        // a valid query still works on the same connection state
+        let ok = ask(&[f32::from_bits(1), f32::from_bits(0)]).unwrap();
+        assert_eq!(ok.len(), ctx.n_classes);
+    }
+}

@@ -1,0 +1,724 @@
+//! The crate's front door: one builder for every way to run training.
+//!
+//! Historically each concern (logging, checkpointing, threads, fault
+//! injection) grew its own entry point — `train`/`train_logged`/
+//! `train_resumable`, `exp::run`/`run_logged`/`run_resumable`,
+//! `run_rank`/`run_rank_ctl`, `train_threaded` — nine near-duplicates,
+//! each threading a different subset of options by hand. [`Session`]
+//! collapses them: one builder, one [`run`](Session::run), one
+//! [`RunReport`], with the execution strategy picked by
+//! [`Engine`]:
+//!
+//! * [`Engine::Sequential`] — every rank round-robin on one thread
+//!   ([`trainer::train_resumable`]); the only engine that captures work
+//!   descriptions and error probes, so it feeds the simulator.
+//! * [`Engine::Threaded`] — one OS thread per partition over the
+//!   in-process fabric ([`threaded::run_threaded_ctl`]).
+//! * [`Engine::Tcp`] — one OS *process* per partition over real
+//!   localhost sockets ([`crate::net::launch`]), supervised, with
+//!   crash recovery from checkpoints.
+//! * [`Engine::TcpWorker`] — a single rank of a TCP mesh
+//!   ([`crate::net::worker`]; normally spawned by the `Tcp` engine).
+//!
+//! The engines are interchangeable: the schedule is deterministic
+//! (staleness lives in message tags), so the loss curve is bit-identical
+//! across all of them — asserted in `tests/session_api.rs`.
+//!
+//! ```no_run
+//! use pipegcn::session::{Engine, Session};
+//! let report = Session::preset("reddit-sim")
+//!     .parts(4)
+//!     .variant("pipegcn-gf")
+//!     .epochs(20)
+//!     .engine(Engine::Threaded)
+//!     .run()
+//!     .unwrap();
+//! println!("final test metric: {:.4}", report.final_test);
+//! ```
+
+use crate::ckpt;
+use crate::coordinator::{threaded, trainer, TrainConfig, TrainResult, Variant};
+use crate::exp::{try_prepare, RunOpts, RunOutput};
+use crate::graph::presets::{self, Preset};
+use crate::graph::Graph;
+use crate::model::Params;
+use crate::net::launch::{self, LaunchOpts};
+use crate::net::worker::{self, WorkerOpts};
+use crate::partition::Partitioning;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::pool;
+use crate::util::error::{Context, Result};
+use crate::util::json::{FileEmitter, Json};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Execution strategy for a [`Session`].
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// All ranks round-robin on the calling thread (instrumented
+    /// reference engine; captures works/probes for the simulator).
+    #[default]
+    Sequential,
+    /// One OS thread per partition over the in-process fabric.
+    Threaded,
+    /// One OS process per partition over localhost TCP: spawns
+    /// `pipegcn worker` children, serves their rendezvous, supervises
+    /// them, and (with a checkpoint policy) relaunches the mesh from the
+    /// latest complete checkpoint when a worker dies — at most
+    /// `max_restarts` times.
+    Tcp {
+        /// mesh relaunches allowed after a failure (needs `.ckpt(..)`)
+        max_restarts: usize,
+    },
+    /// One rank of a TCP mesh, joining via the `coord` rendezvous
+    /// address (this is what a `pipegcn worker` process runs).
+    TcpWorker { rank: usize, coord: String },
+}
+
+/// What a [`Session::run`] produces, uniform across engines. Fields an
+/// engine cannot measure are `None`/empty/NaN (e.g. a non-zero TCP
+/// worker rank never sees the global loss; only the sequential engine
+/// captures a full [`TrainResult`]).
+#[derive(Debug)]
+pub struct RunReport {
+    /// which engine produced this report: `"sequential"`, `"threaded"`,
+    /// `"tcp"`, or `"tcp-worker"`
+    pub engine: String,
+    /// per-epoch global train loss for the epochs this run executed
+    /// (`start_epoch + 1 ..= epochs`); bit-identical across engines
+    pub losses: Vec<f64>,
+    /// completed epochs restored from a checkpoint (0 on a fresh run)
+    pub start_epoch: usize,
+    /// final val metric (NaN where the engine does not evaluate)
+    pub final_val: f64,
+    pub final_test: f64,
+    /// payload bytes: total fabric traffic (sequential/threaded), or
+    /// rank 0's sent payload (tcp engines)
+    pub comm_bytes: u64,
+    /// actual wire bytes incl. frame headers (tcp engines only, else 0)
+    pub wire_bytes: u64,
+    /// NDJSON rows streamed to a `.log(path)` run log opened by this
+    /// process (0 when unused or when rank 0 of a `Tcp` launch owns it)
+    pub log_rows: usize,
+    /// the sequential engine's full result (works, probes, epoch stats)
+    pub train: Option<TrainResult>,
+    /// final parameters (threaded engine and TCP worker rank 0)
+    pub params: Option<Params>,
+    /// run inputs, when this process built them (local engines; the
+    /// `Tcp` launcher only knows the preset)
+    pub preset: Option<&'static Preset>,
+    pub graph: Option<Graph>,
+    pub parts: Option<Partitioning>,
+}
+
+impl RunReport {
+    /// Repackage as the experiment bundle [`crate::exp`]'s simulation
+    /// helpers consume. Panics unless this was a preset-built
+    /// *sequential* run (the only engine that captures works/probes).
+    pub fn into_output(self) -> RunOutput {
+        match (self.preset, self.graph, self.parts, self.train) {
+            (Some(preset), Some(graph), Some(parts), Some(result)) => {
+                RunOutput { preset, graph, parts, result }
+            }
+            _ => panic!(
+                "RunReport::into_output needs a preset-built sequential run \
+                 (this was engine '{}')",
+                self.engine
+            ),
+        }
+    }
+}
+
+// a Graph source is much bigger than a preset name, but a Session is a
+// short-lived one-per-run config object — boxing would only add noise
+#[allow(clippy::large_enum_variant)]
+enum Source {
+    Preset(String),
+    Graph { graph: Graph, parts: Partitioning, cfg: TrainConfig },
+}
+
+enum LogSink<'a> {
+    Path(String),
+    Emitter(&'a mut FileEmitter),
+}
+
+/// Builder for one training (or worker) run. See the module docs for the
+/// engine semantics; every option not set keeps the preset/CLI default.
+pub struct Session<'a> {
+    source: Source,
+    parts: usize,
+    method: Option<String>,
+    epochs: Option<usize>,
+    seed: Option<u64>,
+    gamma: Option<f32>,
+    eval_every: Option<usize>,
+    probe_errors: bool,
+    threads: Option<usize>,
+    log: Option<LogSink<'a>>,
+    out: Option<String>,
+    ckpt: Option<ckpt::Policy>,
+    resume: Option<String>,
+    fail: Option<(usize, usize)>,
+    engine: Engine,
+    binary: Option<PathBuf>,
+}
+
+/// Distinguishes concurrent sessions' scratch report files within one
+/// process (tests run many sessions in parallel threads).
+static TEMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl<'a> Session<'a> {
+    fn new(source: Source) -> Session<'a> {
+        Session {
+            source,
+            parts: 2,
+            method: None,
+            epochs: None,
+            seed: None,
+            gamma: None,
+            eval_every: None,
+            probe_errors: false,
+            threads: None,
+            log: None,
+            out: None,
+            ckpt: None,
+            resume: None,
+            fail: None,
+            engine: Engine::Sequential,
+            binary: None,
+        }
+    }
+
+    /// Run on a named dataset preset (see `pipegcn presets`), rebuilt
+    /// deterministically from the seed — required by the TCP engines,
+    /// whose worker processes rebuild their inputs independently.
+    pub fn preset(name: &str) -> Session<'a> {
+        Session::new(Source::Preset(name.to_string()))
+    }
+
+    /// Run on an explicit graph + partitioning + full [`TrainConfig`]
+    /// (library use; local engines only). Builder setters like
+    /// [`variant`](Session::variant) / [`epochs`](Session::epochs)
+    /// override the corresponding `cfg` fields.
+    pub fn graph(graph: Graph, parts: Partitioning, cfg: TrainConfig) -> Session<'a> {
+        Session::new(Source::Graph { graph, parts, cfg })
+    }
+
+    /// Partition count (preset source; a graph source carries its own
+    /// partitioning). Default 2.
+    pub fn parts(mut self, n: usize) -> Self {
+        self.parts = n;
+        self
+    }
+
+    /// Training method: `gcn`, `pipegcn`, `pipegcn-g`, `pipegcn-f`,
+    /// `pipegcn-gf` (default `pipegcn`).
+    pub fn variant(mut self, method: &str) -> Self {
+        self.method = Some(method.to_string());
+        self
+    }
+
+    /// Epoch count; 0 keeps the preset default.
+    pub fn epochs(mut self, n: usize) -> Self {
+        self.epochs = Some(n);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Smoothing decay rate γ for the `-g`/`-f`/`-gf` variants.
+    pub fn gamma(mut self, gamma: f32) -> Self {
+        self.gamma = Some(gamma);
+        self
+    }
+
+    /// Evaluate val/test every N epochs (sequential engine; 0 = only at
+    /// the end).
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.eval_every = Some(n);
+        self
+    }
+
+    /// Record staleness error probes (sequential engine, pipe variants).
+    pub fn probe_errors(mut self, on: bool) -> Self {
+        self.probe_errors = on;
+        self
+    }
+
+    /// Set every experiment knob at once (shim compatibility with the
+    /// old `exp::RunOpts`-taking entry points).
+    pub fn run_opts(mut self, o: RunOpts) -> Self {
+        self.epochs = Some(o.epochs);
+        self.seed = Some(o.seed);
+        self.gamma = Some(o.gamma);
+        self.eval_every = Some(o.eval_every);
+        self.probe_errors = o.probe_errors;
+        self
+    }
+
+    /// Kernel-pool worker threads (local engines set the global pool;
+    /// the `Tcp` engine forwards `--threads` to every worker).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// Stream an NDJSON run log (one row per epoch, written live) to
+    /// `path`. On the `Tcp` engine the path is handed to rank 0.
+    pub fn log(mut self, path: &str) -> Self {
+        self.log = Some(LogSink::Path(path.to_string()));
+        self
+    }
+
+    /// Stream the run log into an existing emitter (library use; local
+    /// engines only — no header row is written).
+    pub fn log_emitter(mut self, em: &'a mut FileEmitter) -> Self {
+        self.log = Some(LogSink::Emitter(em));
+        self
+    }
+
+    /// Write the engine's result JSON to `path` (TCP engines: rank 0's
+    /// report file).
+    pub fn out(mut self, path: &str) -> Self {
+        self.out = Some(path.to_string());
+        self
+    }
+
+    /// Snapshot full training state under `policy.dir` every
+    /// `policy.every` epochs (enables crash recovery on the `Tcp`
+    /// engine).
+    pub fn ckpt(mut self, policy: ckpt::Policy) -> Self {
+        self.ckpt = Some(policy);
+        self
+    }
+
+    /// Resume from the latest complete checkpoint under `dir`
+    /// (bit-identical to the uninterrupted run).
+    pub fn resume(mut self, dir: &str) -> Self {
+        self.resume = Some(dir.to_string());
+        self
+    }
+
+    /// Fault injection for the recovery tests: `rank` exits(13) right
+    /// after completing `epoch`. TCP engines only — a process can die,
+    /// a thread cannot without taking the mesh with it.
+    pub fn fail_epoch(mut self, rank: usize, epoch: usize) -> Self {
+        self.fail = Some((rank, epoch));
+        self
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// The `pipegcn` binary the `Tcp` engine spawns workers from
+    /// (default: `current_exe()` — override from test harnesses, whose
+    /// own executable is not the CLI).
+    pub fn binary(mut self, path: impl Into<PathBuf>) -> Self {
+        self.binary = Some(path.into());
+        self
+    }
+
+    /// Execute the run on the configured engine.
+    pub fn run(self) -> Result<RunReport> {
+        let Session {
+            source,
+            parts,
+            method,
+            epochs,
+            seed,
+            gamma,
+            eval_every,
+            probe_errors,
+            threads,
+            log,
+            out,
+            ckpt: ckpt_policy,
+            resume,
+            fail,
+            engine,
+            binary,
+        } = self;
+
+        if threads == Some(0) {
+            crate::bail!("threads must be at least 1");
+        }
+        if let Some(p) = &ckpt_policy {
+            if p.every == 0 {
+                crate::bail!("checkpoint policy: every must be at least 1");
+            }
+        }
+        let method_name = method.as_deref().unwrap_or("pipegcn").to_string();
+        let opts = RunOpts {
+            epochs: epochs.unwrap_or(0),
+            seed: seed.unwrap_or(1),
+            probe_errors,
+            gamma: gamma.unwrap_or(0.95),
+            eval_every: eval_every.unwrap_or(5),
+        };
+        // knobs only the sequential engine honors must not silently
+        // change meaning on the others
+        if matches!(engine, Engine::Tcp { .. } | Engine::TcpWorker { .. })
+            && (eval_every.is_some() || probe_errors)
+        {
+            crate::bail!(
+                "eval_every/probe_errors are sequential-engine knobs; the tcp engines \
+                 evaluate once at the end and record no probes"
+            );
+        }
+
+        match engine {
+            Engine::Sequential | Engine::Threaded => {
+                if fail.is_some() {
+                    crate::bail!(
+                        "fault injection (fail_epoch) needs a process-per-rank engine \
+                         (Engine::Tcp)"
+                    );
+                }
+                let threaded_engine = engine == Engine::Threaded;
+                let engine_name = if threaded_engine { "threaded" } else { "sequential" };
+                if let Some(t) = threads {
+                    pool::set_threads(t);
+                }
+                let dataset_label = match &source {
+                    Source::Preset(name) => name.clone(),
+                    Source::Graph { .. } => "custom".to_string(),
+                };
+                let (preset, graph, pt, cfg) = match source {
+                    Source::Preset(name) => {
+                        let (p, g, pt, cfg) = try_prepare(&name, parts, &method_name, opts)?;
+                        (Some(p), g, pt, cfg)
+                    }
+                    Source::Graph { graph, parts: pt, cfg } => {
+                        let mut cfg = cfg;
+                        if let Some(m) = &method {
+                            cfg.variant = Variant::parse(m, opts.gamma)?;
+                        } else if let (Some(g), Variant::Pipe(mut o)) = (gamma, cfg.variant) {
+                            // .gamma() must bite even without .variant()
+                            o.gamma = g;
+                            cfg.variant = Variant::Pipe(o);
+                        }
+                        if opts.epochs > 0 {
+                            cfg.epochs = opts.epochs;
+                        }
+                        if let Some(s) = seed {
+                            cfg.seed = s;
+                        }
+                        if let Some(e) = eval_every {
+                            cfg.eval_every = e;
+                        }
+                        cfg.probe_errors |= probe_errors;
+                        (None, graph, pt, cfg)
+                    }
+                };
+                // run-log plumbing: a path gets the standard header; an
+                // existing emitter is used as-is
+                let mut owned_em: Option<FileEmitter> = None;
+                let em: Option<&mut FileEmitter> = match log {
+                    None => None,
+                    Some(LogSink::Emitter(e)) => Some(e),
+                    Some(LogSink::Path(p)) => {
+                        let header = Json::obj()
+                            .set("dataset", dataset_label.as_str())
+                            .set("parts", pt.n_parts)
+                            .set("method", cfg.variant.name())
+                            .set("seed", cfg.seed)
+                            .set("engine", engine_name);
+                        // resuming appends, so pre-crash epoch rows survive
+                        let e = if resume.is_some() {
+                            FileEmitter::append_or_create(&p, header)
+                        } else {
+                            FileEmitter::create(&p, header)
+                        }
+                        .with_context(|| format!("creating run log {p}"))?;
+                        owned_em = Some(e);
+                        owned_em.as_mut()
+                    }
+                };
+
+                let mut report = if threaded_engine {
+                    let ctl = threaded::ThreadedCtl {
+                        ckpt: ckpt_policy.as_ref(),
+                        resume: resume.as_deref(),
+                        log: em,
+                    };
+                    let (r, start_epoch) = threaded::run_threaded_ctl(&graph, &pt, &cfg, ctl)?;
+                    RunReport {
+                        engine: engine_name.to_string(),
+                        losses: r.losses,
+                        start_epoch,
+                        final_val: r.final_val,
+                        final_test: r.final_test,
+                        comm_bytes: r.comm_bytes,
+                        wire_bytes: 0,
+                        log_rows: 0,
+                        train: None,
+                        params: Some(r.params),
+                        preset,
+                        graph: Some(graph),
+                        parts: Some(pt),
+                    }
+                } else {
+                    let mut backend = NativeBackend::new();
+                    let result = trainer::train_resumable(
+                        &graph,
+                        &pt,
+                        &cfg,
+                        &mut backend,
+                        em,
+                        ckpt_policy.as_ref(),
+                        resume.as_deref(),
+                    )?;
+                    let start_epoch =
+                        result.curve.first().map(|e| e.epoch - 1).unwrap_or(cfg.epochs);
+                    let comm_bytes = result.setup_bytes
+                        + result.curve.iter().map(|e| e.comm_bytes).sum::<u64>();
+                    RunReport {
+                        engine: engine_name.to_string(),
+                        losses: result.curve.iter().map(|e| e.train_loss).collect(),
+                        start_epoch,
+                        final_val: result.final_val,
+                        final_test: result.final_test,
+                        comm_bytes,
+                        wire_bytes: 0,
+                        log_rows: 0,
+                        train: Some(result),
+                        params: None,
+                        preset,
+                        graph: Some(graph),
+                        parts: Some(pt),
+                    }
+                };
+                report.log_rows = owned_em.as_ref().map(|e| e.rows()).unwrap_or(0);
+                Ok(report)
+            }
+
+            Engine::Tcp { max_restarts } => {
+                let Source::Preset(dataset) = source else {
+                    crate::bail!(
+                        "the tcp engine's workers rebuild the dataset from its preset; \
+                         use Session::preset(..)"
+                    );
+                };
+                // validate before spawning: a bad flag must fail here, not
+                // as K worker panics followed by a rendezvous timeout
+                Variant::parse(&method_name, opts.gamma)?;
+                if presets::by_name(&dataset).is_none() {
+                    crate::bail!(
+                        "unknown preset '{dataset}' (try: {:?})",
+                        presets::names()
+                    );
+                }
+                if matches!(log, Some(LogSink::Emitter(_))) {
+                    crate::bail!(
+                        "the tcp engine streams its run log from rank 0's process; \
+                         pass a path with .log(..)"
+                    );
+                }
+                if let Some(dir) = &resume {
+                    if ckpt::latest_complete(dir, parts)?.is_none() {
+                        crate::bail!(
+                            "resume {dir}: no complete checkpoint for {parts} ranks"
+                        );
+                    }
+                }
+                // rank 0 always writes a report file so the launcher can
+                // hand back a RunReport; without .out(..) it is scratch
+                let (out_path, scratch) = match &out {
+                    Some(p) => (p.clone(), false),
+                    None => {
+                        let p = std::env::temp_dir().join(format!(
+                            "pipegcn_session_{}_{}.json",
+                            std::process::id(),
+                            TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+                        ));
+                        (p.to_string_lossy().into_owned(), true)
+                    }
+                };
+                let lopts = LaunchOpts {
+                    parts,
+                    dataset: dataset.clone(),
+                    method: method_name,
+                    epochs: opts.epochs,
+                    seed: opts.seed,
+                    gamma: opts.gamma,
+                    log: match log {
+                        Some(LogSink::Path(p)) => Some(p),
+                        _ => None,
+                    },
+                    out: Some(out_path.clone()),
+                    ckpt_dir: ckpt_policy.as_ref().map(|p| p.dir.clone()),
+                    ckpt_every: ckpt_policy.as_ref().map(|p| p.every).unwrap_or(1),
+                    resume,
+                    max_restarts,
+                    threads,
+                    fail_rank: fail.map(|(r, _)| r),
+                    fail_epoch: fail.map(|(_, e)| e),
+                };
+                let bin = match binary {
+                    Some(b) => b,
+                    None => std::env::current_exe()
+                        .context("resolving the pipegcn binary path")?,
+                };
+                launch::launch(&bin, &lopts)?;
+                let text = std::fs::read_to_string(&out_path)
+                    .with_context(|| format!("reading rank-0 report {out_path}"))?;
+                if scratch {
+                    std::fs::remove_file(&out_path).ok();
+                }
+                let j = Json::parse(&text)
+                    .map_err(|e| crate::err_msg!("parsing rank-0 report {out_path}: {e}"))?;
+                let losses: Vec<f64> = j
+                    .get("losses")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                    .unwrap_or_default();
+                Ok(RunReport {
+                    engine: "tcp".to_string(),
+                    losses,
+                    start_epoch: j.get("start_epoch").and_then(Json::as_usize).unwrap_or(0),
+                    final_val: j.get("final_val").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    final_test: j
+                        .get("final_test")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(f64::NAN),
+                    comm_bytes: j
+                        .get("payload_bytes_sent")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64,
+                    wire_bytes: j
+                        .get("wire_bytes_sent")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64,
+                    log_rows: 0,
+                    train: None,
+                    params: None,
+                    preset: presets::by_name(&dataset),
+                    graph: None,
+                    parts: None,
+                })
+            }
+
+            Engine::TcpWorker { rank, coord } => {
+                let Source::Preset(dataset) = source else {
+                    crate::bail!(
+                        "a tcp worker rebuilds the dataset from its preset; \
+                         use Session::preset(..)"
+                    );
+                };
+                if let Some(t) = threads {
+                    pool::set_threads(t);
+                }
+                if matches!(log, Some(LogSink::Emitter(_))) {
+                    crate::bail!("the tcp worker opens its own run log; pass a path with .log(..)");
+                }
+                let wopts = WorkerOpts {
+                    rank,
+                    parts,
+                    coord,
+                    dataset,
+                    method: method_name,
+                    epochs: opts.epochs,
+                    seed: opts.seed,
+                    gamma: opts.gamma,
+                    log: match log {
+                        Some(LogSink::Path(p)) => Some(p),
+                        _ => None,
+                    },
+                    out,
+                    ckpt_dir: ckpt_policy.as_ref().map(|p| p.dir.clone()),
+                    ckpt_every: ckpt_policy.as_ref().map(|p| p.every).unwrap_or(1),
+                    resume,
+                    fail_epoch: fail.and_then(|(r, e)| (r == rank).then_some(e)),
+                };
+                let summary = worker::run_worker(&wopts)?;
+                Ok(match summary {
+                    Some(s) => RunReport {
+                        engine: "tcp-worker".to_string(),
+                        losses: s.losses,
+                        start_epoch: s.start_epoch,
+                        final_val: s.final_val,
+                        final_test: s.final_test,
+                        comm_bytes: s.payload_bytes_sent,
+                        wire_bytes: s.wire_bytes_sent,
+                        log_rows: 0,
+                        train: None,
+                        params: None,
+                        preset: None,
+                        graph: None,
+                        parts: None,
+                    },
+                    // non-zero ranks train but never see global metrics
+                    None => RunReport {
+                        engine: "tcp-worker".to_string(),
+                        losses: Vec::new(),
+                        start_epoch: 0,
+                        final_val: f64::NAN,
+                        final_test: f64::NAN,
+                        comm_bytes: 0,
+                        wire_bytes: 0,
+                        log_rows: 0,
+                        train: None,
+                        params: None,
+                        preset: None,
+                        graph: None,
+                        parts: None,
+                    },
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // engine-equivalence and end-to-end coverage lives in
+    // `tests/session_api.rs`; here only the cheap validation paths
+
+    #[test]
+    fn builder_rejects_bad_inputs_before_any_work() {
+        let e = Session::preset("tiny").threads(0).run().unwrap_err();
+        assert!(e.to_string().contains("at least 1"), "{e}");
+        let e = Session::preset("tiny")
+            .ckpt(ckpt::Policy { dir: "/tmp/x".into(), every: 0 })
+            .run()
+            .unwrap_err();
+        assert!(e.to_string().contains("every"), "{e}");
+        let e = Session::preset("tiny").fail_epoch(0, 2).run().unwrap_err();
+        assert!(e.to_string().contains("Tcp"), "{e}");
+        // sequential-only knobs are rejected on the tcp engines instead
+        // of silently changing the run (and before anything spawns)
+        let e = Session::preset("tiny")
+            .eval_every(1)
+            .engine(Engine::Tcp { max_restarts: 0 })
+            .run()
+            .unwrap_err();
+        assert!(e.to_string().contains("sequential-engine"), "{e}");
+        // parse errors surface the valid-value lists (satellite bugfix)
+        let e = Session::preset("tiny").variant("nope").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("pipegcn-gf"), "{e}");
+        let e = Session::preset("nope").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("unknown preset"), "{e}");
+    }
+
+    #[test]
+    fn tcp_engine_requires_a_preset_source() {
+        let g = crate::graph::presets::by_name("tiny").unwrap().build(1);
+        let pt = crate::partition::partition(&g, 2, crate::partition::Method::Multilevel, 1);
+        let cfg = TrainConfig::from_preset(
+            crate::graph::presets::by_name("tiny").unwrap(),
+            Variant::Vanilla,
+        );
+        let e = Session::graph(g, pt, cfg)
+            .engine(Engine::Tcp { max_restarts: 0 })
+            .run()
+            .unwrap_err();
+        assert!(e.to_string().contains("preset"), "{e}");
+    }
+}

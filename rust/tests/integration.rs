@@ -105,7 +105,7 @@ fn training_works_on_power_law_graph() {
         probe_errors: false,
     };
     let mut b = NativeBackend::new();
-    let r = trainer::train(&g, &pt, &cfg, &mut b);
+    let r = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap();
     assert!(
         r.curve.last().unwrap().train_loss < 0.8 * r.curve[0].train_loss,
         "loss {} -> {}",
@@ -133,7 +133,7 @@ fn gcn_layer_kind_trains() {
             probe_errors: false,
         };
         let mut b = NativeBackend::new();
-        let r = trainer::train(&g, &pt, &cfg, &mut b);
+        let r = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap();
         assert!(r.final_test > 0.6, "{variant:?} test {}", r.final_test);
     }
 }
@@ -157,7 +157,7 @@ fn pipegcn_variants_converge_close_to_vanilla() {
             probe_errors: false,
         };
         let mut b = NativeBackend::new();
-        let r = trainer::train(&g, &pt, &cfg, &mut b);
+        let r = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap();
         scores.push((m, r.final_test));
     }
     let vanilla = scores[0].1;
@@ -187,7 +187,7 @@ fn stale_buffers_warm_up_from_zero() {
             probe_errors: false,
         };
         let mut b = NativeBackend::new();
-        trainer::train(&g, &pt, &cfg, &mut b)
+        trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap()
     };
     let v = run(Variant::Vanilla);
     let p = run(Variant::Pipe(PipeOpts::plain()));
@@ -255,12 +255,13 @@ fn xla_backend_rejects_oversized_partition() {
 
 #[test]
 fn full_works_projection_shapes() {
-    let out = pipegcn::exp::run(
-        "tiny",
-        2,
-        "gcn",
-        pipegcn::exp::RunOpts { epochs: 2, eval_every: 0, ..Default::default() },
-    );
+    let out = pipegcn::session::Session::preset("tiny")
+        .parts(2)
+        .variant("gcn")
+        .run_opts(pipegcn::exp::RunOpts { epochs: 2, eval_every: 0, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
     let (works, model_elems) = pipegcn::exp::full_works(&out);
     assert_eq!(works.len(), 2);
     assert_eq!(works[0].fwd.len(), out.preset.layers);

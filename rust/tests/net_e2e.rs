@@ -7,12 +7,13 @@
 use pipegcn::coordinator::{
     halo, threaded, trainer, Optimizer, PipeOpts, TrainConfig, Variant,
 };
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::graph::presets;
 use pipegcn::model::ModelConfig;
 use pipegcn::net::localhost_mesh;
 use pipegcn::partition::{partition, Method};
 use pipegcn::runtime::native::NativeBackend;
+use pipegcn::session::Session;
 use pipegcn::util::json::Json;
 use std::sync::Arc;
 
@@ -76,8 +77,10 @@ fn tcp_matches_sequential_and_threaded_bitwise() {
         let pt = partition(&g, 3, Method::Multilevel, 2);
         let (cfg, _) = tiny_cfg(variant, dropout, 5);
         let mut b = NativeBackend::new();
-        let seq = trainer::train(&g, &pt, &cfg, &mut b);
-        let thr = threaded::train_threaded(&g, &pt, &cfg);
+        let seq = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap();
+        let thr = threaded::run_threaded_ctl(&g, &pt, &cfg, threaded::ThreadedCtl::default())
+            .unwrap()
+            .0;
         let tcp = tcp_losses(3, variant, dropout, 5);
         for (e, stat) in seq.curve.iter().enumerate() {
             assert_eq!(
@@ -128,7 +131,9 @@ fn tcp_transport_fifo_and_accounting_through_schedule() {
         sent_total += sent;
     }
     // total payload over TCP equals the threaded fabric's accounting
-    let thr = threaded::train_threaded(&g, &pt, &cfg);
+    let thr = threaded::run_threaded_ctl(&g, &pt, &cfg, threaded::ThreadedCtl::default())
+        .unwrap()
+        .0;
     assert_eq!(sent_total, thr.comm_bytes);
 }
 
@@ -165,7 +170,13 @@ fn launch_two_processes_matches_sequential_bitwise() {
         .collect();
     assert_eq!(losses.len(), 3);
 
-    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 3, ..Default::default() });
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 3, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
     for (e, stat) in seq.result.curve.iter().enumerate() {
         assert_eq!(
             stat.train_loss.to_bits(),
@@ -247,7 +258,13 @@ fn launch_recovers_from_worker_death_and_matches_sequential() {
         .collect();
     assert_eq!(losses.len(), 4); // epochs 3..=6
 
-    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 6, ..Default::default() });
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 6, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
     for (i, &loss) in losses.iter().enumerate() {
         let want = seq.result.curve[2 + i].train_loss;
         assert_eq!(
@@ -305,7 +322,13 @@ fn launch_resume_flag_continues_previous_job() {
         .map(|v| v.as_f64().unwrap())
         .collect();
     assert_eq!(losses.len(), 2); // epochs 5..=6
-    let seq = exp::run("tiny", 2, "pipegcn", RunOpts { epochs: 6, ..Default::default() });
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 6, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
     for (i, &loss) in losses.iter().enumerate() {
         assert_eq!(
             seq.result.curve[4 + i].train_loss.to_bits(),

@@ -14,10 +14,11 @@
 //! regression would compare parallel against parallel and vacuously
 //! pass.
 
-use pipegcn::exp::{self, RunOpts};
+use pipegcn::exp::RunOpts;
 use pipegcn::model::adam::Adam;
 use pipegcn::perf::random_csr;
 use pipegcn::runtime::pool;
+use pipegcn::session::Session;
 use pipegcn::tensor::{ops, Mat};
 use pipegcn::util::prop;
 use pipegcn::util::rng::Rng;
@@ -167,12 +168,13 @@ fn training_loss_curve_bit_identical_threads_1_vs_4() {
     let _serial = pool_lock();
     let run = |t: usize| {
         with_threads(t, || {
-            exp::run(
-                "tiny",
-                3,
-                "pipegcn-gf",
-                RunOpts { epochs: 5, eval_every: 0, ..Default::default() },
-            )
+            Session::preset("tiny")
+                .parts(3)
+                .variant("pipegcn-gf")
+                .run_opts(RunOpts { epochs: 5, eval_every: 0, ..Default::default() })
+                .run()
+                .unwrap()
+                .into_output()
         })
     };
     let a = run(1);
@@ -211,13 +213,20 @@ fn smoke_bench_writes_ndjson_rows() {
     pipegcn::perf::run_bench(&o).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let rows = pipegcn::util::json::parse_ndjson(&text).unwrap();
-    // header + 5 kernels × 2 thread counts + 2 epoch rows + summary
-    assert_eq!(rows.len(), 1 + 10 + 2 + 1, "{text}");
+    // header + 5 kernels × 2 thread counts + 2 epoch rows + 2 serve rows
+    // (min and max thread count) + summary
+    assert_eq!(rows.len(), 1 + 10 + 2 + 2 + 1, "{text}");
     assert_eq!(rows[0].get("bench").unwrap().as_str(), Some("pipegcn-kernels"));
     for row in &rows[1..13] {
         assert!(row.get("ns_iter").unwrap().as_f64().unwrap() > 0.0);
         assert!(row.get("gflops").unwrap().as_f64().unwrap() >= 0.0);
         assert!(row.get("threads").unwrap().as_usize().unwrap() >= 1);
+    }
+    for row in &rows[13..15] {
+        assert_eq!(row.get("kernel").unwrap().as_str(), Some("serve"));
+        assert!(row.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("qps").unwrap().as_f64().unwrap() > 0.0);
     }
     let last = rows.last().unwrap();
     assert_eq!(last.get("kernel").unwrap().as_str(), Some("summary"));

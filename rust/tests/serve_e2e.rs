@@ -1,0 +1,232 @@
+//! End-to-end tests of the serving path: params artifact → server →
+//! client, in-process and through the real CLI binaries.
+//!
+//! The acceptance oracle: logits answered by `pipegcn serve` over TCP
+//! are **bit-identical** to [`full_graph_forward`] on the same params —
+//! the serving path reuses the training kernels, so there is exactly one
+//! forward semantics in the crate.
+
+use pipegcn::ckpt;
+use pipegcn::coordinator::{forward_with_features, full_graph_forward};
+use pipegcn::graph::presets;
+use pipegcn::model::{artifact, ModelConfig, Params};
+use pipegcn::runtime::native::NativeBackend;
+use pipegcn::serve::{Client, Server};
+use pipegcn::session::Session;
+use pipegcn::tensor::Mat;
+use pipegcn::util::json::Json;
+use pipegcn::util::rng::Rng;
+
+fn tiny_model() -> (pipegcn::graph::Graph, ModelConfig, Params) {
+    let p = presets::by_name("tiny").unwrap();
+    let g = p.build(1);
+    let cfg = ModelConfig::from_preset(p);
+    let params = Params::init(&cfg, &mut Rng::new(3));
+    (g, cfg, params)
+}
+
+/// Spawn a server accepting `conns` connections and return its address
+/// plus the join handle.
+fn spawn_server(
+    g: pipegcn::graph::Graph,
+    cfg: ModelConfig,
+    params: Params,
+    conns: usize,
+) -> (String, std::thread::JoinHandle<pipegcn::util::error::Result<()>>) {
+    let server = Server::from_parts(g, cfg, params).unwrap();
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run(Some(conns)));
+    (addr, handle)
+}
+
+#[test]
+fn serve_logits_bit_identical_to_full_graph_forward() {
+    let (g, cfg, params) = tiny_model();
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+
+    let (addr, handle) = spawn_server(g, cfg, params, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    // a scattered batch…
+    let ids: Vec<u32> = vec![0, 5, 17, 511];
+    let got = client.query(&ids).unwrap();
+    assert_eq!((got.rows, got.cols), (ids.len(), want.cols));
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {id}");
+        }
+    }
+    // …and the full graph, on the same connection
+    let all: Vec<u32> = (0..want.rows as u32).collect();
+    let got = client.query(&all).unwrap();
+    for r in 0..want.rows {
+        for (a, b) in got.row(r).iter().zip(want.row(r)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {r}");
+        }
+    }
+    client.close();
+    handle.join().unwrap().unwrap();
+}
+
+/// The online scenario: a query shipping fresh features for its batch
+/// gets logits computed from those features (bit-identical to a local
+/// forward over the patched feature matrix).
+#[test]
+fn serve_feature_override_matches_local_forward() {
+    let (g, cfg, params) = tiny_model();
+    let ids: Vec<u32> = vec![3, 9];
+    let mut rng = Rng::new(8);
+    let fresh = Mat::randn(ids.len(), g.feat_dim(), 1.0, &mut rng);
+    let mut patched = g.features.clone();
+    for (i, &id) in ids.iter().enumerate() {
+        patched.set_row(id as usize, fresh.row(i));
+    }
+    let mut b = NativeBackend::new();
+    let want = forward_with_features(&g, &params, cfg.kind, &mut b, &patched);
+
+    let (addr, handle) = spawn_server(g, cfg, params, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let got = client.query_with_features(&ids, &fresh).unwrap();
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {id}");
+        }
+    }
+    client.close();
+    handle.join().unwrap().unwrap();
+}
+
+/// Session-trained checkpoint → export_from_ckpt → artifact roundtrip →
+/// served logits equal the forward on the exported params.
+#[test]
+fn export_params_from_training_checkpoint_serves_trained_model() {
+    let base = format!("/tmp/pipegcn_serve_export_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    let ckpt_dir = format!("{base}/ckpt");
+    let report = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .epochs(3)
+        .eval_every(0)
+        .ckpt(ckpt::Policy { dir: ckpt_dir.clone(), every: 1 })
+        .run()
+        .unwrap();
+    assert_eq!(report.losses.len(), 3);
+
+    let preset = presets::by_name("tiny").unwrap();
+    let cfg = ModelConfig::from_preset(preset);
+    let (pf, epoch) = artifact::export_from_ckpt(&ckpt_dir, 2, &cfg, None).unwrap();
+    assert_eq!(epoch, 3);
+    let path = format!("{base}/params.pgp");
+    artifact::save(&path, &pf).unwrap();
+    let loaded = artifact::load(&path).unwrap();
+    assert_eq!(loaded, pf);
+
+    // the served logits are the trained model's logits
+    let g = preset.build(1); // training's default seed
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &loaded.params, loaded.config.kind, &mut b);
+    let (addr, handle) = spawn_server(g, loaded.config, loaded.params, 1);
+    let mut client = Client::connect(&addr).unwrap();
+    let got = client.query(&[0, 100, 200]).unwrap();
+    for (i, &id) in [0u32, 100, 200].iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {id}");
+        }
+    }
+    client.close();
+    handle.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// The full CLI flow, real binaries end to end:
+/// `train --ckpt-dir` → `export-params` → `serve` → `query`.
+#[test]
+fn cli_train_export_serve_query_flow() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_serve_cli_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let ckpt_dir = format!("{base}/ckpt");
+    let params_path = format!("{base}/params.pgp");
+    let addr_file = format!("{base}/serve.addr");
+    let report_path = format!("{base}/lat.ndjson");
+
+    let status = std::process::Command::new(bin)
+        .args([
+            "train", "--dataset", "tiny", "--parts", "2", "--method", "pipegcn",
+            "--epochs", "2", "--eval-every", "0", "--ckpt-every", "1",
+        ])
+        .args(["--ckpt-dir", &ckpt_dir])
+        .status()
+        .expect("running pipegcn train");
+    assert!(status.success(), "train exited with {status}");
+
+    let status = std::process::Command::new(bin)
+        .args(["export-params", "--dataset", "tiny", "--parts", "2"])
+        .args(["--from-ckpt", &ckpt_dir, "--out", &params_path])
+        .status()
+        .expect("running pipegcn export-params");
+    assert!(status.success(), "export-params exited with {status}");
+
+    // serve in a real process: 2 connections (our bit-check client, then
+    // the CLI query client), then exit
+    let mut serve = std::process::Command::new(bin)
+        .args(["serve", "--dataset", "tiny", "--max-conns", "2"])
+        .args(["--params", &params_path, "--addr-file", &addr_file])
+        .spawn()
+        .expect("spawning pipegcn serve");
+    let addr = {
+        let mut waited = 0u32;
+        loop {
+            if let Ok(a) = std::fs::read_to_string(&addr_file) {
+                if !a.is_empty() {
+                    break a;
+                }
+            }
+            waited += 1;
+            assert!(waited < 200, "serve never wrote its addr file");
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    };
+
+    // bit-identity through the running server: logits equal the local
+    // forward on the exported params
+    let loaded = artifact::load(&params_path).unwrap();
+    let g = presets::by_name("tiny").unwrap().build(1);
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &loaded.params, loaded.config.kind, &mut b);
+    let mut client = Client::connect(&addr).unwrap();
+    let ids: Vec<u32> = vec![0, 1, 2, 3];
+    let got = client.query(&ids).unwrap();
+    assert!(!got.data.is_empty(), "serve answered no logits");
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {id}");
+        }
+    }
+    client.close();
+
+    let out = std::process::Command::new(bin)
+        .args(["query", "--nodes", "0,1,2", "--repeat", "3"])
+        .args(["--addr", &addr, "--report", &report_path])
+        .output()
+        .expect("running pipegcn query");
+    assert!(out.status.success(), "query exited with {}", out.status);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ok:"), "query output: {stdout}");
+
+    let rows =
+        pipegcn::util::json::parse_ndjson(&std::fs::read_to_string(&report_path).unwrap())
+            .unwrap();
+    // header + 3 per-query rows + summary
+    assert_eq!(rows.len(), 5);
+    assert_eq!(rows[0].get("batch").and_then(Json::as_usize), Some(3));
+    let summary = rows.last().unwrap();
+    assert!(summary.get("p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(summary.get("qps").and_then(Json::as_f64).unwrap() > 0.0);
+
+    let status = serve.wait().expect("waiting for serve");
+    assert!(status.success(), "serve exited with {status}");
+    std::fs::remove_dir_all(&base).ok();
+}

@@ -1,0 +1,157 @@
+//! Session-API equivalence: runs built through the [`Session`] builder
+//! must reproduce the engine cores — and each other — **bit-for-bit**,
+//! across the sequential, threaded, and multi-process TCP engines (the
+//! refactor moved plumbing, not numerics).
+
+use pipegcn::coordinator::{threaded, trainer};
+use pipegcn::exp::{self, RunOpts};
+use pipegcn::runtime::native::NativeBackend;
+use pipegcn::session::{Engine, Session};
+
+fn bits(losses: &[f64]) -> Vec<u64> {
+    losses.iter().map(|l| l.to_bits()).collect()
+}
+
+/// Sequential engine through the builder vs the engine core called
+/// directly with identical inputs (the pre-refactor path).
+#[test]
+fn session_sequential_matches_trainer_core_bitwise() {
+    let opts = RunOpts { epochs: 5, eval_every: 0, gamma: 0.9, ..Default::default() };
+    let (_p, g, pt, cfg) = exp::try_prepare("tiny", 3, "pipegcn-gf", opts).unwrap();
+    let mut b = NativeBackend::new();
+    let want = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None).unwrap();
+
+    let report = Session::preset("tiny")
+        .parts(3)
+        .variant("pipegcn-gf")
+        .gamma(0.9)
+        .epochs(5)
+        .eval_every(0)
+        .run()
+        .unwrap();
+    assert_eq!(report.engine, "sequential");
+    assert_eq!(report.start_epoch, 0);
+    assert_eq!(report.losses.len(), 5);
+    let want_losses: Vec<f64> = want.curve.iter().map(|e| e.train_loss).collect();
+    assert_eq!(bits(&want_losses), bits(&report.losses));
+    // the sequential engine carries the full result for the simulator
+    let train = report.train.as_ref().expect("sequential engine captures TrainResult");
+    assert!(train.works[0].fwd[0].total() > 0.0);
+    assert_eq!(report.final_test.to_bits(), want.final_test.to_bits());
+}
+
+/// Threaded engine through the builder vs the sequential engine — and
+/// vs the threaded engine core called directly.
+#[test]
+fn session_threaded_matches_sequential_bitwise() {
+    let build = || {
+        Session::preset("tiny").parts(3).variant("pipegcn").epochs(5).eval_every(0)
+    };
+    let seq = build().run().unwrap();
+    let thr = build().engine(Engine::Threaded).run().unwrap();
+    assert_eq!(thr.engine, "threaded");
+    assert_eq!(bits(&seq.losses), bits(&thr.losses));
+    assert!(thr.params.is_some(), "threaded engine returns final params");
+    assert!(thr.comm_bytes > 0);
+
+    let opts = RunOpts { epochs: 5, eval_every: 0, ..Default::default() };
+    let (_p, g, pt, cfg) = exp::try_prepare("tiny", 3, "pipegcn", opts).unwrap();
+    let core = threaded::run_threaded_ctl(&g, &pt, &cfg, threaded::ThreadedCtl::default())
+        .unwrap()
+        .0;
+    assert_eq!(bits(&core.losses), bits(&thr.losses));
+}
+
+/// TCP engine through the builder: real worker *processes* over
+/// localhost sockets, loss curve bit-identical to the sequential engine.
+/// (`.binary(..)` points the launcher at the CLI — the test harness
+/// binary is not `pipegcn`.)
+#[test]
+fn session_tcp_matches_sequential_bitwise() {
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .epochs(3)
+        .eval_every(0)
+        .run()
+        .unwrap();
+    let tcp = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .epochs(3)
+        .engine(Engine::Tcp { max_restarts: 0 })
+        .binary(env!("CARGO_BIN_EXE_pipegcn"))
+        .run()
+        .unwrap();
+    assert_eq!(tcp.engine, "tcp");
+    assert_eq!(tcp.start_epoch, 0);
+    assert_eq!(bits(&seq.losses), bits(&tcp.losses));
+    assert!(tcp.comm_bytes > 0, "rank 0 sent payload over TCP");
+    assert!(tcp.wire_bytes > tcp.comm_bytes, "framing overhead is on the wire");
+    assert!(tcp.final_test > 0.0);
+}
+
+/// A graph-source Session (explicit graph + partitioning + config) runs
+/// the local engines and matches the preset-source run that used the
+/// same inputs.
+#[test]
+fn session_graph_source_matches_preset_source() {
+    let opts = RunOpts { epochs: 4, eval_every: 0, ..Default::default() };
+    let (_p, g, pt, cfg) = exp::try_prepare("tiny", 2, "pipegcn", opts).unwrap();
+    let from_preset = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .epochs(4)
+        .eval_every(0)
+        .run()
+        .unwrap();
+    for engine in [Engine::Sequential, Engine::Threaded] {
+        let report = Session::graph(g.clone(), pt.clone(), cfg.clone())
+            .engine(engine)
+            .run()
+            .unwrap();
+        assert_eq!(bits(&from_preset.losses), bits(&report.losses));
+    }
+}
+
+/// `.gamma()` on a graph-source Session must override the smoothing
+/// decay baked into the TrainConfig even when `.variant()` is not set.
+#[test]
+fn session_graph_source_gamma_override_applies() {
+    let opts = RunOpts { epochs: 4, eval_every: 0, gamma: 0.9, ..Default::default() };
+    let (_p, g, pt, cfg) = exp::try_prepare("tiny", 2, "pipegcn-gf", opts).unwrap();
+    let want = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn-gf")
+        .gamma(0.5)
+        .epochs(4)
+        .eval_every(0)
+        .run()
+        .unwrap();
+    // cfg carries gamma 0.9; the builder's 0.5 must win
+    let got = Session::graph(g, pt, cfg).gamma(0.5).run().unwrap();
+    assert_eq!(bits(&want.losses), bits(&got.losses));
+}
+
+/// The builder's validation errors carry the valid-value lists
+/// (satellite: `Variant::parse` returns `Err` with the known methods).
+#[test]
+fn session_errors_carry_valid_value_lists() {
+    let e = Session::preset("tiny").variant("nope").epochs(1).run().unwrap_err();
+    let msg = e.to_string();
+    for name in ["gcn", "pipegcn", "pipegcn-g", "pipegcn-f", "pipegcn-gf"] {
+        assert!(msg.contains(name), "'{msg}' misses '{name}'");
+    }
+    let e = Session::preset("nope").epochs(1).run().unwrap_err();
+    assert!(e.to_string().contains("unknown preset"), "{e}");
+    let e = Session::preset("tiny").parts(0).epochs(1).run().unwrap_err();
+    assert!(e.to_string().contains("at least 1"), "{e}");
+    // and the tcp engine validates before spawning any worker
+    let e = Session::preset("tiny")
+        .variant("nope")
+        .engine(Engine::Tcp { max_restarts: 0 })
+        .binary(env!("CARGO_BIN_EXE_pipegcn"))
+        .run()
+        .unwrap_err();
+    assert!(e.to_string().contains("pipegcn-gf"), "{e}");
+}

@@ -119,9 +119,9 @@ fn xla_training_run_matches_native() {
         probe_errors: false,
     };
     let mut nat = NativeBackend::new();
-    let r_native = trainer::train(&g, &pt, &cfg, &mut nat);
+    let r_native = trainer::train_resumable(&g, &pt, &cfg, &mut nat, None, None, None).unwrap();
     let mut xla = XlaBackend::from_artifacts(&dir).expect("load artifacts");
-    let r_xla = trainer::train(&g, &pt, &cfg, &mut xla);
+    let r_xla = trainer::train_resumable(&g, &pt, &cfg, &mut xla, None, None, None).unwrap();
     for (a, b) in r_native.curve.iter().zip(&r_xla.curve) {
         assert!(
             (a.train_loss - b.train_loss).abs() < 1e-3,
