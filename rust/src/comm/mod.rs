@@ -1,29 +1,51 @@
 //! Communication fabric for partition-parallel training.
 //!
 //! [`Transport`] is the message-passing contract the training schedule is
-//! written against: tagged sends, blocking tagged receives, and per-rank
-//! byte accounting. Two implementations exist:
+//! written against, and it is **nonblocking by construction**: a receive
+//! is *posted* with [`Transport::post_recv`], which returns a
+//! [`RecvHandle`] immediately; the payload is claimed later with
+//! [`RecvHandle::try_take`] (never blocks) or [`RecvHandle::wait`]
+//! (parks, and charges the parked time to the handle's `(layer, phase)`
+//! in a [`WaitStats`]). This is what makes PipeGCN's namesake mechanism
+//! real at the API level: the per-rank schedule posts every receive of
+//! an epoch up front and computes past them, so communication completes
+//! *behind* the kernels instead of serializing with them —
+//! [`Transport::recv_blocking`] survives only as a default-method shim
+//! (`post_recv(..).wait_untracked()`) for incremental migration and
+//! one-shot control paths.
+//!
+//! Two implementations exist:
 //!
 //! * [`Fabric`] (here) — an in-process mailbox with per-pair byte
 //!   accounting, shared by every rank of a sequential or threaded run.
-//!   Experiments get exact communication volumes "for free"; those byte
-//!   counts feed the [`crate::sim`] link model to estimate what the same
-//!   schedule costs on the paper's testbeds.
-//! * [`crate::net::TcpTransport`] — real length-prefixed frames over
-//!   localhost TCP sockets, one instance per OS process (one rank each).
+//!   Posted receives reserve a slot on the (src, dst, tag) FIFO; a send
+//!   fulfills the oldest live reservation directly, waking any parked
+//!   waiter. Experiments get exact communication volumes "for free";
+//!   those byte counts feed the [`crate::sim`] link model.
+//! * [`crate::net::TcpTransport`] — real length-prefixed frames over TCP
+//!   sockets, one instance per OS process (one rank each). Its reader
+//!   threads fulfill posted handles straight from the socket demux, so a
+//!   receive posted before a GEMM is complete by the time the rank asks
+//!   for it.
 //!
-//! Staleness is encoded in [`Tag`]s, so the same schedule is
-//! deterministic over either transport.
+//! Both implementations run the shared conformance suite in
+//! `tests/transport_conformance.rs` (post/try/wait ordering, FIFO per
+//! tag, drop-without-wait safety, byte accounting). Staleness is encoded
+//! in [`Tag`]s, so the same schedule is deterministic over either
+//! transport.
 
 pub mod allreduce;
 pub mod topology;
 
+use std::collections::BTreeMap;
 use std::collections::HashMap;
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::util::timer::Stopwatch;
 
 /// Which tensor a message carries (Algorithm 1's two comm streams).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Phase {
     /// boundary features, forward pass (thread_f in Alg. 1)
     FwdFeat,
@@ -31,7 +53,7 @@ pub enum Phase {
     BwdGrad,
     /// model-gradient all-reduce chunks
     Reduce,
-    /// control/setup (boundary-set exchange)
+    /// control/setup (boundary-set exchange, per-epoch loss reduction)
     Setup,
 }
 
@@ -73,9 +95,275 @@ impl Tag {
     }
 }
 
-/// The message-passing contract the training schedule runs over,
-/// extracted from the [`Fabric`] API: tagged f32 payloads between ranks,
-/// FIFO per (src, dst, tag), with per-rank payload-byte accounting.
+// ---------------------------------------------------------------------
+// Posted-receive machinery shared by every transport implementation
+// ---------------------------------------------------------------------
+
+/// State of one posted receive, shared between the poster's handle and
+/// the transport side that fulfills it. The slot mutex is only ever held
+/// briefly; blocking waits park on the owning transport's condvar. Lock
+/// order everywhere: transport state first, then the slot.
+#[derive(Debug)]
+pub(crate) enum SlotState {
+    /// posted, no payload yet
+    Pending,
+    /// fulfilled (delivery sequence number + payload), not yet claimed.
+    /// The sequence number is what lets a dropped-without-take handle
+    /// reinsert its payload at the right FIFO position.
+    Ready(u64, Vec<f32>),
+    /// payload claimed by the handle (terminal)
+    Taken,
+    /// handle dropped before fulfillment (terminal) — fulfillers skip
+    /// cancelled reservations and deliver to the next one (or the queue)
+    Cancelled,
+}
+
+pub(crate) type SlotRef = Arc<Mutex<SlotState>>;
+
+/// A message parked in a transport queue: (delivery sequence, payload).
+pub(crate) type Queued = (u64, Vec<f32>);
+
+pub(crate) fn new_slot() -> SlotRef {
+    Arc::new(Mutex::new(SlotState::Pending))
+}
+
+/// Fulfill `slot` with `payload` (delivery sequence `seq`) if it is
+/// still pending. Returns the message back when the reservation was
+/// cancelled (the caller must deliver it elsewhere).
+pub(crate) fn fulfill(slot: &SlotRef, seq: u64, payload: Vec<f32>) -> Option<Queued> {
+    let mut g = slot.lock().unwrap();
+    match &*g {
+        SlotState::Pending => {
+            *g = SlotState::Ready(seq, payload);
+            None
+        }
+        SlotState::Cancelled => Some((seq, payload)),
+        other => panic!("fulfilling a receive slot in state {other:?}"),
+    }
+}
+
+/// Offer a message to the oldest live reservation in `q` (cancelled
+/// slots are discarded as they are found). Returns the message back
+/// when no live reservation remains — the caller queues it. This is
+/// the one fulfillment loop both transports (and the drop-recovery
+/// paths) share, so delivery order has a single implementation.
+pub(crate) fn offer(q: &mut VecDeque<SlotRef>, seq: u64, payload: Vec<f32>) -> Option<Queued> {
+    let mut item = Some((seq, payload));
+    while let Some(slot) = q.pop_front() {
+        let (s, p) = item.take().unwrap();
+        match fulfill(&slot, s, p) {
+            // delivered to a live handle
+            None => return None,
+            // cancelled reservation: try the next
+            Some(back) => item = Some(back),
+        }
+    }
+    item
+}
+
+/// Reinsert a recovered message at its sequence position — dropped
+/// fulfilled handles restore exact send order no matter how many
+/// recover, in whatever order.
+pub(crate) fn requeue_in_order(q: &mut VecDeque<Queued>, seq: u64, payload: Vec<f32>) {
+    let pos = q.iter().position(|(s, _)| *s > seq).unwrap_or(q.len());
+    q.insert(pos, (seq, payload));
+}
+
+/// Claim a fulfilled slot's payload (→ `Taken`); `None` while pending.
+pub(crate) fn take_ready(slot: &SlotRef) -> Option<Vec<f32>> {
+    let mut g = slot.lock().unwrap();
+    if matches!(&*g, SlotState::Ready(..)) {
+        match std::mem::replace(&mut *g, SlotState::Taken) {
+            SlotState::Ready(_, p) => Some(p),
+            _ => unreachable!(),
+        }
+    } else {
+        None
+    }
+}
+
+/// Transport-specific completion backend behind a [`RecvHandle`]. The
+/// concrete type's `Drop` owns cancellation: a handle dropped without
+/// taking its payload must remove its reservation (still pending), or —
+/// already fulfilled — hand the payload to the oldest pending sibling
+/// reservation, falling back to the head of the FIFO. A dropped handle
+/// never loses a message and never strands a sibling.
+pub(crate) trait RecvFuture: Send {
+    /// Claim the payload if it has arrived; never blocks.
+    fn try_take(&mut self) -> Option<Vec<f32>>;
+    /// Park until the payload arrives, then claim it.
+    fn wait_take(&mut self) -> Vec<f32>;
+}
+
+/// A pending receive posted with [`Transport::post_recv`]. The handle is
+/// the completion side of the nonblocking contract: the transport keeps
+/// delivering behind it while the rank computes, and the schedule only
+/// parks — via [`RecvHandle::wait`] — at the true point of use.
+pub struct RecvHandle {
+    src: usize,
+    dst: usize,
+    tag: Tag,
+    fut: Box<dyn RecvFuture>,
+}
+
+impl RecvHandle {
+    pub(crate) fn new(src: usize, dst: usize, tag: Tag, fut: Box<dyn RecvFuture>) -> RecvHandle {
+        RecvHandle { src, dst, tag, fut }
+    }
+
+    pub fn src(&self) -> usize {
+        self.src
+    }
+
+    pub fn dst(&self) -> usize {
+        self.dst
+    }
+
+    pub fn tag(&self) -> Tag {
+        self.tag
+    }
+
+    /// Claim the payload if it has already arrived; never blocks. After
+    /// `Some`, the handle is spent (dropping it is a no-op).
+    pub fn try_take(&mut self) -> Option<Vec<f32>> {
+        self.fut.try_take()
+    }
+
+    /// Block until the payload arrives. Time actually spent parked is
+    /// charged to `stats` under this handle's `(layer, phase)`; a
+    /// receive that had already completed counts as *hidden* (fully
+    /// overlapped with compute) and charges ~nothing.
+    pub fn wait(mut self, stats: &mut WaitStats) -> Vec<f32> {
+        if let Some(v) = self.fut.try_take() {
+            stats.hit(self.tag);
+            return v;
+        }
+        let w = Stopwatch::start();
+        let v = self.fut.wait_take();
+        stats.charge(self.tag, w.elapsed_secs());
+        v
+    }
+
+    /// [`RecvHandle::wait`] without attribution (setup/control paths
+    /// and the [`Transport::recv_blocking`] shim).
+    pub fn wait_untracked(mut self) -> Vec<f32> {
+        self.fut.wait_take()
+    }
+
+    /// Claim a payload that must already be there (the sequential
+    /// engine's replay, where the producer ran earlier in program
+    /// order). Panics with a diagnostic naming the exact message.
+    pub fn take_now(mut self) -> Vec<f32> {
+        match self.fut.try_take() {
+            Some(v) => v,
+            None => panic!(
+                "no message {}->{} for {:?} (the posted receive was never fulfilled)",
+                self.src, self.dst, self.tag
+            ),
+        }
+    }
+}
+
+impl std::fmt::Debug for RecvHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RecvHandle")
+            .field("src", &self.src)
+            .field("dst", &self.dst)
+            .field("tag", &self.tag)
+            .finish()
+    }
+}
+
+/// Per-`(layer, phase)` comm-wait accounting, filled by
+/// [`RecvHandle::wait`]. This is the measured overlap of the pipelined
+/// schedule: `total_secs` is the time the rank sat parked in receives,
+/// broken down by where in the schedule it parked, and
+/// [`WaitStats::overlap_ratio`] is the fraction of receives whose
+/// communication was fully hidden behind compute.
+#[derive(Default, Clone, Debug)]
+pub struct WaitStats {
+    /// seconds parked, keyed by (phase, layer) — BTreeMap so emitted
+    /// breakdowns have a stable key order
+    by: BTreeMap<(Phase, u16), f64>,
+    hidden: u64,
+    exposed: u64,
+}
+
+impl WaitStats {
+    /// A receive that had to park for `secs`.
+    pub fn charge(&mut self, tag: Tag, secs: f64) {
+        self.exposed += 1;
+        *self.by.entry((tag.phase, tag.layer)).or_insert(0.0) += secs;
+    }
+
+    /// A receive that was already complete when waited on (its key still
+    /// appears in the breakdown, at +0 time).
+    pub fn hit(&mut self, tag: Tag) {
+        self.hidden += 1;
+        self.by.entry((tag.phase, tag.layer)).or_insert(0.0);
+    }
+
+    /// Receives already complete at their wait point.
+    pub fn hidden(&self) -> u64 {
+        self.hidden
+    }
+
+    /// Receives that had to park.
+    pub fn exposed(&self) -> u64 {
+        self.exposed
+    }
+
+    /// Total parked seconds across every key.
+    pub fn total_secs(&self) -> f64 {
+        self.by.values().sum()
+    }
+
+    /// Fraction of waited receives that were already complete — 1.0 when
+    /// every receive was hidden behind compute (or none were waited).
+    pub fn overlap_ratio(&self) -> f64 {
+        let n = self.hidden + self.exposed;
+        if n == 0 {
+            1.0
+        } else {
+            self.hidden as f64 / n as f64
+        }
+    }
+
+    /// Breakdown in milliseconds under stable keys: `fwd_l{layer}` /
+    /// `bwd_l{layer}` per layer, `reduce` and `setup` collapsed across
+    /// the tag's layer field (ring steps / source ranks are not layers).
+    /// The values sum to the total the epoch rows report as
+    /// `comm_wait_ms`.
+    pub fn entries_ms(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = Vec::new();
+        for (&(phase, layer), &secs) in &self.by {
+            let key = match phase {
+                Phase::FwdFeat => format!("fwd_l{layer}"),
+                Phase::BwdGrad => format!("bwd_l{layer}"),
+                Phase::Reduce => "reduce".to_string(),
+                Phase::Setup => "setup".to_string(),
+            };
+            match out.iter_mut().find(|(k, _)| *k == key) {
+                Some(e) => e.1 += secs * 1e3,
+                None => out.push((key, secs * 1e3)),
+            }
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &WaitStats) {
+        for (&k, &v) in &other.by {
+            *self.by.entry(k).or_insert(0.0) += v;
+        }
+        self.hidden += other.hidden;
+        self.exposed += other.exposed;
+    }
+}
+
+/// The message-passing contract the training schedule runs over: tagged
+/// f32 payloads between ranks, FIFO per (src, dst, tag), nonblocking
+/// sends, posted (handle-completed) receives, and per-rank payload-byte
+/// accounting.
 ///
 /// A shared implementation ([`Fabric`]) serves every rank of an
 /// in-process run; a per-process implementation
@@ -88,8 +376,21 @@ pub trait Transport: Send + Sync {
     /// the consumer (queued in-process, or handed to a writer thread).
     fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>);
 
-    /// Blocking receive of the oldest (src → dst, tag) message.
-    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32>;
+    /// Post a receive for the oldest (src → dst, tag) message and return
+    /// immediately; the transport completes the handle in the background
+    /// (a send into the fabric, or a frame off the reader thread) while
+    /// the caller computes. Reservations for one (src, dst, tag) are
+    /// served in post order.
+    fn post_recv(&self, src: usize, dst: usize, tag: Tag) -> RecvHandle;
+
+    /// Blocking receive of the oldest (src → dst, tag) message — a shim
+    /// over [`Transport::post_recv`] + [`RecvHandle::wait_untracked`],
+    /// kept so control paths (and downstream code migrating to handles)
+    /// stay one call. Park time is not attributed anywhere; schedule hot
+    /// paths should post early and [`RecvHandle::wait`] instead.
+    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        self.post_recv(src, dst, tag).wait_untracked()
+    }
 
     /// Total payload bytes rank `src` has sent so far (4 bytes per f32;
     /// framing overhead excluded so volumes are comparable across
@@ -106,12 +407,12 @@ impl Transport for Fabric {
         Fabric::send(self, src, dst, tag, payload)
     }
 
-    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
-        Fabric::recv_blocking(self, src, dst, tag)
+    fn post_recv(&self, src: usize, dst: usize, tag: Tag) -> RecvHandle {
+        Fabric::post_recv(self, src, dst, tag)
     }
 
     fn bytes_sent(&self, src: usize) -> u64 {
-        let g = self.inner.lock().unwrap();
+        let g = self.shared.inner.lock().unwrap();
         g.bytes[src].iter().sum()
     }
 }
@@ -151,32 +452,115 @@ pub fn decode_f64s(payload: &[f32]) -> Vec<f64> {
 
 #[derive(Default)]
 struct FabricInner {
-    /// queues[(src, dst)][tag] — FIFO per (pair, tag)
-    queues: HashMap<(u32, u32), HashMap<Tag, VecDeque<Vec<f32>>>>,
+    /// queues[(src, dst)][tag] — sequence-stamped FIFO per (pair, tag)
+    queues: HashMap<(u32, u32), HashMap<Tag, VecDeque<Queued>>>,
+    /// posted-but-unfulfilled receives, FIFO per (pair, tag) — a send
+    /// fulfills the oldest live reservation before touching the queue
+    reservations: HashMap<(u32, u32), HashMap<Tag, VecDeque<SlotRef>>>,
+    /// delivery sequence counter (stamps every sent message)
+    seq: u64,
     /// bytes[src][dst]
     bytes: Vec<Vec<u64>>,
     /// messages[src][dst]
     msgs: Vec<Vec<u64>>,
 }
 
-/// In-process fabric between `n` ranks. Thread-safe; `recv_blocking`
-/// parks on a condvar so a threaded runner can genuinely overlap.
-pub struct Fabric {
-    n: usize,
+/// The lock + condvar the fabric and its outstanding receive handles
+/// share (handles outlive any borrow of the [`Fabric`] itself).
+struct FabricShared {
     inner: Mutex<FabricInner>,
     cv: Condvar,
+}
+
+/// In-process fabric between `n` ranks. Thread-safe; posted receives
+/// park on a condvar, so a threaded runner genuinely overlaps.
+pub struct Fabric {
+    n: usize,
+    shared: Arc<FabricShared>,
+}
+
+/// [`RecvFuture`] over the in-process fabric.
+struct FabricRecv {
+    shared: Arc<FabricShared>,
+    key: (u32, u32),
+    tag: Tag,
+    slot: SlotRef,
+}
+
+impl RecvFuture for FabricRecv {
+    fn try_take(&mut self) -> Option<Vec<f32>> {
+        take_ready(&self.slot)
+    }
+
+    fn wait_take(&mut self) -> Vec<f32> {
+        let mut g = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(v) = take_ready(&self.slot) {
+                return v;
+            }
+            g = self.shared.cv.wait(g).unwrap();
+        }
+    }
+}
+
+impl Drop for FabricRecv {
+    fn drop(&mut self) {
+        // lock order: fabric inner first, then the slot (same as send)
+        let mut g = self.shared.inner.lock().unwrap();
+        let mut slot = self.slot.lock().unwrap();
+        match std::mem::replace(&mut *slot, SlotState::Cancelled) {
+            SlotState::Pending => {
+                // withdraw the reservation so no send fulfills a ghost
+                if let Some(m) = g.reservations.get_mut(&self.key) {
+                    if let Some(q) = m.get_mut(&self.tag) {
+                        q.retain(|s| !Arc::ptr_eq(s, &self.slot));
+                        if q.is_empty() {
+                            m.remove(&self.tag);
+                        }
+                    }
+                }
+            }
+            SlotState::Ready(seq, p) => {
+                // fulfilled but never taken: hand the message to the
+                // oldest still-pending sibling reservation (which would
+                // otherwise park forever — sends only fulfill once), or
+                // reinsert it at its sequence position in the FIFO
+                let mut item = Some((seq, p));
+                if let Some(m) = g.reservations.get_mut(&self.key) {
+                    if let Some(q) = m.get_mut(&self.tag) {
+                        let (s, p) = item.take().unwrap();
+                        item = offer(q, s, p);
+                        if q.is_empty() {
+                            m.remove(&self.tag);
+                        }
+                    }
+                }
+                if let Some((s, p)) = item {
+                    let q = g.queues.entry(self.key).or_default().entry(self.tag).or_default();
+                    requeue_in_order(q, s, p);
+                }
+                self.shared.cv.notify_all();
+            }
+            SlotState::Taken => *slot = SlotState::Taken,
+            SlotState::Cancelled => {}
+        }
+    }
 }
 
 impl Fabric {
     pub fn new(n: usize) -> Fabric {
         Fabric {
             n,
-            inner: Mutex::new(FabricInner {
-                queues: HashMap::new(),
-                bytes: vec![vec![0; n]; n],
-                msgs: vec![vec![0; n]; n],
+            shared: Arc::new(FabricShared {
+                inner: Mutex::new(FabricInner {
+                    queues: HashMap::new(),
+                    reservations: HashMap::new(),
+                    seq: 0,
+                    bytes: vec![vec![0; n]; n],
+                    msgs: vec![vec![0; n]; n],
+                }),
+                cv: Condvar::new(),
             }),
-            cv: Condvar::new(),
         }
     }
 
@@ -184,74 +568,118 @@ impl Fabric {
         self.n
     }
 
-    /// Send `payload` from `src` to `dst` under `tag`.
+    /// Send `payload` from `src` to `dst` under `tag`: fulfill the
+    /// oldest live reservation, or queue for a later receive.
     pub fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert!(src < self.n && dst < self.n);
-        let mut g = self.inner.lock().unwrap();
+        let key = (src as u32, dst as u32);
+        let mut g = self.shared.inner.lock().unwrap();
         g.bytes[src][dst] += (payload.len() * 4) as u64;
         g.msgs[src][dst] += 1;
-        g.queues
-            .entry((src as u32, dst as u32))
-            .or_default()
-            .entry(tag)
-            .or_default()
-            .push_back(payload);
-        self.cv.notify_all();
-    }
-
-    /// Non-blocking receive of the oldest message (src→dst, tag).
-    pub fn try_recv(&self, src: usize, dst: usize, tag: Tag) -> Option<Vec<f32>> {
-        let mut g = self.inner.lock().unwrap();
-        g.queues
-            .get_mut(&(src as u32, dst as u32))
-            .and_then(|m| m.get_mut(&tag))
-            .and_then(|q| q.pop_front())
-    }
-
-    /// Blocking receive (threaded runner).
-    pub fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(v) = g
-                .queues
-                .get_mut(&(src as u32, dst as u32))
-                .and_then(|m| m.get_mut(&tag))
-                .and_then(|q| q.pop_front())
-            {
-                return v;
+        g.seq += 1;
+        let seq = g.seq;
+        let mut item = Some((seq, payload));
+        if let Some(m) = g.reservations.get_mut(&key) {
+            if let Some(q) = m.get_mut(&tag) {
+                let (s, p) = item.take().unwrap();
+                item = offer(q, s, p);
+                // tags are epoch-unique: emptied per-tag entries must
+                // go, or long runs leak one dead entry per receive
+                if q.is_empty() {
+                    m.remove(&tag);
+                }
             }
-            g = self.cv.wait(g).unwrap();
         }
+        if let Some((s, p)) = item {
+            g.queues.entry(key).or_default().entry(tag).or_default().push_back((s, p));
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Pop the oldest queued (key, tag) message, pruning emptied per-tag
+    /// entries (tags are epoch-unique, so dead entries never get reused).
+    fn pop_queued(g: &mut FabricInner, key: (u32, u32), tag: Tag) -> Option<Queued> {
+        let m = g.queues.get_mut(&key)?;
+        let q = m.get_mut(&tag)?;
+        let p = q.pop_front();
+        if q.is_empty() {
+            m.remove(&tag);
+        }
+        p
+    }
+
+    /// Post a receive for the oldest (src → dst, tag) message; completes
+    /// immediately when one is already queued, otherwise the next
+    /// matching send fulfills it.
+    pub fn post_recv(&self, src: usize, dst: usize, tag: Tag) -> RecvHandle {
+        assert!(src < self.n && dst < self.n);
+        let key = (src as u32, dst as u32);
+        let slot = new_slot();
+        {
+            let mut g = self.shared.inner.lock().unwrap();
+            match Fabric::pop_queued(&mut g, key, tag) {
+                Some((s, p)) => {
+                    let leftover = fulfill(&slot, s, p);
+                    debug_assert!(leftover.is_none());
+                }
+                None => {
+                    g.reservations
+                        .entry(key)
+                        .or_default()
+                        .entry(tag)
+                        .or_default()
+                        .push_back(slot.clone());
+                }
+            }
+        }
+        RecvHandle::new(
+            src,
+            dst,
+            tag,
+            Box::new(FabricRecv { shared: self.shared.clone(), key, tag, slot }),
+        )
+    }
+
+    /// Non-blocking receive of the oldest queued message (src→dst, tag).
+    /// Bypasses posted reservations (tests / diagnostics).
+    pub fn try_recv(&self, src: usize, dst: usize, tag: Tag) -> Option<Vec<f32>> {
+        let mut g = self.shared.inner.lock().unwrap();
+        Fabric::pop_queued(&mut g, (src as u32, dst as u32), tag).map(|(_, p)| p)
+    }
+
+    /// Blocking receive (control paths) — the handle API end to end.
+    pub fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+        self.post_recv(src, dst, tag).wait_untracked()
     }
 
     /// Receive that must succeed immediately (sequential trainer, where
-    /// the producer already ran). Panics with a diagnostic otherwise.
+    /// the producer already ran). Routed through the handle API so the
+    /// failure diagnostic always names the exact (src, dst, tag).
     pub fn recv_now(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
-        self.try_recv(src, dst, tag)
-            .unwrap_or_else(|| panic!("no message {src}->{dst} for {tag:?}"))
+        self.post_recv(src, dst, tag).take_now()
     }
 
     /// Total bytes sent src→dst so far.
     pub fn bytes(&self, src: usize, dst: usize) -> u64 {
-        self.inner.lock().unwrap().bytes[src][dst]
+        self.shared.inner.lock().unwrap().bytes[src][dst]
     }
 
     /// Full byte matrix snapshot.
     pub fn byte_matrix(&self) -> Vec<Vec<u64>> {
-        self.inner.lock().unwrap().bytes.clone()
+        self.shared.inner.lock().unwrap().bytes.clone()
     }
 
     pub fn total_bytes(&self) -> u64 {
-        self.inner.lock().unwrap().bytes.iter().flatten().sum()
+        self.shared.inner.lock().unwrap().bytes.iter().flatten().sum()
     }
 
     pub fn total_msgs(&self) -> u64 {
-        self.inner.lock().unwrap().msgs.iter().flatten().sum()
+        self.shared.inner.lock().unwrap().msgs.iter().flatten().sum()
     }
 
     /// Reset byte/message counters (keep queued messages).
     pub fn reset_counters(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shared.inner.lock().unwrap();
         for row in g.bytes.iter_mut() {
             row.iter_mut().for_each(|b| *b = 0);
         }
@@ -260,9 +688,11 @@ impl Fabric {
         }
     }
 
-    /// Number of messages still queued (tests: catch leaks / wrong tags).
+    /// Number of messages still queued (tests: catch leaks / wrong
+    /// tags). Messages already delivered to a live posted handle are not
+    /// queued — they are accounted by that handle.
     pub fn pending(&self) -> usize {
-        let g = self.inner.lock().unwrap();
+        let g = self.shared.inner.lock().unwrap();
         g.queues.values().flat_map(|m| m.values()).map(|q| q.len()).sum()
     }
 }
@@ -314,7 +744,6 @@ mod tests {
 
     #[test]
     fn blocking_recv_across_threads() {
-        use std::sync::Arc;
         let f = Arc::new(Fabric::new(2));
         let t = Tag::new(5, 1, Phase::FwdFeat);
         let f2 = f.clone();
@@ -325,10 +754,149 @@ mod tests {
     }
 
     #[test]
+    fn posted_recv_completes_on_send() {
+        let f = Fabric::new(2);
+        let t = Tag::new(3, 1, Phase::FwdFeat);
+        let mut h = f.post_recv(0, 1, t);
+        assert_eq!(h.try_take(), None, "nothing sent yet");
+        f.send(0, 1, t, vec![4.0, 5.0]);
+        // fulfilled directly by the send — never entered the queue
+        assert_eq!(f.pending(), 0);
+        assert_eq!(h.try_take(), Some(vec![4.0, 5.0]));
+    }
+
+    #[test]
+    fn posted_recv_wait_parks_until_send() {
+        let f = Arc::new(Fabric::new(2));
+        let t = Tag::new(9, 0, Phase::BwdGrad);
+        let h = f.post_recv(0, 1, t);
+        let waiter = std::thread::spawn(move || {
+            let mut stats = WaitStats::default();
+            let v = h.wait(&mut stats);
+            (v, stats)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        f.send(0, 1, t, vec![6.0]);
+        let (v, stats) = waiter.join().unwrap();
+        assert_eq!(v, vec![6.0]);
+        // exactly one receive was accounted; whether it parked or the
+        // send won the race is scheduler timing, not a contract
+        assert_eq!(stats.hidden() + stats.exposed(), 1);
+        assert!(stats.total_secs() >= 0.0);
+    }
+
+    #[test]
+    fn reservations_serve_in_post_order() {
+        let f = Fabric::new(2);
+        let t = Tag::new(1, 2, Phase::FwdFeat);
+        let mut h1 = f.post_recv(0, 1, t);
+        let mut h2 = f.post_recv(0, 1, t);
+        f.send(0, 1, t, vec![1.0]);
+        f.send(0, 1, t, vec![2.0]);
+        assert_eq!(h2.try_take(), Some(vec![2.0]));
+        assert_eq!(h1.try_take(), Some(vec![1.0]));
+    }
+
+    #[test]
+    fn dropped_pending_handle_leaks_nothing() {
+        let f = Fabric::new(2);
+        let t = Tag::new(4, 0, Phase::FwdFeat);
+        drop(f.post_recv(0, 1, t));
+        f.send(0, 1, t, vec![8.0]);
+        // the cancelled reservation did not swallow the message
+        assert_eq!(f.pending(), 1);
+        assert_eq!(f.recv_blocking(0, 1, t), vec![8.0]);
+    }
+
+    #[test]
+    fn dropped_fulfilled_handle_requeues_payload() {
+        let f = Fabric::new(2);
+        let t = Tag::new(4, 1, Phase::BwdGrad);
+        f.send(0, 1, t, vec![1.5]);
+        f.send(0, 1, t, vec![2.5]);
+        let h = f.post_recv(0, 1, t); // claims 1.5
+        drop(h); // never taken: 1.5 goes back to the head
+        assert_eq!(f.recv_blocking(0, 1, t), vec![1.5]);
+        assert_eq!(f.recv_blocking(0, 1, t), vec![2.5]);
+    }
+
+    #[test]
+    fn dropped_fulfilled_handles_restore_send_order() {
+        let f = Fabric::new(2);
+        let t = Tag::new(5, 0, Phase::FwdFeat);
+        f.send(0, 1, t, vec![1.0]);
+        f.send(0, 1, t, vec![2.0]);
+        let h1 = f.post_recv(0, 1, t); // claims 1.0
+        let h2 = f.post_recv(0, 1, t); // claims 2.0
+        // drop in fulfillment order — naive head-reinsertion would
+        // reverse the FIFO here; sequence stamps must restore it
+        drop(h1);
+        drop(h2);
+        assert_eq!(f.recv_blocking(0, 1, t), vec![1.0]);
+        assert_eq!(f.recv_blocking(0, 1, t), vec![2.0]);
+        assert_eq!(f.pending(), 0);
+    }
+
+    #[test]
+    fn dropped_fulfilled_handle_refulfills_pending_sibling() {
+        let f = Fabric::new(2);
+        let t = Tag::new(4, 2, Phase::BwdGrad);
+        f.send(0, 1, t, vec![9.5]);
+        let h_old = f.post_recv(0, 1, t); // claims 9.5
+        let mut h_next = f.post_recv(0, 1, t); // still pending
+        drop(h_old); // must re-fulfill the sibling, not strand it
+        assert_eq!(h_next.try_take(), Some(vec![9.5]));
+        assert_eq!(f.pending(), 0);
+    }
+
+    #[test]
+    fn wait_stats_attribute_per_layer_and_phase() {
+        let mut s = WaitStats::default();
+        s.charge(Tag::new(1, 0, Phase::FwdFeat), 0.25);
+        s.charge(Tag::new(1, 0, Phase::FwdFeat), 0.25);
+        s.charge(Tag::new(1, 1, Phase::BwdGrad), 0.5);
+        s.charge(Tag::new(1, 3, Phase::Reduce), 0.125);
+        s.charge(Tag::new(1, 7, Phase::Reduce), 0.125);
+        s.hit(Tag::new(1, 1, Phase::FwdFeat));
+        assert_eq!(s.hidden(), 1);
+        assert_eq!(s.exposed(), 5);
+        assert!((s.total_secs() - 1.25).abs() < 1e-12);
+        assert!((s.overlap_ratio() - 1.0 / 6.0).abs() < 1e-12);
+        let entries = s.entries_ms();
+        let get = |k: &str| entries.iter().find(|(e, _)| e == k).map(|(_, v)| *v);
+        assert_eq!(get("fwd_l0"), Some(500.0));
+        assert_eq!(get("fwd_l1"), Some(0.0)); // hidden receives keep keys
+        assert_eq!(get("bwd_l1"), Some(500.0));
+        // ring steps collapse into one key regardless of tag layer
+        assert_eq!(get("reduce"), Some(250.0));
+        let sum: f64 = entries.iter().map(|(_, v)| v).sum();
+        assert!((sum - s.total_secs() * 1e3).abs() < 1e-9);
+        // empty stats: nothing waited means nothing exposed
+        assert_eq!(WaitStats::default().overlap_ratio(), 1.0);
+    }
+
+    #[test]
     #[should_panic(expected = "no message")]
     fn recv_now_panics_when_empty() {
         let f = Fabric::new(2);
         f.recv_now(0, 1, Tag::new(0, 0, Phase::FwdFeat));
+    }
+
+    #[test]
+    fn recv_now_diagnostic_names_src_dst_tag() {
+        let f = Fabric::new(3);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f.recv_now(2, 1, Tag::new(7, 3, Phase::BwdGrad))
+        }))
+        .unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("2->1"), "missing src/dst: {msg}");
+        assert!(msg.contains("BwdGrad"), "missing phase: {msg}");
+        assert!(msg.contains("7"), "missing iter: {msg}");
     }
 
     #[test]
@@ -364,5 +932,9 @@ mod tests {
         assert_eq!(t.bytes_sent(0), 8);
         assert_eq!(t.bytes_sent(1), 0);
         assert_eq!(t.n_ranks(), 2);
+        // the handle path through the trait object
+        t.send(0, 1, tag, vec![3.0]);
+        let mut h = t.post_recv(0, 1, tag);
+        assert_eq!(h.try_take(), Some(vec![3.0]));
     }
 }

@@ -7,10 +7,14 @@
 //!   feature gradients, Eq. 3/4) with the §3.4 smoothing variants
 //!   (-G / -F / -GF).
 //! * [`threaded`] — the transport-generic per-rank schedule
-//!   ([`threaded::run_rank`]): on real threads over the in-process
-//!   fabric ([`threaded::run_threaded_ctl`], the `Engine::Threaded`
-//!   adapter behind [`crate::session::Session`]), or one OS process per
-//!   rank over [`crate::net::TcpTransport`] (`pipegcn launch`). Numerics
+//!   ([`threaded::run_rank`]), **prefetched**: every receive of an epoch
+//!   is posted up front through the nonblocking
+//!   [`crate::comm::Transport::post_recv`] handles and waited at its
+//!   point of use, with park time attributed per (layer, phase). Runs on
+//!   real threads over the in-process fabric
+//!   ([`threaded::run_threaded_ctl`], the `Engine::Threaded` adapter
+//!   behind [`crate::session::Session`]), or one OS process per rank
+//!   over [`crate::net::TcpTransport`] (`pipegcn launch`). Numerics
 //!   match the sequential engine exactly in every case.
 //!
 //! Numeric fidelity notes are in DESIGN.md §4.
@@ -132,7 +136,7 @@ impl TrainConfig {
 }
 
 /// Per-epoch statistics.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct EpochStat {
     pub epoch: usize,
     pub train_loss: f64,
@@ -144,10 +148,17 @@ pub struct EpochStat {
     /// of `epoch_ms`: everything not spent blocked on a receive
     /// (`epoch_ms − comm_wait_ms`, uniformly defined in every engine)
     pub comp_ms: f64,
-    /// of `epoch_ms`: time blocked waiting on boundary/collective
-    /// receives (structurally 0 in the sequential engine — `recv_now`
+    /// of `epoch_ms`: time parked waiting on posted boundary/collective
+    /// receives (structurally 0 in the sequential engine — `take_now`
     /// never waits; real in the threaded/TCP per-rank schedule)
     pub comm_wait_ms: f64,
+    /// `comm_wait_ms` broken down per schedule point (stable keys:
+    /// `fwd_l{l}` / `bwd_l{l}` / `reduce` / `setup`, values in ms
+    /// summing to `comm_wait_ms`); empty where wait is structurally 0
+    pub comm_wait_by: Vec<(String, f64)>,
+    /// fraction of posted receives already complete when waited on
+    /// (1.0 = every receive fully hidden behind compute)
+    pub overlap_ratio: f64,
     /// payload bytes moved through the fabric during this epoch
     pub comm_bytes: u64,
 }

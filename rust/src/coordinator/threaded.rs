@@ -6,29 +6,39 @@
 //! [`Transport`] contract, so the identical code drives:
 //!
 //! * [`run_threaded_ctl`]: one OS thread per partition over the
-//!   in-process [`Fabric`] (concurrent blocking receives, single
-//!   process) — the `Engine::Threaded` adapter behind
-//!   [`crate::session::Session`], and
+//!   in-process [`Fabric`] (single process) — the `Engine::Threaded`
+//!   adapter behind [`crate::session::Session`], and
 //! * the multi-process engine: one OS process per partition over
-//!   [`crate::net::TcpTransport`] (real localhost sockets), launched by
+//!   [`crate::net::TcpTransport`] (real sockets), launched by
 //!   `pipegcn launch` / driven by [`crate::net::worker`].
+//!
+//! **The schedule is prefetched** (Alg. 1's pipelining, made explicit in
+//! the API): at the start of every epoch the rank posts *all* of the
+//! epoch's receives — boundary features per layer, boundary gradients
+//! per layer, the rank-0 loss partials — as nonblocking
+//! [`crate::comm::RecvHandle`]s, and only [`RecvHandle::wait`]s at each
+//! payload's true point of use. In the pipelined variants the fresh
+//! tag-`t` tensors are not needed until the stale buffers are updated,
+//! so their waits sink all the way to a drain step after the backward
+//! pass — the transport completes them behind the epoch's entire
+//! forward/backward compute. Time actually spent parked is attributed
+//! per `(layer, phase)` in a [`WaitStats`], and rank 0's NDJSON run-log
+//! rows carry the breakdown (`comm_wait` keys summing to
+//! `comm_wait_ms`) plus the hidden-receive `overlap_ratio`.
 //!
 //! Every epoch ends with a loss reduction to rank 0 (each rank ships its
 //! partial loss, rank 0 sums in rank order), so rank 0 always holds the
-//! live global loss — it can stream NDJSON run-log rows as epochs finish
-//! instead of after a terminal gather. [`run_rank_ctl`] additionally
-//! snapshots the full [`TrainState`] through [`crate::ckpt`] every
-//! `--ckpt-every` epochs and can start from a restored state, which is
-//! how `pipegcn launch` survives a worker death.
+//! live global loss — it can stream run-log rows as epochs finish.
+//! [`run_rank_ctl`] additionally snapshots the full [`TrainState`]
+//! through [`crate::ckpt`] every `--ckpt-every` epochs (the drain runs
+//! before the snapshot, so checkpoints hold exactly the buffers the
+//! sequential engine would) and can start from a restored state, which
+//! is how `pipegcn launch` survives a worker death.
 //!
 //! The integration tests assert the loss curve is identical to the
-//! sequential engine (the dataflow is deterministic — staleness is
-//! encoded in message tags, not timing luck); the kernels themselves run
-//! on the [`crate::runtime::pool`], whose row-block ownership keeps that
-//! identity at any `--threads` count. Every epoch also records a
-//! wall-time breakdown: time parked in `recv_blocking` is `comm_wait`,
-//! the rest is compute — the measured comm/compute overlap of the
-//! pipelined schedule, streamed in rank 0's run-log rows.
+//! sequential engine — prefetching moves *when receives are posted*,
+//! never which payload a tag resolves to, so staleness stays encoded in
+//! message tags, not timing luck.
 //!
 //! Scope: no probes / work capture (the sequential engine owns those);
 //! evaluation only at the end.
@@ -39,7 +49,8 @@ use super::{TrainConfig, Variant};
 use crate::ckpt;
 use crate::comm::allreduce::step_tag;
 use crate::comm::{
-    decode_f64s, decode_u32s, encode_f64s, encode_u32s, Fabric, Phase, Tag, Transport,
+    decode_f64s, decode_u32s, encode_f64s, encode_u32s, Fabric, Phase, RecvHandle, Tag,
+    Transport, WaitStats,
 };
 use crate::graph::Graph;
 use crate::model::Params;
@@ -49,6 +60,8 @@ use crate::runtime::Backend;
 use crate::tensor::{ops, Mat};
 use crate::util::json::{FileEmitter, Json};
 use crate::util::timer::Stopwatch;
+use std::collections::HashMap;
+use std::collections::VecDeque;
 
 /// Result of a threaded run.
 pub struct ThreadedResult {
@@ -60,32 +73,40 @@ pub struct ThreadedResult {
     pub final_test: f64,
     /// total payload bytes through the fabric (setup + all epochs)
     pub comm_bytes: u64,
+    /// rank 0's total ms parked in receives (prefetched schedule)
+    pub comm_wait_ms: f64,
+    /// rank 0's fraction of receives already complete when waited on
+    pub overlap_ratio: f64,
 }
 
-/// Blocking receive that charges the time spent parked to `wait_s` —
-/// the measured comm-wait half of the comp/comm overlap breakdown.
-fn recv_timed(
-    transport: &dyn Transport,
-    src: usize,
-    dst: usize,
-    tag: Tag,
-    wait_s: &mut f64,
-) -> Vec<f32> {
-    let w = Stopwatch::start();
-    let v = transport.recv_blocking(src, dst, tag);
-    *wait_s += w.elapsed_secs();
-    v
+/// What one rank's executed epochs hand back: the losses plus the
+/// measured comm/compute overlap of the prefetched schedule.
+#[derive(Clone, Debug)]
+pub struct RankReport {
+    /// per-epoch losses (**global** on rank 0, which drives the
+    /// per-epoch loss reduction; this rank's partials elsewhere)
+    pub losses: Vec<f64>,
+    /// total ms parked in receives across the executed epochs
+    pub comm_wait_ms: f64,
+    /// fraction of waited receives already complete at their wait point
+    /// (1.0 = every receive fully hidden behind compute)
+    pub overlap_ratio: f64,
+    /// parked ms per schedule point (`fwd_l{l}` / `bwd_l{l}` / `reduce`
+    /// / `setup`), summing to `comm_wait_ms`
+    pub comm_wait_by: Vec<(String, f64)>,
 }
 
-/// Per-rank ring all-reduce over any transport (blocking receives).
-/// Receive waits are charged to `wait_s`.
+/// Per-rank ring all-reduce over any transport. Every step's receive is
+/// posted up front (step tags are unique within an iteration), so the
+/// transport can complete step `s+1`'s payload while step `s` still
+/// folds; parked time lands in `stats` under the `reduce` key.
 fn ring_allreduce_rank(
     transport: &dyn Transport,
     rank: usize,
     n: usize,
     buf: &mut [f32],
     iter: u32,
-    wait_s: &mut f64,
+    stats: &mut WaitStats,
 ) {
     if n <= 1 || buf.is_empty() {
         return;
@@ -95,12 +116,16 @@ fn ring_allreduce_rank(
     let chunk = |c: usize| starts[c % n]..starts[c % n + 1];
     let next = (rank + 1) % n;
     let prev = (rank + n - 1) % n;
+    let mut handles: VecDeque<RecvHandle> = VecDeque::with_capacity(2 * (n - 1));
+    for s in 0..2 * (n - 1) {
+        handles.push_back(transport.post_recv(prev, rank, step_tag(iter, s, n)));
+    }
     for s in 0..n - 1 {
         let tag = step_tag(iter, s, n);
         let c_send = (rank + n - s) % n;
         transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + n - s) % n;
-        let recv = recv_timed(transport, prev, rank, tag, wait_s);
+        let recv = handles.pop_front().unwrap().wait(stats);
         for (d, v) in buf[chunk(c_recv)].iter_mut().zip(recv) {
             *d += v;
         }
@@ -110,7 +135,7 @@ fn ring_allreduce_rank(
         let c_send = (rank + 1 + n - s) % n;
         transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + 1 + n - s) % n;
-        let recv = recv_timed(transport, prev, rank, tag, wait_s);
+        let recv = handles.pop_front().unwrap().wait(stats);
         buf[chunk(c_recv)].copy_from_slice(&recv);
     }
 }
@@ -174,8 +199,9 @@ pub struct RankCtl<'a> {
     /// snapshot the full training state into `policy.dir` every
     /// `policy.every` epochs
     pub ckpt: Option<&'a ckpt::Policy>,
-    /// rank 0 only: emit one NDJSON row per epoch, live —
-    /// `{epoch, loss, epoch_ms, comp_ms, comm_wait_ms}`
+    /// rank 0 only: emit one NDJSON row per epoch, live — `{epoch,
+    /// loss, epoch_ms, comp_ms, comm_wait_ms, overlap_ratio, comm_wait}`
+    /// where `comm_wait` is the per-(layer, phase) breakdown
     pub log: Option<&'a mut FileEmitter>,
     /// fault injection (`pipegcn worker --fail-epoch`): exit(13) right
     /// after this epoch completes, simulating a worker death mid-run
@@ -183,11 +209,10 @@ pub struct RankCtl<'a> {
 }
 
 /// Run rank `rank`'s full training schedule over `transport`, starting
-/// from a fresh state. Numerics match [`super::trainer::train_resumable`]
-/// exactly
-/// (same seeds ⇒ same parameters); returns the rank's per-epoch losses
-/// (**global** on rank 0, which drives the per-epoch loss reduction;
-/// this rank's partials elsewhere) and its final parameter copy
+/// from a fresh state. Numerics match
+/// [`super::trainer::train_resumable`] exactly (same seeds ⇒ same
+/// parameters); returns the rank's per-epoch losses (**global** on
+/// rank 0; this rank's partials elsewhere) and its final parameter copy
 /// (identical on every rank).
 pub fn run_rank(
     transport: &dyn Transport,
@@ -196,15 +221,15 @@ pub fn run_rank(
     cfg: &TrainConfig,
 ) -> (Vec<f64>, Params) {
     let mut st = TrainState::init(cfg, &plan.parts[rank]);
-    let losses = run_rank_ctl(transport, plan, rank, cfg, &mut st, RankCtl::default())
+    let rep = run_rank_ctl(transport, plan, rank, cfg, &mut st, RankCtl::default())
         .expect("run_rank without checkpointing has no I/O to fail");
-    (losses, st.params)
+    (rep.losses, st.params)
 }
 
 /// [`run_rank`] over an explicit [`TrainState`] — fresh or restored from
 /// a checkpoint — with optional snapshotting and live run logging.
-/// Epochs `st.epoch + 1 ..= cfg.epochs` are trained; the returned losses
-/// cover exactly those epochs.
+/// Epochs `st.epoch + 1 ..= cfg.epochs` are trained; the returned report
+/// covers exactly those epochs.
 pub fn run_rank_ctl(
     transport: &dyn Transport,
     plan: &HaloPlan,
@@ -212,7 +237,7 @@ pub fn run_rank_ctl(
     cfg: &TrainConfig,
     st: &mut TrainState,
     mut ctl: RankCtl<'_>,
-) -> crate::util::error::Result<Vec<f64>> {
+) -> crate::util::error::Result<RankReport> {
     let k = plan.n_parts;
     assert_eq!(transport.n_ranks(), k);
     let n_layers = cfg.model.n_layers();
@@ -231,11 +256,38 @@ pub fn run_rank_ctl(
     let total_train = plan.total_train.max(1) as f64;
     let start = st.epoch + 1;
     let mut losses = Vec::with_capacity(cfg.epochs.saturating_sub(st.epoch));
+    let mut run_stats = WaitStats::default();
     for t in start..=cfg.epochs {
         let epoch_watch = Stopwatch::start();
-        // time blocked in receives this epoch (comm the schedule failed
-        // to hide behind compute); everything else is compute
-        let mut wait_s = 0.0f64;
+        let mut stats = WaitStats::default();
+        // ---- prefetch: post every receive of the epoch ----
+        // The tags of an epoch are fully known up front (they encode
+        // (iter, layer, phase)); posting them all here lets the
+        // transport complete each one the moment its peer sends, while
+        // this rank is inside the kernels below.
+        let mut posted: HashMap<(usize, Tag), RecvHandle> = HashMap::new();
+        for l in 0..n_layers {
+            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+            for j in 0..k {
+                if !p.halo_ranges[j].is_empty() {
+                    posted.insert((j, tag), transport.post_recv(j, rank, tag));
+                }
+            }
+        }
+        for l in 1..n_layers {
+            let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+            for j in 0..k {
+                if j != rank && !p.send_sets[j].is_empty() {
+                    posted.insert((j, tag), transport.post_recv(j, rank, tag));
+                }
+            }
+        }
+        if rank == 0 {
+            for j in 1..k {
+                let tag = loss_tag(t, j);
+                posted.insert((j, tag), transport.post_recv(j, 0, tag));
+            }
+        }
         // ---- forward ----
         let mut h_src: Vec<Mat> = vec![p.features.clone()];
         let mut h_full_c: Vec<Mat> = Vec::new();
@@ -255,17 +307,17 @@ pub fn run_rank_ctl(
                 }
             }
             let halo_mat = if !pipe {
+                // synchronous exchange: this layer's fresh features are
+                // needed right now — wait at the point of use
                 let mut m = Mat::zeros(p.halo.len(), f_in);
                 for j in 0..k {
                     let range = p.halo_ranges[j].clone();
                     if !range.is_empty() {
-                        let payload = recv_timed(
-                            transport,
-                            j,
-                            rank,
-                            Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                            &mut wait_s,
-                        );
+                        let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+                        let payload = posted
+                            .remove(&(j, tag))
+                            .expect("receive posted at epoch start")
+                            .wait(&mut stats);
                         let cols = m.cols;
                         m.data[range.start * cols..range.start * cols + payload.len()]
                             .copy_from_slice(&payload);
@@ -273,30 +325,10 @@ pub fn run_rank_ctl(
                 }
                 m
             } else {
-                let used = st.feat_buf[l].clone();
-                let mut fresh = Mat::zeros(p.halo.len(), f_in);
-                for j in 0..k {
-                    let range = p.halo_ranges[j].clone();
-                    if !range.is_empty() {
-                        let payload = recv_timed(
-                            transport,
-                            j,
-                            rank,
-                            Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                            &mut wait_s,
-                        );
-                        let cols = fresh.cols;
-                        fresh.data[range.start * cols..range.start * cols + payload.len()]
-                            .copy_from_slice(&payload);
-                    }
-                }
-                if opts.smooth_feat && t > 1 {
-                    st.feat_buf[l].scale(opts.gamma);
-                    st.feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
-                } else {
-                    st.feat_buf[l] = fresh;
-                }
-                used
+                // Alg. 1: compute on the iteration-(t−1) buffer; the
+                // fresh tag-t payloads keep arriving behind the posted
+                // handles and are drained after the backward pass
+                st.feat_buf[l].clone()
             };
             let mut assembled = h_src[l].vcat(&halo_mat);
             let (hf, mask) = if dropout > 0.0 {
@@ -330,7 +362,12 @@ pub fn run_rank_ctl(
             // sequential engine, keeping the curve bit-identical
             let mut tot = partial;
             for j in 1..k {
-                tot += decode_f64s(&recv_timed(transport, j, 0, loss_tag(t, j), &mut wait_s))[0];
+                let tag = loss_tag(t, j);
+                let payload = posted
+                    .remove(&(j, tag))
+                    .expect("loss receive posted at epoch start")
+                    .wait(&mut stats);
+                tot += decode_f64s(&payload)[0];
             }
             tot
         } else {
@@ -381,47 +418,80 @@ pub fn run_rank_ctl(
                     }
                 }
                 let mut jg = j_full.rows_range(0, n_inner);
-                let recv_into = |dst: &mut Mat, wait_s: &mut f64| {
+                if !pipe {
                     for j in 0..k {
                         if j != rank && !p.send_sets[j].is_empty() {
-                            let payload = recv_timed(
-                                transport,
-                                j,
-                                rank,
-                                Tag::new(t as u32, l as u16, Phase::BwdGrad),
-                                wait_s,
-                            );
-                            let cols = dst.cols;
-                            for (r, chunk) in
-                                p.send_sets[j].iter().zip(payload.chunks_exact(cols))
-                            {
-                                let row = dst.row_mut(*r as usize);
-                                for (d, &s) in row.iter_mut().zip(chunk) {
-                                    *d += s;
-                                }
-                            }
+                            let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+                            let payload = posted
+                                .remove(&(j, tag))
+                                .expect("receive posted at epoch start")
+                                .wait(&mut stats);
+                            super::trainer::scatter_add_rows(&mut jg, &p.send_sets[j], &payload);
                         }
                     }
-                };
-                if !pipe {
-                    recv_into(&mut jg, &mut wait_s);
                 } else {
+                    // stale contributions only (zeros at t = 1); fresh
+                    // tag-t gradients are drained after the pass
                     jg.add_assign(&st.grad_buf[l]);
-                    let mut fresh = Mat::zeros(n_inner, f_in);
-                    recv_into(&mut fresh, &mut wait_s);
-                    if opts.smooth_grad && t > 1 {
-                        st.grad_buf[l].scale(opts.gamma);
-                        st.grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
-                    } else {
-                        st.grad_buf[l] = fresh;
-                    }
                 }
                 j_cur = jg;
             }
         }
+        // ---- drain (pipelined variants) ----
+        // Fold the epoch's fresh boundary tensors — posted at epoch
+        // start, arriving behind the entire forward/backward compute —
+        // into the stale buffers for iteration t+1. This runs before the
+        // checkpoint hook so snapshots hold exactly the buffers the
+        // sequential engine writes.
+        if pipe {
+            for l in 0..n_layers {
+                let f_in = dims[l];
+                let mut fresh = Mat::zeros(p.halo.len(), f_in);
+                for j in 0..k {
+                    let range = p.halo_ranges[j].clone();
+                    if !range.is_empty() {
+                        let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+                        let payload = posted
+                            .remove(&(j, tag))
+                            .expect("receive posted at epoch start")
+                            .wait(&mut stats);
+                        let cols = fresh.cols;
+                        fresh.data[range.start * cols..range.start * cols + payload.len()]
+                            .copy_from_slice(&payload);
+                    }
+                }
+                if opts.smooth_feat && t > 1 {
+                    st.feat_buf[l].scale(opts.gamma);
+                    st.feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                } else {
+                    st.feat_buf[l] = fresh;
+                }
+            }
+            for l in 1..n_layers {
+                let f_in = dims[l];
+                let mut fresh = Mat::zeros(p.n_inner(), f_in);
+                for j in 0..k {
+                    if j != rank && !p.send_sets[j].is_empty() {
+                        let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+                        let payload = posted
+                            .remove(&(j, tag))
+                            .expect("receive posted at epoch start")
+                            .wait(&mut stats);
+                        super::trainer::scatter_add_rows(&mut fresh, &p.send_sets[j], &payload);
+                    }
+                }
+                if opts.smooth_grad && t > 1 {
+                    st.grad_buf[l].scale(opts.gamma);
+                    st.grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
+                } else {
+                    st.grad_buf[l] = fresh;
+                }
+            }
+        }
+        debug_assert!(posted.is_empty(), "unconsumed posted receives at epoch end");
         // ---- all-reduce + update (replicated Adam) ----
         let mut gbuf = grads.flatten();
-        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32, &mut wait_s);
+        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32, &mut stats);
         match cfg.optimizer {
             super::Optimizer::Adam => st.adam.step(&mut st.flat, &gbuf),
             super::Optimizer::Sgd => {
@@ -433,24 +503,33 @@ pub fn run_rank_ctl(
         st.params.unflatten(&st.flat);
         st.epoch = t;
         // per-phase wall breakdown: everything not spent parked in a
-        // receive is compute — the measured comm/compute overlap of the
-        // pipelined schedule (checkpoint I/O excluded)
+        // receive is compute. comm_wait_ms is defined as the exact sum
+        // of the per-(layer, phase) breakdown values (checkpoint I/O
+        // excluded from the epoch account).
         let epoch_ms = epoch_watch.elapsed_secs() * 1e3;
-        let comm_wait_ms = wait_s * 1e3;
+        let entries = stats.entries_ms();
+        let comm_wait_ms: f64 = entries.iter().map(|(_, v)| v).sum();
         let comp_ms = (epoch_ms - comm_wait_ms).max(0.0);
         if let Some(em) = ctl.log.take() {
+            let mut breakdown = Json::obj();
+            for (key, ms) in &entries {
+                breakdown = breakdown.set(key, *ms);
+            }
             let row = Json::obj()
                 .set("epoch", t)
                 .set("loss", epoch_loss)
                 .set("epoch_ms", epoch_ms)
                 .set("comp_ms", comp_ms)
-                .set("comm_wait_ms", comm_wait_ms);
+                .set("comm_wait_ms", comm_wait_ms)
+                .set("overlap_ratio", stats.overlap_ratio())
+                .set("comm_wait", breakdown);
             match em.emit(&row) {
                 Ok(()) => ctl.log = Some(em),
                 // stop logging, keep training
                 Err(e) => eprintln!("run-log write failed: {e}"),
             }
         }
+        run_stats.merge(&stats);
         if let Some(pol) = ctl.ckpt {
             if pol.due(t) {
                 ckpt::save(&pol.dir, &st.snapshot(rank, k))?;
@@ -461,7 +540,13 @@ pub fn run_rank_ctl(
             std::process::exit(13);
         }
     }
-    Ok(losses)
+    let comm_wait_by = run_stats.entries_ms();
+    Ok(RankReport {
+        losses,
+        comm_wait_ms: comm_wait_by.iter().map(|(_, v)| v).sum(),
+        overlap_ratio: run_stats.overlap_ratio(),
+        comm_wait_by,
+    })
 }
 
 /// Side-channel controls for [`run_threaded_ctl`] — the threaded
@@ -531,8 +616,8 @@ pub fn run_threaded_ctl(
     let mut log = ctl.log;
     let plan_ref = &plan;
     let fabric_ref = &fabric;
-    // what one rank's thread hands back: its losses and final state
-    type RankRun = crate::util::error::Result<(Vec<f64>, TrainState)>;
+    // what one rank's thread hands back: its report and final state
+    type RankRun = crate::util::error::Result<(RankReport, TrainState)>;
     let results: Vec<RankRun> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(k);
         for (rank, mut st) in states.into_iter().enumerate() {
@@ -543,8 +628,8 @@ pub fn run_threaded_ctl(
                     log: log_slot,
                     kill_after_epoch: None,
                 };
-                let losses = run_rank_ctl(fabric_ref, plan_ref, rank, cfg, &mut st, rc)?;
-                Ok((losses, st))
+                let rep = run_rank_ctl(fabric_ref, plan_ref, rank, cfg, &mut st, rc)?;
+                Ok((rep, st))
             }));
         }
         handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
@@ -554,31 +639,20 @@ pub fn run_threaded_ctl(
     // rank 0 already holds the global per-epoch losses (it drives the
     // per-epoch loss reduction, summing partials in rank order — the
     // same f64 order as the sequential engine, so sums stay bit-identical)
-    let (losses, st0) = per_rank.swap_remove(0);
+    let (rep0, st0) = per_rank.swap_remove(0);
     let (final_val, final_test) = super::evaluate(g, &st0.params, cfg.model.kind);
     Ok((
         ThreadedResult {
-            losses,
+            losses: rep0.losses,
             params: st0.params,
             final_val,
             final_test,
             comm_bytes: fabric.total_bytes(),
+            comm_wait_ms: rep0.comm_wait_ms,
+            overlap_ratio: rep0.overlap_ratio,
         },
         start_epoch,
     ))
-}
-
-/// Train with one thread per partition over the in-process [`Fabric`],
-/// fresh state, no checkpointing.
-#[deprecated(
-    since = "0.2.0",
-    note = "build the run through `session::Session` with \
-            `Engine::Threaded`, or call `run_threaded_ctl` directly"
-)]
-pub fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
-    run_threaded_ctl(g, pt, cfg, ThreadedCtl::default())
-        .expect("threaded run without checkpoint I/O cannot fail")
-        .0
 }
 
 #[cfg(test)]
@@ -590,8 +664,7 @@ mod tests {
     use crate::partition::{partition, Method};
     use std::sync::Arc;
 
-    /// The engine core without controls (shadows the deprecated
-    /// `train_threaded` shim these tests used to exercise).
+    /// The engine core without controls.
     fn train_threaded(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> ThreadedResult {
         run_threaded_ctl(g, pt, cfg, ThreadedCtl::default()).unwrap().0
     }
@@ -609,8 +682,9 @@ mod tests {
         }
     }
 
-    /// Threads + blocking receives must reproduce the sequential engine
-    /// bit-for-bit (staleness lives in tags, not timing).
+    /// Threads + posted receives must reproduce the sequential engine
+    /// bit-for-bit (staleness lives in tags, not timing) — the oracle
+    /// that pins the prefetched schedule to Algorithm 1.
     #[test]
     fn threaded_matches_sequential_all_variants() {
         let g = presets::by_name("tiny").unwrap().build(42);
@@ -647,6 +721,9 @@ mod tests {
         assert!(r.final_test > 0.5, "test {}", r.final_test);
         assert!(r.losses.last().unwrap() < &r.losses[0]);
         assert!(r.comm_bytes > 0);
+        // the overlap instrumentation is populated and sane
+        assert!(r.comm_wait_ms >= 0.0);
+        assert!((0.0..=1.0).contains(&r.overlap_ratio), "{}", r.overlap_ratio);
     }
 
     /// Setup + per-epoch traffic through the threaded fabric must equal
@@ -666,9 +743,50 @@ mod tests {
         assert_eq!(thr.comm_bytes, seq_total);
     }
 
+    /// The per-rank report's breakdown keys must sum to its total — the
+    /// invariant the NDJSON regression test also pins end to end.
+    #[test]
+    fn rank_report_breakdown_sums_to_total() {
+        let g = presets::by_name("tiny").unwrap().build(42);
+        let pt = partition(&g, 3, Method::Multilevel, 2);
+        let c = cfg(&g, Variant::Pipe(PipeOpts::plain()), 0.0);
+        let plan = halo::build(&g, &pt, c.model.kind);
+        let fabric = Fabric::new(3);
+        let reports: Vec<RankReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..3)
+                .map(|rank| {
+                    let (fabric, plan, c) = (&fabric, &plan, &c);
+                    s.spawn(move || {
+                        let mut st = TrainState::init(c, &plan.parts[rank]);
+                        run_rank_ctl(fabric, plan, rank, c, &mut st, RankCtl::default()).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut union: Vec<&str> = Vec::new();
+        for (rank, rep) in reports.iter().enumerate() {
+            assert!(!rep.comm_wait_by.is_empty(), "rank {rank}: empty breakdown");
+            let sum: f64 = rep.comm_wait_by.iter().map(|(_, v)| v).sum();
+            assert!(
+                (sum - rep.comm_wait_ms).abs() <= 1e-9 * rep.comm_wait_ms.max(1.0),
+                "rank {rank}: {} vs {}",
+                sum,
+                rep.comm_wait_ms
+            );
+            assert!((0.0..=1.0).contains(&rep.overlap_ratio), "rank {rank}");
+            union.extend(rep.comm_wait_by.iter().map(|(k2, _)| k2.as_str()));
+        }
+        // a 2-layer pipe run waits (at least trivially) on features per
+        // layer, gradients at l≥1, and the ring, somewhere in the mesh
+        for key in ["fwd_l0", "fwd_l1", "bwd_l1", "reduce"] {
+            assert!(union.contains(&key), "missing {key} in {union:?}");
+        }
+    }
+
     /// Regression for the u16 tag wraparound: the rank-driven all-reduce
     /// must stay correct past the old n ≈ 182 overflow boundary, with
-    /// every rank on its own thread (real blocking receives).
+    /// every rank on its own thread (real posted receives).
     #[test]
     fn rank_driven_allreduce_correct_past_tag_boundary() {
         let n = 190;
@@ -679,7 +797,14 @@ mod tests {
                 let f = fabric.clone();
                 std::thread::spawn(move || {
                     let mut buf: Vec<f32> = (0..len).map(|i| ((r + i) % 5) as f32).collect();
-                    ring_allreduce_rank(f.as_ref(), r, n, &mut buf, 1, &mut 0.0);
+                    ring_allreduce_rank(
+                        f.as_ref(),
+                        r,
+                        n,
+                        &mut buf,
+                        1,
+                        &mut WaitStats::default(),
+                    );
                     buf
                 })
             })
@@ -701,7 +826,9 @@ mod tests {
     /// A run driven through run_threaded_ctl with checkpointing, then
     /// resumed from a mid-run snapshot, must reproduce the uninterrupted
     /// loss curve bit-for-bit (the determinism oracle behind crash
-    /// recovery).
+    /// recovery). The drain step updates the stale buffers before the
+    /// snapshot hook, so this also pins checkpoint equivalence under the
+    /// prefetched schedule.
     #[test]
     fn threaded_resume_from_checkpoint_is_bitwise_identical() {
         let g = presets::by_name("tiny").unwrap().build(42);

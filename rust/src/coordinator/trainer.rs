@@ -5,9 +5,14 @@
 //! is exactly the distributed schedule**: every boundary tensor moves
 //! through the [`crate::comm::Fabric`] with an (iteration, layer, phase)
 //! tag, and PipeGCN consumes tensors tagged `t−1` while vanilla consumes
-//! `t` — staleness is structural, not a timing accident. The threaded
-//! runner (`coordinator::threaded`) replays the same schedule on real
-//! threads and must produce bit-identical parameters.
+//! `t` — staleness is structural, not a timing accident. The replay uses
+//! the same handle API as the concurrent engines: every receive of an
+//! epoch is posted up front ([`crate::comm::Fabric::post_recv`]) and
+//! claimed with [`crate::comm::RecvHandle::take_now`] at its point of
+//! use — the producer always ran earlier in program order, so a missing
+//! message is a loud diagnostic naming the exact (src, dst, tag). The
+//! threaded runner (`coordinator::threaded`) replays the same schedule
+//! on real threads and must produce bit-identical parameters.
 //!
 //! Fidelity notes (DESIGN.md §4): global degrees in P_i, boundary
 //! features zero-initialized (Alg. 1 line 6), dropout applied after
@@ -18,7 +23,8 @@ use super::halo::{self, PlanLabels};
 use super::state::TrainState;
 use super::{EpochStat, ErrorProbe, TrainConfig, TrainResult, Variant};
 use crate::ckpt;
-use crate::comm::{decode_f64s, encode_f64s, Fabric, Phase, Tag};
+use crate::comm::{decode_f64s, encode_f64s, Fabric, Phase, RecvHandle, Tag};
+use std::collections::HashMap;
 use crate::graph::Graph;
 use crate::model::Params;
 use crate::partition::Partitioning;
@@ -38,8 +44,11 @@ pub(crate) fn dropout_rng(seed: u64, t: usize, part: usize, layer: usize) -> Rng
     Rng::new(mix)
 }
 
-/// Scatter a received payload (rows × cols flat) into `dst` rows `rows`.
-fn scatter_add_rows(dst: &mut Mat, rows: &[u32], payload: &[f32]) {
+/// Scatter a received payload (rows × cols flat) into `dst` rows `rows`,
+/// adding contributions (shared with the per-rank schedule in
+/// [`super::threaded`] — the f32 add order is part of the bit-identity
+/// contract between engines).
+pub(crate) fn scatter_add_rows(dst: &mut Mat, rows: &[u32], payload: &[f32]) {
     let cols = dst.cols;
     assert_eq!(payload.len(), rows.len() * cols, "payload shape");
     for (r, chunk) in rows.iter().zip(payload.chunks_exact(cols)) {
@@ -56,44 +65,6 @@ fn write_rows(dst: &mut Mat, lo: usize, payload: &[f32]) {
     assert_eq!(payload.len() % cols, 0);
     let n = payload.len() / cols;
     dst.data[lo * cols..(lo + n) * cols].copy_from_slice(payload);
-}
-
-/// Train on `g` partitioned by `pt` with `cfg`, executing layer math on
-/// `backend`.
-#[deprecated(
-    since = "0.2.0",
-    note = "build the run through `session::Session` (or call the \
-            `train_resumable` engine core directly when an explicit \
-            backend is needed)"
-)]
-pub fn train(
-    g: &Graph,
-    pt: &Partitioning,
-    cfg: &TrainConfig,
-    backend: &mut dyn Backend,
-) -> TrainResult {
-    train_resumable(g, pt, cfg, backend, None, None, None)
-        .expect("training without checkpoint I/O cannot fail")
-}
-
-/// [`train_resumable`] without checkpointing: an optional streaming
-/// NDJSON run log only — one line per epoch (`epoch`, `loss`, `val`,
-/// `epoch_ms`, `bytes`), flushed as it happens so crashed runs keep
-/// their history (`--log <path>`).
-#[deprecated(
-    since = "0.2.0",
-    note = "build the run through `session::Session` (`.log(path)` / \
-            `.log_emitter(..)`) or call `train_resumable` directly"
-)]
-pub fn train_logged(
-    g: &Graph,
-    pt: &Partitioning,
-    cfg: &TrainConfig,
-    backend: &mut dyn Backend,
-    log: Option<&mut FileEmitter>,
-) -> TrainResult {
-    train_resumable(g, pt, cfg, backend, log, None, None)
-        .expect("training without checkpoint I/O cannot fail")
 }
 
 /// The sequential engine core (the `Engine::Sequential` adapter behind
@@ -221,6 +192,34 @@ pub fn train_resumable(
         }
         let epoch_watch = Stopwatch::start();
         let epoch_bytes_start = fabric.total_bytes();
+        // prefetched replay: post every receive of the epoch up front —
+        // the same handle choreography the per-rank engines run, so a
+        // producer that fails to send surfaces as a diagnostic naming
+        // the exact (src, dst, tag), never a silent wrong payload
+        let mut posted: HashMap<(usize, usize, Tag), RecvHandle> = HashMap::new();
+        for i in 0..k {
+            let p = &plan.parts[i];
+            for l in 0..n_layers {
+                let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+                for j in 0..k {
+                    if !p.halo_ranges[j].is_empty() {
+                        posted.insert((j, i, tag), fabric.post_recv(j, i, tag));
+                    }
+                }
+                if l > 0 {
+                    let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+                    for j in 0..k {
+                        if j != i && !p.send_sets[j].is_empty() {
+                            posted.insert((j, i, tag), fabric.post_recv(j, i, tag));
+                        }
+                    }
+                }
+            }
+        }
+        for i in 1..k {
+            let tag = super::threaded::loss_tag(t, i);
+            posted.insert((i, 0, tag), fabric.post_recv(i, 0, tag));
+        }
         // epoch-local probe accumulators
         let mut feat_err = vec![0.0f64; n_layers];
         let mut feat_ref = vec![0.0f64; n_layers];
@@ -260,8 +259,8 @@ pub fn train_resumable(
                     for j in 0..k {
                         let range = p.halo_ranges[j].clone();
                         if !range.is_empty() {
-                            let payload =
-                                fabric.recv_now(j, i, Tag::new(t as u32, l as u16, Phase::FwdFeat));
+                            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+                            let payload = posted.remove(&(j, i, tag)).expect("posted").take_now();
                             write_rows(&mut m, range.start, &payload);
                         }
                     }
@@ -269,13 +268,13 @@ pub fn train_resumable(
                 } else {
                     // use the buffer (t−1 values; zeros at t=1 — Alg.1 line 6)
                     let used = states[i].feat_buf[l].clone();
-                    // receive the fresh tag-t messages → buffer for t+1
+                    // claim the fresh tag-t messages → buffer for t+1
                     let mut fresh = Mat::zeros(n_halo, f_in);
                     for j in 0..k {
                         let range = p.halo_ranges[j].clone();
                         if !range.is_empty() {
-                            let payload =
-                                fabric.recv_now(j, i, Tag::new(t as u32, l as u16, Phase::FwdFeat));
+                            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
+                            let payload = posted.remove(&(j, i, tag)).expect("posted").take_now();
                             write_rows(&mut fresh, range.start, &payload);
                         }
                     }
@@ -345,8 +344,9 @@ pub fn train_resumable(
         }
         let mut train_loss = partials[0];
         for i in 1..k {
-            train_loss +=
-                decode_f64s(&fabric.recv_now(i, 0, super::threaded::loss_tag(t, i)))[0];
+            let tag = super::threaded::loss_tag(t, i);
+            let payload = posted.remove(&(i, 0, tag)).expect("posted").take_now();
+            train_loss += decode_f64s(&payload)[0];
         }
 
         // ---------------- backward ----------------
@@ -411,20 +411,22 @@ pub fn train_resumable(
                     if !pipe {
                         for j in 0..k {
                             if j != i && !p.send_sets[j].is_empty() {
-                                let payload = fabric
-                                    .recv_now(j, i, Tag::new(t as u32, l as u16, Phase::BwdGrad));
+                                let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+                                let payload =
+                                    posted.remove(&(j, i, tag)).expect("posted").take_now();
                                 scatter_add_rows(&mut jg, &p.send_sets[j], &payload);
                             }
                         }
                     } else {
                         // stale contributions (zeros at t=1)
                         jg.add_assign(&states[i].grad_buf[l]);
-                        // receive fresh tag-t contributions → buffer
+                        // claim fresh tag-t contributions → buffer
                         let mut fresh = Mat::zeros(p.n_inner(), f_in);
                         for j in 0..k {
                             if j != i && !p.send_sets[j].is_empty() {
-                                let payload = fabric
-                                    .recv_now(j, i, Tag::new(t as u32, l as u16, Phase::BwdGrad));
+                                let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
+                                let payload =
+                                    posted.remove(&(j, i, tag)).expect("posted").take_now();
                                 scatter_add_rows(&mut fresh, &p.send_sets[j], &payload);
                             }
                         }
@@ -447,6 +449,7 @@ pub fn train_resumable(
         }
 
         // ---------------- all-reduce + update ----------------
+        debug_assert!(posted.is_empty(), "unconsumed posted receives at epoch end");
         let mut bufs: Vec<Vec<f32>> = grads.iter().map(|gp| gp.flatten()).collect();
         crate::comm::allreduce::ring_allreduce(&fabric, &mut bufs, t as u32);
         // each rank steps its own replicated optimizer — the all-reduced
@@ -503,10 +506,12 @@ pub fn train_resumable(
             test,
             epoch_ms,
             // uniform definition across engines: comp = epoch − wait;
-            // the sequential engine never blocks (`recv_now`), so its
+            // the sequential engine never parks (`take_now`), so its
             // wait is structurally 0 and comp covers the whole epoch
             comp_ms: epoch_ms,
             comm_wait_ms: 0.0,
+            comm_wait_by: Vec::new(),
+            overlap_ratio: 1.0,
             comm_bytes: epoch_comm_bytes,
         });
         if let Some(emitter) = log.take() {
@@ -517,6 +522,8 @@ pub fn train_resumable(
                 .set("epoch_ms", epoch_ms)
                 .set("comp_ms", epoch_ms)
                 .set("comm_wait_ms", 0.0f64)
+                .set("overlap_ratio", 1.0f64)
+                .set("comm_wait", Json::obj())
                 .set("bytes", epoch_comm_bytes);
             match emitter.emit(&row) {
                 Ok(()) => log = Some(emitter),

@@ -4,9 +4,8 @@
 //! reference), and projects recorded schedules onto the paper's
 //! simulated testbeds.
 //!
-//! The old `run`/`run_logged`/`run_resumable` entry points are
-//! deprecated shims over [`crate::session::Session`] — build runs
-//! through the Session builder and use
+//! Runs are built through [`crate::session::Session`] (the old
+//! `run`/`run_logged`/`run_resumable` shims are gone); use
 //! [`RunReport::into_output`](crate::session::RunReport::into_output)
 //! to feed [`simulate`] / [`full_works`].
 
@@ -91,76 +90,6 @@ pub fn prepare(
     opts: RunOpts,
 ) -> (&'static Preset, Graph, Partitioning, TrainConfig) {
     try_prepare(preset_name, n_parts, variant_name, opts).unwrap_or_else(|e| panic!("{e}"))
-}
-
-/// Build, partition, train (sequential engine).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `session::Session::preset(..) … .run()?.into_output()`"
-)]
-pub fn run(preset_name: &str, n_parts: usize, variant_name: &str, opts: RunOpts) -> RunOutput {
-    crate::session::Session::preset(preset_name)
-        .parts(n_parts)
-        .variant(variant_name)
-        .run_opts(opts)
-        .run()
-        .unwrap_or_else(|e| panic!("{e}"))
-        .into_output()
-}
-
-/// [`run`] with an optional streaming NDJSON run log (`--log <path>`).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `session::Session` with `.log_emitter(..)` / `.log(path)`"
-)]
-pub fn run_logged(
-    preset_name: &str,
-    n_parts: usize,
-    variant_name: &str,
-    opts: RunOpts,
-    log: Option<&mut crate::util::json::FileEmitter>,
-) -> RunOutput {
-    let mut s = crate::session::Session::preset(preset_name)
-        .parts(n_parts)
-        .variant(variant_name)
-        .run_opts(opts);
-    if let Some(em) = log {
-        s = s.log_emitter(em);
-    }
-    s.run().unwrap_or_else(|e| panic!("{e}")).into_output()
-}
-
-/// [`run_logged`] with crash-safe checkpoint/restore: snapshot into
-/// `ckpt.dir` every `ckpt.every` epochs, and/or resume from the latest
-/// complete checkpoint under `resume_dir`
-/// (see [`crate::coordinator::trainer::train_resumable`]).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `session::Session` with `.ckpt(..)` / `.resume(dir)`"
-)]
-pub fn run_resumable(
-    preset_name: &str,
-    n_parts: usize,
-    variant_name: &str,
-    opts: RunOpts,
-    log: Option<&mut crate::util::json::FileEmitter>,
-    ckpt: Option<&crate::ckpt::Policy>,
-    resume_dir: Option<&str>,
-) -> crate::util::error::Result<RunOutput> {
-    let mut s = crate::session::Session::preset(preset_name)
-        .parts(n_parts)
-        .variant(variant_name)
-        .run_opts(opts);
-    if let Some(em) = log {
-        s = s.log_emitter(em);
-    }
-    if let Some(policy) = ckpt {
-        s = s.ckpt(policy.clone());
-    }
-    if let Some(dir) = resume_dir {
-        s = s.resume(dir);
-    }
-    Ok(s.run()?.into_output())
 }
 
 /// Scale a recorded per-iteration work description to the mirrored
@@ -306,11 +235,19 @@ pub fn sim_epochs_per_s(b: &EpochBreakdown) -> f64 {
 }
 
 #[cfg(test)]
-// the deprecated shims stay covered until they are removed: they must
-// keep routing through Session unchanged
-#[allow(deprecated)]
 mod tests {
     use super::*;
+
+    /// A sequential Session run repackaged for the simulation helpers.
+    fn run(preset: &str, parts: usize, method: &str, opts: RunOpts) -> RunOutput {
+        crate::session::Session::preset(preset)
+            .parts(parts)
+            .variant(method)
+            .run_opts(opts)
+            .run()
+            .unwrap_or_else(|e| panic!("{e}"))
+            .into_output()
+    }
 
     #[test]
     fn run_tiny_end_to_end() {

@@ -19,9 +19,14 @@
 //! * [`partition`] — a METIS-like multilevel partitioner (heavy-edge
 //!   matching, greedy initial partition, FM refinement with a
 //!   communication-volume objective) plus hash/range/BFS baselines.
-//! * [`comm`] — the communication layer: the [`comm::Transport`]
-//!   contract, the in-process mailbox fabric with byte accounting, a
-//!   ring all-reduce, and link/topology descriptions.
+//! * [`comm`] — the communication layer: the **nonblocking,
+//!   handle-based** [`comm::Transport`] contract (`post_recv` returns a
+//!   [`comm::RecvHandle`]; `try_take`/`wait` claim the payload, with
+//!   park time attributed per (layer, phase) in a [`comm::WaitStats`]),
+//!   the in-process mailbox fabric with reservation queues and byte
+//!   accounting, a ring all-reduce, and link/topology descriptions.
+//!   `recv_blocking` survives as a default-method shim for control
+//!   paths.
 //! * [`ckpt`] — crash-safe checkpoint/restore: versioned, CRC-checked
 //!   binary snapshots of full training state (epoch, parameters, Adam
 //!   moments, PipeGCN stale buffers), one file per rank per epoch, with
@@ -32,11 +37,13 @@
 //!   serving artifact (`ModelConfig` + weights only,
 //!   `pipegcn export-params`).
 //! * [`net`] — the real transport: length-prefixed binary frames over
-//!   TCP ([`net::TcpTransport`]), a rank-0 rendezvous/peer-table
-//!   bootstrap, and the `launch`/`worker` multi-process runtime that
-//!   trains over genuine localhost sockets — `launch` supervises its
-//!   workers and relaunches the mesh from the latest complete
-//!   checkpoint when one dies.
+//!   TCP ([`net::TcpTransport`], whose reader-demux threads fulfill
+//!   posted receive handles straight off the socket), a rank-0
+//!   rendezvous/peer-table bootstrap with routable-address validation
+//!   (`--bind`, `--connect-timeout`/`--connect-retries`), and the
+//!   `launch`/`worker` multi-process runtime that trains over genuine
+//!   sockets — `launch` supervises its workers and relaunches the mesh
+//!   from the latest complete checkpoint when one dies.
 //! * [`sim`] — the discrete-event timeline simulator that models what the
 //!   training schedule costs on a described cluster (the paper's testbeds
 //!   are encoded as [`sim::DeviceProfile`]s / [`sim::Topology`]s).
@@ -51,15 +58,20 @@
 //!   (`BENCH_kernels.json`).
 //! * [`coordinator`] — the paper's contribution: vanilla partition-parallel
 //!   training and PipeGCN (Algorithm 1) with staleness smoothing (§3.4),
-//!   metric/error probes, and epoch time breakdowns.
+//!   metric/error probes, and epoch time breakdowns. The per-rank
+//!   schedule is **prefetched**: every receive of an epoch is posted up
+//!   front and waited at its point of use, so the pipelined variants'
+//!   fresh-tensor waits sink behind the whole epoch's compute; rank 0
+//!   streams a per-(layer, phase) `comm_wait` breakdown and an
+//!   `overlap_ratio` in its run-log rows.
 //! * [`session`] — **the crate's front door**: the [`session::Session`]
 //!   builder collapses every run configuration (dataset, variant,
 //!   threads, run log, checkpoints, fault injection) behind one `run()`
 //!   returning a unified [`session::RunReport`], with the execution
 //!   strategy picked by [`session::Engine`]
-//!   (`Sequential | Threaded | Tcp | TcpWorker`). The old
-//!   `exp::run*`/`trainer::train*`/`train_threaded` entry points are
-//!   deprecated shims over it.
+//!   (`Sequential | Threaded | Tcp | TcpWorker`). The nine pre-Session
+//!   entry points (`exp::run*`/`trainer::train*`/`train_threaded`) have
+//!   been deleted; only the engine cores remain underneath.
 //! * [`serve`] — the online workload: `pipegcn serve` loads a params
 //!   artifact, binds the `net::frame` protocol, and answers
 //!   feature→logit queries bit-identical to

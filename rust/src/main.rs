@@ -88,6 +88,10 @@ fn print_help() {
          \x20             complete checkpoint, up to --max-restarts times)\n\
          \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
          \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
+         \x20            [--bind HOST:PORT] [--connect-timeout SECS] [--connect-retries N]\n\
+         \x20            (--bind puts the mesh listener on a routable interface for\n\
+         \x20             multi-node runs — wildcards like 0.0.0.0 are rejected;\n\
+         \x20             connect flags tune the rendezvous dial for LAN latencies)\n\
          \x20 export-params  --from-ckpt DIR --dataset <preset> --parts K [--epoch N]\n\
          \x20            [--out params.pgp]  (distill a training checkpoint into a\n\
          \x20             standalone serving artifact: model shape + weights only)\n\
@@ -245,11 +249,14 @@ fn cmd_launch(args: &Args) -> Result<()> {
     // Session validates preset/method/resume before spawning anything
     let report = session.run()?;
     println!(
-        "launch complete: {} epochs | final loss {:.6} | val {:.4} test {:.4}",
+        "launch complete: {} epochs | final loss {:.6} | val {:.4} test {:.4} | \
+         rank-0 comm wait {:.1} ms (overlap {:.0}%)",
         report.start_epoch + report.losses.len(),
         report.losses.last().copied().unwrap_or(f64::NAN),
         report.final_val,
         report.final_test,
+        report.comm_wait_ms,
+        100.0 * report.overlap_ratio,
     );
     Ok(())
 }
@@ -257,7 +264,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     args.assert_known(&[
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
-        "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads",
+        "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads", "bind",
+        "connect-timeout", "connect-retries",
     ])?;
     let coord = args
         .get_opt("coord")
@@ -273,6 +281,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
     }
     if args.has("fail-epoch") {
         session = session.fail_epoch(rank, args.get_usize("fail-epoch", 0));
+    }
+    // multi-node reachability: routable mesh listener + rendezvous
+    // dial tuning (defaults keep today's localhost behavior)
+    if let Some(addr) = args.get_opt("bind") {
+        session = session.bind(addr);
+    }
+    if args.has("connect-timeout") {
+        session = session.connect_timeout(args.get_u64("connect-timeout", 60).max(1));
+    }
+    if args.has("connect-retries") {
+        session = session.connect_retries(args.get_usize("connect-retries", 0));
     }
     // bad preset/method names surface as diagnostics (not deep panics)
     // via exp::try_prepare, the worker adapter's first call

@@ -9,10 +9,15 @@
 //! * [`tcp`] — [`TcpTransport`]: the [`crate::comm::Transport`] contract
 //!   over `std::net` sockets, with per-peer writer threads (sends are
 //!   pipelined and never block the compute path) and per-socket reader
-//!   threads demuxing into per-(src, tag) FIFO queues.
+//!   threads that fulfill posted receive handles the moment their frame
+//!   arrives — falling back to per-(src, tag) FIFO queues for frames
+//!   nobody has posted for yet.
 //! * [`rendezvous`] — rank-0-style bootstrap: every rank dials one known
-//!   address, announces its mesh listener, receives the full peer table,
-//!   then the all-to-all socket mesh forms.
+//!   address, announces its mesh listener (loopback by default,
+//!   `--bind HOST:PORT` for a routable interface — wildcards rejected
+//!   on both sides), receives the full peer table, then the all-to-all
+//!   socket mesh forms. `--connect-timeout`/`--connect-retries` tune
+//!   the rendezvous dial for real LAN latencies.
 //! * [`worker`] / [`launch`] — the multi-process runtime: `pipegcn
 //!   launch --parts K ...` spawns K OS processes that train over real
 //!   localhost sockets; each runs

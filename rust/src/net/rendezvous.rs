@@ -1,14 +1,18 @@
 //! Rendezvous + mesh formation.
 //!
 //! One process (the launcher, or rank 0 standing alone) serves a known
-//! address. Every rank binds its own mesh listener on an ephemeral port,
+//! address. Every rank binds its own mesh listener — on loopback by
+//! default, or on the interface named by `--bind` for multi-node runs —
 //! dials the rendezvous with `Hello{rank, mesh_addr}`, and blocks until
-//! the `PeerTable` with all `n` addresses comes back. Then the all-to-all
-//! mesh forms: each rank dials every peer (introducing itself with a
-//! `Hello`) for its outbound sockets and accepts `n − 1` inbound ones.
+//! the `PeerTable` with all `n` addresses comes back. Then the
+//! all-to-all mesh forms: each rank dials every peer (introducing itself
+//! with a `Hello`) for its outbound sockets and accepts `n − 1` inbound
+//! ones. Advertised addresses must be routable: a wildcard (`0.0.0.0` /
+//! `[::]`) bind cannot be dialed by peers, so both the advertising rank
+//! and the rendezvous reject it with a diagnostic naming `--bind`.
 
 use super::frame::{self, Frame};
-use super::tcp::{accept_with_deadline, retry_connect, TcpTransport};
+use super::tcp::{accept_with_deadline, retry_connect, retry_connect_limited, TcpTransport};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
@@ -18,6 +22,33 @@ pub const FORM_DEADLINE: Duration = Duration::from_secs(60);
 
 fn io_err(msg: String) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Mesh-joining knobs for [`connect_with`]. The defaults reproduce the
+/// single-host behavior ([`connect`]): loopback bind, the formation
+/// deadline, unlimited dial attempts within it.
+#[derive(Clone, Debug)]
+pub struct ConnectOpts {
+    /// local `HOST:PORT` the mesh listener binds (`--bind`). Peers dial
+    /// the resulting address, so it must name a routable interface —
+    /// wildcards are rejected. Port 0 picks an ephemeral port.
+    pub bind: String,
+    /// overall deadline for dialing the rendezvous (`--connect-timeout`)
+    pub timeout: Duration,
+    /// rendezvous dial attempts before giving up (`--connect-retries`;
+    /// 0 = unlimited within `timeout`)
+    pub retries: usize,
+}
+
+impl Default for ConnectOpts {
+    fn default() -> ConnectOpts {
+        ConnectOpts { bind: "127.0.0.1:0".to_string(), timeout: FORM_DEADLINE, retries: 0 }
+    }
+}
+
+/// Is `addr` a wildcard address no peer can dial?
+fn is_unroutable(addr: &str) -> bool {
+    addr.starts_with("0.0.0.0:") || addr.starts_with("[::]:")
 }
 
 /// Serve one rendezvous round on `listener`: collect `Hello`s from all
@@ -46,6 +77,13 @@ pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
                 if addr.is_empty() {
                     return Err(io_err(format!("rank {rank} sent no mesh address")));
                 }
+                if is_unroutable(&addr) {
+                    return Err(io_err(format!(
+                        "rank {rank} advertised unroutable mesh address {addr} — peers \
+                         cannot dial a wildcard; rebind that worker with \
+                         --bind HOST:PORT on a routable interface"
+                    )));
+                }
                 streams[rank] = Some((s, addr));
                 seen += 1;
             }
@@ -67,14 +105,32 @@ pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
 }
 
 /// Join the mesh as `rank` of `n`: rendezvous at `coord_addr`, then form
-/// the all-to-all socket mesh and wrap it in a [`TcpTransport`].
+/// the all-to-all socket mesh and wrap it in a [`TcpTransport`]. Binds
+/// on loopback — multi-node workers use [`connect_with`] and `--bind`.
 pub fn connect(rank: usize, n: usize, coord_addr: &str) -> std::io::Result<TcpTransport> {
+    connect_with(rank, n, coord_addr, &ConnectOpts::default())
+}
+
+/// [`connect`] with explicit binding/dialing knobs ([`ConnectOpts`]).
+pub fn connect_with(
+    rank: usize,
+    n: usize,
+    coord_addr: &str,
+    opts: &ConnectOpts,
+) -> std::io::Result<TcpTransport> {
     assert!(rank < n, "rank {rank} out of range for {n} ranks");
-    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let listener = TcpListener::bind(&opts.bind)
+        .map_err(|e| io_err(format!("binding the mesh listener on {}: {e}", opts.bind)))?;
     let my_addr = listener.local_addr()?.to_string();
+    if is_unroutable(&my_addr) {
+        return Err(io_err(format!(
+            "mesh listener bound {my_addr}, which peers cannot dial — pass \
+             --bind HOST:PORT naming a routable interface instead of the wildcard"
+        )));
+    }
 
     // --- rendezvous: announce, learn everyone's mesh address ----------
-    let mut coord = retry_connect(coord_addr, FORM_DEADLINE)?;
+    let mut coord = retry_connect_limited(coord_addr, opts.timeout, opts.retries)?;
     // the peer table legitimately takes until every rank has joined, but
     // never longer than the formation deadline
     coord.set_read_timeout(Some(FORM_DEADLINE))?;
@@ -86,6 +142,14 @@ pub fn connect(rank: usize, n: usize, coord_addr: &str) -> std::io::Result<TcpTr
     };
     if addrs.len() != n {
         return Err(io_err(format!("peer table has {} entries, expected {n}", addrs.len())));
+    }
+    // a rendezvous that predates the routability check could still hand
+    // out a wildcard — refuse to dial it with the same diagnostic
+    if let Some((peer, bad)) = addrs.iter().enumerate().find(|(_, a)| is_unroutable(a)) {
+        return Err(io_err(format!(
+            "peer table entry for rank {peer} is the wildcard {bad}; that worker \
+             must be rebound with --bind HOST:PORT on a routable interface"
+        )));
     }
     drop(coord);
 
@@ -186,5 +250,58 @@ mod tests {
         frame::write_frame(&mut s, &Frame::Shutdown { src: 0 }).unwrap();
         s.flush().unwrap();
         assert!(server.join().unwrap().is_err());
+    }
+
+    /// A worker bound to the wildcard advertises an address no peer can
+    /// dial; the error must surface before mesh formation and name the
+    /// fix (`--bind`).
+    #[test]
+    fn wildcard_bind_rejected_at_the_worker() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let coord = listener.local_addr().unwrap().to_string();
+        let opts =
+            ConnectOpts { bind: "0.0.0.0:0".to_string(), ..ConnectOpts::default() };
+        let e = connect_with(0, 2, &coord, &opts).unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("--bind"), "error must name the flag: {msg}");
+        assert!(msg.contains("0.0.0.0"), "{msg}");
+    }
+
+    /// The rendezvous side independently rejects a wildcard hello, so a
+    /// misconfigured worker cannot poison the peer table.
+    #[test]
+    fn wildcard_hello_rejected_at_the_rendezvous() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve(&listener, 1));
+        let mut s = retry_connect(&addr, FORM_DEADLINE).unwrap();
+        frame::write_frame(
+            &mut s,
+            &Frame::Hello { rank: 0, addr: "0.0.0.0:9000".to_string() },
+        )
+        .unwrap();
+        s.flush().unwrap();
+        let e = server.join().unwrap().unwrap_err();
+        assert!(e.to_string().contains("--bind"), "{e}");
+    }
+
+    /// `--connect-retries` bounds the dial attempts: a dead coordinator
+    /// address fails after N tries instead of sitting out the deadline.
+    #[test]
+    fn bounded_retries_fail_fast_on_a_dead_address() {
+        // bind-then-drop: the port was just free, so dialing it refuses
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let opts = ConnectOpts {
+            timeout: Duration::from_secs(30),
+            retries: 2,
+            ..ConnectOpts::default()
+        };
+        let started = std::time::Instant::now();
+        let e = connect_with(0, 2, &dead, &opts).unwrap_err();
+        assert!(started.elapsed() < Duration::from_secs(10), "did not fail fast");
+        assert!(e.to_string().contains("attempt"), "{e}");
     }
 }

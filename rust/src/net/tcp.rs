@@ -1,12 +1,15 @@
-//! [`TcpTransport`] — the [`Transport`] contract over real localhost TCP
-//! sockets, one instance per OS process (one rank each).
+//! [`TcpTransport`] — the [`Transport`] contract over real TCP sockets,
+//! one instance per OS process (one rank each).
 //!
 //! Topology: every **ordered** pair (src → dst) gets a dedicated socket.
 //! Each rank dials every peer (that socket carries only my → peer data,
 //! fed by a per-peer **writer thread**, so sends are pipelined and never
 //! block the compute path) and accepts one inbound socket per peer (a
-//! **reader thread** per socket demuxes frames into the per-(src, tag)
-//! FIFO queues that [`TcpTransport::recv_blocking`] pops).
+//! **reader thread** per socket demuxes frames straight into posted
+//! receives: a [`TcpTransport::post_recv`] handle is fulfilled by the
+//! reader the moment its frame arrives — while the rank is inside a
+//! GEMM — and frames nobody has posted for yet land in per-(src, tag)
+//! FIFO queues).
 //!
 //! Payloads above the 64 MiB frame cap are split into
 //! [`Frame::DataChunk`]s on send and reassembled per (src, tag) by the
@@ -18,7 +21,7 @@
 //! (or a clean EOF) arrives.
 
 use super::frame::{self, Frame};
-use crate::comm::{Tag, Transport};
+use crate::comm::{self, RecvHandle, Tag, Transport};
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::io::Write;
@@ -72,18 +75,141 @@ impl SendQueue {
 
 #[derive(Default)]
 struct InboxState {
-    /// FIFO per (src, tag) — mirrors the Fabric's (pair, tag) queues with
-    /// the dst fixed to the owning rank.
-    queues: HashMap<(u32, Tag), VecDeque<Vec<f32>>>,
+    /// sequence-stamped FIFO per (src, tag) — mirrors the Fabric's
+    /// (pair, tag) queues with the dst fixed to the owning rank.
+    queues: HashMap<(u32, Tag), VecDeque<comm::Queued>>,
+    /// posted-but-unfulfilled receives, FIFO per (src, tag) — the reader
+    /// threads fulfill the oldest live reservation before queueing
+    reservations: HashMap<(u32, Tag), VecDeque<comm::SlotRef>>,
+    /// delivery sequence counter (stamps every delivered message)
+    seq: u64,
     /// peers whose stream ended (shutdown frame or EOF)
     closed: std::collections::HashSet<usize>,
     /// reader-thread failures, surfaced on the next receive
     errors: Vec<String>,
 }
 
+impl InboxState {
+    /// Hand a complete message to the oldest live reservation for
+    /// (src, tag), or queue it. Runs on the reader threads, so a posted
+    /// receive completes while the owning rank is free to compute.
+    fn deliver(&mut self, src: u32, tag: Tag, payload: Vec<f32>) {
+        self.seq += 1;
+        let mut item = Some((self.seq, payload));
+        if let Some(q) = self.reservations.get_mut(&(src, tag)) {
+            let (s, p) = item.take().unwrap();
+            item = comm::offer(q, s, p);
+            // tags are epoch-unique: emptied per-tag entries must go,
+            // or long runs leak one dead entry per receive
+            if q.is_empty() {
+                self.reservations.remove(&(src, tag));
+            }
+        }
+        if let Some((s, p)) = item {
+            self.queues.entry((src, tag)).or_default().push_back((s, p));
+        }
+    }
+
+    /// Pop the oldest queued (src, tag) message, pruning the emptied
+    /// per-tag entry (epoch-unique tags never get reused).
+    fn pop_queued(&mut self, src: u32, tag: Tag) -> Option<comm::Queued> {
+        let q = self.queues.get_mut(&(src, tag))?;
+        let p = q.pop_front();
+        if q.is_empty() {
+            self.queues.remove(&(src, tag));
+        }
+        p
+    }
+}
+
 struct Inbox {
     state: Mutex<InboxState>,
     cv: Condvar,
+}
+
+/// [`comm::RecvFuture`] fulfilled by this transport's reader threads.
+struct TcpRecv {
+    inbox: Arc<Inbox>,
+    rank: usize,
+    src: usize,
+    tag: Tag,
+    slot: comm::SlotRef,
+}
+
+impl comm::RecvFuture for TcpRecv {
+    fn try_take(&mut self) -> Option<Vec<f32>> {
+        comm::take_ready(&self.slot)
+    }
+
+    fn wait_take(&mut self) -> Vec<f32> {
+        let started = Instant::now();
+        let mut g = self.inbox.state.lock().unwrap();
+        loop {
+            if let Some(v) = comm::take_ready(&self.slot) {
+                return v;
+            }
+            if !g.errors.is_empty() {
+                panic!("[rank {}] transport failed: {}", self.rank, g.errors.join("; "));
+            }
+            // fail fast the moment the specific peer we need is gone —
+            // don't sit out the deadline while other peers are healthy
+            if g.closed.contains(&self.src) {
+                panic!(
+                    "[rank {}] peer {} closed while a message for {}->{} {:?} \
+                     was still awaited",
+                    self.rank, self.src, self.src, self.rank, self.tag
+                );
+            }
+            if started.elapsed() > RECV_DEADLINE {
+                panic!(
+                    "[rank {}] recv timeout waiting for {}->{} {:?}",
+                    self.rank, self.src, self.rank, self.tag
+                );
+            }
+            let (guard, _timeout) = self.inbox.cv.wait_timeout(g, WAIT_SLICE).unwrap();
+            g = guard;
+        }
+    }
+}
+
+impl Drop for TcpRecv {
+    fn drop(&mut self) {
+        // lock order: inbox state first, then the slot (same as deliver)
+        let mut g = self.inbox.state.lock().unwrap();
+        let mut slot = self.slot.lock().unwrap();
+        let key = (self.src as u32, self.tag);
+        match std::mem::replace(&mut *slot, comm::SlotState::Cancelled) {
+            comm::SlotState::Pending => {
+                if let Some(q) = g.reservations.get_mut(&key) {
+                    q.retain(|s| !Arc::ptr_eq(s, &self.slot));
+                    if q.is_empty() {
+                        g.reservations.remove(&key);
+                    }
+                }
+            }
+            comm::SlotState::Ready(seq, p) => {
+                // fulfilled but never taken: hand the message to the
+                // oldest still-pending sibling reservation (which would
+                // otherwise sit out the recv deadline — the reader only
+                // fulfills once), or reinsert it at its sequence
+                // position in the FIFO
+                let mut item = Some((seq, p));
+                if let Some(q) = g.reservations.get_mut(&key) {
+                    let (s, p) = item.take().unwrap();
+                    item = comm::offer(q, s, p);
+                    if q.is_empty() {
+                        g.reservations.remove(&key);
+                    }
+                }
+                if let Some((s, p)) = item {
+                    comm::requeue_in_order(g.queues.entry(key).or_default(), s, p);
+                }
+                self.inbox.cv.notify_all();
+            }
+            comm::SlotState::Taken => *slot = comm::SlotState::Taken,
+            comm::SlotState::Cancelled => {}
+        }
+    }
 }
 
 /// A [`Transport`] endpoint for exactly one rank of a TCP mesh. Build
@@ -150,7 +276,7 @@ fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize
                     inbox.cv.notify_all();
                     return;
                 }
-                g.queues.entry((src as u32, tag)).or_default().push_back(payload);
+                g.deliver(src as u32, tag, payload);
                 inbox.cv.notify_all();
             }
             Ok(Some(Frame::DataChunk { src, dst, tag, last, payload })) => {
@@ -167,7 +293,7 @@ fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize
                 if last {
                     let full = partial.remove(&tag).unwrap();
                     let mut g = inbox.state.lock().unwrap();
-                    g.queues.entry((src as u32, tag)).or_default().push_back(full);
+                    g.deliver(src as u32, tag, full);
                     inbox.cv.notify_all();
                 }
             }
@@ -349,38 +475,34 @@ impl Transport for TcpTransport {
         }
     }
 
-    fn recv_blocking(&self, src: usize, dst: usize, tag: Tag) -> Vec<f32> {
+    fn post_recv(&self, src: usize, dst: usize, tag: Tag) -> RecvHandle {
         assert_eq!(dst, self.rank, "TcpTransport can only receive for its own rank");
         assert!(src < self.n && src != self.rank, "bad src {src}");
-        let started = Instant::now();
-        let mut g = self.inbox.state.lock().unwrap();
-        loop {
-            if let Some(v) =
-                g.queues.get_mut(&(src as u32, tag)).and_then(|q| q.pop_front())
-            {
-                return v;
+        let slot = comm::new_slot();
+        {
+            let mut g = self.inbox.state.lock().unwrap();
+            match g.pop_queued(src as u32, tag) {
+                Some((s, p)) => {
+                    let leftover = comm::fulfill(&slot, s, p);
+                    debug_assert!(leftover.is_none());
+                }
+                None => {
+                    g.reservations.entry((src as u32, tag)).or_default().push_back(slot.clone());
+                }
             }
-            if !g.errors.is_empty() {
-                panic!("[rank {}] transport failed: {}", self.rank, g.errors.join("; "));
-            }
-            // fail fast the moment the specific peer we need is gone —
-            // don't sit out the deadline while other peers are healthy
-            if g.closed.contains(&src) {
-                panic!(
-                    "[rank {}] peer {src} closed while a message for {src}->{dst} {tag:?} \
-                     was still awaited",
-                    self.rank
-                );
-            }
-            if started.elapsed() > RECV_DEADLINE {
-                panic!(
-                    "[rank {}] recv timeout waiting for {src}->{dst} {tag:?}",
-                    self.rank
-                );
-            }
-            let (guard, _timeout) = self.inbox.cv.wait_timeout(g, WAIT_SLICE).unwrap();
-            g = guard;
         }
+        RecvHandle::new(
+            src,
+            dst,
+            tag,
+            Box::new(TcpRecv {
+                inbox: self.inbox.clone(),
+                rank: self.rank,
+                src,
+                tag,
+                slot,
+            }),
+        )
     }
 
     fn bytes_sent(&self, src: usize) -> u64 {
@@ -392,22 +514,37 @@ impl Transport for TcpTransport {
 /// Dial `addr`, retrying while the listener comes up (workers race the
 /// rendezvous and each other during mesh formation).
 pub(super) fn retry_connect(addr: &str, deadline: Duration) -> std::io::Result<TcpStream> {
+    retry_connect_limited(addr, deadline, 0)
+}
+
+/// [`retry_connect`] with an attempt cap: give up after `max_attempts`
+/// failed dials (0 = unlimited within `deadline`). `--connect-retries`
+/// maps here — on a real LAN a bounded attempt count turns a firewalled
+/// or mistyped coordinator address into a fast diagnostic instead of a
+/// minute of silent retries.
+pub(super) fn retry_connect_limited(
+    addr: &str,
+    deadline: Duration,
+    max_attempts: usize,
+) -> std::io::Result<TcpStream> {
     let started = Instant::now();
+    let mut attempts = 0usize;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => {
                 s.set_nodelay(true).ok();
                 return Ok(s);
             }
-            Err(e) if started.elapsed() < deadline => {
-                let _ = e;
-                std::thread::sleep(Duration::from_millis(25));
-            }
             Err(e) => {
-                return Err(std::io::Error::new(
-                    e.kind(),
-                    format!("connecting to {addr}: {e}"),
-                ))
+                attempts += 1;
+                let exhausted = max_attempts > 0 && attempts >= max_attempts;
+                if exhausted || started.elapsed() >= deadline {
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!("connecting to {addr} ({attempts} attempt(s)): {e}"),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(25));
             }
         }
     }
@@ -527,6 +664,32 @@ mod tests {
         mesh[0].send(0, 1, tag, crate::comm::encode_u32s(&ids));
         let got = crate::comm::decode_u32s(&mesh[1].recv_blocking(0, 1, tag));
         assert_eq!(got, ids);
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    /// The point of the handle API on this transport: a posted receive
+    /// is completed by the reader-demux thread in the background — the
+    /// owning rank never makes another transport call.
+    #[test]
+    fn posted_recv_is_fulfilled_by_the_reader_thread() {
+        let mut mesh = localhost_mesh(2).unwrap();
+        let tag = Tag::new(5, 0, Phase::FwdFeat);
+        let mut h = mesh[1].post_recv(0, 1, tag);
+        assert_eq!(h.try_take(), None);
+        mesh[0].send(0, 1, tag, vec![9.0, 8.0]);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let payload = loop {
+            if let Some(p) = h.try_take() {
+                break p;
+            }
+            assert!(Instant::now() < deadline, "posted receive never completed");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        assert_eq!(payload, vec![9.0, 8.0]);
+        // fulfilled straight off the socket: never sat in the queues
+        assert_eq!(mesh[1].pending(), 0);
         for m in &mut mesh {
             m.shutdown();
         }

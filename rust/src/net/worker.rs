@@ -15,16 +15,22 @@
 //! worker restores the latest complete checkpoint and continues the
 //! uninterrupted run bit-for-bit. `--fail-epoch` is fault injection for
 //! the recovery tests (exit(13) after that epoch completes).
+//!
+//! Multi-node reachability: `--bind HOST:PORT` puts the worker's mesh
+//! listener on a routable interface (default loopback; wildcards are
+//! rejected with a diagnostic), and `--connect-timeout` /
+//! `--connect-retries` tune the rendezvous dial for real LAN latencies.
 
-use super::rendezvous;
+use super::rendezvous::{self, ConnectOpts};
 use crate::ckpt;
 use crate::coordinator::threaded::{self, RankCtl};
 use crate::coordinator::{evaluate, halo, TrainState};
 use crate::exp::{self, RunOpts};
 use crate::util::error::{Context, Result};
 use crate::util::json::{FileEmitter, Json};
+use std::time::Duration;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct WorkerOpts {
     pub rank: usize,
     pub parts: usize,
@@ -48,6 +54,15 @@ pub struct WorkerOpts {
     pub resume: Option<String>,
     /// fault injection: exit(13) after this epoch (recovery tests)
     pub fail_epoch: Option<usize>,
+    /// mesh listener bind address (`--bind`; default loopback). Must
+    /// name an interface the peers can route to — wildcards rejected.
+    pub bind: Option<String>,
+    /// rendezvous dial deadline in seconds (`--connect-timeout`;
+    /// default: the 60 s formation deadline)
+    pub connect_timeout_secs: Option<u64>,
+    /// rendezvous dial attempts (`--connect-retries`; 0 = unlimited
+    /// within the timeout)
+    pub connect_retries: Option<usize>,
 }
 
 /// What rank 0 learns at the end of a distributed run.
@@ -64,6 +79,10 @@ pub struct WorkerSummary {
     pub payload_bytes_sent: u64,
     /// actual wire bytes including frame headers
     pub wire_bytes_sent: u64,
+    /// total ms rank 0 sat parked in receives (prefetched schedule)
+    pub comm_wait_ms: f64,
+    /// fraction of rank 0's receives already complete when waited on
+    pub overlap_ratio: f64,
 }
 
 /// Run one rank end to end. Returns `Some(summary)` on rank 0, `None`
@@ -108,14 +127,24 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         _ => None,
     };
 
-    let mut transport = rendezvous::connect(o.rank, o.parts, &o.coord)
+    let mut conn = ConnectOpts::default();
+    if let Some(bind) = &o.bind {
+        conn.bind = bind.clone();
+    }
+    if let Some(secs) = o.connect_timeout_secs {
+        conn.timeout = Duration::from_secs(secs.max(1));
+    }
+    if let Some(n) = o.connect_retries {
+        conn.retries = n;
+    }
+    let mut transport = rendezvous::connect_with(o.rank, o.parts, &o.coord, &conn)
         .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
     let ctl = RankCtl {
         ckpt: policy.as_ref(),
         log: log_em.as_mut(),
         kill_after_epoch: o.fail_epoch,
     };
-    let losses = threaded::run_rank_ctl(&transport, &plan, o.rank, &cfg, &mut st, ctl)?;
+    let rep = threaded::run_rank_ctl(&transport, &plan, o.rank, &cfg, &mut st, ctl)?;
 
     if o.rank != 0 {
         transport.shutdown();
@@ -126,16 +155,22 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     // reduction replaced the old post-hoc gather)
     let (final_val, final_test) = evaluate(&graph, &st.params, cfg.model.kind);
     let summary = WorkerSummary {
-        losses,
+        losses: rep.losses,
         start_epoch,
         final_val,
         final_test,
         payload_bytes_sent: transport.payload_bytes_sent(),
         wire_bytes_sent: transport.wire_bytes_sent(),
+        comm_wait_ms: rep.comm_wait_ms,
+        overlap_ratio: rep.overlap_ratio,
     };
     transport.shutdown();
 
     if let Some(path) = &o.out {
+        let mut breakdown = Json::obj();
+        for (key, ms) in &rep.comm_wait_by {
+            breakdown = breakdown.set(key, *ms);
+        }
         Json::obj()
             .set("dataset", o.dataset.as_str())
             .set("parts", o.parts)
@@ -149,6 +184,9 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
             .set("final_test", summary.final_test)
             .set("payload_bytes_sent", summary.payload_bytes_sent)
             .set("wire_bytes_sent", summary.wire_bytes_sent)
+            .set("comm_wait_ms", summary.comm_wait_ms)
+            .set("overlap_ratio", summary.overlap_ratio)
+            .set("comm_wait", breakdown)
             .write_file(path)?;
     }
     Ok(Some(summary))

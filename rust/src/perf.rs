@@ -1,18 +1,20 @@
 //! `pipegcn bench` — kernel and end-to-end throughput tracking.
 //!
 //! Runs the training hot-path kernels (SpMM and the three GEMM variants),
-//! a short end-to-end epoch benchmark, and a serve-path latency/QPS sweep
-//! (batched feature→logit queries against an in-process
-//! [`crate::serve::Server`]) at a sweep of thread counts, and streams one
-//! NDJSON row per measurement through [`crate::util::json::Emitter`] into
-//! `BENCH_kernels.json` (`{kernel, shape, threads, ns_iter, gflops}`;
-//! serve rows add `{p50_ms, p99_ms, qps}`), so the perf trajectory is
-//! tracked from PR 3 on. `--smoke` shrinks shapes and iteration counts
-//! to CI scale.
+//! a short end-to-end epoch benchmark, a comm/compute **overlap sweep**
+//! (multi-rank threaded runs under the prefetched schedule), and a
+//! serve-path latency/QPS sweep (batched feature→logit queries against
+//! an in-process [`crate::serve::Server`]) at a sweep of thread counts,
+//! and streams one NDJSON row per measurement through
+//! [`crate::util::json::Emitter`] into `BENCH_kernels.json`
+//! (`{kernel, shape, threads, ns_iter, gflops}`; overlap rows add
+//! `{comm_wait_ms, overlap_ratio}`, serve rows `{p50_ms, p99_ms, qps}`),
+//! so the perf trajectory is tracked from PR 3 on. `--smoke` shrinks
+//! shapes and iteration counts to CI scale.
 
 use crate::exp::RunOpts;
 use crate::runtime::pool;
-use crate::session::Session;
+use crate::session::{Engine, Session};
 use crate::tensor::{Csr, Mat};
 use crate::util::error::{Context, Result};
 use crate::util::json::{FileEmitter, Json};
@@ -175,6 +177,32 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
         )
         .context("writing epoch bench row")?;
         gf_at.push(("epoch", t, gfs));
+    }
+
+    // overlap sweep: a multi-rank *threaded* run per thread count — the
+    // prefetched schedule's measured comm/compute overlap. Rows report
+    // rank 0's total parked-receive time and the hidden-receive
+    // fraction; ns_iter keeps the common schema (wait per epoch).
+    for &t in &o.threads {
+        pool::set_threads(t);
+        let run_opts = RunOpts { epochs: o.epochs, eval_every: 0, ..Default::default() };
+        let report = Session::preset(&o.preset)
+            .parts(o.parts)
+            .variant("pipegcn")
+            .run_opts(run_opts)
+            .engine(Engine::Threaded)
+            .run()?;
+        let epochs = report.losses.len().max(1) as f64;
+        em.emit(
+            &Json::obj()
+                .set("kernel", "overlap")
+                .set("shape", format!("{}x{}", o.preset, o.parts))
+                .set("threads", t)
+                .set("ns_iter", report.comm_wait_ms / epochs * 1e6)
+                .set("comm_wait_ms", report.comm_wait_ms)
+                .set("overlap_ratio", report.overlap_ratio),
+        )
+        .context("writing overlap bench row")?;
     }
 
     // serve sweep: batched feature→logit query latency (p50/p99) and QPS

@@ -1,13 +1,14 @@
 //! The crate's front door: one builder for every way to run training.
 //!
 //! Historically each concern (logging, checkpointing, threads, fault
-//! injection) grew its own entry point — `train`/`train_logged`/
-//! `train_resumable`, `exp::run`/`run_logged`/`run_resumable`,
-//! `run_rank`/`run_rank_ctl`, `train_threaded` — nine near-duplicates,
-//! each threading a different subset of options by hand. [`Session`]
-//! collapses them: one builder, one [`run`](Session::run), one
-//! [`RunReport`], with the execution strategy picked by
-//! [`Engine`]:
+//! injection) grew its own entry point — nine near-duplicates
+//! (`train`/`train_logged`, `exp::run`/`run_logged`/`run_resumable`,
+//! `train_threaded`, …), each threading a different subset of options by
+//! hand. [`Session`] collapsed them — the shims have since been deleted;
+//! only the engine cores (`trainer::train_resumable`,
+//! `threaded::run_rank_ctl`/`run_threaded_ctl`) remain underneath — one
+//! builder, one [`run`](Session::run), one [`RunReport`], with the
+//! execution strategy picked by [`Engine`]:
 //!
 //! * [`Engine::Sequential`] — every rank round-robin on one thread
 //!   ([`trainer::train_resumable`]); the only engine that captures work
@@ -97,6 +98,12 @@ pub struct RunReport {
     pub comm_bytes: u64,
     /// actual wire bytes incl. frame headers (tcp engines only, else 0)
     pub wire_bytes: u64,
+    /// rank 0's total ms parked in receives under the prefetched
+    /// schedule (structurally 0 on the sequential engine)
+    pub comm_wait_ms: f64,
+    /// fraction of rank 0's posted receives already complete when
+    /// waited on (1.0 = communication fully hidden behind compute)
+    pub overlap_ratio: f64,
     /// NDJSON rows streamed to a `.log(path)` run log opened by this
     /// process (0 when unused or when rank 0 of a `Tcp` launch owns it)
     pub log_rows: usize,
@@ -161,6 +168,9 @@ pub struct Session<'a> {
     fail: Option<(usize, usize)>,
     engine: Engine,
     binary: Option<PathBuf>,
+    bind: Option<String>,
+    connect_timeout: Option<u64>,
+    connect_retries: Option<usize>,
 }
 
 /// Distinguishes concurrent sessions' scratch report files within one
@@ -186,6 +196,9 @@ impl<'a> Session<'a> {
             fail: None,
             engine: Engine::Sequential,
             binary: None,
+            bind: None,
+            connect_timeout: None,
+            connect_retries: None,
         }
     }
 
@@ -248,8 +261,8 @@ impl<'a> Session<'a> {
         self
     }
 
-    /// Set every experiment knob at once (shim compatibility with the
-    /// old `exp::RunOpts`-taking entry points).
+    /// Set every experiment knob at once from an [`exp::RunOpts`]
+    /// bundle (the experiment harness's option struct).
     pub fn run_opts(mut self, o: RunOpts) -> Self {
         self.epochs = Some(o.epochs);
         self.seed = Some(o.seed);
@@ -323,6 +336,28 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// `TcpWorker` engine: bind the mesh listener on `HOST:PORT`
+    /// (`--bind`; default loopback). Must name an interface peers can
+    /// route to — wildcard addresses are rejected at mesh formation.
+    pub fn bind(mut self, addr: &str) -> Self {
+        self.bind = Some(addr.to_string());
+        self
+    }
+
+    /// `TcpWorker` engine: rendezvous dial deadline in seconds
+    /// (`--connect-timeout`; default: the 60 s formation deadline).
+    pub fn connect_timeout(mut self, secs: u64) -> Self {
+        self.connect_timeout = Some(secs);
+        self
+    }
+
+    /// `TcpWorker` engine: rendezvous dial attempts before giving up
+    /// (`--connect-retries`; 0 = unlimited within the timeout).
+    pub fn connect_retries(mut self, n: usize) -> Self {
+        self.connect_retries = Some(n);
+        self
+    }
+
     /// Execute the run on the configured engine.
     pub fn run(self) -> Result<RunReport> {
         let Session {
@@ -342,10 +377,24 @@ impl<'a> Session<'a> {
             fail,
             engine,
             binary,
+            bind,
+            connect_timeout,
+            connect_retries,
         } = self;
 
         if threads == Some(0) {
             crate::bail!("threads must be at least 1");
+        }
+        // the mesh-side net knobs only mean something on a worker; a
+        // silent no-op on the other engines would hide a misconfigured
+        // multi-node launch
+        if (bind.is_some() || connect_timeout.is_some() || connect_retries.is_some())
+            && !matches!(engine, Engine::TcpWorker { .. })
+        {
+            crate::bail!(
+                "bind/connect_timeout/connect_retries configure a TcpWorker's mesh \
+                 joining; the other engines bind loopback listeners themselves"
+            );
         }
         if let Some(p) = &ckpt_policy {
             if p.every == 0 {
@@ -455,6 +504,8 @@ impl<'a> Session<'a> {
                         final_test: r.final_test,
                         comm_bytes: r.comm_bytes,
                         wire_bytes: 0,
+                        comm_wait_ms: r.comm_wait_ms,
+                        overlap_ratio: r.overlap_ratio,
                         log_rows: 0,
                         train: None,
                         params: Some(r.params),
@@ -485,6 +536,10 @@ impl<'a> Session<'a> {
                         final_test: result.final_test,
                         comm_bytes,
                         wire_bytes: 0,
+                        // the sequential replay never parks: its
+                        // receives are structurally immediate
+                        comm_wait_ms: 0.0,
+                        overlap_ratio: 1.0,
                         log_rows: 0,
                         train: Some(result),
                         params: None,
@@ -594,6 +649,11 @@ impl<'a> Session<'a> {
                         .get("wire_bytes_sent")
                         .and_then(Json::as_f64)
                         .unwrap_or(0.0) as u64,
+                    comm_wait_ms: j.get("comm_wait_ms").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                    overlap_ratio: j
+                        .get("overlap_ratio")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(f64::NAN),
                     log_rows: 0,
                     train: None,
                     params: None,
@@ -634,6 +694,9 @@ impl<'a> Session<'a> {
                     ckpt_every: ckpt_policy.as_ref().map(|p| p.every).unwrap_or(1),
                     resume,
                     fail_epoch: fail.and_then(|(r, e)| (r == rank).then_some(e)),
+                    bind,
+                    connect_timeout_secs: connect_timeout,
+                    connect_retries,
                 };
                 let summary = worker::run_worker(&wopts)?;
                 Ok(match summary {
@@ -645,6 +708,8 @@ impl<'a> Session<'a> {
                         final_test: s.final_test,
                         comm_bytes: s.payload_bytes_sent,
                         wire_bytes: s.wire_bytes_sent,
+                        comm_wait_ms: s.comm_wait_ms,
+                        overlap_ratio: s.overlap_ratio,
                         log_rows: 0,
                         train: None,
                         params: None,
@@ -661,6 +726,8 @@ impl<'a> Session<'a> {
                         final_test: f64::NAN,
                         comm_bytes: 0,
                         wire_bytes: 0,
+                        comm_wait_ms: f64::NAN,
+                        overlap_ratio: f64::NAN,
                         log_rows: 0,
                         train: None,
                         params: None,
@@ -705,6 +772,12 @@ mod tests {
         assert!(e.to_string().contains("pipegcn-gf"), "{e}");
         let e = Session::preset("nope").epochs(1).run().unwrap_err();
         assert!(e.to_string().contains("unknown preset"), "{e}");
+        // mesh-side net knobs are worker-only — a silent no-op elsewhere
+        // would hide a misconfigured multi-node launch
+        let e = Session::preset("tiny").bind("10.0.0.5:0").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("TcpWorker"), "{e}");
+        let e = Session::preset("tiny").connect_retries(3).epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("TcpWorker"), "{e}");
     }
 
     #[test]

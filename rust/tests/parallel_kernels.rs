@@ -213,16 +213,24 @@ fn smoke_bench_writes_ndjson_rows() {
     pipegcn::perf::run_bench(&o).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
     let rows = pipegcn::util::json::parse_ndjson(&text).unwrap();
-    // header + 5 kernels × 2 thread counts + 2 epoch rows + 2 serve rows
-    // (min and max thread count) + summary
-    assert_eq!(rows.len(), 1 + 10 + 2 + 2 + 1, "{text}");
+    // header + 5 kernels × 2 thread counts + 2 epoch rows + 2 overlap
+    // rows + 2 serve rows (min and max thread count) + summary
+    assert_eq!(rows.len(), 1 + 10 + 2 + 2 + 2 + 1, "{text}");
     assert_eq!(rows[0].get("bench").unwrap().as_str(), Some("pipegcn-kernels"));
     for row in &rows[1..13] {
         assert!(row.get("ns_iter").unwrap().as_f64().unwrap() > 0.0);
         assert!(row.get("gflops").unwrap().as_f64().unwrap() >= 0.0);
         assert!(row.get("threads").unwrap().as_usize().unwrap() >= 1);
     }
+    // the overlap sweep: one threaded multi-rank run per thread count,
+    // reporting rank 0's parked time and hidden-receive fraction
     for row in &rows[13..15] {
+        assert_eq!(row.get("kernel").unwrap().as_str(), Some("overlap"));
+        assert!(row.get("comm_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let r = row.get("overlap_ratio").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&r), "overlap_ratio {r}");
+    }
+    for row in &rows[15..17] {
         assert_eq!(row.get("kernel").unwrap().as_str(), Some("serve"));
         assert!(row.get("p50_ms").unwrap().as_f64().unwrap() > 0.0);
         assert!(row.get("p99_ms").unwrap().as_f64().unwrap() > 0.0);

@@ -1,0 +1,208 @@
+//! Shared conformance suite for the nonblocking, handle-based
+//! [`Transport`] contract: both implementations — the in-process
+//! `Fabric` and `TcpTransport` over real sockets — must behave
+//! identically under `post_recv`/`try_take`/`wait`, FIFO per tag, drops
+//! without a wait, and byte accounting. A regression test also pins the
+//! prefetched schedule's NDJSON trace rows (per-(layer, phase)
+//! `comm_wait` breakdown summing to `comm_wait_ms`, plus
+//! `overlap_ratio`).
+
+use pipegcn::comm::{Fabric, Phase, Tag, Transport, WaitStats};
+use pipegcn::net::localhost_mesh;
+use pipegcn::session::{Engine, Session};
+use pipegcn::util::json::{parse_ndjson, Json};
+use std::time::Duration;
+
+/// Run the suite with `sender` sending as rank `src` and `receiver`
+/// receiving as rank `dst` (the same object for the Fabric; two mesh
+/// endpoints for TCP). Every check drains what it sends, so the caller
+/// can assert `pending() == 0` afterwards.
+fn conformance(sender: &dyn Transport, receiver: &dyn Transport, src: usize, dst: usize) {
+    let tag = |iter: u32, layer: u16| Tag::new(iter, layer, Phase::FwdFeat);
+
+    // -- post before send: try_take stays None, wait claims the payload
+    let mut h = receiver.post_recv(src, dst, tag(1, 0));
+    assert_eq!(h.src(), src);
+    assert_eq!(h.dst(), dst);
+    assert_eq!(h.tag(), tag(1, 0));
+    assert_eq!(h.try_take(), None, "nothing sent yet");
+    sender.send(src, dst, tag(1, 0), vec![1.0, 2.0]);
+    let mut st = WaitStats::default();
+    assert_eq!(h.wait(&mut st), vec![1.0, 2.0]);
+    assert_eq!(st.hidden() + st.exposed(), 1, "exactly one receive waited");
+
+    // -- wait parks across threads until the send lands
+    let h = receiver.post_recv(src, dst, tag(2, 0));
+    std::thread::scope(|s| {
+        let waiter = s.spawn(move || {
+            let mut st = WaitStats::default();
+            let v = h.wait(&mut st);
+            (v, st)
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        sender.send(src, dst, tag(2, 0), vec![3.0]);
+        let (v, st) = waiter.join().unwrap();
+        assert_eq!(v, vec![3.0]);
+        assert_eq!(st.hidden() + st.exposed(), 1);
+    });
+
+    // -- FIFO per tag, interleaved with another tag
+    let t3 = tag(3, 0);
+    let other = Tag::new(3, 0, Phase::BwdGrad);
+    sender.send(src, dst, t3, vec![10.0]);
+    sender.send(src, dst, other, vec![99.0]);
+    sender.send(src, dst, t3, vec![20.0]);
+    let mut st = WaitStats::default();
+    assert_eq!(receiver.post_recv(src, dst, t3).wait(&mut st), vec![10.0]);
+    assert_eq!(receiver.post_recv(src, dst, t3).wait(&mut st), vec![20.0]);
+    assert_eq!(receiver.post_recv(src, dst, other).wait(&mut st), vec![99.0]);
+
+    // -- reservations posted before any send are served in post order
+    let t4 = tag(4, 0);
+    let h1 = receiver.post_recv(src, dst, t4);
+    let h2 = receiver.post_recv(src, dst, t4);
+    sender.send(src, dst, t4, vec![1.0]);
+    sender.send(src, dst, t4, vec![2.0]);
+    let mut st = WaitStats::default();
+    assert_eq!(h1.wait(&mut st), vec![1.0]);
+    assert_eq!(h2.wait(&mut st), vec![2.0]);
+
+    // -- a handle dropped while still pending leaks nothing: the next
+    //    send is delivered normally
+    let t5 = tag(5, 0);
+    drop(receiver.post_recv(src, dst, t5));
+    sender.send(src, dst, t5, vec![7.5]);
+    assert_eq!(receiver.recv_blocking(src, dst, t5), vec![7.5]);
+
+    // -- a handle dropped *fulfilled but untaken* requeues its payload
+    //    at the head of the FIFO (no message ever lost). The fence tag
+    //    exploits same-channel FIFO: once it arrives, both t6 payloads
+    //    have been delivered on the receiver side.
+    let t6 = tag(6, 0);
+    let fence = tag(6, 1);
+    sender.send(src, dst, t6, vec![1.25]);
+    sender.send(src, dst, t6, vec![2.25]);
+    sender.send(src, dst, fence, vec![0.0]);
+    assert_eq!(receiver.recv_blocking(src, dst, fence), vec![0.0]);
+    drop(receiver.post_recv(src, dst, t6)); // claims 1.25, never takes it
+    assert_eq!(receiver.recv_blocking(src, dst, t6), vec![1.25]);
+    assert_eq!(receiver.recv_blocking(src, dst, t6), vec![2.25]);
+
+    // -- a fulfilled handle dropped while a *sibling* reservation is
+    //    still pending must hand its payload to that sibling (the
+    //    transport only fulfills each message once, so a requeue that
+    //    ignored pending reservations would strand the sibling forever)
+    let t65 = tag(6, 5);
+    let fence65 = tag(6, 6);
+    sender.send(src, dst, t65, vec![3.75]);
+    sender.send(src, dst, fence65, vec![0.0]);
+    assert_eq!(receiver.recv_blocking(src, dst, fence65), vec![0.0]);
+    let h_old = receiver.post_recv(src, dst, t65); // claims 3.75
+    let h_next = receiver.post_recv(src, dst, t65); // pending sibling
+    drop(h_old);
+    let mut st = WaitStats::default();
+    assert_eq!(h_next.wait(&mut st), vec![3.75]);
+
+    // -- several fulfilled handles dropped untaken, in any order,
+    //    restore exact send order (payloads carry delivery sequence
+    //    numbers, so recovery is position-preserving, not head-insert)
+    let t67 = tag(6, 7);
+    let fence67 = tag(6, 8);
+    sender.send(src, dst, t67, vec![1.0]);
+    sender.send(src, dst, t67, vec![2.0]);
+    sender.send(src, dst, fence67, vec![0.0]);
+    assert_eq!(receiver.recv_blocking(src, dst, fence67), vec![0.0]);
+    let h1 = receiver.post_recv(src, dst, t67); // claims 1.0
+    let h2 = receiver.post_recv(src, dst, t67); // claims 2.0
+    drop(h1);
+    drop(h2);
+    assert_eq!(receiver.recv_blocking(src, dst, t67), vec![1.0]);
+    assert_eq!(receiver.recv_blocking(src, dst, t67), vec![2.0]);
+
+    // -- bytes accounting: sends are charged 4 bytes per f32 regardless
+    //    of how (or whether) the receive side claims them
+    let before = sender.bytes_sent(src);
+    let t7 = tag(7, 0);
+    sender.send(src, dst, t7, vec![0.0; 25]);
+    assert_eq!(sender.bytes_sent(src) - before, 100);
+    assert_eq!(receiver.recv_blocking(src, dst, t7).len(), 25);
+    assert_eq!(sender.bytes_sent(src) - before, 100, "receives never change accounting");
+
+    // -- WaitStats attribution: a payload that arrived before the wait
+    //    counts as hidden, under the handle's (layer, phase) key
+    let t8 = Tag::new(8, 2, Phase::BwdGrad);
+    let fence2 = tag(8, 9);
+    sender.send(src, dst, t8, vec![5.0]);
+    sender.send(src, dst, fence2, vec![0.0]);
+    assert_eq!(receiver.recv_blocking(src, dst, fence2), vec![0.0]);
+    let mut st = WaitStats::default();
+    let h = receiver.post_recv(src, dst, t8); // fulfilled at post time
+    assert_eq!(h.wait(&mut st), vec![5.0]);
+    assert_eq!(st.hidden(), 1, "a pre-arrived payload is a hidden receive");
+    assert_eq!(st.exposed(), 0);
+    assert!(st.entries_ms().iter().any(|(k, _)| k == "bwd_l2"), "{:?}", st.entries_ms());
+
+    // -- recv_blocking is the default-method shim over post_recv + wait
+    let t9 = tag(9, 0);
+    sender.send(src, dst, t9, vec![4.5]);
+    assert_eq!(receiver.recv_blocking(src, dst, t9), vec![4.5]);
+}
+
+#[test]
+fn fabric_satisfies_the_transport_conformance_suite() {
+    let f = Fabric::new(2);
+    conformance(&f, &f, 0, 1);
+    assert_eq!(f.pending(), 0, "the suite must drain everything it sends");
+}
+
+#[test]
+fn tcp_satisfies_the_transport_conformance_suite() {
+    let mut mesh = localhost_mesh(2).unwrap();
+    conformance(&mesh[0], &mesh[1], 0, 1);
+    assert_eq!(mesh[1].pending(), 0, "the suite must drain everything it sends");
+    for m in &mut mesh {
+        m.shutdown();
+    }
+}
+
+/// Regression for the per-layer overlap traces: every epoch row rank 0
+/// streams under the prefetched schedule must carry a `comm_wait`
+/// breakdown whose keys sum to `comm_wait_ms`, plus an `overlap_ratio`.
+#[test]
+fn prefetched_schedule_log_rows_carry_comm_wait_breakdown() {
+    let path = format!("/tmp/pipegcn_overlap_rows_{}.ndjson", std::process::id());
+    let _ = std::fs::remove_file(&path);
+    let report = Session::preset("tiny")
+        .parts(3)
+        .variant("pipegcn")
+        .epochs(4)
+        .log(&path)
+        .engine(Engine::Threaded)
+        .run()
+        .unwrap();
+    assert!(report.comm_wait_ms >= 0.0);
+    assert!((0.0..=1.0).contains(&report.overlap_ratio), "{}", report.overlap_ratio);
+    let rows = parse_ndjson(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(rows.len(), 1 + 4, "header + one row per epoch");
+    for row in &rows[1..] {
+        let total = row.get("comm_wait_ms").unwrap().as_f64().unwrap();
+        let Some(Json::Obj(pairs)) = row.get("comm_wait") else {
+            panic!("missing comm_wait breakdown in {row:?}")
+        };
+        assert!(!pairs.is_empty(), "empty breakdown");
+        let keys: Vec<&str> = pairs.iter().map(|(k, _)| k.as_str()).collect();
+        assert!(keys.iter().any(|k| k.starts_with("fwd_l")), "{keys:?}");
+        assert!(keys.contains(&"reduce"), "{keys:?}");
+        let sum: f64 = pairs.iter().map(|(_, v)| v.as_f64().unwrap()).sum();
+        assert!(
+            (sum - total).abs() <= 1e-9 * total.max(1.0),
+            "breakdown keys sum to {sum}, comm_wait_ms says {total}"
+        );
+        let r = row.get("overlap_ratio").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&r), "overlap_ratio {r}");
+        let epoch_ms = row.get("epoch_ms").unwrap().as_f64().unwrap();
+        let comp_ms = row.get("comp_ms").unwrap().as_f64().unwrap();
+        assert!(comp_ms <= epoch_ms + 1e-9, "comp {comp_ms} > epoch {epoch_ms}");
+    }
+    std::fs::remove_file(&path).ok();
+}
