@@ -232,15 +232,27 @@ impl RecvHandle {
     /// Block until the payload arrives. Time actually spent parked is
     /// charged to `stats` under this handle's `(layer, phase)`; a
     /// receive that had already completed counts as *hidden* (fully
-    /// overlapped with compute) and charges ~nothing.
+    /// overlapped with compute) and charges ~nothing. When the span
+    /// tracer is on, a parked wait also records a `comm_wait` span on
+    /// the receiving rank's comm lane (the stall made visible).
     pub fn wait(mut self, stats: &mut WaitStats) -> Vec<f32> {
         if let Some(v) = self.fut.try_take() {
             stats.hit(self.tag);
             return v;
         }
+        let t0 = crate::obs::trace::now_us();
         let w = Stopwatch::start();
         let v = self.fut.wait_take();
         stats.charge(self.tag, w.elapsed_secs());
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::span(
+                self.dst,
+                crate::obs::trace::Kind::CommWait,
+                self.tag.layer as usize,
+                self.tag.iter as usize,
+                t0,
+            );
+        }
         v
     }
 

@@ -161,6 +161,9 @@ pub struct EpochStat {
     pub overlap_ratio: f64,
     /// payload bytes moved through the fabric during this epoch
     pub comm_bytes: u64,
+    /// peak resident set size (`VmHWM`) sampled at the end of the epoch;
+    /// 0 where procfs is unavailable
+    pub peak_rss_bytes: u64,
 }
 
 /// Staleness error probe (Fig. 5/7): Frobenius norms of the gap between

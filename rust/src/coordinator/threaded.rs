@@ -200,8 +200,9 @@ pub struct RankCtl<'a> {
     /// `policy.every` epochs
     pub ckpt: Option<&'a ckpt::Policy>,
     /// rank 0 only: emit one NDJSON row per epoch, live — `{epoch,
-    /// loss, epoch_ms, comp_ms, comm_wait_ms, overlap_ratio, comm_wait}`
-    /// where `comm_wait` is the per-(layer, phase) breakdown
+    /// loss, epoch_ms, comp_ms, comm_wait_ms, overlap_ratio, comm_wait,
+    /// rss}` where `comm_wait` is the per-(layer, phase) breakdown and
+    /// `rss` is the process peak RSS in bytes (`VmHWM`, 0 off-Linux)
     pub log: Option<&'a mut FileEmitter>,
     /// fault injection (`pipegcn worker --fail-epoch`): exit(13) right
     /// after this epoch completes, simulating a worker death mid-run
@@ -248,6 +249,32 @@ pub fn run_rank_ctl(
     };
     let p = &plan.parts[rank];
 
+    // Pre-registered observability handles — one registry lock per
+    // series here, lock-free atomic updates on the epoch path. The
+    // registry is process-global: over TCP each process is one rank, so
+    // a worker's metrics endpoint shows exactly its own rank; in the
+    // threaded engine every rank's thread folds into the same series.
+    // All of it is observation-only — no effect on schedule, tags, or
+    // numerics (the bit-identity oracle below stays the proof).
+    let reg = crate::obs::global();
+    let fwd_ms: Vec<crate::obs::Histogram> = (0..n_layers)
+        .map(|l| reg.histogram("layer_fwd_ms", &[("layer", &l.to_string())]))
+        .collect();
+    let bwd_ms: Vec<crate::obs::Histogram> = (0..n_layers)
+        .map(|l| reg.histogram("layer_bwd_ms", &[("layer", &l.to_string())]))
+        .collect();
+    let per_layer = |family: &str, kind: &str| -> Vec<crate::obs::Gauge> {
+        (0..n_layers)
+            .map(|l| reg.gauge(family, &[("layer", &l.to_string()), ("kind", kind)]))
+            .collect()
+    };
+    let stale_feat = per_layer("staleness_age_epochs", "feat");
+    let stale_grad = per_layer("staleness_age_epochs", "grad");
+    let resid_feat = per_layer("gamma_residual_norm", "feat");
+    let resid_grad = per_layer("gamma_residual_norm", "grad");
+    let epoch_hist = reg.histogram("epoch_ms", &[]);
+    let epochs_total = reg.counter("epochs_total", &[]);
+
     setup_exchange(transport, plan, rank);
 
     let mut backend = NativeBackend::new();
@@ -259,7 +286,12 @@ pub fn run_rank_ctl(
     let mut run_stats = WaitStats::default();
     for t in start..=cfg.epochs {
         let epoch_watch = Stopwatch::start();
+        let epoch_t0 = crate::obs::trace::now_us();
         let mut stats = WaitStats::default();
+        // this rank's γ-smoothing residuals ‖stale − fresh‖_F, filled in
+        // the drain below (rank 0 publishes them as gauges)
+        let mut resid_feat_acc = vec![0.0f64; n_layers];
+        let mut resid_grad_acc = vec![0.0f64; n_layers];
         // ---- prefetch: post every receive of the epoch ----
         // The tags of an epoch are fully known up front (they encode
         // (iter, layer, phase)); posting them all here lets the
@@ -340,7 +372,13 @@ pub fn run_rank_ctl(
                 (assembled, None)
             };
             let lp = &st.params.layers[l];
+            let kernel_watch = Stopwatch::start();
+            let kernel_t0 = crate::obs::trace::now_us();
             let out = backend.layer_fwd(prop_id, &hf, lp.w_self.as_ref(), &lp.w_neigh);
+            fwd_ms[l].record(kernel_watch.elapsed_secs() * 1e3);
+            if crate::obs::trace::enabled() {
+                crate::obs::trace::span(rank, crate::obs::trace::Kind::FwdLayer, l, t, kernel_t0);
+            }
             let h_next = if l + 1 < n_layers { ops::relu(&out.pre) } else { out.pre.clone() };
             h_full_c.push(hf);
             masks.push(mask);
@@ -384,6 +422,8 @@ pub fn run_rank_ctl(
                 ops::relu_grad_inplace(&mut m, &pres[l]);
             }
             let lp = &st.params.layers[l];
+            let kernel_watch = Stopwatch::start();
+            let kernel_t0 = crate::obs::trace::now_us();
             let bwd = backend.layer_bwd(
                 prop_id,
                 &h_full_c[l],
@@ -393,6 +433,10 @@ pub fn run_rank_ctl(
                 &lp.w_neigh,
                 l > 0,
             );
+            bwd_ms[l].record(kernel_watch.elapsed_secs() * 1e3);
+            if crate::obs::trace::enabled() {
+                crate::obs::trace::span(rank, crate::obs::trace::Kind::BwdLayer, l, t, kernel_t0);
+            }
             grads.layers[l].w_neigh = bwd.g_neigh;
             if let Some(gs) = bwd.g_self {
                 grads.layers[l].w_self = Some(gs);
@@ -443,6 +487,7 @@ pub fn run_rank_ctl(
         // into the stale buffers for iteration t+1. This runs before the
         // checkpoint hook so snapshots hold exactly the buffers the
         // sequential engine writes.
+        let drain_t0 = crate::obs::trace::now_us();
         if pipe {
             for l in 0..n_layers {
                 let f_in = dims[l];
@@ -461,6 +506,7 @@ pub fn run_rank_ctl(
                     }
                 }
                 if opts.smooth_feat && t > 1 {
+                    resid_feat_acc[l] = st.feat_buf[l].fro_dist(&fresh);
                     st.feat_buf[l].scale(opts.gamma);
                     st.feat_buf[l].axpy(1.0 - opts.gamma, &fresh);
                 } else {
@@ -481,6 +527,7 @@ pub fn run_rank_ctl(
                     }
                 }
                 if opts.smooth_grad && t > 1 {
+                    resid_grad_acc[l] = st.grad_buf[l].fro_dist(&fresh);
                     st.grad_buf[l].scale(opts.gamma);
                     st.grad_buf[l].axpy(1.0 - opts.gamma, &fresh);
                 } else {
@@ -488,10 +535,17 @@ pub fn run_rank_ctl(
                 }
             }
         }
+        if pipe && crate::obs::trace::enabled() {
+            crate::obs::trace::span(rank, crate::obs::trace::Kind::Drain, 0, t, drain_t0);
+        }
         debug_assert!(posted.is_empty(), "unconsumed posted receives at epoch end");
         // ---- all-reduce + update (replicated Adam) ----
         let mut gbuf = grads.flatten();
+        let reduce_t0 = crate::obs::trace::now_us();
         ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32, &mut stats);
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::span(rank, crate::obs::trace::Kind::Reduce, 0, t, reduce_t0);
+        }
         match cfg.optimizer {
             super::Optimizer::Adam => st.adam.step(&mut st.flat, &gbuf),
             super::Optimizer::Sgd => {
@@ -510,6 +564,30 @@ pub fn run_rank_ctl(
         let entries = stats.entries_ms();
         let comm_wait_ms: f64 = entries.iter().map(|(_, v)| v).sum();
         let comp_ms = (epoch_ms - comm_wait_ms).max(0.0);
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::span(rank, crate::obs::trace::Kind::Epoch, 0, t, epoch_t0);
+        }
+        // per-epoch metric publication (counters/gauges/histograms only
+        // — the schedule and numerics above are untouched)
+        crate::obs::record_wait_stats(&stats);
+        let peak_rss = crate::obs::sample_peak_rss(&reg).unwrap_or(0);
+        if rank == 0 {
+            epoch_hist.record(epoch_ms);
+            epochs_total.inc();
+            for l in 0..n_layers {
+                // staleness is structural: pipelined variants consume
+                // iteration-(t−1) boundary tensors, vanilla waits for
+                // fresh ones; layer 0 never exchanges gradients
+                stale_feat[l].set(if pipe { 1.0 } else { 0.0 });
+                stale_grad[l].set(if pipe && l > 0 { 1.0 } else { 0.0 });
+                if opts.smooth_feat && t > 1 {
+                    resid_feat[l].set(resid_feat_acc[l]);
+                }
+                if opts.smooth_grad && t > 1 {
+                    resid_grad[l].set(resid_grad_acc[l]);
+                }
+            }
+        }
         if let Some(em) = ctl.log.take() {
             let mut breakdown = Json::obj();
             for (key, ms) in &entries {
@@ -522,7 +600,8 @@ pub fn run_rank_ctl(
                 .set("comp_ms", comp_ms)
                 .set("comm_wait_ms", comm_wait_ms)
                 .set("overlap_ratio", stats.overlap_ratio())
-                .set("comm_wait", breakdown);
+                .set("comm_wait", breakdown)
+                .set("rss", peak_rss);
             match em.emit(&row) {
                 Ok(()) => ctl.log = Some(em),
                 // stop logging, keep training

@@ -126,6 +126,28 @@ pub fn train_resumable(
         Variant::Pipe(o) => (true, o),
     };
 
+    // pre-registered observability handles: one registry lock per series
+    // here, then lock-free atomic updates on the epoch path. All of it
+    // is observation-only — no effect on schedule, tags, or numerics.
+    let reg = crate::obs::global();
+    let per_layer = |family: &str, kind: &str| -> Vec<crate::obs::Gauge> {
+        (0..n_layers)
+            .map(|l| reg.gauge(family, &[("layer", &l.to_string()), ("kind", kind)]))
+            .collect()
+    };
+    let fwd_ms: Vec<crate::obs::Histogram> = (0..n_layers)
+        .map(|l| reg.histogram("layer_fwd_ms", &[("layer", &l.to_string())]))
+        .collect();
+    let bwd_ms: Vec<crate::obs::Histogram> = (0..n_layers)
+        .map(|l| reg.histogram("layer_bwd_ms", &[("layer", &l.to_string())]))
+        .collect();
+    let stale_feat = per_layer("staleness_age_epochs", "feat");
+    let stale_grad = per_layer("staleness_age_epochs", "grad");
+    let resid_feat = per_layer("gamma_residual_norm", "feat");
+    let resid_grad = per_layer("gamma_residual_norm", "grad");
+    let epoch_hist = reg.histogram("epoch_ms", &[]);
+    let epochs_total = reg.counter("epochs_total", &[]);
+
     // --- boundary-set exchange (Setup phase, Alg. 1 lines 1–5) --------
     // Same send/verify halves the concurrent engines run, driven in
     // two passes (all sends, then all verifies) because one thread
@@ -191,7 +213,11 @@ pub fn train_resumable(
             fabric.reset_counters();
         }
         let epoch_watch = Stopwatch::start();
+        let epoch_t0 = crate::obs::trace::now_us();
         let epoch_bytes_start = fabric.total_bytes();
+        // γ-EMA residuals ‖buf − fresh‖_F accumulated over partitions
+        let mut resid_feat_acc = vec![0.0f64; n_layers];
+        let mut resid_grad_acc = vec![0.0f64; n_layers];
         // prefetched replay: post every receive of the epoch up front —
         // the same handle choreography the per-rank engines run, so a
         // producer that fails to send surfaces as a diagnostic naming
@@ -285,6 +311,7 @@ pub fn train_resumable(
                     if opts.smooth_feat && t > 1 {
                         // ĥ ← γ·ĥ + (1−γ)·h  (§3.4 applied to features)
                         let buf = &mut states[i].feat_buf[l];
+                        resid_feat_acc[l] += buf.fro_dist(&fresh).powi(2);
                         buf.scale(opts.gamma);
                         buf.axpy(1.0 - opts.gamma, &fresh);
                     } else {
@@ -302,7 +329,13 @@ pub fn train_resumable(
                     (assembled, None)
                 };
                 let lp = &states[i].params.layers[l];
+                let kernel_watch = Stopwatch::start();
+                let kernel_t0 = crate::obs::trace::now_us();
                 let out = backend.layer_fwd(prop_ids[i], &hf, lp.w_self.as_ref(), &lp.w_neigh);
+                fwd_ms[l].record(kernel_watch.elapsed_secs() * 1e3);
+                if crate::obs::trace::enabled() {
+                    crate::obs::trace::span(i, crate::obs::trace::Kind::FwdLayer, l, t, kernel_t0);
+                }
                 let fc = backend.take_flops();
                 if capture {
                     works[i].fwd[l] = LayerCompute { spmm_flops: fc.spmm, gemm_flops: fc.gemm };
@@ -362,6 +395,8 @@ pub fn train_resumable(
                     ops::relu_grad_inplace(&mut m, &pres[i][l]);
                 }
                 let lp = &states[i].params.layers[l];
+                let kernel_watch = Stopwatch::start();
+                let kernel_t0 = crate::obs::trace::now_us();
                 let bwd = backend.layer_bwd(
                     prop_ids[i],
                     &h_full[i][l],
@@ -371,6 +406,10 @@ pub fn train_resumable(
                     &lp.w_neigh,
                     l > 0,
                 );
+                bwd_ms[l].record(kernel_watch.elapsed_secs() * 1e3);
+                if crate::obs::trace::enabled() {
+                    crate::obs::trace::span(i, crate::obs::trace::Kind::BwdLayer, l, t, kernel_t0);
+                }
                 let fc = backend.take_flops();
                 if capture {
                     works[i].bwd[l] = LayerCompute { spmm_flops: fc.spmm, gemm_flops: fc.gemm };
@@ -437,6 +476,7 @@ pub fn train_resumable(
                         if opts.smooth_grad && t > 1 {
                             // δ̂ ← γ·δ̂ + (1−γ)·δ  (§3.4)
                             let buf = &mut states[i].grad_buf[l];
+                            resid_grad_acc[l] += buf.fro_dist(&fresh).powi(2);
                             buf.scale(opts.gamma);
                             buf.axpy(1.0 - opts.gamma, &fresh);
                         } else {
@@ -451,7 +491,11 @@ pub fn train_resumable(
         // ---------------- all-reduce + update ----------------
         debug_assert!(posted.is_empty(), "unconsumed posted receives at epoch end");
         let mut bufs: Vec<Vec<f32>> = grads.iter().map(|gp| gp.flatten()).collect();
+        let reduce_t0 = crate::obs::trace::now_us();
         crate::comm::allreduce::ring_allreduce(&fabric, &mut bufs, t as u32);
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::span(0, crate::obs::trace::Kind::Reduce, 0, t, reduce_t0);
+        }
         // each rank steps its own replicated optimizer — the all-reduced
         // gradient is bit-identical everywhere, so the parameter copies
         // never diverge (Alg. 1 lines 32-33)
@@ -483,6 +527,28 @@ pub fn train_resumable(
         }
         let epoch_ms = epoch_watch.elapsed_secs() * 1e3;
         let epoch_comm_bytes = fabric.total_bytes() - epoch_bytes_start;
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::span(0, crate::obs::trace::Kind::Epoch, 0, t, epoch_t0);
+        }
+
+        // per-epoch metric publication (gauges/histograms only — the
+        // training numbers themselves are untouched)
+        let peak_rss = crate::obs::sample_peak_rss(&reg).unwrap_or(0);
+        epoch_hist.record(epoch_ms);
+        epochs_total.inc();
+        for l in 0..n_layers {
+            // PipeGCN consumes boundary tensors from iteration t−1 (the
+            // zero-init buffer at t=1 counts the same) — vanilla is
+            // always fresh; layer-0 never exchanges gradients
+            stale_feat[l].set(if pipe { 1.0 } else { 0.0 });
+            stale_grad[l].set(if pipe && l > 0 { 1.0 } else { 0.0 });
+            if opts.smooth_feat && t > 1 {
+                resid_feat[l].set(resid_feat_acc[l].sqrt());
+            }
+            if opts.smooth_grad && t > 1 {
+                resid_grad[l].set(resid_grad_acc[l].sqrt());
+            }
+        }
 
         // ---------------- eval / probes ----------------
         let do_eval = cfg.eval_every > 0 && (t % cfg.eval_every == 0 || t == cfg.epochs)
@@ -513,6 +579,7 @@ pub fn train_resumable(
             comm_wait_by: Vec::new(),
             overlap_ratio: 1.0,
             comm_bytes: epoch_comm_bytes,
+            peak_rss_bytes: peak_rss,
         });
         if let Some(emitter) = log.take() {
             let row = Json::obj()
@@ -524,7 +591,8 @@ pub fn train_resumable(
                 .set("comm_wait_ms", 0.0f64)
                 .set("overlap_ratio", 1.0f64)
                 .set("comm_wait", Json::obj())
-                .set("bytes", epoch_comm_bytes);
+                .set("bytes", epoch_comm_bytes)
+                .set("rss", peak_rss);
             match emitter.emit(&row) {
                 Ok(()) => log = Some(emitter),
                 // stop logging, keep training

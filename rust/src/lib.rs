@@ -72,6 +72,14 @@
 //!   (`Sequential | Threaded | Tcp | TcpWorker`). The nine pre-Session
 //!   entry points (`exp::run*`/`trainer::train*`/`train_threaded`) have
 //!   been deleted; only the engine cores remain underneath.
+//! * [`obs`] — observability: a lock-light metrics registry (counters /
+//!   gauges / log-bucketed histograms) behind a live Prometheus-text
+//!   endpoint (`--metrics-addr`), and a cross-rank span tracer whose
+//!   merged Chrome trace-event JSON (`--trace`) makes the per-layer
+//!   comm/compute overlap visible — clock offsets are estimated against
+//!   rank 0 and worker buffers ship home over the frame protocol at
+//!   shutdown. Observation-only: loss curves stay bit-identical with
+//!   instrumentation on or off.
 //! * [`serve`] — the online workload: `pipegcn serve` loads a params
 //!   artifact, binds the `net::frame` protocol, and answers
 //!   feature→logit queries bit-identical to
@@ -96,5 +104,6 @@ pub mod coordinator;
 pub mod baselines;
 pub mod exp;
 pub mod session;
+pub mod obs;
 pub mod serve;
 pub mod perf;

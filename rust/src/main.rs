@@ -109,7 +109,11 @@ fn print_help() {
          \x20            (kernel + end-to-end epoch + serve-latency sweep, NDJSON rows)\n\
          \x20 presets\n\
          train/launch/worker/sim/bench/serve accept --threads N (kernel worker\n\
-         threads; default: PIPEGCN_THREADS or the available parallelism)"
+         threads; default: PIPEGCN_THREADS or the available parallelism)\n\
+         observability: train/launch/worker accept --trace out.json (merged\n\
+         Chrome trace-event timeline; open in chrome://tracing or Perfetto)\n\
+         and, like serve, --metrics-addr HOST:PORT (live Prometheus text;\n\
+         under launch, rank i serves on PORT+i)"
     );
 }
 
@@ -144,13 +148,21 @@ fn session_from_flags<'a>(args: &Args, dataset: &str, method: &str) -> Result<Se
     if let Some(path) = args.get_opt("log") {
         s = s.log(path);
     }
+    // observability: merged Chrome trace + live Prometheus endpoint
+    if let Some(path) = args.get_opt("trace") {
+        s = s.trace(path);
+    }
+    if let Some(addr) = args.get_opt("metrics-addr") {
+        s = s.metrics_addr(addr);
+    }
     Ok(s)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
     args.assert_known(&[
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
-        "eval-every", "log", "ckpt-dir", "ckpt-every", "resume", "threads",
+        "eval-every", "log", "ckpt-dir", "ckpt-every", "resume", "threads", "trace",
+        "metrics-addr",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
@@ -226,6 +238,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     args.assert_known(&[
         "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
         "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
+        "trace", "metrics-addr",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let method = args.get_str("method", "pipegcn");
@@ -265,7 +278,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     args.assert_known(&[
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
         "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads", "bind",
-        "connect-timeout", "connect-retries",
+        "connect-timeout", "connect-retries", "trace", "metrics-addr",
     ])?;
     let coord = args
         .get_opt("coord")
@@ -338,8 +351,20 @@ fn cmd_export_params(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.assert_known(&[
         "params", "dataset", "seed", "bind", "addr-file", "max-conns", "threads",
+        "metrics-addr",
     ])?;
     apply_threads_flag(args)?;
+    // live Prometheus endpoint (per-query latency histogram, active
+    // connections), held for the server's lifetime
+    let _metrics = match args.get_opt("metrics-addr") {
+        Some(addr) => {
+            let srv = pipegcn::obs::http::serve(addr)
+                .with_context(|| format!("--metrics-addr {addr}"))?;
+            println!("metrics on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
     let opts = pipegcn::serve::ServeOpts {
         params_path: args
             .get_opt("params")
@@ -377,11 +402,16 @@ fn cmd_query(args: &Args) -> Result<()> {
         .with_context(|| format!("connecting to {addr}"))?;
     let mut lats_ms = Vec::with_capacity(repeat);
     let mut logits = None;
+    // the same log-bucketed histogram the serve endpoint exports —
+    // client-side round-trip view of the query latency distribution
+    let hist = pipegcn::obs::global().histogram("query_roundtrip_ms", &[]);
     let total_watch = Stopwatch::start();
     for _ in 0..repeat {
         let w = Stopwatch::start();
         let m = client.query(&ids)?;
-        lats_ms.push(w.elapsed_secs() * 1e3);
+        let ms = w.elapsed_secs() * 1e3;
+        lats_ms.push(ms);
+        hist.record(ms);
         logits = Some(m);
     }
     let total_secs = total_watch.elapsed_secs();
@@ -414,11 +444,23 @@ fn cmd_query(args: &Args) -> Result<()> {
         for (i, ms) in lats_ms.iter().enumerate() {
             em.emit(&Json::obj().set("query", i).set("ms", *ms))?;
         }
+        // exact nearest-rank percentiles stay under their original keys
+        // (bit-compatible with older reports); the histogram view adds
+        // log-bucketed quantiles plus the full bucket shape
+        let buckets: Vec<Json> = hist
+            .nonzero_buckets()
+            .into_iter()
+            .map(|(le, n)| Json::Arr(vec![Json::from(le), Json::from(n)]))
+            .collect();
         em.emit(
             &Json::obj()
                 .set("p50_ms", p50)
                 .set("p99_ms", p99)
-                .set("qps", qps),
+                .set("qps", qps)
+                .set("hist_p50_ms", hist.quantile(0.50))
+                .set("hist_p90_ms", hist.quantile(0.90))
+                .set("hist_p99_ms", hist.quantile(0.99))
+                .set("hist_buckets", Json::Arr(buckets)),
         )?;
         println!("wrote {path}");
     }

@@ -49,6 +49,12 @@ pub struct LaunchOpts {
     pub fail_rank: Option<usize>,
     /// … exits(13) after this epoch, on the first generation only
     pub fail_epoch: Option<usize>,
+    /// merged Chrome trace-event JSON path, forwarded to every rank
+    /// (rank 0 writes the file after collecting peers' spans)
+    pub trace: Option<String>,
+    /// metrics base address `HOST:PORT`: rank i serves Prometheus text
+    /// on `HOST:PORT+i` (co-located workers need distinct ports)
+    pub metrics_addr: Option<String>,
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -79,6 +85,22 @@ fn worker_threads(opts: &LaunchOpts) -> Option<usize> {
             Some((cores / opts.parts.max(1)).max(1))
         }
     })
+}
+
+/// Rank `rank`'s metrics address: `HOST:PORT+rank`. Co-located workers
+/// cannot share one listening port, so the operator names a base and
+/// each rank takes the next port up — scrape rank i at base+i.
+fn rank_metrics_addr(base: &str, rank: usize) -> Result<String> {
+    let (host, port) = base
+        .rsplit_once(':')
+        .ok_or_else(|| crate::err_msg!("--metrics-addr {base}: expected HOST:PORT"))?;
+    let port: u16 = port
+        .parse()
+        .map_err(|e| crate::err_msg!("--metrics-addr {base}: bad port: {e}"))?;
+    let port = port
+        .checked_add(rank as u16)
+        .ok_or_else(|| crate::err_msg!("--metrics-addr {base}: port + rank {rank} overflows"))?;
+    Ok(format!("{host}:{port}"))
 }
 
 fn spawn_workers(
@@ -122,6 +144,20 @@ fn spawn_workers(
         if inject_fault && opts.fail_rank == Some(rank) {
             if let Some(epoch) = opts.fail_epoch {
                 cmd.arg("--fail-epoch").arg(epoch.to_string());
+            }
+        }
+        if let Some(path) = &opts.trace {
+            cmd.arg("--trace").arg(path);
+        }
+        if let Some(base) = &opts.metrics_addr {
+            match rank_metrics_addr(base, rank) {
+                Ok(addr) => {
+                    cmd.arg("--metrics-addr").arg(addr);
+                }
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(e);
+                }
             }
         }
         if rank == 0 {
@@ -222,5 +258,19 @@ pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_metrics_addr_offsets_port_per_rank() {
+        assert_eq!(rank_metrics_addr("127.0.0.1:9100", 0).unwrap(), "127.0.0.1:9100");
+        assert_eq!(rank_metrics_addr("127.0.0.1:9100", 3).unwrap(), "127.0.0.1:9103");
+        assert!(rank_metrics_addr("9100", 0).is_err());
+        assert!(rank_metrics_addr("host:notaport", 0).is_err());
+        assert!(rank_metrics_addr("host:65535", 1).is_err());
     }
 }

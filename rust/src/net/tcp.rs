@@ -22,6 +22,7 @@
 
 use super::frame::{self, Frame};
 use crate::comm::{self, RecvHandle, Tag, Transport};
+use crate::obs;
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::io::Write;
@@ -212,6 +213,24 @@ impl Drop for TcpRecv {
     }
 }
 
+/// Pre-registered per-link metric handles (`src`/`dst`-labeled series
+/// in the global [`obs`] registry) — updates off the send and reader
+/// paths are two relaxed atomic adds, no registry lock.
+struct LinkCounters {
+    bytes: obs::Counter,
+    frames: obs::Counter,
+}
+
+fn link_counters(bytes_family: &str, frames_family: &str, src: usize, dst: usize) -> LinkCounters {
+    let reg = obs::global();
+    let s = src.to_string();
+    let d = dst.to_string();
+    LinkCounters {
+        bytes: reg.counter(bytes_family, &[("src", &s), ("dst", &d)]),
+        frames: reg.counter(frames_family, &[("src", &s), ("dst", &d)]),
+    }
+}
+
 /// A [`Transport`] endpoint for exactly one rank of a TCP mesh. Build
 /// one per process with [`super::rendezvous::connect`].
 pub struct TcpTransport {
@@ -223,6 +242,11 @@ pub struct TcpTransport {
     payload_bytes_sent: AtomicU64,
     wire_bytes_sent: AtomicU64,
     msgs_sent: AtomicU64,
+    /// per-peer payload bytes (this instance only — the labeled registry
+    /// series aggregate across instances, these do not)
+    link_payload_bytes: Vec<AtomicU64>,
+    /// per-peer `link_bytes_sent_total` / `link_frames_sent_total`
+    tx_stats: Vec<Option<LinkCounters>>,
     writers: Vec<std::thread::JoinHandle<()>>,
     readers: Vec<std::thread::JoinHandle<()>>,
     shut: bool,
@@ -260,7 +284,13 @@ fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
     }
 }
 
-fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize) {
+fn reader_loop(
+    stream: TcpStream,
+    inbox: Arc<Inbox>,
+    my_rank: usize,
+    peer: usize,
+    rx: LinkCounters,
+) {
     let mut r = std::io::BufReader::new(stream);
     // partial reassembly buffers for chunked payloads: chunks of one
     // logical message arrive contiguously per tag on this socket
@@ -268,6 +298,8 @@ fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize
     loop {
         match frame::read_frame(&mut r) {
             Ok(Some(Frame::Data { src, dst, tag, payload })) => {
+                rx.bytes.add((payload.len() * 4) as f64);
+                rx.frames.inc();
                 let mut g = inbox.state.lock().unwrap();
                 if src as usize != peer || dst as usize != my_rank {
                     g.errors.push(format!(
@@ -280,6 +312,8 @@ fn reader_loop(stream: TcpStream, inbox: Arc<Inbox>, my_rank: usize, peer: usize
                 inbox.cv.notify_all();
             }
             Ok(Some(Frame::DataChunk { src, dst, tag, last, payload })) => {
+                rx.bytes.add((payload.len() * 4) as f64);
+                rx.frames.inc();
                 if src as usize != peer || dst as usize != my_rank {
                     let mut g = inbox.state.lock().unwrap();
                     g.errors.push(format!(
@@ -359,16 +393,36 @@ impl TcpTransport {
             match stream {
                 Some(s) => {
                     let ib = inbox.clone();
+                    let rx = link_counters(
+                        "link_bytes_recv_total",
+                        "link_frames_recv_total",
+                        peer,
+                        rank,
+                    );
                     readers.push(
                         std::thread::Builder::new()
                             .name(format!("pipegcn-r{peer}->{rank}"))
-                            .spawn(move || reader_loop(s, ib, rank, peer))
+                            .spawn(move || reader_loop(s, ib, rank, peer, rx))
                             .expect("spawn reader"),
                     );
                 }
                 None => assert_eq!(peer, rank, "missing inbound stream for peer {peer}"),
             }
         }
+        let tx_stats = (0..n)
+            .map(|peer| {
+                if peer == rank {
+                    None
+                } else {
+                    Some(link_counters(
+                        "link_bytes_sent_total",
+                        "link_frames_sent_total",
+                        rank,
+                        peer,
+                    ))
+                }
+            })
+            .collect();
         TcpTransport {
             rank,
             n,
@@ -377,6 +431,8 @@ impl TcpTransport {
             payload_bytes_sent: AtomicU64::new(0),
             wire_bytes_sent: AtomicU64::new(0),
             msgs_sent: AtomicU64::new(0),
+            link_payload_bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            tx_stats,
             writers,
             readers,
             shut: false,
@@ -400,6 +456,14 @@ impl TcpTransport {
 
     pub fn msgs_sent(&self) -> u64 {
         self.msgs_sent.load(Ordering::Relaxed)
+    }
+
+    /// Per-peer payload bytes sent by this instance (`[dst] == 0` at
+    /// self). Sums to [`TcpTransport::payload_bytes_sent`] — pinned by a
+    /// regression test so the per-link series never drift from the
+    /// aggregate `comm_bytes` accounting.
+    pub fn link_payload_bytes_sent(&self) -> Vec<u64> {
+        self.link_payload_bytes.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
     /// Messages received but not yet consumed (tests: leak detection).
@@ -455,6 +519,11 @@ impl Transport for TcpTransport {
         let bytes = (payload.len() * 4) as u64;
         self.payload_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.link_payload_bytes[dst].fetch_add(bytes, Ordering::Relaxed);
+        if let Some(tx) = &self.tx_stats[dst] {
+            tx.bytes.add(bytes as f64);
+            tx.frames.inc();
+        }
         let q = self.out[dst].as_ref().expect("peer queue");
         if payload.len() <= frame::MAX_DATA_FLOATS {
             self.wire_bytes_sent

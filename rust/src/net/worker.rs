@@ -63,6 +63,13 @@ pub struct WorkerOpts {
     /// rendezvous dial attempts (`--connect-retries`; 0 = unlimited
     /// within the timeout)
     pub connect_retries: Option<usize>,
+    /// write a merged Chrome trace-event JSON here (`--trace`; rank 0
+    /// writes the file — every other rank records spans and ships them
+    /// to rank 0 over the mesh at shutdown, clock-aligned NTP-style)
+    pub trace: Option<String>,
+    /// serve live Prometheus text on this address (`--metrics-addr`)
+    /// for the lifetime of the run
+    pub metrics_addr: Option<String>,
 }
 
 /// What rank 0 learns at the end of a distributed run.
@@ -83,6 +90,9 @@ pub struct WorkerSummary {
     pub comm_wait_ms: f64,
     /// fraction of rank 0's receives already complete when waited on
     pub overlap_ratio: f64,
+    /// quality of the partitioning every rank derived from the shared
+    /// seed (edge cut, comm volume, replication, balance)
+    pub quality: crate::partition::Quality,
 }
 
 /// Run one rank end to end. Returns `Some(summary)` on rank 0, `None`
@@ -93,6 +103,21 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     // not a panic deep inside the dataset build
     let (_preset, graph, parts, cfg) = exp::try_prepare(&o.dataset, o.parts, &o.method, run_opts)?;
     let plan = halo::build(&graph, &parts, cfg.model.kind);
+    // every rank derives the same partition, so rank 0 can report its
+    // quality without any extra coordination
+    let quality = crate::partition::quality(&graph, &parts);
+
+    // live metrics endpoint: up before the mesh forms, so a scrape can
+    // watch the whole run (held until the end of this function)
+    let _metrics = match &o.metrics_addr {
+        Some(addr) => {
+            let srv = crate::obs::http::serve(addr)
+                .with_context(|| format!("rank {}: --metrics-addr {addr}", o.rank))?;
+            eprintln!("[rank {}] metrics on http://{}/metrics", o.rank, srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
 
     // training state: fresh, or the latest complete checkpoint. Every
     // worker scans the same directory tree, so all ranks agree on the
@@ -123,7 +148,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         .as_ref()
         .map(|dir| ckpt::Policy { dir: dir.clone(), every: o.ckpt_every.max(1) });
     let mut log_em = match (&o.log, o.rank) {
-        (Some(path), 0) => Some(open_log(path, o)?),
+        (Some(path), 0) => Some(open_log(path, o, &quality)?),
         _ => None,
     };
 
@@ -139,6 +164,19 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     }
     let mut transport = rendezvous::connect_with(o.rank, o.parts, &o.coord, &conn)
         .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
+    // span tracing: enable the per-process recorder, then align clocks
+    // across the mesh (NTP-style ping/pong against rank 0) so the merged
+    // timeline reads as one machine. Strictly gated on --trace: untraced
+    // runs move exactly the bytes they always did.
+    if o.trace.is_some() {
+        crate::obs::trace::enable();
+        if o.rank == 0 {
+            crate::obs::trace::serve_clock_sync(&transport, o.parts);
+        } else {
+            let off = crate::obs::trace::clock_sync_offset(&transport, o.rank);
+            crate::obs::trace::set_offset_us(off);
+        }
+    }
     let ctl = RankCtl {
         ckpt: policy.as_ref(),
         log: log_em.as_mut(),
@@ -147,8 +185,16 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     let rep = threaded::run_rank_ctl(&transport, &plan, o.rank, &cfg, &mut st, ctl)?;
 
     if o.rank != 0 {
+        if o.trace.is_some() {
+            crate::obs::trace::ship_spans(&transport, o.rank);
+        }
         transport.shutdown();
         return Ok(None);
+    }
+    if let Some(path) = &o.trace {
+        let spans = crate::obs::trace::collect_spans(&transport, o.parts);
+        crate::obs::trace::write_chrome_trace(path, &spans)?;
+        eprintln!("[rank 0] wrote {} trace spans to {path}", spans.len());
     }
 
     // rank 0 already holds the global per-epoch losses (the per-epoch
@@ -163,6 +209,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         wire_bytes_sent: transport.wire_bytes_sent(),
         comm_wait_ms: rep.comm_wait_ms,
         overlap_ratio: rep.overlap_ratio,
+        quality,
     };
     transport.shutdown();
 
@@ -187,6 +234,8 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
             .set("comm_wait_ms", summary.comm_wait_ms)
             .set("overlap_ratio", summary.overlap_ratio)
             .set("comm_wait", breakdown)
+            .set("quality", quality.to_json())
+            .set("peak_rss_bytes", crate::obs::peak_rss_bytes().unwrap_or(0))
             .write_file(path)?;
     }
     Ok(Some(summary))
@@ -194,12 +243,17 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
 
 /// Open rank 0's run log: freshly created with a header on a new run,
 /// appended (rows only) when resuming so the original epochs survive.
-fn open_log(path: &str, o: &WorkerOpts) -> Result<FileEmitter> {
+fn open_log(
+    path: &str,
+    o: &WorkerOpts,
+    quality: &crate::partition::Quality,
+) -> Result<FileEmitter> {
     let header = Json::obj()
         .set("dataset", o.dataset.as_str())
         .set("parts", o.parts)
         .set("method", o.method.as_str())
-        .set("engine", "tcp");
+        .set("engine", "tcp")
+        .set("quality", quality.to_json());
     let em = if o.resume.is_some() {
         FileEmitter::append_or_create(path, header)
     } else {

@@ -1,0 +1,152 @@
+//! Live metrics exposition: a tiny HTTP/1.1 GET handler that renders
+//! the global [`super::Registry`] in the Prometheus text format
+//! (`curl http://HOST:PORT/metrics` — any path answers the same).
+//!
+//! Std-only, one background accept thread, non-blocking accept poll so
+//! shutdown is prompt. Started by `train` / `launch` workers / `serve`
+//! when `--metrics-addr` is given; binding port 0 picks an ephemeral
+//! port (reported by [`MetricsServer::addr`]).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::util::error::{Context, Result};
+
+/// Accept-poll interval while idle.
+const POLL: Duration = Duration::from_millis(25);
+/// Per-request read timeout and request-size cap.
+const READ_TIMEOUT: Duration = Duration::from_secs(1);
+const MAX_REQUEST_BYTES: usize = 8 * 1024;
+
+/// Handle to a running exposition endpoint; dropping it stops the
+/// accept thread and releases the port.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// The bound address (useful with `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Bind `addr` and serve the global registry until the returned handle
+/// is dropped.
+pub fn serve(addr: &str) -> Result<MetricsServer> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let bound = listener.local_addr().context("metrics endpoint local_addr")?;
+    listener
+        .set_nonblocking(true)
+        .context("metrics endpoint set_nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let handle = thread::Builder::new()
+        .name("obs-metrics".to_string())
+        .spawn(move || accept_loop(listener, stop2))
+        .context("spawning metrics accept thread")?;
+    Ok(MetricsServer { addr: bound, stop, handle: Some(handle) })
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // served inline: scrapes are rare and tiny, and inline
+                // handling keeps the thread count flat
+                let _ = handle_request(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => thread::sleep(POLL),
+        }
+    }
+}
+
+/// Read the request head (discarded beyond sanity limits), then answer
+/// with the current exposition text. Peak RSS is sampled per scrape so
+/// the gauge is fresh without a background sampler.
+fn handle_request(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    stream.set_nodelay(true).ok();
+    let mut buf = [0u8; 1024];
+    let mut head: Vec<u8> = Vec::new();
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(_) => break, // timeout or reset: answer with what we have
+        };
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_REQUEST_BYTES {
+            break;
+        }
+    }
+    let reg = super::global();
+    super::sample_peak_rss(&reg);
+    let body = reg.render();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scrape(addr: SocketAddr) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn endpoint_serves_prometheus_text() {
+        crate::obs::global()
+            .counter("http_test_total", &[("case", "endpoint")])
+            .add(3.0);
+        let server = serve("127.0.0.1:0").expect("bind ephemeral");
+        let text = scrape(server.addr());
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("text/plain"), "{text}");
+        assert!(
+            text.contains("pipegcn_http_test_total{case=\"endpoint\"} 3"),
+            "{text}"
+        );
+        // a second scrape works (connection-per-request)
+        let again = scrape(server.addr());
+        assert!(again.contains("pipegcn_http_test_total"), "{again}");
+    }
+
+    #[test]
+    fn drop_releases_port() {
+        let server = serve("127.0.0.1:0").unwrap();
+        let addr = server.addr();
+        drop(server);
+        // port must be rebindable promptly after drop
+        let rebound = TcpListener::bind(addr);
+        assert!(rebound.is_ok());
+    }
+}

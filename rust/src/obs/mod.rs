@@ -1,0 +1,515 @@
+//! Observability: a lock-light metrics [`Registry`] (counters, gauges,
+//! log-bucketed [`Histogram`]s with quantile estimates), a cross-rank
+//! span [`trace`]r exporting Chrome trace-event JSON, and a live
+//! Prometheus-text [`http`] exposition endpoint — all std-only.
+//!
+//! Hot paths hold pre-registered handles ([`Counter`] / [`Gauge`] /
+//! [`Histogram`] are `Arc`-shared atomics), so an update is one or two
+//! relaxed atomic ops; the registry mutex is only taken at registration
+//! and at render time. Everything here is **observation-only**: nothing
+//! touches message tags, payload values, or accumulation order, so loss
+//! curves stay bit-identical with instrumentation on or off (pinned by
+//! the engine-equivalence tests).
+//!
+//! Metric families render with a `pipegcn_` prefix in the exposition
+//! format, e.g. `pipegcn_comm_wait_ms{key="fwd_l0"}` or
+//! `pipegcn_link_bytes_sent_total{src="0",dst="1"}`; peak RSS is sampled
+//! from `/proc/self/status` (`VmHWM`) at scrape time.
+
+pub mod http;
+pub mod trace;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Exposition-format prefix for every family this crate registers.
+pub const PREFIX: &str = "pipegcn_";
+
+// ---------------------------------------------------------------------
+// Value handles
+// ---------------------------------------------------------------------
+
+/// Atomically add `delta` to an f64 stored as bits in an [`AtomicU64`].
+fn f64_add(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotonically increasing f64 value (counts, bytes, accumulated ms).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, delta: f64) {
+        debug_assert!(delta >= 0.0, "counters only go up");
+        f64_add(&self.0, delta);
+    }
+
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Instantaneous f64 value (depths, ages, norms, RSS).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, delta: f64) {
+        f64_add(&self.0, delta);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Log-bucketed histogram
+// ---------------------------------------------------------------------
+
+/// Buckets per doubling of the value — ratio 2^(1/4) ≈ 1.19, so a
+/// quantile estimate (geometric bucket midpoint) is within ~9% of any
+/// sample that landed in its bucket.
+const HIST_SUB: f64 = 4.0;
+/// Lowest bucket edge exponent: bucket 0 starts at 2^(-80/4) = 2^-20
+/// (~9.5e-7). Values below (and ≤ 0) clamp into bucket 0.
+const HIST_MIN: i64 = -80;
+/// 240 buckets cover 2^-20 .. 2^40 (~1e-6 .. ~1e12); values above clamp
+/// into the last bucket.
+const HIST_BUCKETS: usize = 240;
+
+struct HistCore {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits (CAS-accumulated)
+    sum: AtomicU64,
+}
+
+fn bucket_index(v: f64) -> usize {
+    // NaN and everything ≤ 0 clamp into bucket 0
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let idx = (v.log2() * HIST_SUB).floor() as i64 - HIST_MIN;
+    idx.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+/// Upper edge of bucket `i` (its `le` bound in the exposition format).
+fn bucket_upper(i: usize) -> f64 {
+    2f64.powf((i as i64 + HIST_MIN + 1) as f64 / HIST_SUB)
+}
+
+/// Geometric midpoint of bucket `i` — the quantile estimate.
+fn bucket_mid(i: usize) -> f64 {
+    2f64.powf((i as i64 + HIST_MIN) as f64 / HIST_SUB + 0.5 / HIST_SUB)
+}
+
+/// Log-bucketed histogram handle: `record` is two relaxed atomic
+/// increments plus one CAS add; quantiles are estimated from the bucket
+/// counts (geometric midpoint of the target bucket, relative error
+/// bounded by the 2^(1/4) bucket ratio — asserted against the exact
+/// [`crate::perf::percentile`] in `tests/obs.rs`).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram(Arc::new(HistCore {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn record(&self, v: f64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        f64_add(&self.0.sum, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum.load(Ordering::Relaxed))
+    }
+
+    /// Estimated `q`-quantile (`0.0 ..= 1.0`): the geometric midpoint of
+    /// the bucket holding the ceil(q·count)-th recorded value. 0 when
+    /// nothing has been recorded.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_mid(i);
+            }
+        }
+        bucket_mid(HIST_BUCKETS - 1)
+    }
+
+    /// Non-empty buckets as `(upper_edge, count)` pairs, ascending.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.0
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                if c > 0 {
+                    Some((bucket_upper(i), c))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    /// family name → kind (one `# TYPE` line each; kind mismatch panics)
+    families: BTreeMap<String, Kind>,
+    /// (family, rendered labels) → scalar cell
+    nums: BTreeMap<(String, String), Arc<AtomicU64>>,
+    /// (family, rendered labels) → histogram core
+    hists: BTreeMap<(String, String), Arc<HistCore>>,
+}
+
+/// A named registry of metric families. Handles returned by
+/// `counter`/`gauge`/`histogram` share their cells with the registry, so
+/// updates through a handle are visible to [`Registry::render`] without
+/// further registry locking.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+/// Render a label set as `k="v",k2="v2"` (sorted by key for stable
+/// exposition output). Empty for no labels.
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort_by_key(|(k, _)| *k);
+    sorted
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Exposition value formatting: integral values render without a
+/// decimal point (Rust's shortest-roundtrip `Display` already does
+/// this: `12.0f64` prints as `12`).
+fn render_value(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn family(&self, inner: &mut Inner, name: &str, kind: Kind) {
+        match inner.families.get(name) {
+            Some(&k) => assert_eq!(k, kind, "metric family '{name}' re-registered as {kind:?}"),
+            None => {
+                inner.families.insert(name.to_string(), kind);
+            }
+        }
+    }
+
+    fn num(&self, name: &str, labels: &[(&str, &str)], kind: Kind) -> Arc<AtomicU64> {
+        let mut g = self.inner.lock().unwrap();
+        self.family(&mut g, name, kind);
+        g.nums
+            .entry((name.to_string(), render_labels(labels)))
+            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+            .clone()
+    }
+
+    /// Register (or look up) a counter series. Same (name, labels) →
+    /// the same underlying cell, so handles are safe to re-request.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        Counter(self.num(name, labels, Kind::Counter))
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        Gauge(self.num(name, labels, Kind::Gauge))
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        let mut g = self.inner.lock().unwrap();
+        self.family(&mut g, name, Kind::Histogram);
+        Histogram(
+            g.hists
+                .entry((name.to_string(), render_labels(labels)))
+                .or_insert_with(|| Histogram::new().0)
+                .clone(),
+        )
+    }
+
+    /// Current value of a scalar series, if registered (tests).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let g = self.inner.lock().unwrap();
+        g.nums
+            .get(&(name.to_string(), render_labels(labels)))
+            .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+    }
+
+    /// Render every family in the Prometheus text exposition format
+    /// (families sorted by name, `pipegcn_` prefix applied).
+    pub fn render(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, &kind) in &g.families {
+            out.push_str(&format!("# TYPE {PREFIX}{name} {}\n", kind.type_name()));
+            match kind {
+                Kind::Counter | Kind::Gauge => {
+                    for ((fam, labels), cell) in g.nums.range((name.clone(), String::new())..) {
+                        if fam != name {
+                            break;
+                        }
+                        let v = f64::from_bits(cell.load(Ordering::Relaxed));
+                        if labels.is_empty() {
+                            out.push_str(&format!("{PREFIX}{name} {}\n", render_value(v)));
+                        } else {
+                            out.push_str(&format!(
+                                "{PREFIX}{name}{{{labels}}} {}\n",
+                                render_value(v)
+                            ));
+                        }
+                    }
+                }
+                Kind::Histogram => {
+                    for ((fam, labels), core) in g.hists.range((name.clone(), String::new())..) {
+                        if fam != name {
+                            break;
+                        }
+                        let h = Histogram(core.clone());
+                        let mut cum = 0u64;
+                        for (ub, c) in h.nonzero_buckets() {
+                            cum += c;
+                            let le = format!("le=\"{}\"", render_value(ub));
+                            let ls = if labels.is_empty() {
+                                le
+                            } else {
+                                format!("{labels},{le}")
+                            };
+                            out.push_str(&format!("{PREFIX}{name}_bucket{{{ls}}} {cum}\n"));
+                        }
+                        let inf = if labels.is_empty() {
+                            "le=\"+Inf\"".to_string()
+                        } else {
+                            format!("{labels},le=\"+Inf\"")
+                        };
+                        out.push_str(&format!(
+                            "{PREFIX}{name}_bucket{{{inf}}} {}\n",
+                            h.count()
+                        ));
+                        let suffix = if labels.is_empty() {
+                            String::new()
+                        } else {
+                            format!("{{{labels}}}")
+                        };
+                        out.push_str(&format!(
+                            "{PREFIX}{name}_sum{suffix} {}\n",
+                            render_value(h.sum())
+                        ));
+                        out.push_str(&format!("{PREFIX}{name}_count{suffix} {}\n", h.count()));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Global registry + common series
+// ---------------------------------------------------------------------
+
+static GLOBAL: Mutex<Option<Arc<Registry>>> = Mutex::new(None);
+
+/// The process-wide registry every instrumented subsystem reports into
+/// (and the [`http`] endpoint renders). Created on first use.
+pub fn global() -> Arc<Registry> {
+    let mut g = GLOBAL.lock().unwrap();
+    match &*g {
+        Some(r) => r.clone(),
+        None => {
+            let r = Arc::new(Registry::new());
+            *g = Some(r.clone());
+            r
+        }
+    }
+}
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`); `None` where procfs is unavailable.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Sample peak RSS into the `peak_rss_bytes` gauge (called per epoch by
+/// the engines and at scrape time by the endpoint).
+pub fn sample_peak_rss(reg: &Registry) -> Option<u64> {
+    let rss = peak_rss_bytes();
+    if let Some(b) = rss {
+        reg.gauge("peak_rss_bytes", &[]).set(b as f64);
+    }
+    rss
+}
+
+/// Publish one epoch's [`crate::comm::WaitStats`] breakdown into the
+/// global registry: accumulated parked ms per schedule key plus the
+/// hidden/exposed receive counters behind `overlap_ratio`.
+pub fn record_wait_stats(stats: &crate::comm::WaitStats) {
+    let reg = global();
+    for (key, ms) in stats.entries_ms() {
+        reg.counter("comm_wait_ms", &[("key", &key)]).add(ms);
+    }
+    reg.counter("recv_hidden_total", &[]).add(stats.hidden() as f64);
+    reg.counter("recv_exposed_total", &[]).add(stats.exposed() as f64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("frobs_total", &[("src", "0")]);
+        c.inc();
+        c.add(2.5);
+        assert_eq!(r.value("frobs_total", &[("src", "0")]), Some(3.5));
+        let g = r.gauge("depth", &[]);
+        g.set(4.0);
+        g.add(-1.0);
+        assert_eq!(r.value("depth", &[]), Some(3.0));
+        // the same (name, labels) resolves to the same cell
+        r.counter("frobs_total", &[("src", "0")]).inc();
+        assert_eq!(c.get(), 4.5);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(1.0);
+        }
+        for _ in 0..10 {
+            h.record(100.0);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 1090.0).abs() < 1e-9);
+        // p50 lands in the 1.0 bucket, p99 in the 100.0 bucket — each
+        // estimate within the 2^(1/4) bucket ratio of the true value
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!((p50 / 1.0).log2().abs() <= 0.25 + 1e-9, "p50 {p50}");
+        assert!((p99 / 100.0).log2().abs() <= 0.25 + 1e-9, "p99 {p99}");
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_clamps_pathological_values() {
+        let h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(1e300);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 4);
+        let b = h.nonzero_buckets();
+        assert_eq!(b.iter().map(|&(_, c)| c).sum::<u64>(), 4);
+    }
+
+    #[test]
+    fn render_is_prometheus_text() {
+        let r = Registry::new();
+        r.counter("bytes_total", &[("src", "0"), ("dst", "1")]).add(64.0);
+        r.gauge("depth", &[]).set(2.0);
+        r.histogram("lat_ms", &[]).record(1.5);
+        let text = r.render();
+        assert!(text.contains("# TYPE pipegcn_bytes_total counter"), "{text}");
+        assert!(
+            text.contains("pipegcn_bytes_total{dst=\"1\",src=\"0\"} 64"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE pipegcn_depth gauge"), "{text}");
+        assert!(text.contains("pipegcn_depth 2\n"), "{text}");
+        assert!(text.contains("pipegcn_lat_ms_count 1"), "{text}");
+        assert!(text.contains("le=\"+Inf\""), "{text}");
+        assert!(text.contains("pipegcn_lat_ms_sum 1.5"), "{text}");
+    }
+
+    #[test]
+    fn peak_rss_is_plausible_on_linux() {
+        if let Some(b) = peak_rss_bytes() {
+            // any live process has used at least a page and well under 1 TiB
+            assert!(b >= 4096, "{b}");
+            assert!(b < (1u64 << 40), "{b}");
+        }
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let a = global();
+        let b = global();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

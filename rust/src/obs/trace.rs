@@ -1,0 +1,503 @@
+//! Span tracer: bounded per-process ring buffer of (rank, layer, phase,
+//! t_start, t_end) events, merged across ranks into Chrome trace-event
+//! JSON (`chrome://tracing` / Perfetto compatible).
+//!
+//! The tracer is off by default; when off, the only hot-path cost is
+//! one relaxed atomic load in [`enabled`] (and [`now_us`] returns 0
+//! without touching the clock). Cross-process alignment uses an
+//! NTP-style offset estimated against rank 0 right after the rendezvous
+//! handshake ([`clock_sync_offset`] / [`serve_clock_sync`]); at
+//! shutdown workers ship their buffers to rank 0 over the existing
+//! frame protocol ([`ship_spans`] / [`collect_spans`]) using sentinel
+//! `Phase::Setup` tags whose iter values sit at the top of the `u32`
+//! range, far above any real epoch counter. All sync/ship traffic only
+//! happens when tracing is enabled, so untraced runs move exactly the
+//! bytes they always did.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::comm::{self, Tag, Transport};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Ring-buffer capacity per process; oldest spans drop first.
+pub const SPAN_CAP: usize = 1 << 16;
+
+/// Sentinel iter for clock-sync ping frames (worker → rank 0).
+pub const SYNC_PING_ITER: u32 = u32::MAX;
+/// Sentinel iter for clock-sync pong frames (rank 0 → worker).
+pub const SYNC_PONG_ITER: u32 = u32::MAX - 1;
+/// Sentinel iter for the end-of-run span shipment (worker → rank 0).
+pub const SHIP_ITER: u32 = u32::MAX - 2;
+/// Ping/pong rounds per worker; the minimum-RTT round wins.
+pub const SYNC_ROUNDS: usize = 5;
+
+/// What a span measures; determines its Chrome-trace lane (`tid`) and
+/// category so compute and comm rows sit apart and overlap is visible.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Kind {
+    /// One layer's forward kernel on one partition.
+    FwdLayer,
+    /// One layer's backward kernel on one partition.
+    BwdLayer,
+    /// A receive-handle wait that may park (comm lane).
+    CommWait,
+    /// Ring-allreduce of the loss metrics (comm lane).
+    Reduce,
+    /// End-of-epoch drain of stale in-flight messages.
+    Drain,
+    /// Whole-epoch envelope span.
+    Epoch,
+    /// Loss/eval computation.
+    Loss,
+}
+
+impl Kind {
+    pub fn code(self) -> u32 {
+        match self {
+            Kind::FwdLayer => 0,
+            Kind::BwdLayer => 1,
+            Kind::CommWait => 2,
+            Kind::Reduce => 3,
+            Kind::Drain => 4,
+            Kind::Epoch => 5,
+            Kind::Loss => 6,
+        }
+    }
+
+    pub fn from_code(c: u32) -> Option<Kind> {
+        Some(match c {
+            0 => Kind::FwdLayer,
+            1 => Kind::BwdLayer,
+            2 => Kind::CommWait,
+            3 => Kind::Reduce,
+            4 => Kind::Drain,
+            5 => Kind::Epoch,
+            6 => Kind::Loss,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::FwdLayer => "fwd",
+            Kind::BwdLayer => "bwd",
+            Kind::CommWait => "comm_wait",
+            Kind::Reduce => "reduce",
+            Kind::Drain => "drain",
+            Kind::Epoch => "epoch",
+            Kind::Loss => "loss",
+        }
+    }
+
+    /// Chrome-trace thread lane within a rank's process row.
+    pub fn lane(self) -> u32 {
+        match self {
+            Kind::FwdLayer | Kind::BwdLayer | Kind::Drain | Kind::Loss => 0,
+            Kind::CommWait | Kind::Reduce => 1,
+            Kind::Epoch => 2,
+        }
+    }
+
+    pub fn category(self) -> &'static str {
+        match self.lane() {
+            0 => "compute",
+            1 => "comm",
+            _ => "epoch",
+        }
+    }
+}
+
+/// One recorded interval on one rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub rank: u32,
+    pub layer: u32,
+    pub epoch: u32,
+    pub kind: Kind,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+struct TraceState {
+    base: Instant,
+    /// Added to every span's timestamps at [`take`] so worker clocks
+    /// line up with rank 0's.
+    offset_us: i64,
+    spans: VecDeque<Span>,
+    dropped: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<TraceState>> = Mutex::new(None);
+
+/// Turn the tracer on for this process (idempotent; the monotonic base
+/// is captured on the first call).
+pub fn enable() {
+    let mut g = STATE.lock().unwrap();
+    if g.is_none() {
+        *g = Some(TraceState {
+            base: Instant::now(),
+            offset_us: 0,
+            spans: VecDeque::new(),
+            dropped: 0,
+        });
+    }
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Whether spans are being recorded — the one check on hot paths.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since this process's trace base (0 when disabled, so
+/// callers can grab a start stamp unconditionally).
+pub fn now_us() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    let g = STATE.lock().unwrap();
+    match &*g {
+        Some(st) => st.base.elapsed().as_micros() as u64,
+        None => 0,
+    }
+}
+
+/// Record a span that started at `start_us` (from [`now_us`]) and ends
+/// now. No-op when disabled.
+pub fn span(rank: usize, kind: Kind, layer: usize, epoch: usize, start_us: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut g = STATE.lock().unwrap();
+    if let Some(st) = &mut *g {
+        let end_us = st.base.elapsed().as_micros() as u64;
+        if st.spans.len() >= SPAN_CAP {
+            st.spans.pop_front();
+            st.dropped += 1;
+        }
+        st.spans.push_back(Span {
+            rank: rank as u32,
+            layer: layer as u32,
+            epoch: epoch as u32,
+            kind,
+            start_us,
+            end_us: end_us.max(start_us),
+        });
+    }
+}
+
+/// Set this process's clock offset relative to rank 0 (applied when the
+/// buffer is drained, so spans recorded before sync still align).
+pub fn set_offset_us(offset: i64) {
+    let mut g = STATE.lock().unwrap();
+    if let Some(st) = &mut *g {
+        st.offset_us = offset;
+    }
+}
+
+/// Drain the buffer, with the clock offset applied. Count of spans
+/// dropped to the ring cap is returned alongside.
+pub fn take() -> (Vec<Span>, u64) {
+    let mut g = STATE.lock().unwrap();
+    match &mut *g {
+        Some(st) => {
+            let off = st.offset_us;
+            let dropped = st.dropped;
+            st.dropped = 0;
+            let spans = st
+                .spans
+                .drain(..)
+                .map(|mut s| {
+                    s.start_us = (s.start_us as i64 + off).max(0) as u64;
+                    s.end_us = (s.end_us as i64 + off).max(0) as u64;
+                    s
+                })
+                .collect();
+            (spans, dropped)
+        }
+        None => (Vec::new(), 0),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire encoding (shipped via comm::encode_u32s over the frame protocol)
+// ---------------------------------------------------------------------
+
+const SPAN_WORDS: usize = 8;
+
+/// Pack spans as `[n, then 8 u32 words per span]` for transit through
+/// the f32 payload channel (bit-exact both ways).
+pub fn encode_spans(spans: &[Span]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(1 + spans.len() * SPAN_WORDS);
+    out.push(spans.len() as u32);
+    for s in spans {
+        out.push(s.rank);
+        out.push(s.layer);
+        out.push(s.epoch);
+        out.push(s.kind.code());
+        out.push(s.start_us as u32);
+        out.push((s.start_us >> 32) as u32);
+        out.push(s.end_us as u32);
+        out.push((s.end_us >> 32) as u32);
+    }
+    out
+}
+
+pub fn decode_spans(words: &[u32]) -> Result<Vec<Span>> {
+    if words.is_empty() {
+        crate::bail!("span payload empty");
+    }
+    let n = words[0] as usize;
+    if words.len() != 1 + n * SPAN_WORDS {
+        crate::bail!(
+            "span payload length mismatch: header says {} spans, got {} words",
+            n,
+            words.len() - 1
+        );
+    }
+    let mut spans = Vec::with_capacity(n);
+    for c in words[1..].chunks_exact(SPAN_WORDS) {
+        let kind = match Kind::from_code(c[3]) {
+            Some(k) => k,
+            None => crate::bail!("unknown span kind code {}", c[3]),
+        };
+        spans.push(Span {
+            rank: c[0],
+            layer: c[1],
+            epoch: c[2],
+            kind,
+            start_us: (c[4] as u64) | ((c[5] as u64) << 32),
+            end_us: (c[6] as u64) | ((c[7] as u64) << 32),
+        });
+    }
+    Ok(spans)
+}
+
+// ---------------------------------------------------------------------
+// Cross-rank clock sync + span shipping
+// ---------------------------------------------------------------------
+
+fn sync_tag(iter: u32, rank: usize) -> Tag {
+    Tag::new(iter, rank as u16, comm::Phase::Setup)
+}
+
+/// Rank 0 side of the clock handshake: answer [`SYNC_ROUNDS`] pings
+/// from every other rank with rank 0's current trace clock. Workers are
+/// served sequentially; their frames queue in the inbox, and min-RTT
+/// selection on the worker side absorbs the wait.
+pub fn serve_clock_sync(t: &dyn Transport, n: usize) {
+    for src in 1..n {
+        for _ in 0..SYNC_ROUNDS {
+            let _ = t.recv_blocking(src, 0, sync_tag(SYNC_PING_ITER, src));
+            let pong = comm::encode_u32s(&[now_us() as u32, (now_us() >> 32) as u32]);
+            t.send(0, src, sync_tag(SYNC_PONG_ITER, src), pong);
+        }
+    }
+}
+
+/// Worker side of the clock handshake: estimate this process's trace
+/// clock offset relative to rank 0 via [`SYNC_ROUNDS`] ping/pongs,
+/// keeping the minimum-RTT round (offset = t1 − (t0 + t2)/2).
+pub fn clock_sync_offset(t: &dyn Transport, rank: usize) -> i64 {
+    let mut best_rtt = u64::MAX;
+    let mut best_offset = 0i64;
+    for _ in 0..SYNC_ROUNDS {
+        let t0 = now_us();
+        t.send(rank, 0, sync_tag(SYNC_PING_ITER, rank), Vec::new());
+        let pong = t.recv_blocking(0, rank, sync_tag(SYNC_PONG_ITER, rank));
+        let t2 = now_us();
+        let words = comm::decode_u32s(&pong);
+        if words.len() != 2 {
+            continue;
+        }
+        let t1 = (words[0] as u64) | ((words[1] as u64) << 32);
+        let rtt = t2.saturating_sub(t0);
+        if rtt < best_rtt {
+            best_rtt = rtt;
+            best_offset = t1 as i64 - ((t0 + t2) / 2) as i64;
+        }
+    }
+    best_offset
+}
+
+/// Ship this rank's (offset-aligned) span buffer to rank 0.
+pub fn ship_spans(t: &dyn Transport, rank: usize) {
+    let (spans, _dropped) = take();
+    let words = encode_spans(&spans);
+    t.send(rank, 0, sync_tag(SHIP_ITER, rank), comm::encode_u32s(&words));
+}
+
+/// Rank 0: merge its own buffer with every worker's shipment, sorted by
+/// start time. Undecodable shipments are skipped (the trace file is a
+/// diagnostic, not a correctness artifact).
+pub fn collect_spans(t: &dyn Transport, n: usize) -> Vec<Span> {
+    let (mut spans, _dropped) = take();
+    for src in 1..n {
+        let payload = t.recv_blocking(src, 0, sync_tag(SHIP_ITER, src));
+        if let Ok(theirs) = decode_spans(&comm::decode_u32s(&payload)) {
+            spans.extend(theirs);
+        }
+    }
+    spans.sort_by_key(|s| (s.start_us, s.rank, s.kind.code()));
+    spans
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------
+
+/// Render spans as a Chrome trace-event document: complete ("X") events
+/// with `pid` = rank and `tid` = lane (0 compute, 1 comm, 2 epoch), all
+/// timestamps in microseconds on rank 0's clock.
+pub fn chrome_trace_json(spans: &[Span]) -> Json {
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let name = match s.kind {
+            Kind::FwdLayer | Kind::BwdLayer | Kind::CommWait => {
+                format!("{}_l{}", s.kind.name(), s.layer)
+            }
+            _ => s.kind.name().to_string(),
+        };
+        events.push(
+            Json::obj()
+                .set("name", name)
+                .set("cat", s.kind.category())
+                .set("ph", "X")
+                .set("ts", s.start_us as f64)
+                .set("dur", (s.end_us - s.start_us) as f64)
+                .set("pid", s.rank as f64)
+                .set("tid", s.kind.lane() as f64)
+                .set(
+                    "args",
+                    Json::obj()
+                        .set("epoch", s.epoch as f64)
+                        .set("layer", s.layer as f64),
+                ),
+        );
+    }
+    Json::obj().set("traceEvents", Json::Arr(events))
+}
+
+/// Write the merged trace to `path` (parent directories created).
+pub fn write_chrome_trace(path: &str, spans: &[Span]) -> Result<()> {
+    use crate::util::error::Context;
+    let p = std::path::Path::new(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(p, chrome_trace_json(spans).to_compact())
+        .with_context(|| format!("writing trace file {path}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Span> {
+        vec![
+            Span {
+                rank: 0,
+                layer: 0,
+                epoch: 1,
+                kind: Kind::FwdLayer,
+                start_us: 10,
+                end_us: 35,
+            },
+            Span {
+                rank: 1,
+                layer: 2,
+                epoch: 1,
+                kind: Kind::CommWait,
+                start_us: 12,
+                end_us: 1 + (7u64 << 32),
+            },
+        ]
+    }
+
+    #[test]
+    fn spans_roundtrip_through_wire_encoding() {
+        let spans = sample();
+        let words = encode_spans(&spans);
+        assert_eq!(decode_spans(&words).unwrap(), spans);
+        // and through the f32 payload channel, bit-exactly
+        let payload = comm::encode_u32s(&words);
+        let back = comm::decode_u32s(&payload);
+        assert_eq!(decode_spans(&back).unwrap(), spans);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_payloads() {
+        assert!(decode_spans(&[]).is_err());
+        assert!(decode_spans(&[2, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        // unknown kind code
+        assert!(decode_spans(&[1, 0, 0, 0, 99, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn chrome_trace_has_expected_shape() {
+        let doc = chrome_trace_json(&sample());
+        let text = doc.to_compact();
+        let parsed = Json::parse(&text).expect("trace must be valid JSON");
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        let e0 = &events[0];
+        assert_eq!(e0.get("name").and_then(Json::as_str), Some("fwd_l0"));
+        assert_eq!(e0.get("cat").and_then(Json::as_str), Some("compute"));
+        assert_eq!(e0.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e0.get("ts").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(e0.get("dur").and_then(Json::as_f64), Some(25.0));
+        assert_eq!(e0.get("pid").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(e0.get("tid").and_then(Json::as_f64), Some(0.0));
+        let e1 = &events[1];
+        assert_eq!(e1.get("name").and_then(Json::as_str), Some("comm_wait_l2"));
+        assert_eq!(e1.get("cat").and_then(Json::as_str), Some("comm"));
+        assert_eq!(e1.get("tid").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn clock_sync_aligns_fabric_ranks() {
+        // In-process Fabric: both "ranks" share a clock, so the
+        // estimated offset must be ~0 (well under a second).
+        enable();
+        let fab = std::sync::Arc::new(crate::comm::Fabric::new(2));
+        let server = {
+            let fab = fab.clone();
+            std::thread::spawn(move || serve_clock_sync(&*fab, 2))
+        };
+        let offset = clock_sync_offset(&*fab, 1);
+        server.join().unwrap();
+        assert!(offset.abs() < 1_000_000, "offset {offset}us");
+    }
+
+    #[test]
+    fn ship_and_collect_merges_ranks() {
+        enable();
+        let fab = std::sync::Arc::new(crate::comm::Fabric::new(2));
+        // distinctive epoch marker so concurrent tests recording into
+        // the shared global buffer can't confuse the assertions
+        span(1, Kind::BwdLayer, 1, 7777, now_us());
+        span(0, Kind::FwdLayer, 0, 7777, now_us());
+        let shipper = {
+            let fab = fab.clone();
+            std::thread::spawn(move || ship_spans(&*fab, 1))
+        };
+        let merged = collect_spans(&*fab, 2);
+        shipper.join().unwrap();
+        // whichever drain picked each span up, both must arrive exactly
+        // once and the merge must be start-sorted
+        assert!(merged.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+        let ours: Vec<_> = merged.iter().filter(|s| s.epoch == 7777).collect();
+        assert_eq!(ours.len(), 2);
+        assert!(ours.iter().any(|s| s.kind == Kind::BwdLayer && s.layer == 1));
+        assert!(ours.iter().any(|s| s.kind == Kind::FwdLayer && s.layer == 0));
+    }
+}

@@ -72,6 +72,29 @@ pub struct Quality {
     pub balance: f64,
 }
 
+impl Quality {
+    /// The JSON shape run-log headers, worker reports, and
+    /// [`crate::session::RunReport`] outputs all share.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("edge_cut", self.edge_cut)
+            .set("comm_volume", self.comm_volume)
+            .set("replication_factor", self.replication_factor)
+            .set("balance", self.balance)
+    }
+
+    /// Inverse of [`Quality::to_json`] (tolerant: `None` when any field
+    /// is missing — old run artifacts predate the quality block).
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Quality> {
+        Some(Quality {
+            edge_cut: j.get("edge_cut")?.as_usize()?,
+            comm_volume: j.get("comm_volume")?.as_usize()?,
+            replication_factor: j.get("replication_factor")?.as_f64()?,
+            balance: j.get("balance")?.as_f64()?,
+        })
+    }
+}
+
 /// Compute quality metrics of `p` on `g`.
 pub fn quality(g: &Graph, p: &Partitioning) -> Quality {
     assert_eq!(p.assign.len(), g.n);

@@ -8,7 +8,8 @@
 //! and streams one NDJSON row per measurement through
 //! [`crate::util::json::Emitter`] into `BENCH_kernels.json`
 //! (`{kernel, shape, threads, ns_iter, gflops}`; overlap rows add
-//! `{comm_wait_ms, overlap_ratio}`, serve rows `{p50_ms, p99_ms, qps}`),
+//! `{comm_wait_ms, overlap_ratio}`, serve rows `{p50_ms, p90_ms,
+//! p99_ms, qps}` — p90 read from the shared [`crate::obs`] histogram),
 //! so the perf trajectory is tracked from PR 3 on. `--smoke` shrinks
 //! shapes and iteration counts to CI scale.
 
@@ -235,12 +236,19 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
             let handle = std::thread::spawn(move || server.run(Some(1)));
             let mut client = crate::serve::Client::connect(&addr)?;
             let _ = client.query(&ids)?; // warmup
+            // obs histogram alongside the exact sample: the same
+            // log-bucketed view the serve endpoint exposes, labeled per
+            // thread count so sweep points stay separate
+            let hist = crate::obs::global()
+                .histogram("bench_serve_ms", &[("threads", &t.to_string())]);
             let total_watch = Stopwatch::start();
             let mut lats_ms = Vec::with_capacity(queries);
             for _ in 0..queries {
                 let w = Stopwatch::start();
                 let m = client.query(&ids)?;
-                lats_ms.push(w.elapsed_secs() * 1e3);
+                let ms = w.elapsed_secs() * 1e3;
+                lats_ms.push(ms);
+                hist.record(ms);
                 debug_assert_eq!(m.rows, batch);
             }
             let total_secs = total_watch.elapsed_secs();
@@ -256,6 +264,7 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
                     .set("threads", t)
                     .set("ns_iter", p50 * 1e6)
                     .set("p50_ms", p50)
+                    .set("p90_ms", hist.quantile(0.90))
                     .set("p99_ms", p99)
                     .set("qps", queries as f64 / total_secs.max(1e-12)),
             )

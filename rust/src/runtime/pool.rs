@@ -98,6 +98,11 @@ pub struct Pool {
     threads: usize,
     /// spawned workers currently alive (shutdown / leak tests)
     live: Arc<AtomicUsize>,
+    /// pre-registered `pool_queue_depth` gauge (jobs submitted and not
+    /// yet finished — >1 means submitters are queueing for the slot)
+    depth: crate::obs::Gauge,
+    /// pre-registered `pool_job_ms` latency histogram
+    job_hist: crate::obs::Histogram,
 }
 
 impl Pool {
@@ -120,7 +125,15 @@ impl Pool {
                 })
             })
             .collect();
-        Pool { shared, workers, threads, live }
+        let reg = crate::obs::global();
+        Pool {
+            shared,
+            workers,
+            threads,
+            live,
+            depth: reg.gauge("pool_queue_depth", &[]),
+            job_hist: reg.histogram("pool_job_ms", &[]),
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -140,10 +153,14 @@ impl Pool {
         if n_chunks == 0 {
             return;
         }
+        let started = std::time::Instant::now();
+        self.depth.add(1.0);
         if self.threads == 1 || n_chunks == 1 {
             for c in 0..n_chunks {
                 task(c);
             }
+            self.depth.add(-1.0);
+            self.job_hist.record(started.elapsed().as_secs_f64() * 1000.0);
             return;
         }
         let raw = make_raw(&task);
@@ -178,6 +195,8 @@ impl Pool {
         // free the slot for queued submitters
         self.shared.done_cv.notify_all();
         drop(g);
+        self.depth.add(-1.0);
+        self.job_hist.record(started.elapsed().as_secs_f64() * 1000.0);
         if panicked {
             panic!("a pool task panicked (rethrown by the submitter)");
         }

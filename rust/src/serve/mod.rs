@@ -187,6 +187,21 @@ impl Server {
 /// The propagation matrix is registered with the connection's backend
 /// exactly once — queries pay only for the forward kernels.
 fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
+    // connection-lifetime metrics: the gauge must fall on *every* exit
+    // path (clean shutdown, malformed query, I/O error), so its
+    // decrement rides a drop guard
+    let reg = crate::obs::global();
+    let lat = reg.histogram("serve_query_ms", &[]);
+    let queries = reg.counter("serve_queries_total", &[]);
+    struct ConnGuard(crate::obs::Gauge);
+    impl Drop for ConnGuard {
+        fn drop(&mut self) {
+            self.0.add(-1.0);
+        }
+    }
+    let active = reg.gauge("serve_active_connections", &[]);
+    active.add(1.0);
+    let _guard = ConnGuard(active);
     let mut backend = NativeBackend::new();
     let prop_id = backend.register_prop(&ctx.prop);
     loop {
@@ -194,6 +209,7 @@ fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
             None | Some(Frame::Shutdown { .. }) => return Ok(()),
             Some(Frame::Hello { .. }) => {}
             Some(Frame::Data { tag, payload, .. }) => {
+                let watch = crate::util::timer::Stopwatch::start();
                 let logits =
                     answer(ctx, &mut backend, prop_id, &payload).map_err(io_err)?;
                 frame::write_frame(
@@ -201,6 +217,8 @@ fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
                     &Frame::Data { src: 0, dst: 1, tag, payload: logits },
                 )?;
                 stream.flush()?;
+                lat.record(watch.elapsed_secs() * 1e3);
+                queries.inc();
             }
             Some(other) => {
                 return Err(io_err(format!("unexpected frame in a query stream: {other:?}")))

@@ -107,6 +107,13 @@ pub struct RunReport {
     /// NDJSON rows streamed to a `.log(path)` run log opened by this
     /// process (0 when unused or when rank 0 of a `Tcp` launch owns it)
     pub log_rows: usize,
+    /// quality of the partitioning the run trained on (edge cut, comm
+    /// volume, replication factor, balance); `None` only on a non-zero
+    /// TCP worker rank, which reports nothing
+    pub quality: Option<crate::partition::Quality>,
+    /// peak resident set size (`VmHWM`) of the reporting process at the
+    /// end of the run — rank 0's for the `Tcp` engine; 0 off-Linux
+    pub peak_rss_bytes: u64,
     /// the sequential engine's full result (works, probes, epoch stats)
     pub train: Option<TrainResult>,
     /// final parameters (threaded engine and TCP worker rank 0)
@@ -171,6 +178,8 @@ pub struct Session<'a> {
     bind: Option<String>,
     connect_timeout: Option<u64>,
     connect_retries: Option<usize>,
+    trace: Option<String>,
+    metrics_addr: Option<String>,
 }
 
 /// Distinguishes concurrent sessions' scratch report files within one
@@ -199,6 +208,8 @@ impl<'a> Session<'a> {
             bind: None,
             connect_timeout: None,
             connect_retries: None,
+            trace: None,
+            metrics_addr: None,
         }
     }
 
@@ -358,6 +369,26 @@ impl<'a> Session<'a> {
         self
     }
 
+    /// Record per-rank spans (layer kernels, comm waits, drains, the
+    /// ring reduce, whole epochs) and write a merged Chrome trace-event
+    /// JSON to `path` when the run finishes — open it in
+    /// `chrome://tracing` or Perfetto. On the `Tcp` engine every worker
+    /// records; rank 0 collects the buffers over the mesh (clock-aligned
+    /// NTP-style) and writes the file. Tracing is observation-only: the
+    /// schedule, tags, and loss bits are identical with it on or off.
+    pub fn trace(mut self, path: &str) -> Self {
+        self.trace = Some(path.to_string());
+        self
+    }
+
+    /// Serve live Prometheus text on `HOST:PORT` for the lifetime of the
+    /// run. On the `Tcp` engine rank i serves on `PORT+i` (co-located
+    /// workers need distinct ports).
+    pub fn metrics_addr(mut self, addr: &str) -> Self {
+        self.metrics_addr = Some(addr.to_string());
+        self
+    }
+
     /// Execute the run on the configured engine.
     pub fn run(self) -> Result<RunReport> {
         let Session {
@@ -380,6 +411,8 @@ impl<'a> Session<'a> {
             bind,
             connect_timeout,
             connect_retries,
+            trace,
+            metrics_addr,
         } = self;
 
         if threads == Some(0) {
@@ -464,6 +497,20 @@ impl<'a> Session<'a> {
                         (None, graph, pt, cfg)
                     }
                 };
+                let quality = crate::partition::quality(&graph, &pt);
+                // live metrics endpoint, up for the duration of the run
+                let _metrics = match &metrics_addr {
+                    Some(addr) => Some(
+                        crate::obs::http::serve(addr)
+                            .with_context(|| format!("metrics endpoint {addr}"))?,
+                    ),
+                    None => None,
+                };
+                // in-process engines: every rank lives in this process,
+                // one clock — no offset estimation, no span shipping
+                if trace.is_some() {
+                    crate::obs::trace::enable();
+                }
                 // run-log plumbing: a path gets the standard header; an
                 // existing emitter is used as-is
                 let mut owned_em: Option<FileEmitter> = None;
@@ -476,7 +523,8 @@ impl<'a> Session<'a> {
                             .set("parts", pt.n_parts)
                             .set("method", cfg.variant.name())
                             .set("seed", cfg.seed)
-                            .set("engine", engine_name);
+                            .set("engine", engine_name)
+                            .set("quality", quality.to_json());
                         // resuming appends, so pre-crash epoch rows survive
                         let e = if resume.is_some() {
                             FileEmitter::append_or_create(&p, header)
@@ -507,6 +555,8 @@ impl<'a> Session<'a> {
                         comm_wait_ms: r.comm_wait_ms,
                         overlap_ratio: r.overlap_ratio,
                         log_rows: 0,
+                        quality: Some(quality),
+                        peak_rss_bytes: 0,
                         train: None,
                         params: Some(r.params),
                         preset,
@@ -541,6 +591,8 @@ impl<'a> Session<'a> {
                         comm_wait_ms: 0.0,
                         overlap_ratio: 1.0,
                         log_rows: 0,
+                        quality: Some(quality),
+                        peak_rss_bytes: 0,
                         train: Some(result),
                         params: None,
                         preset,
@@ -549,6 +601,11 @@ impl<'a> Session<'a> {
                     }
                 };
                 report.log_rows = owned_em.as_ref().map(|e| e.rows()).unwrap_or(0);
+                report.peak_rss_bytes = crate::obs::peak_rss_bytes().unwrap_or(0);
+                if let Some(path) = &trace {
+                    let (spans, _dropped) = crate::obs::trace::take();
+                    crate::obs::trace::write_chrome_trace(path, &spans)?;
+                }
                 Ok(report)
             }
 
@@ -613,6 +670,8 @@ impl<'a> Session<'a> {
                     threads,
                     fail_rank: fail.map(|(r, _)| r),
                     fail_epoch: fail.map(|(_, e)| e),
+                    trace,
+                    metrics_addr,
                 };
                 let bin = match binary {
                     Some(b) => b,
@@ -655,6 +714,13 @@ impl<'a> Session<'a> {
                         .and_then(Json::as_f64)
                         .unwrap_or(f64::NAN),
                     log_rows: 0,
+                    quality: j
+                        .get("quality")
+                        .and_then(crate::partition::Quality::from_json),
+                    peak_rss_bytes: j
+                        .get("peak_rss_bytes")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64,
                     train: None,
                     params: None,
                     preset: presets::by_name(&dataset),
@@ -697,6 +763,8 @@ impl<'a> Session<'a> {
                     bind,
                     connect_timeout_secs: connect_timeout,
                     connect_retries,
+                    trace,
+                    metrics_addr,
                 };
                 let summary = worker::run_worker(&wopts)?;
                 Ok(match summary {
@@ -711,6 +779,8 @@ impl<'a> Session<'a> {
                         comm_wait_ms: s.comm_wait_ms,
                         overlap_ratio: s.overlap_ratio,
                         log_rows: 0,
+                        quality: Some(s.quality),
+                        peak_rss_bytes: crate::obs::peak_rss_bytes().unwrap_or(0),
                         train: None,
                         params: None,
                         preset: None,
@@ -729,6 +799,8 @@ impl<'a> Session<'a> {
                         comm_wait_ms: f64::NAN,
                         overlap_ratio: f64::NAN,
                         log_rows: 0,
+                        quality: None,
+                        peak_rss_bytes: crate::obs::peak_rss_bytes().unwrap_or(0),
                         train: None,
                         params: None,
                         preset: None,

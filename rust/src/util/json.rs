@@ -435,6 +435,24 @@ impl From<&[f64]> for Json {
 // Streaming NDJSON emission (run logs)
 // ---------------------------------------------------------------------
 
+/// Milliseconds since the Unix epoch, anchored once per process: the
+/// wall clock is read a single time and subsequent calls advance it by
+/// a monotonic `Instant`, so `ts_ms` values within one process never go
+/// backwards even if the system clock steps mid-run.
+pub fn now_ms() -> f64 {
+    use std::time::{Instant, SystemTime, UNIX_EPOCH};
+    static ANCHOR: std::sync::Mutex<Option<(f64, Instant)>> = std::sync::Mutex::new(None);
+    let mut g = ANCHOR.lock().unwrap();
+    let (epoch_ms, base) = *g.get_or_insert_with(|| {
+        let wall = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64() * 1000.0)
+            .unwrap_or(0.0);
+        (wall, Instant::now())
+    });
+    epoch_ms + base.elapsed().as_secs_f64() * 1000.0
+}
+
 /// Streaming newline-delimited-JSON writer for run logs: one compact
 /// object per line, flushed after every row so `tail -f` (or a crashed
 /// run's partial log) always shows complete records.
@@ -442,22 +460,48 @@ impl From<&[f64]> for Json {
 /// An optional header row (run metadata) is written lazily before the
 /// first data row — the `started` flag — so a run that dies before its
 /// first epoch leaves an empty file rather than a headers-only one.
+///
+/// File-backed emitters stamp every object row with a wall-clock
+/// `ts_ms` field ([`now_ms`]) so streamed logs from different ranks and
+/// runs can be correlated; in-memory emitters (tests, capture buffers)
+/// stay byte-stable unless [`Emitter::stamp_ts`] is opted into.
 pub struct Emitter<W: std::io::Write> {
     out: W,
     header: Option<Json>,
     started: bool,
     rows: usize,
+    stamp_ts: bool,
 }
 
 impl<W: std::io::Write> Emitter<W> {
     pub fn new(out: W) -> Emitter<W> {
-        Emitter { out, header: None, started: false, rows: 0 }
+        Emitter { out, header: None, started: false, rows: 0, stamp_ts: false }
     }
 
     /// Set a metadata row to emit as the first line (lazily, before the
     /// first [`Emitter::emit`]).
     pub fn with_header(out: W, header: Json) -> Emitter<W> {
-        Emitter { out, header: Some(header), started: false, rows: 0 }
+        Emitter { out, header: Some(header), started: false, rows: 0, stamp_ts: false }
+    }
+
+    /// Stamp each emitted object row (header included) with `ts_ms` —
+    /// wall-clock milliseconds from [`now_ms`] — unless the row already
+    /// carries one. On by default for [`FileEmitter`]s.
+    pub fn stamp_ts(mut self, on: bool) -> Emitter<W> {
+        self.stamp_ts = on;
+        self
+    }
+
+    fn stamped(&self, row: &Json) -> Option<Json> {
+        if !self.stamp_ts {
+            return None;
+        }
+        match row {
+            Json::Obj(_) if row.get("ts_ms").is_none() => {
+                Some(row.clone().set("ts_ms", now_ms()))
+            }
+            _ => None,
+        }
     }
 
     /// Append one row (compact, newline-terminated) and flush.
@@ -465,11 +509,16 @@ impl<W: std::io::Write> Emitter<W> {
         if !self.started {
             self.started = true;
             if let Some(h) = self.header.take() {
+                let h = self.stamped(&h).unwrap_or(h);
                 self.out.write_all(h.to_compact().as_bytes())?;
                 self.out.write_all(b"\n")?;
             }
         }
-        self.out.write_all(row.to_compact().as_bytes())?;
+        let line = match self.stamped(row) {
+            Some(s) => s.to_compact(),
+            None => row.to_compact(),
+        };
+        self.out.write_all(line.as_bytes())?;
         self.out.write_all(b"\n")?;
         self.rows += 1;
         self.out.flush()
@@ -493,7 +542,7 @@ impl FileEmitter {
             }
         }
         let f = std::fs::File::create(path)?;
-        Ok(Emitter::with_header(std::io::BufWriter::new(f), header))
+        Ok(Emitter::with_header(std::io::BufWriter::new(f), header).stamp_ts(true))
     }
 
     /// Continue an existing log: append without re-emitting a header, or
@@ -517,7 +566,7 @@ impl FileEmitter {
         if last[0] != b'\n' {
             f.write_all(b"\n")?;
         }
-        Ok(Emitter::new(std::io::BufWriter::new(f)))
+        Ok(Emitter::new(std::io::BufWriter::new(f)).stamp_ts(true))
     }
 }
 
@@ -672,6 +721,44 @@ mod tests {
         assert_eq!(lines.len(), 3, "{text}");
         assert!(Json::parse(lines[1]).is_err(), "torn fragment kept isolated");
         assert_eq!(Json::parse(lines[2]).unwrap().get("epoch").unwrap().as_usize(), Some(10));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn now_ms_is_monotonic_and_plausible() {
+        let a = now_ms();
+        let b = now_ms();
+        assert!(b >= a);
+        // after 2020-01-01 and before 2100-01-01 (anchored wall clock)
+        assert!(a > 1.577e12, "{a}");
+        assert!(a < 4.102e12, "{a}");
+    }
+
+    #[test]
+    fn stamp_ts_adds_wall_clock_to_rows() {
+        let mut e = Emitter::with_header(Vec::new(), Json::obj().set("run", "t")).stamp_ts(true);
+        e.emit(&Json::obj().set("epoch", 1usize)).unwrap();
+        // a row that already carries ts_ms is left untouched
+        e.emit(&Json::obj().set("epoch", 2usize).set("ts_ms", 7.0f64)).unwrap();
+        let rows = parse_ndjson(&String::from_utf8(e.out).unwrap()).unwrap();
+        assert!(rows[0].get("ts_ms").unwrap().as_f64().unwrap() > 1.577e12);
+        assert!(rows[1].get("ts_ms").unwrap().as_f64().unwrap() > 1.577e12);
+        assert_eq!(rows[2].get("ts_ms").unwrap().as_f64(), Some(7.0));
+        // default emitters stay byte-stable (no stamping)
+        let mut plain = Emitter::new(Vec::new());
+        plain.emit(&Json::obj().set("x", 1usize)).unwrap();
+        assert_eq!(String::from_utf8(plain.out).unwrap(), "{\"x\":1}\n");
+    }
+
+    #[test]
+    fn file_emitter_stamps_ts_ms() {
+        let path = format!("/tmp/pipegcn_json_ts_{}.ndjson", std::process::id());
+        let _ = std::fs::remove_file(&path);
+        let mut e = FileEmitter::create(&path, Json::obj().set("run", "t")).unwrap();
+        e.emit(&Json::obj().set("epoch", 1usize)).unwrap();
+        drop(e);
+        let rows = parse_ndjson(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(rows.iter().all(|r| r.get("ts_ms").is_some()), "{rows:?}");
         std::fs::remove_file(&path).ok();
     }
 

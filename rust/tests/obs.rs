@@ -1,0 +1,174 @@
+//! Integration tests of the `obs` subsystem: histogram quantile error
+//! bounds against exact percentiles, registry correctness under
+//! concurrent updates from the compute pool, Chrome trace-event export
+//! well-formedness, and the regression pinning per-link byte counters
+//! to the aggregate `comm_bytes` accounting.
+
+use pipegcn::comm::{Phase, Tag, Transport};
+use pipegcn::net::localhost_mesh;
+use pipegcn::obs::trace::{chrome_trace_json, write_chrome_trace, Kind, Span};
+use pipegcn::obs::Registry;
+use pipegcn::runtime::pool::Pool;
+use pipegcn::util::json::Json;
+use pipegcn::util::rng::Rng;
+
+/// Log-bucketed histograms answer quantiles from bucket upper edges:
+/// the estimate can be off by at most one bucket ratio (2^(1/4)) plus
+/// the difference between the two percentile definitions at repeated
+/// values. Half an octave in log2 space covers both with margin.
+#[test]
+fn histogram_quantiles_within_bucket_error_of_exact() {
+    let reg = Registry::new();
+    let hist = reg.histogram("test_quantile_bounds_ms", &[]);
+    let mut rng = Rng::new(7);
+    // three decades of spread, strictly positive
+    let samples: Vec<f64> = (0..2000).map(|_| 0.1 + 100.0 * rng.next_f64().powi(2)).collect();
+    for &v in &samples {
+        hist.record(v);
+    }
+    let mut sorted = samples.clone();
+    sorted.sort_by(f64::total_cmp);
+    for q in [0.50, 0.90, 0.99] {
+        let exact = pipegcn::perf::percentile(&sorted, q);
+        let est = hist.quantile(q);
+        let err = (est / exact).log2().abs();
+        assert!(
+            err <= 0.5,
+            "q={q}: histogram {est} vs exact {exact} ({err:.3} octaves apart)"
+        );
+    }
+    // quantiles are monotone in q
+    assert!(hist.quantile(0.50) <= hist.quantile(0.90));
+    assert!(hist.quantile(0.90) <= hist.quantile(0.99));
+    // count is exact; sum matches up to FP reassociation
+    assert_eq!(hist.count(), samples.len() as u64);
+    let total: f64 = samples.iter().sum();
+    assert!((hist.sum() - total).abs() <= 1e-6 * total.abs());
+}
+
+/// Counters, gauges, and histograms must tally exactly when hammered
+/// from every pool worker at once — the registry hands out lock-free
+/// handles, so contention must never drop an update.
+#[test]
+fn registry_exact_under_concurrent_pool_updates() {
+    let reg = Registry::new();
+    let counter = reg.counter("test_concurrent_total", &[]);
+    let gauge = reg.gauge("test_concurrent_gauge", &[]);
+    let hist = reg.histogram("test_concurrent_ms", &[]);
+    let pool = Pool::new(4);
+    const CHUNKS: usize = 400;
+    const PER_CHUNK: usize = 25;
+    pool.run(CHUNKS, |i| {
+        for k in 0..PER_CHUNK {
+            counter.add(1.0);
+            gauge.add(1.0);
+            hist.record((1 + (i + k) % 16) as f64);
+        }
+    });
+    let n = (CHUNKS * PER_CHUNK) as f64;
+    assert_eq!(counter.get(), n);
+    assert_eq!(gauge.get(), n);
+    assert_eq!(hist.count(), CHUNKS as u64 * PER_CHUNK as u64);
+    // every recorded value was an integer in [1, 16]
+    assert!(hist.sum() >= n && hist.sum() <= 16.0 * n);
+    // the lookup path sees the same numbers as the handles
+    assert_eq!(reg.value("test_concurrent_total", &[]), Some(n));
+    assert_eq!(reg.value("test_concurrent_gauge", &[]), Some(n));
+    // labeled series stay independent: same family, distinct labels
+    let a = reg.counter("test_concurrent_labeled", &[("side", "a")]);
+    let b = reg.counter("test_concurrent_labeled", &[("side", "b")]);
+    pool.run(64, |i| if i % 2 == 0 { a.inc() } else { b.inc() });
+    assert_eq!(a.get(), 32.0);
+    assert_eq!(b.get(), 32.0);
+}
+
+/// The exported Chrome trace must round-trip through our own JSON
+/// parser and carry one complete ("X") event per span, with `pid` =
+/// rank so multi-rank merges read as separate processes.
+#[test]
+fn chrome_trace_export_is_well_formed_json() {
+    let spans = vec![
+        Span { rank: 0, layer: 0, epoch: 1, kind: Kind::FwdLayer, start_us: 10, end_us: 25 },
+        Span { rank: 0, layer: 0, epoch: 1, kind: Kind::CommWait, start_us: 25, end_us: 40 },
+        Span { rank: 1, layer: 1, epoch: 1, kind: Kind::BwdLayer, start_us: 12, end_us: 30 },
+        Span { rank: 1, layer: 0, epoch: 1, kind: Kind::Epoch, start_us: 0, end_us: 55 },
+    ];
+    let doc = chrome_trace_json(&spans);
+    let reparsed = Json::parse(&doc.to_compact()).expect("export must be parseable JSON");
+    let events = reparsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert_eq!(events.len(), spans.len());
+    for (ev, s) in events.iter().zip(&spans) {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(ev.get("pid").and_then(Json::as_f64), Some(s.rank as f64));
+        assert_eq!(ev.get("ts").and_then(Json::as_f64), Some(s.start_us as f64));
+        assert_eq!(
+            ev.get("dur").and_then(Json::as_f64),
+            Some((s.end_us - s.start_us) as f64)
+        );
+        let args = ev.get("args").expect("args object");
+        assert_eq!(args.get("epoch").and_then(Json::as_f64), Some(s.epoch as f64));
+    }
+    // the file writer produces the identical document
+    let path = std::env::temp_dir().join("pipegcn_obs_trace_test.json");
+    let path = path.to_str().expect("temp path");
+    write_chrome_trace(path, &spans).expect("write trace");
+    let from_file = std::fs::read_to_string(path).expect("read trace back");
+    assert_eq!(from_file, doc.to_compact());
+    let _ = std::fs::remove_file(path);
+}
+
+/// Regression: the per-link byte counters must sum to the aggregate
+/// `payload_bytes_sent` that the `comm_bytes` reports are built on —
+/// per-link observability must never drift from the totals.
+#[test]
+fn per_link_byte_counters_sum_to_payload_total() {
+    const PARTS: usize = 3;
+    let mesh = localhost_mesh(PARTS).expect("mesh");
+    let handles: Vec<_> = mesh
+        .into_iter()
+        .enumerate()
+        .map(|(rank, mut t)| {
+            std::thread::spawn(move || {
+                // every rank sends a differently-sized payload to every
+                // peer, twice, so links carry distinct byte counts
+                for round in 0..2u32 {
+                    let tag = Tag::new(round, 0, Phase::FwdFeat);
+                    for dst in 0..PARTS {
+                        if dst != rank {
+                            t.send(rank, dst, tag, vec![rank as f32; 5 + 3 * rank + dst]);
+                        }
+                    }
+                    for src in 0..PARTS {
+                        if src != rank {
+                            let got = t.recv_blocking(src, rank, tag);
+                            assert_eq!(got.len(), 5 + 3 * src + rank);
+                        }
+                    }
+                }
+                let links = t.link_payload_bytes_sent();
+                let total = t.payload_bytes_sent();
+                t.shutdown();
+                (rank, links, total)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (rank, links, total) = h.join().expect("rank thread");
+        assert_eq!(links.len(), PARTS);
+        assert_eq!(links[rank], 0, "rank {rank} recorded bytes to itself");
+        let link_sum: u64 = links.iter().sum();
+        assert_eq!(
+            link_sum, total,
+            "rank {rank}: per-link bytes {links:?} don't sum to payload total {total}"
+        );
+        // 2 rounds × 2 peers, 4 bytes per f32, payload sizes as sent
+        let expected: u64 = (0..PARTS)
+            .filter(|&d| d != rank)
+            .map(|d| 2 * 4 * (5 + 3 * rank + d) as u64)
+            .sum();
+        assert_eq!(total, expected, "rank {rank} payload byte count");
+    }
+}
