@@ -12,7 +12,8 @@
 //!   block;
 //! * local features / labels / masks.
 
-use crate::graph::{Graph, Labels};
+use crate::graph::generate::Shard;
+use crate::graph::{Adj, Graph, Labels};
 use crate::model::LayerKind;
 use crate::partition::Partitioning;
 use crate::tensor::{Csr, Mat};
@@ -80,120 +81,224 @@ pub struct HaloPlan {
     pub multilabel: bool,
 }
 
+/// One rank's borrowed slice of a plan — everything the per-rank
+/// training loop consumes. The classic path takes it from a full
+/// [`HaloPlan`] via [`HaloPlan::view`]; the scale path constructs one
+/// directly around a locally built [`PartPlan`], so no rank ever holds
+/// the other ranks' plans.
+#[derive(Clone, Copy, Debug)]
+pub struct PartView<'a> {
+    pub n_parts: usize,
+    /// global #train nodes (loss normalization across partitions)
+    pub total_train: usize,
+    pub part: &'a PartPlan,
+}
+
+impl PartView<'_> {
+    /// The rank this view belongs to.
+    pub fn rank(&self) -> usize {
+        self.part.part
+    }
+}
+
+/// Where a partition's node payload (features/labels/masks) comes from.
+pub enum NodeSource<'a> {
+    /// Slice rows out of a fully materialized graph (classic path).
+    Graph(&'a Graph),
+    /// Adopt the rows of a per-partition shard built by
+    /// [`crate::graph::generate::sbm_shard`] with the same assignment
+    /// (scale path — nothing full-graph is ever allocated).
+    Shard(&'a Shard),
+}
+
+/// Build **one** partition's plan from adjacency structure + assignment,
+/// without materializing the global propagation matrix or any other
+/// part's plan. Weights use global degrees via the exact expressions of
+/// [`Graph::propagation_matrix`] / [`Graph::mean_propagation_matrix`],
+/// and send sets exploit adjacency symmetry (`S_{i,j}` = my inner nodes
+/// with a neighbor in `j`, ascending — precisely peer `j`'s halo block
+/// for me), so the result is bit-identical to the matching entry of
+/// [`build`].
+pub fn build_part(
+    adj: Adj<'_>,
+    assign: &[u32],
+    n_parts: usize,
+    part: usize,
+    kind: LayerKind,
+    src: &NodeSource<'_>,
+) -> PartPlan {
+    assert_eq!(assign.len(), adj.n);
+    let i = part;
+    let inner: Vec<u32> =
+        (0..adj.n as u32).filter(|&v| assign[v as usize] as usize == i).collect();
+    let n_inner = inner.len();
+    // halo: remote neighbors of inner nodes, sorted by (owner, id)
+    let mut halo: Vec<u32> = Vec::new();
+    for &v in &inner {
+        for &u in adj.neighbors(v as usize) {
+            if assign[u as usize] as usize != i {
+                halo.push(u);
+            }
+        }
+    }
+    halo.sort_unstable_by_key(|&u| ((assign[u as usize] as u64) << 32) | u as u64);
+    halo.dedup();
+    // owner ranges + local col index of halo nodes
+    let mut halo_ranges = vec![0..0; n_parts];
+    {
+        let mut s = 0usize;
+        while s < halo.len() {
+            let owner = assign[halo[s] as usize] as usize;
+            let mut e = s;
+            while e < halo.len() && assign[halo[e] as usize] as usize == owner {
+                e += 1;
+            }
+            halo_ranges[owner] = s..e;
+            s = e;
+        }
+    }
+    let mut halo_col = std::collections::HashMap::with_capacity(halo.len() * 2);
+    for (hi, &u) in halo.iter().enumerate() {
+        halo_col.insert(u, (n_inner + hi) as u32);
+    }
+    // `inner` is ascending, so local index = position by binary search
+    let local_of = |v: u32| -> u32 { inner.binary_search(&v).unwrap() as u32 };
+    let local_col = |u: u32| -> u32 {
+        if assign[u as usize] as usize == i {
+            local_of(u)
+        } else {
+            halo_col[&u]
+        }
+    };
+    // local propagation matrix from **global** degrees (Eq. 3 uses the
+    // true d_v). The weight expressions mirror the Graph methods
+    // byte-for-byte; `Csr::from_triplets` sorts by (row, col), so the
+    // emission order here is irrelevant.
+    let mut trip = Vec::new();
+    match kind {
+        LayerKind::Gcn => {
+            for (r, &v) in inner.iter().enumerate() {
+                let dv = (adj.degree(v as usize) + 1) as f32;
+                trip.push((r as u32, r as u32, 1.0 / dv));
+                for &u in adj.neighbors(v as usize) {
+                    let du = (adj.degree(u as usize) + 1) as f32;
+                    trip.push((r as u32, local_col(u), 1.0 / (dv.sqrt() * du.sqrt())));
+                }
+            }
+        }
+        LayerKind::SageMean => {
+            for (r, &v) in inner.iter().enumerate() {
+                let inv = 1.0 / (adj.degree(v as usize) + 1) as f32;
+                trip.push((r as u32, r as u32, inv));
+                for &u in adj.neighbors(v as usize) {
+                    trip.push((r as u32, local_col(u), inv));
+                }
+            }
+        }
+    }
+    let prop = Csr::from_triplets(n_inner, n_inner + halo.len(), trip);
+    // send sets: S_{i,j} = my inner nodes with ≥1 neighbor in j, in
+    // ascending id order — by adjacency symmetry exactly the global ids
+    // (and order) of peer j's halo block for me
+    let mut send_sets: Vec<Vec<u32>> = vec![Vec::new(); n_parts];
+    {
+        let mut touched = vec![false; n_parts];
+        let mut marks: Vec<usize> = Vec::with_capacity(8);
+        for (li, &v) in inner.iter().enumerate() {
+            for &u in adj.neighbors(v as usize) {
+                let pu = assign[u as usize] as usize;
+                if pu != i && !touched[pu] {
+                    touched[pu] = true;
+                    marks.push(pu);
+                }
+            }
+            for &p in &marks {
+                touched[p] = false;
+                send_sets[p].push(li as u32);
+            }
+            marks.clear();
+        }
+    }
+    // features / labels / masks from the node source
+    let (features, labels, train_mask, val_mask, test_mask) = match src {
+        NodeSource::Graph(g) => {
+            assert_eq!(g.n, adj.n);
+            let mut features = Mat::zeros(n_inner, g.feat_dim());
+            for (r, &v) in inner.iter().enumerate() {
+                features.set_row(r, g.features.row(v as usize));
+            }
+            let labels = match &g.labels {
+                Labels::Single { labels, .. } => {
+                    PlanLabels::Single(inner.iter().map(|&v| labels[v as usize]).collect())
+                }
+                Labels::Multi { targets } => {
+                    let mut t = Mat::zeros(n_inner, targets.cols);
+                    for (r, &v) in inner.iter().enumerate() {
+                        t.set_row(r, targets.row(v as usize));
+                    }
+                    PlanLabels::Multi(t)
+                }
+            };
+            let to_local = |mask: &[u32]| -> Vec<u32> {
+                mask.iter()
+                    .filter(|&&v| assign[v as usize] as usize == i)
+                    .map(|&v| local_of(v))
+                    .collect()
+            };
+            (
+                features,
+                labels,
+                to_local(&g.train_mask),
+                to_local(&g.val_mask),
+                to_local(&g.test_mask),
+            )
+        }
+        NodeSource::Shard(sh) => {
+            assert_eq!(sh.n, adj.n);
+            assert_eq!(
+                sh.owned, inner,
+                "shard ownership must match the partition assignment"
+            );
+            let labels = match &sh.labels {
+                Labels::Single { labels, .. } => PlanLabels::Single(labels.clone()),
+                Labels::Multi { targets } => PlanLabels::Multi(targets.clone()),
+            };
+            let to_local =
+                |mask: &[u32]| -> Vec<u32> { mask.iter().map(|&v| local_of(v)).collect() };
+            (
+                sh.features.clone(),
+                labels,
+                to_local(&sh.train_mask),
+                to_local(&sh.val_mask),
+                to_local(&sh.test_mask),
+            )
+        }
+    };
+    PartPlan {
+        part: i,
+        inner,
+        halo,
+        halo_ranges,
+        prop,
+        send_sets,
+        features,
+        labels,
+        train_mask,
+        val_mask,
+        test_mask,
+    }
+}
+
 /// Build the plan. `kind` selects the propagation normalization:
 /// GCN → symmetric `D̃^{-1/2}ÃD̃^{-1/2}`, SAGE-mean → `D̃^{-1}Ã`.
+/// Assembled as one [`build_part`] per partition — the same construction
+/// every scale-path rank runs for its own part alone.
 pub fn build(g: &Graph, pt: &Partitioning, kind: LayerKind) -> HaloPlan {
     assert_eq!(pt.assign.len(), g.n);
     let k = pt.n_parts;
-    let p_global = match kind {
-        LayerKind::Gcn => g.propagation_matrix(),
-        LayerKind::SageMean => g.mean_propagation_matrix(),
-    };
-    let members = pt.members(); // sorted ids per part
-    // global -> local inner index
-    let mut inner_idx = vec![u32::MAX; g.n];
-    for m in &members {
-        for (li, &v) in m.iter().enumerate() {
-            inner_idx[v as usize] = li as u32;
-        }
-    }
-    let mut parts = Vec::with_capacity(k);
-    for i in 0..k {
-        let inner = members[i].clone();
-        let n_inner = inner.len();
-        // collect halo: remote columns referenced by inner rows of P
-        let mut halo: Vec<u32> = Vec::new();
-        for &v in &inner {
-            for (u, _) in p_global.row_entries(v as usize) {
-                if pt.assign[u] as usize != i {
-                    halo.push(u as u32);
-                }
-            }
-        }
-        // sort by (owner, id) and dedup
-        halo.sort_unstable_by_key(|&u| ((pt.assign[u as usize] as u64) << 32) | u as u64);
-        halo.dedup();
-        // owner ranges + local col index of halo nodes
-        let mut halo_ranges = vec![0..0; k];
-        {
-            let mut s = 0usize;
-            while s < halo.len() {
-                let owner = pt.assign[halo[s] as usize] as usize;
-                let mut e = s;
-                while e < halo.len() && pt.assign[halo[e] as usize] as usize == owner {
-                    e += 1;
-                }
-                halo_ranges[owner] = s..e;
-                s = e;
-            }
-        }
-        let mut halo_col = std::collections::HashMap::with_capacity(halo.len() * 2);
-        for (hi, &u) in halo.iter().enumerate() {
-            halo_col.insert(u, (n_inner + hi) as u32);
-        }
-        // local propagation matrix
-        let mut trip = Vec::new();
-        for (r, &v) in inner.iter().enumerate() {
-            for (u, w) in p_global.row_entries(v as usize) {
-                let col = if pt.assign[u] as usize == i {
-                    inner_idx[u]
-                } else {
-                    halo_col[&(u as u32)]
-                };
-                trip.push((r as u32, col, w));
-            }
-        }
-        let prop = Csr::from_triplets(n_inner, n_inner + halo.len(), trip);
-        // features / labels / masks
-        let mut features = Mat::zeros(n_inner, g.feat_dim());
-        for (r, &v) in inner.iter().enumerate() {
-            features.set_row(r, g.features.row(v as usize));
-        }
-        let labels = match &g.labels {
-            Labels::Single { labels, .. } => {
-                PlanLabels::Single(inner.iter().map(|&v| labels[v as usize]).collect())
-            }
-            Labels::Multi { targets } => {
-                let mut t = Mat::zeros(n_inner, targets.cols);
-                for (r, &v) in inner.iter().enumerate() {
-                    t.set_row(r, targets.row(v as usize));
-                }
-                PlanLabels::Multi(t)
-            }
-        };
-        let to_local = |mask: &[u32]| -> Vec<u32> {
-            mask.iter()
-                .filter(|&&v| pt.assign[v as usize] as usize == i)
-                .map(|&v| inner_idx[v as usize])
-                .collect()
-        };
-        parts.push(PartPlan {
-            part: i,
-            inner,
-            halo,
-            halo_ranges,
-            prop,
-            send_sets: vec![Vec::new(); k],
-            features,
-            labels,
-            train_mask: to_local(&g.train_mask),
-            val_mask: to_local(&g.val_mask),
-            test_mask: to_local(&g.test_mask),
-        });
-    }
-    // send sets: j's halo block for owner i lists global ids sorted — the
-    // matching send set is those ids mapped to i's local inner indices,
-    // in the same order.
-    for j in 0..k {
-        for i in 0..k {
-            if i == j {
-                continue;
-            }
-            let range = parts[j].halo_ranges[i].clone();
-            let ids: Vec<u32> = parts[j].halo[range].to_vec();
-            parts[i].send_sets[j] = ids.iter().map(|&u| inner_idx[u as usize]).collect();
-        }
-    }
+    let src = NodeSource::Graph(g);
+    let parts: Vec<PartPlan> =
+        (0..k).map(|i| build_part(g.adj(), &pt.assign, k, i, kind, &src)).collect();
     HaloPlan {
         n_parts: k,
         parts,
@@ -204,6 +309,11 @@ pub fn build(g: &Graph, pt: &Partitioning, kind: LayerKind) -> HaloPlan {
 }
 
 impl HaloPlan {
+    /// One rank's borrowed slice of this plan.
+    pub fn view(&self, rank: usize) -> PartView<'_> {
+        PartView { n_parts: self.n_parts, total_train: self.total_train, part: &self.parts[rank] }
+    }
+
     /// Total boundary replicas (= per-layer communication volume in
     /// node-feature units). Matches `partition::quality`'s comm_volume.
     pub fn total_halo(&self) -> usize {
@@ -322,6 +432,46 @@ mod tests {
             .collect();
         back.sort_unstable();
         assert_eq!(back, g.train_mask);
+    }
+
+    #[test]
+    fn build_part_shard_source_matches_graph_source() {
+        let p = crate::graph::presets::by_name("tiny").unwrap();
+        let n = 300;
+        let g = p.build_scaled(n, 2);
+        let pt = partition(&g, 3, Method::Multilevel, 2);
+        let src_g = NodeSource::Graph(&g);
+        for (kind, i) in [(LayerKind::SageMean, 0), (LayerKind::Gcn, 1), (LayerKind::SageMean, 2)]
+        {
+            let sh = p.build_shard_scaled(n, 2, &pt.assign, i as u32);
+            let src_s = NodeSource::Shard(&sh);
+            let a = build_part(g.adj(), &pt.assign, 3, i, kind, &src_g);
+            let b = build_part(g.adj(), &pt.assign, 3, i, kind, &src_s);
+            assert_eq!(a.inner, b.inner);
+            assert_eq!(a.halo, b.halo);
+            assert_eq!(a.halo_ranges, b.halo_ranges);
+            assert_eq!(a.prop, b.prop);
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.send_sets, b.send_sets);
+            assert_eq!(a.train_mask, b.train_mask);
+            assert_eq!(a.val_mask, b.val_mask);
+            assert_eq!(a.test_mask, b.test_mask);
+        }
+    }
+
+    #[test]
+    fn build_part_matches_full_build_entry() {
+        let g = small_graph();
+        let pt = partition(&g, 3, Method::Multilevel, 7);
+        let plan = build(&g, &pt, LayerKind::Gcn);
+        let one = build_part(g.adj(), &pt.assign, 3, 1, LayerKind::Gcn, &NodeSource::Graph(&g));
+        let reference = &plan.parts[1];
+        assert_eq!(one.inner, reference.inner);
+        assert_eq!(one.prop, reference.prop);
+        assert_eq!(one.send_sets, reference.send_sets);
+        let view = plan.view(1);
+        assert_eq!(view.rank(), 1);
+        assert_eq!(view.total_train, plan.total_train);
     }
 
     #[test]

@@ -43,7 +43,7 @@
 //! Scope: no probes / work capture (the sequential engine owns those);
 //! evaluation only at the end.
 
-use super::halo::{self, HaloPlan, PlanLabels};
+use super::halo::{self, PartView, PlanLabels};
 use super::state::TrainState;
 use super::{TrainConfig, Variant};
 use crate::ckpt;
@@ -154,11 +154,12 @@ pub(crate) fn loss_tag(t: usize, src: usize) -> Tag {
 
 /// Send half of the boundary-set exchange (`Phase::Setup`, Alg. 1
 /// lines 1–5 made real): ship each peer the global ids of the halo rows
-/// `rank` needs from it. Moving this through the transport makes byte
+/// this rank needs from it. Moving this through the transport makes byte
 /// accounting include the setup traffic a real wire sees.
-pub fn setup_send(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
-    let p = &plan.parts[rank];
-    for j in 0..plan.n_parts {
+pub fn setup_send(transport: &dyn Transport, view: &PartView<'_>) {
+    let rank = view.rank();
+    let p = view.part;
+    for j in 0..view.n_parts {
         let range = p.halo_ranges[j].clone();
         if j != rank && !range.is_empty() {
             transport.send(rank, j, setup_tag(), encode_u32s(&p.halo[range]));
@@ -169,10 +170,12 @@ pub fn setup_send(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
 /// Verify half: receive each peer's request and check it matches the
 /// plan's send set — this is what establishes `S_{i,j}` on a real
 /// deployment, and over TCP it validates the mesh wiring before any
-/// tensor moves.
-pub fn setup_verify(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
-    let p = &plan.parts[rank];
-    for j in 0..plan.n_parts {
+/// tensor moves. On the scale path it doubles as a cross-check that two
+/// ranks' independently built plans agree on the boundary.
+pub fn setup_verify(transport: &dyn Transport, view: &PartView<'_>) {
+    let rank = view.rank();
+    let p = view.part;
+    for j in 0..view.n_parts {
         if j != rank && !p.send_sets[j].is_empty() {
             let ids = decode_u32s(&transport.recv_blocking(j, rank, setup_tag()));
             let want: Vec<u32> =
@@ -187,9 +190,9 @@ pub fn setup_verify(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
 
 /// Full per-rank boundary-set exchange (concurrent engines: every rank
 /// runs send-then-verify; sends never block, so this cannot deadlock).
-pub fn setup_exchange(transport: &dyn Transport, plan: &HaloPlan, rank: usize) {
-    setup_send(transport, plan, rank);
-    setup_verify(transport, plan, rank);
+pub fn setup_exchange(transport: &dyn Transport, view: &PartView<'_>) {
+    setup_send(transport, view);
+    setup_verify(transport, view);
 }
 
 /// Side-channel controls for [`run_rank_ctl`]: checkpointing, live run
@@ -217,12 +220,11 @@ pub struct RankCtl<'a> {
 /// (identical on every rank).
 pub fn run_rank(
     transport: &dyn Transport,
-    plan: &HaloPlan,
-    rank: usize,
+    view: &PartView<'_>,
     cfg: &TrainConfig,
 ) -> (Vec<f64>, Params) {
-    let mut st = TrainState::init(cfg, &plan.parts[rank]);
-    let rep = run_rank_ctl(transport, plan, rank, cfg, &mut st, RankCtl::default())
+    let mut st = TrainState::init(cfg, view.part);
+    let rep = run_rank_ctl(transport, view, cfg, &mut st, RankCtl::default())
         .expect("run_rank without checkpointing has no I/O to fail");
     (rep.losses, st.params)
 }
@@ -233,13 +235,13 @@ pub fn run_rank(
 /// covers exactly those epochs.
 pub fn run_rank_ctl(
     transport: &dyn Transport,
-    plan: &HaloPlan,
-    rank: usize,
+    view: &PartView<'_>,
     cfg: &TrainConfig,
     st: &mut TrainState,
     mut ctl: RankCtl<'_>,
 ) -> crate::util::error::Result<RankReport> {
-    let k = plan.n_parts;
+    let k = view.n_parts;
+    let rank = view.rank();
     assert_eq!(transport.n_ranks(), k);
     let n_layers = cfg.model.n_layers();
     let dims = cfg.model.dims.clone();
@@ -247,7 +249,7 @@ pub fn run_rank_ctl(
         Variant::Vanilla => (false, super::PipeOpts::plain()),
         Variant::Pipe(o) => (true, o),
     };
-    let p = &plan.parts[rank];
+    let p = view.part;
 
     // Pre-registered observability handles — one registry lock per
     // series here, lock-free atomic updates on the epoch path. The
@@ -275,12 +277,12 @@ pub fn run_rank_ctl(
     let epoch_hist = reg.histogram("epoch_ms", &[]);
     let epochs_total = reg.counter("epochs_total", &[]);
 
-    setup_exchange(transport, plan, rank);
+    setup_exchange(transport, view);
 
     let mut backend = NativeBackend::new();
     let prop_id = backend.register_prop(&p.prop);
     let dropout = cfg.model.dropout;
-    let total_train = plan.total_train.max(1) as f64;
+    let total_train = view.total_train.max(1) as f64;
     let start = st.epoch + 1;
     let mut losses = Vec::with_capacity(cfg.epochs.saturating_sub(st.epoch));
     let mut run_stats = WaitStats::default();
@@ -707,7 +709,7 @@ pub fn run_threaded_ctl(
                     log: log_slot,
                     kill_after_epoch: None,
                 };
-                let rep = run_rank_ctl(fabric_ref, plan_ref, rank, cfg, &mut st, rc)?;
+                let rep = run_rank_ctl(fabric_ref, &plan_ref.view(rank), cfg, &mut st, rc)?;
                 Ok((rep, st))
             }));
         }
@@ -837,7 +839,8 @@ mod tests {
                     let (fabric, plan, c) = (&fabric, &plan, &c);
                     s.spawn(move || {
                         let mut st = TrainState::init(c, &plan.parts[rank]);
-                        run_rank_ctl(fabric, plan, rank, c, &mut st, RankCtl::default()).unwrap()
+                        run_rank_ctl(fabric, &plan.view(rank), c, &mut st, RankCtl::default())
+                            .unwrap()
                     })
                 })
                 .collect();

@@ -153,10 +153,10 @@ pub fn train_resumable(
     // two passes (all sends, then all verifies) because one thread
     // plays every rank here.
     for i in 0..k {
-        super::threaded::setup_send(&fabric, &plan, i);
+        super::threaded::setup_send(&fabric, &plan.view(i));
     }
     for i in 0..k {
-        super::threaded::setup_verify(&fabric, &plan, i);
+        super::threaded::setup_verify(&fabric, &plan.view(i));
     }
     let setup_bytes = fabric.total_bytes();
 

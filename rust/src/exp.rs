@@ -25,7 +25,10 @@ pub struct RunOutput {
     pub result: TrainResult,
 }
 
-/// Options for [`run`]. `epochs = 0` keeps the preset default.
+/// Options for [`run`]. `epochs = 0` keeps the preset default;
+/// `nodes = 0` keeps the preset node count (any other value builds the
+/// degree-preserving scaled variant via
+/// [`Preset::build_scaled`](crate::graph::presets::Preset::build_scaled)).
 #[derive(Clone, Copy, Debug)]
 pub struct RunOpts {
     pub epochs: usize,
@@ -33,11 +36,24 @@ pub struct RunOpts {
     pub probe_errors: bool,
     pub gamma: f32,
     pub eval_every: usize,
+    /// Partitioner for `parts > 1` (multilevel is the default; `Hash`
+    /// is the `--partitioner simple` escape hatch).
+    pub partitioner: Method,
+    /// Override node count (0 = preset default).
+    pub nodes: usize,
 }
 
 impl Default for RunOpts {
     fn default() -> RunOpts {
-        RunOpts { epochs: 0, seed: 1, probe_errors: false, gamma: 0.95, eval_every: 5 }
+        RunOpts {
+            epochs: 0,
+            seed: 1,
+            probe_errors: false,
+            gamma: 0.95,
+            eval_every: 5,
+            partitioner: Method::Multilevel,
+            nodes: 0,
+        }
     }
 }
 
@@ -56,6 +72,26 @@ pub fn try_prepare(
     variant_name: &str,
     opts: RunOpts,
 ) -> crate::util::error::Result<(&'static Preset, Graph, Partitioning, TrainConfig)> {
+    let (preset, cfg) = try_config(preset_name, n_parts, variant_name, opts)?;
+    let graph = if opts.nodes > 0 && opts.nodes != preset.n {
+        preset.build_scaled(opts.nodes, opts.seed)
+    } else {
+        preset.build(opts.seed)
+    };
+    let parts = partition(&graph, n_parts, opts.partitioner, opts.seed);
+    Ok((preset, graph, parts, cfg))
+}
+
+/// The validation + config half of [`try_prepare`]: resolves the preset
+/// and training config **without building a graph** — the scale path
+/// (per-rank lazy construction) calls this, then materializes only its
+/// own shard from `(seed, part, parts)`.
+pub fn try_config(
+    preset_name: &str,
+    n_parts: usize,
+    variant_name: &str,
+    opts: RunOpts,
+) -> crate::util::error::Result<(&'static Preset, TrainConfig)> {
     let preset = by_name(preset_name).ok_or_else(|| {
         crate::err_msg!(
             "unknown preset '{preset_name}' (try: {:?})",
@@ -67,8 +103,6 @@ pub fn try_prepare(
     if n_parts == 0 {
         crate::bail!("partition count must be at least 1");
     }
-    let graph = preset.build(opts.seed);
-    let parts = partition(&graph, n_parts, Method::Multilevel, opts.seed);
     let cfg = TrainConfig {
         model: ModelConfig::from_preset(preset),
         variant,
@@ -79,7 +113,7 @@ pub fn try_prepare(
         eval_every: opts.eval_every,
         probe_errors: opts.probe_errors,
     };
-    Ok((preset, graph, parts, cfg))
+    Ok((preset, cfg))
 }
 
 /// [`try_prepare`], panicking on bad inputs (library/test convenience).

@@ -21,26 +21,55 @@ pub fn labels_from_communities(
     multilabel: bool,
     rng: &mut Rng,
 ) -> Labels {
+    labels_filtered(community, n_classes, multilabel, rng, None)
+}
+
+/// [`labels_from_communities`] with storage restricted to the nodes
+/// where `keep` is true (rows in ascending node order). The RNG stream
+/// is consumed for **every** node regardless, so the kept rows are
+/// bit-identical to the matching rows of the unfiltered call — this is
+/// what lets a shard build replay the monolithic stream.
+pub fn labels_filtered(
+    community: &[u32],
+    n_classes: usize,
+    multilabel: bool,
+    rng: &mut Rng,
+    keep: Option<&[bool]>,
+) -> Labels {
+    let kept = |v: usize| keep.is_none_or(|k| k[v]);
     if !multilabel {
-        let labels = community
-            .iter()
-            .map(|&c| {
-                if rng.bernoulli(0.05) {
-                    rng.gen_range(n_classes) as u32
-                } else {
-                    c % n_classes as u32
-                }
-            })
-            .collect();
+        let mut labels = Vec::new();
+        for (v, &c) in community.iter().enumerate() {
+            let l = if rng.bernoulli(0.05) {
+                rng.gen_range(n_classes) as u32
+            } else {
+                c % n_classes as u32
+            };
+            if kept(v) {
+                labels.push(l);
+            }
+        }
         Labels::Single { labels, n_classes }
     } else {
-        let mut targets = Mat::zeros(community.len(), n_classes);
+        let n_keep = match keep {
+            Some(k) => k.iter().filter(|&&b| b).count(),
+            None => community.len(),
+        };
+        let mut targets = Mat::zeros(n_keep, n_classes);
+        let mut row = 0usize;
         for (v, &c) in community.iter().enumerate() {
-            targets.set(v, (c as usize) % n_classes, 1.0);
+            let store = kept(v);
+            if store {
+                targets.set(row, (c as usize) % n_classes, 1.0);
+            }
             for k in 0..n_classes {
-                if rng.bernoulli(0.1) {
-                    targets.set(v, k, 1.0);
+                // the draw happens for every node; only kept rows land
+                if rng.bernoulli(0.1) && store {
+                    targets.set(row, k, 1.0);
                 }
+            }
+            if store {
+                row += 1;
             }
         }
         Labels::Multi { targets }
@@ -58,6 +87,23 @@ pub fn class_features(
     noise: f32,
     rng: &mut Rng,
 ) -> Mat {
+    class_features_filtered(labels, community, feat_dim, noise, rng, None)
+}
+
+/// [`class_features`] with storage restricted to the nodes where `keep`
+/// is true. When `keep` is Some, `labels` must hold rows for the kept
+/// nodes only (ascending node order) — i.e. the output of
+/// [`labels_filtered`] with the same mask. Unkept nodes still draw
+/// their `feat_dim` noise normals and discard them (the prototype math
+/// is RNG-free), keeping the stream aligned with the monolithic call.
+pub fn class_features_filtered(
+    labels: &Labels,
+    community: &[u32],
+    feat_dim: usize,
+    noise: f32,
+    rng: &mut Rng,
+    keep: Option<&[bool]>,
+) -> Mat {
     let n = community.len();
     let n_classes = labels.n_classes();
     // prototype bank: one per class and one per community id bucket
@@ -74,19 +120,34 @@ pub fn class_features(
             .collect()
     };
     let class_protos: Vec<Vec<f32>> = (0..n_classes).map(|c| proto(c, 0xA5)).collect();
-    let mut out = Mat::zeros(n, feat_dim);
+    let kept = |v: usize| keep.is_none_or(|k| k[v]);
+    let n_keep = match keep {
+        Some(k) => k.iter().filter(|&&b| b).count(),
+        None => n,
+    };
+    let mut out = Mat::zeros(n_keep, feat_dim);
+    let mut r_idx = 0usize;
     for v in 0..n {
-        let row = out.row_mut(v);
+        if !kept(v) {
+            // burn the noise draws so the stream matches the unfiltered call
+            for _ in 0..feat_dim {
+                rng.normal();
+            }
+            continue;
+        }
+        let lrow = r_idx;
+        r_idx += 1;
+        let row = out.row_mut(lrow);
         match labels {
             Labels::Single { labels, .. } => {
-                let p = &class_protos[labels[v] as usize];
+                let p = &class_protos[labels[lrow] as usize];
                 for (r, &pv) in row.iter_mut().zip(p.iter()) {
                     *r += pv;
                 }
             }
             Labels::Multi { targets } => {
                 for c in 0..n_classes {
-                    if targets.get(v, c) > 0.5 {
+                    if targets.get(lrow, c) > 0.5 {
                         let p = &class_protos[c];
                         for (r, &pv) in row.iter_mut().zip(p.iter()) {
                             *r += 0.7 * pv;

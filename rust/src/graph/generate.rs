@@ -7,7 +7,8 @@
 //! power-law (Barabási–Albert), Erdős–Rényi, and grid generators for
 //! partitioner and scaling studies.
 
-use super::Graph;
+use super::{Graph, Labels, Topology};
+use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
 /// Stochastic block model parameters.
@@ -51,6 +52,19 @@ impl SbmConfig {
 ///
 /// Returns `(edges, community)`.
 pub fn sbm_edges(cfg: &SbmConfig, rng: &mut Rng) -> (Vec<(u32, u32)>, Vec<u32>) {
+    sbm_edges_filtered(cfg, rng, None)
+}
+
+/// [`sbm_edges`] with edge storage restricted to edges touching a kept
+/// node. The RNG stream (community shuffle + every pair draw) is
+/// consumed exactly as in the unfiltered call, so the kept edges are
+/// bit-identical to the matching edges of the monolithic build.
+pub fn sbm_edges_filtered(
+    cfg: &SbmConfig,
+    rng: &mut Rng,
+    keep: Option<&[bool]>,
+) -> (Vec<(u32, u32)>, Vec<u32>) {
+    let want = |a: u32, b: u32| keep.is_none_or(|k| k[a as usize] || k[b as usize]);
     let n = cfg.n;
     let k = cfg.communities.max(1);
     // Balanced community sizes, randomly assigned to node ids — otherwise
@@ -73,7 +87,7 @@ pub fn sbm_edges(cfg: &SbmConfig, rng: &mut Rng) -> (Vec<(u32, u32)>, Vec<u32>) 
         for _ in 0..m {
             let a = block[rng.gen_range(nb)];
             let b = block[rng.gen_range(nb)];
-            if a != b {
+            if a != b && want(a, b) {
                 edges.push((a, b));
             }
         }
@@ -102,7 +116,9 @@ pub fn sbm_edges(cfg: &SbmConfig, rng: &mut Rng) -> (Vec<(u32, u32)>, Vec<u32>) 
             let gw = |len: usize| ((len as f64 * gateway_frac).ceil() as usize).max(1);
             let a = members[ca][rng.gen_range(gw(members[ca].len()))];
             let b = members[cb][rng.gen_range(gw(members[cb].len()))];
-            edges.push((a, b));
+            if want(a, b) {
+                edges.push((a, b));
+            }
         }
     }
     (edges, community)
@@ -193,6 +209,121 @@ pub fn sbm_dataset(
     g
 }
 
+/// Adjacency-only SBM build: the full edge structure without features,
+/// labels, or splits — the per-rank "degree/edge summary" of the scale
+/// path. Bit-identical structure to [`sbm_dataset`] at the same seed
+/// (it replays the same leading RNG draws).
+pub fn sbm_topology(cfg: &SbmConfig, rng: &mut Rng) -> Topology {
+    let (edges, _community) = sbm_edges(cfg, rng);
+    Topology::from_edges(cfg.n, &edges)
+}
+
+/// One partition's slice of the dataset [`sbm_dataset`] (plus split and
+/// test-shift) would build: features/labels/masks for owned nodes only,
+/// plus the raw sampled edges touching an owned node. Built by replaying
+/// the monolithic RNG stream with storage filtered, so every kept byte
+/// is bit-identical to the monolithic build at the same seed —
+/// independent of which rank builds which shard.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// global node count of the full dataset
+    pub n: usize,
+    /// global ids this shard owns, ascending
+    pub owned: Vec<u32>,
+    /// raw sampled edges with ≥1 owned endpoint (pre-symmetrize/dedup;
+    /// the shard-concatenation property test reassembles the global
+    /// edge set from these)
+    pub edges: Vec<(u32, u32)>,
+    /// owned-node features (`owned.len() × feat_dim`), rows in `owned` order
+    pub features: Mat,
+    /// owned-node labels, rows in `owned` order
+    pub labels: Labels,
+    /// global ids of owned train/val/test nodes, ascending
+    pub train_mask: Vec<u32>,
+    pub val_mask: Vec<u32>,
+    pub test_mask: Vec<u32>,
+    /// global #train nodes (loss normalization needs the global count)
+    pub total_train: usize,
+}
+
+impl Shard {
+    pub fn n_owned(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        self.features.cols
+    }
+}
+
+/// Build the `part` shard of the dataset that
+/// `sbm_dataset(cfg, ..) + random_split(0.6, 0.2) + test-shift` would
+/// produce, holding only owned-node storage. `assign[v]` names the
+/// owning partition of node `v` — any deterministic assignment works
+/// (workers derive it by partitioning the shared [`sbm_topology`]), and
+/// the output depends only on `(cfg, seed, assign, part)`, never on
+/// which rank runs the build.
+#[allow(clippy::too_many_arguments)]
+pub fn sbm_shard(
+    cfg: &SbmConfig,
+    feat_dim: usize,
+    n_classes: usize,
+    multilabel: bool,
+    feature_noise: f32,
+    test_shift: f32,
+    rng: &mut Rng,
+    assign: &[u32],
+    part: u32,
+) -> Shard {
+    assert_eq!(assign.len(), cfg.n);
+    let keep: Vec<bool> = assign.iter().map(|&p| p == part).collect();
+    let owned: Vec<u32> = (0..cfg.n as u32).filter(|&v| keep[v as usize]).collect();
+    let (edges, community) = sbm_edges_filtered(cfg, rng, Some(&keep));
+    let labels =
+        super::features::labels_filtered(&community, n_classes, multilabel, rng, Some(&keep));
+    let mut features = super::features::class_features_filtered(
+        &labels,
+        &community,
+        feat_dim,
+        feature_noise,
+        rng,
+        Some(&keep),
+    );
+    // replay of `random_split(0.6, 0.2)` — same shuffle, filtered storage
+    let (train, val, test) = super::split_ids(cfg.n, 0.6, 0.2, rng);
+    // replay of the preset test-shift: every test node draws its
+    // feat_dim normals (ascending id order); only owned rows are stored
+    if test_shift > 0.0 {
+        for &v in &test {
+            if keep[v as usize] {
+                let r = owned.binary_search(&v).unwrap();
+                for x in features.row_mut(r).iter_mut() {
+                    *x += test_shift * rng.normal();
+                }
+            } else {
+                for _ in 0..feat_dim {
+                    rng.normal();
+                }
+            }
+        }
+    }
+    let filter = |m: Vec<u32>| -> Vec<u32> {
+        m.into_iter().filter(|&v| keep[v as usize]).collect()
+    };
+    let total_train = train.len();
+    Shard {
+        n: cfg.n,
+        owned,
+        edges,
+        features,
+        labels,
+        train_mask: filter(train),
+        val_mask: filter(val),
+        test_mask: filter(test),
+        total_train,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -273,5 +404,100 @@ mod tests {
         let (e2, c2) = sbm_edges(&cfg, &mut Rng::new(7));
         assert_eq!(e1, e2);
         assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn sbm_topology_matches_dataset_structure() {
+        let cfg = SbmConfig::new(300, 4, 5.0, 1.0);
+        let g = sbm_dataset(&cfg, 4, 4, false, 0.1, &mut Rng::new(31));
+        let t = sbm_topology(&cfg, &mut Rng::new(31));
+        assert_eq!(t.indptr, g.indptr);
+        assert_eq!(t.indices, g.indices);
+    }
+
+    /// Shard replay vs monolithic build: every stored byte of every
+    /// shard must equal the matching slice of the monolithic dataset.
+    fn check_shard_equivalence(multilabel: bool, test_shift: f32) {
+        let cfg = SbmConfig::new(400, 5, 6.0, 1.5);
+        let seed = 11;
+        let mut rng = Rng::new(seed);
+        let mut g = sbm_dataset(&cfg, 8, 5, multilabel, 0.4, &mut rng);
+        if test_shift > 0.0 {
+            // same continuation the presets apply after sbm_dataset
+            for v in g.test_mask.clone() {
+                for x in g.features.row_mut(v as usize).iter_mut() {
+                    *x += test_shift * rng.normal();
+                }
+            }
+        }
+        let assign: Vec<u32> = (0..cfg.n as u32).map(|v| v % 3).collect();
+        for part in 0..3u32 {
+            let sh = sbm_shard(
+                &cfg,
+                8,
+                5,
+                multilabel,
+                0.4,
+                test_shift,
+                &mut Rng::new(seed),
+                &assign,
+                part,
+            );
+            assert_eq!(sh.n, cfg.n);
+            assert_eq!(sh.feat_dim(), 8);
+            for (r, &v) in sh.owned.iter().enumerate() {
+                assert_eq!(
+                    sh.features.row(r),
+                    g.features.row(v as usize),
+                    "features of node {v} (part {part})"
+                );
+                match (&sh.labels, &g.labels) {
+                    (Labels::Single { labels: a, .. }, Labels::Single { labels: b, .. }) => {
+                        assert_eq!(a[r], b[v as usize], "label of node {v}");
+                    }
+                    (Labels::Multi { targets: a }, Labels::Multi { targets: b }) => {
+                        assert_eq!(a.row(r), b.row(v as usize), "targets of node {v}");
+                    }
+                    _ => panic!("label kinds differ"),
+                }
+            }
+            let filt = |m: &[u32]| -> Vec<u32> {
+                m.iter().copied().filter(|&v| assign[v as usize] == part).collect()
+            };
+            assert_eq!(sh.train_mask, filt(&g.train_mask));
+            assert_eq!(sh.val_mask, filt(&g.val_mask));
+            assert_eq!(sh.test_mask, filt(&g.test_mask));
+            assert_eq!(sh.total_train, g.train_mask.len());
+        }
+    }
+
+    #[test]
+    fn shard_matches_monolithic_single_label() {
+        check_shard_equivalence(false, 0.0);
+    }
+
+    #[test]
+    fn shard_matches_monolithic_multilabel_with_shift() {
+        check_shard_equivalence(true, 1.1);
+    }
+
+    #[test]
+    fn shard_edges_reassemble_global_edge_set() {
+        let cfg = SbmConfig::new(300, 4, 5.0, 1.0);
+        let (edges, _c) = sbm_edges(&cfg, &mut Rng::new(21));
+        let norm = |e: &[(u32, u32)]| -> std::collections::BTreeSet<(u32, u32)> {
+            e.iter()
+                .filter(|&&(a, b)| a != b)
+                .map(|&(a, b)| if a <= b { (a, b) } else { (b, a) })
+                .collect()
+        };
+        let assign: Vec<u32> =
+            (0..cfg.n as u32).map(|v| v.wrapping_mul(2654435761) % 4).collect();
+        let mut union = std::collections::BTreeSet::new();
+        for part in 0..4u32 {
+            let sh = sbm_shard(&cfg, 4, 4, false, 0.1, 0.0, &mut Rng::new(21), &assign, part);
+            union.extend(norm(&sh.edges));
+        }
+        assert_eq!(union, norm(&edges));
     }
 }

@@ -32,6 +32,118 @@ impl Labels {
     }
 }
 
+/// Borrowed adjacency-only view over CSR storage — the lightweight
+/// degree/edge summary partitioners and halo assembly consume, so they
+/// work identically over a full [`Graph`] or a feature-free
+/// [`Topology`].
+#[derive(Clone, Copy, Debug)]
+pub struct Adj<'a> {
+    pub n: usize,
+    pub indptr: &'a [usize],
+    pub indices: &'a [u32],
+}
+
+impl<'a> Adj<'a> {
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    pub fn neighbors(&self, v: usize) -> &'a [u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+}
+
+/// Feature-free adjacency: node count + CSR structure only. The scale
+/// path holds one of these per rank — partitioning, global degrees, and
+/// halo/send-set assembly need the structure, while features and labels
+/// stay sharded per partition (see [`generate::Shard`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub n: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+}
+
+impl Topology {
+    /// Build CSR adjacency from an undirected edge list — same
+    /// symmetrize/dedup semantics as [`Graph::from_edges`], so both
+    /// produce bit-identical structure from the same edges.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Topology {
+        let (indptr, indices) = csr_from_edges(n, edges);
+        Topology { n, indptr, indices }
+    }
+
+    pub fn adj(&self) -> Adj<'_> {
+        Adj { n: self.n, indptr: &self.indptr, indices: &self.indices }
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.indptr[v + 1] - self.indptr[v]
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.indices[self.indptr[v]..self.indptr[v + 1]]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.indices.len() / 2
+    }
+}
+
+/// Symmetrize + dedup an undirected edge list into sorted CSR adjacency
+/// (self-loops dropped). Shared by [`Graph::from_edges`] and
+/// [`Topology::from_edges`].
+fn csr_from_edges(n: usize, edges: &[(u32, u32)]) -> (Vec<usize>, Vec<u32>) {
+    let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in edges {
+        debug_assert!((u as usize) < n && (v as usize) < n);
+        if u == v {
+            continue;
+        }
+        pairs.push((u, v));
+        pairs.push((v, u));
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    let mut indptr = vec![0usize; n + 1];
+    let mut indices = Vec::with_capacity(pairs.len());
+    for &(u, v) in &pairs {
+        indptr[u as usize + 1] += 1;
+        indices.push(v);
+    }
+    for i in 0..n {
+        indptr[i + 1] += indptr[i];
+    }
+    (indptr, indices)
+}
+
+/// The split sampler behind [`Graph::random_split`] and the sharded
+/// dataset builders: one shuffle of all ids, then sorted train/val/test
+/// slices. The RNG consumption must stay byte-stable — shard replay
+/// depends on drawing the exact same stream.
+pub fn split_ids(
+    n: usize,
+    train_frac: f64,
+    val_frac: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let mut ids: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut ids);
+    let n_train = (n as f64 * train_frac).round() as usize;
+    let n_val = (n as f64 * val_frac).round() as usize;
+    let mut train = ids[..n_train].to_vec();
+    let mut val = ids[n_train..(n_train + n_val).min(n)].to_vec();
+    let mut test = ids[(n_train + n_val).min(n)..].to_vec();
+    train.sort_unstable();
+    val.sort_unstable();
+    test.sort_unstable();
+    (train, val, test)
+}
+
 /// An undirected graph in CSR adjacency form with node features, labels,
 /// and train/val/test splits (sorted node-id lists).
 #[derive(Clone, Debug)]
@@ -66,30 +178,15 @@ impl Graph {
         self.features.cols
     }
 
+    pub fn adj(&self) -> Adj<'_> {
+        Adj { n: self.n, indptr: &self.indptr, indices: &self.indices }
+    }
+
     /// Build CSR adjacency from an undirected edge list (u, v), u != v.
     /// Deduplicates and symmetrizes.
     pub fn from_edges(n: usize, edges: &[(u32, u32)], features: Mat, labels: Labels) -> Graph {
         assert_eq!(features.rows, n);
-        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * 2);
-        for &(u, v) in edges {
-            debug_assert!((u as usize) < n && (v as usize) < n);
-            if u == v {
-                continue;
-            }
-            pairs.push((u, v));
-            pairs.push((v, u));
-        }
-        pairs.sort_unstable();
-        pairs.dedup();
-        let mut indptr = vec![0usize; n + 1];
-        let mut indices = Vec::with_capacity(pairs.len());
-        for &(u, v) in &pairs {
-            indptr[u as usize + 1] += 1;
-            indices.push(v);
-        }
-        for i in 0..n {
-            indptr[i + 1] += indptr[i];
-        }
+        let (indptr, indices) = csr_from_edges(n, edges);
         Graph {
             n,
             indptr,
@@ -140,16 +237,10 @@ impl Graph {
 
     /// Random train/val/test split with the given fractions.
     pub fn random_split(&mut self, train_frac: f64, val_frac: f64, rng: &mut crate::util::rng::Rng) {
-        let mut ids: Vec<u32> = (0..self.n as u32).collect();
-        rng.shuffle(&mut ids);
-        let n_train = (self.n as f64 * train_frac).round() as usize;
-        let n_val = (self.n as f64 * val_frac).round() as usize;
-        self.train_mask = ids[..n_train].to_vec();
-        self.val_mask = ids[n_train..(n_train + n_val).min(self.n)].to_vec();
-        self.test_mask = ids[(n_train + n_val).min(self.n)..].to_vec();
-        self.train_mask.sort_unstable();
-        self.val_mask.sort_unstable();
-        self.test_mask.sort_unstable();
+        let (train, val, test) = split_ids(self.n, train_frac, val_frac, rng);
+        self.train_mask = train;
+        self.val_mask = val;
+        self.test_mask = test;
     }
 
     /// Sanity invariants (used by tests and after IO round-trips).
@@ -257,6 +348,29 @@ mod tests {
             g.train_mask.iter().chain(&g.val_mask).chain(&g.test_mask).cloned().collect();
         all.sort_unstable();
         assert_eq!(all, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn topology_matches_graph_adjacency() {
+        let edges = [(0u32, 1u32), (1, 0), (0, 1), (1, 2), (3, 3)];
+        let feats = Mat::zeros(4, 1);
+        let labels = Labels::Single { labels: vec![0; 4], n_classes: 1 };
+        let g = Graph::from_edges(4, &edges, feats, labels);
+        let t = Topology::from_edges(4, &edges);
+        assert_eq!(t.indptr, g.indptr);
+        assert_eq!(t.indices, g.indices);
+        assert_eq!(t.adj().neighbors(1), g.adj().neighbors(1));
+        assert_eq!(t.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn split_ids_matches_random_split() {
+        let mut g = triangle();
+        g.random_split(0.34, 0.33, &mut Rng::new(4));
+        let (tr, va, te) = split_ids(3, 0.34, 0.33, &mut Rng::new(4));
+        assert_eq!(tr, g.train_mask);
+        assert_eq!(va, g.val_mask);
+        assert_eq!(te, g.test_mask);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! | `yelp-sim`    | Yelp             | 716K / ~20 / 300 / 4×512, 100 multi   | 3K / ~12 / 64 / 4×64, 12 multi |
 //! | `papers-sim`  | ogbn-papers100M  | 111M / ~29 / 128 / 3×48, 172 cls      | 12K / ~16 / 64 / 3×48, 24 cls |
 //! | `tiny`        | (tests/quickstart)| —                                     | 512 / ~10 / 32 / 2×32, 8 cls |
+//! | `reddit-1m`   | Reddit (scale run)| 233K / ~490 / 602 / 4×256, 41 cls    | 1M / ~10 / 32 / 2×32, 16 cls |
+//! | `papers-10m`  | ogbn-papers100M  | 111M / ~29 / 128 / 3×48, 172 cls      | 10M / ~7.5 / 32 / 2×32, 32 cls |
+//!
+//! The `reddit-1m`/`papers-10m` presets are the **scale trajectory**:
+//! paper-scale node counts at trimmed degree/width so they train on a
+//! laptop-class mesh through the sharded build path (`build_topology` +
+//! `build_shard`) without any rank materializing the full graph.
 //!
 //! The *relative* quantities that drive PipeGCN's behaviour — boundary
 //! fraction after partitioning, bytes per boundary node per layer, number
@@ -16,8 +23,8 @@
 //! per-device compute with the preset's `sim_scale` so comm:compute
 //! ratios land near the paper's Table 2 (see `sim::profiles`).
 
-use super::generate::{sbm_dataset, SbmConfig};
-use super::Graph;
+use super::generate::{sbm_dataset, sbm_shard, sbm_topology, SbmConfig, Shard};
+use super::{Graph, Topology};
 use crate::util::rng::Rng;
 
 /// The mirrored dataset's true scale (paper Table 3) — used by
@@ -78,7 +85,7 @@ pub struct Preset {
     pub test_shift: f32,
 }
 
-pub const PRESETS: [Preset; 5] = [
+pub const PRESETS: [Preset; 7] = [
     Preset {
         name: "tiny",
         mirrors: "(tests)",
@@ -194,6 +201,52 @@ pub const PRESETS: [Preset; 5] = [
         gateway_frac: 0.15,
         test_shift: 0.0,
     },
+    Preset {
+        name: "reddit-1m",
+        mirrors: "Reddit (scale run)",
+        n: 1_000_000,
+        communities: 2048,
+        intra_degree: 8.0,
+        inter_degree: 2.0,
+        feat_dim: 32,
+        n_classes: 16,
+        multilabel: false,
+        feature_noise: 1.0,
+        layers: 2,
+        hidden: 32,
+        lr: 0.01,
+        dropout: 0.0,
+        epochs: 10,
+        min_parts: 4,
+        sim_scale: 1.0,
+        full: FullScale { n: 1_000_000.0, nnz: 10_000_000.0, feat: 32, hidden: 32, classes: 16 },
+        inter_span: 4,
+        gateway_frac: 0.15,
+        test_shift: 0.0,
+    },
+    Preset {
+        name: "papers-10m",
+        mirrors: "ogbn-papers100M (scale run)",
+        n: 10_000_000,
+        communities: 8192,
+        intra_degree: 6.0,
+        inter_degree: 1.5,
+        feat_dim: 32,
+        n_classes: 32,
+        multilabel: false,
+        feature_noise: 1.2,
+        layers: 2,
+        hidden: 32,
+        lr: 0.01,
+        dropout: 0.0,
+        epochs: 5,
+        min_parts: 8,
+        sim_scale: 1.0,
+        full: FullScale { n: 10_000_000.0, nnz: 75_000_000.0, feat: 32, hidden: 32, classes: 32 },
+        inter_span: 4,
+        gateway_frac: 0.15,
+        test_shift: 0.0,
+    },
 ];
 
 pub fn by_name(name: &str) -> Option<&'static Preset> {
@@ -205,37 +258,89 @@ pub fn names() -> Vec<&'static str> {
 }
 
 impl Preset {
-    /// Instantiate the dataset (deterministic in `seed`).
-    pub fn build(&self, seed: u64) -> Graph {
-        let mut rng = Rng::new(seed ^ 0xDA7A5E7);
-        let cfg = SbmConfig {
-            n: self.n,
-            communities: self.communities,
-            intra_degree: self.intra_degree,
-            inter_degree: self.inter_degree,
-            inter_span: self.inter_span,
-            gateway_frac: self.gateway_frac,
-        };
-        let mut g = sbm_dataset(&cfg, self.feat_dim, self.n_classes, self.multilabel, self.feature_noise, &mut rng);
-        self.apply_test_shift(&mut g, &mut rng);
-        g
-    }
-
-    /// Instantiate at a different node count (scaling studies) keeping
-    /// density and label structure.
-    pub fn build_scaled(&self, n: usize, seed: u64) -> Graph {
-        let mut rng = Rng::new(seed ^ 0xDA7A5E7 ^ (n as u64).rotate_left(17));
-        let cfg = SbmConfig {
+    /// SBM parameters at node count `n` (degree-aware: expected degrees
+    /// stay fixed as `n` scales, like real-graph density).
+    fn sbm_config(&self, n: usize) -> SbmConfig {
+        SbmConfig {
             n,
             communities: self.communities,
             intra_degree: self.intra_degree,
             inter_degree: self.inter_degree,
             inter_span: self.inter_span,
             gateway_frac: self.gateway_frac,
-        };
-        let mut g = sbm_dataset(&cfg, self.feat_dim, self.n_classes, self.multilabel, self.feature_noise, &mut rng);
+        }
+    }
+
+    /// RNG for the build at node count `n`: `n == self.n` is the
+    /// canonical stream (`build`), any other `n` is the scaled stream
+    /// (`build_scaled`). Shard and topology builds replay these exact
+    /// streams, so the seeding must never diverge between paths.
+    fn build_rng(&self, n: usize, seed: u64) -> Rng {
+        if n == self.n {
+            Rng::new(seed ^ 0xDA7A5E7)
+        } else {
+            Rng::new(seed ^ 0xDA7A5E7 ^ (n as u64).rotate_left(17))
+        }
+    }
+
+    /// Instantiate the dataset (deterministic in `seed`).
+    pub fn build(&self, seed: u64) -> Graph {
+        self.build_scaled(self.n, seed)
+    }
+
+    /// Instantiate at a different node count (scaling studies) keeping
+    /// density and label structure.
+    pub fn build_scaled(&self, n: usize, seed: u64) -> Graph {
+        let mut rng = self.build_rng(n, seed);
+        let cfg = self.sbm_config(n);
+        let mut g = sbm_dataset(
+            &cfg,
+            self.feat_dim,
+            self.n_classes,
+            self.multilabel,
+            self.feature_noise,
+            &mut rng,
+        );
         self.apply_test_shift(&mut g, &mut rng);
         g
+    }
+
+    /// Adjacency-only build: the structure [`Preset::build`] would
+    /// produce, without features/labels/splits. This is what every rank
+    /// of the scale path holds — enough for partitioning, global
+    /// degrees, and halo assembly at a fraction of full-graph memory.
+    pub fn build_topology(&self, seed: u64) -> Topology {
+        self.build_topology_scaled(self.n, seed)
+    }
+
+    /// [`Preset::build_topology`] at node count `n`.
+    pub fn build_topology_scaled(&self, n: usize, seed: u64) -> Topology {
+        let mut rng = self.build_rng(n, seed);
+        sbm_topology(&self.sbm_config(n), &mut rng)
+    }
+
+    /// One partition's shard of the dataset [`Preset::build`] would
+    /// produce (features/labels/masks for owned nodes only) —
+    /// bit-identical to the matching slice of the monolithic build,
+    /// regardless of which rank builds it.
+    pub fn build_shard(&self, seed: u64, assign: &[u32], part: u32) -> Shard {
+        self.build_shard_scaled(self.n, seed, assign, part)
+    }
+
+    /// [`Preset::build_shard`] at node count `n`.
+    pub fn build_shard_scaled(&self, n: usize, seed: u64, assign: &[u32], part: u32) -> Shard {
+        let mut rng = self.build_rng(n, seed);
+        sbm_shard(
+            &self.sbm_config(n),
+            self.feat_dim,
+            self.n_classes,
+            self.multilabel,
+            self.feature_noise,
+            self.test_shift,
+            &mut rng,
+            assign,
+            part,
+        )
     }
 }
 
@@ -295,5 +400,25 @@ mod tests {
         let b = p.build(7);
         assert_eq!(a.indices, b.indices);
         assert_eq!(a.features, b.features);
+    }
+
+    #[test]
+    fn topology_and_shards_match_monolithic_build() {
+        // products-sim exercises the test_shift replay path
+        let p = by_name("products-sim").unwrap();
+        let n = 480;
+        let g = p.build_scaled(n, 3);
+        let t = p.build_topology_scaled(n, 3);
+        assert_eq!(t.indptr, g.indptr);
+        assert_eq!(t.indices, g.indices);
+        let assign: Vec<u32> = (0..n as u32).map(|v| v % 2).collect();
+        for part in 0..2u32 {
+            let sh = p.build_shard_scaled(n, 3, &assign, part);
+            assert_eq!(sh.n, n);
+            for (r, &v) in sh.owned.iter().enumerate() {
+                assert_eq!(sh.features.row(r), g.features.row(v as usize), "node {v}");
+            }
+            assert_eq!(sh.total_train, g.train_mask.len());
+        }
     }
 }

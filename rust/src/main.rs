@@ -86,6 +86,10 @@ fn print_help() {
          \x20            (spawns K worker processes training over real localhost TCP sockets;\n\
          \x20             with --ckpt-dir a worker death relaunches the mesh from the latest\n\
          \x20             complete checkpoint, up to --max-restarts times)\n\
+         \x20            train/launch/worker also take [--nodes N] (rebuild the preset at N\n\
+         \x20             nodes; under launch each rank lazily builds only its own shard —\n\
+         \x20             no process holds the full graph) and\n\
+         \x20            [--partitioner multilevel|simple|range|bfs] (default multilevel)\n\
          \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
          \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
          \x20            [--bind HOST:PORT] [--connect-timeout SECS] [--connect-retries N]\n\
@@ -96,17 +100,24 @@ fn print_help() {
          \x20            [--out params.pgp]  (distill a training checkpoint into a\n\
          \x20             standalone serving artifact: model shape + weights only)\n\
          \x20 serve      --params params.pgp --dataset <preset> [--seed S] [--bind HOST:PORT]\n\
-         \x20            [--addr-file F] [--max-conns N] [--threads N]\n\
-         \x20            (feature→logit inference over the frame protocol; logits are\n\
-         \x20             bit-identical to the full-graph forward)\n\
+         \x20            [--addr-file F] [--max-conns N] [--threads N] [--nodes N]\n\
+         \x20            [--shard I/K]  (feature→logit inference over the frame protocol;\n\
+         \x20             logits are bit-identical to the full-graph forward. --shard loads\n\
+         \x20             only partition I's owned nodes + L-hop closure and answers for\n\
+         \x20             owned nodes only — still bit-identical)\n\
          \x20 query      --addr HOST:PORT --nodes 0,1,2 [--repeat N] [--report lat.ndjson]\n\
          \x20            (one batched query per repeat; prints p50/p99 latency and QPS)\n\
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
+         \x20            [--nodes N]  (--nodes partitions the scaled topology only —\n\
+         \x20             no features/labels materialized)\n\
          \x20 sim        --dataset <preset> --parts K --method <m> [--nodes-x-gpus AxB]\n\
          \x20 bench      [--smoke] [--threads 1,2,4] [--out BENCH_kernels.json]\n\
          \x20            [--preset <name>] [--parts K] [--epochs N]\n\
          \x20            (kernel + end-to-end epoch + serve-latency sweep, NDJSON rows)\n\
+         \x20 bench --scale  [--preset reddit-1m] [--parts 4] [--epochs 2] [--smoke]\n\
+         \x20            [--out BENCH_scale.json]  (per-rank lazy-build trajectory at\n\
+         \x20             n = 100K and 1M: build_ms, epoch_ms, peak_rss_bytes, comm_bytes)\n\
          \x20 presets\n\
          train/launch/worker/sim/bench/serve accept --threads N (kernel worker\n\
          threads; default: PIPEGCN_THREADS or the available parallelism)\n\
@@ -128,6 +139,14 @@ fn session_from_flags<'a>(args: &Args, dataset: &str, method: &str) -> Result<Se
         .gamma(args.get_f32("gamma", 0.95));
     if args.has("threads") {
         s = s.threads(args.get_usize("threads", 0));
+    }
+    // scale path: rebuild the preset at --nodes (Tcp engine workers then
+    // materialize only their own shard) and/or pick the partitioner
+    if args.has("nodes") {
+        s = s.scale(args.get_usize("nodes", 0));
+    }
+    if let Some(p) = args.get_opt("partitioner") {
+        s = s.partitioner(p);
     }
     match args.get_opt("ckpt-dir") {
         Some(dir) => {
@@ -162,7 +181,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.assert_known(&[
         "dataset", "parts", "method", "epochs", "gamma", "seed", "probe-errors", "out",
         "eval-every", "log", "ckpt-dir", "ckpt-every", "resume", "threads", "trace",
-        "metrics-addr",
+        "metrics-addr", "nodes", "partitioner",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
@@ -238,7 +257,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     args.assert_known(&[
         "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
         "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
-        "trace", "metrics-addr",
+        "trace", "metrics-addr", "nodes", "partitioner",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let method = args.get_str("method", "pipegcn");
@@ -278,7 +297,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
     args.assert_known(&[
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
         "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads", "bind",
-        "connect-timeout", "connect-retries", "trace", "metrics-addr",
+        "connect-timeout", "connect-retries", "trace", "metrics-addr", "nodes",
+        "partitioner",
     ])?;
     let coord = args
         .get_opt("coord")
@@ -351,7 +371,7 @@ fn cmd_export_params(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.assert_known(&[
         "params", "dataset", "seed", "bind", "addr-file", "max-conns", "threads",
-        "metrics-addr",
+        "metrics-addr", "nodes", "shard",
     ])?;
     apply_threads_flag(args)?;
     // live Prometheus endpoint (per-query latency histogram, active
@@ -365,6 +385,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
+    // --shard I/K: serve only partition I's owned nodes, loading just
+    // their L-hop closure instead of the full graph
+    let shard = match args.get_opt("shard") {
+        Some(spec) => {
+            let (i, k) = spec
+                .split_once('/')
+                .ok_or_else(|| pipegcn::err_msg!("--shard expects I/K (e.g. 0/4)"))?;
+            Some((i.trim().parse::<usize>()?, k.trim().parse::<usize>()?))
+        }
+        None => None,
+    };
     let opts = pipegcn::serve::ServeOpts {
         params_path: args
             .get_opt("params")
@@ -373,15 +404,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dataset: args.get_str("dataset", "tiny"),
         seed: args.get_u64("seed", 1),
         bind: args.get_str("bind", "127.0.0.1:0"),
+        nodes: args.get_opt("nodes").map(|_| args.get_usize("nodes", 0)),
+        shard,
     };
     let server = pipegcn::serve::Server::bind(&opts)?;
     let ctx = server.ctx();
+    let scope_note = match &ctx.scope {
+        Some(s) => format!(
+            ", shard {}/{}: {} owned, {} in closure",
+            s.part,
+            s.parts,
+            s.owned.len(),
+            s.closure.len()
+        ),
+        None => String::new(),
+    };
     println!(
-        "serving {} on {} ({} nodes, feat {}, {} classes)",
+        "serving {} on {} ({} nodes, feat {}, {} classes{scope_note})",
         opts.dataset,
         server.addr(),
-        ctx.graph.n,
-        ctx.graph.feat_dim(),
+        ctx.n,
+        ctx.feat_dim,
         ctx.n_classes,
     );
     if let Some(path) = args.get_opt("addr-file") {
@@ -468,20 +511,35 @@ fn cmd_query(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs"])?;
+    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs", "scale"])?;
     let smoke = args.get_bool("smoke", false);
+    let scale = args.get_bool("scale", false);
     let opts = pipegcn::perf::BenchOpts {
-        out: args.get_str("out", "BENCH_kernels.json"),
+        out: args.get_str("out", if scale { "BENCH_scale.json" } else { "BENCH_kernels.json" }),
         threads: args.get_usize_list("threads", &[1, 2, 4]),
         smoke,
-        preset: args.get_str("preset", if smoke { "tiny" } else { "reddit-sim" }),
-        parts: args.get_usize("parts", if smoke { 2 } else { 4 }),
-        epochs: args.get_usize("epochs", if smoke { 2 } else { 3 }),
+        preset: args.get_str(
+            "preset",
+            if scale {
+                "reddit-1m"
+            } else if smoke {
+                "tiny"
+            } else {
+                "reddit-sim"
+            },
+        ),
+        parts: args.get_usize("parts", if smoke && !scale { 2 } else { 4 }),
+        epochs: args.get_usize("epochs", if scale || smoke { 2 } else { 3 }),
+        scale,
     };
     if opts.threads.iter().any(|&t| t == 0) {
         pipegcn::bail!("--threads entries must be at least 1");
     }
-    pipegcn::perf::run_bench(&opts)
+    if opts.scale {
+        pipegcn::perf::run_scale_bench(&opts)
+    } else {
+        pipegcn::perf::run_bench(&opts)
+    }
 }
 
 fn cmd_gen_graph(args: &Args) -> Result<()> {
@@ -508,7 +566,7 @@ fn cmd_gen_graph(args: &Args) -> Result<()> {
 }
 
 fn cmd_partition(args: &Args) -> Result<()> {
-    args.assert_known(&["dataset", "parts", "algo", "seed"])?;
+    args.assert_known(&["dataset", "parts", "algo", "seed", "nodes"])?;
     let dataset = args.get_str("dataset", "tiny");
     let parts = args.get_usize("parts", 2);
     let algo = args.get_str("algo", "multilevel");
@@ -516,9 +574,20 @@ fn cmd_partition(args: &Args) -> Result<()> {
     let method = Method::parse(&algo).ok_or_else(|| pipegcn::err_msg!("bad --algo '{algo}'"))?;
     let preset = presets::by_name(&dataset)
         .ok_or_else(|| pipegcn::err_msg!("unknown preset '{dataset}'"))?;
-    let g = preset.build(seed);
-    let pt = partition(&g, parts, method, seed);
-    let q = quality(&g, &pt);
+    let q = match args.get_opt("nodes") {
+        // topology-only path: partition a scaled build without ever
+        // materializing features or labels
+        Some(_) => {
+            let topo = preset.build_topology_scaled(args.get_usize("nodes", preset.n), seed);
+            let pt = pipegcn::partition::partition_adj(topo.adj(), parts, method, seed);
+            pipegcn::partition::quality_adj(topo.adj(), &pt)
+        }
+        None => {
+            let g = preset.build(seed);
+            let pt = partition(&g, parts, method, seed);
+            quality(&g, &pt)
+        }
+    };
     println!(
         "{dataset} × {parts} parts via {algo}: edge-cut {} | comm volume {} | replication {:.3} | balance {:.3}",
         q.edge_cut, q.comm_volume, q.replication_factor, q.balance

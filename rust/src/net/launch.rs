@@ -26,6 +26,11 @@ pub struct LaunchOpts {
     pub parts: usize,
     pub dataset: String,
     pub method: String,
+    /// node-count override (0 = preset default); non-zero switches the
+    /// workers to per-rank lazy shard construction
+    pub nodes: usize,
+    /// partitioner name forwarded to the workers (None = multilevel)
+    pub partitioner: Option<String>,
     /// 0 = preset default
     pub epochs: usize,
     pub seed: u64,
@@ -131,6 +136,12 @@ fn spawn_workers(
             .arg(opts.seed.to_string())
             .arg("--gamma")
             .arg(opts.gamma.to_string());
+        if opts.nodes > 0 {
+            cmd.arg("--nodes").arg(opts.nodes.to_string());
+        }
+        if let Some(p) = &opts.partitioner {
+            cmd.arg("--partitioner").arg(p);
+        }
         if let Some(n) = threads {
             cmd.arg("--threads").arg(n.to_string());
         }

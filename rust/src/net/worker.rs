@@ -1,11 +1,14 @@
 //! One rank of a multi-process training run (`pipegcn worker`).
 //!
-//! Every worker deterministically rebuilds the same dataset, partition,
-//! and halo plan from the shared seed (synthetic datasets make the graph
-//! a pure function of its preset — no input files to ship), joins the
-//! TCP mesh through the rendezvous, and runs
+//! Every worker deterministically rebuilds the same partition from the
+//! shared seed (synthetic datasets make the graph a pure function of its
+//! preset — no input files to ship) but assembles only **its own**
+//! partition plan, joins the TCP mesh through the rendezvous, and runs
 //! [`crate::coordinator::threaded::run_rank_ctl`] over its
-//! [`super::TcpTransport`]. Every epoch's partial losses flow to rank 0
+//! [`super::TcpTransport`]. With `--nodes N` the worker takes the scale
+//! path: it builds the feature-free topology, partitions it, and
+//! generates just its shard's features/labels — no rank ever
+//! materializes the full graph. Every epoch's partial losses flow to rank 0
 //! inside the schedule (the per-epoch loss reduction), so rank 0 holds
 //! the live global loss, streams NDJSON run-log rows as epochs finish,
 //! evaluates the final model, and owns all reporting.
@@ -26,6 +29,8 @@ use crate::ckpt;
 use crate::coordinator::threaded::{self, RankCtl};
 use crate::coordinator::{evaluate, halo, TrainState};
 use crate::exp::{self, RunOpts};
+use crate::graph::Graph;
+use crate::partition::Method;
 use crate::util::error::{Context, Result};
 use crate::util::json::{FileEmitter, Json};
 use std::time::Duration;
@@ -38,6 +43,12 @@ pub struct WorkerOpts {
     pub coord: String,
     pub dataset: String,
     pub method: String,
+    /// node-count override (0 = preset default). Non-zero switches to
+    /// per-rank lazy construction: this rank materializes only the
+    /// feature-free topology plus its own shard — never a full `Graph`.
+    pub nodes: usize,
+    /// partitioner name (`--partitioner`; None = multilevel)
+    pub partitioner: Option<String>,
     /// 0 = preset default
     pub epochs: usize,
     pub seed: u64,
@@ -98,14 +109,52 @@ pub struct WorkerSummary {
 /// Run one rank end to end. Returns `Some(summary)` on rank 0, `None`
 /// elsewhere.
 pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
-    let run_opts = RunOpts { epochs: o.epochs, seed: o.seed, gamma: o.gamma, ..Default::default() };
+    let pmethod = match o.partitioner.as_deref() {
+        None => Method::Multilevel,
+        Some(name) => Method::parse(name).ok_or_else(|| {
+            crate::err_msg!("unknown partitioner '{name}' (try: multilevel, simple, range, bfs)")
+        })?,
+    };
+    let run_opts = RunOpts {
+        epochs: o.epochs,
+        seed: o.seed,
+        gamma: o.gamma,
+        partitioner: pmethod,
+        nodes: o.nodes,
+        ..Default::default()
+    };
     // validates preset/method up front: a bad flag is a diagnostic here,
     // not a panic deep inside the dataset build
-    let (_preset, graph, parts, cfg) = exp::try_prepare(&o.dataset, o.parts, &o.method, run_opts)?;
-    let plan = halo::build(&graph, &parts, cfg.model.kind);
-    // every rank derives the same partition, so rank 0 can report its
-    // quality without any extra coordination
-    let quality = crate::partition::quality(&graph, &parts);
+    let (preset, cfg) = exp::try_config(&o.dataset, o.parts, &o.method, run_opts)?;
+
+    // Build only this rank's partition plan. Every rank derives the same
+    // partition from the shared seed, so rank 0 can report its quality
+    // without extra coordination. Two modes:
+    //  * default: rebuild the full dataset (rank 0 needs it for the
+    //    final evaluation) but assemble just our own plan entry;
+    //  * `--nodes N` (scale): no rank ever holds a full `Graph` — build
+    //    the feature-free topology, partition it, generate this rank's
+    //    shard directly, and drop both before training starts.
+    let (graph, part, total_train, quality): (Option<Graph>, _, _, _) = if o.nodes == 0 {
+        let g = preset.build(o.seed);
+        let pt = crate::partition::partition(&g, o.parts, pmethod, o.seed);
+        let quality = crate::partition::quality(&g, &pt);
+        let src = halo::NodeSource::Graph(&g);
+        let part = halo::build_part(g.adj(), &pt.assign, o.parts, o.rank, cfg.model.kind, &src);
+        let total_train = g.train_mask.len();
+        (Some(g), part, total_train, quality)
+    } else {
+        let topo = preset.build_topology_scaled(o.nodes, o.seed);
+        let pt = crate::partition::partition_adj(topo.adj(), o.parts, pmethod, o.seed);
+        let quality = crate::partition::quality_adj(topo.adj(), &pt);
+        let shard = preset.build_shard_scaled(o.nodes, o.seed, &pt.assign, o.rank as u32);
+        let total_train = shard.total_train;
+        let src = halo::NodeSource::Shard(&shard);
+        let part =
+            halo::build_part(topo.adj(), &pt.assign, o.parts, o.rank, cfg.model.kind, &src);
+        (None, part, total_train, quality)
+    };
+    let view = halo::PartView { n_parts: o.parts, total_train, part: &part };
 
     // live metrics endpoint: up before the mesh forms, so a scrape can
     // watch the whole run (held until the end of this function)
@@ -123,13 +172,13 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     // worker scans the same directory tree, so all ranks agree on the
     // resume epoch without extra coordination.
     let mut st = match &o.resume {
-        None => TrainState::init(&cfg, &plan.parts[o.rank]),
+        None => TrainState::init(&cfg, &part),
         Some(dir) => {
             let epoch = ckpt::latest_complete(dir, o.parts)?.with_context(|| {
                 format!("--resume {dir}: no complete checkpoint for {} ranks", o.parts)
             })?;
             let snap = ckpt::load(dir, epoch, o.rank)?;
-            TrainState::from_snapshot(snap, &cfg, &plan.parts[o.rank])?
+            TrainState::from_snapshot(snap, &cfg, &part)?
         }
     };
     let start_epoch = st.epoch;
@@ -182,7 +231,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         log: log_em.as_mut(),
         kill_after_epoch: o.fail_epoch,
     };
-    let rep = threaded::run_rank_ctl(&transport, &plan, o.rank, &cfg, &mut st, ctl)?;
+    let rep = threaded::run_rank_ctl(&transport, &view, &cfg, &mut st, ctl)?;
 
     if o.rank != 0 {
         if o.trace.is_some() {
@@ -198,8 +247,13 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     }
 
     // rank 0 already holds the global per-epoch losses (the per-epoch
-    // reduction replaced the old post-hoc gather)
-    let (final_val, final_test) = evaluate(&graph, &st.params, cfg.model.kind);
+    // reduction replaced the old post-hoc gather). Full-graph evaluation
+    // needs the materialized graph — on the scale path no rank has one,
+    // so the metrics stay NaN (rendered as null in the report).
+    let (final_val, final_test) = match &graph {
+        Some(g) => evaluate(g, &st.params, cfg.model.kind),
+        None => (f64::NAN, f64::NAN),
+    };
     let summary = WorkerSummary {
         losses: rep.losses,
         start_epoch,
@@ -218,12 +272,16 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         for (key, ms) in &rep.comm_wait_by {
             breakdown = breakdown.set(key, *ms);
         }
-        Json::obj()
+        let mut row = Json::obj()
             .set("dataset", o.dataset.as_str())
             .set("parts", o.parts)
             .set("method", o.method.as_str())
             .set("engine", "tcp")
-            .set("epochs", cfg.epochs)
+            .set("epochs", cfg.epochs);
+        if o.nodes > 0 {
+            row = row.set("nodes", o.nodes);
+        }
+        row
             .set("start_epoch", summary.start_epoch)
             .set("final_loss", *summary.losses.last().unwrap_or(&f64::NAN))
             .set("losses", &summary.losses[..])

@@ -9,7 +9,7 @@
 pub mod multilevel;
 pub mod simple;
 
-use crate::graph::Graph;
+use crate::graph::{Adj, Graph};
 
 /// A k-way node assignment.
 #[derive(Clone, Debug, PartialEq)]
@@ -95,38 +95,85 @@ impl Quality {
     }
 }
 
-/// Compute quality metrics of `p` on `g`.
-pub fn quality(g: &Graph, p: &Partitioning) -> Quality {
-    assert_eq!(p.assign.len(), g.n);
-    let mut edge_cut = 0usize;
-    let mut comm_volume = 0usize;
-    let mut seen = vec![u32::MAX; p.n_parts];
-    for v in 0..g.n {
-        let pv = p.assign[v];
-        let mut distinct = 0usize;
-        for &u in g.neighbors(v) {
-            let pu = p.assign[u as usize];
+/// Incremental [`Quality`] accumulator: feed each node exactly once (any
+/// order, e.g. one rank's nodes at a time on the scale path) with its
+/// part and its neighbors' parts, then [`QualityAccum::finish`]. O(parts)
+/// scratch, no materialized `Graph` required.
+pub struct QualityAccum {
+    n_parts: usize,
+    n: usize,
+    edge_cut: usize,
+    comm_volume: usize,
+    /// per-part marker of the last node that touched it (dedup scratch)
+    seen: Vec<u32>,
+    sizes: Vec<usize>,
+}
+
+impl QualityAccum {
+    pub fn new(n_parts: usize) -> QualityAccum {
+        QualityAccum {
+            n_parts,
+            n: 0,
+            edge_cut: 0,
+            comm_volume: 0,
+            seen: vec![u32::MAX; n_parts],
+            sizes: vec![0; n_parts],
+        }
+    }
+
+    /// Account node `v` (in part `pv`) given its neighbor list as
+    /// `(neighbor id, neighbor part)` pairs. Each undirected edge is seen
+    /// from both endpoints across the full visit sequence; the cut is
+    /// counted on the `v < u` side only.
+    pub fn visit(&mut self, v: usize, pv: u32, neighbors: impl Iterator<Item = (u32, u32)>) {
+        self.n += 1;
+        self.sizes[pv as usize] += 1;
+        for (u, pu) in neighbors {
             if pu != pv {
                 if v < u as usize {
-                    edge_cut += 1;
+                    self.edge_cut += 1;
                 }
-                if seen[pu as usize] != v as u32 {
-                    seen[pu as usize] = v as u32;
-                    distinct += 1;
+                if self.seen[pu as usize] != v as u32 {
+                    self.seen[pu as usize] = v as u32;
+                    self.comm_volume += 1;
                 }
             }
         }
-        comm_volume += distinct;
     }
-    let sizes = p.part_sizes();
-    let max = *sizes.iter().max().unwrap_or(&0) as f64;
-    let avg = g.n as f64 / p.n_parts as f64;
-    Quality {
-        edge_cut,
-        comm_volume,
-        replication_factor: (g.n + comm_volume) as f64 / g.n as f64,
-        balance: if avg > 0.0 { max / avg } else { 0.0 },
+
+    pub fn finish(&self) -> Quality {
+        let max = *self.sizes.iter().max().unwrap_or(&0) as f64;
+        let avg = self.n as f64 / self.n_parts as f64;
+        Quality {
+            edge_cut: self.edge_cut,
+            comm_volume: self.comm_volume,
+            replication_factor: if self.n > 0 {
+                (self.n + self.comm_volume) as f64 / self.n as f64
+            } else {
+                0.0
+            },
+            balance: if avg > 0.0 { max / avg } else { 0.0 },
+        }
     }
+}
+
+/// Compute quality metrics of `p` over adjacency structure alone.
+pub fn quality_adj(adj: Adj<'_>, p: &Partitioning) -> Quality {
+    assert_eq!(p.assign.len(), adj.n);
+    let mut acc = QualityAccum::new(p.n_parts);
+    for v in 0..adj.n {
+        acc.visit(
+            v,
+            p.assign[v],
+            adj.neighbors(v).iter().map(|&u| (u, p.assign[u as usize])),
+        );
+    }
+    acc.finish()
+}
+
+/// Compute quality metrics of `p` on `g`.
+pub fn quality(g: &Graph, p: &Partitioning) -> Quality {
+    quality_adj(g.adj(), p)
 }
 
 /// Method selector used by the CLI and benches.
@@ -142,7 +189,8 @@ impl Method {
     pub fn parse(s: &str) -> Option<Method> {
         match s {
             "multilevel" | "metis" => Some(Method::Multilevel),
-            "hash" => Some(Method::Hash),
+            // "simple" is the escape hatch from the multilevel default
+            "hash" | "simple" => Some(Method::Hash),
             "range" => Some(Method::Range),
             "bfs" => Some(Method::Bfs),
             _ => None,
@@ -150,15 +198,22 @@ impl Method {
     }
 }
 
+/// Partition adjacency structure into `k` parts with the chosen method
+/// (deterministic in `seed`) — the scale-path entry point: a feature-free
+/// [`crate::graph::Topology`] is enough.
+pub fn partition_adj(adj: Adj<'_>, k: usize, method: Method, seed: u64) -> Partitioning {
+    match method {
+        Method::Multilevel => multilevel::partition_adj(adj, k, seed),
+        Method::Hash => simple::hash_partition(adj.n, k),
+        Method::Range => simple::range_partition(adj.n, k),
+        Method::Bfs => simple::bfs_partition_adj(adj, k, seed),
+    }
+}
+
 /// Partition `g` into `k` parts with the chosen method (deterministic in
 /// `seed`).
 pub fn partition(g: &Graph, k: usize, method: Method, seed: u64) -> Partitioning {
-    match method {
-        Method::Multilevel => multilevel::partition(g, k, seed),
-        Method::Hash => simple::hash_partition(g.n, k),
-        Method::Range => simple::range_partition(g.n, k),
-        Method::Bfs => simple::bfs_partition(g, k, seed),
-    }
+    partition_adj(g.adj(), k, method, seed)
 }
 
 #[cfg(test)]

@@ -16,7 +16,7 @@
 //! these graphs; `partition::quality` reports both.
 
 use super::Partitioning;
-use crate::graph::Graph;
+use crate::graph::{Adj, Graph};
 use crate::util::rng::Rng;
 
 /// Internal weighted graph (CSR) used across coarsening levels.
@@ -29,13 +29,13 @@ struct WGraph {
 }
 
 impl WGraph {
-    fn from_graph(g: &Graph) -> WGraph {
+    fn from_adj(adj: Adj<'_>) -> WGraph {
         WGraph {
-            n: g.n,
-            indptr: g.indptr.clone(),
-            indices: g.indices.clone(),
-            ewgt: vec![1; g.indices.len()],
-            vwgt: vec![1; g.n],
+            n: adj.n,
+            indptr: adj.indptr.to_vec(),
+            indices: adj.indices.to_vec(),
+            ewgt: vec![1; adj.indices.len()],
+            vwgt: vec![1; adj.n],
         }
     }
 
@@ -250,12 +250,21 @@ fn refine(g: &WGraph, assign: &mut [u32], k: usize, passes: usize, rng: &mut Rng
 
 /// Multilevel k-way partition of `g` (deterministic in `seed`).
 pub fn partition(g: &Graph, k: usize, seed: u64) -> Partitioning {
+    partition_adj(g.adj(), k, seed)
+}
+
+/// [`partition`] over adjacency structure alone — the quality/scale
+/// workhorse: a feature-free [`crate::graph::Topology`] view is all the
+/// coarsening pipeline ever reads, so the scale path partitions without
+/// materializing a `Graph`. Bit-identical to `partition` on the same
+/// structure and seed.
+pub fn partition_adj(adj: Adj<'_>, k: usize, seed: u64) -> Partitioning {
     assert!(k >= 1);
     let mut rng = Rng::new(seed ^ 0x9A37171);
     if k == 1 {
-        return Partitioning::new(1, vec![0; g.n]);
+        return Partitioning::new(1, vec![0; adj.n]);
     }
-    let mut levels: Vec<WGraph> = vec![WGraph::from_graph(g)];
+    let mut levels: Vec<WGraph> = vec![WGraph::from_adj(adj)];
     let mut cmaps: Vec<Vec<u32>> = Vec::new();
     // coarsen until small or stalled
     let target = (k * 24).max(128);

@@ -1,7 +1,7 @@
 //! Baseline partitioners: hash, contiguous range, and BFS region growing.
 
 use super::Partitioning;
-use crate::graph::Graph;
+use crate::graph::{Adj, Graph};
 use crate::util::rng::Rng;
 
 /// `assign[v] = v mod k` — the "no locality" strawman.
@@ -28,6 +28,11 @@ pub fn range_partition(n: usize, k: usize) -> Partitioning {
 /// Balanced multi-source BFS growing: k random seeds expand in lockstep,
 /// each capped at ⌈n/k⌉ nodes; leftovers (disconnected) round-robin.
 pub fn bfs_partition(g: &Graph, k: usize, seed: u64) -> Partitioning {
+    bfs_partition_adj(g.adj(), k, seed)
+}
+
+/// [`bfs_partition`] over adjacency structure alone.
+pub fn bfs_partition_adj(g: Adj<'_>, k: usize, seed: u64) -> Partitioning {
     let n = g.n;
     let mut rng = Rng::new(seed ^ 0xBF5);
     let cap = n.div_ceil(k);

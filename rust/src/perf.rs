@@ -34,6 +34,8 @@ pub struct BenchOpts {
     pub preset: String,
     pub parts: usize,
     pub epochs: usize,
+    /// run the BENCH_scale trajectory instead of the kernel sweep
+    pub scale: bool,
 }
 
 /// Time `f` for `iters` iterations (after one warmup), emit the NDJSON
@@ -307,6 +309,89 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+/// `pipegcn bench --scale` — the BENCH_scale trajectory. Per point
+/// `n`, time the lean per-rank build in-process (topology → partition →
+/// rank 0's shard → rank 0's halo plan: the exact sequence every worker
+/// of a scaled mesh runs), then train a short real-TCP mesh with
+/// per-rank lazy construction (`Session::scale`) and record wall-clock
+/// per epoch plus rank 0's peak RSS and wire bytes from its report.
+/// One NDJSON row per point:
+/// `{preset, n, parts, build_ms, epoch_ms, peak_rss_bytes, comm_bytes}`.
+/// `epoch_ms` includes the mesh's own rendezvous + build amortized over
+/// the epochs — it tracks the end-to-end trajectory, not kernel time.
+pub fn run_scale_bench(o: &BenchOpts) -> Result<()> {
+    let preset = crate::graph::presets::by_name(&o.preset)
+        .ok_or_else(|| crate::err_msg!("unknown preset '{}'", o.preset))?;
+    if o.parts == 0 {
+        crate::bail!("--parts must be at least 1");
+    }
+    let points: &[usize] = if o.smoke { &[100_000] } else { &[100_000, 1_000_000] };
+    let mut em = FileEmitter::create(
+        &o.out,
+        Json::obj()
+            .set("bench", "pipegcn-scale")
+            .set("preset", o.preset.as_str())
+            .set("parts", o.parts)
+            .set("smoke", o.smoke),
+    )
+    .with_context(|| format!("creating {}", o.out))?;
+    let epochs = o.epochs.max(1);
+    let cfg = crate::model::ModelConfig::from_preset(preset);
+    for &n in points {
+        let w = Stopwatch::start();
+        let build_ms;
+        {
+            let topo = preset.build_topology_scaled(n, 1);
+            let pt = crate::partition::partition_adj(
+                topo.adj(),
+                o.parts,
+                crate::partition::Method::Multilevel,
+                1,
+            );
+            let shard = preset.build_shard_scaled(n, 1, &pt.assign, 0);
+            let src = crate::coordinator::halo::NodeSource::Shard(&shard);
+            let _plan = crate::coordinator::halo::build_part(
+                topo.adj(),
+                &pt.assign,
+                o.parts,
+                0,
+                cfg.kind,
+                &src,
+            );
+            build_ms = w.elapsed_secs() * 1e3;
+        }
+        let w = Stopwatch::start();
+        let report = Session::preset(&o.preset)
+            .parts(o.parts)
+            .variant("pipegcn")
+            .epochs(epochs)
+            .scale(n)
+            .engine(Engine::Tcp { max_restarts: 0 })
+            .run()?;
+        let epoch_ms = w.elapsed_secs() * 1e3 / epochs as f64;
+        em.emit(
+            &Json::obj()
+                .set("preset", o.preset.as_str())
+                .set("n", n)
+                .set("parts", o.parts)
+                .set("build_ms", build_ms)
+                .set("epoch_ms", epoch_ms)
+                .set("peak_rss_bytes", report.peak_rss_bytes)
+                .set("comm_bytes", report.wire_bytes),
+        )
+        .context("writing scale bench row")?;
+        println!(
+            "scale: {} n={n} parts={} build {build_ms:.0}ms epoch {epoch_ms:.0}ms \
+             peak_rss {}MiB",
+            o.preset,
+            o.parts,
+            report.peak_rss_bytes >> 20,
+        );
+    }
+    println!("scale bench: {} rows -> {}", em.rows(), o.out);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,7 +418,25 @@ mod tests {
             preset: "tiny".into(),
             parts: 2,
             epochs: 1,
+            scale: false,
         };
         assert!(run_bench(&o).is_err());
+    }
+
+    #[test]
+    fn scale_bench_rejects_bad_inputs() {
+        let mut o = BenchOpts {
+            out: "/tmp/pipegcn_bench_scale_bad.ndjson".into(),
+            threads: vec![1],
+            smoke: true,
+            preset: "no-such-preset".into(),
+            parts: 4,
+            epochs: 1,
+            scale: true,
+        };
+        assert!(run_scale_bench(&o).is_err());
+        o.preset = "tiny".into();
+        o.parts = 0;
+        assert!(run_scale_bench(&o).is_err());
     }
 }

@@ -36,9 +36,11 @@
 
 use crate::comm::{Phase, Tag};
 use crate::coordinator::forward_registered;
-use crate::graph::{presets, Graph};
+use crate::graph::presets::{self, Preset};
+use crate::graph::Graph;
 use crate::model::{artifact, LayerKind, ModelConfig, Params};
 use crate::net::frame::{self, Frame};
+use crate::partition::Method;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
 use crate::tensor::{Csr, Mat};
@@ -58,18 +60,47 @@ pub struct ServeOpts {
     pub seed: u64,
     /// listen address (`127.0.0.1:0` picks an ephemeral port)
     pub bind: String,
+    /// rebuild the preset at this node count (None = preset default)
+    pub nodes: Option<usize>,
+    /// serve only partition `I` of `K` (`--shard I/K`): load just the
+    /// artifact's required subgraph — owned nodes plus their L-hop
+    /// closure — instead of materializing the full graph
+    pub shard: Option<(usize, usize)>,
 }
 
 /// Everything a query needs, shared read-only across connections. The
 /// propagation matrix is built **once** here — per-query work is just
 /// the forward kernels, not an O(edges) matrix rebuild.
 pub struct ServeCtx {
-    pub graph: Graph,
-    /// normalized propagation matrix for `kind`, prebuilt from `graph`
+    /// global node-id space (queries address nodes by global id)
+    pub n: usize,
+    pub feat_dim: usize,
+    /// feature rows the forward runs over: all `n` nodes, or just the
+    /// scope's closure rows (row i = `scope.closure[i]`'s features)
+    pub features: Mat,
+    /// normalized propagation matrix for `kind` (full-graph, or
+    /// restricted to the closure with **global** degree weights)
     pub prop: Csr,
     pub params: Params,
     pub kind: LayerKind,
     pub n_classes: usize,
+    /// `Some` when serving one partition's subgraph only
+    pub scope: Option<ServeScope>,
+}
+
+/// The subgraph a sharded server loaded: partition `part` of `parts`.
+/// Only `owned` nodes are answerable — their logits are bit-identical to
+/// the full-graph forward because the closure covers every node whose
+/// value can reach them within `n_layers` propagation steps, and the
+/// restricted propagation matrix keeps the full graph's degree weights.
+pub struct ServeScope {
+    pub part: usize,
+    pub parts: usize,
+    /// global ids this shard answers for, ascending
+    pub owned: Vec<u32>,
+    /// global ids of the L-hop closure, ascending — the row space of
+    /// `features` and `prop`
+    pub closure: Vec<u32>,
 }
 
 /// A bound (not yet accepting) inference server.
@@ -84,15 +115,32 @@ fn io_err(msg: String) -> std::io::Error {
 }
 
 impl Server {
-    /// Load the artifact, rebuild the preset graph, validate that the
-    /// model fits it, and bind the listener.
+    /// Load the artifact, rebuild the preset graph (or, with
+    /// `shard = Some((part, parts))`, only the artifact's required
+    /// subgraph — `part`'s owned nodes plus their L-hop closure),
+    /// validate that the model fits it, and bind the listener.
     pub fn bind(o: &ServeOpts) -> Result<Server> {
         let pf = artifact::load(&o.params_path)?;
         let preset = presets::by_name(&o.dataset).ok_or_else(|| {
             crate::err_msg!("unknown preset '{}' (try: {:?})", o.dataset, presets::names())
         })?;
-        let graph = preset.build(o.seed);
-        Server::from_parts_on(graph, pf.config, pf.params, &o.bind)
+        match o.shard {
+            None => {
+                let graph = match o.nodes {
+                    Some(n) => preset.build_scaled(n, o.seed),
+                    None => preset.build(o.seed),
+                };
+                Server::from_parts_on(graph, pf.config, pf.params, &o.bind)
+            }
+            Some((part, parts)) => {
+                if parts == 0 || part >= parts {
+                    crate::bail!("--shard {part}/{parts}: part must be < parts");
+                }
+                let n = o.nodes.unwrap_or(preset.n);
+                let ctx = scoped_ctx(preset, n, o.seed, part, parts, pf.config, pf.params)?;
+                Server::from_ctx(ctx, &o.bind)
+            }
+        }
     }
 
     /// Stand up a server from in-memory parts (tests, benches, library
@@ -122,18 +170,28 @@ impl Server {
                 graph.labels.n_classes()
             );
         }
-        let listener =
-            TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
-        let addr = listener.local_addr()?.to_string();
         let prop = match config.kind {
             LayerKind::Gcn => graph.propagation_matrix(),
             LayerKind::SageMean => graph.mean_propagation_matrix(),
         };
-        Ok(Server {
-            listener,
-            ctx: Arc::new(ServeCtx { graph, prop, params, kind: config.kind, n_classes }),
-            addr,
-        })
+        let ctx = ServeCtx {
+            n: graph.n,
+            feat_dim: graph.feat_dim(),
+            features: graph.features,
+            prop,
+            params,
+            kind: config.kind,
+            n_classes,
+            scope: None,
+        };
+        Server::from_ctx(ctx, bind)
+    }
+
+    /// Bind a listener around an already-assembled context.
+    fn from_ctx(ctx: ServeCtx, bind: &str) -> Result<Server> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?.to_string();
+        Ok(Server { listener, ctx: Arc::new(ctx), addr })
     }
 
     /// The bound address (`host:port`).
@@ -183,6 +241,111 @@ impl Server {
     }
 }
 
+/// Build a sharded serving context: partition the topology, take
+/// partition `part`'s owned nodes plus their `n_layers`-hop closure,
+/// materialize features for the closure only (one replay of the
+/// deterministic shard builder), and restrict the propagation matrix to
+/// closure×closure while keeping **full-graph** degree weights. Owned
+/// logits stay bit-identical to the full-graph forward: after layer `l`
+/// the values on the closure's `(L-l)`-hop interior match the full run
+/// (boundary rows drop out-of-closure terms, but no owned node ever
+/// reads one within `L` steps), and the restricted matrix is a monotone
+/// renumbering of the full matrix's closure rows, so per-row summation
+/// order in the SpMM is unchanged.
+fn scoped_ctx(
+    preset: &Preset,
+    n: usize,
+    seed: u64,
+    part: usize,
+    parts: usize,
+    config: ModelConfig,
+    params: Params,
+) -> Result<ServeCtx> {
+    let topo = preset.build_topology_scaled(n, seed);
+    let adj = topo.adj();
+    let pt = crate::partition::partition_adj(adj, parts, Method::Multilevel, seed);
+    let owned: Vec<u32> = (0..n as u32).filter(|&v| pt.assign[v as usize] == part as u32).collect();
+    // L-hop ball around the owned set: every node a forward of
+    // `n_layers` propagation steps can read from
+    let mut in_closure = vec![false; n];
+    for &v in &owned {
+        in_closure[v as usize] = true;
+    }
+    let mut frontier: Vec<u32> = owned.clone();
+    for _ in 0..config.n_layers() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for &u in adj.neighbors(v as usize) {
+                if !in_closure[u as usize] {
+                    in_closure[u as usize] = true;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+    }
+    let closure: Vec<u32> = (0..n as u32).filter(|&v| in_closure[v as usize]).collect();
+    // features for exactly the closure: replay the generator with an
+    // indicator assignment under which "partition 0" owns the closure
+    let indicator: Vec<u32> = in_closure.iter().map(|&k| if k { 0 } else { 1 }).collect();
+    let shard = preset.build_shard_scaled(n, seed, &indicator, 0);
+    debug_assert_eq!(shard.owned, closure);
+    if config.dims[0] != shard.feat_dim() {
+        crate::bail!(
+            "params expect feature dim {} but the graph has {} — wrong dataset or seed?",
+            config.dims[0],
+            shard.feat_dim()
+        );
+    }
+    let n_classes = *config.dims.last().unwrap();
+    if n_classes != shard.labels.n_classes() {
+        crate::bail!(
+            "params produce {} classes but the graph has {} — wrong dataset or seed?",
+            n_classes,
+            shard.labels.n_classes()
+        );
+    }
+    let local = |u: u32| closure.binary_search(&u).unwrap() as u32;
+    let m = closure.len();
+    let mut trip = Vec::new();
+    match config.kind {
+        LayerKind::Gcn => {
+            for (i, &v) in closure.iter().enumerate() {
+                let dv = (adj.degree(v as usize) + 1) as f32;
+                trip.push((i as u32, i as u32, 1.0 / dv));
+                for &u in adj.neighbors(v as usize) {
+                    if in_closure[u as usize] {
+                        let du = (adj.degree(u as usize) + 1) as f32;
+                        trip.push((i as u32, local(u), 1.0 / (dv.sqrt() * du.sqrt())));
+                    }
+                }
+            }
+        }
+        LayerKind::SageMean => {
+            for (i, &v) in closure.iter().enumerate() {
+                let inv = 1.0 / (adj.degree(v as usize) + 1) as f32;
+                trip.push((i as u32, i as u32, inv));
+                for &u in adj.neighbors(v as usize) {
+                    if in_closure[u as usize] {
+                        trip.push((i as u32, local(u), inv));
+                    }
+                }
+            }
+        }
+    }
+    let prop = Csr::from_triplets(m, m, trip);
+    Ok(ServeCtx {
+        n,
+        feat_dim: shard.feat_dim(),
+        features: shard.features,
+        prop,
+        params,
+        kind: config.kind,
+        n_classes,
+        scope: Some(ServeScope { part, parts, owned, closure }),
+    })
+}
+
 /// Serve one client connection: loop over query frames until shutdown.
 /// The propagation matrix is registered with the connection's backend
 /// exactly once — queries pay only for the forward kernels.
@@ -204,14 +367,17 @@ fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
     let _guard = ConnGuard(active);
     let mut backend = NativeBackend::new();
     let prop_id = backend.register_prop(&ctx.prop);
+    // feature-override scratch: cloned lazily on this connection's first
+    // override query, then patched/restored row-wise per query
+    let mut scratch: Option<Mat> = None;
     loop {
         match frame::read_frame(&mut stream)? {
             None | Some(Frame::Shutdown { .. }) => return Ok(()),
             Some(Frame::Hello { .. }) => {}
             Some(Frame::Data { tag, payload, .. }) => {
                 let watch = crate::util::timer::Stopwatch::start();
-                let logits =
-                    answer(ctx, &mut backend, prop_id, &payload).map_err(io_err)?;
+                let logits = answer(ctx, &mut backend, prop_id, &mut scratch, &payload)
+                    .map_err(io_err)?;
                 frame::write_frame(
                     &mut stream,
                     &Frame::Data { src: 0, dst: 1, tag, payload: logits },
@@ -234,6 +400,7 @@ fn answer(
     ctx: &ServeCtx,
     backend: &mut dyn Backend,
     prop_id: usize,
+    scratch: &mut Option<Mat>,
     payload: &[f32],
 ) -> std::result::Result<Vec<f32>, String> {
     if payload.is_empty() {
@@ -247,18 +414,30 @@ fn answer(
         return Err(format!("query claims {n} ids but carries {}", payload.len() - 1));
     }
     let ids: Vec<u32> = payload[1..1 + n].iter().map(|v| v.to_bits()).collect();
+    // map global ids to feature/logit rows (identity when unscoped)
+    let mut rows = Vec::with_capacity(ids.len());
     for &id in &ids {
-        if id as usize >= ctx.graph.n {
-            return Err(format!(
-                "node id {id} out of range (graph has {} nodes)",
-                ctx.graph.n
-            ));
+        if id as usize >= ctx.n {
+            return Err(format!("node id {id} out of range (graph has {} nodes)", ctx.n));
         }
+        let row = match &ctx.scope {
+            None => id as usize,
+            Some(s) => {
+                if s.owned.binary_search(&id).is_err() {
+                    return Err(format!(
+                        "node id {id} is not owned by shard {}/{} — query the rank that owns it",
+                        s.part, s.parts
+                    ));
+                }
+                s.closure.binary_search(&id).unwrap()
+            }
+        };
+        rows.push(row);
     }
     let feats = &payload[1 + n..];
-    let fd = ctx.graph.feat_dim();
+    let fd = ctx.feat_dim;
     let logits = if feats.is_empty() {
-        forward_registered(prop_id, &ctx.params, backend, &ctx.graph.features)
+        forward_registered(prop_id, &ctx.params, backend, &ctx.features)
     } else {
         if feats.len() != n * fd {
             return Err(format!(
@@ -266,15 +445,22 @@ fn answer(
                 feats.len()
             ));
         }
-        let mut features = ctx.graph.features.clone();
-        for (i, &id) in ids.iter().enumerate() {
-            features.set_row(id as usize, &feats[i * fd..(i + 1) * fd]);
+        // patch the connection's scratch copy row-wise instead of
+        // cloning the whole feature matrix per query
+        let features = scratch.get_or_insert_with(|| ctx.features.clone());
+        for (i, &r) in rows.iter().enumerate() {
+            features.set_row(r, &feats[i * fd..(i + 1) * fd]);
         }
-        forward_registered(prop_id, &ctx.params, backend, &features)
+        let out = forward_registered(prop_id, &ctx.params, backend, features);
+        // restore the stored rows so later queries see clean features
+        for &r in &rows {
+            features.set_row(r, ctx.features.row(r));
+        }
+        out
     };
     let mut out = Vec::with_capacity(n * ctx.n_classes);
-    for &id in &ids {
-        out.extend_from_slice(logits.row(id as usize));
+    for &r in &rows {
+        out.extend_from_slice(logits.row(r));
     }
     Ok(out)
 }
@@ -382,15 +568,19 @@ mod tests {
         let n = g.n;
         let prop = g.mean_propagation_matrix();
         let ctx = ServeCtx {
-            graph: g,
+            n: g.n,
+            feat_dim: g.feat_dim(),
+            features: g.features,
             prop,
             params,
             kind: cfg.kind,
             n_classes: *cfg.dims.last().unwrap(),
+            scope: None,
         };
         let mut backend = NativeBackend::new();
         let pid = backend.register_prop(&ctx.prop);
-        let mut ask = |payload: &[f32]| answer(&ctx, &mut backend, pid, payload);
+        let mut scratch: Option<Mat> = None;
+        let mut ask = |payload: &[f32]| answer(&ctx, &mut backend, pid, &mut scratch, payload);
         assert!(ask(&[]).is_err());
         assert!(ask(&[f32::from_bits(0)]).is_err());
         // claims 3 ids, carries 1
@@ -402,5 +592,69 @@ mod tests {
         // a valid query still works on the same connection state
         let ok = ask(&[f32::from_bits(1), f32::from_bits(0)]).unwrap();
         assert_eq!(ok.len(), ctx.n_classes);
+    }
+
+    #[test]
+    fn override_scratch_restores_stored_features() {
+        let (g, cfg, params) = tiny_ctx();
+        let prop = g.mean_propagation_matrix();
+        let fd = g.feat_dim();
+        let ctx = ServeCtx {
+            n: g.n,
+            feat_dim: fd,
+            features: g.features,
+            prop,
+            params,
+            kind: cfg.kind,
+            n_classes: *cfg.dims.last().unwrap(),
+            scope: None,
+        };
+        let mut backend = NativeBackend::new();
+        let pid = backend.register_prop(&ctx.prop);
+        let mut scratch: Option<Mat> = None;
+        let plain = [f32::from_bits(1), f32::from_bits(0)];
+        let base = answer(&ctx, &mut backend, pid, &mut scratch, &plain).unwrap();
+        // an override query mutates the scratch copy…
+        let mut over: Vec<f32> = plain.to_vec();
+        over.extend(vec![2.5f32; fd]);
+        let changed = answer(&ctx, &mut backend, pid, &mut scratch, &over).unwrap();
+        assert_ne!(base, changed, "override should change node 0's logits");
+        // …but restores it, so the next plain forward over the scratch
+        // state would match the stored features bit-for-bit
+        assert_eq!(scratch.as_ref().unwrap().data, ctx.features.data);
+        let again = answer(&ctx, &mut backend, pid, &mut scratch, &plain).unwrap();
+        assert_eq!(base, again);
+    }
+
+    #[test]
+    fn scoped_ctx_matches_full_graph_logits_bitwise() {
+        let p = presets::by_name("tiny").unwrap();
+        let (g, cfg, params) = tiny_ctx();
+        let prop = match cfg.kind {
+            LayerKind::Gcn => g.propagation_matrix(),
+            LayerKind::SageMean => g.mean_propagation_matrix(),
+        };
+        let mut backend = NativeBackend::new();
+        let pid = backend.register_prop(&prop);
+        let full = forward_registered(pid, &params, &mut backend, &g.features);
+        let parts = 3;
+        let mut seen = vec![false; g.n];
+        for part in 0..parts {
+            let ctx = scoped_ctx(p, p.n, 1, part, parts, cfg.clone(), params.clone()).unwrap();
+            let scope = ctx.scope.as_ref().unwrap();
+            assert_eq!(ctx.features.rows, scope.closure.len());
+            let mut be = NativeBackend::new();
+            let spid = be.register_prop(&ctx.prop);
+            let logits = forward_registered(spid, &params, &mut be, &ctx.features);
+            for &v in &scope.owned {
+                assert!(!seen[v as usize], "node {v} owned twice");
+                seen[v as usize] = true;
+                let row = scope.closure.binary_search(&v).unwrap();
+                let got: Vec<u32> = logits.row(row).iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = full.row(v as usize).iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want, "node {v} logits diverge from the full-graph forward");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every node must be owned by exactly one shard");
     }
 }

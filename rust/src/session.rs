@@ -45,7 +45,7 @@ use crate::graph::Graph;
 use crate::model::Params;
 use crate::net::launch::{self, LaunchOpts};
 use crate::net::worker::{self, WorkerOpts};
-use crate::partition::Partitioning;
+use crate::partition::{Method, Partitioning};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::pool;
 use crate::util::error::{Context, Result};
@@ -162,6 +162,8 @@ pub struct Session<'a> {
     source: Source,
     parts: usize,
     method: Option<String>,
+    scale: Option<usize>,
+    partitioner: Option<String>,
     epochs: Option<usize>,
     seed: Option<u64>,
     gamma: Option<f32>,
@@ -192,6 +194,8 @@ impl<'a> Session<'a> {
             source,
             parts: 2,
             method: None,
+            scale: None,
+            partitioner: None,
             epochs: None,
             seed: None,
             gamma: None,
@@ -239,6 +243,23 @@ impl<'a> Session<'a> {
     /// `pipegcn-gf` (default `pipegcn`).
     pub fn variant(mut self, method: &str) -> Self {
         self.method = Some(method.to_string());
+        self
+    }
+
+    /// Rebuild the preset at `n` nodes (degree-preserving scaled variant;
+    /// preset source only). On the `Tcp`/`TcpWorker` engines this also
+    /// switches workers to per-rank lazy construction: the launch ships a
+    /// partition spec, and each rank materializes only its own shard —
+    /// no process ever holds the full graph.
+    pub fn scale(mut self, n: usize) -> Self {
+        self.scale = Some(n);
+        self
+    }
+
+    /// Partitioner for `parts > 1`: `multilevel` (default), `simple`
+    /// (hash), `range`, or `bfs`. Preset source only.
+    pub fn partitioner(mut self, name: &str) -> Self {
+        self.partitioner = Some(name.to_string());
         self
     }
 
@@ -395,6 +416,8 @@ impl<'a> Session<'a> {
             source,
             parts,
             method,
+            scale,
+            partitioner,
             epochs,
             seed,
             gamma,
@@ -434,6 +457,22 @@ impl<'a> Session<'a> {
                 crate::bail!("checkpoint policy: every must be at least 1");
             }
         }
+        // scale/partitioner reshape how the preset is built — a Graph
+        // source already carries its graph and partitioning
+        if (scale.is_some() || partitioner.is_some()) && matches!(source, Source::Graph { .. }) {
+            crate::bail!(
+                "scale/partitioner rebuild the dataset from its preset; \
+                 use Session::preset(..)"
+            );
+        }
+        let partitioner_method = match partitioner.as_deref() {
+            None => Method::Multilevel,
+            Some(name) => Method::parse(name).ok_or_else(|| {
+                crate::err_msg!(
+                    "unknown partitioner '{name}' (try: multilevel, simple, range, bfs)"
+                )
+            })?,
+        };
         let method_name = method.as_deref().unwrap_or("pipegcn").to_string();
         let opts = RunOpts {
             epochs: epochs.unwrap_or(0),
@@ -441,6 +480,8 @@ impl<'a> Session<'a> {
             probe_errors,
             gamma: gamma.unwrap_or(0.95),
             eval_every: eval_every.unwrap_or(5),
+            partitioner: partitioner_method,
+            nodes: scale.unwrap_or(0),
         };
         // knobs only the sequential engine honors must not silently
         // change meaning on the others
@@ -655,6 +696,8 @@ impl<'a> Session<'a> {
                     parts,
                     dataset: dataset.clone(),
                     method: method_name,
+                    nodes: opts.nodes,
+                    partitioner,
                     epochs: opts.epochs,
                     seed: opts.seed,
                     gamma: opts.gamma,
@@ -748,6 +791,8 @@ impl<'a> Session<'a> {
                     coord,
                     dataset,
                     method: method_name,
+                    nodes: opts.nodes,
+                    partitioner,
                     epochs: opts.epochs,
                     seed: opts.seed,
                     gamma: opts.gamma,
@@ -844,6 +889,8 @@ mod tests {
         assert!(e.to_string().contains("pipegcn-gf"), "{e}");
         let e = Session::preset("nope").epochs(1).run().unwrap_err();
         assert!(e.to_string().contains("unknown preset"), "{e}");
+        let e = Session::preset("tiny").partitioner("nope").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("unknown partitioner"), "{e}");
         // mesh-side net knobs are worker-only — a silent no-op elsewhere
         // would hide a misconfigured multi-node launch
         let e = Session::preset("tiny").bind("10.0.0.5:0").epochs(1).run().unwrap_err();
@@ -860,10 +907,14 @@ mod tests {
             crate::graph::presets::by_name("tiny").unwrap(),
             Variant::Vanilla,
         );
-        let e = Session::graph(g, pt, cfg)
+        let e = Session::graph(g.clone(), pt.clone(), cfg.clone())
             .engine(Engine::Tcp { max_restarts: 0 })
             .run()
             .unwrap_err();
+        assert!(e.to_string().contains("preset"), "{e}");
+        // scale/partitioner rebuild from a preset — meaningless on a
+        // graph source that already carries its graph and partitioning
+        let e = Session::graph(g, pt, cfg).scale(1000).run().unwrap_err();
         assert!(e.to_string().contains("preset"), "{e}");
     }
 }

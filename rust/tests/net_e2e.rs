@@ -48,7 +48,7 @@ fn tcp_losses(parts: usize, variant: Variant, dropout: f32, epochs: usize) -> Ve
             let plan = plan.clone();
             let cfg = cfg.clone();
             std::thread::spawn(move || {
-                let (losses, _params) = threaded::run_rank(&transport, &plan, rank, &cfg);
+                let (losses, _params) = threaded::run_rank(&transport, &plan.view(rank), &cfg);
                 let sent = transport.payload_bytes_sent();
                 transport.shutdown();
                 (losses, sent)
@@ -118,7 +118,7 @@ fn tcp_transport_fifo_and_accounting_through_schedule() {
             let plan = plan.clone();
             let cfg = cfg.clone();
             std::thread::spawn(move || {
-                let _ = threaded::run_rank(&transport, &plan, rank, &cfg);
+                let _ = threaded::run_rank(&transport, &plan.view(rank), &cfg);
                 transport.shutdown();
                 (transport.pending(), transport.payload_bytes_sent())
             })

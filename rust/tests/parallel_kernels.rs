@@ -209,6 +209,7 @@ fn smoke_bench_writes_ndjson_rows() {
         preset: "tiny".into(),
         parts: 2,
         epochs: 2,
+        scale: false,
     };
     pipegcn::perf::run_bench(&o).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();
