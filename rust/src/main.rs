@@ -84,18 +84,29 @@ fn print_help() {
          \x20            [--gamma G] [--log run.ndjson] [--out results.json]\n\
          \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR] [--max-restarts N]\n\
          \x20            (spawns K worker processes training over real localhost TCP sockets;\n\
-         \x20             with --ckpt-dir a worker death relaunches the mesh from the latest\n\
-         \x20             complete checkpoint, up to --max-restarts times)\n\
+         \x20             with --ckpt-dir a worker death is healed in place: only the dead\n\
+         \x20             rank is respawned, survivors rejoin on the same address, and every\n\
+         \x20             rank rolls back to the latest complete checkpoint — up to\n\
+         \x20             --max-restarts recovery rounds, full relaunch as the fallback)\n\
+         \x20            [--chaos profile.json] (deterministic per-link latency/jitter/\n\
+         \x20             bandwidth/drop injection — see the net::chaos docs for the format)\n\
+         \x20            [--mesh-secret S] (HMAC-authenticated mesh formation; also read\n\
+         \x20             from PIPEGCN_MESH_SECRET, which keeps it off the process table)\n\
+         \x20            [--form-deadline SECS] [--recv-deadline SECS] (mesh-formation and\n\
+         \x20             parked-receive watchdogs; both name the culprit on timeout)\n\
          \x20            train/launch/worker also take [--nodes N] (rebuild the preset at N\n\
          \x20             nodes; under launch each rank lazily builds only its own shard —\n\
          \x20             no process holds the full graph) and\n\
          \x20            [--partitioner multilevel|simple|range|bfs] (default multilevel)\n\
          \x20 worker     --rank R --parts K --coord HOST:PORT [--dataset ...] (spawned by launch)\n\
-         \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR]\n\
+         \x20            [--ckpt-dir DIR] [--ckpt-every N] [--resume DIR] [--rejoin]\n\
          \x20            [--bind HOST:PORT] [--connect-timeout SECS] [--connect-retries N]\n\
+         \x20            [--chaos profile.json] [--mesh-secret S] [--form-deadline SECS]\n\
+         \x20            [--recv-deadline SECS]\n\
          \x20            (--bind puts the mesh listener on a routable interface for\n\
          \x20             multi-node runs — wildcards like 0.0.0.0 are rejected;\n\
-         \x20             connect flags tune the rendezvous dial for LAN latencies)\n\
+         \x20             connect flags tune the rendezvous dial for LAN latencies;\n\
+         \x20             --rejoin marks a replacement joining a live-rejoin round)\n\
          \x20 export-params  --from-ckpt DIR --dataset <preset> --parts K [--epoch N]\n\
          \x20            [--out params.pgp]  (distill a training checkpoint into a\n\
          \x20             standalone serving artifact: model shape + weights only)\n\
@@ -175,6 +186,30 @@ fn session_from_flags<'a>(args: &Args, dataset: &str, method: &str) -> Result<Se
         s = s.metrics_addr(addr);
     }
     Ok(s)
+}
+
+/// Hostile-network knobs shared by `launch` and `worker`: chaos
+/// injection, mesh auth (flag, or the `PIPEGCN_MESH_SECRET` env var the
+/// launcher hands its children so the secret stays off the process
+/// table), and the formation/receive deadlines.
+fn apply_net_flags<'a>(mut s: Session<'a>, args: &Args) -> Session<'a> {
+    if let Some(path) = args.get_opt("chaos") {
+        s = s.chaos(path);
+    }
+    let secret = match args.get_opt("mesh-secret") {
+        Some(secret) => Some(secret.to_string()),
+        None => std::env::var("PIPEGCN_MESH_SECRET").ok(),
+    };
+    if let Some(secret) = secret.filter(|s| !s.is_empty()) {
+        s = s.mesh_secret(&secret);
+    }
+    if args.has("form-deadline") {
+        s = s.form_deadline(args.get_u64("form-deadline", 60).max(1));
+    }
+    if args.has("recv-deadline") {
+        s = s.recv_deadline(args.get_u64("recv-deadline", 300).max(1));
+    }
+    s
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -257,20 +292,26 @@ fn cmd_launch(args: &Args) -> Result<()> {
     args.assert_known(&[
         "parts", "dataset", "method", "epochs", "seed", "gamma", "log", "out", "ckpt-dir",
         "ckpt-every", "resume", "max-restarts", "fail-rank", "fail-epoch", "threads",
-        "trace", "metrics-addr", "nodes", "partitioner",
+        "trace", "metrics-addr", "nodes", "partitioner", "chaos", "mesh-secret",
+        "form-deadline", "recv-deadline",
     ])?;
     let dataset = args.get_str("dataset", "tiny");
     let method = args.get_str("method", "pipegcn");
     let parts = args.get_usize("parts", 2);
     let mut session = session_from_flags(args, &dataset, &method)?
         .engine(Engine::Tcp { max_restarts: args.get_usize("max-restarts", 3) });
+    session = apply_net_flags(session, args);
     if let Some(path) = args.get_opt("out") {
         session = session.out(path);
     }
     match (args.has("fail-rank"), args.has("fail-epoch")) {
         (true, true) => {
-            session = session
-                .fail_epoch(args.get_usize("fail-rank", 0), args.get_usize("fail-epoch", 0));
+            // a comma list arms one spawn of the fail rank per entry:
+            // original first, then each replacement in turn
+            session = session.fail_epochs(
+                args.get_usize("fail-rank", 0),
+                args.get_usize_list("fail-epoch", &[]),
+            );
         }
         (false, false) => {}
         _ => pipegcn::bail!("--fail-rank and --fail-epoch (fault injection) go together"),
@@ -298,7 +339,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
         "rank", "parts", "coord", "dataset", "method", "epochs", "seed", "gamma", "log", "out",
         "ckpt-dir", "ckpt-every", "resume", "fail-epoch", "threads", "bind",
         "connect-timeout", "connect-retries", "trace", "metrics-addr", "nodes",
-        "partitioner",
+        "partitioner", "chaos", "mesh-secret", "form-deadline", "recv-deadline", "rejoin",
     ])?;
     let coord = args
         .get_opt("coord")
@@ -309,11 +350,15 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let method = args.get_str("method", "pipegcn");
     let mut session = session_from_flags(args, &dataset, &method)?
         .engine(Engine::TcpWorker { rank, coord });
+    session = apply_net_flags(session, args);
     if let Some(path) = args.get_opt("out") {
         session = session.out(path);
     }
     if args.has("fail-epoch") {
         session = session.fail_epoch(rank, args.get_usize("fail-epoch", 0));
+    }
+    if args.get_bool("rejoin", false) {
+        session = session.rejoin(true);
     }
     // multi-node reachability: routable mesh listener + rendezvous
     // dial tuning (defaults keep today's localhost behavior)

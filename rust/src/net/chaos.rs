@@ -1,0 +1,397 @@
+//! Deterministic per-link fault injection for the TCP mesh.
+//!
+//! A [`ChaosProfile`] (loaded from `--chaos profile.json`) describes,
+//! per directed link, injected latency, jitter, a bandwidth cap, and a
+//! frame-drop probability. The injector lives on the sender's per-peer
+//! writer thread and acts *before* each data frame is written: a
+//! "dropped" frame is withheld for one retransmission timeout (`rto_ms`)
+//! and then sent — exactly what a TCP sender does — so the receiver
+//! side exercises its real wait/deadline machinery rather than a
+//! simulation shortcut. Because each link has a single writer draining
+//! a FIFO, a delayed frame delays everything queued behind it, which is
+//! precisely TCP head-of-line blocking.
+//!
+//! Two invariants make chaos safe to run under the bit-identity
+//! oracles:
+//!
+//! * **Timing only.** Injection never reorders frames within a link and
+//!   never changes which payload a tag resolves to, so loss curves stay
+//!   bit-identical to an undisturbed run.
+//! * **Accounting untouched.** Every frame is written exactly once, so
+//!   payload/wire byte counters match the chaos-off run byte for byte.
+//!
+//! Injected faults are counted in the metrics registry as
+//! `pipegcn_link_faults_total{src,dst,kind}` with `kind` ∈
+//! {`drop`, `delay`}. The same fault vocabulary feeds the analytic
+//! model: `sim::profiles::apply_chaos` degrades a simulated link by the
+//! expected value of a [`LinkChaos`].
+//!
+//! Profile format (all fields optional; omitted numbers default to 0 /
+//! off; `links` entries override `default` field-by-field):
+//!
+//! ```json
+//! {
+//!   "seed": 7,
+//!   "recv_deadline_ms": 30000,
+//!   "default": {"latency_ms": 20, "jitter_ms": 5, "drop": 0.01,
+//!               "bandwidth_mbps": 200, "rto_ms": 50},
+//!   "links": [{"src": 0, "dst": 1, "latency_ms": 80}]
+//! }
+//! ```
+
+use crate::obs;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+/// Retransmission timeout applied to a "dropped" frame when the profile
+/// doesn't set `rto_ms`.
+const DEFAULT_RTO_MS: f64 = 50.0;
+
+/// Fault parameters for one directed link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkChaos {
+    /// Fixed delay added before every data frame, in ms.
+    pub latency_ms: f64,
+    /// Uniform extra delay in `[0, jitter_ms)` per frame.
+    pub jitter_ms: f64,
+    /// Per-frame drop probability in `[0, 1)`; each drop costs one RTO
+    /// before the retransmission goes out (drops can repeat).
+    pub drop: f64,
+    /// Bandwidth cap in megabits/s (0 = unlimited): each frame is held
+    /// for its serialization time at this rate.
+    pub bandwidth_mbps: f64,
+    /// Retransmission timeout charged per drop, in ms.
+    pub rto_ms: f64,
+}
+
+impl Default for LinkChaos {
+    fn default() -> Self {
+        LinkChaos { latency_ms: 0.0, jitter_ms: 0.0, drop: 0.0, bandwidth_mbps: 0.0, rto_ms: DEFAULT_RTO_MS }
+    }
+}
+
+impl LinkChaos {
+    /// True when this link injects nothing (the writer path can skip
+    /// the injector entirely).
+    pub fn is_noop(&self) -> bool {
+        self.latency_ms == 0.0 && self.jitter_ms == 0.0 && self.drop == 0.0 && self.bandwidth_mbps == 0.0
+    }
+
+    /// Expected added one-way latency in seconds (the analytic-model
+    /// view of this link: mean jitter plus the expected geometric run
+    /// of drop→RTO cycles).
+    pub fn expected_extra_latency_s(&self) -> f64 {
+        let drop_penalty_ms = if self.drop > 0.0 && self.drop < 1.0 {
+            self.drop / (1.0 - self.drop) * self.rto_ms
+        } else {
+            0.0
+        };
+        (self.latency_ms + self.jitter_ms / 2.0 + drop_penalty_ms) / 1e3
+    }
+
+    /// Bandwidth cap in bytes/s, if any.
+    pub fn bandwidth_bytes_per_s(&self) -> Option<f64> {
+        (self.bandwidth_mbps > 0.0).then(|| self.bandwidth_mbps * 1e6 / 8.0)
+    }
+}
+
+/// A parsed `--chaos` profile: a default link plus per-(src, dst)
+/// overrides, one RNG seed for the whole mesh.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosProfile {
+    pub seed: u64,
+    /// Optional receive-watchdog deadline to apply mesh-wide (the
+    /// `--recv-deadline` flag still wins over this).
+    pub recv_deadline_ms: Option<u64>,
+    pub default: LinkChaos,
+    links: Vec<(usize, usize, LinkChaos)>,
+}
+
+fn field(obj: &Json, key: &str, default: f64) -> std::result::Result<f64, String> {
+    match obj.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| format!("chaos profile: `{key}` must be a number")),
+    }
+}
+
+fn parse_link(obj: &Json, base: &LinkChaos) -> std::result::Result<LinkChaos, String> {
+    let c = LinkChaos {
+        latency_ms: field(obj, "latency_ms", base.latency_ms)?,
+        jitter_ms: field(obj, "jitter_ms", base.jitter_ms)?,
+        drop: field(obj, "drop", base.drop)?,
+        bandwidth_mbps: field(obj, "bandwidth_mbps", base.bandwidth_mbps)?,
+        rto_ms: field(obj, "rto_ms", base.rto_ms)?,
+    };
+    for (name, v) in [
+        ("latency_ms", c.latency_ms),
+        ("jitter_ms", c.jitter_ms),
+        ("bandwidth_mbps", c.bandwidth_mbps),
+        ("rto_ms", c.rto_ms),
+    ] {
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("chaos profile: `{name}` must be finite and >= 0, got {v}"));
+        }
+    }
+    if !(0.0..1.0).contains(&c.drop) {
+        return Err(format!("chaos profile: `drop` must be in [0, 1), got {}", c.drop));
+    }
+    Ok(c)
+}
+
+impl ChaosProfile {
+    /// Parse a profile from JSON text.
+    pub fn parse(text: &str) -> std::result::Result<ChaosProfile, String> {
+        let root = Json::parse(text)?;
+        if root.get("default").is_none() && root.get("links").is_none() {
+            return Err("chaos profile: expected a `default` link and/or a `links` array".into());
+        }
+        let seed = match root.get("seed") {
+            None => 0,
+            Some(v) => v.as_f64().ok_or("chaos profile: `seed` must be a number")? as u64,
+        };
+        let recv_deadline_ms = match root.get("recv_deadline_ms") {
+            None => None,
+            Some(v) => {
+                let ms = v.as_f64().ok_or("chaos profile: `recv_deadline_ms` must be a number")?;
+                if ms < 1.0 {
+                    return Err(format!("chaos profile: `recv_deadline_ms` must be >= 1, got {ms}"));
+                }
+                Some(ms as u64)
+            }
+        };
+        let default = match root.get("default") {
+            None => LinkChaos::default(),
+            Some(obj) => parse_link(obj, &LinkChaos::default())?,
+        };
+        let mut links = Vec::new();
+        if let Some(arr) = root.get("links") {
+            let arr = arr.as_arr().ok_or("chaos profile: `links` must be an array")?;
+            for entry in arr {
+                let src = entry
+                    .get("src")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("chaos profile: each link needs an integer `src`")?;
+                let dst = entry
+                    .get("dst")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("chaos profile: each link needs an integer `dst`")?;
+                links.push((src, dst, parse_link(entry, &default)?));
+            }
+        }
+        Ok(ChaosProfile { seed, recv_deadline_ms, default, links })
+    }
+
+    /// Load a profile from a file.
+    pub fn load(path: &str) -> Result<ChaosProfile> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading chaos profile {path}"))?;
+        ChaosProfile::parse(&text).with_context(|| format!("parsing chaos profile {path}"))
+    }
+
+    /// Fault parameters for the directed link `src -> dst`.
+    pub fn link(&self, src: usize, dst: usize) -> LinkChaos {
+        self.links
+            .iter()
+            .find(|(s, d, _)| *s == src && *d == dst)
+            .map(|(_, _, c)| *c)
+            .unwrap_or(self.default)
+    }
+
+    /// Build the writer-thread injector for `src -> dst`, or `None` if
+    /// the link injects nothing. Deterministic: the per-link RNG stream
+    /// depends only on `(seed, src, dst)`, never on creation order.
+    pub fn injector(&self, src: usize, dst: usize) -> Option<LinkInjector> {
+        let chaos = self.link(src, dst);
+        if chaos.is_noop() {
+            return None;
+        }
+        let rng = Rng::new(self.seed).fork(((src as u64) << 20) | dst as u64);
+        Some(LinkInjector::new(chaos, rng, src, dst))
+    }
+}
+
+/// Per-link fault injector, owned by one writer thread.
+pub struct LinkInjector {
+    chaos: LinkChaos,
+    rng: Rng,
+    drops: obs::Counter,
+    delays: obs::Counter,
+}
+
+impl LinkInjector {
+    fn new(chaos: LinkChaos, rng: Rng, src: usize, dst: usize) -> LinkInjector {
+        let reg = obs::global();
+        let s = src.to_string();
+        let d = dst.to_string();
+        LinkInjector {
+            chaos,
+            rng,
+            drops: reg.counter("link_faults_total", &[("src", &s), ("dst", &d), ("kind", "drop")]),
+            delays: reg.counter("link_faults_total", &[("src", &s), ("dst", &d), ("kind", "delay")]),
+        }
+    }
+
+    /// Decide this frame's fate without sleeping: the number of drops
+    /// it suffers and the total injected delay in ms. Split from
+    /// [`Self::before_frame`] so determinism is testable without wall
+    /// clock.
+    fn plan(&mut self, wire_bytes: usize) -> (u32, f64) {
+        let mut delay_ms = self.chaos.latency_ms + self.chaos.jitter_ms * self.rng.next_f64();
+        if let Some(bps) = self.chaos.bandwidth_bytes_per_s() {
+            delay_ms += wire_bytes as f64 / bps * 1e3;
+        }
+        let mut drops = 0u32;
+        while self.chaos.drop > 0.0 && self.rng.next_f64() < self.chaos.drop {
+            drops += 1;
+            delay_ms += self.chaos.rto_ms;
+        }
+        (drops, delay_ms)
+    }
+
+    /// Apply the link's faults to one outgoing data frame of
+    /// `wire_bytes` on-the-wire bytes. Called on the writer thread just
+    /// before the frame is written; sleeping here stalls the link's
+    /// whole FIFO behind this frame, like real head-of-line blocking.
+    pub fn before_frame(&mut self, wire_bytes: usize) {
+        let (drops, delay_ms) = self.plan(wire_bytes);
+        for _ in 0..drops {
+            self.drops.inc();
+        }
+        if delay_ms > 0.0 {
+            self.delays.inc();
+            std::thread::sleep(Duration::from_secs_f64(delay_ms / 1e3));
+        }
+    }
+}
+
+/// Total faults this process injected on its outgoing links (`src` is
+/// this rank), summed over destinations and fault kinds — read back from
+/// the metrics registry for the end-of-run report.
+pub fn faults_from(src: usize, n_ranks: usize) -> u64 {
+    let reg = obs::global();
+    let s = src.to_string();
+    let mut total = 0.0;
+    for dst in 0..n_ranks {
+        let d = dst.to_string();
+        for kind in ["drop", "delay"] {
+            total += reg
+                .value("link_faults_total", &[("src", &s), ("dst", &d), ("kind", kind)])
+                .unwrap_or(0.0);
+        }
+    }
+    total as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PROFILE: &str = r#"{
+        "seed": 7,
+        "recv_deadline_ms": 30000,
+        "default": {"latency_ms": 20, "jitter_ms": 5, "drop": 0.01, "rto_ms": 40},
+        "links": [
+            {"src": 0, "dst": 1, "latency_ms": 80, "bandwidth_mbps": 100},
+            {"src": 1, "dst": 0, "drop": 0}
+        ]
+    }"#;
+
+    #[test]
+    fn profile_parses_with_per_link_overrides() {
+        let p = ChaosProfile::parse(PROFILE).unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.recv_deadline_ms, Some(30000));
+        // the default link
+        let d = p.link(2, 3);
+        assert_eq!(d.latency_ms, 20.0);
+        assert_eq!(d.jitter_ms, 5.0);
+        assert_eq!(d.drop, 0.01);
+        assert_eq!(d.rto_ms, 40.0);
+        assert_eq!(d.bandwidth_mbps, 0.0);
+        // overrides replace only the named fields
+        let l01 = p.link(0, 1);
+        assert_eq!(l01.latency_ms, 80.0);
+        assert_eq!(l01.jitter_ms, 5.0);
+        assert_eq!(l01.bandwidth_mbps, 100.0);
+        let l10 = p.link(1, 0);
+        assert_eq!(l10.drop, 0.0);
+        assert_eq!(l10.latency_ms, 20.0);
+    }
+
+    #[test]
+    fn bad_profiles_are_rejected_with_a_field_name() {
+        let e = ChaosProfile::parse(r#"{"default": {"drop": 1.5}}"#).unwrap_err();
+        assert!(e.contains("drop"), "{e}");
+        let e = ChaosProfile::parse(r#"{"default": {"latency_ms": -1}}"#).unwrap_err();
+        assert!(e.contains("latency_ms"), "{e}");
+        let e = ChaosProfile::parse(r#"{"links": [{"dst": 1}]}"#).unwrap_err();
+        assert!(e.contains("src"), "{e}");
+        let e = ChaosProfile::parse(r#"{"epochs": 3}"#).unwrap_err();
+        assert!(e.contains("default"), "{e}");
+        assert!(ChaosProfile::parse("not json").is_err());
+    }
+
+    #[test]
+    fn noop_links_produce_no_injector() {
+        let p = ChaosProfile::parse(r#"{"links": [{"src": 0, "dst": 1, "latency_ms": 2}]}"#).unwrap();
+        assert!(p.injector(0, 1).is_some());
+        assert!(p.injector(1, 0).is_none(), "default link is a no-op here");
+        // rto alone doesn't make a link chaotic — only reachable via drop
+        assert!(ChaosProfile::parse(r#"{"default": {"rto_ms": 99}}"#).unwrap().injector(0, 1).is_none());
+    }
+
+    #[test]
+    fn injection_plan_is_deterministic_per_link() {
+        let p = ChaosProfile::parse(r#"{"seed": 3, "default": {"latency_ms": 1, "jitter_ms": 4, "drop": 0.3, "rto_ms": 10}}"#)
+            .unwrap();
+        let plan = |src, dst| {
+            let mut inj = p.injector(src, dst).unwrap();
+            (0..64).map(|i| inj.plan(100 * (i + 1))).collect::<Vec<_>>()
+        };
+        assert_eq!(plan(0, 1), plan(0, 1), "same link, same seed, same plan");
+        assert_ne!(plan(0, 1), plan(1, 0), "directed links draw independent streams");
+        let total_drops: u32 = plan(0, 1).iter().map(|(d, _)| d).sum();
+        assert!(total_drops > 0, "drop=0.3 over 64 frames should fire");
+        for (_, delay) in plan(0, 1) {
+            assert!((1.0..1.0 + 4.0 + 20.0 * 10.0).contains(&delay), "{delay}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_cap_charges_serialization_time() {
+        // 100 mbit/s = 12.5 MB/s: a 125 KB frame costs 10 ms on the wire
+        let p = ChaosProfile::parse(r#"{"default": {"bandwidth_mbps": 100}}"#).unwrap();
+        let mut inj = p.injector(0, 1).unwrap();
+        let (drops, delay) = inj.plan(125_000);
+        assert_eq!(drops, 0);
+        assert!((delay - 10.0).abs() < 1e-9, "{delay}");
+    }
+
+    #[test]
+    fn faults_from_sums_this_ranks_outgoing_counters() {
+        // ranks far outside any real mesh in this test binary, so the
+        // process-global registry can't be polluted by other tests
+        let p = ChaosProfile::parse(
+            r#"{"seed": 5, "default": {"latency_ms": 1, "drop": 0.5, "rto_ms": 1}}"#,
+        )
+        .unwrap();
+        let before = faults_from(41, 43);
+        let mut inj = p.injector(41, 42).unwrap();
+        for _ in 0..8 {
+            inj.before_frame(100);
+        }
+        assert!(
+            faults_from(41, 43) >= before + 8,
+            "every frame on this link injects at least a delay"
+        );
+    }
+
+    #[test]
+    fn expected_latency_mirrors_the_injector() {
+        let c = LinkChaos { latency_ms: 20.0, jitter_ms: 5.0, drop: 0.01, bandwidth_mbps: 0.0, rto_ms: 50.0 };
+        let want = (20.0 + 2.5 + 0.01 / 0.99 * 50.0) / 1e3;
+        assert!((c.expected_extra_latency_s() - want).abs() < 1e-12);
+        assert_eq!(LinkChaos::default().expected_extra_latency_s(), 0.0);
+    }
+}

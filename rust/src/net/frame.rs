@@ -13,6 +13,12 @@
 //! DataChunk (4): src u16, dst u16, iter u32, layer u16, phase u8,
 //!                last u8, payload: [f32 bits, LE]  — slice of an
 //!                oversized Data payload, reassembled on receive
+//! AuthChallenge (5): nonce [u8; 16]                — mesh-auth nonce,
+//!                sent in reply to a Hello when a secret is configured
+//! AuthResponse  (6): mac [u8; 32]                  — HMAC-SHA256 over
+//!                the challenge, proving knowledge of the mesh secret
+//! Resume    (7): epoch u64                         — rejoin-round
+//!                epilogue: the checkpoint epoch every rank restores
 //! ```
 //!
 //! Payload floats travel as raw bit patterns (`to_bits`/`from_bits`), so
@@ -42,6 +48,9 @@ const KIND_HELLO: u8 = 1;
 const KIND_PEER_TABLE: u8 = 2;
 const KIND_SHUTDOWN: u8 = 3;
 const KIND_DATA_CHUNK: u8 = 4;
+const KIND_AUTH_CHALLENGE: u8 = 5;
+const KIND_AUTH_RESPONSE: u8 = 6;
+const KIND_RESUME: u8 = 7;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -60,6 +69,17 @@ pub enum Frame {
     /// contiguous on their socket (the writer thread drains its queue in
     /// order), so reassembly needs no sequence numbers.
     DataChunk { src: u16, dst: u16, tag: Tag, last: bool, payload: Vec<f32> },
+    /// Mesh-auth challenge: the accepting side answers a `Hello` with a
+    /// fresh nonce when a shared secret is configured. Never sent on an
+    /// unauthenticated mesh, so default wire traffic is unchanged.
+    AuthChallenge { nonce: [u8; 16] },
+    /// Mesh-auth proof: HMAC-SHA256(secret, nonce ‖ rank ‖ addr) from
+    /// the `Hello` this responds to.
+    AuthResponse { mac: [u8; 32] },
+    /// Epilogue of a live-rejoin rendezvous round: every participant —
+    /// survivor or replacement — restores from this checkpoint epoch
+    /// before training resumes. Absent on a first-formation round.
+    Resume { epoch: u64 },
 }
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
@@ -162,6 +182,18 @@ pub fn encode_body(f: &Frame) -> Vec<u8> {
                 put_u32(&mut out, v.to_bits());
             }
         }
+        Frame::AuthChallenge { nonce } => {
+            out.push(KIND_AUTH_CHALLENGE);
+            out.extend_from_slice(nonce);
+        }
+        Frame::AuthResponse { mac } => {
+            out.push(KIND_AUTH_RESPONSE);
+            out.extend_from_slice(mac);
+        }
+        Frame::Resume { epoch } => {
+            out.push(KIND_RESUME);
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
     }
     out
 }
@@ -217,6 +249,20 @@ pub fn decode_body(buf: &[u8]) -> Result<Frame, String> {
                 payload.push(f32::from_bits(c.u32()?));
             }
             Frame::DataChunk { src, dst, tag: Tag::new(iter, layer, phase), last, payload }
+        }
+        KIND_AUTH_CHALLENGE => {
+            let mut nonce = [0u8; 16];
+            nonce.copy_from_slice(c.take(16)?);
+            Frame::AuthChallenge { nonce }
+        }
+        KIND_AUTH_RESPONSE => {
+            let mut mac = [0u8; 32];
+            mac.copy_from_slice(c.take(32)?);
+            Frame::AuthResponse { mac }
+        }
+        KIND_RESUME => {
+            let b = c.take(8)?;
+            Frame::Resume { epoch: u64::from_le_bytes(b.try_into().unwrap()) }
         }
         other => return Err(format!("unknown frame kind {other}")),
     };
@@ -391,6 +437,29 @@ mod tests {
             addrs: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into(), "127.0.0.1:3".into()],
         });
         roundtrip(Frame::Shutdown { src: 5 });
+        let nonce: [u8; 16] = core::array::from_fn(|i| i as u8);
+        roundtrip(Frame::AuthChallenge { nonce });
+        let mac: [u8; 32] = core::array::from_fn(|i| 0xff - i as u8);
+        roundtrip(Frame::AuthResponse { mac });
+        roundtrip(Frame::Resume { epoch: 0 });
+        roundtrip(Frame::Resume { epoch: u64::MAX });
+    }
+
+    #[test]
+    fn auth_frames_have_fixed_width_bodies() {
+        // truncated or padded auth bodies must be rejected, not zero-filled
+        let ch = encode_body(&Frame::AuthChallenge { nonce: [7; 16] });
+        assert_eq!(ch.len(), 1 + 16);
+        assert!(decode_body(&ch[..ch.len() - 1]).is_err());
+        let mut padded = ch.clone();
+        padded.push(0);
+        assert!(decode_body(&padded).is_err());
+        let resp = encode_body(&Frame::AuthResponse { mac: [9; 32] });
+        assert_eq!(resp.len(), 1 + 32);
+        assert!(decode_body(&resp[..16]).is_err());
+        let resume = encode_body(&Frame::Resume { epoch: 3 });
+        assert_eq!(resume.len(), 1 + 8);
+        assert!(decode_body(&resume[..5]).is_err());
     }
 
     #[test]

@@ -7,18 +7,34 @@
 //! every rank the peer table, and polls the children so one death is
 //! detected while the rest are still running.
 //!
-//! Crash recovery: with `--ckpt-dir`, a failed generation (a worker
-//! died, or rendezvous/mesh formation broke) is torn down and the **full
-//! mesh is relaunched from the latest complete checkpoint** — a fresh
-//! rendezvous generation on a fresh port, every worker passed
-//! `--resume <ckpt-dir>`. Up to `--max-restarts` relaunches are
-//! attempted before giving up. Without a checkpoint directory a worker
-//! death still fails the whole job, as before.
+//! Crash recovery, in order of preference:
+//!
+//! 1. **Live rejoin** (with `--ckpt-dir`): when a worker dies mid-run,
+//!    the survivors notice the broken link, drop their mesh, and re-dial
+//!    the *same* rendezvous address. The launcher respawns only the dead
+//!    rank(s) with `--rejoin` and serves a rejoin round on the listener
+//!    it never closed — the round's `Resume{epoch}` frame tells every
+//!    rank which complete [`crate::ckpt`] checkpoint to roll back to.
+//!    The surviving processes are never restarted, and the loss curve
+//!    stays bit-identical to an uninterrupted run.
+//! 2. **Full relaunch**: if a rejoin round cannot form (the rendezvous
+//!    errors or a replacement cannot spawn), the whole mesh is torn down
+//!    and relaunched from the latest complete checkpoint — a fresh
+//!    rendezvous generation on a fresh port, every worker passed
+//!    `--resume <ckpt-dir>`.
+//!
+//! Both paths draw from the same `--max-restarts` budget. Without a
+//! checkpoint directory a worker death still fails the whole job, as
+//! before.
+//!
+//! `--fail-epoch` takes a comma list: each entry arms one spawn of
+//! `--fail-rank` (original, then each replacement in turn) to exit(13)
+//! after that epoch, so recovery-of-recovery is testable.
 
-use super::rendezvous;
+use super::rendezvous::{self, ServeOpts, FORM_DEADLINE};
 use crate::util::error::Result;
 use std::net::TcpListener;
-use std::process::{Child, Command};
+use std::process::{Child, Command, ExitStatus};
 use std::time::Duration;
 
 #[derive(Clone, Debug)]
@@ -45,21 +61,34 @@ pub struct LaunchOpts {
     pub ckpt_every: usize,
     /// start the first generation from this checkpoint directory
     pub resume: Option<String>,
-    /// mesh relaunches allowed after a failure (needs `ckpt_dir`)
+    /// recovery rounds (rejoins + relaunches) allowed (needs `ckpt_dir`)
     pub max_restarts: usize,
     /// compute threads per worker (`--threads`; None = worker default:
     /// `PIPEGCN_THREADS` or the machine's available parallelism)
     pub threads: Option<usize>,
     /// fault injection for the recovery tests: this rank …
     pub fail_rank: Option<usize>,
-    /// … exits(13) after this epoch, on the first generation only
-    pub fail_epoch: Option<usize>,
+    /// … exits(13) after these epochs — one entry per spawn of the
+    /// rank, so `3,5` kills the original after epoch 3 and its
+    /// replacement after epoch 5
+    pub fail_epochs: Vec<usize>,
     /// merged Chrome trace-event JSON path, forwarded to every rank
     /// (rank 0 writes the file after collecting peers' spans)
     pub trace: Option<String>,
     /// metrics base address `HOST:PORT`: rank i serves Prometheus text
     /// on `HOST:PORT+i` (co-located workers need distinct ports)
     pub metrics_addr: Option<String>,
+    /// chaos profile JSON path (`--chaos`), forwarded to every rank
+    pub chaos: Option<String>,
+    /// shared mesh secret: the rendezvous challenges every joiner, and
+    /// workers inherit it via `PIPEGCN_MESH_SECRET` (kept off argv so it
+    /// never shows in the process table)
+    pub mesh_secret: Option<String>,
+    /// mesh-formation deadline in seconds (`--form-deadline`)
+    pub form_deadline_secs: Option<u64>,
+    /// receive-watchdog deadline in seconds (`--recv-deadline`),
+    /// forwarded to every rank
+    pub recv_deadline_secs: Option<u64>,
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -67,6 +96,10 @@ fn kill_all(children: &mut [Child]) {
         let _ = c.kill();
         let _ = c.wait();
     }
+}
+
+fn form_deadline(opts: &LaunchOpts) -> Duration {
+    opts.form_deadline_secs.map(|s| Duration::from_secs(s.max(1))).unwrap_or(FORM_DEADLINE)
 }
 
 /// Worker kernel-thread count to pass on the command line. Explicit
@@ -108,167 +141,298 @@ fn rank_metrics_addr(base: &str, rank: usize) -> Result<String> {
     Ok(format!("{host}:{port}"))
 }
 
+/// The fail epoch (if any) to arm the next spawn of `rank` with. Each
+/// entry in `--fail-epoch` is consumed by one spawn of the fail rank, in
+/// order — original first, then each replacement.
+fn take_fail_epoch(opts: &LaunchOpts, rank: usize, fail_idx: &mut usize) -> Option<usize> {
+    if opts.fail_rank == Some(rank) && *fail_idx < opts.fail_epochs.len() {
+        let epoch = opts.fail_epochs[*fail_idx];
+        *fail_idx += 1;
+        Some(epoch)
+    } else {
+        None
+    }
+}
+
+/// Spawn one worker process. `rejoin` marks a replacement joining a live
+/// rejoin round (the worker then expects the round to name a resume
+/// epoch instead of scanning `--resume` itself).
+fn spawn_one(
+    bin: &std::path::Path,
+    opts: &LaunchOpts,
+    coord: &str,
+    rank: usize,
+    resume: Option<&str>,
+    rejoin: bool,
+    fail_epoch: Option<usize>,
+) -> Result<Child> {
+    let threads = worker_threads(opts);
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker")
+        .arg("--rank")
+        .arg(rank.to_string())
+        .arg("--parts")
+        .arg(opts.parts.to_string())
+        .arg("--coord")
+        .arg(coord)
+        .arg("--dataset")
+        .arg(&opts.dataset)
+        .arg("--method")
+        .arg(&opts.method)
+        .arg("--epochs")
+        .arg(opts.epochs.to_string())
+        .arg("--seed")
+        .arg(opts.seed.to_string())
+        .arg("--gamma")
+        .arg(opts.gamma.to_string());
+    if opts.nodes > 0 {
+        cmd.arg("--nodes").arg(opts.nodes.to_string());
+    }
+    if let Some(p) = &opts.partitioner {
+        cmd.arg("--partitioner").arg(p);
+    }
+    if let Some(n) = threads {
+        cmd.arg("--threads").arg(n.to_string());
+    }
+    if let Some(dir) = &opts.ckpt_dir {
+        cmd.arg("--ckpt-dir").arg(dir);
+        cmd.arg("--ckpt-every").arg(opts.ckpt_every.to_string());
+    }
+    if let Some(dir) = resume {
+        cmd.arg("--resume").arg(dir);
+    }
+    if rejoin {
+        cmd.arg("--rejoin");
+    }
+    if let Some(epoch) = fail_epoch {
+        cmd.arg("--fail-epoch").arg(epoch.to_string());
+    }
+    if let Some(path) = &opts.trace {
+        cmd.arg("--trace").arg(path);
+    }
+    if let Some(path) = &opts.chaos {
+        cmd.arg("--chaos").arg(path);
+    }
+    if let Some(secs) = opts.form_deadline_secs {
+        cmd.arg("--form-deadline").arg(secs.to_string());
+    }
+    if let Some(secs) = opts.recv_deadline_secs {
+        cmd.arg("--recv-deadline").arg(secs.to_string());
+    }
+    if let Some(secret) = &opts.mesh_secret {
+        cmd.env("PIPEGCN_MESH_SECRET", secret);
+    }
+    if let Some(base) = &opts.metrics_addr {
+        cmd.arg("--metrics-addr").arg(rank_metrics_addr(base, rank)?);
+    }
+    if rank == 0 {
+        if let Some(log) = &opts.log {
+            cmd.arg("--log").arg(log);
+        }
+        if let Some(out) = &opts.out {
+            cmd.arg("--out").arg(out);
+        }
+    }
+    cmd.spawn().map_err(|e| crate::err_msg!("spawning worker rank {rank}: {e}"))
+}
+
 fn spawn_workers(
     bin: &std::path::Path,
     opts: &LaunchOpts,
     coord: &str,
     resume: Option<&str>,
-    inject_fault: bool,
+    fail_idx: &mut usize,
 ) -> Result<Vec<Child>> {
-    let threads = worker_threads(opts);
     let mut children: Vec<Child> = Vec::with_capacity(opts.parts);
     for rank in 0..opts.parts {
-        let mut cmd = Command::new(bin);
-        cmd.arg("worker")
-            .arg("--rank")
-            .arg(rank.to_string())
-            .arg("--parts")
-            .arg(opts.parts.to_string())
-            .arg("--coord")
-            .arg(coord)
-            .arg("--dataset")
-            .arg(&opts.dataset)
-            .arg("--method")
-            .arg(&opts.method)
-            .arg("--epochs")
-            .arg(opts.epochs.to_string())
-            .arg("--seed")
-            .arg(opts.seed.to_string())
-            .arg("--gamma")
-            .arg(opts.gamma.to_string());
-        if opts.nodes > 0 {
-            cmd.arg("--nodes").arg(opts.nodes.to_string());
-        }
-        if let Some(p) = &opts.partitioner {
-            cmd.arg("--partitioner").arg(p);
-        }
-        if let Some(n) = threads {
-            cmd.arg("--threads").arg(n.to_string());
-        }
-        if let Some(dir) = &opts.ckpt_dir {
-            cmd.arg("--ckpt-dir").arg(dir);
-            cmd.arg("--ckpt-every").arg(opts.ckpt_every.to_string());
-        }
-        if let Some(dir) = resume {
-            cmd.arg("--resume").arg(dir);
-        }
-        if inject_fault && opts.fail_rank == Some(rank) {
-            if let Some(epoch) = opts.fail_epoch {
-                cmd.arg("--fail-epoch").arg(epoch.to_string());
-            }
-        }
-        if let Some(path) = &opts.trace {
-            cmd.arg("--trace").arg(path);
-        }
-        if let Some(base) = &opts.metrics_addr {
-            match rank_metrics_addr(base, rank) {
-                Ok(addr) => {
-                    cmd.arg("--metrics-addr").arg(addr);
-                }
-                Err(e) => {
-                    kill_all(&mut children);
-                    return Err(e);
-                }
-            }
-        }
-        if rank == 0 {
-            if let Some(log) = &opts.log {
-                cmd.arg("--log").arg(log);
-            }
-            if let Some(out) = &opts.out {
-                cmd.arg("--out").arg(out);
-            }
-        }
-        match cmd.spawn() {
+        let fail_epoch = take_fail_epoch(opts, rank, fail_idx);
+        match spawn_one(bin, opts, coord, rank, resume, false, fail_epoch) {
             Ok(c) => children.push(c),
             Err(e) => {
                 kill_all(&mut children);
-                return Err(crate::err_msg!("spawning worker rank {rank}: {e}"));
+                return Err(e);
             }
         }
     }
     Ok(children)
 }
 
-/// Poll all children until every one exits cleanly; error at the first
-/// non-zero exit (the caller tears the rest down). Polling — rather than
-/// a rank-ordered `wait()` chain — is what lets the launcher notice a
-/// high-rank death while low ranks are still blocked mid-epoch.
-fn supervise(children: &mut [Child]) -> Result<()> {
-    let mut done = vec![false; children.len()];
+/// What one supervision pass observed.
+enum Watch {
+    /// every worker exited cleanly
+    Done,
+    /// these ranks died (non-zero exit); the rest are still running or
+    /// already finished
+    Dead(Vec<(usize, ExitStatus)>),
+}
+
+/// Poll the children until every one exits cleanly or at least one
+/// dies. Polling — rather than a rank-ordered `wait()` chain — is what
+/// lets the launcher notice a high-rank death while low ranks are still
+/// blocked mid-epoch. On a death, a short grace window collects the
+/// other ranks of a co-dying mesh so one rejoin round replaces them all.
+fn watch(children: &mut [Child], done: &mut [bool]) -> Result<Watch> {
     loop {
         let mut all_done = true;
+        let mut dead: Vec<(usize, ExitStatus)> = Vec::new();
         for (rank, child) in children.iter_mut().enumerate() {
             if done[rank] {
                 continue;
             }
             match child.try_wait() {
                 Ok(Some(status)) if status.success() => done[rank] = true,
-                Ok(Some(status)) => crate::bail!("worker rank {rank} exited with {status}"),
+                Ok(Some(status)) => dead.push((rank, status)),
                 Ok(None) => all_done = false,
                 Err(e) => crate::bail!("waiting for rank {rank}: {e}"),
             }
         }
+        if !dead.is_empty() {
+            std::thread::sleep(Duration::from_millis(500));
+            for (rank, child) in children.iter_mut().enumerate() {
+                if done[rank] || dead.iter().any(|&(r, _)| r == rank) {
+                    continue;
+                }
+                match child.try_wait() {
+                    Ok(Some(status)) if status.success() => done[rank] = true,
+                    Ok(Some(status)) => dead.push((rank, status)),
+                    _ => {}
+                }
+            }
+            dead.sort_unstable_by_key(|&(r, _)| r);
+            return Ok(Watch::Dead(dead));
+        }
         if all_done {
-            return Ok(());
+            return Ok(Watch::Done);
         }
         std::thread::sleep(Duration::from_millis(30));
     }
 }
 
 /// Spawn `opts.parts` workers of `bin` (normally `current_exe()`), serve
-/// their rendezvous, and supervise until completion — relaunching the
-/// full mesh from the latest complete checkpoint when a generation
-/// fails and `--ckpt-dir` is set.
+/// their rendezvous, and supervise until completion. With `--ckpt-dir`,
+/// a worker death is healed in place: only the dead ranks are respawned
+/// and a rejoin round on the same rendezvous address rolls every rank
+/// back to the latest complete checkpoint (full-mesh relaunch is the
+/// fallback when the rejoin round cannot form).
 pub fn launch(bin: &std::path::Path, opts: &LaunchOpts) -> Result<()> {
     if opts.parts == 0 {
         crate::bail!("--parts must be at least 1");
     }
-    let mut generation = 0usize;
+    let mut restarts = 0usize;
+    let mut fail_idx = 0usize;
     let mut resume = opts.resume.clone();
-    loop {
-        // fresh rendezvous generation: new listener, new port
+    let sopts = ServeOpts {
+        deadline: form_deadline(opts),
+        secret: opts.mesh_secret.clone(),
+        resume_epoch: None,
+    };
+    'generation: loop {
+        // fresh rendezvous generation: new listener, new port. The
+        // listener stays open for the whole generation — survivors of a
+        // worker death re-dial this same address to rejoin.
         let listener = TcpListener::bind("127.0.0.1:0")
             .map_err(|e| crate::err_msg!("binding the rendezvous listener: {e}"))?;
         let coord = listener.local_addr()?.to_string();
-        // fault injection fires on the first, non-resumed generation
-        // only — the relaunched mesh must be allowed to finish
-        let inject = generation == 0 && resume.is_none();
-        let mut children = spawn_workers(bin, opts, &coord, resume.as_deref(), inject)?;
+        let mut children = spawn_workers(bin, opts, &coord, resume.as_deref(), &mut fail_idx)?;
+        if let Err(e) = rendezvous::serve_with(&listener, opts.parts, &sopts) {
+            let e = crate::err_msg!("rendezvous failed: {e}");
+            kill_all(&mut children);
+            let (dir, epoch) = plan_recovery(opts, &mut restarts, &e)?;
+            eprintln!(
+                "launch: {e}; relaunching all {} workers from the epoch-{epoch} \
+                 checkpoint (restart {restarts})",
+                opts.parts
+            );
+            resume = Some(dir);
+            continue 'generation;
+        }
 
-        let outcome = rendezvous::serve(&listener, opts.parts)
-            .map_err(|e| crate::err_msg!("rendezvous failed: {e}"))
-            .and_then(|_| supervise(&mut children));
-        match outcome {
-            Ok(()) => return Ok(()),
-            Err(e) => {
-                // reap everything *before* scanning for checkpoints, so
-                // no straggler is mid-write during the scan
-                kill_all(&mut children);
-                let Some(dir) = &opts.ckpt_dir else { return Err(e) };
-                if generation >= opts.max_restarts {
-                    return Err(crate::err_msg!(
-                        "{e}; giving up after {generation} restart(s)"
-                    ));
+        let mut done = vec![false; opts.parts];
+        loop {
+            let dead = match watch(&mut children, &mut done)? {
+                Watch::Done => return Ok(()),
+                Watch::Dead(dead) => dead,
+            };
+            let (first_rank, first_status) = &dead[0];
+            let err = crate::err_msg!("worker rank {first_rank} exited with {first_status}");
+            let (dir, epoch) = match plan_recovery(opts, &mut restarts, &err) {
+                Ok(plan) => plan,
+                Err(e) => {
+                    kill_all(&mut children);
+                    return Err(e);
                 }
-                match crate::ckpt::latest_complete(dir, opts.parts)? {
-                    Some(epoch) => {
-                        generation += 1;
-                        eprintln!(
-                            "launch: {e}; relaunching all {} workers from the epoch-{epoch} \
-                             checkpoint (generation {generation})",
-                            opts.parts
-                        );
-                        resume = Some(dir.clone());
+            };
+            let ranks: Vec<usize> = dead.iter().map(|&(r, _)| r).collect();
+            eprintln!(
+                "launch: {err}; replacing rank(s) {ranks:?} and rolling the live mesh \
+                 back to the epoch-{epoch} checkpoint (restart {restarts})"
+            );
+            // respawn only the dead ranks, then serve a rejoin round on
+            // the listener the survivors are already re-dialing
+            let mut respawned = true;
+            for &rank in &ranks {
+                let fail_epoch = take_fail_epoch(opts, rank, &mut fail_idx);
+                match spawn_one(bin, opts, &coord, rank, None, true, fail_epoch) {
+                    Ok(c) => {
+                        children[rank] = c;
+                        done[rank] = false;
                     }
-                    None => {
-                        return Err(crate::err_msg!(
-                            "{e}; no complete checkpoint under {dir} to recover from"
-                        ))
+                    Err(e) => {
+                        eprintln!("launch: {e}");
+                        respawned = false;
+                        break;
                     }
                 }
             }
+            let round = ServeOpts { resume_epoch: Some(epoch as u64), ..sopts.clone() };
+            let served = respawned
+                .then(|| rendezvous::serve_with(&listener, opts.parts, &round))
+                .unwrap_or_else(|| {
+                    Err(std::io::Error::new(
+                        std::io::ErrorKind::Other,
+                        "replacement worker failed to spawn",
+                    ))
+                });
+            match served {
+                Ok(_) => {
+                    // mesh healed in place: back to supervising the same
+                    // children, survivors included
+                }
+                Err(e) => {
+                    eprintln!(
+                        "launch: live rejoin round failed ({e}); falling back to a full \
+                         relaunch from the epoch-{epoch} checkpoint"
+                    );
+                    kill_all(&mut children);
+                    resume = Some(dir);
+                    continue 'generation;
+                }
+            }
         }
+    }
+}
+
+/// Gatekeeper for one recovery round (live rejoin or full relaunch):
+/// checks the restart budget, finds the latest complete checkpoint, and
+/// charges one restart against `--max-restarts`. `err` is what broke
+/// the mesh — every refusal names it.
+fn plan_recovery(
+    opts: &LaunchOpts,
+    restarts: &mut usize,
+    err: &crate::util::error::Error,
+) -> Result<(String, usize)> {
+    let Some(dir) = &opts.ckpt_dir else {
+        return Err(crate::err_msg!("{err}"));
+    };
+    if *restarts >= opts.max_restarts {
+        return Err(crate::err_msg!("{err}; giving up after {restarts} restart(s)"));
+    }
+    match crate::ckpt::latest_complete(dir, opts.parts)? {
+        Some(epoch) => {
+            *restarts += 1;
+            Ok((dir.clone(), epoch))
+        }
+        None => Err(crate::err_msg!("{err}; no complete checkpoint under {dir} to recover from")),
     }
 }
 
@@ -283,5 +447,40 @@ mod tests {
         assert!(rank_metrics_addr("9100", 0).is_err());
         assert!(rank_metrics_addr("host:notaport", 0).is_err());
         assert!(rank_metrics_addr("host:65535", 1).is_err());
+    }
+
+    #[test]
+    fn fail_epochs_are_consumed_one_per_spawn_of_the_fail_rank() {
+        let opts = LaunchOpts {
+            parts: 2,
+            dataset: "tiny".into(),
+            method: "pipegcn".into(),
+            nodes: 0,
+            partitioner: None,
+            epochs: 1,
+            seed: 1,
+            gamma: 0.0,
+            log: None,
+            out: None,
+            ckpt_dir: None,
+            ckpt_every: 1,
+            resume: None,
+            max_restarts: 0,
+            threads: None,
+            fail_rank: Some(1),
+            fail_epochs: vec![3, 5],
+            trace: None,
+            metrics_addr: None,
+            chaos: None,
+            mesh_secret: None,
+            form_deadline_secs: None,
+            recv_deadline_secs: None,
+        };
+        let mut idx = 0;
+        assert_eq!(take_fail_epoch(&opts, 0, &mut idx), None);
+        assert_eq!(take_fail_epoch(&opts, 1, &mut idx), Some(3));
+        assert_eq!(take_fail_epoch(&opts, 1, &mut idx), Some(5));
+        assert_eq!(take_fail_epoch(&opts, 1, &mut idx), None);
+        assert_eq!(idx, 2);
     }
 }

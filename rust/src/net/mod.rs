@@ -23,18 +23,25 @@
 //!   localhost sockets; each runs
 //!   [`crate::coordinator::threaded::run_rank_ctl`] unchanged. The
 //!   launcher supervises its children and, with `--ckpt-dir`, survives a
-//!   worker death by relaunching the whole mesh (a fresh rendezvous
-//!   generation) from the latest complete [`crate::ckpt`] checkpoint.
+//!   worker death *elastically*: only the dead rank is respawned, the
+//!   survivors re-rendezvous on the same coordinator address, and every
+//!   rank rolls back to the latest complete [`crate::ckpt`] checkpoint
+//!   (full-mesh relaunch remains the fallback when a rejoin round cannot
+//!   form).
+//! * [`chaos`] — deterministic per-link fault injection (`--chaos
+//!   profile.json`): latency/jitter/bandwidth/drops on the writer path,
+//!   counted as `pipegcn_link_faults_total{src,dst,kind}`.
 //!
 //! The schedule is deterministic over any transport (staleness lives in
 //! message tags), so a TCP run's loss curve is bit-identical to the
 //! sequential and threaded engines — asserted by `tests/net_e2e.rs`.
 
+pub mod chaos;
 pub mod frame;
 pub mod launch;
 pub mod rendezvous;
 pub mod tcp;
 pub mod worker;
 
-pub use rendezvous::{connect, localhost_mesh};
+pub use rendezvous::{connect, localhost_mesh, localhost_mesh_with};
 pub use tcp::TcpTransport;

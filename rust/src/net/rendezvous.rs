@@ -10,14 +10,35 @@
 //! ones. Advertised addresses must be routable: a wildcard (`0.0.0.0` /
 //! `[::]`) bind cannot be dialed by peers, so both the advertising rank
 //! and the rendezvous reject it with a diagnostic naming `--bind`.
+//!
+//! Two hardening layers ride on the same exchange:
+//!
+//! * **Auth** — with a shared secret configured (`--mesh-secret` /
+//!   `PIPEGCN_MESH_SECRET`), every `Hello` — to the rendezvous *and* on
+//!   every mesh socket — is answered with an [`Frame::AuthChallenge`]
+//!   nonce that the joiner must MAC with the secret
+//!   (HMAC-SHA256 over nonce ‖ rank ‖ addr). A join presenting a wrong
+//!   MAC is rejected with a diagnostic naming the rank and address.
+//!   With no secret set, no auth frames are exchanged and the wire is
+//!   byte-for-byte the unauthenticated protocol.
+//! * **Rejoin rounds** — the same `serve` machinery re-forms a *live*
+//!   mesh after a worker death: the launcher serves another round on
+//!   the same address (survivors reconnect, a replacement joins in the
+//!   dead rank's place) and closes it with a [`Frame::Resume`] naming
+//!   the checkpoint epoch every rank restores before training resumes.
 
+use super::chaos::ChaosProfile;
 use super::frame::{self, Frame};
-use super::tcp::{accept_with_deadline, retry_connect, retry_connect_limited, TcpTransport};
+use super::tcp::{
+    accept_with_deadline, retry_connect, retry_connect_limited, TcpTransport, RECV_DEADLINE,
+};
+use crate::util::rng::splitmix64;
+use crate::util::sha256::{hmac_sha256, macs_equal};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
-/// How long mesh/rendezvous formation may take before we abort.
+/// Default ceiling on mesh/rendezvous formation (`--form-deadline`).
 pub const FORM_DEADLINE: Duration = Duration::from_secs(60);
 
 fn io_err(msg: String) -> std::io::Error {
@@ -26,7 +47,7 @@ fn io_err(msg: String) -> std::io::Error {
 
 /// Mesh-joining knobs for [`connect_with`]. The defaults reproduce the
 /// single-host behavior ([`connect`]): loopback bind, the formation
-/// deadline, unlimited dial attempts within it.
+/// deadline, unlimited dial attempts within it, no auth, no chaos.
 #[derive(Clone, Debug)]
 pub struct ConnectOpts {
     /// local `HOST:PORT` the mesh listener binds (`--bind`). Peers dial
@@ -38,11 +59,53 @@ pub struct ConnectOpts {
     /// rendezvous dial attempts before giving up (`--connect-retries`;
     /// 0 = unlimited within `timeout`)
     pub retries: usize,
+    /// ceiling on each mesh-formation step (`--form-deadline`)
+    pub form_deadline: Duration,
+    /// shared mesh secret (`--mesh-secret` / `PIPEGCN_MESH_SECRET`);
+    /// when set, every hello this rank sends answers an HMAC challenge
+    pub secret: Option<String>,
+    /// fault-injection profile (`--chaos`) applied to this rank's
+    /// outgoing links
+    pub chaos: Option<ChaosProfile>,
+    /// receive-watchdog override (`--recv-deadline`); defaults to the
+    /// chaos profile's `recv_deadline_ms`, else [`RECV_DEADLINE`]
+    pub recv_deadline: Option<Duration>,
+    /// true when joining a live-rejoin round: the rendezvous closes the
+    /// round with a `Resume{epoch}` frame that [`connect_session`]
+    /// returns to the caller
+    pub expect_resume: bool,
 }
 
 impl Default for ConnectOpts {
     fn default() -> ConnectOpts {
-        ConnectOpts { bind: "127.0.0.1:0".to_string(), timeout: FORM_DEADLINE, retries: 0 }
+        ConnectOpts {
+            bind: "127.0.0.1:0".to_string(),
+            timeout: FORM_DEADLINE,
+            retries: 0,
+            form_deadline: FORM_DEADLINE,
+            secret: None,
+            chaos: None,
+            recv_deadline: None,
+            expect_resume: false,
+        }
+    }
+}
+
+/// Knobs for one rendezvous round ([`serve_with`]).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// ceiling on the whole round (`--form-deadline`)
+    pub deadline: Duration,
+    /// shared mesh secret; when set, every joiner is challenged
+    pub secret: Option<String>,
+    /// when set, this is a live-rejoin round: after the peer table,
+    /// every rank is told to restore from this checkpoint epoch
+    pub resume_epoch: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { deadline: FORM_DEADLINE, secret: None, resume_epoch: None }
     }
 }
 
@@ -51,10 +114,104 @@ fn is_unroutable(addr: &str) -> bool {
     addr.starts_with("0.0.0.0:") || addr.starts_with("[::]:")
 }
 
+/// A fresh 16-byte challenge nonce. Not a CSPRNG — the secret's
+/// strength carries the auth; the nonce only has to be unpredictable
+/// enough never to repeat across handshakes.
+fn fresh_nonce() -> [u8; 16] {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut state = now
+        ^ (std::process::id() as u64).rotate_left(32)
+        ^ COUNTER.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut nonce = [0u8; 16];
+    nonce[..8].copy_from_slice(&splitmix64(&mut state).to_le_bytes());
+    nonce[8..].copy_from_slice(&splitmix64(&mut state).to_le_bytes());
+    nonce
+}
+
+/// The MAC a joiner presents: HMAC-SHA256(secret, nonce ‖ rank ‖ addr),
+/// binding the response to this handshake's hello.
+fn hello_mac(secret: &str, nonce: &[u8; 16], rank: u16, addr: &str) -> [u8; 32] {
+    let mut msg = Vec::with_capacity(16 + 2 + addr.len());
+    msg.extend_from_slice(nonce);
+    msg.extend_from_slice(&rank.to_le_bytes());
+    msg.extend_from_slice(addr.as_bytes());
+    hmac_sha256(secret.as_bytes(), &msg)
+}
+
+/// Accepting side of the auth handshake: challenge the joiner whose
+/// `Hello{rank, addr}` was just read off `s`, verify the response.
+fn challenge_peer(
+    s: &mut TcpStream,
+    secret: &str,
+    rank: usize,
+    addr: &str,
+    what: &str,
+) -> std::io::Result<()> {
+    let nonce = fresh_nonce();
+    frame::write_frame(s, &Frame::AuthChallenge { nonce })?;
+    s.flush()?;
+    let who = if addr.is_empty() {
+        format!("rank {rank}")
+    } else {
+        format!("rank {rank} ({addr})")
+    };
+    match frame::read_frame(s)? {
+        Some(Frame::AuthResponse { mac }) => {
+            if !macs_equal(&mac, &hello_mac(secret, &nonce, rank as u16, addr)) {
+                return Err(io_err(format!(
+                    "mesh auth failed: {what} from {who} presented a MAC that does not \
+                     match the shared secret — join rejected"
+                )));
+            }
+            Ok(())
+        }
+        other => Err(io_err(format!(
+            "mesh auth failed: {what} from {who} answered the challenge with {other:?} \
+             — is --mesh-secret set on that process?"
+        ))),
+    }
+}
+
+/// Dialing side of the auth handshake: read the challenge the accepter
+/// sends right after our `Hello{rank, addr}` and answer it.
+fn answer_challenge(
+    s: &mut TcpStream,
+    secret: &str,
+    rank: u16,
+    addr: &str,
+    what: &str,
+) -> std::io::Result<()> {
+    match frame::read_frame(s)? {
+        Some(Frame::AuthChallenge { nonce }) => {
+            frame::write_frame(s, &Frame::AuthResponse { mac: hello_mac(secret, &nonce, rank, addr) })?;
+            s.flush()
+        }
+        other => Err(io_err(format!(
+            "--mesh-secret is set here but the {what} answered with {other:?} instead \
+             of an auth challenge — it has no mesh secret configured"
+        ))),
+    }
+}
+
 /// Serve one rendezvous round on `listener`: collect `Hello`s from all
 /// `n` ranks, then answer each with the full peer-address table. Returns
 /// the table (index = rank).
 pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
+    serve_with(listener, n, &ServeOpts::default())
+}
+
+/// [`serve`] with explicit deadline/auth/rejoin knobs ([`ServeOpts`]).
+pub fn serve_with(
+    listener: &TcpListener,
+    n: usize,
+    opts: &ServeOpts,
+) -> std::io::Result<Vec<String>> {
+    let started = std::time::Instant::now();
     let mut streams: Vec<Option<(TcpStream, String)>> = (0..n).map(|_| None).collect();
     let mut seen = 0usize;
     while seen < n {
@@ -62,9 +219,24 @@ pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
         // byte-exact, so nothing beyond the frame is consumed. A read
         // timeout bounds a connector that never sends its hello (e.g. a
         // worker that died right after connect), so serve() cannot hang
-        // past the formation deadline.
-        let mut s = accept_with_deadline(listener, FORM_DEADLINE)?;
-        s.set_read_timeout(Some(FORM_DEADLINE))?;
+        // past the formation deadline — which counts down across the
+        // whole round, not per accept.
+        let remaining = opts.deadline.saturating_sub(started.elapsed());
+        let mut s = accept_with_deadline(listener, remaining).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::TimedOut {
+                let missing: Vec<usize> =
+                    (0..n).filter(|&r| streams[r].is_none()).collect();
+                io_err(format!(
+                    "mesh formation timed out after {:.0?}: ranks {missing:?} never \
+                     arrived ({seen} of {n} joined) — raise --form-deadline if the \
+                     hosts are just slow",
+                    opts.deadline
+                ))
+            } else {
+                e
+            }
+        })?;
+        s.set_read_timeout(Some(opts.deadline))?;
         match frame::read_frame(&mut s)? {
             Some(Frame::Hello { rank, addr }) => {
                 let rank = rank as usize;
@@ -84,6 +256,9 @@ pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
                          --bind HOST:PORT on a routable interface"
                     )));
                 }
+                if let Some(secret) = &opts.secret {
+                    challenge_peer(&mut s, secret, rank, &addr, "rendezvous hello")?;
+                }
                 streams[rank] = Some((s, addr));
                 seen += 1;
             }
@@ -99,6 +274,9 @@ pub fn serve(listener: &TcpListener, n: usize) -> std::io::Result<Vec<String>> {
     for entry in streams.iter_mut() {
         let (stream, _) = entry.as_mut().unwrap();
         frame::write_frame(stream, &table)?;
+        if let Some(epoch) = opts.resume_epoch {
+            frame::write_frame(stream, &Frame::Resume { epoch })?;
+        }
         stream.flush()?;
     }
     Ok(addrs)
@@ -118,7 +296,21 @@ pub fn connect_with(
     coord_addr: &str,
     opts: &ConnectOpts,
 ) -> std::io::Result<TcpTransport> {
+    connect_session(rank, n, coord_addr, opts).map(|(t, _)| t)
+}
+
+/// [`connect_with`], also surfacing the rejoin epilogue: on a
+/// live-rejoin round (`opts.expect_resume`) the rendezvous follows the
+/// peer table with `Resume{epoch}` — the checkpoint epoch this rank
+/// must restore before training resumes.
+pub fn connect_session(
+    rank: usize,
+    n: usize,
+    coord_addr: &str,
+    opts: &ConnectOpts,
+) -> std::io::Result<(TcpTransport, Option<u64>)> {
     assert!(rank < n, "rank {rank} out of range for {n} ranks");
+    let form_deadline = opts.form_deadline;
     let listener = TcpListener::bind(&opts.bind)
         .map_err(|e| io_err(format!("binding the mesh listener on {}: {e}", opts.bind)))?;
     let my_addr = listener.local_addr()?.to_string();
@@ -133,11 +325,24 @@ pub fn connect_with(
     let mut coord = retry_connect_limited(coord_addr, opts.timeout, opts.retries)?;
     // the peer table legitimately takes until every rank has joined, but
     // never longer than the formation deadline
-    coord.set_read_timeout(Some(FORM_DEADLINE))?;
-    frame::write_frame(&mut coord, &Frame::Hello { rank: rank as u16, addr: my_addr })?;
+    coord.set_read_timeout(Some(form_deadline))?;
+    frame::write_frame(
+        &mut coord,
+        &Frame::Hello { rank: rank as u16, addr: my_addr.clone() },
+    )?;
     coord.flush()?;
+    if let Some(secret) = &opts.secret {
+        answer_challenge(&mut coord, secret, rank as u16, &my_addr, "rendezvous")?;
+    }
     let addrs = match frame::read_frame(&mut coord)? {
         Some(Frame::PeerTable { addrs }) => addrs,
+        Some(Frame::AuthChallenge { .. }) => {
+            return Err(io_err(
+                "the rendezvous requires mesh auth — set --mesh-secret (or \
+                 PIPEGCN_MESH_SECRET) on this worker"
+                    .to_string(),
+            ))
+        }
         other => return Err(io_err(format!("expected peer table, got {other:?}"))),
     };
     if addrs.len() != n {
@@ -151,61 +356,146 @@ pub fn connect_with(
              must be rebound with --bind HOST:PORT on a routable interface"
         )));
     }
+    let resume_epoch = if opts.expect_resume {
+        match frame::read_frame(&mut coord)? {
+            Some(Frame::Resume { epoch }) => Some(epoch),
+            other => {
+                return Err(io_err(format!(
+                    "rejoin round ended without a resume epoch (got {other:?})"
+                )))
+            }
+        }
+    } else {
+        None
+    };
     drop(coord);
 
-    // --- outbound: dial every peer, introduce ourselves ---------------
-    // Dials succeed as soon as the peer's listener is bound (backlog),
-    // so dialing everything before accepting anything cannot deadlock.
-    let mut outbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-    for (peer, addr) in addrs.iter().enumerate() {
-        if peer == rank {
-            continue;
-        }
-        let mut s = retry_connect(addr, FORM_DEADLINE)?;
-        frame::write_frame(&mut s, &Frame::Hello { rank: rank as u16, addr: String::new() })?;
-        s.flush()?;
-        outbound[peer] = Some(s);
-    }
-
-    // --- inbound: accept n − 1 peers, identified by their hello -------
-    let mut inbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-    for _ in 0..n.saturating_sub(1) {
-        let mut s = accept_with_deadline(&listener, FORM_DEADLINE)?;
-        // read the hello straight off the stream (byte-exact): data
-        // frames may already be queued right behind it from a fast peer,
-        // and an intermediate BufReader would swallow them. The read
-        // timeout bounds a silent connector; it is cleared before the
-        // stream becomes a long-lived data socket.
-        s.set_read_timeout(Some(FORM_DEADLINE))?;
-        match frame::read_frame(&mut s)? {
-            Some(Frame::Hello { rank: peer, .. }) => {
-                let peer = peer as usize;
-                if peer >= n || peer == rank {
-                    return Err(io_err(format!("bad mesh hello from rank {peer}")));
+    // --- mesh: dial every peer while accepting the n − 1 inbound ones.
+    // The two halves run concurrently: with auth on, a dial blocks until
+    // the peer's accept loop answers the challenge, so dial-then-accept
+    // would deadlock (both sides dialing, nobody accepting).
+    let dialed: Vec<Option<TcpStream>>;
+    let accepted: Vec<Option<TcpStream>>;
+    {
+        let (d, a) = std::thread::scope(|sc| {
+            let acceptor = sc.spawn(|| -> std::io::Result<Vec<Option<TcpStream>>> {
+                let mut inbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+                for _ in 0..n.saturating_sub(1) {
+                    let mut s = accept_with_deadline(&listener, form_deadline).map_err(|e| {
+                        if e.kind() == std::io::ErrorKind::TimedOut {
+                            let missing: Vec<usize> = (0..n)
+                                .filter(|&p| p != rank && inbound[p].is_none())
+                                .collect();
+                            io_err(format!(
+                                "mesh formation timed out after {form_deadline:.0?}: \
+                                 peers {missing:?} never dialed rank {rank}"
+                            ))
+                        } else {
+                            e
+                        }
+                    })?;
+                    // read the hello straight off the stream (byte-exact):
+                    // data frames may already be queued right behind it from
+                    // a fast peer, and an intermediate BufReader would
+                    // swallow them. The read timeout bounds a silent
+                    // connector; it is cleared before the stream becomes a
+                    // long-lived data socket.
+                    s.set_read_timeout(Some(form_deadline))?;
+                    match frame::read_frame(&mut s)? {
+                        Some(Frame::Hello { rank: peer, addr }) => {
+                            let peer = peer as usize;
+                            if peer >= n || peer == rank {
+                                return Err(io_err(format!("bad mesh hello from rank {peer}")));
+                            }
+                            if inbound[peer].is_some() {
+                                return Err(io_err(format!(
+                                    "duplicate mesh connection from {peer}"
+                                )));
+                            }
+                            if let Some(secret) = &opts.secret {
+                                challenge_peer(&mut s, secret, peer, &addr, "mesh hello")?;
+                            }
+                            s.set_read_timeout(None)?;
+                            inbound[peer] = Some(s);
+                        }
+                        other => {
+                            return Err(io_err(format!("expected mesh hello, got {other:?}")))
+                        }
+                    }
                 }
-                if inbound[peer].is_some() {
-                    return Err(io_err(format!("duplicate mesh connection from {peer}")));
+                Ok(inbound)
+            });
+            let dial = || -> std::io::Result<Vec<Option<TcpStream>>> {
+                let mut outbound: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+                for (peer, addr) in addrs.iter().enumerate() {
+                    if peer == rank {
+                        continue;
+                    }
+                    let mut s = retry_connect(addr, form_deadline)?;
+                    frame::write_frame(
+                        &mut s,
+                        &Frame::Hello { rank: rank as u16, addr: String::new() },
+                    )?;
+                    s.flush()?;
+                    if let Some(secret) = &opts.secret {
+                        s.set_read_timeout(Some(form_deadline))?;
+                        answer_challenge(&mut s, secret, rank as u16, "", "mesh peer")?;
+                        s.set_read_timeout(None)?;
+                    }
+                    outbound[peer] = Some(s);
                 }
-                s.set_read_timeout(None)?;
-                inbound[peer] = Some(s);
-            }
-            other => return Err(io_err(format!("expected mesh hello, got {other:?}"))),
-        }
+                Ok(outbound)
+            };
+            let outbound = dial();
+            let inbound = acceptor.join().expect("mesh accept thread panicked");
+            (outbound, inbound)
+        });
+        dialed = d?;
+        accepted = a?;
     }
-    Ok(TcpTransport::from_streams(rank, outbound, inbound))
+    let recv_deadline = opts
+        .recv_deadline
+        .or_else(|| {
+            opts.chaos
+                .as_ref()
+                .and_then(|c| c.recv_deadline_ms)
+                .map(Duration::from_millis)
+        })
+        .unwrap_or(RECV_DEADLINE);
+    let transport = TcpTransport::from_streams_tuned(
+        rank,
+        dialed,
+        accepted,
+        opts.chaos.as_ref(),
+        recv_deadline,
+    );
+    Ok((transport, resume_epoch))
 }
 
 /// Test/demo helper: a full `n`-rank mesh over localhost in one process
 /// (rendezvous served from a scratch thread, one connect thread per
 /// rank). Returns transports indexed by rank.
 pub fn localhost_mesh(n: usize) -> std::io::Result<Vec<TcpTransport>> {
+    localhost_mesh_with(n, &ConnectOpts::default())
+}
+
+/// [`localhost_mesh`] with explicit joining knobs applied to every rank
+/// (the rendezvous side mirrors the secret, so authenticated meshes
+/// form).
+pub fn localhost_mesh_with(n: usize, opts: &ConnectOpts) -> std::io::Result<Vec<TcpTransport>> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let coord_addr = listener.local_addr()?.to_string();
-    let server = std::thread::spawn(move || serve(&listener, n));
+    let sopts = ServeOpts {
+        deadline: opts.form_deadline,
+        secret: opts.secret.clone(),
+        resume_epoch: None,
+    };
+    let server = std::thread::spawn(move || serve_with(&listener, n, &sopts));
     let joiners: Vec<_> = (0..n)
         .map(|r| {
             let addr = coord_addr.clone();
-            std::thread::spawn(move || connect(r, n, &addr))
+            let opts = opts.clone();
+            std::thread::spawn(move || connect_with(r, n, &addr, &opts))
         })
         .collect();
     let mut out = Vec::with_capacity(n);
@@ -303,5 +593,107 @@ mod tests {
         let e = connect_with(0, 2, &dead, &opts).unwrap_err();
         assert!(started.elapsed() < Duration::from_secs(10), "did not fail fast");
         assert!(e.to_string().contains("attempt"), "{e}");
+    }
+
+    /// The formation timeout names exactly the ranks that never showed
+    /// up, so a half-formed mesh is debuggable from the one-line error.
+    #[test]
+    fn form_timeout_names_the_missing_ranks() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sopts =
+            ServeOpts { deadline: Duration::from_millis(300), ..ServeOpts::default() };
+        let server = std::thread::spawn(move || serve_with(&listener, 3, &sopts));
+        // only rank 1 arrives
+        let mut s = retry_connect(&addr, FORM_DEADLINE).unwrap();
+        frame::write_frame(&mut s, &Frame::Hello { rank: 1, addr: "127.0.0.1:9".into() })
+            .unwrap();
+        s.flush().unwrap();
+        let e = server.join().unwrap().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("[0, 2]"), "must name the absent ranks: {msg}");
+        assert!(msg.contains("1 of 3"), "{msg}");
+        assert!(msg.contains("--form-deadline"), "{msg}");
+    }
+
+    /// An authenticated mesh forms end to end when every rank holds the
+    /// same secret — through the rendezvous *and* the n·(n−1) mesh
+    /// sockets — and still moves data.
+    #[test]
+    fn authenticated_mesh_forms_and_moves_data() {
+        use crate::comm::{Phase, Tag, Transport};
+        let opts = ConnectOpts {
+            secret: Some("correct horse battery staple".to_string()),
+            ..ConnectOpts::default()
+        };
+        let mut mesh = localhost_mesh_with(3, &opts).unwrap();
+        mesh[0].send(0, 2, Tag::new(1, 0, Phase::FwdFeat), vec![4.25, -1.5]);
+        assert_eq!(
+            mesh[2].recv_blocking(0, 2, Tag::new(1, 0, Phase::FwdFeat)),
+            vec![4.25, -1.5]
+        );
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    /// A joiner presenting the wrong secret is rejected with a
+    /// diagnostic naming the rank — the auth-rejected-join oracle.
+    #[test]
+    fn wrong_secret_join_is_rejected_with_a_diagnostic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sopts = ServeOpts { secret: Some("right".to_string()), ..ServeOpts::default() };
+        let server = std::thread::spawn(move || serve_with(&listener, 1, &sopts));
+        let copts = ConnectOpts { secret: Some("wrong".to_string()), ..ConnectOpts::default() };
+        // the joiner fails (rendezvous closed on it), and the rendezvous
+        // error names the rejected rank
+        let joiner = connect_with(0, 1, &addr, &copts);
+        let e = server.join().unwrap().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("mesh auth failed"), "{msg}");
+        assert!(msg.contains("rank 0"), "{msg}");
+        assert!(joiner.is_err());
+    }
+
+    /// A joiner with no secret against an authenticated rendezvous gets
+    /// an error naming the missing flag, not a confusing frame mismatch.
+    #[test]
+    fn missing_secret_is_named_on_both_sides() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sopts = ServeOpts { secret: Some("s".to_string()), ..ServeOpts::default() };
+        let server = std::thread::spawn(move || serve_with(&listener, 1, &sopts));
+        let e = connect(0, 1, &addr).unwrap_err();
+        assert!(e.to_string().contains("--mesh-secret"), "{e}");
+        assert!(server.join().unwrap().is_err());
+    }
+
+    /// A rejoin round delivers the resume epoch to every participant.
+    #[test]
+    fn rejoin_round_carries_the_resume_epoch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let coord = listener.local_addr().unwrap().to_string();
+        let sopts = ServeOpts { resume_epoch: Some(42), ..ServeOpts::default() };
+        let server = std::thread::spawn(move || serve_with(&listener, 2, &sopts));
+        let joiners: Vec<_> = (0..2)
+            .map(|r| {
+                let coord = coord.clone();
+                std::thread::spawn(move || {
+                    let opts = ConnectOpts { expect_resume: true, ..ConnectOpts::default() };
+                    connect_session(r, 2, &coord, &opts)
+                })
+            })
+            .collect();
+        let mut mesh = Vec::new();
+        for j in joiners {
+            let (t, resume) = j.join().unwrap().unwrap();
+            assert_eq!(resume, Some(42));
+            mesh.push(t);
+        }
+        server.join().unwrap().unwrap();
+        for m in &mut mesh {
+            m.shutdown();
+        }
     }
 }

@@ -20,6 +20,7 @@
 //! threads; reader threads exit when the matching peer's shutdown frame
 //! (or a clean EOF) arrives.
 
+use super::chaos::{ChaosProfile, LinkInjector};
 use super::frame::{self, Frame};
 use crate::comm::{self, RecvHandle, Tag, Transport};
 use crate::obs;
@@ -28,13 +29,27 @@ use std::collections::VecDeque;
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-/// Give up on a blocking receive after this long without the wanted
-/// message — a wiring bug should abort with a diagnostic, not hang CI.
-const RECV_DEADLINE: Duration = Duration::from_secs(300);
+/// Default receive watchdog: give up on a blocking receive after this
+/// long without the wanted message — a wiring bug should abort with a
+/// diagnostic, not hang CI. `--recv-deadline` (or a chaos profile's
+/// `recv_deadline_ms`) overrides it per transport.
+pub const RECV_DEADLINE: Duration = Duration::from_secs(300);
 const WAIT_SLICE: Duration = Duration::from_secs(5);
+
+/// Lock that tolerates a poisoned mutex. A receive watchdog or
+/// dead-peer check panics *while holding* the inbox lock (unwinding
+/// poisons it); sibling handles are then dropped during that unwind,
+/// and their `Drop` must still be able to lock — an `unwrap()` there
+/// would panic-in-drop and abort the whole process, killing a rank that
+/// the elastic launcher could otherwise replace. Safe because every
+/// critical section here leaves the state consistent before any code
+/// path that can panic.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 enum Out {
     Data(Tag, Vec<f32>),
@@ -55,22 +70,22 @@ impl SendQueue {
     }
 
     fn push(&self, msg: Out) {
-        self.q.lock().unwrap().push_back(msg);
+        plock(&self.q).push_back(msg);
         self.cv.notify_one();
     }
 
     fn pop_blocking(&self) -> Out {
-        let mut g = self.q.lock().unwrap();
+        let mut g = plock(&self.q);
         loop {
             if let Some(m) = g.pop_front() {
                 return m;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
         }
     }
 
     fn is_empty(&self) -> bool {
-        self.q.lock().unwrap().is_empty()
+        plock(&self.q).is_empty()
     }
 }
 
@@ -135,6 +150,8 @@ struct TcpRecv {
     src: usize,
     tag: Tag,
     slot: comm::SlotRef,
+    /// watchdog: fail a parked wait after this long
+    deadline: Duration,
 }
 
 impl comm::RecvFuture for TcpRecv {
@@ -144,30 +161,47 @@ impl comm::RecvFuture for TcpRecv {
 
     fn wait_take(&mut self) -> Vec<f32> {
         let started = Instant::now();
-        let mut g = self.inbox.state.lock().unwrap();
+        let mut g = plock(&self.inbox.state);
         loop {
             if let Some(v) = comm::take_ready(&self.slot) {
                 return v;
             }
+            // release the inbox before panicking: sibling handles are
+            // dropped during the unwind and must not find it poisoned
             if !g.errors.is_empty() {
-                panic!("[rank {}] transport failed: {}", self.rank, g.errors.join("; "));
+                let errs = g.errors.join("; ");
+                drop(g);
+                panic!("[rank {}] transport failed: {errs}", self.rank);
             }
             // fail fast the moment the specific peer we need is gone —
             // don't sit out the deadline while other peers are healthy
             if g.closed.contains(&self.src) {
+                drop(g);
                 panic!(
                     "[rank {}] peer {} closed while a message for {}->{} {:?} \
                      was still awaited",
                     self.rank, self.src, self.src, self.rank, self.tag
                 );
             }
-            if started.elapsed() > RECV_DEADLINE {
+            let elapsed = started.elapsed();
+            if elapsed > self.deadline {
+                drop(g);
                 panic!(
-                    "[rank {}] recv timeout waiting for {}->{} {:?}",
-                    self.rank, self.src, self.rank, self.tag
+                    "[rank {}] recv timeout waiting for {}->{} {:?} after {} ms \
+                     (deadline {} ms — raise --recv-deadline if the network is \
+                     just slow)",
+                    self.rank,
+                    self.src,
+                    self.rank,
+                    self.tag,
+                    elapsed.as_millis(),
+                    self.deadline.as_millis()
                 );
             }
-            let (guard, _timeout) = self.inbox.cv.wait_timeout(g, WAIT_SLICE).unwrap();
+            // short slices keep a tight deadline responsive
+            let slice = WAIT_SLICE.min(self.deadline.saturating_sub(elapsed).max(Duration::from_millis(1)));
+            let (guard, _timeout) =
+                self.inbox.cv.wait_timeout(g, slice).unwrap_or_else(|p| p.into_inner());
             g = guard;
         }
     }
@@ -176,8 +210,8 @@ impl comm::RecvFuture for TcpRecv {
 impl Drop for TcpRecv {
     fn drop(&mut self) {
         // lock order: inbox state first, then the slot (same as deliver)
-        let mut g = self.inbox.state.lock().unwrap();
-        let mut slot = self.slot.lock().unwrap();
+        let mut g = plock(&self.inbox.state);
+        let mut slot = plock(&self.slot);
         let key = (self.src as u32, self.tag);
         match std::mem::replace(&mut *slot, comm::SlotState::Cancelled) {
             comm::SlotState::Pending => {
@@ -247,12 +281,20 @@ pub struct TcpTransport {
     link_payload_bytes: Vec<AtomicU64>,
     /// per-peer `link_bytes_sent_total` / `link_frames_sent_total`
     tx_stats: Vec<Option<LinkCounters>>,
+    /// receive watchdog applied to every posted handle
+    recv_deadline: Duration,
     writers: Vec<std::thread::JoinHandle<()>>,
     readers: Vec<std::thread::JoinHandle<()>>,
     shut: bool,
 }
 
-fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
+fn writer_loop(
+    stream: TcpStream,
+    q: Arc<SendQueue>,
+    rank: usize,
+    peer: usize,
+    mut inj: Option<LinkInjector>,
+) {
     let mut w = std::io::BufWriter::new(stream);
     loop {
         let f = match q.pop_blocking() {
@@ -269,6 +311,21 @@ fn writer_loop(stream: TcpStream, q: Arc<SendQueue>, rank: usize, peer: usize) {
                 return;
             }
         };
+        // chaos: stall *before* the write, on this thread — the link's
+        // whole FIFO queues up behind the delayed frame, exactly like
+        // head-of-line blocking on a slow or lossy TCP connection.
+        // Frames are never reordered or lost, so the loss curve and the
+        // byte accounting match the chaos-off run bit for bit.
+        if let Some(inj) = inj.as_mut() {
+            let wire = match &f {
+                Frame::Data { payload, .. } => payload.len() * 4 + frame::DATA_OVERHEAD_BYTES,
+                Frame::DataChunk { payload, .. } => {
+                    payload.len() * 4 + frame::CHUNK_OVERHEAD_BYTES
+                }
+                _ => 0,
+            };
+            inj.before_frame(wire);
+        }
         if let Err(e) = frame::write_frame(&mut w, &f) {
             // peer died; drain silently — its reader side reports
             eprintln!("[rank {rank}] write to {peer} failed: {e}");
@@ -300,7 +357,7 @@ fn reader_loop(
             Ok(Some(Frame::Data { src, dst, tag, payload })) => {
                 rx.bytes.add((payload.len() * 4) as f64);
                 rx.frames.inc();
-                let mut g = inbox.state.lock().unwrap();
+                let mut g = plock(&inbox.state);
                 if src as usize != peer || dst as usize != my_rank {
                     g.errors.push(format!(
                         "misrouted frame on {peer}→{my_rank} socket: src {src} dst {dst}"
@@ -315,7 +372,7 @@ fn reader_loop(
                 rx.bytes.add((payload.len() * 4) as f64);
                 rx.frames.inc();
                 if src as usize != peer || dst as usize != my_rank {
-                    let mut g = inbox.state.lock().unwrap();
+                    let mut g = plock(&inbox.state);
                     g.errors.push(format!(
                         "misrouted chunk on {peer}→{my_rank} socket: src {src} dst {dst}"
                     ));
@@ -326,26 +383,41 @@ fn reader_loop(
                 buf.extend_from_slice(&payload);
                 if last {
                     let full = partial.remove(&tag).unwrap();
-                    let mut g = inbox.state.lock().unwrap();
+                    let mut g = plock(&inbox.state);
                     g.deliver(src as u32, tag, full);
                     inbox.cv.notify_all();
                 }
             }
-            Ok(Some(Frame::Shutdown { .. })) | Ok(None) => {
-                let mut g = inbox.state.lock().unwrap();
+            Ok(Some(Frame::Shutdown { .. })) => {
+                let mut g = plock(&inbox.state);
+                g.closed.insert(peer);
+                inbox.cv.notify_all();
+                return;
+            }
+            Ok(None) => {
+                // EOF with no shutdown frame: the peer process died. Fail
+                // the whole transport, not just this link — the schedule
+                // depends on every rank transitively (ring steps, loss
+                // reduction), so survivors parked on *healthy* links must
+                // unwind now and re-enter the rendezvous, instead of
+                // sitting out the receive deadline.
+                let mut g = plock(&inbox.state);
+                g.errors.push(format!(
+                    "peer {peer} hung up without a shutdown frame (worker died?)"
+                ));
                 g.closed.insert(peer);
                 inbox.cv.notify_all();
                 return;
             }
             Ok(Some(other)) => {
-                let mut g = inbox.state.lock().unwrap();
+                let mut g = plock(&inbox.state);
                 g.errors.push(format!("unexpected control frame from {peer}: {other:?}"));
                 g.closed.insert(peer);
                 inbox.cv.notify_all();
                 return;
             }
             Err(e) => {
-                let mut g = inbox.state.lock().unwrap();
+                let mut g = plock(&inbox.state);
                 g.errors.push(format!("read from {peer} failed: {e}"));
                 g.closed.insert(peer);
                 inbox.cv.notify_all();
@@ -364,6 +436,19 @@ impl TcpTransport {
         outbound: Vec<Option<TcpStream>>,
         inbound: Vec<Option<TcpStream>>,
     ) -> TcpTransport {
+        TcpTransport::from_streams_tuned(rank, outbound, inbound, None, RECV_DEADLINE)
+    }
+
+    /// [`TcpTransport::from_streams`] with the hostile-network knobs: a
+    /// chaos profile wrapping this rank's outgoing links and the receive
+    /// watchdog deadline.
+    pub(super) fn from_streams_tuned(
+        rank: usize,
+        outbound: Vec<Option<TcpStream>>,
+        inbound: Vec<Option<TcpStream>>,
+        chaos: Option<&ChaosProfile>,
+        recv_deadline: Duration,
+    ) -> TcpTransport {
         let n = outbound.len();
         assert_eq!(inbound.len(), n);
         let inbox = Arc::new(Inbox { state: Mutex::new(InboxState::default()), cv: Condvar::new() });
@@ -375,10 +460,11 @@ impl TcpTransport {
                 Some(s) => {
                     let q = Arc::new(SendQueue::new());
                     let q2 = q.clone();
+                    let inj = chaos.and_then(|c| c.injector(rank, peer));
                     writers.push(
                         std::thread::Builder::new()
                             .name(format!("pipegcn-w{rank}->{peer}"))
-                            .spawn(move || writer_loop(s, q2, rank, peer))
+                            .spawn(move || writer_loop(s, q2, rank, peer, inj))
                             .expect("spawn writer"),
                     );
                     out.push(Some(q));
@@ -433,6 +519,7 @@ impl TcpTransport {
             msgs_sent: AtomicU64::new(0),
             link_payload_bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
             tx_stats,
+            recv_deadline,
             writers,
             readers,
             shut: false,
@@ -468,7 +555,7 @@ impl TcpTransport {
 
     /// Messages received but not yet consumed (tests: leak detection).
     pub fn pending(&self) -> usize {
-        let g = self.inbox.state.lock().unwrap();
+        let g = plock(&self.inbox.state);
         g.queues.values().map(|q| q.len()).sum()
     }
 
@@ -549,7 +636,7 @@ impl Transport for TcpTransport {
         assert!(src < self.n && src != self.rank, "bad src {src}");
         let slot = comm::new_slot();
         {
-            let mut g = self.inbox.state.lock().unwrap();
+            let mut g = plock(&self.inbox.state);
             match g.pop_queued(src as u32, tag) {
                 Some((s, p)) => {
                     let leftover = comm::fulfill(&slot, s, p);
@@ -570,6 +657,7 @@ impl Transport for TcpTransport {
                 src,
                 tag,
                 slot,
+                deadline: self.recv_deadline,
             }),
         )
     }
@@ -798,6 +886,75 @@ mod tests {
                 + 2 * frame::CHUNK_OVERHEAD_BYTES as u64
                 + frame::DATA_OVERHEAD_BYTES as u64
         );
+        for m in &mut mesh {
+            m.shutdown();
+        }
+        assert_eq!(mesh[1].pending(), 0);
+    }
+
+    /// The wait watchdog: a receive parked past the configured deadline
+    /// fails naming the link, the tag, and the elapsed time — instead
+    /// of hanging the rank for the 300 s default.
+    #[test]
+    fn recv_watchdog_names_the_link_and_elapsed_time() {
+        use super::super::rendezvous::{localhost_mesh_with, ConnectOpts};
+        let opts = ConnectOpts {
+            recv_deadline: Some(Duration::from_millis(150)),
+            ..ConnectOpts::default()
+        };
+        let mut mesh = localhost_mesh_with(2, &opts).unwrap();
+        let tag = Tag::new(4, 2, Phase::BwdGrad);
+        let h = mesh[1].post_recv(0, 1, tag);
+        let waited = std::thread::spawn(move || {
+            let mut st = crate::comm::WaitStats::default();
+            h.wait(&mut st)
+        })
+        .join();
+        let msg = *waited.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("recv timeout"), "{msg}");
+        assert!(msg.contains("0->1"), "must name the link: {msg}");
+        assert!(msg.contains("ms"), "must report elapsed ms: {msg}");
+        assert!(msg.contains("--recv-deadline"), "must name the knob: {msg}");
+        // the poisoned-unwind path must not have killed the transport:
+        // undisturbed tags still flow and teardown is clean
+        let t2 = Tag::new(5, 0, Phase::FwdFeat);
+        mesh[0].send(0, 1, t2, vec![8.5]);
+        assert_eq!(mesh[1].recv_blocking(0, 1, t2), vec![8.5]);
+        for m in &mut mesh {
+            m.shutdown();
+        }
+    }
+
+    /// A chaotic link (latency + jitter + drops) delays frames but must
+    /// not reorder, lose, or mis-account them.
+    #[test]
+    fn chaotic_link_preserves_order_and_accounting() {
+        use super::super::chaos::ChaosProfile;
+        use super::super::rendezvous::{localhost_mesh_with, ConnectOpts};
+        let chaos = ChaosProfile::parse(
+            r#"{"seed": 11, "default":
+                {"latency_ms": 1, "jitter_ms": 2, "drop": 0.25, "rto_ms": 3}}"#,
+        )
+        .unwrap();
+        let opts = ConnectOpts { chaos: Some(chaos), ..ConnectOpts::default() };
+        let mut mesh = localhost_mesh_with(2, &opts).unwrap();
+        let tag = Tag::new(1, 0, Phase::FwdFeat);
+        for i in 0..20 {
+            mesh[0].send(0, 1, tag, vec![i as f32]);
+        }
+        for i in 0..20 {
+            assert_eq!(mesh[1].recv_blocking(0, 1, tag), vec![i as f32]);
+        }
+        assert_eq!(mesh[0].payload_bytes_sent(), 20 * 4);
+        assert_eq!(
+            mesh[0].wire_bytes_sent(),
+            20 * (4 + frame::DATA_OVERHEAD_BYTES as u64)
+        );
+        // the injected faults surfaced in the registry
+        let delays = obs::global()
+            .value("link_faults_total", &[("src", "0"), ("dst", "1"), ("kind", "delay")])
+            .unwrap_or(0.0);
+        assert!(delays >= 20.0, "every frame on this link is delayed: {delays}");
         for m in &mut mesh {
             m.shutdown();
         }

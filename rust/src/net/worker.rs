@@ -16,8 +16,14 @@
 //! Crash safety: with `--ckpt-dir` every rank snapshots its full
 //! [`TrainState`] every `--ckpt-every` epochs; with `--resume <dir>` a
 //! worker restores the latest complete checkpoint and continues the
-//! uninterrupted run bit-for-bit. `--fail-epoch` is fault injection for
-//! the recovery tests (exit(13) after that epoch completes).
+//! uninterrupted run bit-for-bit. When a *peer* dies mid-run, the
+//! transport fails every parked receive; instead of dying with it, a
+//! worker with a checkpoint directory catches the failure, drops its
+//! mesh, and re-dials the same rendezvous address — the launcher's
+//! rejoin round tells it which checkpoint epoch to roll back to, and
+//! training resumes bit-for-bit without this process ever restarting.
+//! `--fail-epoch` is fault injection for the recovery tests (exit(13)
+//! after that epoch completes).
 //!
 //! Multi-node reachability: `--bind HOST:PORT` puts the worker's mesh
 //! listener on a routable interface (default loopback; wildcards are
@@ -81,6 +87,21 @@ pub struct WorkerOpts {
     /// serve live Prometheus text on this address (`--metrics-addr`)
     /// for the lifetime of the run
     pub metrics_addr: Option<String>,
+    /// chaos profile JSON path (`--chaos`): deterministic per-link
+    /// latency/jitter/bandwidth/drop injection on this rank's outgoing
+    /// frames
+    pub chaos: Option<String>,
+    /// shared mesh secret (`--mesh-secret` / `PIPEGCN_MESH_SECRET`):
+    /// every join answers the rendezvous' HMAC challenge
+    pub mesh_secret: Option<String>,
+    /// mesh-formation deadline in seconds (`--form-deadline`)
+    pub form_deadline_secs: Option<u64>,
+    /// receive-watchdog deadline in seconds (`--recv-deadline`)
+    pub recv_deadline_secs: Option<u64>,
+    /// this worker is a replacement joining a live-rejoin round
+    /// (`--rejoin`, set by the launcher): the round must name the
+    /// checkpoint epoch to restore before training
+    pub rejoin: bool,
 }
 
 /// What rank 0 learns at the end of a distributed run.
@@ -104,6 +125,10 @@ pub struct WorkerSummary {
     /// quality of the partitioning every rank derived from the shared
     /// seed (edge cut, comm volume, replication, balance)
     pub quality: crate::partition::Quality,
+    /// live-rejoin rounds this process went through (peer deaths it
+    /// survived in place, plus one if it started as a `--rejoin`
+    /// replacement)
+    pub rejoins: u64,
 }
 
 /// Run one rank end to end. Returns `Some(summary)` on rank 0, `None`
@@ -181,7 +206,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
             TrainState::from_snapshot(snap, &cfg, &part)?
         }
     };
-    let start_epoch = st.epoch;
+    let mut start_epoch = st.epoch;
     if start_epoch >= cfg.epochs {
         // a recovered mesh whose last checkpoint landed on the final
         // epoch: nothing left to train — still join the mesh so rank 0
@@ -211,27 +236,93 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
     if let Some(n) = o.connect_retries {
         conn.retries = n;
     }
-    let mut transport = rendezvous::connect_with(o.rank, o.parts, &o.coord, &conn)
-        .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
-    // span tracing: enable the per-process recorder, then align clocks
-    // across the mesh (NTP-style ping/pong against rank 0) so the merged
-    // timeline reads as one machine. Strictly gated on --trace: untraced
-    // runs move exactly the bytes they always did.
-    if o.trace.is_some() {
-        crate::obs::trace::enable();
-        if o.rank == 0 {
-            crate::obs::trace::serve_clock_sync(&transport, o.parts);
-        } else {
-            let off = crate::obs::trace::clock_sync_offset(&transport, o.rank);
-            crate::obs::trace::set_offset_us(off);
-        }
+    if let Some(secs) = o.form_deadline_secs {
+        conn.form_deadline = Duration::from_secs(secs.max(1));
     }
-    let ctl = RankCtl {
-        ckpt: policy.as_ref(),
-        log: log_em.as_mut(),
-        kill_after_epoch: o.fail_epoch,
+    if let Some(secs) = o.recv_deadline_secs {
+        conn.recv_deadline = Some(Duration::from_secs(secs.max(1)));
+    }
+    conn.secret = o.mesh_secret.clone();
+    conn.chaos = match &o.chaos {
+        Some(path) => Some(super::chaos::ChaosProfile::load(path)?),
+        None => None,
     };
-    let rep = threaded::run_rank_ctl(&transport, &view, &cfg, &mut st, ctl)?;
+
+    // Join the mesh and train — and when a *peer* dies under a
+    // checkpoint policy, rejoin in place. The transport fails every
+    // parked receive the moment a link breaks; that panic is caught
+    // here, the broken mesh is dropped, and this process re-dials the
+    // same rendezvous address. The launcher's rejoin round then names
+    // the checkpoint epoch all ranks roll back to, so the healed mesh
+    // continues bit-for-bit. Anything that is not a transport failure —
+    // or a failure with no checkpoints to roll back to — still unwinds.
+    let mut expect_resume = o.rejoin;
+    let mut rejoins: u64 = 0;
+    let (rep, mut transport) = loop {
+        conn.expect_resume = expect_resume;
+        let (transport, resume_epoch) =
+            rendezvous::connect_session(o.rank, o.parts, &o.coord, &conn)
+                .with_context(|| format!("rank {} joining mesh via {}", o.rank, o.coord))?;
+        if let Some(epoch) = resume_epoch {
+            let dir = o.ckpt_dir.as_deref().with_context(|| {
+                format!(
+                    "rank {}: rejoin round names checkpoint epoch {epoch} but no \
+                     --ckpt-dir is set",
+                    o.rank
+                )
+            })?;
+            let snap = ckpt::load(dir, epoch as usize, o.rank)?;
+            st = TrainState::from_snapshot(snap, &cfg, &part)?;
+            start_epoch = st.epoch;
+            rejoins += 1;
+            eprintln!(
+                "[rank {}] rejoined the mesh at the epoch-{epoch} checkpoint",
+                o.rank
+            );
+        }
+        // span tracing: enable the per-process recorder, then align
+        // clocks across the mesh (NTP-style ping/pong against rank 0) so
+        // the merged timeline reads as one machine — redone per mesh, so
+        // a rejoined run stays aligned. Strictly gated on --trace:
+        // untraced runs move exactly the bytes they always did.
+        if o.trace.is_some() {
+            crate::obs::trace::enable();
+            if o.rank == 0 {
+                crate::obs::trace::serve_clock_sync(&transport, o.parts);
+            } else {
+                let off = crate::obs::trace::clock_sync_offset(&transport, o.rank);
+                crate::obs::trace::set_offset_us(off);
+            }
+        }
+        let ctl = RankCtl {
+            ckpt: policy.as_ref(),
+            log: log_em.as_mut(),
+            kill_after_epoch: o.fail_epoch,
+        };
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            threaded::run_rank_ctl(&transport, &view, &cfg, &mut st, ctl)
+        }));
+        match run {
+            Ok(rep) => break (rep?, transport),
+            Err(payload) => {
+                let msg = panic_text(payload.as_ref());
+                let transient = ["transport failed", "closed while", "recv timeout"]
+                    .iter()
+                    .any(|marker| msg.contains(marker));
+                if !transient || o.ckpt_dir.is_none() {
+                    std::panic::resume_unwind(payload);
+                }
+                eprintln!(
+                    "[rank {}] mesh broke mid-run ({}); re-entering the rendezvous at {}",
+                    o.rank,
+                    msg.lines().next().unwrap_or("?"),
+                    o.coord
+                );
+                drop(transport);
+                expect_resume = true;
+            }
+        }
+    };
 
     if o.rank != 0 {
         if o.trace.is_some() {
@@ -264,6 +355,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         comm_wait_ms: rep.comm_wait_ms,
         overlap_ratio: rep.overlap_ratio,
         quality,
+        rejoins,
     };
     transport.shutdown();
 
@@ -281,7 +373,7 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         if o.nodes > 0 {
             row = row.set("nodes", o.nodes);
         }
-        row
+        let mut row = row
             .set("start_epoch", summary.start_epoch)
             .set("final_loss", *summary.losses.last().unwrap_or(&f64::NAN))
             .set("losses", &summary.losses[..])
@@ -291,12 +383,27 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
             .set("wire_bytes_sent", summary.wire_bytes_sent)
             .set("comm_wait_ms", summary.comm_wait_ms)
             .set("overlap_ratio", summary.overlap_ratio)
+            .set("rejoins", summary.rejoins)
             .set("comm_wait", breakdown)
             .set("quality", quality.to_json())
-            .set("peak_rss_bytes", crate::obs::peak_rss_bytes().unwrap_or(0))
-            .write_file(path)?;
+            .set("peak_rss_bytes", crate::obs::peak_rss_bytes().unwrap_or(0));
+        if o.chaos.is_some() {
+            row = row.set("link_faults", super::chaos::faults_from(o.rank, o.parts));
+        }
+        row.write_file(path)?;
     }
     Ok(Some(summary))
+}
+
+/// Best-effort text of a caught panic payload (what `panic!` carried).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 /// Open rank 0's run log: freshly created with a header on a new run,

@@ -64,11 +64,13 @@ pub enum Engine {
     Threaded,
     /// One OS process per partition over localhost TCP: spawns
     /// `pipegcn worker` children, serves their rendezvous, supervises
-    /// them, and (with a checkpoint policy) relaunches the mesh from the
-    /// latest complete checkpoint when a worker dies — at most
-    /// `max_restarts` times.
+    /// them, and (with a checkpoint policy) heals a worker death in
+    /// place: only the dead rank is respawned, survivors re-rendezvous
+    /// on the same address, and every rank rolls back to the latest
+    /// complete checkpoint — falling back to a full mesh relaunch when a
+    /// rejoin round cannot form. At most `max_restarts` recovery rounds.
     Tcp {
-        /// mesh relaunches allowed after a failure (needs `.ckpt(..)`)
+        /// recovery rounds allowed after a failure (needs `.ckpt(..)`)
         max_restarts: usize,
     },
     /// One rank of a TCP mesh, joining via the `coord` rendezvous
@@ -174,7 +176,7 @@ pub struct Session<'a> {
     out: Option<String>,
     ckpt: Option<ckpt::Policy>,
     resume: Option<String>,
-    fail: Option<(usize, usize)>,
+    fail: Option<(usize, Vec<usize>)>,
     engine: Engine,
     binary: Option<PathBuf>,
     bind: Option<String>,
@@ -182,6 +184,11 @@ pub struct Session<'a> {
     connect_retries: Option<usize>,
     trace: Option<String>,
     metrics_addr: Option<String>,
+    chaos: Option<String>,
+    mesh_secret: Option<String>,
+    form_deadline: Option<u64>,
+    recv_deadline: Option<u64>,
+    rejoin: bool,
 }
 
 /// Distinguishes concurrent sessions' scratch report files within one
@@ -214,6 +221,11 @@ impl<'a> Session<'a> {
             connect_retries: None,
             trace: None,
             metrics_addr: None,
+            chaos: None,
+            mesh_secret: None,
+            form_deadline: None,
+            recv_deadline: None,
+            rejoin: false,
         }
     }
 
@@ -351,7 +363,55 @@ impl<'a> Session<'a> {
     /// after completing `epoch`. TCP engines only — a process can die,
     /// a thread cannot without taking the mesh with it.
     pub fn fail_epoch(mut self, rank: usize, epoch: usize) -> Self {
-        self.fail = Some((rank, epoch));
+        self.fail = Some((rank, vec![epoch]));
+        self
+    }
+
+    /// Fault injection with one entry per spawn of `rank`: the original
+    /// dies after `epochs[0]`, its replacement after `epochs[1]`, and so
+    /// on — recovery-of-recovery is testable this way. TCP engines only.
+    pub fn fail_epochs(mut self, rank: usize, epochs: Vec<usize>) -> Self {
+        self.fail = Some((rank, epochs));
+        self
+    }
+
+    /// Inject deterministic per-link faults (latency, jitter, bandwidth
+    /// caps, frame drops) from a chaos profile JSON at `path` — see
+    /// [`crate::net::chaos`]. TCP engines only.
+    pub fn chaos(mut self, path: &str) -> Self {
+        self.chaos = Some(path.to_string());
+        self
+    }
+
+    /// Authenticate mesh formation with a shared secret: every join
+    /// answers an HMAC challenge, and joins that cannot are rejected
+    /// with the offender named. TCP engines only.
+    pub fn mesh_secret(mut self, secret: &str) -> Self {
+        self.mesh_secret = Some(secret.to_string());
+        self
+    }
+
+    /// Mesh-formation deadline in seconds (`--form-deadline`; default
+    /// 60). A rendezvous that cannot gather every rank in time fails
+    /// naming the ranks that never arrived. TCP engines only.
+    pub fn form_deadline(mut self, secs: u64) -> Self {
+        self.form_deadline = Some(secs);
+        self
+    }
+
+    /// Receive-watchdog deadline in seconds (`--recv-deadline`; default
+    /// 300): a parked receive past this fails naming the exact
+    /// `(src, dst, tag)` link. TCP engines only.
+    pub fn recv_deadline(mut self, secs: u64) -> Self {
+        self.recv_deadline = Some(secs);
+        self
+    }
+
+    /// Join a live-rejoin round (`--rejoin`): the rendezvous must name a
+    /// checkpoint epoch to restore. Set by the launcher on replacement
+    /// workers; `TcpWorker` engine only.
+    pub fn rejoin(mut self, on: bool) -> Self {
+        self.rejoin = on;
         self
     }
 
@@ -436,6 +496,11 @@ impl<'a> Session<'a> {
             connect_retries,
             trace,
             metrics_addr,
+            chaos,
+            mesh_secret,
+            form_deadline,
+            recv_deadline,
+            rejoin,
         } = self;
 
         if threads == Some(0) {
@@ -450,6 +515,26 @@ impl<'a> Session<'a> {
             crate::bail!(
                 "bind/connect_timeout/connect_retries configure a TcpWorker's mesh \
                  joining; the other engines bind loopback listeners themselves"
+            );
+        }
+        // hostile-network knobs describe a real socket mesh; on the
+        // in-process engines there is no wire to disturb or authenticate
+        if (chaos.is_some()
+            || mesh_secret.is_some()
+            || form_deadline.is_some()
+            || recv_deadline.is_some())
+            && !matches!(engine, Engine::Tcp { .. } | Engine::TcpWorker { .. })
+        {
+            crate::bail!(
+                "chaos/mesh_secret/form_deadline/recv_deadline shape the TCP mesh; \
+                 the in-process engines have no wire (use Engine::Tcp or \
+                 Engine::TcpWorker)"
+            );
+        }
+        if rejoin && !matches!(engine, Engine::TcpWorker { .. }) {
+            crate::bail!(
+                "rejoin marks a replacement TcpWorker joining a live-rejoin round; \
+                 the launcher sets it — it is meaningless on other engines"
             );
         }
         if let Some(p) = &ckpt_policy {
@@ -711,10 +796,14 @@ impl<'a> Session<'a> {
                     resume,
                     max_restarts,
                     threads,
-                    fail_rank: fail.map(|(r, _)| r),
-                    fail_epoch: fail.map(|(_, e)| e),
+                    fail_rank: fail.as_ref().map(|(r, _)| *r),
+                    fail_epochs: fail.map(|(_, es)| es).unwrap_or_default(),
                     trace,
                     metrics_addr,
+                    chaos,
+                    mesh_secret,
+                    form_deadline_secs: form_deadline,
+                    recv_deadline_secs: recv_deadline,
                 };
                 let bin = match binary {
                     Some(b) => b,
@@ -804,12 +893,20 @@ impl<'a> Session<'a> {
                     ckpt_dir: ckpt_policy.as_ref().map(|p| p.dir.clone()),
                     ckpt_every: ckpt_policy.as_ref().map(|p| p.every).unwrap_or(1),
                     resume,
-                    fail_epoch: fail.and_then(|(r, e)| (r == rank).then_some(e)),
+                    fail_epoch: match fail {
+                        Some((r, es)) if r == rank => es.first().copied(),
+                        _ => None,
+                    },
                     bind,
                     connect_timeout_secs: connect_timeout,
                     connect_retries,
                     trace,
                     metrics_addr,
+                    chaos,
+                    mesh_secret,
+                    form_deadline_secs: form_deadline,
+                    recv_deadline_secs: recv_deadline,
+                    rejoin,
                 };
                 let summary = worker::run_worker(&wopts)?;
                 Ok(match summary {
@@ -896,6 +993,23 @@ mod tests {
         let e = Session::preset("tiny").bind("10.0.0.5:0").epochs(1).run().unwrap_err();
         assert!(e.to_string().contains("TcpWorker"), "{e}");
         let e = Session::preset("tiny").connect_retries(3).epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("TcpWorker"), "{e}");
+        // hostile-network knobs need a real wire
+        let e = Session::preset("tiny").chaos("p.json").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("Engine::Tcp"), "{e}");
+        let e = Session::preset("tiny").mesh_secret("s").epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("Engine::Tcp"), "{e}");
+        let e = Session::preset("tiny").form_deadline(5).epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("Engine::Tcp"), "{e}");
+        let e = Session::preset("tiny").recv_deadline(5).epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("Engine::Tcp"), "{e}");
+        let e = Session::preset("tiny").rejoin(true).epochs(1).run().unwrap_err();
+        assert!(e.to_string().contains("replacement"), "{e}");
+        let e = Session::preset("tiny")
+            .rejoin(true)
+            .engine(Engine::Tcp { max_restarts: 0 })
+            .run()
+            .unwrap_err();
         assert!(e.to_string().contains("TcpWorker"), "{e}");
     }
 

@@ -67,10 +67,49 @@ pub fn rig_mi60(nodes: usize, per_node: usize) -> (DeviceProfile, Topology) {
     (MI60, Topology::multi_node(nodes, per_node, pcie3_link(), eth10g_link()))
 }
 
+/// Degrade a simulated link by the expected value of a chaos profile's
+/// per-link faults — the analytic mirror of running `--chaos` on a real
+/// mesh. Added latency is the injector's mean per-frame delay (fixed
+/// latency + mean jitter + the expected geometric run of drop→RTO
+/// cycles); a bandwidth cap clamps the link's byte rate.
+pub fn apply_chaos(link: Link, chaos: &crate::net::chaos::LinkChaos) -> Link {
+    let bytes_per_s = match chaos.bandwidth_bytes_per_s() {
+        Some(cap) => link.bytes_per_s.min(cap),
+        None => link.bytes_per_s,
+    };
+    Link { latency_s: link.latency_s + chaos.expected_extra_latency_s(), bytes_per_s }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::chaos::LinkChaos;
     use crate::sim::{epoch_time, LayerCompute, Mode, PartitionWork};
+
+    #[test]
+    fn apply_chaos_degrades_a_link_by_expectation() {
+        let base = gloo_pcie_link();
+        // no faults: the link is untouched
+        let same = apply_chaos(base, &LinkChaos::default());
+        assert_eq!(same.latency_s, base.latency_s);
+        assert_eq!(same.bytes_per_s, base.bytes_per_s);
+        // 20ms fixed + 5ms jitter (mean 2.5) + 1% drops at 50ms RTO,
+        // capped at 100 mbit/s = 12.5 MB/s
+        let c = LinkChaos {
+            latency_ms: 20.0,
+            jitter_ms: 5.0,
+            drop: 0.01,
+            bandwidth_mbps: 100.0,
+            rto_ms: 50.0,
+        };
+        let hostile = apply_chaos(base, &c);
+        let want_extra = (20.0 + 2.5 + 0.01 / 0.99 * 50.0) / 1e3;
+        assert!((hostile.latency_s - base.latency_s - want_extra).abs() < 1e-12);
+        assert_eq!(hostile.bytes_per_s, 12.5e6);
+        // a cap looser than the link leaves its rate alone
+        let loose = apply_chaos(base, &LinkChaos { bandwidth_mbps: 1e6, ..c });
+        assert_eq!(loose.bytes_per_s, base.bytes_per_s);
+    }
 
     /// Reconstruct the paper's Reddit/2-GPU Table 6 rows from first
     /// principles and check the calibration lands near them.

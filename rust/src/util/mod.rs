@@ -13,6 +13,7 @@ pub mod cli;
 pub mod timer;
 pub mod prop;
 pub mod error;
+pub mod sha256;
 
 /// Format a byte count human-readably (e.g. `1.50 GiB`).
 pub fn fmt_bytes(b: u64) -> String {

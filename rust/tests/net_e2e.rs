@@ -278,6 +278,201 @@ fn launch_recovers_from_worker_death_and_matches_sequential() {
     }
     // the job left complete checkpoints behind (epochs 2, 4, 6)
     assert_eq!(pipegcn::ckpt::latest_complete(&ckpt_dir, 2).unwrap(), Some(6));
+    // and it recovered by live rejoin — rank 0's process survived the
+    // death and re-entered the rendezvous instead of being relaunched
+    assert_eq!(
+        result.get("rejoins").and_then(Json::as_usize),
+        Some(1),
+        "rank 0 must heal in place, not restart"
+    );
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Recovery of recovery: `--fail-epoch 3,5` arms the original rank 1
+/// *and* its replacement, so the mesh is broken twice. Each rejoin round
+/// must heal the previous one's replacement, and the final curve still
+/// matches the uninterrupted sequential run bit-for-bit.
+#[test]
+fn launch_survives_two_generations_of_worker_death() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_rerecover_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    let ckpt_dir = format!("{base}/ckpt");
+    let out_path = format!("{base}/out.json");
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "6", "--seed", "1", "--ckpt-every", "2",
+            "--fail-rank", "1", "--fail-epoch", "3,5",
+        ])
+        .args(["--ckpt-dir", &ckpt_dir, "--out", &out_path])
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "launch must survive both deaths, got {status}");
+
+    let result = Json::parse(&std::fs::read_to_string(&out_path).expect("result json"))
+        .expect("parse result json");
+    // second death lands after epoch 5, so the last recovery rolled back
+    // to the epoch-4 checkpoint
+    assert_eq!(result.get("start_epoch").and_then(Json::as_usize), Some(4));
+    assert_eq!(
+        result.get("rejoins").and_then(Json::as_usize),
+        Some(2),
+        "rank 0 must rejoin once per death"
+    );
+    let losses: Vec<f64> = result
+        .get("losses")
+        .and_then(Json::as_arr)
+        .expect("losses array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    assert_eq!(losses.len(), 2); // epochs 5..=6
+
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 6, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
+    for (i, &loss) in losses.iter().enumerate() {
+        let want = seq.result.curve[4 + i].train_loss;
+        assert_eq!(
+            want.to_bits(),
+            loss.to_bits(),
+            "epoch {}: sequential {} vs twice-recovered {}",
+            5 + i,
+            want,
+            loss
+        );
+    }
+    assert_eq!(pipegcn::ckpt::latest_complete(&ckpt_dir, 2).unwrap(), Some(6));
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A real worker process presenting the wrong mesh secret is turned
+/// away: the rendezvous error names the rejected rank and the worker
+/// exits nonzero instead of joining.
+#[test]
+fn worker_process_with_wrong_secret_is_rejected() {
+    use pipegcn::net::rendezvous::{serve_with, ServeOpts};
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let coord = listener.local_addr().unwrap().to_string();
+    // the round wants 2 ranks, but the auth check fires per hello — the
+    // bad join is rejected without waiting for anyone else
+    let server = std::thread::spawn(move || {
+        let sopts = ServeOpts { secret: Some("right".to_string()), ..ServeOpts::default() };
+        serve_with(&listener, 2, &sopts)
+    });
+    let out = std::process::Command::new(bin)
+        .args([
+            "worker", "--rank", "0", "--parts", "2", "--dataset", "tiny",
+            "--epochs", "1", "--mesh-secret", "wrong", "--coord",
+        ])
+        .arg(&coord)
+        .output()
+        .expect("running pipegcn worker");
+    assert!(!out.status.success(), "a wrong-secret worker must not join");
+    let e = server.join().unwrap().expect_err("rendezvous must reject the join");
+    let msg = e.to_string();
+    assert!(msg.contains("mesh auth failed"), "{msg}");
+    assert!(msg.contains("rank 0"), "the rejection must name the rank: {msg}");
+}
+
+/// With matching secrets everywhere (the launcher hands workers the
+/// secret via PIPEGCN_MESH_SECRET), an authenticated 2-process launch
+/// trains end to end and still matches the sequential run bit-for-bit.
+#[test]
+fn launch_with_mesh_secret_matches_sequential_bitwise() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let out_path = format!("/tmp/pipegcn_auth_launch_{}.json", std::process::id());
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "2", "--seed", "1", "--mesh-secret", "hunter2", "--out",
+        ])
+        .arg(&out_path)
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "authenticated launch exited with {status}");
+    let result = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).unwrap();
+    let final_loss = result.get("final_loss").and_then(Json::as_f64).unwrap();
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 2, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
+    assert_eq!(
+        final_loss.to_bits(),
+        seq.result.curve.last().unwrap().train_loss.to_bits(),
+        "auth must not perturb training"
+    );
+    std::fs::remove_file(&out_path).ok();
+}
+
+/// Chaos shapes *when* frames arrive, never *what* a tag resolves to: a
+/// 2-process launch under per-link latency/jitter/drops must produce a
+/// loss curve bit-identical to the sequential trainer, while the result
+/// file reports the injected fault count.
+#[test]
+fn launch_under_chaos_is_bit_identical_and_counts_faults() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_chaos_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let profile = format!("{base}/chaos.json");
+    std::fs::write(
+        &profile,
+        r#"{"seed": 7, "default": {"latency_ms": 2, "jitter_ms": 1, "drop": 0.05, "rto_ms": 3}}"#,
+    )
+    .unwrap();
+    let out_path = format!("{base}/out.json");
+    let status = std::process::Command::new(bin)
+        .args([
+            "launch", "--parts", "2", "--dataset", "tiny", "--method", "pipegcn",
+            "--epochs", "3", "--seed", "1",
+        ])
+        .args(["--chaos", &profile, "--out", &out_path])
+        .status()
+        .expect("running pipegcn launch");
+    assert!(status.success(), "chaos launch exited with {status}");
+
+    let result = Json::parse(&std::fs::read_to_string(&out_path).unwrap()).unwrap();
+    let losses: Vec<f64> = result
+        .get("losses")
+        .and_then(Json::as_arr)
+        .expect("losses array")
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    let seq = Session::preset("tiny")
+        .parts(2)
+        .variant("pipegcn")
+        .run_opts(RunOpts { epochs: 3, ..Default::default() })
+        .run()
+        .unwrap()
+        .into_output();
+    for (e, stat) in seq.result.curve.iter().enumerate() {
+        assert_eq!(
+            stat.train_loss.to_bits(),
+            losses[e].to_bits(),
+            "epoch {}: chaos changed the bits (sequential {} vs {})",
+            e + 1,
+            stat.train_loss,
+            losses[e]
+        );
+    }
+    // every frame on rank 0's outgoing links paid a delay, so the
+    // injected-fault counter must be live and nonzero
+    let faults = result
+        .get("link_faults")
+        .and_then(Json::as_usize)
+        .expect("chaos runs report link_faults");
+    assert!(faults > 0, "a 2ms-latency profile must count delay faults");
     std::fs::remove_dir_all(&base).ok();
 }
 

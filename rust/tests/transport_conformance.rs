@@ -8,7 +8,9 @@
 //! `overlap_ratio`).
 
 use pipegcn::comm::{Fabric, Phase, Tag, Transport, WaitStats};
-use pipegcn::net::localhost_mesh;
+use pipegcn::net::chaos::ChaosProfile;
+use pipegcn::net::rendezvous::ConnectOpts;
+use pipegcn::net::{localhost_mesh, localhost_mesh_with};
 use pipegcn::session::{Engine, Session};
 use pipegcn::util::json::{parse_ndjson, Json};
 use std::time::Duration;
@@ -162,6 +164,35 @@ fn tcp_satisfies_the_transport_conformance_suite() {
     assert_eq!(mesh[1].pending(), 0, "the suite must drain everything it sends");
     for m in &mut mesh {
         m.shutdown();
+    }
+}
+
+/// The whole contract — FIFO per tag, drop recovery, byte accounting —
+/// must survive an actively hostile wire. The chaos injector delays and
+/// "drops" (withholds for an RTO, then retransmits) frames on the writer
+/// path; none of that may reorder a link, lose a message, or change what
+/// the sender's accounting says went out. Several seeds, so different
+/// drop patterns all hold.
+#[test]
+fn tcp_satisfies_the_conformance_suite_under_chaos() {
+    for seed in [1u64, 2, 7] {
+        let profile = ChaosProfile::parse(&format!(
+            r#"{{"seed": {seed},
+                 "default": {{"latency_ms": 1, "jitter_ms": 2, "drop": 0.2, "rto_ms": 3}}}}"#
+        ))
+        .unwrap();
+        let opts = ConnectOpts { chaos: Some(profile), ..ConnectOpts::default() };
+        let mut mesh = localhost_mesh_with(2, &opts).unwrap();
+        let wire_before = mesh[0].wire_bytes_sent();
+        conformance(&mesh[0], &mesh[1], 0, 1);
+        assert_eq!(mesh[1].pending(), 0, "seed {seed}: the suite must drain everything");
+        assert!(
+            mesh[0].wire_bytes_sent() > wire_before,
+            "seed {seed}: chaos never suppresses a frame — every send hits the wire"
+        );
+        for m in &mut mesh {
+            m.shutdown();
+        }
     }
 }
 
