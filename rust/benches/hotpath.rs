@@ -65,7 +65,7 @@ fn main() {
     let fabric = Fabric::new(4);
     let mut bufs: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0f32; 40_000]).collect();
     bench("ring all-reduce 4×40k f32", 20, || {
-        ring_allreduce(&fabric, &mut bufs, 0);
+        ring_allreduce(&fabric, &mut bufs, 0).unwrap();
     });
 
     // end-to-end iteration (reddit-sim, 4 parts)

@@ -5,7 +5,9 @@
 //! the standard 2(n−1)-step ring so the byte counters reflect exactly
 //! what NCCL-style collectives would move: `2·(n−1)/n · bytes` per rank.
 
+use super::schedule::{self, Event, Style};
 use super::{Fabric, Phase, Tag};
+use crate::util::error::Result;
 
 /// Tag of one ring step (reduce-scatter steps `0..n-1`, then all-gather
 /// steps `n-1..2(n-1)`), shared by both all-reduce implementations.
@@ -16,27 +18,49 @@ use super::{Fabric, Phase, Tag};
 /// The previous scheme packed `step·n + chunk` (up to `2n²`) into the
 /// u16 layer field, which silently wrapped around from n ≈ 182 ranks;
 /// steps top out at `2(n-1)`, and the unrepresentable case (n > 32769)
-/// now fails loudly instead.
-pub fn step_tag(iter: u32, step: usize, n: usize) -> Tag {
+/// is an `Err` the schedule generator rejects statically — the runtime
+/// propagates it instead of panicking.
+pub fn step_tag(iter: u32, step: usize, n: usize) -> Result<Tag> {
     let steps = 2 * (n - 1);
-    assert!(
-        steps <= u16::MAX as usize + 1,
-        "ring all-reduce over {n} ranks needs {steps} step tags, \
-         which cannot fit the u16 tag layer field"
-    );
+    if steps > u16::MAX as usize + 1 {
+        return Err(format!(
+            "ring all-reduce over {n} ranks needs {steps} step tags (iteration {iter}, \
+             step {step}), which cannot fit the u16 tag layer field"
+        )
+        .into());
+    }
     debug_assert!(step < steps, "step {step} out of range for {n} ranks");
-    Tag::new(iter, step as u16, Phase::Reduce)
+    Ok(Tag::new(iter, step as u16, Phase::Reduce))
 }
 
 /// Run ring all-reduce over `bufs` (one buffer per rank, all same length),
-/// leaving every buffer equal to the elementwise sum. Message traffic goes
-/// through `fabric` (tagged `Phase::Reduce`, iteration `iter`).
-pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
+/// leaving every buffer equal to the elementwise sum. Convenience wrapper
+/// that generates the per-rank [`Style::Inline`] ring events itself; the
+/// trainer passes its schedule's ring segments to
+/// [`ring_allreduce_events`] directly.
+pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) -> Result<()> {
+    let n = bufs.len();
+    let events: Vec<Vec<Event>> = (0..n)
+        .map(|r| schedule::ring_events(Style::Inline, iter, r, n))
+        .collect::<Result<_>>()?;
+    let segs: Vec<&[Event]> = events.iter().map(|e| e.as_slice()).collect();
+    ring_allreduce_events(fabric, bufs, &segs);
+    Ok(())
+}
+
+/// The sequential-replay ring executor: drives all ranks' steps in
+/// program order, taking every (peer, tag) from the rank's IR segment
+/// (`segs[r]`, the [`Style::Inline`] layout of [`schedule::ring_events`]
+/// — `Send`, `PostRecv`, `Claim` per step). The chunk arithmetic stays
+/// here; message identity comes from the schedule.
+pub fn ring_allreduce_events(fabric: &Fabric, bufs: &mut [Vec<f32>], segs: &[&[Event]]) {
     let n = bufs.len();
     assert_eq!(fabric.n_ranks(), n);
     if n <= 1 {
         return;
     }
+    assert_eq!(segs.len(), n);
+    assert!(segs.iter().all(|s| s.len() == 3 * 2 * (n - 1)));
     let len = bufs[0].len();
     assert!(bufs.iter().all(|b| b.len() == len));
     if len == 0 {
@@ -45,17 +69,24 @@ pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
     // chunk boundaries: chunk c = [starts[c], starts[c+1])
     let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
     let chunk = |c: usize| starts[c % n]..starts[c % n + 1];
+    let send_of = |r: usize, s: usize| match segs[r][3 * s] {
+        Event::Send { dst, tag } => (dst, tag),
+        other => panic!("ring schedule: expected a send at step {s}, got {other:?}"),
+    };
+    let recv_of = |r: usize, s: usize| match segs[r][3 * s + 1] {
+        Event::PostRecv { src, tag } => (src, tag),
+        other => panic!("ring schedule: expected a posted receive at step {s}, got {other:?}"),
+    };
 
     // reduce-scatter: step s, rank r sends chunk (r - s) to r+1
     for s in 0..n - 1 {
-        let tag = step_tag(iter, s, n);
         for r in 0..n {
             let c = (r + n - s) % n;
-            let payload = bufs[r][chunk(c)].to_vec();
-            fabric.send(r, (r + 1) % n, tag, payload);
+            let (dst, tag) = send_of(r, s);
+            fabric.send(r, dst, tag, bufs[r][chunk(c)].to_vec());
         }
         for r in 0..n {
-            let src = (r + n - 1) % n;
+            let (src, tag) = recv_of(r, s);
             let c = (src + n - s) % n;
             let recv = fabric.recv_now(src, r, tag);
             for (dst, v) in bufs[r][chunk(c)].iter_mut().zip(recv) {
@@ -65,14 +96,13 @@ pub fn ring_allreduce(fabric: &Fabric, bufs: &mut [Vec<f32>], iter: u32) {
     }
     // all-gather: step s, rank r sends its completed chunk (r + 1 - s)
     for s in 0..n - 1 {
-        let tag = step_tag(iter, n - 1 + s, n);
         for r in 0..n {
             let c = (r + 1 + n - s) % n;
-            let payload = bufs[r][chunk(c)].to_vec();
-            fabric.send(r, (r + 1) % n, tag, payload);
+            let (dst, tag) = send_of(r, n - 1 + s);
+            fabric.send(r, dst, tag, bufs[r][chunk(c)].to_vec());
         }
         for r in 0..n {
-            let src = (r + n - 1) % n;
+            let (src, tag) = recv_of(r, n - 1 + s);
             let c = (src + 1 + n - s) % n;
             let recv = fabric.recv_now(src, r, tag);
             bufs[r][chunk(c)].copy_from_slice(&recv);
@@ -109,7 +139,7 @@ mod tests {
                     *w += v;
                 }
             }
-            ring_allreduce(&fabric, &mut bufs, 0);
+            ring_allreduce(&fabric, &mut bufs, 0).unwrap();
             for (r, b) in bufs.iter().enumerate() {
                 prop::assert_close(b, &want, 1e-4)
                     .map_err(|e| format!("rank {r}: {e}"))?;
@@ -123,7 +153,7 @@ mod tests {
     fn single_rank_noop() {
         let fabric = Fabric::new(1);
         let mut bufs = vec![vec![1.0, 2.0]];
-        ring_allreduce(&fabric, &mut bufs, 0);
+        ring_allreduce(&fabric, &mut bufs, 0).unwrap();
         assert_eq!(bufs[0], vec![1.0, 2.0]);
         assert_eq!(fabric.total_bytes(), 0);
     }
@@ -134,7 +164,7 @@ mod tests {
         let len = 80; // divisible by n so the formula is exact
         let fabric = Fabric::new(n);
         let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![r as f32; len]).collect();
-        ring_allreduce(&fabric, &mut bufs, 0);
+        ring_allreduce(&fabric, &mut bufs, 0).unwrap();
         let per_rank = ring_bytes_per_rank(n, len);
         for r in 0..n {
             let sent: u64 = (0..n).map(|d| fabric.bytes(r, d)).sum();
@@ -148,7 +178,7 @@ mod tests {
         let len = 7; // not divisible
         let fabric = Fabric::new(n);
         let mut bufs: Vec<Vec<f32>> = (0..n).map(|r| vec![(r + 1) as f32; len]).collect();
-        ring_allreduce(&fabric, &mut bufs, 1);
+        ring_allreduce(&fabric, &mut bufs, 1).unwrap();
         for b in &bufs {
             assert!(b.iter().all(|&v| (v - 6.0).abs() < 1e-6));
         }
@@ -172,7 +202,7 @@ mod tests {
                 *w += v;
             }
         }
-        ring_allreduce(&fabric, &mut bufs, 3);
+        ring_allreduce(&fabric, &mut bufs, 3).unwrap();
         for (r, b) in bufs.iter().enumerate() {
             prop::assert_close(b, &want, 1e-4).unwrap_or_else(|e| panic!("rank {r}: {e}"));
         }
@@ -184,22 +214,28 @@ mod tests {
         for n in [2usize, 182, 300, 32769] {
             let mut seen = std::collections::HashSet::new();
             for s in 0..2 * (n - 1) {
-                assert!(seen.insert(step_tag(7, s, n)), "n={n}: duplicate tag at step {s}");
+                assert!(
+                    seen.insert(step_tag(7, s, n).unwrap()),
+                    "n={n}: duplicate tag at step {s}"
+                );
             }
         }
     }
 
     #[test]
-    #[should_panic(expected = "cannot fit")]
     fn step_tag_rejects_unrepresentable_rank_count() {
-        let _ = step_tag(0, 0, 40_000);
+        let err = step_tag(2, 0, 40_000).unwrap_err().to_string();
+        assert!(err.contains("cannot fit"), "{err}");
+        for needle in ["40000", "79998", "iteration 2", "step 0"] {
+            assert!(err.contains(needle), "missing {needle:?} in {err}");
+        }
     }
 
     #[test]
     fn empty_buffers_noop() {
         let fabric = Fabric::new(3);
         let mut bufs = vec![vec![], vec![], vec![]];
-        ring_allreduce(&fabric, &mut bufs, 0);
+        ring_allreduce(&fabric, &mut bufs, 0).unwrap();
         assert_eq!(fabric.total_bytes(), 0);
     }
 }

@@ -35,6 +35,7 @@
 //! transport.
 
 pub mod allreduce;
+pub mod schedule;
 pub mod topology;
 
 use std::collections::BTreeMap;
@@ -53,8 +54,10 @@ pub enum Phase {
     BwdGrad,
     /// model-gradient all-reduce chunks
     Reduce,
-    /// control/setup (boundary-set exchange, per-epoch loss reduction)
+    /// control/setup (boundary-set exchange, trace clock sync)
     Setup,
+    /// per-epoch scalar loss reduction to rank 0
+    Loss,
 }
 
 /// Message identity: (iteration, layer, phase). PipeGCN tags messages
@@ -75,6 +78,7 @@ impl Phase {
             Phase::BwdGrad => 1,
             Phase::Reduce => 2,
             Phase::Setup => 3,
+            Phase::Loss => 4,
         }
     }
 
@@ -84,6 +88,7 @@ impl Phase {
             1 => Some(Phase::BwdGrad),
             2 => Some(Phase::Reduce),
             3 => Some(Phase::Setup),
+            4 => Some(Phase::Loss),
             _ => None,
         }
     }
@@ -92,6 +97,14 @@ impl Phase {
 impl Tag {
     pub fn new(iter: u32, layer: u16, phase: Phase) -> Tag {
         Tag { iter, layer, phase }
+    }
+
+    /// The epoch-`iter` loss-partial tag. Loss messages carry their own
+    /// phase so no field is ever punned: the (src, dst) link identifies
+    /// the sender, and `layer` stays 0 — the schedule analyzer's
+    /// aliasing check needs no special case for them.
+    pub fn loss(iter: u32) -> Tag {
+        Tag { iter, layer: 0, phase: Phase::Loss }
     }
 }
 
@@ -208,6 +221,9 @@ pub struct RecvHandle {
 
 impl RecvHandle {
     pub(crate) fn new(src: usize, dst: usize, tag: Tag, fut: Box<dyn RecvFuture>) -> RecvHandle {
+        // every transport constructs its handles here, so this is the
+        // one conformance hook for the PostRecv side of the schedule
+        schedule::observe(schedule::OpKind::PostRecv, dst, src, tag);
         RecvHandle { src, dst, tag, fut }
     }
 
@@ -226,7 +242,11 @@ impl RecvHandle {
     /// Claim the payload if it has already arrived; never blocks. After
     /// `Some`, the handle is spent (dropping it is a no-op).
     pub fn try_take(&mut self) -> Option<Vec<f32>> {
-        self.fut.try_take()
+        let v = self.fut.try_take();
+        if v.is_some() {
+            schedule::observe(schedule::OpKind::Claim, self.dst, self.src, self.tag);
+        }
+        v
     }
 
     /// Block until the payload arrives. Time actually spent parked is
@@ -236,6 +256,7 @@ impl RecvHandle {
     /// tracer is on, a parked wait also records a `comm_wait` span on
     /// the receiving rank's comm lane (the stall made visible).
     pub fn wait(mut self, stats: &mut WaitStats) -> Vec<f32> {
+        schedule::observe(schedule::OpKind::Wait, self.dst, self.src, self.tag);
         if let Some(v) = self.fut.try_take() {
             stats.hit(self.tag);
             return v;
@@ -259,6 +280,7 @@ impl RecvHandle {
     /// [`RecvHandle::wait`] without attribution (setup/control paths
     /// and the [`Transport::recv_blocking`] shim).
     pub fn wait_untracked(mut self) -> Vec<f32> {
+        schedule::observe(schedule::OpKind::Wait, self.dst, self.src, self.tag);
         self.fut.wait_take()
     }
 
@@ -266,6 +288,7 @@ impl RecvHandle {
     /// engine's replay, where the producer ran earlier in program
     /// order). Panics with a diagnostic naming the exact message.
     pub fn take_now(mut self) -> Vec<f32> {
+        schedule::observe(schedule::OpKind::Claim, self.dst, self.src, self.tag);
         match self.fut.try_take() {
             Some(v) => v,
             None => panic!(
@@ -354,6 +377,7 @@ impl WaitStats {
                 Phase::BwdGrad => format!("bwd_l{layer}"),
                 Phase::Reduce => "reduce".to_string(),
                 Phase::Setup => "setup".to_string(),
+                Phase::Loss => "loss".to_string(),
             };
             match out.iter_mut().find(|(k, _)| *k == key) {
                 Some(e) => e.1 += secs * 1e3,
@@ -584,6 +608,7 @@ impl Fabric {
     /// oldest live reservation, or queue for a later receive.
     pub fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert!(src < self.n && dst < self.n);
+        schedule::observe(schedule::OpKind::Send, src, dst, tag);
         let key = (src as u32, dst as u32);
         let mut g = self.shared.inner.lock().unwrap();
         g.bytes[src][dst] += (payload.len() * 4) as u64;
@@ -928,7 +953,7 @@ mod tests {
 
     #[test]
     fn phase_codes_roundtrip() {
-        for p in [Phase::FwdFeat, Phase::BwdGrad, Phase::Reduce, Phase::Setup] {
+        for p in [Phase::FwdFeat, Phase::BwdGrad, Phase::Reduce, Phase::Setup, Phase::Loss] {
             assert_eq!(Phase::from_code(p.code()), Some(p));
         }
         assert_eq!(Phase::from_code(9), None);

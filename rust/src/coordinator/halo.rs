@@ -99,6 +99,56 @@ impl PartView<'_> {
     pub fn rank(&self) -> usize {
         self.part.part
     }
+
+    /// This rank's boundary connectivity as the schedule IR's link map:
+    /// `feat_in[j]` ⇔ peer j owns part of my halo (`halo_ranges[j]`
+    /// nonempty), `feat_out[j]` ⇔ peer j's halo needs my inner rows
+    /// (`send_sets[j]` nonempty). The schedule generators derive every
+    /// gradient/loss/ring link from these.
+    pub fn comm_links(&self) -> crate::comm::schedule::RankLinks {
+        let p = self.part;
+        let rank = self.rank();
+        let feat_in: Vec<bool> =
+            (0..self.n_parts).map(|j| j != rank && !p.halo_ranges[j].is_empty()).collect();
+        let feat_out: Vec<bool> =
+            (0..self.n_parts).map(|j| j != rank && !p.send_sets[j].is_empty()).collect();
+        crate::comm::schedule::RankLinks::new(rank, feat_in, feat_out)
+    }
+}
+
+/// Boundary connectivity of **every** rank straight from topology +
+/// assignment — the same nonempty-ness predicates [`build_part`]
+/// materializes as `halo_ranges` / `send_sets`, without building
+/// features, labels, or any plan. `pipegcn check` uses this to generate
+/// schedules for paper-scale graphs from the topology-only build.
+pub fn comm_links_all(
+    adj: Adj<'_>,
+    assign: &[u32],
+    n_parts: usize,
+) -> Vec<crate::comm::schedule::RankLinks> {
+    assert_eq!(assign.len(), adj.n);
+    // connected[i][j]: some node of part i has a neighbor owned by j —
+    // exactly "halo_ranges[j] of part i is nonempty"
+    let mut connected = vec![vec![false; n_parts]; n_parts];
+    for v in 0..adj.n {
+        let pv = assign[v] as usize;
+        for &u in adj.neighbors(v) {
+            let pu = assign[u as usize] as usize;
+            if pu != pv {
+                connected[pv][pu] = true;
+            }
+        }
+    }
+    (0..n_parts)
+        .map(|r| {
+            // feat_in[j] ⇔ my halo has a block owned by j; feat_out[j] ⇔
+            // peer j's halo needs my inner rows (adjacency symmetry makes
+            // these transposes of each other, mirroring S_{i,j} duality)
+            let feat_in = (0..n_parts).map(|j| j != r && connected[r][j]).collect();
+            let feat_out = (0..n_parts).map(|j| j != r && connected[j][r]).collect();
+            crate::comm::schedule::RankLinks::new(r, feat_in, feat_out)
+        })
+        .collect()
 }
 
 /// Where a partition's node payload (features/labels/masks) comes from.
@@ -472,6 +522,22 @@ mod tests {
         let view = plan.view(1);
         assert_eq!(view.rank(), 1);
         assert_eq!(view.total_train, plan.total_train);
+    }
+
+    #[test]
+    fn comm_links_all_matches_plan_views() {
+        let g = small_graph();
+        for (parts, seed) in [(2, 1), (3, 5), (4, 9)] {
+            let pt = partition(&g, parts, Method::Multilevel, seed);
+            let plan = build(&g, &pt, LayerKind::SageMean);
+            let fast = comm_links_all(g.adj(), &pt.assign, parts);
+            for r in 0..parts {
+                let slow = plan.view(r).comm_links();
+                assert_eq!(fast[r].rank, slow.rank);
+                assert_eq!(fast[r].feat_in, slow.feat_in, "parts={parts} rank={r}");
+                assert_eq!(fast[r].feat_out, slow.feat_out, "parts={parts} rank={r}");
+            }
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@ use super::halo::{self, PartView, PlanLabels};
 use super::state::TrainState;
 use super::{TrainConfig, Variant};
 use crate::ckpt;
-use crate::comm::allreduce::step_tag;
+use crate::comm::schedule::{self, Cursor, Event, Style};
 use crate::comm::{
     decode_f64s, decode_u32s, encode_f64s, encode_u32s, Fabric, Phase, RecvHandle, Tag,
     Transport, WaitStats,
@@ -92,38 +92,51 @@ pub struct RankReport {
     /// (1.0 = every receive fully hidden behind compute)
     pub overlap_ratio: f64,
     /// parked ms per schedule point (`fwd_l{l}` / `bwd_l{l}` / `reduce`
-    /// / `setup`), summing to `comm_wait_ms`
+    /// / `loss` / `setup`), summing to `comm_wait_ms`
     pub comm_wait_by: Vec<(String, f64)>,
 }
 
-/// Per-rank ring all-reduce over any transport. Every step's receive is
-/// posted up front (step tags are unique within an iteration), so the
-/// transport can complete step `s+1`'s payload while step `s` still
-/// folds; parked time lands in `stats` under the `reduce` key.
+/// Per-rank ring all-reduce over any transport, driven by the schedule
+/// IR's ring segment (`events`: the [`Style::Prefetched`] layout of
+/// [`schedule::ring_events`]). Every step's receive is posted up front
+/// (step tags are unique within an iteration), so the transport can
+/// complete step `s+1`'s payload while step `s` still folds; parked
+/// time lands in `stats` under the `reduce` key. The chunk arithmetic
+/// stays here; message identity comes from the events.
 fn ring_allreduce_rank(
     transport: &dyn Transport,
     rank: usize,
     n: usize,
     buf: &mut [f32],
-    iter: u32,
+    events: &[Event],
     stats: &mut WaitStats,
 ) {
     if n <= 1 || buf.is_empty() {
         return;
     }
+    let steps = 2 * (n - 1);
+    assert_eq!(events.len(), 3 * steps, "ring segment has the wrong shape");
     let len = buf.len();
     let starts: Vec<usize> = (0..=n).map(|c| c * len / n).collect();
     let chunk = |c: usize| starts[c % n]..starts[c % n + 1];
-    let next = (rank + 1) % n;
     let prev = (rank + n - 1) % n;
-    let mut handles: VecDeque<RecvHandle> = VecDeque::with_capacity(2 * (n - 1));
-    for s in 0..2 * (n - 1) {
-        handles.push_back(transport.post_recv(prev, rank, step_tag(iter, s, n)));
+    let send_of = |s: usize| match events[steps + 2 * s] {
+        Event::Send { dst, tag } => (dst, tag),
+        other => panic!("ring schedule: expected a send at step {s}, got {other:?}"),
+    };
+    let mut handles: VecDeque<RecvHandle> = VecDeque::with_capacity(steps);
+    for ev in &events[..steps] {
+        match *ev {
+            Event::PostRecv { src, tag } => {
+                handles.push_back(transport.post_recv(src, rank, tag))
+            }
+            ref other => panic!("ring schedule: expected posted receives first, got {other:?}"),
+        }
     }
     for s in 0..n - 1 {
-        let tag = step_tag(iter, s, n);
+        let (dst, tag) = send_of(s);
         let c_send = (rank + n - s) % n;
-        transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
+        transport.send(rank, dst, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + n - s) % n;
         let recv = handles.pop_front().unwrap().wait(stats);
         for (d, v) in buf[chunk(c_recv)].iter_mut().zip(recv) {
@@ -131,68 +144,54 @@ fn ring_allreduce_rank(
         }
     }
     for s in 0..n - 1 {
-        let tag = step_tag(iter, n - 1 + s, n);
+        let (dst, tag) = send_of(n - 1 + s);
         let c_send = (rank + 1 + n - s) % n;
-        transport.send(rank, next, tag, buf[chunk(c_send)].to_vec());
+        transport.send(rank, dst, tag, buf[chunk(c_send)].to_vec());
         let c_recv = (prev + 1 + n - s) % n;
         let recv = handles.pop_front().unwrap().wait(stats);
         buf[chunk(c_recv)].copy_from_slice(&recv);
     }
 }
 
-/// The Setup-phase tag of the boundary-set exchange.
-fn setup_tag() -> Tag {
-    Tag::new(0, 0, Phase::Setup)
-}
-
-/// The per-epoch loss-reduction tag: every rank ships its partial loss
-/// for epoch `t` to rank 0 (layer field = source rank). Training
-/// iterations start at 1, so this never collides with [`setup_tag`].
-pub(crate) fn loss_tag(t: usize, src: usize) -> Tag {
-    Tag::new(t as u32, src as u16, Phase::Setup)
-}
-
 /// Send half of the boundary-set exchange (`Phase::Setup`, Alg. 1
 /// lines 1–5 made real): ship each peer the global ids of the halo rows
-/// this rank needs from it. Moving this through the transport makes byte
-/// accounting include the setup traffic a real wire sees.
-pub fn setup_send(transport: &dyn Transport, view: &PartView<'_>) {
+/// this rank needs from it, per the schedule's setup sends. Moving this
+/// through the transport makes byte accounting include the setup
+/// traffic a real wire sees.
+pub fn setup_send(transport: &dyn Transport, view: &PartView<'_>, cur: &mut Cursor<'_>) {
     let rank = view.rank();
     let p = view.part;
-    for j in 0..view.n_parts {
+    for ev in cur.take_sends(Phase::Setup, 0) {
+        let j = ev.peer();
         let range = p.halo_ranges[j].clone();
-        if j != rank && !range.is_empty() {
-            transport.send(rank, j, setup_tag(), encode_u32s(&p.halo[range]));
-        }
+        transport.send(rank, j, ev.tag(), encode_u32s(&p.halo[range]));
     }
 }
 
-/// Verify half: receive each peer's request and check it matches the
-/// plan's send set — this is what establishes `S_{i,j}` on a real
-/// deployment, and over TCP it validates the mesh wiring before any
-/// tensor moves. On the scale path it doubles as a cross-check that two
-/// ranks' independently built plans agree on the boundary.
-pub fn setup_verify(transport: &dyn Transport, view: &PartView<'_>) {
+/// Verify half: receive each peer's request (the schedule's setup
+/// receive pairs) and check it matches the plan's send set — this is
+/// what establishes `S_{i,j}` on a real deployment, and over TCP it
+/// validates the mesh wiring before any tensor moves. On the scale path
+/// it doubles as a cross-check that two ranks' independently built
+/// plans agree on the boundary.
+pub fn setup_verify(transport: &dyn Transport, view: &PartView<'_>, cur: &mut Cursor<'_>) {
     let rank = view.rank();
     let p = view.part;
-    for j in 0..view.n_parts {
-        if j != rank && !p.send_sets[j].is_empty() {
-            let ids = decode_u32s(&transport.recv_blocking(j, rank, setup_tag()));
-            let want: Vec<u32> =
-                p.send_sets[j].iter().map(|&li| p.inner[li as usize]).collect();
-            assert_eq!(
-                ids, want,
-                "rank {rank}: peer {j} requested a different boundary set"
-            );
-        }
+    while let Some((j, tag)) = cur.take_recv_pair(Phase::Setup) {
+        let ids = decode_u32s(&transport.recv_blocking(j, rank, tag));
+        let want: Vec<u32> = p.send_sets[j].iter().map(|&li| p.inner[li as usize]).collect();
+        assert_eq!(ids, want, "rank {rank}: peer {j} requested a different boundary set");
     }
 }
 
-/// Full per-rank boundary-set exchange (concurrent engines: every rank
-/// runs send-then-verify; sends never block, so this cannot deadlock).
-pub fn setup_exchange(transport: &dyn Transport, view: &PartView<'_>) {
-    setup_send(transport, view);
-    setup_verify(transport, view);
+/// Full per-rank boundary-set exchange over the schedule's setup window
+/// (concurrent engines: every rank runs send-then-verify; sends never
+/// block, so this cannot deadlock).
+pub fn setup_exchange(transport: &dyn Transport, view: &PartView<'_>, window: &schedule::Window) {
+    let mut cur = Cursor::new(&window.events);
+    setup_send(transport, view, &mut cur);
+    setup_verify(transport, view, &mut cur);
+    cur.finish();
 }
 
 /// Side-channel controls for [`run_rank_ctl`]: checkpointing, live run
@@ -277,7 +276,10 @@ pub fn run_rank_ctl(
     let epoch_hist = reg.histogram("epoch_ms", &[]);
     let epochs_total = reg.counter("epochs_total", &[]);
 
-    setup_exchange(transport, view);
+    // the schedule IR this rank executes — every (peer, tag) below comes
+    // from these generated windows, never from inline derivation
+    let links = view.comm_links();
+    setup_exchange(transport, view, &schedule::setup_window(&links));
 
     let mut backend = NativeBackend::new();
     let prop_id = backend.register_prop(&p.prop);
@@ -299,28 +301,11 @@ pub fn run_rank_ctl(
         // (iter, layer, phase)); posting them all here lets the
         // transport complete each one the moment its peer sends, while
         // this rank is inside the kernels below.
+        let window = schedule::epoch_window(&links, Style::Prefetched, pipe, n_layers, t as u32)?;
+        let mut cur = Cursor::new(&window.events);
         let mut posted: HashMap<(usize, Tag), RecvHandle> = HashMap::new();
-        for l in 0..n_layers {
-            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-            for j in 0..k {
-                if !p.halo_ranges[j].is_empty() {
-                    posted.insert((j, tag), transport.post_recv(j, rank, tag));
-                }
-            }
-        }
-        for l in 1..n_layers {
-            let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-            for j in 0..k {
-                if j != rank && !p.send_sets[j].is_empty() {
-                    posted.insert((j, tag), transport.post_recv(j, rank, tag));
-                }
-            }
-        }
-        if rank == 0 {
-            for j in 1..k {
-                let tag = loss_tag(t, j);
-                posted.insert((j, tag), transport.post_recv(j, 0, tag));
-            }
+        for ev in cur.take_posts() {
+            posted.insert((ev.peer(), ev.tag()), transport.post_recv(ev.peer(), rank, ev.tag()));
         }
         // ---- forward ----
         let mut h_src: Vec<Mat> = vec![p.features.clone()];
@@ -330,32 +315,22 @@ pub fn run_rank_ctl(
         let mut pres: Vec<Mat> = Vec::new();
         for l in 0..n_layers {
             let f_in = dims[l];
-            for j in 0..k {
-                if j != rank && !p.send_sets[j].is_empty() {
-                    transport.send(
-                        rank,
-                        j,
-                        Tag::new(t as u32, l as u16, Phase::FwdFeat),
-                        p.gather_send(j, &h_src[l]),
-                    );
-                }
+            for ev in cur.take_sends(Phase::FwdFeat, l as u16) {
+                transport.send(rank, ev.peer(), ev.tag(), p.gather_send(ev.peer(), &h_src[l]));
             }
             let halo_mat = if !pipe {
                 // synchronous exchange: this layer's fresh features are
                 // needed right now — wait at the point of use
                 let mut m = Mat::zeros(p.halo.len(), f_in);
-                for j in 0..k {
-                    let range = p.halo_ranges[j].clone();
-                    if !range.is_empty() {
-                        let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-                        let payload = posted
-                            .remove(&(j, tag))
-                            .expect("receive posted at epoch start")
-                            .wait(&mut stats);
-                        let cols = m.cols;
-                        m.data[range.start * cols..range.start * cols + payload.len()]
-                            .copy_from_slice(&payload);
-                    }
+                for ev in cur.take_waits(Phase::FwdFeat, l as u16) {
+                    let range = p.halo_ranges[ev.peer()].clone();
+                    let payload = posted
+                        .remove(&(ev.peer(), ev.tag()))
+                        .expect("receive posted at epoch start")
+                        .wait(&mut stats);
+                    let cols = m.cols;
+                    m.data[range.start * cols..range.start * cols + payload.len()]
+                        .copy_from_slice(&payload);
                 }
                 m
             } else {
@@ -401,17 +376,18 @@ pub fn run_rank_ctl(
             // sum in rank order — the f64 accumulation order matches the
             // sequential engine, keeping the curve bit-identical
             let mut tot = partial;
-            for j in 1..k {
-                let tag = loss_tag(t, j);
+            for ev in cur.take_waits(Phase::Loss, 0) {
                 let payload = posted
-                    .remove(&(j, tag))
+                    .remove(&(ev.peer(), ev.tag()))
                     .expect("loss receive posted at epoch start")
                     .wait(&mut stats);
                 tot += decode_f64s(&payload)[0];
             }
             tot
         } else {
-            transport.send(rank, 0, loss_tag(t, rank), encode_f64s(&[partial]));
+            for ev in cur.take_sends(Phase::Loss, 0) {
+                transport.send(rank, ev.peer(), ev.tag(), encode_f64s(&[partial]));
+            }
             partial
         };
         losses.push(epoch_loss);
@@ -449,31 +425,22 @@ pub fn run_rank_ctl(
                     ops::hadamard_inplace(&mut j_full, mask);
                 }
                 let n_inner = p.n_inner();
-                for j in 0..k {
-                    let range = p.halo_ranges[j].clone();
-                    if !range.is_empty() {
-                        let payload = j_full.data
-                            [(n_inner + range.start) * f_in..(n_inner + range.end) * f_in]
-                            .to_vec();
-                        transport.send(
-                            rank,
-                            j,
-                            Tag::new(t as u32, l as u16, Phase::BwdGrad),
-                            payload,
-                        );
-                    }
+                for ev in cur.take_sends(Phase::BwdGrad, l as u16) {
+                    let range = p.halo_ranges[ev.peer()].clone();
+                    let payload = j_full.data
+                        [(n_inner + range.start) * f_in..(n_inner + range.end) * f_in]
+                        .to_vec();
+                    transport.send(rank, ev.peer(), ev.tag(), payload);
                 }
                 let mut jg = j_full.rows_range(0, n_inner);
                 if !pipe {
-                    for j in 0..k {
-                        if j != rank && !p.send_sets[j].is_empty() {
-                            let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-                            let payload = posted
-                                .remove(&(j, tag))
-                                .expect("receive posted at epoch start")
-                                .wait(&mut stats);
-                            super::trainer::scatter_add_rows(&mut jg, &p.send_sets[j], &payload);
-                        }
+                    for ev in cur.take_waits(Phase::BwdGrad, l as u16) {
+                        let j = ev.peer();
+                        let payload = posted
+                            .remove(&(j, ev.tag()))
+                            .expect("receive posted at epoch start")
+                            .wait(&mut stats);
+                        super::trainer::scatter_add_rows(&mut jg, &p.send_sets[j], &payload);
                     }
                 } else {
                     // stale contributions only (zeros at t = 1); fresh
@@ -494,18 +461,15 @@ pub fn run_rank_ctl(
             for l in 0..n_layers {
                 let f_in = dims[l];
                 let mut fresh = Mat::zeros(p.halo.len(), f_in);
-                for j in 0..k {
-                    let range = p.halo_ranges[j].clone();
-                    if !range.is_empty() {
-                        let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-                        let payload = posted
-                            .remove(&(j, tag))
-                            .expect("receive posted at epoch start")
-                            .wait(&mut stats);
-                        let cols = fresh.cols;
-                        fresh.data[range.start * cols..range.start * cols + payload.len()]
-                            .copy_from_slice(&payload);
-                    }
+                for ev in cur.take_waits(Phase::FwdFeat, l as u16) {
+                    let range = p.halo_ranges[ev.peer()].clone();
+                    let payload = posted
+                        .remove(&(ev.peer(), ev.tag()))
+                        .expect("receive posted at epoch start")
+                        .wait(&mut stats);
+                    let cols = fresh.cols;
+                    fresh.data[range.start * cols..range.start * cols + payload.len()]
+                        .copy_from_slice(&payload);
                 }
                 if opts.smooth_feat && t > 1 {
                     resid_feat_acc[l] = st.feat_buf[l].fro_dist(&fresh);
@@ -518,15 +482,13 @@ pub fn run_rank_ctl(
             for l in 1..n_layers {
                 let f_in = dims[l];
                 let mut fresh = Mat::zeros(p.n_inner(), f_in);
-                for j in 0..k {
-                    if j != rank && !p.send_sets[j].is_empty() {
-                        let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-                        let payload = posted
-                            .remove(&(j, tag))
-                            .expect("receive posted at epoch start")
-                            .wait(&mut stats);
-                        super::trainer::scatter_add_rows(&mut fresh, &p.send_sets[j], &payload);
-                    }
+                for ev in cur.take_waits(Phase::BwdGrad, l as u16) {
+                    let j = ev.peer();
+                    let payload = posted
+                        .remove(&(j, ev.tag()))
+                        .expect("receive posted at epoch start")
+                        .wait(&mut stats);
+                    super::trainer::scatter_add_rows(&mut fresh, &p.send_sets[j], &payload);
                 }
                 if opts.smooth_grad && t > 1 {
                     resid_grad_acc[l] = st.grad_buf[l].fro_dist(&fresh);
@@ -544,7 +506,8 @@ pub fn run_rank_ctl(
         // ---- all-reduce + update (replicated Adam) ----
         let mut gbuf = grads.flatten();
         let reduce_t0 = crate::obs::trace::now_us();
-        ring_allreduce_rank(transport, rank, k, &mut gbuf, t as u32, &mut stats);
+        ring_allreduce_rank(transport, rank, k, &mut gbuf, cur.take_ring(), &mut stats);
+        cur.finish();
         if crate::obs::trace::enabled() {
             crate::obs::trace::span(rank, crate::obs::trace::Kind::Reduce, 0, t, reduce_t0);
         }
@@ -693,6 +656,23 @@ pub fn run_threaded_ctl(
             .collect::<crate::util::error::Result<Vec<_>>>()?,
     };
     let fabric = Fabric::new(k);
+    // runtime conformance mode (debug builds, PIPEGCN_CONFORMANCE=1):
+    // generate the full prefetched schedule for every rank and make the
+    // transport hooks cross-check each live operation against it
+    let conformance = schedule::conformance_requested();
+    if conformance {
+        let all_links: Vec<schedule::RankLinks> =
+            (0..k).map(|i| plan.view(i).comm_links()).collect();
+        let sched = schedule::Schedule::generate(
+            &all_links,
+            Style::Prefetched,
+            matches!(cfg.variant, Variant::Pipe(_)),
+            cfg.model.n_layers(),
+            start_epoch as u32 + 1,
+            cfg.epochs as u32,
+        )?;
+        schedule::set_sink(Box::new(schedule::Conformance::new(&sched)));
+    }
     let ckpt_policy = ctl.ckpt;
     let mut log = ctl.log;
     let plan_ref = &plan;
@@ -715,6 +695,9 @@ pub fn run_threaded_ctl(
         }
         handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect()
     });
+    if conformance {
+        schedule::clear_sink();
+    }
     let mut per_rank =
         results.into_iter().collect::<crate::util::error::Result<Vec<_>>>()?;
     // rank 0 already holds the global per-epoch losses (it drives the
@@ -879,12 +862,13 @@ mod tests {
                 let f = fabric.clone();
                 std::thread::spawn(move || {
                     let mut buf: Vec<f32> = (0..len).map(|i| ((r + i) % 5) as f32).collect();
+                    let ev = schedule::ring_events(Style::Prefetched, 1, r, n).unwrap();
                     ring_allreduce_rank(
                         f.as_ref(),
                         r,
                         n,
                         &mut buf,
-                        1,
+                        &ev,
                         &mut WaitStats::default(),
                     );
                     buf

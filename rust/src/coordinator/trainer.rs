@@ -23,6 +23,7 @@ use super::halo::{self, PlanLabels};
 use super::state::TrainState;
 use super::{EpochStat, ErrorProbe, TrainConfig, TrainResult, Variant};
 use crate::ckpt;
+use crate::comm::schedule::{self, Cursor, Event, Style};
 use crate::comm::{decode_f64s, encode_f64s, Fabric, Phase, RecvHandle, Tag};
 use std::collections::HashMap;
 use crate::graph::Graph;
@@ -148,15 +149,42 @@ pub fn train_resumable(
     let epoch_hist = reg.histogram("epoch_ms", &[]);
     let epochs_total = reg.counter("epochs_total", &[]);
 
+    // --- schedule IR: every (peer, tag) below comes from these -------
+    let links: Vec<schedule::RankLinks> = (0..k).map(|i| plan.view(i).comm_links()).collect();
+    // runtime conformance mode (debug builds, PIPEGCN_CONFORMANCE=1):
+    // the fabric hooks cross-check every live operation against the
+    // generated inline schedule
+    let conformance = schedule::conformance_requested();
+    if conformance {
+        let sched = schedule::Schedule::generate(
+            &links,
+            Style::Inline,
+            pipe,
+            n_layers,
+            states[0].epoch as u32 + 1,
+            cfg.epochs as u32,
+        )?;
+        schedule::set_sink(Box::new(schedule::Conformance::new(&sched)));
+    }
+
     // --- boundary-set exchange (Setup phase, Alg. 1 lines 1–5) --------
     // Same send/verify halves the concurrent engines run, driven in
     // two passes (all sends, then all verifies) because one thread
     // plays every rank here.
-    for i in 0..k {
-        super::threaded::setup_send(&fabric, &plan.view(i));
-    }
-    for i in 0..k {
-        super::threaded::setup_verify(&fabric, &plan.view(i));
+    {
+        let setup_windows: Vec<schedule::Window> =
+            links.iter().map(schedule::setup_window).collect();
+        let mut setup_curs: Vec<Cursor<'_>> =
+            setup_windows.iter().map(|w| Cursor::new(&w.events)).collect();
+        for i in 0..k {
+            super::threaded::setup_send(&fabric, &plan.view(i), &mut setup_curs[i]);
+        }
+        for i in 0..k {
+            super::threaded::setup_verify(&fabric, &plan.view(i), &mut setup_curs[i]);
+        }
+        for cur in setup_curs {
+            cur.finish();
+        }
     }
     let setup_bytes = fabric.total_bytes();
 
@@ -222,29 +250,16 @@ pub fn train_resumable(
         // the same handle choreography the per-rank engines run, so a
         // producer that fails to send surfaces as a diagnostic naming
         // the exact (src, dst, tag), never a silent wrong payload
+        let windows: Vec<schedule::Window> = links
+            .iter()
+            .map(|lk| schedule::epoch_window(lk, Style::Inline, pipe, n_layers, t as u32))
+            .collect::<crate::util::error::Result<_>>()?;
+        let mut curs: Vec<Cursor<'_>> = windows.iter().map(|w| Cursor::new(&w.events)).collect();
         let mut posted: HashMap<(usize, usize, Tag), RecvHandle> = HashMap::new();
-        for i in 0..k {
-            let p = &plan.parts[i];
-            for l in 0..n_layers {
-                let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-                for j in 0..k {
-                    if !p.halo_ranges[j].is_empty() {
-                        posted.insert((j, i, tag), fabric.post_recv(j, i, tag));
-                    }
-                }
-                if l > 0 {
-                    let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-                    for j in 0..k {
-                        if j != i && !p.send_sets[j].is_empty() {
-                            posted.insert((j, i, tag), fabric.post_recv(j, i, tag));
-                        }
-                    }
-                }
+        for (i, cur) in curs.iter_mut().enumerate() {
+            for ev in cur.take_posts() {
+                posted.insert((ev.peer(), i, ev.tag()), fabric.post_recv(ev.peer(), i, ev.tag()));
             }
-        }
-        for i in 1..k {
-            let tag = super::threaded::loss_tag(t, i);
-            posted.insert((i, 0, tag), fabric.post_recv(i, 0, tag));
         }
         // epoch-local probe accumulators
         let mut feat_err = vec![0.0f64; n_layers];
@@ -269,11 +284,9 @@ pub fn train_resumable(
             // 1) every partition ships its boundary rows (pre-dropout)
             for i in 0..k {
                 let src = &h_src[i][l];
-                for j in 0..k {
-                    if j != i && !plan.parts[i].send_sets[j].is_empty() {
-                        let payload = plan.parts[i].gather_send(j, src);
-                        fabric.send(i, j, Tag::new(t as u32, l as u16, Phase::FwdFeat), payload);
-                    }
+                for ev in curs[i].take_sends(Phase::FwdFeat, l as u16) {
+                    let payload = plan.parts[i].gather_send(ev.peer(), src);
+                    fabric.send(i, ev.peer(), ev.tag(), payload);
                 }
             }
             // 2) assemble halo + compute
@@ -282,13 +295,11 @@ pub fn train_resumable(
                 let n_halo = p.halo.len();
                 let halo_mat: Mat = if !pipe {
                     let mut m = Mat::zeros(n_halo, f_in);
-                    for j in 0..k {
-                        let range = p.halo_ranges[j].clone();
-                        if !range.is_empty() {
-                            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-                            let payload = posted.remove(&(j, i, tag)).expect("posted").take_now();
-                            write_rows(&mut m, range.start, &payload);
-                        }
+                    for ev in curs[i].take_claims(Phase::FwdFeat, l as u16) {
+                        let range = p.halo_ranges[ev.peer()].clone();
+                        let payload =
+                            posted.remove(&(ev.peer(), i, ev.tag())).expect("posted").take_now();
+                        write_rows(&mut m, range.start, &payload);
                     }
                     m
                 } else {
@@ -296,13 +307,11 @@ pub fn train_resumable(
                     let used = states[i].feat_buf[l].clone();
                     // claim the fresh tag-t messages → buffer for t+1
                     let mut fresh = Mat::zeros(n_halo, f_in);
-                    for j in 0..k {
-                        let range = p.halo_ranges[j].clone();
-                        if !range.is_empty() {
-                            let tag = Tag::new(t as u32, l as u16, Phase::FwdFeat);
-                            let payload = posted.remove(&(j, i, tag)).expect("posted").take_now();
-                            write_rows(&mut fresh, range.start, &payload);
-                        }
+                    for ev in curs[i].take_claims(Phase::FwdFeat, l as u16) {
+                        let range = p.halo_ranges[ev.peer()].clone();
+                        let payload =
+                            posted.remove(&(ev.peer(), i, ev.tag())).expect("posted").take_now();
+                        write_rows(&mut fresh, range.start, &payload);
                     }
                     if probing && l > 0 {
                         feat_err[l] += used.fro_dist(&fresh).powi(2);
@@ -373,12 +382,13 @@ pub fn train_resumable(
         // transport, so byte accounting and loss bits match across
         // engines. The f64↔f32-pair packing is lossless.
         for i in 1..k {
-            fabric.send(i, 0, super::threaded::loss_tag(t, i), encode_f64s(&[partials[i]]));
+            for ev in curs[i].take_sends(Phase::Loss, 0) {
+                fabric.send(i, ev.peer(), ev.tag(), encode_f64s(&[partials[i]]));
+            }
         }
         let mut train_loss = partials[0];
-        for i in 1..k {
-            let tag = super::threaded::loss_tag(t, i);
-            let payload = posted.remove(&(i, 0, tag)).expect("posted").take_now();
+        for ev in curs[0].take_claims(Phase::Loss, 0) {
+            let payload = posted.remove(&(ev.peer(), 0, ev.tag())).expect("posted").take_now();
             train_loss += decode_f64s(&payload)[0];
         }
 
@@ -425,19 +435,12 @@ pub fn train_resumable(
                     }
                     // ship halo rows (offset past the inner block) to owners
                     let n_inner = p.n_inner();
-                    for j in 0..k {
-                        let range = p.halo_ranges[j].clone();
-                        if !range.is_empty() {
-                            let payload = j_full.data
-                                [(n_inner + range.start) * f_in..(n_inner + range.end) * f_in]
-                                .to_vec();
-                            fabric.send(
-                                i,
-                                j,
-                                Tag::new(t as u32, l as u16, Phase::BwdGrad),
-                                payload,
-                            );
-                        }
+                    for ev in curs[i].take_sends(Phase::BwdGrad, l as u16) {
+                        let range = p.halo_ranges[ev.peer()].clone();
+                        let payload = j_full.data
+                            [(n_inner + range.start) * f_in..(n_inner + range.end) * f_in]
+                            .to_vec();
+                        fabric.send(i, ev.peer(), ev.tag(), payload);
                     }
                     inner_grads[i] = Some(j_full.rows_range(0, p.n_inner()));
                 }
@@ -448,26 +451,24 @@ pub fn train_resumable(
                     let p = &plan.parts[i];
                     let mut jg = inner_grads[i].take().unwrap();
                     if !pipe {
-                        for j in 0..k {
-                            if j != i && !p.send_sets[j].is_empty() {
-                                let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-                                let payload =
-                                    posted.remove(&(j, i, tag)).expect("posted").take_now();
-                                scatter_add_rows(&mut jg, &p.send_sets[j], &payload);
-                            }
+                        for ev in curs[i].take_claims(Phase::BwdGrad, l as u16) {
+                            let payload = posted
+                                .remove(&(ev.peer(), i, ev.tag()))
+                                .expect("posted")
+                                .take_now();
+                            scatter_add_rows(&mut jg, &p.send_sets[ev.peer()], &payload);
                         }
                     } else {
                         // stale contributions (zeros at t=1)
                         jg.add_assign(&states[i].grad_buf[l]);
                         // claim fresh tag-t contributions → buffer
                         let mut fresh = Mat::zeros(p.n_inner(), f_in);
-                        for j in 0..k {
-                            if j != i && !p.send_sets[j].is_empty() {
-                                let tag = Tag::new(t as u32, l as u16, Phase::BwdGrad);
-                                let payload =
-                                    posted.remove(&(j, i, tag)).expect("posted").take_now();
-                                scatter_add_rows(&mut fresh, &p.send_sets[j], &payload);
-                            }
+                        for ev in curs[i].take_claims(Phase::BwdGrad, l as u16) {
+                            let payload = posted
+                                .remove(&(ev.peer(), i, ev.tag()))
+                                .expect("posted")
+                                .take_now();
+                            scatter_add_rows(&mut fresh, &p.send_sets[ev.peer()], &payload);
                         }
                         if probing {
                             grad_err[l] += states[i].grad_buf[l].fro_dist(&fresh).powi(2);
@@ -492,7 +493,11 @@ pub fn train_resumable(
         debug_assert!(posted.is_empty(), "unconsumed posted receives at epoch end");
         let mut bufs: Vec<Vec<f32>> = grads.iter().map(|gp| gp.flatten()).collect();
         let reduce_t0 = crate::obs::trace::now_us();
-        crate::comm::allreduce::ring_allreduce(&fabric, &mut bufs, t as u32);
+        let segs: Vec<&[Event]> = curs.iter_mut().map(|c| c.take_ring()).collect();
+        crate::comm::allreduce::ring_allreduce_events(&fabric, &mut bufs, &segs);
+        for cur in curs {
+            cur.finish();
+        }
         if crate::obs::trace::enabled() {
             crate::obs::trace::span(0, crate::obs::trace::Kind::Reduce, 0, t, reduce_t0);
         }
@@ -613,6 +618,9 @@ pub fn train_resumable(
         }
     }
 
+    if conformance {
+        schedule::clear_sink();
+    }
     Ok(TrainResult {
         variant: cfg.variant.name(),
         curve,

@@ -26,7 +26,13 @@
 //!   the in-process mailbox fabric with reservation queues and byte
 //!   accounting, a ring all-reduce, and link/topology descriptions.
 //!   `recv_blocking` survives as a default-method shim for control
-//!   paths.
+//!   paths. [`comm::schedule`] is the declarative IR of the per-rank
+//!   communication schedule: every executor consumes generated
+//!   `Event` windows instead of re-deriving tags inline, and
+//!   `schedule::verify` statically checks matching, aliasing,
+//!   deadlock-freedom, staleness bounds, and handle hygiene
+//!   (`pipegcn check`; `PIPEGCN_CONFORMANCE=1` cross-checks the live
+//!   transport against the IR in debug builds).
 //! * [`ckpt`] — crash-safe checkpoint/restore: versioned, CRC-checked
 //!   binary snapshots of full training state (epoch, parameters, Adam
 //!   moments, PipeGCN stale buffers), one file per rank per epoch, with

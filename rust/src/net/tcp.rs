@@ -603,6 +603,7 @@ impl Transport for TcpTransport {
     fn send(&self, src: usize, dst: usize, tag: Tag, payload: Vec<f32>) {
         assert_eq!(src, self.rank, "TcpTransport can only send as its own rank");
         assert!(dst < self.n && dst != self.rank, "bad dst {dst}");
+        crate::comm::schedule::observe(crate::comm::schedule::OpKind::Send, src, dst, tag);
         let bytes = (payload.len() * 4) as u64;
         self.payload_bytes_sent.fetch_add(bytes, Ordering::Relaxed);
         self.msgs_sent.fetch_add(1, Ordering::Relaxed);

@@ -32,6 +32,7 @@
 
 use super::rendezvous::{self, ConnectOpts};
 use crate::ckpt;
+use crate::comm::schedule;
 use crate::coordinator::threaded::{self, RankCtl};
 use crate::coordinator::{evaluate, halo, TrainState};
 use crate::exp::{self, RunOpts};
@@ -294,6 +295,32 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
                 crate::obs::trace::set_offset_us(off);
             }
         }
+        // runtime conformance (debug builds, PIPEGCN_CONFORMANCE=1):
+        // regenerate this rank's schedule for the epochs this mesh
+        // generation trains and cross-check the live transport against
+        // it. Peers run in other processes, so their link maps are
+        // placeholders — for_rank keeps only this rank's stream.
+        let conformance = schedule::conformance_requested();
+        if conformance {
+            let all_links: Vec<schedule::RankLinks> = (0..o.parts)
+                .map(|r| {
+                    if r == o.rank {
+                        view.comm_links()
+                    } else {
+                        schedule::RankLinks::new(r, vec![false; o.parts], vec![false; o.parts])
+                    }
+                })
+                .collect();
+            let sched = schedule::Schedule::generate(
+                &all_links,
+                schedule::Style::Prefetched,
+                matches!(cfg.variant, crate::coordinator::Variant::Pipe(_)),
+                cfg.model.n_layers(),
+                st.epoch as u32 + 1,
+                cfg.epochs as u32,
+            )?;
+            schedule::set_sink(Box::new(schedule::Conformance::for_rank(&sched, o.rank)));
+        }
         let ctl = RankCtl {
             ckpt: policy.as_ref(),
             log: log_em.as_mut(),
@@ -302,6 +329,11 @@ pub fn run_worker(o: &WorkerOpts) -> Result<Option<WorkerSummary>> {
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             threaded::run_rank_ctl(&transport, &view, &cfg, &mut st, ctl)
         }));
+        if conformance {
+            // only drop the sink this generation installed — an
+            // in-process caller's recorder must survive the run
+            schedule::clear_sink();
+        }
         match run {
             Ok(rep) => break (rep?, transport),
             Err(payload) => {

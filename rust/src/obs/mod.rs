@@ -31,6 +31,16 @@ pub const PREFIX: &str = "pipegcn_";
 // ---------------------------------------------------------------------
 
 /// Atomically add `delta` to an f64 stored as bits in an [`AtomicU64`].
+///
+/// Memory-ordering audit (the sanitizer CI jobs pin this): `Relaxed` is
+/// correct throughout this module because metric cells are *values*,
+/// never synchronization — no thread reads a cell to decide whether
+/// another thread's non-atomic writes are visible. The CAS loop itself
+/// is race-free at any ordering: `compare_exchange_weak` only commits
+/// when the cell still holds the observed bits, so concurrent adds
+/// serialize and no update is lost (the registry-exactness test hammers
+/// this from the pool). Scrape-time reads may observe a slightly stale
+/// value mid-update; that is inherent to sampling, not a data race.
 fn f64_add(cell: &AtomicU64, delta: f64) {
     let mut cur = cell.load(Ordering::Relaxed);
     loop {

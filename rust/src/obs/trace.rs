@@ -150,6 +150,12 @@ pub fn enable() {
 }
 
 /// Whether spans are being recorded — the one check on hot paths.
+///
+/// Ordering audit: the `Relaxed` load is sound because `enabled()` is
+/// only a *gate* — every actual access to trace state re-takes the
+/// `STATE` mutex, which provides the acquire/release edge to the data
+/// `enable()` initialized. A stale `false` merely skips recording one
+/// span at startup; a `true` can never outrun the state it guards.
 pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }

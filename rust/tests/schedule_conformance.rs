@@ -1,0 +1,223 @@
+//! Schedule-IR conformance (property test): for every cell of
+//! (parts × variant × layers × epochs), the transport operations the
+//! engines actually perform — observed at the transport layer through
+//! the process-global event sink — must equal, per rank and in order,
+//! the statically generated [`pipegcn::comm::schedule::Schedule`].
+//!
+//! Two executors are checked against their respective styles:
+//! the sequential replay (`trainer::train_resumable`) against
+//! [`Style::Inline`], and the threaded engine (`run_threaded_ctl`)
+//! against [`Style::Prefetched`]. Both runs must also produce
+//! bit-identical loss curves — the schedule describes message identity,
+//! not timing, so the dataflow cannot depend on which executor runs it.
+//!
+//! The event sink is process-global and cargo runs the tests of one
+//! binary on parallel threads, so every test here serializes on
+//! `SINK_LOCK` before installing a sink.
+
+use pipegcn::comm::schedule::{self, Op, OpKind, Recorder, Schedule, Style};
+use pipegcn::comm::{Phase, Tag};
+use pipegcn::coordinator::{
+    halo, threaded, trainer, Optimizer, PipeOpts, TrainConfig, Variant,
+};
+use pipegcn::graph::presets;
+use pipegcn::graph::Graph;
+use pipegcn::model::ModelConfig;
+use pipegcn::partition::{partition, Method, Partitioning};
+use pipegcn::runtime::native::NativeBackend;
+use std::sync::{Mutex, MutexGuard};
+
+static SINK_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    SINK_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn cfg_for(variant: Variant, layers: usize, epochs: usize, g: &Graph) -> TrainConfig {
+    TrainConfig {
+        model: ModelConfig::sage(g.feat_dim(), 8, layers, g.labels.n_classes(), 0.0),
+        variant,
+        optimizer: Optimizer::Adam,
+        lr: 0.01,
+        epochs,
+        seed: 11,
+        eval_every: 0,
+        probe_errors: false,
+    }
+}
+
+/// Per-rank communication links, derived the same way the engines do it
+/// (from the halo plan's views).
+fn links_of(g: &Graph, pt: &Partitioning, cfg: &TrainConfig) -> Vec<schedule::RankLinks> {
+    let plan = halo::build(g, pt, cfg.model.kind);
+    (0..pt.n_parts).map(|r| plan.view(r).comm_links()).collect()
+}
+
+/// Observability sentinel traffic (trace clock-sync / span shipping)
+/// rides `Phase::Setup` at reserved top iteration values and is not
+/// schedule traffic — the same filter [`schedule::Conformance`] applies.
+fn recorded(rec: &Recorder, rank: usize) -> Vec<Op> {
+    rec.by_rank(rank)
+        .into_iter()
+        .filter(|o| !(o.tag.phase == Phase::Setup && o.tag.iter >= pipegcn::obs::trace::SHIP_ITER))
+        .collect()
+}
+
+fn scheduled(sched: &Schedule, rank: usize) -> Vec<Op> {
+    sched.ranks[rank]
+        .windows
+        .iter()
+        .flat_map(|w| w.events.iter().map(|e| e.to_op(rank)))
+        .collect()
+}
+
+fn assert_stream(cell: &str, engine: &str, rank: usize, got: &[Op], want: &[Op]) {
+    if got == want {
+        return;
+    }
+    let i = got
+        .iter()
+        .zip(want.iter())
+        .position(|(g, w)| g != w)
+        .unwrap_or_else(|| got.len().min(want.len()));
+    panic!(
+        "{cell} [{engine}] rank {rank}: op stream diverges from the IR at index {i}\n  \
+         performed: {:?}\n  scheduled: {:?}\n  \
+         ({} ops performed vs {} scheduled)",
+        got.get(i),
+        want.get(i),
+        got.len(),
+        want.len()
+    );
+}
+
+#[test]
+fn engines_replay_exactly_the_generated_schedule() {
+    let _guard = lock();
+    let g = presets::by_name("tiny").unwrap().build(42);
+    for parts in [1usize, 2, 4] {
+        let pt = partition(&g, parts, Method::Multilevel, 2);
+        for variant in [Variant::Vanilla, Variant::Pipe(PipeOpts::plain())] {
+            for layers in [2usize, 3] {
+                for epochs in [1usize, 3] {
+                    let cell = format!(
+                        "parts={parts} variant={} layers={layers} epochs={epochs}",
+                        variant.name()
+                    );
+                    let cfg = cfg_for(variant, layers, epochs, &g);
+                    let links = links_of(&g, &pt, &cfg);
+                    let pipe = variant.is_pipelined();
+
+                    // Sequential replay ↔ Style::Inline.
+                    let inline = Schedule::generate(
+                        &links,
+                        Style::Inline,
+                        pipe,
+                        layers,
+                        1,
+                        epochs as u32,
+                    )
+                    .unwrap();
+                    assert!(
+                        schedule::verify(&inline).is_empty(),
+                        "{cell}: inline IR fails static verification"
+                    );
+                    let rec = Recorder::new();
+                    schedule::set_sink(Box::new(rec.clone()));
+                    let mut b = NativeBackend::new();
+                    let seq = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None);
+                    schedule::clear_sink();
+                    let seq = seq.unwrap();
+                    for r in 0..parts {
+                        let want = scheduled(&inline, r);
+                        assert_stream(&cell, "sequential", r, &recorded(&rec, r), &want);
+                    }
+
+                    // Threaded engine ↔ Style::Prefetched.
+                    let prefetched = Schedule::generate(
+                        &links,
+                        Style::Prefetched,
+                        pipe,
+                        layers,
+                        1,
+                        epochs as u32,
+                    )
+                    .unwrap();
+                    assert!(
+                        schedule::verify(&prefetched).is_empty(),
+                        "{cell}: prefetched IR fails static verification"
+                    );
+                    let rec = Recorder::new();
+                    schedule::set_sink(Box::new(rec.clone()));
+                    let thr =
+                        threaded::run_threaded_ctl(&g, &pt, &cfg, threaded::ThreadedCtl::default());
+                    schedule::clear_sink();
+                    let thr = thr.unwrap().0;
+                    for r in 0..parts {
+                        let want = scheduled(&prefetched, r);
+                        assert_stream(&cell, "threaded", r, &recorded(&rec, r), &want);
+                    }
+
+                    // Same schedule semantics ⇒ same dataflow: loss
+                    // curves are bit-identical across the executors.
+                    assert_eq!(seq.curve.len(), epochs);
+                    assert_eq!(thr.losses.len(), epochs);
+                    for (e, stat) in seq.curve.iter().enumerate() {
+                        assert_eq!(
+                            stat.train_loss.to_bits(),
+                            thr.losses[e].to_bits(),
+                            "{cell} epoch {}: sequential {} vs threaded {}",
+                            e + 1,
+                            stat.train_loss,
+                            thr.losses[e]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Regression (loss-tag punning): loss partials used to ride
+/// `Phase::Setup` with the source rank packed into the layer field,
+/// which aliased the setup exchange once three or more parts were in
+/// play. [`Tag::loss`] carries `Phase::Loss`, so at parts ≥ 3 every
+/// loss message must reach rank 0 under its own phase, once per source
+/// per epoch, and no loss tag may collide with any setup-window tag.
+#[test]
+fn loss_tags_do_not_pun_setup_at_three_plus_parts() {
+    let _guard = lock();
+    let g = presets::by_name("tiny").unwrap().build(42);
+    let parts = 3usize;
+    let epochs = 2usize;
+    let pt = partition(&g, parts, Method::Multilevel, 2);
+    let cfg = cfg_for(Variant::Pipe(PipeOpts::plain()), 2, epochs, &g);
+
+    let rec = Recorder::new();
+    schedule::set_sink(Box::new(rec.clone()));
+    let mut b = NativeBackend::new();
+    let r = trainer::train_resumable(&g, &pt, &cfg, &mut b, None, None, None);
+    schedule::clear_sink();
+    r.unwrap();
+
+    let rank0 = recorded(&rec, 0);
+    for t in 1..=epochs as u32 {
+        let want = Tag::loss(t);
+        assert_eq!(want.phase, Phase::Loss);
+        for src in 1..parts {
+            let n = rank0
+                .iter()
+                .filter(|o| o.kind == OpKind::Claim && o.peer == src && o.tag == want)
+                .count();
+            assert_eq!(n, 1, "epoch {t}: rank 0 claimed {n} loss partials from rank {src}");
+        }
+    }
+    // The punning bug made a loss tag equal a setup tag; assert the
+    // phases now keep the two streams disjoint by construction.
+    let setup = schedule::setup_tag();
+    assert_eq!(setup.phase, Phase::Setup);
+    assert!(rank0
+        .iter()
+        .filter(|o| o.tag.phase == Phase::Loss)
+        .all(|o| o.tag != setup));
+}
