@@ -90,7 +90,16 @@
 //!   artifact, binds the `net::frame` protocol, and answers
 //!   feature→logit queries bit-identical to
 //!   [`coordinator::full_graph_forward`]; `pipegcn query` is the
-//!   client (batched latency/QPS reporting).
+//!   client (batched latency/QPS reporting, plus closed-/open-loop
+//!   load generation). [`serve::tier`] is the production front over
+//!   that path: request coalescing under a latency budget
+//!   (`--batch-window-ms`/`--max-batch`), per-layer activation caching
+//!   keyed by `(artifact_version, graph_version)` with exact cone
+//!   invalidation on feature overrides, and `pipegcn route` — N
+//!   health-checked replicas behind one address with least-loaded
+//!   dispatch, automatic failover, and rolling artifact reload
+//!   (`pipegcn ctl --reload`). All of it bit-transparent, and every
+//!   v2 response stamped with the serving artifact's version.
 //! * [`baselines`] — ROC-like and CAGNET-like communication cost models.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for

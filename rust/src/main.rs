@@ -10,7 +10,10 @@
 //! pipegcn worker        --rank 0 --parts 4 --coord 127.0.0.1:PORT            (Engine::TcpWorker; normally spawned by `launch`)
 //! pipegcn export-params --from-ckpt DIR --dataset <preset> --parts K --out params.pgp
 //! pipegcn serve         --params params.pgp --dataset <preset> [--bind ADDR] (feature→logit inference server)
+//! pipegcn route         --replicas A,B[,C...] [--bind ADDR]                  (replica router: health, failover, rolling reload)
+//! pipegcn ctl           --addr HOST:PORT --ping|--drain|--reload FILE        (serving control plane)
 //! pipegcn query         --addr HOST:PORT --nodes 0,1,2 [--repeat N]          (client + latency/QPS report)
+//! pipegcn query         --addr HOST:PORT --concurrency N|--rate QPS --duration S  (load generator)
 //! pipegcn gen-graph     --dataset yelp-sim --out graph.bin [--nodes N]
 //! pipegcn partition     --dataset reddit-sim --parts 4 [--algo multilevel|hash|range|bfs]
 //! pipegcn sim           --dataset reddit-sim --parts 4 --method pipegcn      (simulated epoch breakdown)
@@ -42,6 +45,8 @@ fn main() -> Result<()> {
         "worker" => cmd_worker(&args),
         "export-params" => cmd_export_params(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
+        "ctl" => cmd_ctl(&args),
         "query" => cmd_query(&args),
         "gen-graph" => cmd_gen_graph(&args),
         "partition" => cmd_partition(&args),
@@ -119,8 +124,27 @@ fn print_help() {
          \x20             logits are bit-identical to the full-graph forward. --shard loads\n\
          \x20             only partition I's owned nodes + L-hop closure and answers for\n\
          \x20             owned nodes only — still bit-identical)\n\
+         \x20            [--batch-window-ms MS] [--max-batch N] [--no-cache]  (serving tier:\n\
+         \x20             queries queued within the window fuse into one kernel pass, and a\n\
+         \x20             per-layer activation cache answers plain queries from the final\n\
+         \x20             layer only — both bit-transparent; --no-cache restores the\n\
+         \x20             full-forward-per-query path)\n\
+         \x20 route      --replicas HOST:PORT,HOST:PORT[,...] [--bind HOST:PORT]\n\
+         \x20            [--addr-file F] [--max-conns N] [--probe-ms MS] [--metrics-addr A]\n\
+         \x20            (one front door for N serve replicas: health-checked least-loaded\n\
+         \x20             dispatch, automatic failover on replica death, and rolling\n\
+         \x20             artifact reload — `ctl --reload` against the router updates every\n\
+         \x20             replica with zero downtime)\n\
+         \x20 ctl        --addr HOST:PORT (--ping | --drain | --reload params.pgp)\n\
+         \x20            (control a serve replica or router: health/version probe, graceful\n\
+         \x20             drain, artifact hot-swap)\n\
          \x20 query      --addr HOST:PORT --nodes 0,1,2 [--repeat N] [--report lat.ndjson]\n\
          \x20            (one batched query per repeat; prints p50/p99 latency and QPS)\n\
+         \x20 query --concurrency N | --rate QPS [--workers W]  --addr HOST:PORT\n\
+         \x20            [--duration SECS] [--nodes 0,1,2] [--report load.ndjson]\n\
+         \x20            (load generator: closed-loop at fixed concurrency, or open-loop at\n\
+         \x20             a fixed arrival rate with latency measured from the scheduled\n\
+         \x20             send time; reports sustained QPS + p50/p90/p99 and an error count)\n\
          \x20 gen-graph  --dataset <preset> --out graph.bin [--nodes N] [--seed S]\n\
          \x20 partition  --dataset <preset> --parts K [--algo multilevel|hash|range|bfs]\n\
          \x20            [--nodes N]  (--nodes partitions the scaled topology only —\n\
@@ -139,6 +163,9 @@ fn print_help() {
          \x20 bench --scale  [--preset reddit-1m] [--parts 4] [--epochs 2] [--smoke]\n\
          \x20            [--out BENCH_scale.json]  (per-rank lazy-build trajectory at\n\
          \x20             n = 100K and 1M: build_ms, epoch_ms, peak_rss_bytes, comm_bytes)\n\
+         \x20 bench --serve  [--preset <name>] [--smoke] [--out BENCH_serve.json]\n\
+         \x20            (serving-tier sustained-QPS sweep: batched vs unbatched at\n\
+         \x20             several concurrency levels, p50/p90/p99 per row)\n\
          \x20 presets\n\
          train/launch/worker/sim/bench/serve accept --threads N (kernel worker\n\
          threads; default: PIPEGCN_THREADS or the available parallelism)\n\
@@ -426,7 +453,7 @@ fn cmd_export_params(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.assert_known(&[
         "params", "dataset", "seed", "bind", "addr-file", "max-conns", "threads",
-        "metrics-addr", "nodes", "shard",
+        "metrics-addr", "nodes", "shard", "batch-window-ms", "max-batch", "no-cache",
     ])?;
     apply_threads_flag(args)?;
     // live Prometheus endpoint (per-query latency histogram, active
@@ -487,14 +514,134 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_context(|| format!("writing addr file {path}"))?;
     }
     let max_conns = args.get_opt("max-conns").map(|_| args.get_usize("max-conns", 1));
-    server.run(max_conns)
+    let mut tier = pipegcn::serve::tier::TierOpts::default();
+    if args.has("batch-window-ms") {
+        tier.window_ms = args.get_f64("batch-window-ms", 1.0);
+    }
+    if args.has("max-batch") {
+        tier.max_batch = args.get_usize("max-batch", 32).max(1);
+    }
+    tier.cache = !args.get_bool("no-cache", false);
+    server.run_tier(max_conns, tier)
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    args.assert_known(&[
+        "bind", "replicas", "addr-file", "max-conns", "probe-ms", "metrics-addr",
+    ])?;
+    let _metrics = match args.get_opt("metrics-addr") {
+        Some(addr) => {
+            let srv = pipegcn::obs::http::serve(addr)
+                .with_context(|| format!("--metrics-addr {addr}"))?;
+            println!("metrics on http://{}/metrics", srv.addr());
+            Some(srv)
+        }
+        None => None,
+    };
+    let replicas: Vec<String> = args
+        .get_opt("replicas")
+        .context("route requires --replicas HOST:PORT,HOST:PORT[,...]")?
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let opts = pipegcn::serve::tier::RouterOpts {
+        bind: args.get_str("bind", "127.0.0.1:0"),
+        replicas,
+        probe_ms: args.get_u64("probe-ms", 500),
+    };
+    let router = pipegcn::serve::tier::Router::bind(&opts)?;
+    println!("routing {} replicas on {}", opts.replicas.len(), router.addr());
+    if let Some(path) = args.get_opt("addr-file") {
+        std::fs::write(path, router.addr())
+            .with_context(|| format!("writing addr file {path}"))?;
+    }
+    let max_conns = args.get_opt("max-conns").map(|_| args.get_usize("max-conns", 1));
+    router.run(max_conns)
+}
+
+fn cmd_ctl(args: &Args) -> Result<()> {
+    args.assert_known(&["addr", "ping", "drain", "reload"])?;
+    let addr = args.get_opt("addr").context("ctl requires --addr HOST:PORT")?;
+    let mut client = pipegcn::serve::Client::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    if args.get_bool("ping", false) {
+        let ack = client.ping().context("ping")?;
+        println!("{addr}: {ack}");
+    } else if args.get_bool("drain", false) {
+        client.drain().context("drain")?;
+        println!("{addr}: draining");
+    } else if let Some(path) = args.get_opt("reload") {
+        let ack = client.reload(path).context("reload")?;
+        println!("{addr}: reloaded → {ack}");
+    } else {
+        pipegcn::bail!("ctl needs one of --ping, --drain, --reload FILE");
+    }
+    client.close();
+    Ok(())
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
-    args.assert_known(&["addr", "nodes", "repeat", "report"])?;
+    args.assert_known(&[
+        "addr", "nodes", "repeat", "report", "concurrency", "rate", "duration", "workers",
+    ])?;
     let addr = args.get_opt("addr").context("query requires --addr HOST:PORT")?;
     let ids: Vec<u32> =
         args.get_usize_list("nodes", &[0]).iter().map(|&v| v as u32).collect();
+    // load-generator path: --concurrency (closed loop) or --rate (open
+    // loop) turn the single-client latency probe into a sustained-QPS
+    // measurement; the flagless path below is byte-for-byte unchanged
+    if args.has("concurrency") || args.has("rate") {
+        if args.has("repeat") {
+            pipegcn::bail!("--repeat belongs to the single-client path; use --duration");
+        }
+        let mode = if args.has("rate") {
+            pipegcn::serve::tier::LoadMode::Open {
+                rate: args.get_f64("rate", 100.0),
+                workers: args.get_usize("workers", 4),
+            }
+        } else {
+            pipegcn::serve::tier::LoadMode::Closed {
+                concurrency: args.get_usize("concurrency", 1),
+            }
+        };
+        let r = pipegcn::serve::tier::loadgen::run(&pipegcn::serve::tier::LoadOpts {
+            addr: addr.to_string(),
+            ids: ids.clone(),
+            mode,
+            duration_s: args.get_f64("duration", 5.0),
+        });
+        println!(
+            "{} load on {addr}: {} queries in {:.2}s → {:.1} qps | p50 {:.3} ms  \
+             p90 {:.3} ms  p99 {:.3} ms | {} errors",
+            r.mode, r.queries, r.duration_s, r.qps, r.p50_ms, r.p90_ms, r.p99_ms, r.errors
+        );
+        if let Some(path) = args.get_opt("report") {
+            let mut em = FileEmitter::create(
+                path,
+                Json::obj().set("bench", "pipegcn-serve-load").set("addr", addr),
+            )
+            .with_context(|| format!("creating load report {path}"))?;
+            em.emit(
+                &Json::obj()
+                    .set("mode", r.mode)
+                    .set("concurrency", r.concurrency)
+                    .set("rate_qps", r.rate_qps)
+                    .set("duration_s", r.duration_s)
+                    .set("queries", r.queries)
+                    .set("errors", r.errors)
+                    .set("qps", r.qps)
+                    .set("p50_ms", r.p50_ms)
+                    .set("p90_ms", r.p90_ms)
+                    .set("p99_ms", r.p99_ms),
+            )?;
+            println!("wrote {path}");
+        }
+        if r.errors > 0 {
+            pipegcn::bail!("{} queries failed", r.errors);
+        }
+        return Ok(());
+    }
     let repeat = args.get_usize("repeat", 1).max(1);
     let mut client = pipegcn::serve::Client::connect(addr)
         .with_context(|| format!("connecting to {addr}"))?;
@@ -566,11 +713,26 @@ fn cmd_query(args: &Args) -> Result<()> {
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.assert_known(&["out", "threads", "smoke", "preset", "parts", "epochs", "scale"])?;
+    args.assert_known(&[
+        "out", "threads", "smoke", "preset", "parts", "epochs", "scale", "serve",
+    ])?;
     let smoke = args.get_bool("smoke", false);
     let scale = args.get_bool("scale", false);
+    let serve = args.get_bool("serve", false);
+    if scale && serve {
+        pipegcn::bail!("--scale and --serve are separate sweeps; pick one");
+    }
     let opts = pipegcn::perf::BenchOpts {
-        out: args.get_str("out", if scale { "BENCH_scale.json" } else { "BENCH_kernels.json" }),
+        out: args.get_str(
+            "out",
+            if scale {
+                "BENCH_scale.json"
+            } else if serve {
+                "BENCH_serve.json"
+            } else {
+                "BENCH_kernels.json"
+            },
+        ),
         threads: args.get_usize_list("threads", &[1, 2, 4]),
         smoke,
         preset: args.get_str(
@@ -586,12 +748,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         parts: args.get_usize("parts", if smoke && !scale { 2 } else { 4 }),
         epochs: args.get_usize("epochs", if scale || smoke { 2 } else { 3 }),
         scale,
+        serve,
     };
     if opts.threads.iter().any(|&t| t == 0) {
         pipegcn::bail!("--threads entries must be at least 1");
     }
     if opts.scale {
         pipegcn::perf::run_scale_bench(&opts)
+    } else if opts.serve {
+        pipegcn::perf::run_serve_bench(&opts)
     } else {
         pipegcn::perf::run_bench(&opts)
     }

@@ -122,6 +122,15 @@ impl ParamsFile {
     }
 }
 
+/// Content-addressed artifact version: the CRC-32 of the encoded file.
+/// Any weight or config change produces a different version, identical
+/// content always produces the same one, so the serving tier can key
+/// activation caches on it and stamp it into query responses without a
+/// separate version registry.
+pub fn content_version(pf: &ParamsFile) -> u32 {
+    crc32(&pf.encode())
+}
+
 /// Atomically write the artifact (temp file + rename, like [`crate::ckpt`]).
 pub fn save(path: &str, pf: &ParamsFile) -> Result<()> {
     let p = std::path::Path::new(path);
@@ -225,6 +234,17 @@ mod tests {
         bytes[body_len..].copy_from_slice(&crc);
         let err = ParamsFile::decode(&bytes).unwrap_err();
         assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn content_version_tracks_weight_bits() {
+        let pf = sample();
+        let v = content_version(&pf);
+        assert_eq!(v, content_version(&pf), "version must be deterministic");
+        let mut changed = pf.clone();
+        let bits = changed.params.layers[0].w_neigh.data[0].to_bits();
+        changed.params.layers[0].w_neigh.data[0] = f32::from_bits(bits ^ 1);
+        assert_ne!(v, content_version(&changed), "a one-bit weight flip must change the version");
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //!                the challenge, proving knowledge of the mesh secret
 //! Resume    (7): epoch u64                         — rejoin-round
 //!                epilogue: the checkpoint epoch every rank restores
+//! Ctrl      (8): op u8, arg (u16 len + utf8)       — serving-tier
+//!                control plane (ping/drain/reload and their acks)
 //! ```
 //!
 //! Payload floats travel as raw bit patterns (`to_bits`/`from_bits`), so
@@ -51,6 +53,21 @@ const KIND_DATA_CHUNK: u8 = 4;
 const KIND_AUTH_CHALLENGE: u8 = 5;
 const KIND_AUTH_RESPONSE: u8 = 6;
 const KIND_RESUME: u8 = 7;
+const KIND_CTRL: u8 = 8;
+
+/// [`Frame::Ctrl`] ops — the serving tier's control plane. A request op
+/// is answered with [`CTRL_ACK`] (arg: op-specific detail, e.g. the
+/// artifact version after a reload) or [`CTRL_ERR`] (arg: diagnostic).
+pub const CTRL_PING: u8 = 0;
+/// Stop accepting new work, finish in-flight queries, then exit.
+pub const CTRL_DRAIN: u8 = 1;
+/// Hot-swap the params artifact at the path in `arg` (zero-downtime
+/// model update; the graph and propagation matrix are unchanged).
+pub const CTRL_RELOAD: u8 = 2;
+/// Success reply to a control request.
+pub const CTRL_ACK: u8 = 3;
+/// Failure reply to a control request (arg carries the diagnostic).
+pub const CTRL_ERR: u8 = 4;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
@@ -80,6 +97,12 @@ pub enum Frame {
     /// survivor or replacement — restores from this checkpoint epoch
     /// before training resumes. Absent on a first-formation round.
     Resume { epoch: u64 },
+    /// Serving-tier control message ([`CTRL_PING`]/[`CTRL_DRAIN`]/
+    /// [`CTRL_RELOAD`] requests; [`CTRL_ACK`]/[`CTRL_ERR`] replies).
+    /// `arg` is op-specific: the artifact path for a reload, the
+    /// diagnostic or version string in a reply, empty otherwise. Never
+    /// sent by the training mesh, so its wire traffic is unchanged.
+    Ctrl { op: u8, arg: String },
 }
 
 fn put_u16(out: &mut Vec<u8>, v: u16) {
@@ -194,6 +217,11 @@ pub fn encode_body(f: &Frame) -> Vec<u8> {
             out.push(KIND_RESUME);
             out.extend_from_slice(&epoch.to_le_bytes());
         }
+        Frame::Ctrl { op, arg } => {
+            out.push(KIND_CTRL);
+            out.push(*op);
+            put_str(&mut out, arg);
+        }
     }
     out
 }
@@ -264,6 +292,7 @@ pub fn decode_body(buf: &[u8]) -> Result<Frame, String> {
             let b = c.take(8)?;
             Frame::Resume { epoch: u64::from_le_bytes(b.try_into().unwrap()) }
         }
+        KIND_CTRL => Frame::Ctrl { op: c.u8()?, arg: c.str()? },
         other => return Err(format!("unknown frame kind {other}")),
     };
     if c.pos != buf.len() {
@@ -443,6 +472,23 @@ mod tests {
         roundtrip(Frame::AuthResponse { mac });
         roundtrip(Frame::Resume { epoch: 0 });
         roundtrip(Frame::Resume { epoch: u64::MAX });
+    }
+
+    #[test]
+    fn ctrl_frames_roundtrip_and_reject_corruption() {
+        roundtrip(Frame::Ctrl { op: CTRL_PING, arg: String::new() });
+        roundtrip(Frame::Ctrl { op: CTRL_RELOAD, arg: "/tmp/params.pgp".into() });
+        roundtrip(Frame::Ctrl { op: CTRL_ACK, arg: "3735928559".into() });
+        roundtrip(Frame::Ctrl { op: CTRL_ERR, arg: "no healthy replica".into() });
+        // unknown ops still travel (forward compatibility is the
+        // receiver's policy, not the codec's)
+        roundtrip(Frame::Ctrl { op: 200, arg: "x".into() });
+        // truncated arg and trailing bytes are rejected
+        let body = encode_body(&Frame::Ctrl { op: CTRL_DRAIN, arg: "drain".into() });
+        assert!(decode_body(&body[..body.len() - 2]).is_err());
+        let mut padded = body.clone();
+        padded.push(0);
+        assert!(decode_body(&padded).is_err());
     }
 
     #[test]

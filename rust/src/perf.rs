@@ -36,6 +36,8 @@ pub struct BenchOpts {
     pub epochs: usize,
     /// run the BENCH_scale trajectory instead of the kernel sweep
     pub scale: bool,
+    /// run the BENCH_serve sustained-QPS sweep instead of the kernel sweep
+    pub serve: bool,
 }
 
 /// Time `f` for `iters` iterations (after one warmup), emit the NDJSON
@@ -235,7 +237,17 @@ pub fn run_bench(o: &BenchOpts) -> Result<()> {
                 params.clone(),
             )?;
             let addr = server.addr().to_string();
-            let handle = std::thread::spawn(move || server.run(Some(1)));
+            // pin the tier to unbatched/uncached so this row keeps
+            // measuring the raw per-query forward — trend-compatible
+            // with pre-tier BENCH rows (batched numbers live in
+            // `bench --serve`)
+            let tier = crate::serve::tier::TierOpts {
+                window_ms: 0.0,
+                max_batch: 1,
+                cache: false,
+                queue: 256,
+            };
+            let handle = std::thread::spawn(move || server.run_tier(Some(1), tier));
             let mut client = crate::serve::Client::connect(&addr)?;
             let _ = client.query(&ids)?; // warmup
             // obs histogram alongside the exact sample: the same
@@ -392,6 +404,101 @@ pub fn run_scale_bench(o: &BenchOpts) -> Result<()> {
     Ok(())
 }
 
+/// `pipegcn bench --serve` — the BENCH_serve sustained-QPS sweep.
+/// For each tier configuration (unbatched/uncached — the pre-tier
+/// behavior — then micro-batching + activation caching), stand up an
+/// in-process [`crate::serve::Server`] and drive it with the closed-loop
+/// load generator at several concurrency levels. One NDJSON row per
+/// `(config, concurrency)` point:
+/// `{kernel: "serve_tier", batched, concurrency, queries, errors, qps,
+/// p50_ms, p90_ms, p99_ms}` — the micro-batching win is the `qps` gap
+/// between batched and unbatched rows at equal concurrency (and equal
+/// or better p99).
+pub fn run_serve_bench(o: &BenchOpts) -> Result<()> {
+    let preset = crate::graph::presets::by_name(&o.preset)
+        .ok_or_else(|| crate::err_msg!("unknown preset '{}'", o.preset))?;
+    let cfg = crate::model::ModelConfig::from_preset(preset);
+    let params = crate::model::Params::init(&cfg, &mut Rng::new(7));
+    let duration_s = if o.smoke { 1.0 } else { 3.0 };
+    let levels: &[usize] = if o.smoke { &[1, 4] } else { &[1, 4, 16] };
+    let mut em = FileEmitter::create(
+        &o.out,
+        Json::obj()
+            .set("bench", "pipegcn-serve")
+            .set("preset", o.preset.as_str())
+            .set("smoke", o.smoke)
+            .set("duration_s", duration_s),
+    )
+    .with_context(|| format!("creating {}", o.out))?;
+    let ids: Vec<u32> = (0..16u32).collect();
+    let mut qps_at: Vec<(bool, usize, f64)> = Vec::new();
+    for batched in [false, true] {
+        let tier = if batched {
+            crate::serve::tier::TierOpts { window_ms: 2.0, max_batch: 64, cache: true, queue: 256 }
+        } else {
+            crate::serve::tier::TierOpts { window_ms: 0.0, max_batch: 1, cache: false, queue: 256 }
+        };
+        let server =
+            crate::serve::Server::from_parts(preset.build(1), cfg.clone(), params.clone())?;
+        let addr = server.addr().to_string();
+        let handle = std::thread::spawn(move || server.run_tier(None, tier));
+        for &conc in levels {
+            let r = crate::serve::tier::loadgen::run(&crate::serve::tier::LoadOpts {
+                addr: addr.clone(),
+                ids: ids.clone(),
+                mode: crate::serve::tier::LoadMode::Closed { concurrency: conc },
+                duration_s,
+            });
+            em.emit(
+                &Json::obj()
+                    .set("kernel", "serve_tier")
+                    .set("batched", batched)
+                    .set("concurrency", conc)
+                    .set("queries", r.queries)
+                    .set("errors", r.errors)
+                    .set("qps", r.qps)
+                    .set("p50_ms", r.p50_ms)
+                    .set("p90_ms", r.p90_ms)
+                    .set("p99_ms", r.p99_ms),
+            )
+            .context("writing serve tier bench row")?;
+            println!(
+                "serve_tier: batched={batched} concurrency={conc} → {:.1} qps \
+                 (p50 {:.2} ms, p99 {:.2} ms, {} errors)",
+                r.qps, r.p50_ms, r.p99_ms, r.errors
+            );
+            qps_at.push((batched, conc, r.qps));
+        }
+        let mut ctl = crate::serve::Client::connect(&addr)
+            .with_context(|| format!("connecting to {addr} for drain"))?;
+        ctl.drain().map_err(|e| crate::err_msg!("draining the bench server: {e}"))?;
+        ctl.close();
+        handle.join().expect("serve thread panicked")?;
+    }
+    let top = *levels.last().unwrap();
+    let at = |b: bool| {
+        qps_at.iter().find(|&&(bb, c, _)| bb == b && c == top).map(|&(_, _, q)| q)
+    };
+    if let (Some(unb), Some(bat)) = (at(false), at(true)) {
+        em.emit(
+            &Json::obj()
+                .set("kernel", "summary")
+                .set("concurrency", top)
+                .set("qps_unbatched", unb)
+                .set("qps_batched", bat)
+                .set("batched_speedup", if unb > 0.0 { bat / unb } else { 0.0 }),
+        )
+        .context("writing serve bench summary row")?;
+        println!(
+            "serve bench: {} rows -> {} | batched vs unbatched at c={top}: {:.2}x qps",
+            em.rows(),
+            o.out,
+            if unb > 0.0 { bat / unb } else { 0.0 }
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +526,7 @@ mod tests {
             parts: 2,
             epochs: 1,
             scale: false,
+            serve: false,
         };
         assert!(run_bench(&o).is_err());
     }
@@ -433,8 +541,10 @@ mod tests {
             parts: 4,
             epochs: 1,
             scale: true,
+            serve: false,
         };
         assert!(run_scale_bench(&o).is_err());
+        assert!(run_serve_bench(&o).is_err());
         o.preset = "tiny".into();
         o.parts = 0;
         assert!(run_scale_bench(&o).is_err());

@@ -1,26 +1,29 @@
-//! Online inference: `pipegcn serve` / `pipegcn query`.
+//! Online inference: `pipegcn serve` / `pipegcn query` / `pipegcn
+//! route`.
 //!
 //! The serving workload the ROADMAP calls for, built on the pieces that
 //! already exist: a [`Server`] loads a params artifact
 //! ([`crate::model::artifact`] — weights + model shape, no optimizer
 //! state), rebuilds its preset graph deterministically, binds a TCP
 //! listener speaking the existing [`crate::net::frame`] protocol, and
-//! answers feature→logit queries by running the batch through
-//! [`crate::coordinator::forward_registered`] — the same kernels (on
-//! the [`crate::runtime::pool`]) and numerics as training, so a query
-//! over the stored features is **bit-identical** to
+//! answers feature→logit queries with the same kernels (on the
+//! [`crate::runtime::pool`]) and numerics as training, so a query over
+//! the stored features is **bit-identical** to
 //! [`crate::coordinator::full_graph_forward`] (asserted in
-//! `tests/serve_e2e.rs`). The propagation matrix is built once at bind
-//! time and registered once per connection; the per-query cost is the
-//! forward kernels alone.
+//! `tests/serve_e2e.rs` and `tests/serve_tier.rs`). The propagation
+//! matrix is built once at bind time and registered once with the
+//! executor; the per-query cost is the forward kernels alone — and with
+//! the [`tier`] (request coalescing + activation caching, on by
+//! default), usually just the final layer over the queried rows.
 //!
 //! ## Wire protocol
 //!
 //! One connection, many queries. The client introduces itself with a
-//! `Hello` frame, then sends one `Data` frame per query and reads one
-//! `Data` frame back; `Shutdown` (or EOF) ends the connection. A query
-//! payload is bit-packed into the f32 channel exactly like the training
-//! control messages:
+//! `Hello` frame — carrying [`PROTO_V2`] in the `addr` field to opt in
+//! to version-stamped responses — then sends one `Data` frame per query
+//! and reads one `Data` frame back; `Shutdown` (or EOF) ends the
+//! connection. A query payload is bit-packed into the f32 channel
+//! exactly like the training control messages:
 //!
 //! ```text
 //! [0]            batch size n (u32 bits)
@@ -29,25 +32,43 @@
 //!                row i replacing node ids[i]'s stored features
 //! ```
 //!
-//! The response payload is the batch's logits, n × n_classes floats.
-//! Payloads travel as raw bit patterns end to end, so logits reach the
-//! client with the exact bits the kernels produced. Queries larger than
-//! one frame (64 MiB) are rejected — batch accordingly.
+//! The response payload is the batch's logits, n × n_classes floats;
+//! for a v2 client it is prefixed with one value carrying the
+//! answering `artifact_version` (u32 bits), so a rolling reload's
+//! mixed-version window is observable per response. Clients that sent
+//! a plain hello get the unprefixed v1 payload — old clients keep
+//! parsing. Payloads travel as raw bit patterns end to end, so logits
+//! reach the client with the exact bits the kernels produced. Queries
+//! larger than one frame (64 MiB) are rejected — batch accordingly.
+//!
+//! `Ctrl` frames carry the serving control plane on the same
+//! connection: ping (answers the artifact version), drain (stop
+//! accepting, finish in-flight work, exit — how `pipegcn route` takes
+//! a replica down for zero-downtime rolls), and reload (hot-swap the
+//! params artifact in place).
 
 use crate::comm::{Phase, Tag};
-use crate::coordinator::forward_registered;
 use crate::graph::presets::{self, Preset};
 use crate::graph::Graph;
 use crate::model::{artifact, LayerKind, ModelConfig, Params};
 use crate::net::frame::{self, Frame};
 use crate::partition::Method;
-use crate::runtime::native::NativeBackend;
-use crate::runtime::Backend;
 use crate::tensor::{Csr, Mat};
 use crate::util::error::{Context, Result};
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+pub mod tier;
+
+/// Hello `addr` marker for protocol v2 (version-stamped responses). A
+/// plain hello selects v1 payloads, so old clients interoperate.
+pub const PROTO_V2: &str = "pgql/2";
+
+/// How often an idle connection wakes to check for a drain.
+const IDLE_POLL: Duration = Duration::from_millis(100);
 
 /// How to stand up a server from the CLI.
 #[derive(Clone, Debug)]
@@ -70,22 +91,30 @@ pub struct ServeOpts {
 
 /// Everything a query needs, shared read-only across connections. The
 /// propagation matrix is built **once** here — per-query work is just
-/// the forward kernels, not an O(edges) matrix rebuild.
+/// the forward kernels, not an O(edges) matrix rebuild. Features and
+/// propagation ride in `Arc`s so a reload (new params, same graph) is
+/// a cheap context swap, not a graph rebuild.
 pub struct ServeCtx {
     /// global node-id space (queries address nodes by global id)
     pub n: usize,
     pub feat_dim: usize,
     /// feature rows the forward runs over: all `n` nodes, or just the
     /// scope's closure rows (row i = `scope.closure[i]`'s features)
-    pub features: Mat,
+    pub features: Arc<Mat>,
     /// normalized propagation matrix for `kind` (full-graph, or
     /// restricted to the closure with **global** degree weights)
-    pub prop: Csr,
+    pub prop: Arc<Csr>,
     pub params: Params,
     pub kind: LayerKind,
     pub n_classes: usize,
     /// `Some` when serving one partition's subgraph only
     pub scope: Option<ServeScope>,
+    /// content version of the loaded artifact (CRC of its encoding) —
+    /// stamped into v2 responses, keys the activation cache
+    pub artifact_version: u32,
+    /// fingerprint of the graph side of the context (size, structure,
+    /// scope) — the activation cache's other key half
+    pub graph_version: u64,
 }
 
 /// The subgraph a sharded server loaded: partition `part` of `parts`.
@@ -93,6 +122,7 @@ pub struct ServeCtx {
 /// the full-graph forward because the closure covers every node whose
 /// value can reach them within `n_layers` propagation steps, and the
 /// restricted propagation matrix keeps the full graph's degree weights.
+#[derive(Clone)]
 pub struct ServeScope {
     pub part: usize,
     pub parts: usize,
@@ -103,10 +133,96 @@ pub struct ServeScope {
     pub closure: Vec<u32>,
 }
 
+/// Mutable server state shared by the accept loop, every connection
+/// handler, and the tier executor: the current context (swapped
+/// atomically on reload) and the drain flag.
+pub struct ServeState {
+    ctx: Mutex<Arc<ServeCtx>>,
+    draining: AtomicBool,
+}
+
+impl ServeState {
+    pub fn new(ctx: ServeCtx) -> Arc<ServeState> {
+        crate::obs::global()
+            .gauge("serve_artifact_version", &[])
+            .set(ctx.artifact_version as f64);
+        Arc::new(ServeState { ctx: Mutex::new(Arc::new(ctx)), draining: AtomicBool::new(false) })
+    }
+
+    /// Snapshot of the current context (cheap `Arc` clone).
+    pub fn current(&self) -> Arc<ServeCtx> {
+        self.ctx.lock().unwrap().clone()
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Stop accepting new connections; in-flight queries finish, then
+    /// [`Server::run_tier`] returns.
+    pub fn start_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Hot-swap the params artifact: load + verify `path`, check it
+    /// fits this server's graph, and publish a new context. Queries
+    /// already executing finish on the old weights (their responses
+    /// carry the old stamp); the next batch picks up the new ones.
+    /// Returns the new `artifact_version`.
+    pub fn reload(&self, path: &str) -> std::result::Result<u32, String> {
+        let pf = artifact::load(path).map_err(|e| e.to_string())?;
+        let cur = self.current();
+        if pf.config.kind != cur.kind {
+            return Err(
+                "reload cannot change the layer kind — the propagation matrix depends on it"
+                    .to_string(),
+            );
+        }
+        if pf.config.dims[0] != cur.feat_dim {
+            return Err(format!(
+                "reload artifact expects feature dim {} but this server has {}",
+                pf.config.dims[0], cur.feat_dim
+            ));
+        }
+        if *pf.config.dims.last().unwrap() != cur.n_classes {
+            return Err(format!(
+                "reload artifact produces {} classes but this server has {}",
+                pf.config.dims.last().unwrap(),
+                cur.n_classes
+            ));
+        }
+        if cur.scope.is_some() && pf.config.n_layers() != cur.params.layers.len() {
+            return Err(
+                "reload on a sharded server cannot change the layer count — the loaded \
+                 closure is exactly layer-count hops deep"
+                    .to_string(),
+            );
+        }
+        let version = artifact::content_version(&pf);
+        let next = ServeCtx {
+            n: cur.n,
+            feat_dim: cur.feat_dim,
+            features: cur.features.clone(),
+            prop: cur.prop.clone(),
+            params: pf.params,
+            kind: cur.kind,
+            n_classes: cur.n_classes,
+            scope: cur.scope.clone(),
+            artifact_version: version,
+            graph_version: cur.graph_version,
+        };
+        *self.ctx.lock().unwrap() = Arc::new(next);
+        let reg = crate::obs::global();
+        reg.counter("serve_reloads_total", &[]).inc();
+        reg.gauge("serve_artifact_version", &[]).set(version as f64);
+        Ok(version)
+    }
+}
+
 /// A bound (not yet accepting) inference server.
 pub struct Server {
     listener: TcpListener,
-    ctx: Arc<ServeCtx>,
+    state: Arc<ServeState>,
     addr: String,
 }
 
@@ -155,43 +271,14 @@ impl Server {
         params: Params,
         bind: &str,
     ) -> Result<Server> {
-        if config.dims[0] != graph.feat_dim() {
-            crate::bail!(
-                "params expect feature dim {} but the graph has {} — wrong dataset or seed?",
-                config.dims[0],
-                graph.feat_dim()
-            );
-        }
-        let n_classes = *config.dims.last().unwrap();
-        if n_classes != graph.labels.n_classes() {
-            crate::bail!(
-                "params produce {} classes but the graph has {} — wrong dataset or seed?",
-                n_classes,
-                graph.labels.n_classes()
-            );
-        }
-        let prop = match config.kind {
-            LayerKind::Gcn => graph.propagation_matrix(),
-            LayerKind::SageMean => graph.mean_propagation_matrix(),
-        };
-        let ctx = ServeCtx {
-            n: graph.n,
-            feat_dim: graph.feat_dim(),
-            features: graph.features,
-            prop,
-            params,
-            kind: config.kind,
-            n_classes,
-            scope: None,
-        };
-        Server::from_ctx(ctx, bind)
+        Server::from_ctx(ctx_from_parts(graph, config, params)?, bind)
     }
 
     /// Bind a listener around an already-assembled context.
     fn from_ctx(ctx: ServeCtx, bind: &str) -> Result<Server> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?.to_string();
-        Ok(Server { listener, ctx: Arc::new(ctx), addr })
+        Ok(Server { listener, state: ServeState::new(ctx), addr })
     }
 
     /// The bound address (`host:port`).
@@ -199,46 +286,149 @@ impl Server {
         &self.addr
     }
 
-    /// Shared query context (library embedding).
+    /// Shared query context (library embedding; reflects reloads).
     pub fn ctx(&self) -> Arc<ServeCtx> {
-        self.ctx.clone()
+        self.state.current()
     }
 
-    /// Accept connections, one handler thread each. With `max_conns`,
-    /// return after that many connections finish (deterministic
-    /// shutdown for tests and the CI smoke job); without it, serve
-    /// forever with handler threads detached, so nothing accumulates
-    /// per connection. A malformed query closes its connection with a
-    /// logged diagnostic — it never takes the server down.
+    /// The shared mutable state (drain flag, reload entry point).
+    pub fn state(&self) -> Arc<ServeState> {
+        self.state.clone()
+    }
+
+    /// [`Server::run_tier`] with default tier knobs (1 ms batch
+    /// window, max batch 32, activation caching on).
     pub fn run(self, max_conns: Option<usize>) -> Result<()> {
-        let mut handles = Vec::new();
+        self.run_tier(max_conns, tier::TierOpts::default())
+    }
+
+    /// Accept connections, one handler thread each, all queries funneled
+    /// through the coalescing executor. Returns after `max_conns`
+    /// connections have been accepted and finished (deterministic
+    /// shutdown for tests and the CI smoke job) — or, at any
+    /// `max_conns`, after a `Ctrl` drain: the listener stops admitting,
+    /// every in-flight query and connection finishes, the executor
+    /// drains, then this returns `Ok`. A malformed query closes its
+    /// connection with a logged diagnostic — it never takes the server
+    /// down.
+    pub fn run_tier(self, max_conns: Option<usize>, tier: tier::TierOpts) -> Result<()> {
+        let coalescer = tier::Coalescer::start(self.state.clone(), tier);
+        self.listener.set_nonblocking(true).context("serve listener nonblocking")?;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut served = 0usize;
         loop {
+            if self.state.is_draining() {
+                break;
+            }
             if let Some(m) = max_conns {
                 if served >= m {
                     break;
                 }
             }
-            let (stream, peer) =
-                self.listener.accept().context("accepting a query connection")?;
-            served += 1;
-            let ctx = self.ctx.clone();
-            let handle = std::thread::spawn(move || {
-                if let Err(e) = handle_conn(&ctx, stream) {
-                    eprintln!("serve: connection {peer}: {e}");
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    served += 1;
+                    let state = self.state.clone();
+                    let sub = coalescer.submitter();
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(&state, &sub, stream) {
+                            eprintln!("serve: connection {peer}: {e}");
+                        }
+                    }));
+                    // reap finished handlers so an unbounded server does
+                    // not grow a handle per connection forever
+                    handles.retain(|h| !h.is_finished());
                 }
-            });
-            // only a bounded run joins its handlers; an unbounded server
-            // must not grow a handle per connection forever
-            if max_conns.is_some() {
-                handles.push(handle);
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting a query connection"),
             }
         }
         for h in handles {
             let _ = h.join();
         }
+        // joins the executor after the last submitter is gone
+        drop(coalescer);
         Ok(())
     }
+}
+
+/// Assemble an unscoped serving context from in-memory parts — the
+/// validation, propagation build, and version stamping shared by
+/// [`Server::bind`], the tier tests, and the benches.
+pub fn ctx_from_parts(graph: Graph, config: ModelConfig, params: Params) -> Result<ServeCtx> {
+    if config.dims[0] != graph.feat_dim() {
+        crate::bail!(
+            "params expect feature dim {} but the graph has {} — wrong dataset or seed?",
+            config.dims[0],
+            graph.feat_dim()
+        );
+    }
+    let n_classes = *config.dims.last().unwrap();
+    if n_classes != graph.labels.n_classes() {
+        crate::bail!(
+            "params produce {} classes but the graph has {} — wrong dataset or seed?",
+            n_classes,
+            graph.labels.n_classes()
+        );
+    }
+    let prop = match config.kind {
+        LayerKind::Gcn => graph.propagation_matrix(),
+        LayerKind::SageMean => graph.mean_propagation_matrix(),
+    };
+    let feat_dim = graph.feat_dim();
+    // version the artifact by its encoded content, then take the
+    // params back out (no weight clone)
+    let pf = artifact::ParamsFile { config, params };
+    let artifact_version = artifact::content_version(&pf);
+    let artifact::ParamsFile { config, params } = pf;
+    let graph_version = graph_version(graph.n, &prop, feat_dim, n_classes, None);
+    Ok(ServeCtx {
+        n: graph.n,
+        feat_dim,
+        features: Arc::new(graph.features),
+        prop: Arc::new(prop),
+        params,
+        kind: config.kind,
+        n_classes,
+        scope: None,
+        artifact_version,
+        graph_version,
+    })
+}
+
+/// A stable fingerprint (FNV-1a) of the graph side of a context: size,
+/// propagation structure, dims, and shard scope. Together with
+/// `artifact_version` it keys the activation cache — equal keys mean
+/// byte-identical answers.
+fn graph_version(
+    n: usize,
+    prop: &Csr,
+    feat_dim: usize,
+    n_classes: usize,
+    scope: Option<(usize, usize)>,
+) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    h = mix(h, n as u64);
+    h = mix(h, prop.nnz() as u64);
+    h = mix(h, feat_dim as u64);
+    h = mix(h, n_classes as u64);
+    match scope {
+        None => h = mix(h, 0),
+        Some((part, parts)) => {
+            h = mix(h, 1);
+            h = mix(h, part as u64);
+            h = mix(h, parts as u64);
+        }
+    }
+    h
 }
 
 /// Build a sharded serving context: partition the topology, take
@@ -261,6 +451,9 @@ fn scoped_ctx(
     config: ModelConfig,
     params: Params,
 ) -> Result<ServeCtx> {
+    let pf = artifact::ParamsFile { config, params };
+    let artifact_version = artifact::content_version(&pf);
+    let artifact::ParamsFile { config, params } = pf;
     let topo = preset.build_topology_scaled(n, seed);
     let adj = topo.adj();
     let pt = crate::partition::partition_adj(adj, parts, Method::Multilevel, seed);
@@ -334,75 +527,34 @@ fn scoped_ctx(
         }
     }
     let prop = Csr::from_triplets(m, m, trip);
+    let feat_dim = shard.feat_dim();
+    let graph_version = graph_version(n, &prop, feat_dim, n_classes, Some((part, parts)));
     Ok(ServeCtx {
         n,
-        feat_dim: shard.feat_dim(),
-        features: shard.features,
-        prop,
+        feat_dim,
+        features: Arc::new(shard.features),
+        prop: Arc::new(prop),
         params,
         kind: config.kind,
         n_classes,
         scope: Some(ServeScope { part, parts, owned, closure }),
+        artifact_version,
+        graph_version,
     })
 }
 
-/// Serve one client connection: loop over query frames until shutdown.
-/// The propagation matrix is registered with the connection's backend
-/// exactly once — queries pay only for the forward kernels.
-fn handle_conn(ctx: &ServeCtx, mut stream: TcpStream) -> std::io::Result<()> {
-    // connection-lifetime metrics: the gauge must fall on *every* exit
-    // path (clean shutdown, malformed query, I/O error), so its
-    // decrement rides a drop guard
-    let reg = crate::obs::global();
-    let lat = reg.histogram("serve_query_ms", &[]);
-    let queries = reg.counter("serve_queries_total", &[]);
-    struct ConnGuard(crate::obs::Gauge);
-    impl Drop for ConnGuard {
-        fn drop(&mut self) {
-            self.0.add(-1.0);
-        }
-    }
-    let active = reg.gauge("serve_active_connections", &[]);
-    active.add(1.0);
-    let _guard = ConnGuard(active);
-    let mut backend = NativeBackend::new();
-    let prop_id = backend.register_prop(&ctx.prop);
-    // feature-override scratch: cloned lazily on this connection's first
-    // override query, then patched/restored row-wise per query
-    let mut scratch: Option<Mat> = None;
-    loop {
-        match frame::read_frame(&mut stream)? {
-            None | Some(Frame::Shutdown { .. }) => return Ok(()),
-            Some(Frame::Hello { .. }) => {}
-            Some(Frame::Data { tag, payload, .. }) => {
-                let watch = crate::util::timer::Stopwatch::start();
-                let logits = answer(ctx, &mut backend, prop_id, &mut scratch, &payload)
-                    .map_err(io_err)?;
-                frame::write_frame(
-                    &mut stream,
-                    &Frame::Data { src: 0, dst: 1, tag, payload: logits },
-                )?;
-                stream.flush()?;
-                lat.record(watch.elapsed_secs() * 1e3);
-                queries.inc();
-            }
-            Some(other) => {
-                return Err(io_err(format!("unexpected frame in a query stream: {other:?}")))
-            }
-        }
-    }
+/// A decoded, validated query: scope-mapped feature/logit rows (in
+/// request order, duplicates allowed) and the optional flattened
+/// feature override (`rows.len() × feat_dim`, empty = none).
+pub struct Query {
+    pub rows: Vec<usize>,
+    pub feats: Vec<f32>,
 }
 
-/// Decode one query payload and run the batch inference. Validation
-/// errors come back as messages (the connection is closed with a
-/// diagnostic, the server keeps running).
-fn answer(
-    ctx: &ServeCtx,
-    backend: &mut dyn Backend,
-    prop_id: usize,
-    scratch: &mut Option<Mat>,
-    payload: &[f32],
-) -> std::result::Result<Vec<f32>, String> {
+/// Decode one query payload against `ctx`. Validation errors come back
+/// as messages (the connection is closed with a diagnostic, the server
+/// keeps running).
+pub fn parse_query(ctx: &ServeCtx, payload: &[f32]) -> std::result::Result<Query, String> {
     if payload.is_empty() {
         return Err("empty query".to_string());
     }
@@ -435,49 +587,142 @@ fn answer(
         rows.push(row);
     }
     let feats = &payload[1 + n..];
-    let fd = ctx.feat_dim;
-    let logits = if feats.is_empty() {
-        forward_registered(prop_id, &ctx.params, backend, &ctx.features)
-    } else {
-        if feats.len() != n * fd {
-            return Err(format!(
-                "feature override must be {n}×{fd} values, got {}",
-                feats.len()
-            ));
-        }
-        // patch the connection's scratch copy row-wise instead of
-        // cloning the whole feature matrix per query
-        let features = scratch.get_or_insert_with(|| ctx.features.clone());
-        for (i, &r) in rows.iter().enumerate() {
-            features.set_row(r, &feats[i * fd..(i + 1) * fd]);
-        }
-        let out = forward_registered(prop_id, &ctx.params, backend, features);
-        // restore the stored rows so later queries see clean features
-        for &r in &rows {
-            features.set_row(r, ctx.features.row(r));
-        }
-        out
-    };
-    let mut out = Vec::with_capacity(n * ctx.n_classes);
-    for &r in &rows {
-        out.extend_from_slice(logits.row(r));
+    if !feats.is_empty() && feats.len() != n * ctx.feat_dim {
+        return Err(format!(
+            "feature override must be {n}×{} values, got {}",
+            ctx.feat_dim,
+            feats.len()
+        ));
     }
-    Ok(out)
+    Ok(Query { rows, feats: feats.to_vec() })
 }
 
-/// A blocking query client for one server connection.
+/// Serve one client connection: parse queries, submit them to the
+/// coalescing executor, stream stamped responses back. Idle
+/// connections poll for the drain flag (via `peek` under a read
+/// timeout, so a frame mid-flight is never split) and close when the
+/// server drains.
+fn handle_conn(
+    state: &ServeState,
+    sub: &tier::Submitter,
+    mut stream: TcpStream,
+) -> std::io::Result<()> {
+    // connection-lifetime metrics: the gauge must fall on *every* exit
+    // path (clean shutdown, malformed query, I/O error), so its
+    // decrement rides a drop guard
+    let reg = crate::obs::global();
+    let lat = reg.histogram("serve_query_ms", &[]);
+    let queries = reg.counter("serve_queries_total", &[]);
+    struct ConnGuard(crate::obs::Gauge);
+    impl Drop for ConnGuard {
+        fn drop(&mut self) {
+            self.0.add(-1.0);
+        }
+    }
+    let active = reg.gauge("serve_active_connections", &[]);
+    active.add(1.0);
+    let _guard = ConnGuard(active);
+    let mut v2 = false;
+    stream.set_read_timeout(Some(IDLE_POLL))?;
+    loop {
+        let mut peek = [0u8; 1];
+        match stream.peek(&mut peek) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.is_draining() {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        // a frame is on the wire: read it whole, then re-arm the poll
+        stream.set_read_timeout(None)?;
+        let f = frame::read_frame(&mut stream)?;
+        stream.set_read_timeout(Some(IDLE_POLL))?;
+        match f {
+            None | Some(Frame::Shutdown { .. }) => return Ok(()),
+            Some(Frame::Hello { addr, .. }) => v2 = addr == PROTO_V2,
+            Some(Frame::Data { tag, payload, .. }) => {
+                let watch = crate::util::timer::Stopwatch::start();
+                let ctx = state.current();
+                let q = parse_query(&ctx, &payload).map_err(io_err)?;
+                let reply = sub.submit(q).map_err(io_err)?;
+                let mut out = Vec::with_capacity(reply.logits.len() + 1);
+                if v2 {
+                    out.push(f32::from_bits(reply.artifact_version));
+                }
+                out.extend_from_slice(&reply.logits);
+                frame::write_frame(
+                    &mut stream,
+                    &Frame::Data { src: 0, dst: 1, tag, payload: out },
+                )?;
+                stream.flush()?;
+                lat.record(watch.elapsed_secs() * 1e3);
+                queries.inc();
+            }
+            Some(Frame::Ctrl { op, arg }) => {
+                let reply = match op {
+                    frame::CTRL_PING => Ok(state.current().artifact_version.to_string()),
+                    frame::CTRL_DRAIN => {
+                        state.start_drain();
+                        Ok("draining".to_string())
+                    }
+                    frame::CTRL_RELOAD => state.reload(&arg).map(|v| v.to_string()),
+                    other => Err(format!("unknown ctrl op {other}")),
+                };
+                let f = match reply {
+                    Ok(arg) => Frame::Ctrl { op: frame::CTRL_ACK, arg },
+                    Err(arg) => Frame::Ctrl { op: frame::CTRL_ERR, arg },
+                };
+                frame::write_frame(&mut stream, &f)?;
+                stream.flush()?;
+            }
+            Some(other) => {
+                return Err(io_err(format!("unexpected frame in a query stream: {other:?}")))
+            }
+        }
+    }
+}
+
+/// A blocking query client for one server (or router) connection.
 pub struct Client {
     stream: TcpStream,
     next_query: u32,
+    v2: bool,
+    last_version: Option<u32>,
 }
 
 impl Client {
-    /// Connect and introduce ourselves.
+    /// Connect speaking protocol v2: responses carry the answering
+    /// artifact version (see [`Client::artifact_version`]).
     pub fn connect(addr: &str) -> std::io::Result<Client> {
+        Client::connect_proto(addr, true)
+    }
+
+    /// Connect speaking the v1 protocol (unstamped responses) — what a
+    /// pre-tier client sends; kept callable so compatibility stays
+    /// testable.
+    pub fn connect_v1(addr: &str) -> std::io::Result<Client> {
+        Client::connect_proto(addr, false)
+    }
+
+    fn connect_proto(addr: &str, v2: bool) -> std::io::Result<Client> {
         let mut stream = TcpStream::connect(addr)?;
-        frame::write_frame(&mut stream, &Frame::Hello { rank: 0, addr: String::new() })?;
+        let hello = if v2 { PROTO_V2.to_string() } else { String::new() };
+        frame::write_frame(&mut stream, &Frame::Hello { rank: 0, addr: hello })?;
         stream.flush()?;
-        Ok(Client { stream, next_query: 1 })
+        Ok(Client { stream, next_query: 1, v2, last_version: None })
+    }
+
+    /// The artifact version stamped on the most recent response (None
+    /// before the first query or on a v1 connection).
+    pub fn artifact_version(&self) -> Option<u32> {
+        self.last_version
     }
 
     /// Logits for `ids` over the graph's stored features — bit-identical
@@ -520,18 +765,59 @@ impl Client {
         self.stream.flush()?;
         match frame::read_frame(&mut self.stream)? {
             Some(Frame::Data { payload, .. }) => {
-                if payload.is_empty() || payload.len() % ids.len() != 0 {
+                let body = if self.v2 {
+                    if payload.is_empty() {
+                        return Err(io_err(
+                            "v2 response is missing its version stamp".to_string(),
+                        ));
+                    }
+                    self.last_version = Some(payload[0].to_bits());
+                    payload[1..].to_vec()
+                } else {
+                    payload
+                };
+                if body.is_empty() || body.len() % ids.len() != 0 {
                     return Err(io_err(format!(
                         "logits payload of {} values does not shape into {} rows",
-                        payload.len(),
+                        body.len(),
                         ids.len()
                     )));
                 }
-                let cols = payload.len() / ids.len();
-                Ok(Mat::from_vec(ids.len(), cols, payload))
+                let cols = body.len() / ids.len();
+                Ok(Mat::from_vec(ids.len(), cols, body))
             }
             other => Err(io_err(format!("expected a logits frame, got {other:?}"))),
         }
+    }
+
+    /// One ctrl round trip; the ack's argument string on success.
+    fn ctrl(&mut self, op: u8, arg: &str) -> std::io::Result<String> {
+        frame::write_frame(&mut self.stream, &Frame::Ctrl { op, arg: arg.to_string() })?;
+        self.stream.flush()?;
+        match frame::read_frame(&mut self.stream)? {
+            Some(Frame::Ctrl { op: frame::CTRL_ACK, arg }) => Ok(arg),
+            Some(Frame::Ctrl { op: frame::CTRL_ERR, arg }) => Err(io_err(arg)),
+            other => Err(io_err(format!("expected a ctrl reply, got {other:?}"))),
+        }
+    }
+
+    /// Health check: the server's (or, at a router, the tier's) status
+    /// string — a serve replica answers with its artifact version.
+    pub fn ping(&mut self) -> std::io::Result<String> {
+        self.ctrl(frame::CTRL_PING, "")
+    }
+
+    /// Ask the server to drain: stop accepting, finish in-flight
+    /// queries, exit its run loop.
+    pub fn drain(&mut self) -> std::io::Result<()> {
+        self.ctrl(frame::CTRL_DRAIN, "").map(|_| ())
+    }
+
+    /// Hot-swap the server's params artifact (at a router: a rolling
+    /// reload across replicas). Returns the ack detail — the new
+    /// version, or per-replica `addr=version` pairs from a router.
+    pub fn reload(&mut self, path: &str) -> std::io::Result<String> {
+        self.ctrl(frame::CTRL_RELOAD, path)
     }
 
     /// Graceful goodbye (the server also tolerates a plain disconnect).
@@ -544,6 +830,9 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::forward_registered;
+    use crate::runtime::native::NativeBackend;
+    use crate::runtime::Backend;
     use crate::util::rng::Rng;
 
     fn tiny_ctx() -> (Graph, ModelConfig, Params) {
@@ -563,67 +852,64 @@ mod tests {
     }
 
     #[test]
-    fn malformed_queries_rejected_without_killing_the_server() {
+    fn malformed_queries_rejected() {
         let (g, cfg, params) = tiny_ctx();
         let n = g.n;
-        let prop = g.mean_propagation_matrix();
-        let ctx = ServeCtx {
-            n: g.n,
-            feat_dim: g.feat_dim(),
-            features: g.features,
-            prop,
-            params,
-            kind: cfg.kind,
-            n_classes: *cfg.dims.last().unwrap(),
-            scope: None,
-        };
-        let mut backend = NativeBackend::new();
-        let pid = backend.register_prop(&ctx.prop);
-        let mut scratch: Option<Mat> = None;
-        let mut ask = |payload: &[f32]| answer(&ctx, &mut backend, pid, &mut scratch, payload);
-        assert!(ask(&[]).is_err());
-        assert!(ask(&[f32::from_bits(0)]).is_err());
+        let fd = g.feat_dim();
+        let ctx = ctx_from_parts(g, cfg, params).unwrap();
+        assert!(parse_query(&ctx, &[]).is_err());
+        assert!(parse_query(&ctx, &[f32::from_bits(0)]).is_err());
         // claims 3 ids, carries 1
-        assert!(ask(&[f32::from_bits(3), f32::from_bits(0)]).is_err());
+        assert!(parse_query(&ctx, &[f32::from_bits(3), f32::from_bits(0)]).is_err());
         // out-of-range id
-        assert!(ask(&[f32::from_bits(1), f32::from_bits(n as u32)]).is_err());
+        assert!(parse_query(&ctx, &[f32::from_bits(1), f32::from_bits(n as u32)]).is_err());
         // wrong feature-override length
-        assert!(ask(&[f32::from_bits(1), f32::from_bits(0), 1.0]).is_err());
-        // a valid query still works on the same connection state
-        let ok = ask(&[f32::from_bits(1), f32::from_bits(0)]).unwrap();
-        assert_eq!(ok.len(), ctx.n_classes);
+        assert!(parse_query(&ctx, &[f32::from_bits(1), f32::from_bits(0), 1.0]).is_err());
+        // a valid plain query maps ids to rows in order
+        let q = parse_query(&ctx, &[f32::from_bits(2), f32::from_bits(3), f32::from_bits(0)])
+            .unwrap();
+        assert_eq!(q.rows, vec![3, 0]);
+        assert!(q.feats.is_empty());
+        // a valid override carries n × feat_dim values
+        let mut over = vec![f32::from_bits(1), f32::from_bits(0)];
+        over.extend(vec![0.5f32; fd]);
+        let q = parse_query(&ctx, &over).unwrap();
+        assert_eq!(q.feats.len(), fd);
     }
 
     #[test]
-    fn override_scratch_restores_stored_features() {
+    fn reload_swaps_params_and_version() {
         let (g, cfg, params) = tiny_ctx();
-        let prop = g.mean_propagation_matrix();
-        let fd = g.feat_dim();
-        let ctx = ServeCtx {
-            n: g.n,
-            feat_dim: fd,
-            features: g.features,
-            prop,
-            params,
-            kind: cfg.kind,
-            n_classes: *cfg.dims.last().unwrap(),
-            scope: None,
+        let params2 = Params::init(&cfg, &mut Rng::new(44));
+        let pf2 = artifact::ParamsFile { config: cfg.clone(), params: params2.clone() };
+        let v2 = artifact::content_version(&pf2);
+        let path = format!("/tmp/pipegcn_reload_{}.pgp", std::process::id());
+        artifact::save(&path, &pf2).unwrap();
+        let state = ServeState::new(ctx_from_parts(g, cfg.clone(), params).unwrap());
+        let v1 = state.current().artifact_version;
+        assert_ne!(v1, v2, "distinct params must version differently");
+        let got = state.reload(&path).unwrap();
+        assert_eq!(got, v2);
+        assert_eq!(state.current().artifact_version, v2);
+        assert_eq!(state.current().params, params2);
+        // graph side is untouched — same Arcs, same graph_version
+        let cur = state.current();
+        assert_eq!(
+            cur.graph_version,
+            graph_version(cur.n, &cur.prop, cur.feat_dim, cur.n_classes, None)
+        );
+        // a mismatched artifact is rejected and the state keeps serving
+        let mut bad_cfg = cfg.clone();
+        bad_cfg.dims[0] += 1;
+        let bad = artifact::ParamsFile {
+            params: Params::init(&bad_cfg, &mut Rng::new(5)),
+            config: bad_cfg,
         };
-        let mut backend = NativeBackend::new();
-        let pid = backend.register_prop(&ctx.prop);
-        let mut scratch: Option<Mat> = None;
-        let plain = [f32::from_bits(1), f32::from_bits(0)];
-        let base = answer(&ctx, &mut backend, pid, &mut scratch, &plain).unwrap();
-        // an override query mutates the scratch copy…
-        let mut over: Vec<f32> = plain.to_vec();
-        over.extend(vec![2.5f32; fd]);
-        let changed = answer(&ctx, &mut backend, pid, &mut scratch, &over).unwrap();
-        assert_ne!(base, changed, "override should change node 0's logits");
-        // …but restores it, so the next plain forward over the scratch
-        // state would match the stored features bit-for-bit
-        assert_eq!(scratch.as_ref().unwrap().data, ctx.features.data);
-        let again = answer(&ctx, &mut backend, pid, &mut scratch, &plain).unwrap();
-        assert_eq!(base, again);
+        artifact::save(&path, &bad).unwrap();
+        let e = state.reload(&path).unwrap_err();
+        assert!(e.contains("feature dim"), "{e}");
+        assert_eq!(state.current().artifact_version, v2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

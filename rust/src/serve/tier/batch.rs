@@ -1,0 +1,273 @@
+//! Request coalescing: a bounded queue in front of the forward path.
+//!
+//! Connection handlers parse queries and hand them to a [`Submitter`];
+//! one executor thread drains the queue into micro-batches — up to
+//! `max_batch` queries, waiting at most `window_ms` after the first
+//! arrival — and answers the whole batch from shared work: one warm
+//! activation cache (or, with caching off, one full forward pass)
+//! instead of one full pass per query. Each query's logits are
+//! scattered back bit-identically to the unbatched forward, so
+//! coalescing is invisible to clients except in throughput.
+//!
+//! The queue is bounded (`TierOpts::queue`): when the executor falls
+//! behind, submitters block inside `send`, which backpressures the
+//! connection threads instead of growing an unbounded backlog.
+
+use super::cache::ActivationCache;
+use crate::coordinator::forward_registered;
+use crate::obs::{Counter, Gauge};
+use crate::runtime::native::NativeBackend;
+use crate::serve::{Query, ServeCtx, ServeState};
+use crate::tensor::Mat;
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Knobs for the coalescing/caching layer (`pipegcn serve
+/// --batch-window-ms / --max-batch / --no-cache`).
+#[derive(Clone, Copy, Debug)]
+pub struct TierOpts {
+    /// how long the executor waits to fill a batch after the first
+    /// query arrives, in milliseconds (0 = no waiting: fuse only what
+    /// is already queued)
+    pub window_ms: f64,
+    /// most queries fused into one pass
+    pub max_batch: usize,
+    /// per-layer activation caching; off = every query is a full
+    /// forward pass (the pre-tier behavior)
+    pub cache: bool,
+    /// bounded queue depth; submitters block (backpressure) when full
+    pub queue: usize,
+}
+
+impl Default for TierOpts {
+    fn default() -> TierOpts {
+        TierOpts { window_ms: 1.0, max_batch: 32, cache: true, queue: 256 }
+    }
+}
+
+/// What the executor sends back for one query.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    /// requested logits, `rows.len() × n_classes`, exact forward bits
+    pub logits: Vec<f32>,
+    /// the artifact the answer came from (stamped into v2 responses)
+    pub artifact_version: u32,
+    /// how many queries shared this kernel pass (observability, tests)
+    pub batch_size: usize,
+}
+
+/// One queued query and the channel its reply goes back on.
+struct Job {
+    q: Query,
+    reply: mpsc::Sender<Result<Reply, String>>,
+}
+
+/// Cache-effectiveness counters, bundled so the batch runner stays
+/// under the argument-count lint.
+struct CacheStats {
+    hits: Counter,
+    misses: Counter,
+    invalidated: Counter,
+}
+
+/// The coalescing front: owns the queue and the executor thread.
+/// Dropping it closes the queue and joins the executor.
+pub struct Coalescer {
+    tx: Option<SyncSender<Job>>,
+    depth: Gauge,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coalescer {
+    /// Spawn the executor thread. It owns the backend (the propagation
+    /// matrix is registered exactly once) and picks up artifact reloads
+    /// from `state` between batches.
+    pub fn start(state: Arc<ServeState>, opts: TierOpts) -> Coalescer {
+        let depth = crate::obs::global().gauge("serve_queue_depth", &[]);
+        let (tx, rx) = mpsc::sync_channel::<Job>(opts.queue.max(1));
+        let exec_depth = depth.clone();
+        let handle = std::thread::spawn(move || executor(&state, opts, &rx, &exec_depth));
+        Coalescer { tx: Some(tx), depth, handle: Some(handle) }
+    }
+
+    /// A submission handle for one connection thread.
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.tx.as_ref().unwrap().clone(), depth: self.depth.clone() }
+    }
+}
+
+impl Drop for Coalescer {
+    fn drop(&mut self) {
+        // closing the channel ends the executor loop once outstanding
+        // submitters are gone; join so in-flight batches finish
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable handle for submitting parsed queries to the executor.
+#[derive(Clone)]
+pub struct Submitter {
+    tx: SyncSender<Job>,
+    depth: Gauge,
+}
+
+impl Submitter {
+    /// Queue one query and wait for its reply. Blocks while the bounded
+    /// queue is full and while the batch runs.
+    pub fn submit(&self, q: Query) -> Result<Reply, String> {
+        let (rtx, rrx) = mpsc::channel();
+        self.depth.add(1.0);
+        if self.tx.send(Job { q, reply: rtx }).is_err() {
+            self.depth.add(-1.0);
+            return Err("serving executor is gone".to_string());
+        }
+        match rrx.recv() {
+            Ok(r) => r,
+            Err(_) => Err("serving executor dropped the query".to_string()),
+        }
+    }
+}
+
+fn executor(state: &ServeState, opts: TierOpts, rx: &mpsc::Receiver<Job>, depth: &Gauge) {
+    let reg = crate::obs::global();
+    let batch_hist = reg.histogram("serve_batch_size", &[]);
+    let stats = CacheStats {
+        hits: reg.counter("serve_cache_hits_total", &[]),
+        misses: reg.counter("serve_cache_misses_total", &[]),
+        invalidated: reg.counter("serve_cache_rows_invalidated_total", &[]),
+    };
+    let mut backend = NativeBackend::new();
+    // the propagation matrix never changes across reloads (only params
+    // do), so one registration serves the executor's whole life
+    let prop_id = backend.register_prop(&state.current().prop);
+    let mut scratch: Option<Mat> = None;
+    let mut cache: Option<ActivationCache> = None;
+    let max_batch = opts.max_batch.max(1);
+    loop {
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return,
+        };
+        depth.add(-1.0);
+        let mut jobs = vec![first];
+        if opts.window_ms > 0.0 {
+            let deadline = Instant::now() + Duration::from_secs_f64(opts.window_ms / 1e3);
+            while jobs.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => {
+                        depth.add(-1.0);
+                        jobs.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+        } else {
+            while jobs.len() < max_batch {
+                match rx.try_recv() {
+                    Ok(j) => {
+                        depth.add(-1.0);
+                        jobs.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        batch_hist.record(jobs.len() as f64);
+        let ctx = state.current();
+        if opts.cache {
+            if !cache.as_ref().is_some_and(|c| c.matches(&ctx)) {
+                cache = Some(ActivationCache::new(&ctx));
+            }
+        } else {
+            cache = None;
+        }
+        run_batch(&ctx, &mut backend, prop_id, &mut scratch, cache.as_mut(), jobs, &stats);
+    }
+}
+
+/// Answer one fused batch. Plain queries share the warm cache (or one
+/// full pass with caching off); override queries run individually with
+/// patch/restore semantics, exactly like the pre-tier server.
+fn run_batch(
+    ctx: &ServeCtx,
+    backend: &mut NativeBackend,
+    prop_id: usize,
+    scratch: &mut Option<Mat>,
+    cache: Option<&mut ActivationCache>,
+    jobs: Vec<Job>,
+    stats: &CacheStats,
+) {
+    let batch_size = jobs.len();
+    let reply_of = |logits: Vec<f32>| Reply {
+        logits,
+        artifact_version: ctx.artifact_version,
+        batch_size,
+    };
+    let (mut plain, mut over) = (Vec::new(), Vec::new());
+    for j in jobs {
+        if j.q.feats.is_empty() {
+            plain.push(j);
+        } else {
+            over.push(j);
+        }
+    }
+    if let Some(c) = cache {
+        let was_warm = c.is_warm();
+        if !was_warm {
+            c.warm(ctx);
+        }
+        if was_warm {
+            stats.hits.add(batch_size as f64);
+        } else {
+            stats.misses.add(batch_size as f64);
+        }
+        for j in plain {
+            let logits = c.final_rows(ctx, &j.q.rows);
+            let _ = j.reply.send(Ok(reply_of(logits)));
+        }
+        for j in over {
+            let scr = scratch.get_or_insert_with(|| (*ctx.features).clone());
+            let (logits, inv) = c.override_rows(ctx, scr, &j.q.rows, &j.q.feats);
+            stats.invalidated.add(inv as f64);
+            let _ = j.reply.send(Ok(reply_of(logits)));
+        }
+        return;
+    }
+    if !plain.is_empty() {
+        // one full pass answers every plain query in the batch — the
+        // forward is deterministic, so the shared pass carries the
+        // exact bits each per-query pass would have produced
+        let full = forward_registered(prop_id, &ctx.params, backend, &ctx.features);
+        for j in plain {
+            let mut logits = Vec::with_capacity(j.q.rows.len() * ctx.n_classes);
+            for &r in &j.q.rows {
+                logits.extend_from_slice(full.row(r));
+            }
+            let _ = j.reply.send(Ok(reply_of(logits)));
+        }
+    }
+    for j in over {
+        let scr = scratch.get_or_insert_with(|| (*ctx.features).clone());
+        let fd = ctx.feat_dim;
+        for (i, &r) in j.q.rows.iter().enumerate() {
+            scr.set_row(r, &j.q.feats[i * fd..(i + 1) * fd]);
+        }
+        let full = forward_registered(prop_id, &ctx.params, backend, scr);
+        for &r in &j.q.rows {
+            scr.set_row(r, ctx.features.row(r));
+        }
+        let mut logits = Vec::with_capacity(j.q.rows.len() * ctx.n_classes);
+        for &r in &j.q.rows {
+            logits.extend_from_slice(full.row(r));
+        }
+        let _ = j.reply.send(Ok(reply_of(logits)));
+    }
+}

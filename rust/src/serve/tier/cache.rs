@@ -1,0 +1,210 @@
+//! Per-layer activation caching keyed by `(artifact_version,
+//! graph_version)`.
+//!
+//! The forward pass over the *stored* features is the same for every
+//! plain query, so the hidden activations `h_1..h_{L-1}` are computed
+//! once per (artifact, graph) key and every plain query pays only the
+//! final layer over its requested rows. A feature-override query
+//! recomputes exactly the rows its change can reach — the override's
+//! propagation cone, one hop wider per layer — answers from the patched
+//! state, and restores every touched row, so the cache stays clean for
+//! the next query. A rolling reload changes `artifact_version`, which
+//! invalidates the whole cache; the executor rebuilds it lazily.
+//!
+//! ## Bit-identity
+//!
+//! [`ActivationCache::warm`] replays the exact op order of the native
+//! backend's `layer_fwd` + [`ops::relu`] (spmm → matmul → add_assign →
+//! relu), and the row paths use the shared row kernels
+//! ([`Csr::spmm_row`], [`dense::gemm_row`]) that the full-matrix
+//! kernels are themselves defined by, with the same per-row summation
+//! order. Cached logits therefore carry the exact bits of an uncached
+//! [`crate::coordinator::forward_registered`] pass — asserted bitwise
+//! in `tests/serve_tier.rs`, including under random override sets.
+
+use crate::serve::ServeCtx;
+use crate::tensor::{dense, ops, Csr, Mat};
+
+/// Cached hidden activations for one serving context.
+pub struct ActivationCache {
+    artifact_version: u32,
+    graph_version: u64,
+    /// post-ReLU activations `h_1..h_{L-1}` over the stored features;
+    /// empty for a single-layer model or before the first warm
+    hidden: Vec<Mat>,
+    warmed: bool,
+    /// reverse propagation adjacency (column → reading rows), built
+    /// lazily on the first override query
+    rev: Option<Csr>,
+}
+
+impl ActivationCache {
+    pub fn new(ctx: &ServeCtx) -> ActivationCache {
+        ActivationCache {
+            artifact_version: ctx.artifact_version,
+            graph_version: ctx.graph_version,
+            hidden: Vec::new(),
+            warmed: false,
+            rev: None,
+        }
+    }
+
+    /// Does this cache still describe `ctx`? False after a reload (new
+    /// `artifact_version`) or against a different graph.
+    pub fn matches(&self, ctx: &ServeCtx) -> bool {
+        self.artifact_version == ctx.artifact_version && self.graph_version == ctx.graph_version
+    }
+
+    pub fn is_warm(&self) -> bool {
+        self.warmed
+    }
+
+    /// Compute `h_1..h_{L-1}` over the stored features: one pass of
+    /// every layer but the last, in `layer_fwd`'s exact op order.
+    pub fn warm(&mut self, ctx: &ServeCtx) {
+        let nl = ctx.params.layers.len();
+        self.hidden.clear();
+        for l in 0..nl.saturating_sub(1) {
+            let lp = &ctx.params.layers[l];
+            let mut pre = {
+                let cur: &Mat =
+                    if l == 0 { ctx.features.as_ref() } else { &self.hidden[l - 1] };
+                let z = ctx.prop.spmm(cur);
+                let mut pre = z.matmul(&lp.w_neigh);
+                if let Some(ws) = &lp.w_self {
+                    // layer_fwd takes rows_range(0, inner) first, but in
+                    // serving inner == all rows, so the copy is
+                    // value-identical to `cur`
+                    pre.add_assign(&cur.matmul(ws));
+                }
+                pre
+            };
+            ops::relu_inplace(&mut pre);
+            self.hidden.push(pre);
+        }
+        self.warmed = true;
+    }
+
+    /// Logits for `rows` (scope-mapped feature-row indices, duplicates
+    /// allowed, response order preserved) from the warm cache: only the
+    /// final layer runs, and only over the requested rows.
+    pub fn final_rows(&self, ctx: &ServeCtx, rows: &[usize]) -> Vec<f32> {
+        debug_assert!(self.warmed, "final_rows on a cold cache");
+        let nl = ctx.params.layers.len();
+        let h: &Mat = if nl == 1 { ctx.features.as_ref() } else { &self.hidden[nl - 2] };
+        last_layer_rows(ctx, h, rows)
+    }
+
+    /// Answer an override query against the warm cache: patch `scratch`
+    /// (the executor's mutable copy of the stored features), recompute
+    /// exactly the dependent cached rows layer by layer, read the
+    /// requested logits from the patched state, then restore every
+    /// touched row. Returns the logits and the number of cached rows
+    /// invalidated (recomputed) across the hidden layers.
+    pub fn override_rows(
+        &mut self,
+        ctx: &ServeCtx,
+        scratch: &mut Mat,
+        rows: &[usize],
+        feats: &[f32],
+    ) -> (Vec<f32>, usize) {
+        debug_assert!(self.warmed, "override_rows on a cold cache");
+        let fd = ctx.feat_dim;
+        for (i, &r) in rows.iter().enumerate() {
+            scratch.set_row(r, &feats[i * fd..(i + 1) * fd]);
+        }
+        if self.rev.is_none() {
+            self.rev = Some(ctx.prop.transpose());
+        }
+        let nl = ctx.params.layers.len();
+        let mut dirty: Vec<usize> = rows.to_vec();
+        dirty.sort_unstable();
+        dirty.dedup();
+        let mut saved: Vec<Vec<(usize, Vec<f32>)>> = Vec::new();
+        let mut invalidated = 0usize;
+        for l in 0..nl.saturating_sub(1) {
+            // the cone: rows whose layer-l output reads a dirty input —
+            // prop readers of dirty columns (via the reverse adjacency)
+            // plus the dirty rows themselves (w_self reads row r).
+            // Over-approximation is safe: recomputing an unchanged row
+            // from identical inputs reproduces identical bits.
+            let rev = self.rev.as_ref().unwrap();
+            let m = scratch.rows;
+            let mut mark = vec![false; m];
+            for &d in &dirty {
+                mark[d] = true;
+                for (r, _) in rev.row_entries(d) {
+                    mark[r] = true;
+                }
+            }
+            let cone: Vec<usize> = (0..m).filter(|&r| mark[r]).collect();
+            invalidated += cone.len();
+            let lp = &ctx.params.layers[l];
+            let mut updates: Vec<(usize, Vec<f32>)> = Vec::with_capacity(cone.len());
+            {
+                let h_prev: &Mat = if l == 0 { &*scratch } else { &self.hidden[l - 1] };
+                let mut z = vec![0.0f32; lp.w_neigh.rows];
+                let mut s = vec![0.0f32; lp.w_neigh.cols];
+                for &r in &cone {
+                    ctx.prop.spmm_row(r, h_prev, &mut z);
+                    let mut pre = vec![0.0f32; lp.w_neigh.cols];
+                    dense::gemm_row(&z, &lp.w_neigh, &mut pre);
+                    if let Some(ws) = &lp.w_self {
+                        dense::gemm_row(h_prev.row(r), ws, &mut s);
+                        for (p, sv) in pre.iter_mut().zip(s.iter()) {
+                            *p += *sv;
+                        }
+                    }
+                    for p in pre.iter_mut() {
+                        *p = p.max(0.0);
+                    }
+                    updates.push((r, pre));
+                }
+            }
+            let mut layer_saved = Vec::with_capacity(updates.len());
+            for (r, new_row) in updates {
+                layer_saved.push((r, self.hidden[l].row(r).to_vec()));
+                self.hidden[l].set_row(r, &new_row);
+            }
+            saved.push(layer_saved);
+            dirty = cone;
+        }
+        let out = {
+            let h: &Mat = if nl == 1 { &*scratch } else { &self.hidden[nl - 2] };
+            last_layer_rows(ctx, h, rows)
+        };
+        // restore the cached rows, then the scratch feature rows
+        for (l, layer_saved) in saved.into_iter().enumerate() {
+            for (r, row) in layer_saved {
+                self.hidden[l].set_row(r, &row);
+            }
+        }
+        for &r in rows {
+            scratch.set_row(r, ctx.features.row(r));
+        }
+        (out, invalidated)
+    }
+}
+
+/// The final (ReLU-less) layer for each requested row: spmm_row +
+/// gemm_row (+ the w_self row term) — the exact per-row decomposition
+/// of `spmm`/`matmul`/`add_assign`, so the bits match the full pass.
+fn last_layer_rows(ctx: &ServeCtx, h: &Mat, rows: &[usize]) -> Vec<f32> {
+    let lp = ctx.params.layers.last().unwrap();
+    let mut out = Vec::with_capacity(rows.len() * ctx.n_classes);
+    let mut z = vec![0.0f32; lp.w_neigh.rows];
+    let mut pre = vec![0.0f32; ctx.n_classes];
+    let mut s = vec![0.0f32; ctx.n_classes];
+    for &r in rows {
+        ctx.prop.spmm_row(r, h, &mut z);
+        dense::gemm_row(&z, &lp.w_neigh, &mut pre);
+        if let Some(ws) = &lp.w_self {
+            dense::gemm_row(h.row(r), ws, &mut s);
+            for (p, sv) in pre.iter_mut().zip(s.iter()) {
+                *p += *sv;
+            }
+        }
+        out.extend_from_slice(&pre);
+    }
+    out
+}

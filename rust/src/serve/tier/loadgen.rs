@@ -1,0 +1,178 @@
+//! Load generation for the serving tier (`pipegcn query --concurrency
+//! / --rate`).
+//!
+//! Two classic modes. **Closed loop** (`--concurrency N`): N workers,
+//! each with its own connection, issue the next query the moment the
+//! previous answer lands — measures the tier's saturated throughput and
+//! the latency it sustains there. **Open loop** (`--rate QPS`): queries
+//! are scheduled on a fixed global timeline and latency is measured
+//! from the *scheduled* send time, so a slow server shows up as rising
+//! latency instead of silently slowing the generator down (the
+//! coordinated-omission trap closed-loop numbers fall into).
+//!
+//! Workers reconnect and keep going after an error; the report carries
+//! the error count so "zero failed queries" is an assertable outcome,
+//! not an assumption.
+
+use crate::perf::percentile;
+use crate::serve::Client;
+use crate::util::timer::Stopwatch;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Closed loop (fixed concurrency) or open loop (fixed arrival rate).
+#[derive(Clone, Copy, Debug)]
+pub enum LoadMode {
+    Closed { concurrency: usize },
+    Open { rate: f64, workers: usize },
+}
+
+/// One load-generation run against a serve or route address.
+#[derive(Clone, Debug)]
+pub struct LoadOpts {
+    pub addr: String,
+    /// node ids to rotate through (one id per query)
+    pub ids: Vec<u32>,
+    pub mode: LoadMode,
+    pub duration_s: f64,
+}
+
+/// What one run measured — one NDJSON row in `BENCH_serve.json`.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub mode: &'static str,
+    pub concurrency: usize,
+    /// requested open-loop rate (0 for closed loop)
+    pub rate_qps: f64,
+    /// actual wall-clock of the run
+    pub duration_s: f64,
+    pub queries: u64,
+    pub errors: u64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Run the load and aggregate per-worker latencies into one report.
+pub fn run(o: &LoadOpts) -> LoadReport {
+    assert!(!o.ids.is_empty(), "load generation needs at least one node id");
+    let (workers, mode, rate) = match o.mode {
+        LoadMode::Closed { concurrency } => (concurrency.max(1), "closed", 0.0),
+        LoadMode::Open { rate, workers } => (workers.max(1), "open", rate),
+    };
+    let t0 = Instant::now();
+    let stop_at = t0 + Duration::from_secs_f64(o.duration_s.max(0.01));
+    let tick = AtomicU64::new(0);
+    let results: Vec<(Vec<f64>, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let tick = &tick;
+                s.spawn(move || match o.mode {
+                    LoadMode::Closed { .. } => closed_worker(&o.addr, &o.ids, w, stop_at),
+                    LoadMode::Open { rate, .. } => {
+                        open_worker(&o.addr, &o.ids, tick, rate, (t0, stop_at))
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("load worker panicked")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut lats: Vec<f64> = Vec::new();
+    let mut errors = 0u64;
+    for (l, e) in results {
+        lats.extend(l);
+        errors += e;
+    }
+    let queries = lats.len() as u64;
+    lats.sort_by(f64::total_cmp);
+    let pct = |q: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, q) };
+    LoadReport {
+        mode,
+        concurrency: workers,
+        rate_qps: rate,
+        duration_s: elapsed,
+        queries,
+        errors,
+        qps: queries as f64 / elapsed.max(1e-12),
+        p50_ms: pct(0.50),
+        p90_ms: pct(0.90),
+        p99_ms: pct(0.99),
+    }
+}
+
+fn closed_worker(addr: &str, ids: &[u32], seed: usize, stop_at: Instant) -> (Vec<f64>, u64) {
+    let mut lats = Vec::new();
+    let mut errors = 0u64;
+    let mut client: Option<Client> = None;
+    let mut k = seed; // stagger workers across the id list
+    while Instant::now() < stop_at {
+        let Some(c) = ensure_client(&mut client, addr, &mut errors) else { continue };
+        let id = ids[k % ids.len()];
+        k += 1;
+        let watch = Stopwatch::start();
+        match c.query(&[id]) {
+            Ok(_) => lats.push(watch.elapsed_secs() * 1e3),
+            Err(_) => {
+                errors += 1;
+                client = None;
+            }
+        }
+    }
+    (lats, errors)
+}
+
+fn open_worker(
+    addr: &str,
+    ids: &[u32],
+    tick: &AtomicU64,
+    rate: f64,
+    window: (Instant, Instant),
+) -> (Vec<f64>, u64) {
+    let (t0, stop_at) = window;
+    let rate = rate.max(0.1);
+    let mut lats = Vec::new();
+    let mut errors = 0u64;
+    let mut client: Option<Client> = None;
+    loop {
+        let t = tick.fetch_add(1, Ordering::SeqCst);
+        let sched = t0 + Duration::from_secs_f64(t as f64 / rate);
+        if sched >= stop_at {
+            return (lats, errors);
+        }
+        let now = Instant::now();
+        if sched > now {
+            std::thread::sleep(sched - now);
+        }
+        let Some(c) = ensure_client(&mut client, addr, &mut errors) else { continue };
+        let id = ids[(t as usize) % ids.len()];
+        match c.query(&[id]) {
+            // latency from the *scheduled* time: queueing delay counts
+            Ok(_) => lats.push(sched.elapsed().as_secs_f64() * 1e3),
+            Err(_) => {
+                errors += 1;
+                client = None;
+            }
+        }
+    }
+}
+
+/// Connect lazily and reconnect after failures (counted, throttled).
+fn ensure_client<'a>(
+    client: &'a mut Option<Client>,
+    addr: &str,
+    errors: &mut u64,
+) -> Option<&'a mut Client> {
+    if client.is_none() {
+        match Client::connect(addr) {
+            Ok(c) => *client = Some(c),
+            Err(_) => {
+                *errors += 1;
+                std::thread::sleep(Duration::from_millis(10));
+                return None;
+            }
+        }
+    }
+    client.as_mut()
+}

@@ -1,0 +1,32 @@
+//! The serving tier: what turns one `serve` process into a production
+//! front.
+//!
+//! Three coupled layers over the PR-4 inference path, every one of them
+//! bit-transparent (logits identical to the unbatched, uncached,
+//! single-replica forward — asserted in `tests/serve_tier.rs`):
+//!
+//! - [`batch`] — request coalescing: a bounded queue micro-batches
+//!   queued queries into one kernel pass under a latency budget
+//!   (`--batch-window-ms`, `--max-batch`), with per-query scatter-back.
+//! - [`cache`] — per-layer activation caching keyed by
+//!   `(artifact_version, graph_version)`: plain queries reuse layers
+//!   `1..L−1` and pay only the final layer; feature overrides
+//!   invalidate exactly the dependent rows (the override's propagation
+//!   cone) and restore them afterwards.
+//! - [`router`] — `pipegcn route`: N `serve` replicas behind one
+//!   address, health-checked, least-loaded, with automatic failover and
+//!   rolling artifact reload for zero-downtime model updates.
+//!
+//! [`loadgen`] drives it all: closed-loop (`--concurrency`) and
+//! open-loop (`--rate`) generation for the sustained-QPS rows in
+//! `BENCH_serve.json`.
+
+pub mod batch;
+pub mod cache;
+pub mod loadgen;
+pub mod router;
+
+pub use batch::{Coalescer, Reply, Submitter, TierOpts};
+pub use cache::ActivationCache;
+pub use loadgen::{LoadMode, LoadOpts, LoadReport};
+pub use router::{Router, RouterOpts};

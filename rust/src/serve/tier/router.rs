@@ -1,0 +1,429 @@
+//! Replica router: one front door for N `pipegcn serve` replicas.
+//!
+//! `pipegcn route` binds a client-facing listener speaking the same
+//! frame protocol as `serve` and forwards each query to the healthiest,
+//! least-loaded replica. Replicas are health-checked on a timer (a
+//! `Ctrl` ping over a fresh connection; `pipegcn_replica_up` per
+//! replica); a replica that fails a probe or a query is marked down,
+//! its pooled connections are discarded, and the query is resent to
+//! another replica — queries are idempotent reads, so resend-on-failure
+//! is safe and a replica death mid-load loses no client queries.
+//!
+//! A `Ctrl` reload request triggers a **rolling** artifact reload: one
+//! replica at a time is taken out of admission, its in-flight queries
+//! drain, it swaps to the new artifact (`Ctrl` reload on the replica),
+//! and it is readmitted before the next replica starts — so the tier
+//! never has zero admitting replicas and clients see zero failures.
+//! Responses carry the answering replica's `artifact_version` stamp,
+//! which makes the mixed-version window during a roll observable
+//! instead of silent.
+
+use crate::comm::Tag;
+use crate::net::frame::{self, Frame};
+use crate::obs::{Counter, Gauge};
+use crate::serve::PROTO_V2;
+use crate::util::error::{Context, Result};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// How to stand up a router from the CLI.
+#[derive(Clone, Debug)]
+pub struct RouterOpts {
+    /// client-facing listen address (`127.0.0.1:0` = ephemeral port)
+    pub bind: String,
+    /// replica addresses (`pipegcn serve` processes)
+    pub replicas: Vec<String>,
+    /// health-probe period in milliseconds
+    pub probe_ms: u64,
+}
+
+/// How long a query waits for *some* replica before failing, and how
+/// long a rolling reload waits for one replica's in-flight queries.
+const DISPATCH_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One replica as the router sees it.
+struct Slot {
+    addr: String,
+    /// last probe/query outcome
+    healthy: AtomicBool,
+    /// false only while a rolling reload drains this replica
+    admitting: AtomicBool,
+    in_flight: AtomicUsize,
+    /// idle pooled connections (hello already sent, v2)
+    idle: Mutex<Vec<TcpStream>>,
+    up: Gauge,
+    inflight_g: Gauge,
+    version_g: Gauge,
+}
+
+impl Slot {
+    fn new(addr: String) -> Slot {
+        let reg = crate::obs::global();
+        let labels: &[(&str, &str)] = &[("replica", &addr)];
+        Slot {
+            healthy: AtomicBool::new(false),
+            admitting: AtomicBool::new(true),
+            in_flight: AtomicUsize::new(0),
+            idle: Mutex::new(Vec::new()),
+            up: reg.gauge("replica_up", labels),
+            inflight_g: reg.gauge("replica_in_flight", labels),
+            version_g: reg.gauge("replica_artifact_version", labels),
+            addr,
+        }
+    }
+
+    fn mark_down(&self) {
+        self.healthy.store(false, Ordering::SeqCst);
+        self.up.set(0.0);
+        self.idle.lock().unwrap().clear();
+    }
+
+    fn mark_up(&self, version: Option<u32>) {
+        self.healthy.store(true, Ordering::SeqCst);
+        self.up.set(1.0);
+        if let Some(v) = version {
+            self.version_g.set(v as f64);
+        }
+    }
+}
+
+struct RouterState {
+    slots: Vec<Slot>,
+    draining: AtomicBool,
+    queries: Counter,
+    retries: Counter,
+    reloads: Counter,
+}
+
+/// A bound (not yet accepting) router.
+pub struct Router {
+    listener: TcpListener,
+    state: Arc<RouterState>,
+    probe_ms: u64,
+    addr: String,
+}
+
+fn io_err(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+impl Router {
+    /// Bind the client listener and probe every replica once (a dead
+    /// replica at startup is not fatal — the health loop readmits it
+    /// when it appears).
+    pub fn bind(o: &RouterOpts) -> Result<Router> {
+        if o.replicas.is_empty() {
+            crate::bail!("route needs at least one replica address");
+        }
+        let reg = crate::obs::global();
+        let state = Arc::new(RouterState {
+            slots: o.replicas.iter().map(|a| Slot::new(a.clone())).collect(),
+            draining: AtomicBool::new(false),
+            queries: reg.counter("route_queries_total", &[]),
+            retries: reg.counter("route_retries_total", &[]),
+            reloads: reg.counter("route_reloads_total", &[]),
+        });
+        for slot in &state.slots {
+            probe(slot);
+        }
+        let listener =
+            TcpListener::bind(&o.bind).with_context(|| format!("binding {}", o.bind))?;
+        let addr = listener.local_addr()?.to_string();
+        Ok(Router { listener, state, probe_ms: o.probe_ms.max(10), addr })
+    }
+
+    /// The bound client-facing address (`host:port`).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Accept client connections until drained (or `max_conns` have
+    /// finished), with the health loop probing replicas in the
+    /// background. Returns cleanly after a `Ctrl` drain: the listener
+    /// stops admitting, in-flight client connections finish, then the
+    /// health loop stops.
+    pub fn run(self, max_conns: Option<usize>) -> Result<()> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let health = {
+            let state = self.state.clone();
+            let stop = stop.clone();
+            let period = Duration::from_millis(self.probe_ms);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    for slot in &state.slots {
+                        let was = slot.healthy.load(Ordering::SeqCst);
+                        if !probe(slot) && was {
+                            slot.mark_down();
+                        }
+                    }
+                    std::thread::sleep(period);
+                }
+            })
+        };
+        self.listener.set_nonblocking(true).context("router listener nonblocking")?;
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut served = 0usize;
+        loop {
+            if self.state.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Some(m) = max_conns {
+                if served >= m {
+                    break;
+                }
+            }
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    served += 1;
+                    let state = self.state.clone();
+                    handles.push(std::thread::spawn(move || {
+                        if let Err(e) = handle_client(&state, stream) {
+                            eprintln!("route: connection {peer}: {e}");
+                        }
+                    }));
+                    handles.retain(|h| !h.is_finished());
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e).context("accepting a router connection"),
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        stop.store(true, Ordering::SeqCst);
+        let _ = health.join();
+        Ok(())
+    }
+}
+
+/// Open a v2 connection to a replica (hello already sent on return).
+fn replica_connect(addr: &str) -> std::io::Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)?;
+    frame::write_frame(&mut stream, &Frame::Hello { rank: 0, addr: PROTO_V2.to_string() })?;
+    stream.flush()?;
+    Ok(stream)
+}
+
+/// One ctrl round trip on a fresh replica connection.
+fn replica_ctrl(addr: &str, op: u8, arg: &str) -> std::io::Result<String> {
+    let mut stream = replica_connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    frame::write_frame(&mut stream, &Frame::Ctrl { op, arg: arg.to_string() })?;
+    stream.flush()?;
+    let reply = match frame::read_frame(&mut stream)? {
+        Some(Frame::Ctrl { op: frame::CTRL_ACK, arg }) => Ok(arg),
+        Some(Frame::Ctrl { op: frame::CTRL_ERR, arg }) => Err(io_err(arg)),
+        other => Err(io_err(format!("replica sent {other:?} to a ctrl request"))),
+    };
+    let _ = frame::write_frame(&mut stream, &Frame::Shutdown { src: 0 });
+    let _ = stream.flush();
+    reply
+}
+
+/// Ping one replica; on success mark it up (with its artifact version)
+/// and return true.
+fn probe(slot: &Slot) -> bool {
+    match replica_ctrl(&slot.addr, frame::CTRL_PING, "") {
+        Ok(arg) => {
+            slot.mark_up(arg.trim().parse::<u32>().ok());
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// in-flight accounting that survives early returns
+struct FlightGuard<'a>(&'a Slot);
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.in_flight.fetch_sub(1, Ordering::SeqCst);
+        self.0.inflight_g.add(-1.0);
+    }
+}
+
+/// Send one query to `slot` (pooled connection or a fresh one) and read
+/// the stamped response. The connection returns to the pool on success.
+fn query_replica(slot: &Slot, tag: Tag, payload: &[f32]) -> std::io::Result<Vec<f32>> {
+    slot.in_flight.fetch_add(1, Ordering::SeqCst);
+    slot.inflight_g.add(1.0);
+    let _guard = FlightGuard(slot);
+    let pooled = slot.idle.lock().unwrap().pop();
+    let mut stream = match pooled {
+        Some(s) => s,
+        None => replica_connect(&slot.addr)?,
+    };
+    frame::write_frame(
+        &mut stream,
+        &Frame::Data { src: 0, dst: 0, tag, payload: payload.to_vec() },
+    )?;
+    stream.flush()?;
+    match frame::read_frame(&mut stream)? {
+        Some(Frame::Data { payload, .. }) => {
+            if payload.is_empty() {
+                return Err(io_err("replica sent an empty response".to_string()));
+            }
+            slot.version_g.set(payload[0].to_bits() as f64);
+            slot.idle.lock().unwrap().push(stream);
+            Ok(payload)
+        }
+        other => Err(io_err(format!("replica sent {other:?} to a query"))),
+    }
+}
+
+/// Pick the healthiest, least-loaded admitting replica.
+fn pick(state: &RouterState) -> Option<usize> {
+    state
+        .slots
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            s.healthy.load(Ordering::SeqCst) && s.admitting.load(Ordering::SeqCst)
+        })
+        .min_by_key(|(_, s)| s.in_flight.load(Ordering::SeqCst))
+        .map(|(i, _)| i)
+}
+
+/// Route one query: least-loaded dispatch with failover. A failed
+/// replica is marked down and the query resent elsewhere; only running
+/// out of replicas for [`DISPATCH_DEADLINE`] fails the query.
+fn dispatch(state: &RouterState, tag: Tag, payload: &[f32]) -> std::io::Result<Vec<f32>> {
+    let deadline = Instant::now() + DISPATCH_DEADLINE;
+    loop {
+        let Some(i) = pick(state) else {
+            if Instant::now() >= deadline {
+                return Err(io_err("no admitting replica".to_string()));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        };
+        match query_replica(&state.slots[i], tag, payload) {
+            Ok(resp) => {
+                state.queries.inc();
+                return Ok(resp);
+            }
+            Err(e) => {
+                state.slots[i].mark_down();
+                state.retries.inc();
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+/// Reload every healthy replica in sequence: stop admitting → wait for
+/// its in-flight queries → `Ctrl` reload → readmit. The drain wait
+/// keeps the version flip clean per replica; a query that races past it
+/// still gets a correct (stamped) answer from the old or new artifact.
+fn rolling_reload(state: &RouterState, path: &str) -> std::result::Result<String, String> {
+    let healthy: Vec<usize> = (0..state.slots.len())
+        .filter(|&i| state.slots[i].healthy.load(Ordering::SeqCst))
+        .collect();
+    if healthy.is_empty() {
+        return Err("no healthy replica to reload".to_string());
+    }
+    let mut versions = Vec::new();
+    for i in healthy {
+        let slot = &state.slots[i];
+        slot.admitting.store(false, Ordering::SeqCst);
+        let deadline = Instant::now() + DISPATCH_DEADLINE;
+        while slot.in_flight.load(Ordering::SeqCst) > 0 {
+            if Instant::now() >= deadline {
+                slot.admitting.store(true, Ordering::SeqCst);
+                return Err(format!("timed out draining {}", slot.addr));
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        match replica_ctrl(&slot.addr, frame::CTRL_RELOAD, path) {
+            Ok(v) => {
+                slot.version_g.set(v.trim().parse::<u32>().unwrap_or(0) as f64);
+                versions.push(format!("{}={}", slot.addr, v));
+            }
+            Err(e) => {
+                slot.admitting.store(true, Ordering::SeqCst);
+                return Err(format!("reload on {}: {}", slot.addr, e));
+            }
+        }
+        slot.admitting.store(true, Ordering::SeqCst);
+    }
+    state.reloads.inc();
+    Ok(versions.join(","))
+}
+
+/// Serve one client connection: queries are dispatched to replicas,
+/// ctrl requests are handled by the router itself (ping = tier health,
+/// drain = stop the router, reload = rolling reload across replicas).
+fn handle_client(state: &RouterState, mut stream: TcpStream) -> std::io::Result<()> {
+    let mut v2 = false;
+    stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+    loop {
+        let mut peek = [0u8; 1];
+        match stream.peek(&mut peek) {
+            Ok(0) => return Ok(()),
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.draining.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+                continue;
+            }
+            Err(e) => return Err(e),
+        }
+        stream.set_read_timeout(None)?;
+        let f = frame::read_frame(&mut stream)?;
+        stream.set_read_timeout(Some(Duration::from_millis(100)))?;
+        match f {
+            None | Some(Frame::Shutdown { .. }) => return Ok(()),
+            Some(Frame::Hello { addr, .. }) => v2 = addr == PROTO_V2,
+            Some(Frame::Data { tag, payload, .. }) => {
+                let mut resp = dispatch(state, tag, &payload)?;
+                if !v2 {
+                    // old clients negotiated no version stamp
+                    resp.remove(0);
+                }
+                frame::write_frame(
+                    &mut stream,
+                    &Frame::Data { src: 0, dst: 1, tag, payload: resp },
+                )?;
+                stream.flush()?;
+            }
+            Some(Frame::Ctrl { op, arg }) => {
+                let reply = match op {
+                    frame::CTRL_PING => {
+                        let up = state
+                            .slots
+                            .iter()
+                            .filter(|s| s.healthy.load(Ordering::SeqCst))
+                            .count();
+                        Ok(format!("{up}/{} replicas healthy", state.slots.len()))
+                    }
+                    frame::CTRL_DRAIN => {
+                        state.draining.store(true, Ordering::SeqCst);
+                        Ok("draining".to_string())
+                    }
+                    frame::CTRL_RELOAD => rolling_reload(state, &arg),
+                    other => Err(format!("unknown ctrl op {other}")),
+                };
+                let f = match reply {
+                    Ok(arg) => Frame::Ctrl { op: frame::CTRL_ACK, arg },
+                    Err(arg) => Frame::Ctrl { op: frame::CTRL_ERR, arg },
+                };
+                frame::write_frame(&mut stream, &f)?;
+                stream.flush()?;
+            }
+            Some(other) => {
+                return Err(io_err(format!("unexpected frame at the router: {other:?}")))
+            }
+        }
+    }
+}

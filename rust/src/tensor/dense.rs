@@ -33,8 +33,10 @@ const PAR_GEMM_MIN: usize = 1 << 15;
 /// One output row of `C = A·B`: `c_row = a_row·B`, k-blocked with a
 /// 4-way unroll. Extracting the row kernel fixes the per-element f32
 /// summation order (k ascending, 4-fused groups) that the serial and
-/// row-parallel paths share, so they agree bit-for-bit.
-fn gemm_row(a_row: &[f32], b: &Mat, c_row: &mut [f32]) {
+/// row-parallel paths share, so they agree bit-for-bit. Crate-visible
+/// so the serving tier's activation cache can recompute a row subset
+/// bit-identically to a full [`Mat::matmul`].
+pub(crate) fn gemm_row(a_row: &[f32], b: &Mat, c_row: &mut [f32]) {
     let n = b.cols;
     c_row.iter_mut().for_each(|x| *x = 0.0);
     for k0 in (0..a_row.len()).step_by(KBLOCK) {

@@ -100,9 +100,11 @@ impl Csr {
     }
 
     /// One output row of `self · h` — the shared row kernel that fixes
-    /// the summation order for the serial and parallel paths.
+    /// the summation order for the serial and parallel paths. Crate-
+    /// visible so the serving tier's activation cache can recompute a
+    /// row subset bit-identically to a full [`Csr::spmm`] pass.
     #[inline]
-    fn spmm_row(&self, r: usize, h: &Mat, out_row: &mut [f32]) {
+    pub(crate) fn spmm_row(&self, r: usize, h: &Mat, out_row: &mut [f32]) {
         let n = h.cols;
         out_row.iter_mut().for_each(|x| *x = 0.0);
         for idx in self.indptr[r]..self.indptr[r + 1] {

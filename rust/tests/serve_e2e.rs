@@ -44,12 +44,19 @@ fn serve_logits_bit_identical_to_full_graph_forward() {
     let (g, cfg, params) = tiny_model();
     let mut b = NativeBackend::new();
     let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+    let expect_version = artifact::content_version(&artifact::ParamsFile {
+        config: cfg.clone(),
+        params: params.clone(),
+    });
 
     let (addr, handle) = spawn_server(g, cfg, params, 1);
     let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.artifact_version(), None, "no stamp before the first query");
     // a scattered batch…
     let ids: Vec<u32> = vec![0, 5, 17, 511];
     let got = client.query(&ids).unwrap();
+    // every v2 response is stamped with the serving artifact's version
+    assert_eq!(client.artifact_version(), Some(expect_version));
     assert_eq!((got.rows, got.cols), (ids.len(), want.cols));
     for (i, &id) in ids.iter().enumerate() {
         for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
@@ -62,6 +69,29 @@ fn serve_logits_bit_identical_to_full_graph_forward() {
     for r in 0..want.rows {
         for (a, b) in got.row(r).iter().zip(want.row(r)) {
             assert_eq!(a.to_bits(), b.to_bits(), "node {r}");
+        }
+    }
+    client.close();
+    handle.join().unwrap().unwrap();
+}
+
+/// Stamp negotiation is backward compatible: a client that sends the
+/// old (v1) hello gets unstamped responses with the exact same logits
+/// bits, so pre-tier clients keep parsing against a tier server.
+#[test]
+fn v1_clients_still_parse_unstamped_responses() {
+    let (g, cfg, params) = tiny_model();
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+    let (addr, handle) = spawn_server(g, cfg, params, 1);
+    let mut client = Client::connect_v1(&addr).unwrap();
+    let ids: Vec<u32> = vec![2, 7];
+    let got = client.query(&ids).unwrap();
+    assert_eq!(client.artifact_version(), None, "v1 responses carry no stamp");
+    assert_eq!((got.rows, got.cols), (ids.len(), want.cols));
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "node {id}");
         }
     }
     client.close();

@@ -1,0 +1,373 @@
+//! End-to-end tests of the serving tier: request coalescing, activation
+//! caching, the replica router, drains, and rolling reloads.
+//!
+//! The acceptance oracle everywhere: logits produced through the tier —
+//! batched, cached, routed, mid-failover, mid-reload — are
+//! **bit-identical** to [`full_graph_forward`] on the params that
+//! answered, and the version stamp names which params those were.
+
+use pipegcn::coordinator::{forward_registered, forward_with_features, full_graph_forward};
+use pipegcn::graph::presets;
+use pipegcn::model::{artifact, ModelConfig, Params};
+use pipegcn::runtime::native::NativeBackend;
+use pipegcn::runtime::Backend;
+use pipegcn::serve::tier::{
+    ActivationCache, Coalescer, Reply, Router, RouterOpts, TierOpts,
+};
+use pipegcn::serve::{ctx_from_parts, Client, Query, ServeState, Server};
+use pipegcn::tensor::Mat;
+use pipegcn::util::rng::Rng;
+
+fn tiny_model() -> (pipegcn::graph::Graph, ModelConfig, Params) {
+    let p = presets::by_name("tiny").unwrap();
+    let g = p.build(1);
+    let cfg = ModelConfig::from_preset(p);
+    let params = Params::init(&cfg, &mut Rng::new(3));
+    (g, cfg, params)
+}
+
+/// Concurrent submitters get fused into one kernel pass (batch_size > 1
+/// on at least one reply) and every reply carries the exact forward
+/// bits for its own rows.
+#[test]
+fn coalescer_fuses_concurrent_queries_bitwise() {
+    let (g, cfg, params) = tiny_model();
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+    let state = ServeState::new(ctx_from_parts(g, cfg, params).unwrap());
+    // a long window so every submitter lands inside one batch even on a
+    // loaded CI box
+    let co = Coalescer::start(
+        state,
+        TierOpts { window_ms: 200.0, max_batch: 16, cache: true, queue: 64 },
+    );
+    let n_threads = 8;
+    let barrier = std::sync::Barrier::new(n_threads);
+    let replies: Vec<Reply> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_threads)
+            .map(|i| {
+                let sub = co.submitter();
+                let barrier = &barrier;
+                s.spawn(move || {
+                    barrier.wait();
+                    sub.submit(Query { rows: vec![i * 3], feats: Vec::new() }).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let max_batch = replies.iter().map(|r| r.batch_size).max().unwrap();
+    assert!(max_batch > 1, "no queries fused (max batch {max_batch})");
+    for (i, r) in replies.iter().enumerate() {
+        let want_row = want.row(i * 3);
+        assert_eq!(r.logits.len(), want_row.len());
+        for (a, b) in r.logits.iter().zip(want_row) {
+            assert_eq!(a.to_bits(), b.to_bits(), "submitter {i}");
+        }
+    }
+    drop(co);
+}
+
+/// The full tier over real sockets — batching window on, cache on — is
+/// invisible in the bits: plain queries (cold and warm), an override,
+/// and a post-override plain query all match the local forwards.
+#[test]
+fn tier_server_is_bit_transparent_over_sockets() {
+    let (g, cfg, params) = tiny_model();
+    let fd = g.feat_dim();
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+    let ids: Vec<u32> = vec![4, 10];
+    let mut rng = Rng::new(9);
+    let fresh = Mat::randn(ids.len(), fd, 1.0, &mut rng);
+    let mut patched = g.features.clone();
+    for (i, &id) in ids.iter().enumerate() {
+        patched.set_row(id as usize, fresh.row(i));
+    }
+    let mut b2 = NativeBackend::new();
+    let want_over = forward_with_features(&g, &params, cfg.kind, &mut b2, &patched);
+
+    let server = Server::from_parts(g, cfg, params).unwrap();
+    let addr = server.addr().to_string();
+    let tier = TierOpts { window_ms: 2.0, max_batch: 8, cache: true, queue: 64 };
+    let handle = std::thread::spawn(move || server.run_tier(Some(1), tier));
+    let mut client = Client::connect(&addr).unwrap();
+    // cold query (warms the cache), then a warm one — both exact
+    for pass in 0..2 {
+        let got = client.query(&ids).unwrap();
+        for (i, &id) in ids.iter().enumerate() {
+            for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "pass {pass} node {id}");
+            }
+        }
+    }
+    // an override answers from the patched state…
+    let got = client.query_with_features(&ids, &fresh).unwrap();
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want_over.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "override node {id}");
+        }
+    }
+    // …and leaves the cache clean: the next plain query is exact again
+    let got = client.query(&ids).unwrap();
+    for (i, &id) in ids.iter().enumerate() {
+        for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+            assert_eq!(a.to_bits(), b.to_bits(), "post-override node {id}");
+        }
+    }
+    client.close();
+    handle.join().unwrap().unwrap();
+}
+
+/// Property test of the cone-invalidation path: for random override
+/// sets, the cached answer is bit-equal to a cold full forward over the
+/// patched features, and afterwards the cache and scratch are restored
+/// so *every* plain row still matches the base forward.
+#[test]
+fn cache_invalidation_recomputes_exactly_the_dependent_rows() {
+    let (g, cfg, params) = tiny_model();
+    let n = g.n;
+    let fd = g.feat_dim();
+    let base_features = g.features.clone();
+    let ctx = ctx_from_parts(g, cfg, params).unwrap();
+    let mut be = NativeBackend::new();
+    let pid = be.register_prop(&ctx.prop);
+    let base = forward_registered(pid, &ctx.params, &mut be, &ctx.features);
+    let mut cache = ActivationCache::new(&ctx);
+    cache.warm(&ctx);
+    let mut scratch = (*ctx.features).clone();
+    let mut rng = Rng::new(123);
+    let all: Vec<usize> = (0..n).collect();
+    for trial in 0..6 {
+        let k = 1 + rng.gen_range(4);
+        let rows = rng.sample_indices(n, k);
+        let mut feats = Vec::with_capacity(k * fd);
+        for _ in 0..k * fd {
+            feats.push(rng.normal());
+        }
+        // the oracle: a cold full forward over patched features
+        let mut patched = base_features.clone();
+        for (i, &r) in rows.iter().enumerate() {
+            patched.set_row(r, &feats[i * fd..(i + 1) * fd]);
+        }
+        let want = forward_registered(pid, &ctx.params, &mut be, &patched);
+        let (got, invalidated) = cache.override_rows(&ctx, &mut scratch, &rows, &feats);
+        assert!(
+            invalidated > 0 || ctx.params.layers.len() == 1,
+            "a multi-layer override must invalidate some cached rows"
+        );
+        for (i, &r) in rows.iter().enumerate() {
+            let got_row = &got[i * ctx.n_classes..(i + 1) * ctx.n_classes];
+            for (a, b) in got_row.iter().zip(want.row(r)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} override row {r}");
+            }
+        }
+        // restoration: the whole graph still answers the base bits
+        let plain = cache.final_rows(&ctx, &all);
+        for r in 0..n {
+            let got_row = &plain[r * ctx.n_classes..(r + 1) * ctx.n_classes];
+            for (a, b) in got_row.iter().zip(base.row(r)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} restored row {r}");
+            }
+        }
+        assert_eq!(scratch.data, ctx.features.data, "trial {trial}: scratch not restored");
+    }
+}
+
+/// A single-replica drain: the server's unbounded run loop returns after
+/// a `Ctrl` drain, with the in-flight connection's queries finished.
+#[test]
+fn drain_stops_an_unbounded_server_cleanly() {
+    let (g, cfg, params) = tiny_model();
+    let server = Server::from_parts(g, cfg, params).unwrap();
+    let addr = server.addr().to_string();
+    let handle = std::thread::spawn(move || server.run(None));
+    let mut client = Client::connect(&addr).unwrap();
+    let got = client.query(&[0, 1]).unwrap();
+    assert!(!got.data.is_empty());
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.drain().unwrap();
+    ctl.close();
+    client.close();
+    handle.join().unwrap().unwrap();
+}
+
+fn wait_addr(path: &str) -> String {
+    let mut waited = 0u32;
+    loop {
+        if let Ok(a) = std::fs::read_to_string(path) {
+            if !a.is_empty() {
+                return a;
+            }
+        }
+        waited += 1;
+        assert!(waited < 400, "replica never wrote {path}");
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+}
+
+/// Failover: two real `pipegcn serve` replica processes behind an
+/// in-process router; one replica is killed mid-load. Zero client
+/// queries fail and every answer stays bit-identical.
+#[test]
+fn router_failover_loses_no_queries() {
+    let bin = env!("CARGO_BIN_EXE_pipegcn");
+    let base = format!("/tmp/pipegcn_tier_failover_{}", std::process::id());
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let (g, cfg, params) = tiny_model();
+    let mut b = NativeBackend::new();
+    let want = full_graph_forward(&g, &params, cfg.kind, &mut b);
+    let path = format!("{base}/params.pgp");
+    artifact::save(&path, &artifact::ParamsFile { config: cfg, params }).unwrap();
+
+    let spawn_replica = |i: usize| {
+        let addr_file = format!("{base}/replica{i}.addr");
+        let child = std::process::Command::new(bin)
+            .args(["serve", "--dataset", "tiny"])
+            .args(["--params", &path, "--addr-file", &addr_file])
+            .spawn()
+            .expect("spawning a serve replica");
+        (child, addr_file)
+    };
+    let (mut c0, f0) = spawn_replica(0);
+    let (mut c1, f1) = spawn_replica(1);
+    let (a0, a1) = (wait_addr(&f0), wait_addr(&f1));
+
+    let router = Router::bind(&RouterOpts {
+        bind: "127.0.0.1:0".to_string(),
+        replicas: vec![a0, a1],
+        probe_ms: 100,
+    })
+    .unwrap();
+    let raddr = router.addr().to_string();
+    let rh = std::thread::spawn(move || router.run(None));
+
+    let ids: Vec<u32> = vec![1, 2, 3];
+    let mut client = Client::connect(&raddr).unwrap();
+    for q in 0..60 {
+        if q == 20 {
+            c0.kill().expect("killing replica 0");
+            let _ = c0.wait();
+        }
+        let got = client.query(&ids).unwrap_or_else(|e| {
+            panic!("query {q} failed during failover: {e}");
+        });
+        for (i, &id) in ids.iter().enumerate() {
+            for (a, b) in got.row(i).iter().zip(want.row(id as usize)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "query {q} node {id}");
+            }
+        }
+    }
+    client.close();
+    let mut ctl = Client::connect(&raddr).unwrap();
+    ctl.drain().unwrap();
+    ctl.close();
+    rh.join().unwrap().unwrap();
+    c1.kill().ok();
+    let _ = c1.wait();
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Rolling reload: two in-process replicas behind a router; a reload to
+/// a second artifact runs concurrently with a query loop. Zero queries
+/// fail, every response is bit-exact under the artifact its stamp
+/// names, and after the roll everything answers from the new artifact.
+#[test]
+fn rolling_reload_is_zero_downtime_and_stamped() {
+    let p = presets::by_name("tiny").unwrap();
+    let cfg = ModelConfig::from_preset(p);
+    let params_a = Params::init(&cfg, &mut Rng::new(3));
+    let params_b = Params::init(&cfg, &mut Rng::new(31));
+    let g = p.build(1);
+    let mut b = NativeBackend::new();
+    let want_a = full_graph_forward(&g, &params_a, cfg.kind, &mut b);
+    let want_b = full_graph_forward(&g, &params_b, cfg.kind, &mut b);
+    let pf_a = artifact::ParamsFile { config: cfg.clone(), params: params_a.clone() };
+    let pf_b = artifact::ParamsFile { config: cfg.clone(), params: params_b.clone() };
+    let va = artifact::content_version(&pf_a);
+    let vb = artifact::content_version(&pf_b);
+    assert_ne!(va, vb);
+    let path_b = format!("/tmp/pipegcn_tier_reload_{}.pgp", std::process::id());
+    artifact::save(&path_b, &pf_b).unwrap();
+
+    let mk = || {
+        let server =
+            Server::from_parts(p.build(1), cfg.clone(), params_a.clone()).unwrap();
+        let addr = server.addr().to_string();
+        let h = std::thread::spawn(move || server.run_tier(None, TierOpts::default()));
+        (addr, h)
+    };
+    let (a0, h0) = mk();
+    let (a1, h1) = mk();
+    let router = Router::bind(&RouterOpts {
+        bind: "127.0.0.1:0".to_string(),
+        replicas: vec![a0.clone(), a1.clone()],
+        probe_ms: 50,
+    })
+    .unwrap();
+    let raddr = router.addr().to_string();
+    let rh = std::thread::spawn(move || router.run(None));
+
+    // the roll runs concurrently with the query loop below
+    let reload_handle = {
+        let raddr = raddr.clone();
+        let path_b = path_b.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            let mut ctl = Client::connect(&raddr).unwrap();
+            let ack = ctl.reload(&path_b).unwrap();
+            ctl.close();
+            ack
+        })
+    };
+    let ids: Vec<u32> = vec![0, 6];
+    let mut client = Client::connect(&raddr).unwrap();
+    for q in 0..60 {
+        let got = client.query(&ids).unwrap_or_else(|e| {
+            panic!("query {q} failed during the rolling reload: {e}");
+        });
+        let version = client.artifact_version().expect("v2 responses are stamped");
+        let want = if version == va {
+            &want_a
+        } else if version == vb {
+            &want_b
+        } else {
+            panic!("query {q}: unknown version stamp {version}");
+        };
+        for (i, &id) in ids.iter().enumerate() {
+            for (x, y) in got.row(i).iter().zip(want.row(id as usize)) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "query {q} node {id} under version {version}"
+                );
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let ack = reload_handle.join().unwrap();
+    assert!(ack.contains(&format!("={vb}")), "reload ack names the new version: {ack}");
+    // after the roll, every answer comes from the new artifact
+    let got = client.query(&ids).unwrap();
+    assert_eq!(client.artifact_version(), Some(vb));
+    for (i, &id) in ids.iter().enumerate() {
+        for (x, y) in got.row(i).iter().zip(want_b.row(id as usize)) {
+            assert_eq!(x.to_bits(), y.to_bits(), "post-roll node {id}");
+        }
+    }
+    client.close();
+    // tear the tier down: router first, then each replica directly
+    let mut ctl = Client::connect(&raddr).unwrap();
+    ctl.drain().unwrap();
+    ctl.close();
+    rh.join().unwrap().unwrap();
+    for a in [a0, a1] {
+        let mut ctl = Client::connect(&a).unwrap();
+        ctl.drain().unwrap();
+        ctl.close();
+    }
+    h0.join().unwrap().unwrap();
+    h1.join().unwrap().unwrap();
+    std::fs::remove_file(&path_b).ok();
+}
